@@ -1,0 +1,73 @@
+//! LLM activation stress test — the paper's motivating workload.
+//!
+//! Emulates the emergent-outlier statistics of LLM activations
+//! (LLM.int8()/SmoothQuant/AWQ: ~1% outliers at ~50x the core's 3-sigma)
+//! and sweeps input exponent bits, showing how the conventional CIM's ADC
+//! requirement explodes once the format is wide enough to resolve the core
+//! while the GR-MAC's stays nearly flat — the ">6 bit" headline of
+//! Fig. 10.
+//!
+//!     cargo run --release --example llm_stress
+
+use grcim::coordinator::{run_campaign, CampaignConfig, ExperimentSpec};
+use grcim::distributions::Distribution;
+use grcim::energy::{energy_per_op, CimArch, TechParams};
+use grcim::formats::FpFormat;
+use grcim::mac::FormatPair;
+use grcim::report::Table;
+use grcim::spec::{required_enob, Arch, SpecConfig};
+
+fn main() -> anyhow::Result<()> {
+    let weights = FpFormat::fp4_e2m1();
+    let nr = 32;
+    let specs: Vec<ExperimentSpec> = (1..=5)
+        .map(|n_e| {
+            let fmt = FpFormat::fp(n_e, 2);
+            ExperimentSpec {
+                id: format!("llm-ne{n_e}"),
+                fmts: FormatPair::new(fmt, weights),
+                dist_x: Distribution::gauss_outliers(),
+                dist_w: Distribution::max_entropy(weights),
+                nr,
+                samples: 32_768,
+            }
+        })
+        .collect();
+
+    let cfg = CampaignConfig::default(); // auto engine, all cores
+    let aggs = run_campaign(&specs, &cfg)?;
+
+    let tech = TechParams::default();
+    let scfg = SpecConfig::default();
+    let mut t = Table::new(
+        "LLM-activation stress (gauss + 1% outliers @ 50x 3sigma)",
+        &[
+            "input", "dr_db", "enob_conv", "enob_gr", "delta_bits",
+            "e_conv_fj_op", "e_gr_fj_op",
+        ],
+    );
+    for (spec, agg) in specs.iter().zip(&aggs) {
+        let conv = required_enob(agg, Arch::Conventional, scfg).enob;
+        let gr = required_enob(agg, Arch::GrUnit, scfg).enob;
+        let e_conv =
+            energy_per_op(CimArch::Conventional, spec.fmts, nr, nr, conv, &tech);
+        let e_gr = energy_per_op(CimArch::GrUnit, spec.fmts, nr, nr, gr, &tech);
+        t.row(vec![
+            spec.fmts.x.to_string(),
+            Table::f(spec.fmts.x.dr_db()),
+            Table::f(conv),
+            Table::f(gr),
+            Table::f(conv - gr),
+            Table::f(e_conv.total()),
+            Table::f(e_gr.total()),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    println!(
+        "Once the format resolves the activation core (N_E >= 3), the\n\
+         conventional ADC pays for the full outlier dynamic range at every\n\
+         conversion; local normalization does not. That gap is the paper's\n\
+         '>6 bits / >4^6 ADC energy' claim."
+    );
+    Ok(())
+}

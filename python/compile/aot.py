@@ -1,0 +1,81 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (not `.serialize()`d HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one artifact per (graph, NR):
+    macsim_nr{16,32,64,128}.hlo.txt   f32[2048,NR] x, w; f32[4] fmt
+    mvmsim_nr{16,32,64,128}.hlo.txt   f32[32,NR]   x, w; f32[4] fmt
+plus `manifest.json` describing shapes so the Rust artifact registry can
+validate what it loads.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, batch: int, nr: int) -> str:
+    x = jax.ShapeDtypeStruct((batch, nr), jnp.float32)
+    w = jax.ShapeDtypeStruct((batch, nr), jnp.float32)
+    fmt = jax.ShapeDtypeStruct((4,), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(x, w, fmt))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--depths",
+        default=",".join(str(d) for d in model.ARRAY_DEPTHS),
+        help="comma-separated NR values",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    depths = [int(d) for d in args.depths.split(",")]
+    manifest = {"batch": model.BATCH, "mvm_batch": model.MVM_BATCH,
+                "outputs": 11, "entries": []}
+    for nr in depths:
+        for name, fn, batch in (
+            ("macsim", model.macsim, model.BATCH),
+            ("mvmsim", model.mvmsim, model.MVM_BATCH),
+        ):
+            text = lower_entry(fn, batch, nr)
+            fname = f"{name}_nr{nr}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["entries"].append(
+                {"file": fname, "graph": name, "nr": nr, "batch": batch}
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

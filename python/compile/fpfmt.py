@@ -1,0 +1,99 @@
+"""Floating-point format arithmetic for the GR-CIM signal-chain simulation.
+
+Implements the paper's value convention (Sec. III-A):
+
+    x = (-1)^S * M * 2^(E - E_max),   E_max = 2^N_E - 1
+
+with the *effective* significand M in [0.5, 1) for normals
+(M = 1.M_stored / 2), M in [0, 0.5) for subnormals (stored exponent code 0,
+effective exponent E = 1), and the effective exponent E = max(1, E_stored).
+
+All format parameters are **runtime f32 scalars** so a single lowered HLO
+module serves the entire format sweep; only array shapes are baked at AOT
+time. Formats are parameterized by (e_max, n_m) rather than (N_E, N_M):
+e_max = 2^N_E - 1 for integer exponent widths, but the Fig. 12 design-space
+grid also uses fractional e_max (a continuous dynamic-range axis) and
+fractional n_m (a continuous SQNR axis); the quantizer remains well-defined
+for both (the exponent grid stays integer-stepped, offset by e_max).
+
+Rounding is floor(m/step + 0.5) (round-half-up) so the Rust f64 oracle in
+`rust/src/formats/` can match bit-for-bit at f32-representable points.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# Smallest positive f32 normal; guards log2(0) without perturbing any
+# representable magnitude of interest (formats here have E_max <= 31).
+_TINY = 1e-30
+
+
+def exp2(t):
+    """Bit-exact 2^t for integer t, standard exp2 on the fractional part.
+
+    XLA-CPU's f32 exp2 is inexact even at integer arguments (e.g.
+    exp2(13.0) -> 8192.0039), which corrupts the power-of-two scalings this
+    whole simulation is built on. The integer part is constructed directly
+    in the f32 exponent field ((ti+127)<<23 bitcast), which is exact; only
+    genuinely fractional exponents (the Fig. 12 continuous axes) go through
+    the approximate exp2. The Rust oracle mirrors these semantics in f64.
+    """
+    ti = jnp.floor(t)
+    fr = t - ti
+    ti = jnp.clip(ti, -126.0, 127.0)
+    ip = jax.lax.bitcast_convert_type(
+        (ti.astype(jnp.int32) + 127) << 23, jnp.float32
+    )
+    return ip * jnp.exp2(fr)
+
+
+def fmt_consts(n_m):
+    """Derived mantissa-grid constants.
+
+    Returns (step, vmax):
+      step: mantissa grid step on the effective significand M in [0,1),
+            2^-(N_M+1)  (N_M stored bits + the implicit leading bit,
+            divided by 2 per the M = 1.M/2 convention).
+      vmax: largest representable magnitude, (1 - step) * 2^0.
+    """
+    step = exp2(-(n_m + 1.0))
+    vmax = 1.0 - step
+    return step, vmax
+
+
+def decompose(a, e_max):
+    """Split magnitudes `a` into (M, E_eff) per the paper's convention.
+
+    a == 0 maps to (0.0, 1.0) — the zero encoding keeps the subnormal
+    exponent, which matters for the GR-MAC: a zero-mantissa cell still
+    drives its one-hot exponent coupling switches (Sec. III-B2).
+    """
+    safe = jnp.maximum(a, _TINY)
+    e = jnp.floor(jnp.log2(safe)) + 1.0 + e_max
+    e = jnp.clip(e, 1.0, e_max)
+    m = a * exp2(e_max - e)
+    return m, e
+
+
+def quantize(x, e_max, n_m):
+    """Quantize `x` to FP(e_max, N_M): round-half-up on the mantissa grid,
+    saturating at +/- vmax. Values below the subnormal grid flush toward 0
+    on the same grid (step * 2^(1 - e_max))."""
+    step, vmax = fmt_consts(n_m)
+    s = jnp.sign(x)
+    a = jnp.abs(x)
+    m, e = decompose(a, e_max)
+    m_q = jnp.floor(m / step + 0.5) * step
+    # m_q == 1.0 rollover re-normalizes to 0.5 * 2^(e+1); representable as
+    # long as e < e_max, and the vmax clamp saturates the e == e_max case.
+    a_q = jnp.minimum(m_q * exp2(e - e_max), vmax)
+    return s * a_q
+
+
+def ulp(a_q, e_max, n_m):
+    """Local quantization step of the format at quantized magnitude a_q:
+    Delta = step * 2^(E_eff - e_max). This is the per-value noise-floor
+    ingredient of the ADC spec (Sec. IV-A / DESIGN.md #6)."""
+    step, _ = fmt_consts(n_m)
+    _, e = decompose(a_q, e_max)
+    return step * exp2(e - e_max)

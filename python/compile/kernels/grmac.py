@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: fused GR-MAC / INT-MAC Monte-Carlo column simulation.
+
+One fused kernel evaluates, per (TILE_B, NR) block, the full signal chain of
+the paper's architectures — FP quantization, mantissa/exponent
+decomposition, FP->INT mantissa alignment (conventional path),
+exponent-weighted gain-ranged accumulation (GR unit- and row-normalization
+paths), and the ulp-based noise-floor reduction — producing the ten
+per-sample statistics defined in `ref.py`.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the batch dimension is tiled
+with BlockSpec into (TILE_B, NR) VMEM-resident blocks; NR <= 128 keeps the
+reduction axis within one lane register tile, all math is elementwise
+exp2/log2/floor (VPU-bound), and the ten reductions stay in-registers — no
+HBM round-trips between stages. On this image the kernel runs under
+`interpret=True` (the CPU PJRT plugin cannot execute Mosaic custom-calls),
+so performance is assessed structurally: a single pallas_call, zero
+intermediate materialization.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..fpfmt import decompose, exp2, fmt_consts, quantize
+
+# 2048-sample batches split into 8 tiles: each f32 operand block is
+# 256*128*4 B = 128 KiB at the largest supported NR, comfortably in VMEM.
+TILE_B = 256
+
+N_OUTPUTS = 11
+
+
+def _kernel(
+    x_ref,
+    w_ref,
+    fmt_ref,
+    z_ideal_ref,
+    z_q_ref,
+    v_conv_ref,
+    g_conv_ref,
+    v_gr_ref,
+    s_sum_ref,
+    s2_sum_ref,
+    sx_sum_ref,
+    g_w_ref,
+    nf_ref,
+    wq2_mean_ref,
+):
+    x = x_ref[...]
+    w = w_ref[...]
+    emx = fmt_ref[0]
+    n_m_x = fmt_ref[1]
+    emw = fmt_ref[2]
+    n_m_w = fmt_ref[3]
+    nr = x.shape[-1]
+
+    stx, _ = fmt_consts(n_m_x)
+    stw, _ = fmt_consts(n_m_w)
+
+    xq = quantize(x, emx, n_m_x)
+    wq = quantize(w, emw, n_m_w)
+    sx, sw = jnp.sign(xq), jnp.sign(wq)
+    mx, ex = decompose(jnp.abs(xq), emx)
+    mw, ew = decompose(jnp.abs(wq), emw)
+
+    z_ideal_ref[...] = jnp.mean(x * w, axis=-1)
+    z_q_ref[...] = jnp.mean(xq * wq, axis=-1)
+
+    ebx = jnp.max(ex, axis=-1, keepdims=True)
+    ebw = jnp.max(ew, axis=-1, keepdims=True)
+    xint = sx * mx * exp2(ex - ebx)
+    wint = sw * mw * exp2(ew - ebw)
+    v_conv_ref[...] = jnp.mean(xint * wint, axis=-1)
+    g_w = exp2(ebw[..., 0] - emw)
+    g_w_ref[...] = g_w
+    g_conv_ref[...] = exp2(ebx[..., 0] - emx) * g_w
+
+    u = exp2(ex + ew - emx - emw)
+    s_sum = jnp.sum(u, axis=-1)
+    s_sum_ref[...] = s_sum
+    s2_sum_ref[...] = jnp.sum(u * u, axis=-1)
+    v_gr_ref[...] = jnp.sum(sx * sw * mx * mw * u, axis=-1) / s_sum
+
+    ux = exp2(ex - emx)
+    sx_sum_ref[...] = jnp.sum(ux, axis=-1)
+
+    dx = stx * exp2(ex - emx)
+    nf_ref[...] = jnp.sum(wq * wq * dx * dx, axis=-1) / (12.0 * nr * nr)
+    wq2_mean_ref[...] = jnp.mean(wq * wq, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def simulate_column(x, w, fmt, interpret=True):
+    """Pallas-fused equivalent of `ref.simulate_column`.
+
+    Args:
+      x, w: f32[B, NR] with B a multiple of TILE_B (or B < TILE_B, in which
+            case a single tile of size B is used).
+      fmt:  f32[4] = [e_max_x, n_m_x, e_max_w, n_m_w].
+
+    Returns: tuple of ten f32[B] arrays (see ref.py).
+    """
+    b, nr = x.shape
+    tile = min(TILE_B, b)
+    if b % tile != 0:
+        raise ValueError(f"batch {b} not a multiple of tile {tile}")
+    grid = (b // tile,)
+
+    in_specs = [
+        pl.BlockSpec((tile, nr), lambda i: (i, 0)),
+        pl.BlockSpec((tile, nr), lambda i: (i, 0)),
+        pl.BlockSpec((4,), lambda i: (0,)),
+    ]
+    vec = jax.ShapeDtypeStruct((b,), jnp.float32)
+    out_specs = [pl.BlockSpec((tile,), lambda i: (i,))] * N_OUTPUTS
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=[vec] * N_OUTPUTS,
+        interpret=interpret,
+    )(x, w, fmt)

@@ -1,0 +1,111 @@
+"""Pure-jnp oracle for the GR-MAC / INT-MAC signal-chain simulation.
+
+This is the correctness reference the Pallas kernel (`grmac.py`) is tested
+against, and the semantic twin of the pure-Rust engine in `rust/src/mac/`.
+
+One "column simulation" evaluates, for a batch of (x, w) row-vector pairs,
+both analog signal chains of the paper with an infinite-precision ADC and
+returns everything the host needs to solve the required ADC ENOB in closed
+form (DESIGN.md Sec. 5):
+
+  z_ideal : (1/NR) sum x*w               — unquantized dot product
+  z_q     : (1/NR) sum x_q*w_q           — quantized-input dot product
+                                           (all signal chains are linear, so
+                                           this is the infinite-ADC output of
+                                           every architecture)
+  v_conv  : conventional compute-line voltage after FP->INT mantissa
+            alignment to the per-block max exponents (the conventional ADC
+            input; |v_conv| <= 1)
+  g_conv  : conventional digital rescale 2^(E_bx + E_bw - E_max,x - E_max,w)
+            — the per-sample gain through which ADC noise refers to the
+            output
+  v_gr    : GR-MAC (unit-normalization) column voltage
+            sum(s*Mp*2^ep) / sum(2^ep) (the GR ADC input; exponent-weighted
+            average, |v_gr| <= 1)
+  s_sum   : S  = sum(2^(ep - ep_max)) — unit-norm normalization factor; the
+            unit-granularity noise-referral gain is g_unit = S / NR
+  s2_sum  : S2 = sum(4^(ep - ep_max)) — N_eff = S^2/S2 ingredient
+  sx_sum  : S_x = sum(2^(ex - e_max,x)) — row-normalization factor (inputs
+            normalized, weights block-aligned); g_row = g_w * S_x / NR
+  g_w     : 2^(E_bw - E_max,w) — the weight-block rescale used by both the
+            conventional and the row-normalized paths
+  nf      : output-referred **input** quantization noise floor of the FP
+            representation (1/(12 NR^2)) sum(w_q^2 ulp_x^2). Input-side
+            only: the paper's ADC spec protects the input format's
+            fidelity ("only input quantization noise is considered",
+            Fig. 10 caption) — weight quantization is part of the model,
+            not noise. This is the GR-side floor; the conventional CIM is
+            dimensioned for the *aligned INT grid* instead (its floor is
+            reconstructed host-side from wq2_mean and the format's
+            minimum step — see rust spec::required_enob).
+  wq2_mean: per-sample mean of w_q^2 — the conventional INT-grid floor
+            ingredient.
+
+Format vector: fmt = f32[4] = [e_max_x, n_m_x, e_max_w, n_m_w]; e_max may be
+fractional (continuous dynamic-range axis of the Fig. 12 design-space map).
+"""
+
+import jax.numpy as jnp
+
+from ..fpfmt import decompose, exp2, fmt_consts, quantize
+
+
+def simulate_column(x, w, fmt):
+    """Reference signal-chain simulation.
+
+    Args:
+      x, w: f32[B, NR] raw (pre-quantization) activations and weights.
+      fmt:  f32[4] = [e_max_x, n_m_x, e_max_w, n_m_w].
+
+    Returns: tuple of ten f32[B] arrays (see module docstring).
+    """
+    emx, n_m_x, emw, n_m_w = fmt[0], fmt[1], fmt[2], fmt[3]
+    nr = x.shape[-1]
+    stx, _ = fmt_consts(n_m_x)
+    stw, _ = fmt_consts(n_m_w)
+
+    xq = quantize(x, emx, n_m_x)
+    wq = quantize(w, emw, n_m_w)
+    sx, sw = jnp.sign(xq), jnp.sign(wq)
+    mx, ex = decompose(jnp.abs(xq), emx)
+    mw, ew = decompose(jnp.abs(wq), emw)
+
+    z_ideal = jnp.mean(x * w, axis=-1)
+    z_q = jnp.mean(xq * wq, axis=-1)
+
+    # Conventional FP->INT path: mantissa alignment to the block-wise max
+    # effective exponent (x and w blocks normalized independently), uniform
+    # charge averaging on the compute line, digital rescale after the ADC.
+    ebx = jnp.max(ex, axis=-1, keepdims=True)
+    ebw = jnp.max(ew, axis=-1, keepdims=True)
+    xint = sx * mx * exp2(ex - ebx)
+    wint = sw * mw * exp2(ew - ebw)
+    v_conv = jnp.mean(xint * wint, axis=-1)
+    g_w = exp2(ebw[..., 0] - emw)
+    g_conv = exp2(ebx[..., 0] - emx) * g_w
+
+    # GR-MAC unit-normalization path: normalized mantissa product per cell,
+    # coupling capacitance proportional to 2^(E_x + E_w); the column voltage
+    # is the exponent-weighted average; S is the digital normalization
+    # factor produced by the column exponent adder tree.
+    u = exp2(ex + ew - emx - emw)  # in (0, 1], max code -> 1
+    s_sum = jnp.sum(u, axis=-1)
+    s2_sum = jnp.sum(u * u, axis=-1)
+    v_gr = jnp.sum(sx * sw * mx * mw * u, axis=-1) / s_sum
+
+    # Row normalization: only the input exponent drives the gain-ranging
+    # stage; weights are stored block-aligned (as in the conventional path).
+    ux = exp2(ex - emx)
+    sx_sum = jnp.sum(ux, axis=-1)
+
+    # Ulp-based *input* noise floor referred to the output (exact for
+    # max-entropy inputs where the empirical quantization error is zero).
+    # Input-side only per the paper's ADC spec (Fig. 10 caption).
+    dx = stx * exp2(ex - emx)
+    nf = jnp.sum(wq * wq * dx * dx, axis=-1) / (12.0 * nr * nr)
+    wq2_mean = jnp.mean(wq * wq, axis=-1)
+
+    return (
+        z_ideal, z_q, v_conv, g_conv, v_gr, s_sum, s2_sum, sx_sum, g_w, nf,
+        wq2_mean,
+    )

@@ -1,0 +1,44 @@
+"""L2: the JAX compute graph lowered to the AOT artifacts.
+
+The paper's "model" is the mixed-signal CIM array itself: the compute graph
+quantizes a Monte-Carlo batch of (activation, weight) row pairs to a runtime
+FP format and pushes it through both analog signal chains (conventional
+FP->INT and GR-MAC), emitting the per-sample statistics the Rust coordinator
+aggregates into ADC-resolution and energy results.
+
+Two entry points are lowered per array depth NR:
+
+  macsim   — the statistics path used by the figure campaigns
+             (B=2048 samples/batch).
+  mvmsim   — the same graph at a smaller batch, used by the end-to-end MLP
+             inference example, where each "sample" is one output column of
+             a 32x32 CIM tile (B=32).
+
+Both call the fused L1 Pallas kernel (`kernels.grmac`); `interpret=True` is
+mandatory on the CPU PJRT plugin (Mosaic custom-calls are TPU-only).
+Python never runs at inference/campaign time: these graphs are lowered once
+by `aot.py` into `artifacts/*.hlo.txt`.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import grmac
+
+# Batch of one statistics artifact execution. 2048 keeps each PJRT call's
+# working set ~2 MiB while amortizing dispatch overhead measured on the
+# Rust side (see EXPERIMENTS.md §Perf).
+BATCH = 2048
+# Supported array depths; one artifact per depth (shapes are static in HLO).
+ARRAY_DEPTHS = (16, 32, 64, 128)
+# Batch of the MVM-tile artifact (one sample per output column of a tile).
+MVM_BATCH = 32
+
+
+def macsim(x, w, fmt):
+    """Statistics graph: tuple of eight f32[B] outputs (see kernels.ref)."""
+    return grmac.simulate_column(x, w, fmt, interpret=True)
+
+
+def mvmsim(x, w, fmt):
+    """MVM-tile graph: identical math at the e2e example's tile batch."""
+    return grmac.simulate_column(x, w, fmt, interpret=True)

@@ -1,0 +1,57 @@
+"""AOT lowering sanity: HLO text is parseable interchange, manifest is
+consistent, and the lowered module has the expected I/O signature."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def hlo_text():
+    return aot.lower_entry(model.macsim, 256, 32)
+
+
+def test_hlo_text_has_entry_computation(hlo_text):
+    assert "ENTRY" in hlo_text
+    assert "HloModule" in hlo_text
+
+
+def test_hlo_text_io_signature(hlo_text):
+    # params: f32[256,32] x2 and f32[4]; result: 10-tuple of f32[256]
+    assert "f32[256,32]" in hlo_text
+    assert "f32[4]" in hlo_text
+    assert hlo_text.count("f32[256]{0}") >= model.N_OUTPUTS if hasattr(
+        model, "N_OUTPUTS"
+    ) else "f32[256]" in hlo_text
+
+
+def test_hlo_is_text_not_proto(hlo_text):
+    # the interchange gotcha: must be human-readable text, never proto bytes
+    assert hlo_text.isprintable() or "\n" in hlo_text
+    assert not hlo_text.startswith(b"\x08".decode("latin1"))
+
+
+def test_no_custom_calls_in_lowered_module(hlo_text):
+    # interpret=True must lower pallas to plain HLO — a Mosaic custom-call
+    # would be unloadable by the CPU PJRT plugin
+    assert "custom-call" not in hlo_text.lower() or "mosaic" not in hlo_text.lower()
+
+
+def test_artifacts_manifest_consistent_if_present():
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    man_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(man_path):
+        pytest.skip("artifacts not built")
+    with open(man_path) as f:
+        man = json.load(f)
+    assert man["outputs"] == 11
+    for entry in man["entries"]:
+        path = os.path.join(art, entry["file"])
+        assert os.path.exists(path), entry["file"]
+        with open(path) as f:
+            text = f.read()
+        assert "ENTRY" in text
+        assert f"f32[{entry['batch']},{entry['nr']}]" in text

@@ -1,0 +1,161 @@
+"""Unit + property tests for the runtime-parameterized FP quantizer."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.fpfmt import decompose, fmt_consts, quantize, ulp
+
+
+def q(x, e_max, n_m):
+    return np.asarray(quantize(jnp.float32(x), e_max, n_m))
+
+
+# --- exact code books -------------------------------------------------------
+
+FP4_E2M1 = sorted(
+    {0.0, 0.0625, 0.125, 0.1875, 0.25, 0.375, 0.5, 0.75}
+    | {-v for v in (0.0625, 0.125, 0.1875, 0.25, 0.375, 0.5, 0.75)}
+)
+
+
+def codebook(e_max, n_m):
+    """Enumerate all representable magnitudes of FP(e_max, n_m)."""
+    step = 2.0 ** -(n_m + 1)
+    vals = set()
+    # subnormals at effective exponent 1
+    for k in range(int(round(0.5 / step))):
+        vals.add(k * step * 2.0 ** (1 - e_max))
+    for e in range(1, e_max + 1):
+        m = 0.5
+        while m < 1.0 - 1e-12:
+            vals.add(m * 2.0 ** (e - e_max))
+            m += step
+    return sorted(vals)
+
+
+def test_fp4_e2m1_codebook_matches_ocp_values():
+    # FP4 E2M1 scaled by 8 is the OCP MX set {0,.5,1,1.5,2,3,4,6}
+    mags = codebook(3, 1)
+    assert np.allclose(np.array(mags) * 8, [0, 0.5, 1, 1.5, 2, 3, 4, 6])
+
+
+@pytest.mark.parametrize("e_max,n_m", [(3, 1), (3, 3), (7, 2), (1, 2), (15, 3)])
+def test_codebook_values_are_fixed_points(e_max, n_m):
+    for v in codebook(e_max, n_m):
+        assert q(v, e_max, n_m) == pytest.approx(v, abs=0), v
+        assert q(-v, e_max, n_m) == pytest.approx(-v, abs=0), v
+
+
+@pytest.mark.parametrize("e_max,n_m", [(3, 1), (3, 3), (7, 2)])
+def test_quantize_snaps_to_nearest_codebook_entry(e_max, n_m):
+    book = np.array(codebook(e_max, n_m))
+    rng = np.random.default_rng(42)
+    xs = rng.uniform(0, 1, 300).astype(np.float32)
+    for x in xs:
+        got = float(q(x, e_max, n_m))
+        best = book[np.argmin(np.abs(book - min(x, book[-1])))]
+        # round-half-up can differ from argmin at exact midpoints only
+        err_got = abs(got - min(x, book[-1]))
+        err_best = abs(best - min(x, book[-1]))
+        assert err_got <= err_best + 1e-7
+
+
+def test_saturation_at_vmax():
+    assert q(5.0, 3, 1) == pytest.approx(0.75)
+    assert q(-5.0, 3, 1) == pytest.approx(-0.75)
+    assert q(1.0, 3, 3) == pytest.approx(1.0 - 2.0**-4)
+
+
+def test_zero_is_preserved():
+    assert q(0.0, 3, 1) == 0.0
+    assert q(-0.0, 7, 3) == 0.0
+
+
+def test_subnormal_flush():
+    # FP4_E2M1 subnormal grid step = 0.0625; below half of it -> 0
+    assert q(0.01, 3, 1) == 0.0
+    assert q(0.05, 3, 1) == pytest.approx(0.0625)
+
+
+def test_mantissa_rollover_renormalizes():
+    # m rounds to 1.0 at a non-top exponent: 0.4999 with coarse mantissa
+    # FP(e_max=3, n_m=1): 0.47 -> m=0.94 -> rounds to 1.0 -> 0.5 at e+1
+    assert q(0.47, 3, 1) == pytest.approx(0.5)
+
+
+def test_decompose_convention():
+    m, e = decompose(jnp.float32(0.75), jnp.float32(3.0))
+    assert float(m) == pytest.approx(0.75) and float(e) == 3.0
+    m, e = decompose(jnp.float32(0.125), jnp.float32(3.0))  # 0.5 * 2^-2
+    assert float(m) == pytest.approx(0.5) and float(e) == 1.0
+    # subnormal: below 2^-e_max
+    m, e = decompose(jnp.float32(0.0625), jnp.float32(3.0))
+    assert float(e) == 1.0 and float(m) == pytest.approx(0.25)
+    # zero keeps the subnormal exponent (drives coupling switches)
+    m, e = decompose(jnp.float32(0.0), jnp.float32(3.0))
+    assert float(m) == 0.0 and float(e) == 1.0
+
+
+@given(
+    x=st.floats(-1.0, 1.0, width=32),
+    n_e=st.integers(1, 5),
+    n_m=st.integers(1, 5),
+)
+@settings(max_examples=300, deadline=None)
+def test_quantize_error_bounded_by_half_ulp_or_saturation(x, n_e, n_m):
+    e_max = 2.0**n_e - 1
+    xq = float(q(x, e_max, n_m))
+    step, vmax = fmt_consts(jnp.float32(n_m))
+    step, vmax = float(step), float(vmax)
+    if abs(x) >= vmax:
+        assert xq == math.copysign(vmax, x) or x == 0
+    else:
+        delta = float(ulp(jnp.float32(abs(xq)), e_max, n_m))
+        # rounding error <= half the local step (+ f32 slack)
+        assert abs(xq - x) <= 0.5 * delta * (1 + 1e-5) + 1e-7
+
+
+@given(
+    n_e=st.integers(1, 4),
+    n_m=st.integers(1, 4),
+    a=st.floats(0.0, 1.0, width=32),
+    b=st.floats(0.0, 1.0, width=32),
+)
+@settings(max_examples=200, deadline=None)
+def test_quantize_monotone(n_e, n_m, a, b):
+    e_max = 2.0**n_e - 1
+    lo, hi = min(a, b), max(a, b)
+    assert float(q(lo, e_max, n_m)) <= float(q(hi, e_max, n_m))
+
+
+@given(
+    x=st.floats(-1.0, 1.0, width=32), n_e=st.integers(1, 4), n_m=st.integers(1, 4)
+)
+@settings(max_examples=200, deadline=None)
+def test_quantize_idempotent_and_odd(x, n_e, n_m):
+    e_max = 2.0**n_e - 1
+    x1 = float(q(x, e_max, n_m))
+    assert float(q(x1, e_max, n_m)) == x1
+    assert float(q(-x, e_max, n_m)) == -x1
+
+
+@given(xs=st.lists(st.floats(-1, 1, width=32), min_size=4, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_quantize_vectorized_matches_scalar(xs):
+    arr = jnp.array(xs, dtype=jnp.float32)
+    vec = np.asarray(quantize(arr, 7.0, 2.0))
+    for xi, vi in zip(xs, vec):
+        assert float(q(xi, 7, 2)) == vi
+
+
+def test_fractional_format_is_well_defined():
+    # fractional e_max / n_m used by the Fig. 12 continuous DR/SQNR grid
+    xq = q(0.3, 5.5, 2.5)
+    assert np.isfinite(xq)
+    # still idempotent
+    assert float(q(float(xq), 5.5, 2.5)) == pytest.approx(float(xq), rel=1e-6)

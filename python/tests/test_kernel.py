@@ -1,0 +1,112 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import grmac, ref
+
+NAMES = [
+    "z_ideal", "z_q", "v_conv", "g_conv", "v_gr",
+    "s_sum", "s2_sum", "sx_sum", "g_w", "nf", "wq2_mean",
+]
+
+
+def run_both(x, w, fmt):
+    r = ref.simulate_column(jnp.array(x), jnp.array(w), jnp.array(fmt))
+    k = grmac.simulate_column(jnp.array(x), jnp.array(w), jnp.array(fmt))
+    return [np.asarray(a) for a in r], [np.asarray(a) for a in k]
+
+
+def assert_match(r, k, tol=1e-6):
+    for name, a, b in zip(NAMES, r, k):
+        np.testing.assert_allclose(a, b, atol=tol, rtol=tol, err_msg=name)
+
+
+def make_fmt(n_e_x, n_m_x, n_e_w, n_m_w):
+    return np.array(
+        [2.0**n_e_x - 1, n_m_x, 2.0**n_e_w - 1, n_m_w], dtype=np.float32
+    )
+
+
+@pytest.mark.parametrize("nr", [16, 32, 64, 128])
+@pytest.mark.parametrize("b", [256, 512])
+def test_kernel_matches_ref_across_shapes(nr, b):
+    rng = np.random.default_rng(nr * 1000 + b)
+    x = rng.uniform(-1, 1, (b, nr)).astype(np.float32)
+    w = rng.normal(0, 0.25, (b, nr)).astype(np.float32)
+    r, k = run_both(x, w, make_fmt(2, 3, 2, 1))
+    assert_match(r, k)
+
+
+@given(
+    n_e_x=st.integers(1, 5),
+    n_m_x=st.integers(1, 5),
+    n_e_w=st.integers(1, 4),
+    n_m_w=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_kernel_matches_ref_across_formats(n_e_x, n_m_x, n_e_w, n_m_w, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1, 1, (256, 32)).astype(np.float32)
+    w = rng.uniform(-1, 1, (256, 32)).astype(np.float32)
+    r, k = run_both(x, w, make_fmt(n_e_x, n_m_x, n_e_w, n_m_w))
+    assert_match(r, k)
+
+
+def test_kernel_small_batch_single_tile():
+    rng = np.random.default_rng(7)
+    x = rng.uniform(-1, 1, (32, 16)).astype(np.float32)
+    w = rng.uniform(-1, 1, (32, 16)).astype(np.float32)
+    r, k = run_both(x, w, make_fmt(2, 2, 2, 1))
+    assert_match(r, k)
+
+
+def test_kernel_rejects_ragged_batch():
+    x = np.zeros((300, 16), np.float32)
+    with pytest.raises(ValueError):
+        grmac.simulate_column(
+            jnp.array(x), jnp.array(x), jnp.array(make_fmt(2, 2, 2, 1))
+        )
+
+
+def test_zero_inputs():
+    x = np.zeros((256, 32), np.float32)
+    w = np.zeros((256, 32), np.float32)
+    r, k = run_both(x, w, make_fmt(2, 3, 2, 1))
+    assert_match(r, k)
+    d = dict(zip(NAMES, k))
+    assert np.all(d["z_q"] == 0) and np.all(d["v_gr"] == 0)
+    # all-zero cells still couple at the subnormal exponent: S > 0
+    assert np.all(d["s_sum"] > 0)
+
+
+def test_equal_exponent_worst_case_neff_equals_nr():
+    # all values at the same exponent -> N_eff == NR (paper Sec. III-B2)
+    nr = 32
+    x = np.full((256, nr), 0.6, np.float32)  # e = e_max for any format
+    w = np.full((256, nr), 0.55, np.float32)
+    r, k = run_both(x, w, make_fmt(3, 2, 3, 2))
+    d = dict(zip(NAMES, k))
+    neff = d["s_sum"] ** 2 / d["s2_sum"]
+    np.testing.assert_allclose(neff, nr, rtol=1e-6)
+
+
+def test_fractional_formats_match():
+    rng = np.random.default_rng(9)
+    x = rng.uniform(-1, 1, (256, 32)).astype(np.float32)
+    w = rng.uniform(-1, 1, (256, 32)).astype(np.float32)
+    fmt = np.array([5.5, 2.25, 3.0, 1.0], dtype=np.float32)
+    r, k = run_both(x, w, fmt)
+    assert_match(r, k)
+
+
+def test_extreme_and_saturating_inputs():
+    rng = np.random.default_rng(11)
+    x = rng.uniform(-10, 10, (256, 32)).astype(np.float32)  # saturates
+    w = rng.uniform(-10, 10, (256, 32)).astype(np.float32)
+    r, k = run_both(x, w, make_fmt(2, 1, 2, 1))
+    assert_match(r, k)

@@ -1,0 +1,115 @@
+"""Physical invariants of the simulated signal chains (L2 semantics).
+
+These are the identities the Rust host relies on when it reconstructs
+outputs and solves the ADC spec, so they are pinned here against the oracle.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+
+NAMES = [
+    "z_ideal", "z_q", "v_conv", "g_conv", "v_gr",
+    "s_sum", "s2_sum", "sx_sum", "g_w", "nf", "wq2_mean",
+]
+
+
+def sim(x, w, fmt):
+    out = ref.simulate_column(jnp.array(x), jnp.array(w), jnp.array(fmt))
+    return dict(zip(NAMES, [np.asarray(o) for o in out]))
+
+
+def rand_case(seed, b=512, nr=32, dist="uniform"):
+    rng = np.random.default_rng(seed)
+    if dist == "uniform":
+        x = rng.uniform(-1, 1, (b, nr))
+    elif dist == "gauss":
+        x = np.clip(rng.normal(0, 0.25, (b, nr)), -1, 1)
+    else:
+        raise ValueError(dist)
+    w = rng.uniform(-1, 1, (b, nr))
+    return x.astype(np.float32), w.astype(np.float32)
+
+
+FMT = np.array([3.0, 2.0, 3.0, 1.0], dtype=np.float32)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_linear_chain_identity(seed):
+    """All architectures share the same infinite-ADC output:
+    z_q == v_conv * g_conv == v_gr * S / NR."""
+    x, w = rand_case(seed)
+    d = sim(x, w, FMT)
+    nr = x.shape[1]
+    np.testing.assert_allclose(
+        d["z_q"], d["v_conv"] * d["g_conv"], atol=1e-7, rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        d["z_q"], d["v_gr"] * d["s_sum"] / nr, atol=1e-7, rtol=1e-5
+    )
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_adc_inputs_within_full_scale(seed):
+    x, w = rand_case(seed)
+    d = sim(x, w, FMT)
+    assert np.all(np.abs(d["v_conv"]) <= 1.0 + 1e-6)
+    assert np.all(np.abs(d["v_gr"]) <= 1.0 + 1e-6)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_neff_bounds(seed):
+    """1 <= N_eff = S^2/S2 <= NR (weighted-sample effective count)."""
+    x, w = rand_case(seed, dist="gauss")
+    d = sim(x, w, FMT)
+    neff = d["s_sum"] ** 2 / d["s2_sum"]
+    nr = x.shape[1]
+    assert np.all(neff >= 1.0 - 1e-5)
+    assert np.all(neff <= nr + 1e-3)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_referral_gains_bounded(seed):
+    """g_conv, g_w <= 1 (block max can't exceed format max); S/NR <= 1."""
+    x, w = rand_case(seed, dist="gauss")
+    d = sim(x, w, FMT)
+    nr = x.shape[1]
+    for g in (d["g_conv"], d["g_w"], d["s_sum"] / nr, d["sx_sum"] / nr):
+        assert np.all(g <= 1.0 + 1e-6)
+        assert np.all(g > 0.0)
+
+
+def test_gr_signal_preservation_vs_conventional():
+    """Paper Sec. III-B2: for spread-exponent data the GR ADC input variance
+    exceeds the conventional ADC input variance (signal preservation)."""
+    x, w = rand_case(3, b=4096, dist="gauss")
+    d = sim(x, w, FMT)
+    assert np.var(d["v_gr"]) > 2.0 * np.var(d["v_conv"])
+
+
+def test_noise_floor_positive_and_scales_with_coarser_mantissa():
+    x, w = rand_case(5)
+    fine = sim(x, w, np.array([3, 4, 3, 4], np.float32))
+    coarse = sim(x, w, np.array([3, 1, 3, 1], np.float32))
+    assert np.mean(coarse["nf"]) > 10 * np.mean(fine["nf"])
+    assert np.all(fine["nf"] >= 0)
+
+
+def test_quantization_error_consistent_with_noise_floor():
+    """Empirical quantized-output error should be within an order of the
+    ulp-based floor for a smooth input distribution. (The floor is
+    input-side only; the empirical error also carries weight-quantization
+    noise, so the ratio sits above 1 for coarse weights.)"""
+    x, w = rand_case(8, b=8192)
+    d = sim(x, w, FMT)
+    emp = np.mean((d["z_q"] - d["z_ideal"]) ** 2)
+    floor = np.mean(d["nf"])
+    assert 0.2 < emp / floor < 40.0

@@ -1,0 +1,58 @@
+//! `cargo bench --bench figures` — one benchmark per paper table/figure:
+//! wall time of the full regeneration pipeline (workload generation, MC
+//! engine, spec solve, energy model, report emit) at reduced sample count,
+//! plus one full-samples fig10 point as the end-to-end latency anchor.
+//!
+//! Uses the in-repo `benchkit` harness (no criterion in the vendor set).
+//! Set GRCIM_BENCH_QUICK=1 for smoke runs; pass a substring to filter.
+
+use grcim::benchkit::Bench;
+use grcim::figures::{self, FigureCtx};
+use grcim::runtime::EngineKind;
+
+fn ctx(samples: usize) -> FigureCtx {
+    let mut ctx = FigureCtx::default();
+    ctx.samples = samples;
+    ctx.campaign.engine = EngineKind::Rust;
+    ctx.out_dir = std::env::temp_dir().join("grcim_bench_results");
+    ctx
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let quick = ctx(4096);
+
+    for id in ["fig4", "table1", "fig8", "fig9"] {
+        b.run(&format!("figure/{id}"), 5, || {
+            let fr = figures::run(id, &quick).unwrap();
+            assert!(fr.all_hold());
+        });
+    }
+    for id in ["fig10", "fig11", "ablations"] {
+        b.run(&format!("figure/{id}"), 3, || {
+            let fr = figures::run(id, &quick).unwrap();
+            assert!(fr.all_hold());
+        });
+    }
+    b.run("figure/fig12", 2, || {
+        let fr = figures::run("fig12", &quick).unwrap();
+        assert!(fr.all_hold());
+    });
+
+    // end-to-end anchor: one fig10 sweep at full default samples via the
+    // PJRT engine when artifacts exist (the production configuration)
+    if grcim::runtime::ArtifactRegistry::load(
+        &grcim::runtime::ArtifactRegistry::default_dir(),
+    )
+    .is_ok()
+    {
+        let mut full = ctx(65_536);
+        full.campaign.engine = EngineKind::Pjrt;
+        b.run("figure/fig10_full_pjrt", 2, || {
+            let fr = figures::run("fig10", &full).unwrap();
+            assert!(fr.all_hold());
+        });
+    }
+
+    b.finish();
+}

@@ -1,0 +1,117 @@
+//! `cargo bench --bench hotpath` — micro/meso benchmarks of the hot paths
+//! the §Perf pass optimizes: the pure-Rust MC engine, the PJRT engine
+//! (artifact execution), the quantizer, campaign scheduling overhead, the
+//! analog solver, and the NN e2e tile path. Throughputs are in MAC
+//! samples/s (one sample = one NR-deep column MAC).
+
+use grcim::benchkit::Bench;
+use grcim::coordinator::{run_campaign, CampaignConfig, ExperimentSpec};
+use grcim::distributions::Distribution;
+use grcim::formats::FpFormat;
+use grcim::mac::{simulate_column, FormatPair};
+use grcim::rng::Pcg64;
+use grcim::runtime::{ArtifactRegistry, Engine, EngineKind, PjrtEngine, RustEngine};
+
+fn main() {
+    let mut b = Bench::new();
+    let fmts = FormatPair::new(FpFormat::fp6_e3m2(), FpFormat::fp4_e2m1());
+    let nr = 32;
+    let batch = 2048;
+
+    // input generation
+    let mut rng = Pcg64::seeded(1);
+    let mut xf = vec![0.0f64; batch * nr];
+    let mut wf = vec![0.0f64; batch * nr];
+    b.run_items("gen/gauss_outliers_fill", 20, batch * nr, || {
+        Distribution::gauss_outliers().fill(&mut rng, &mut xf);
+    });
+    Distribution::Uniform.fill(&mut rng, &mut wf);
+
+    // quantizer alone
+    let fmt = FpFormat::fp6_e2m3();
+    b.run_items("formats/quantize_64k", 20, 65_536, || {
+        let mut acc = 0.0;
+        for i in 0..65_536 {
+            acc += fmt.quantize(xf[i % xf.len()]);
+        }
+        std::hint::black_box(acc);
+    });
+
+    // pure-Rust engine, single batch
+    b.run_items("engine/rust_simulate_2048x32", 10, batch, || {
+        std::hint::black_box(simulate_column(&xf, &wf, nr, fmts));
+    });
+
+    // engine trait path (includes f32->f64 conversion)
+    let re = RustEngine;
+    let x32: Vec<f32> = xf.iter().map(|&v| v as f32).collect();
+    let w32: Vec<f32> = wf.iter().map(|&v| v as f32).collect();
+    b.run_items("engine/rust_trait_2048x32", 10, batch, || {
+        std::hint::black_box(re.simulate(&x32, &w32, nr, fmts).unwrap());
+    });
+
+    // PJRT engine (the production path)
+    if let Ok(reg) = ArtifactRegistry::load(&ArtifactRegistry::default_dir()) {
+        let pjrt = PjrtEngine::from_registry(&reg).unwrap();
+        b.run_items("engine/pjrt_simulate_2048x32", 10, batch, || {
+            std::hint::black_box(pjrt.simulate(&x32, &w32, nr, fmts).unwrap());
+        });
+        for depth in [16usize, 64, 128] {
+            if pjrt.supports_nr(depth) {
+                let n = batch * depth;
+                let xd = vec![0.25f32; n];
+                let wd = vec![0.5f32; n];
+                b.run_items(
+                    &format!("engine/pjrt_simulate_2048x{depth}"),
+                    5,
+                    batch,
+                    || {
+                        std::hint::black_box(
+                            pjrt.simulate(&xd, &wd, depth, fmts).unwrap(),
+                        );
+                    },
+                );
+            }
+        }
+    }
+
+    // campaign throughput: 16 batches across the pool (scheduling +
+    // aggregation overhead on top of the raw engine)
+    let spec = ExperimentSpec {
+        id: "bench".into(),
+        fmts,
+        dist_x: Distribution::Uniform,
+        dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+        nr,
+        samples: 16 * batch,
+    };
+    let cfg = CampaignConfig {
+        engine: EngineKind::Rust,
+        workers: 0,
+        seed: 3,
+        ..Default::default()
+    };
+    b.run_items("coordinator/campaign_16x2048", 5, 16 * batch, || {
+        std::hint::black_box(run_campaign(&[spec.clone()], &cfg).unwrap());
+    });
+
+    // analog substrate: full mismatch MC of Fig. 8
+    let cell = grcim::analog::GrMacCell::fp6_e2m3_schematic();
+    b.run_items("analog/mismatch_mc_1000", 5, 1000, || {
+        std::hint::black_box(grcim::analog::mismatch::mc_dnl_inl(
+            &cell,
+            grcim::analog::MismatchModel::high(),
+            1000,
+            9,
+        ));
+    });
+
+    // capnet nodal solve (2 floating nodes)
+    b.run_items("analog/capnet_solve_16k", 5, 16_384, || {
+        for _ in 0..16_384 {
+            std::hint::black_box(cell.transfer(9, 3, 1.0).unwrap());
+        }
+    });
+
+    b.finish();
+}

@@ -1,0 +1,331 @@
+//! Linear capacitive-network nodal solver.
+//!
+//! Static (evaluation-phase) solution of a network of ideal capacitors:
+//! driven nodes are held at known voltages, floating nodes settle by charge
+//! conservation from a discharged initial state:
+//!
+//! ```text
+//! for every floating node i:   sum_j C_ij (V_i - V_j) = 0
+//! ```
+//!
+//! i.e. the capacitance-weighted graph Laplacian restricted to floating
+//! nodes, solved by Gaussian elimination with partial pivoting (networks
+//! here are tiny — a GR-MAC cell has 2 floating nodes — but the solver is
+//! general and is also used by the column-level tests with hundreds of
+//! nodes).
+
+use anyhow::{bail, Result};
+
+/// Node handle.
+pub type NodeId = usize;
+
+#[derive(Debug, Clone, Copy)]
+enum NodeKind {
+    Floating,
+    Driven(f64),
+}
+
+/// A capacitive network under construction.
+#[derive(Debug, Clone)]
+pub struct CapNetwork {
+    kinds: Vec<NodeKind>,
+    /// (a, b, c_farads) — undirected capacitor edges.
+    caps: Vec<(NodeId, NodeId, f64)>,
+}
+
+impl Default for CapNetwork {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CapNetwork {
+    pub fn new() -> Self {
+        CapNetwork { kinds: Vec::new(), caps: Vec::new() }
+    }
+
+    /// Add a floating node (initially discharged).
+    pub fn node(&mut self) -> NodeId {
+        self.kinds.push(NodeKind::Floating);
+        self.kinds.len() - 1
+    }
+
+    /// Add a node driven to a fixed voltage (source or ground).
+    pub fn driven(&mut self, volts: f64) -> NodeId {
+        self.kinds.push(NodeKind::Driven(volts));
+        self.kinds.len() - 1
+    }
+
+    /// Connect a capacitor of `c` (any consistent unit) between two nodes.
+    pub fn cap(&mut self, a: NodeId, b: NodeId, c: f64) {
+        assert!(a < self.kinds.len() && b < self.kinds.len());
+        assert!(c >= 0.0, "negative capacitance");
+        if a != b && c > 0.0 {
+            self.caps.push((a, b, c));
+        }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.kinds.len()
+    }
+
+    /// Solve all node voltages. Fails if a floating node has no capacitive
+    /// path at all (singular system).
+    pub fn solve(&self) -> Result<Solution> {
+        let n = self.kinds.len();
+        // index floating nodes
+        let mut f_index = vec![usize::MAX; n];
+        let mut floating = Vec::new();
+        for (i, k) in self.kinds.iter().enumerate() {
+            if matches!(k, NodeKind::Floating) {
+                f_index[i] = floating.len();
+                floating.push(i);
+            }
+        }
+        let nf = floating.len();
+        let mut voltages: Vec<f64> = self
+            .kinds
+            .iter()
+            .map(|k| match k {
+                NodeKind::Driven(v) => *v,
+                NodeKind::Floating => 0.0,
+            })
+            .collect();
+
+        if nf > 0 {
+            // assemble L_ff V_f = -L_fs V_s  (dense; networks are small)
+            let mut a = vec![0.0f64; nf * nf];
+            let mut rhs = vec![0.0f64; nf];
+            for &(p, q, c) in &self.caps {
+                for (u, v) in [(p, q), (q, p)] {
+                    if f_index[u] != usize::MAX {
+                        let i = f_index[u];
+                        a[i * nf + i] += c;
+                        match self.kinds[v] {
+                            NodeKind::Floating => {
+                                a[i * nf + f_index[v]] -= c;
+                            }
+                            NodeKind::Driven(vs) => {
+                                rhs[i] += c * vs;
+                            }
+                        }
+                    }
+                }
+            }
+            let vf = gauss_solve(&mut a, &mut rhs, nf)?;
+            for (i, &node) in floating.iter().enumerate() {
+                voltages[node] = vf[i];
+            }
+        }
+
+        // per-driven-node delivered charge: Q = sum_j C_ij (V_i - V_j)
+        let mut charge = vec![0.0f64; n];
+        for &(p, q, c) in &self.caps {
+            let dq = c * (voltages[p] - voltages[q]);
+            charge[p] += dq;
+            charge[q] -= dq;
+        }
+        Ok(Solution { voltages, charge })
+    }
+}
+
+/// Solved network state.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    /// Voltage at every node.
+    pub voltages: Vec<f64>,
+    /// Net charge each node sourced into the network (zero at floating
+    /// nodes by construction — the solver's invariant).
+    pub charge: Vec<f64>,
+}
+
+/// Dense Gaussian elimination with partial pivoting; consumes its inputs.
+fn gauss_solve(a: &mut [f64], rhs: &mut [f64], n: usize) -> Result<Vec<f64>> {
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        let mut best = a[col * n + col].abs();
+        for row in col + 1..n {
+            let v = a[row * n + col].abs();
+            if v > best {
+                best = v;
+                piv = row;
+            }
+        }
+        if best < 1e-18 {
+            bail!("singular capacitive network (floating node with no path)");
+        }
+        if piv != col {
+            for k in 0..n {
+                a.swap(col * n + k, piv * n + k);
+            }
+            rhs.swap(col, piv);
+        }
+        // eliminate
+        let d = a[col * n + col];
+        for row in col + 1..n {
+            let f = a[row * n + col] / d;
+            if f != 0.0 {
+                for k in col..n {
+                    a[row * n + k] -= f * a[col * n + k];
+                }
+                rhs[row] -= f * rhs[col];
+            }
+        }
+    }
+    // back substitution
+    let mut x = vec![0.0f64; n];
+    for row in (0..n).rev() {
+        let mut acc = rhs[row];
+        for k in row + 1..n {
+            acc -= a[row * n + k] * x[k];
+        }
+        x[row] = acc / a[row * n + row];
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::approx_eq;
+
+    #[test]
+    fn capacitive_divider() {
+        // vdd --C1-- mid --C2-- gnd : V_mid = C1/(C1+C2)
+        let mut net = CapNetwork::new();
+        let vdd = net.driven(1.0);
+        let gnd = net.driven(0.0);
+        let mid = net.node();
+        net.cap(vdd, mid, 3.0);
+        net.cap(mid, gnd, 1.0);
+        let sol = net.solve().unwrap();
+        assert!(approx_eq(sol.voltages[mid], 0.75, 1e-12));
+    }
+
+    #[test]
+    fn charge_conservation_at_floating_nodes() {
+        let mut net = CapNetwork::new();
+        let vdd = net.driven(1.0);
+        let gnd = net.driven(0.0);
+        let a = net.node();
+        let b = net.node();
+        net.cap(vdd, a, 2.0);
+        net.cap(a, b, 1.5);
+        net.cap(b, gnd, 0.5);
+        net.cap(a, gnd, 0.7);
+        let sol = net.solve().unwrap();
+        assert!(sol.charge[a].abs() < 1e-12);
+        assert!(sol.charge[b].abs() < 1e-12);
+        // total sourced charge balances
+        assert!((sol.charge[vdd] + sol.charge[gnd]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn series_charge_transfer() {
+        // source --Ca-- n --Cb-- gnd: charge into gnd = V * (Ca || Cb)
+        let mut net = CapNetwork::new();
+        let src = net.driven(2.0);
+        let gnd = net.driven(0.0);
+        let n = net.node();
+        let (ca, cb) = (4.0, 12.0);
+        net.cap(src, n, ca);
+        net.cap(n, gnd, cb);
+        let sol = net.solve().unwrap();
+        let series = ca * cb / (ca + cb);
+        assert!(approx_eq(-sol.charge[gnd], 2.0 * series, 1e-12));
+    }
+
+    #[test]
+    fn superposition_holds() {
+        // linear network: solution scales with the source
+        let build = |v: f64| {
+            let mut net = CapNetwork::new();
+            let s = net.driven(v);
+            let g = net.driven(0.0);
+            let m = net.node();
+            net.cap(s, m, 1.0);
+            net.cap(m, g, 2.0);
+            (net, m)
+        };
+        let (n1, m) = build(1.0);
+        let (n3, _) = build(3.0);
+        let v1 = n1.solve().unwrap().voltages[m];
+        let v3 = n3.solve().unwrap().voltages[m];
+        assert!(approx_eq(v3, 3.0 * v1, 1e-12));
+    }
+
+    #[test]
+    fn singular_network_rejected() {
+        let mut net = CapNetwork::new();
+        let _vdd = net.driven(1.0);
+        let _orphan = net.node(); // no capacitor at all
+        assert!(net.solve().is_err());
+    }
+
+    #[test]
+    fn ladder_network_c2c() {
+        // C-2C ladder (Razavi): in the capacitive dual of R-2R the series
+        // elements are 2C and the shunts are C, terminated with an extra C
+        // so every node sees 2C looking right -> exact halving per stage.
+        let mut net = CapNetwork::new();
+        let gnd = net.driven(0.0);
+        let src = net.driven(1.0);
+        let n1 = net.node();
+        let n2 = net.node();
+        let n3 = net.node();
+        net.cap(src, n1, 2.0); // series 2C
+        net.cap(n1, gnd, 1.0); // shunt C
+        net.cap(n1, n2, 2.0);
+        net.cap(n2, gnd, 1.0);
+        net.cap(n2, n3, 2.0);
+        net.cap(n3, gnd, 1.0);
+        net.cap(n3, gnd, 1.0); // termination C (node total 2C)
+        let sol = net.solve().unwrap();
+        let r1 = sol.voltages[n2] / sol.voltages[n1];
+        let r2 = sol.voltages[n3] / sol.voltages[n2];
+        assert!(approx_eq(r1, 0.5, 1e-9), "r1={r1}");
+        assert!(approx_eq(r2, 0.5, 1e-9), "r2={r2}");
+    }
+
+    #[test]
+    fn random_networks_conserve_charge() {
+        let mut rng = crate::rng::Pcg64::seeded(37);
+        for _ in 0..50 {
+            let mut net = CapNetwork::new();
+            let s = net.driven(rng.uniform_in(-1.0, 1.0));
+            let g = net.driven(0.0);
+            let nodes: Vec<_> = (0..6).map(|_| net.node()).collect();
+            // chain to guarantee non-singularity, then random extra caps
+            let mut prev = s;
+            for &n in &nodes {
+                net.cap(prev, n, rng.uniform_in(0.1, 5.0));
+                prev = n;
+            }
+            net.cap(prev, g, rng.uniform_in(0.1, 5.0));
+            for _ in 0..6 {
+                let a = nodes[rng.below(6) as usize];
+                let b = nodes[rng.below(6) as usize];
+                net.cap(a, b, rng.uniform_in(0.0, 2.0));
+            }
+            let sol = net.solve().unwrap();
+            for &n in &nodes {
+                assert!(sol.charge[n].abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_and_self_caps_ignored() {
+        let mut net = CapNetwork::new();
+        let s = net.driven(1.0);
+        let g = net.driven(0.0);
+        let m = net.node();
+        net.cap(m, m, 5.0); // self loop: ignored
+        net.cap(s, m, 0.0); // zero cap: ignored
+        net.cap(s, m, 1.0);
+        net.cap(m, g, 1.0);
+        let sol = net.solve().unwrap();
+        assert!(approx_eq(sol.voltages[m], 0.5, 1e-12));
+    }
+}

@@ -1,0 +1,286 @@
+//! The GR-MAC unit cell netlist (paper Fig. 6/7, Table I, Sec. III-D/E).
+//!
+//! Structure, for the FP6_E2M3 configuration (4 mantissa magnitude bits,
+//! 4 gain levels):
+//!
+//! ```text
+//!  V_x --[W-bit switches]--> C_M0..C_M3 --+-- n1 --[C_E stage]--> column
+//!        (unselected bits drive ground)   |
+//!                                        C_p1
+//! ```
+//!
+//! The coupling stage applies the paper's two layout transformations
+//! (Sec. III-E): C_E1 is hard-wired (minimum coupling switch removed, its
+//! value subtracted from the higher levels), and the largest exponent
+//! activates **both** C_E3 and C_E4. The effective coupling capacitance of
+//! level j is therefore
+//!
+//! ```text
+//! T_1 = C_E1,   T_2 = C_E1 + C_E2,   T_3 = C_E1 + C_E3,
+//! T_4 = C_E1 + C_E3 + C_E4
+//! ```
+//!
+//! and the level design targets series couplings in exact octaves:
+//! `T_j || (C_sum + C_p1) = (C_sum + C_p1) / (2^(L-j+1) - 1)` — eq. (1) of
+//! the paper generalized to include the always-on C_E1. With C_p1 = 0 and
+//! C_u = 1 fF this reproduces Table I's schematic column exactly:
+//! C_E = {1, 1.14, 4, 10} fF.
+
+use super::capnet::CapNetwork;
+use anyhow::Result;
+
+/// Designed capacitor values of one GR-MAC cell (fF).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GrMacCell {
+    /// Binary-weighted mantissa divider caps, LSB first: C_u * 2^i.
+    pub c_m: Vec<f64>,
+    /// Coupling-stage component caps C_E1..C_EL (after transformations).
+    pub c_e: Vec<f64>,
+    /// Parasitic at the divider output node n1 (fF).
+    pub c_p1: f64,
+    /// Parasitic at the coupling output net (fF) — absorbed into the
+    /// column line, does not affect linearity (Sec. III-D1).
+    pub c_p2: f64,
+}
+
+impl GrMacCell {
+    /// Design a cell: `m_bits` mantissa magnitude bits (4 for FP6_E2M3),
+    /// `levels` gain-ranging levels, unit capacitor `c_u` fF, compensated
+    /// for a parasitic `c_p1` per eq. (1). `c_p1 = 0` gives the schematic
+    /// (ideal) design.
+    pub fn design(m_bits: usize, levels: usize, c_u: f64, c_p1: f64) -> Self {
+        // levels >= 3: the top-level transformation ("E_L activates both
+        // C_E(L-1) and C_EL") presupposes a switched C_E(L-1) distinct
+        // from the hard-wired C_E1.
+        assert!(m_bits >= 1 && levels >= 3);
+        let c_m: Vec<f64> = (0..m_bits).map(|i| c_u * (1u64 << i) as f64).collect();
+        let c_sum: f64 = c_m.iter().sum();
+        // eq. (1): total coupling of level j (1-based), including C_p1 in
+        // the numerator so the compensated ratios stay exact octaves.
+        let t = |j: usize| -> f64 {
+            (c_sum + c_p1) / ((1u64 << (levels - j + 1)) as f64 - 1.0)
+        };
+        let mut c_e = Vec::with_capacity(levels);
+        c_e.push(t(1)); // C_E1: always-on base coupling
+        for j in 2..levels {
+            c_e.push(t(j) - t(1)); // C_Ej adds on top of C_E1
+        }
+        // top level: C_EL adds on top of C_E1 + C_E(L-1)
+        c_e.push(t(levels) - t(levels - 1));
+        GrMacCell { c_m, c_e, c_p1, c_p2: 0.0 }
+    }
+
+    /// The FP6_E2M3 reference design of Fig. 7 / Table I (C_u = 1 fF).
+    pub fn fp6_e2m3_schematic() -> Self {
+        Self::design(4, 4, 1.0, 0.0)
+    }
+
+    pub fn levels(&self) -> usize {
+        self.c_e.len()
+    }
+
+    pub fn m_codes(&self) -> u64 {
+        1u64 << self.c_m.len()
+    }
+
+    /// Total divider capacitance.
+    pub fn c_sum(&self) -> f64 {
+        self.c_m.iter().sum()
+    }
+
+    /// Effective coupling capacitance T_j of level `level` (1-based),
+    /// applying the switch transformations.
+    pub fn coupling_total(&self, level: usize) -> f64 {
+        assert!((1..=self.levels()).contains(&level));
+        let l = self.levels();
+        let mut t = self.c_e[0];
+        if level >= 2 && level < l {
+            t += self.c_e[level - 1];
+        } else if level == l {
+            t += self.c_e[l - 2] + self.c_e[l - 1];
+        }
+        t
+    }
+
+    /// Build the evaluation-phase network for weight code `w_code`
+    /// (mantissa magnitude, 0..2^m_bits) at gain level `level`, input
+    /// voltage `v_in`, and solve for the charge delivered to the column
+    /// line (held at virtual ground by the accumulation convention).
+    ///
+    /// Returns (Q_out, V_n1).
+    pub fn transfer(&self, w_code: u64, level: usize, v_in: f64) -> Result<(f64, f64)> {
+        assert!(w_code < self.m_codes());
+        let mut net = CapNetwork::new();
+        let src = net.driven(v_in);
+        let gnd = net.driven(0.0);
+        let col = net.driven(0.0); // column line at virtual ground
+        let n1 = net.node();
+        let n2 = net.node(); // coupling output net (carries C_p2)
+        for (i, &c) in self.c_m.iter().enumerate() {
+            let plate = if (w_code >> i) & 1 == 1 { src } else { gnd };
+            net.cap(plate, n1, c);
+        }
+        if self.c_p1 > 0.0 {
+            net.cap(n1, gnd, self.c_p1);
+        }
+        // coupling stage: selected component caps bridge n1 -> n2; n2 ties
+        // to the column line (ideal switch).
+        let t = self.coupling_total(level);
+        net.cap(n1, n2, t);
+        if self.c_p2 > 0.0 {
+            net.cap(n2, gnd, self.c_p2);
+        }
+        // ideal closed switch n2 -> column: model as a huge capacitor
+        // (charge transfer limit); 1e9 x the network scale keeps the
+        // solver well-conditioned while approximating a short.
+        net.cap(n2, col, 1e9);
+        let sol = net.solve()?;
+        // charge delivered into the column node (negative of what the
+        // driven node sources, by our sign convention)
+        Ok((-sol.charge[col], sol.voltages[n1]))
+    }
+
+    /// Closed-form expected charge for the ideal (C_p2-free) cell:
+    /// Q = V * C_sel * (T_j || (C_sum + C_p1)) / (C_sum + C_p1).
+    pub fn transfer_closed_form(&self, w_code: u64, level: usize, v_in: f64) -> f64 {
+        let c_sel: f64 = self
+            .c_m
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| (w_code >> i) & 1 == 1)
+            .map(|(_, &c)| c)
+            .sum();
+        let cs = self.c_sum() + self.c_p1;
+        let t = self.coupling_total(level);
+        v_in * c_sel * t / (cs + t)
+    }
+
+    /// Ideal LSB charge step of the W sweep at a given level (the DNL/INL
+    /// normalization of Fig. 8).
+    pub fn lsb(&self, level: usize, v_in: f64) -> f64 {
+        let q1 = self.transfer_closed_form(1, level, v_in);
+        let q0 = self.transfer_closed_form(0, level, v_in);
+        q1 - q0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::approx_eq;
+
+    #[test]
+    fn table_i_schematic_values() {
+        // Paper Table I, schematic column: C_M = {1,2,4,8},
+        // C_E = {1, 1.14, 4, 10} fF.
+        let cell = GrMacCell::fp6_e2m3_schematic();
+        assert_eq!(cell.c_m, vec![1.0, 2.0, 4.0, 8.0]);
+        assert!(approx_eq(cell.c_e[0], 1.0, 1e-12), "C_E1={}", cell.c_e[0]);
+        assert!(approx_eq(cell.c_e[1], 8.0 / 7.0, 1e-12), "C_E2={}", cell.c_e[1]);
+        assert!(approx_eq(cell.c_e[2], 4.0, 1e-12), "C_E3={}", cell.c_e[2]);
+        assert!(approx_eq(cell.c_e[3], 10.0, 1e-12), "C_E4={}", cell.c_e[3]);
+    }
+
+    #[test]
+    fn coupling_totals_follow_eq1() {
+        // T_j = C_sum / (2^(L-j+1) - 1): {1, 15/7, 5, 15}
+        let cell = GrMacCell::fp6_e2m3_schematic();
+        assert!(approx_eq(cell.coupling_total(1), 1.0, 1e-12));
+        assert!(approx_eq(cell.coupling_total(2), 15.0 / 7.0, 1e-12));
+        assert!(approx_eq(cell.coupling_total(3), 5.0, 1e-12));
+        assert!(approx_eq(cell.coupling_total(4), 15.0, 1e-12));
+    }
+
+    #[test]
+    fn gain_levels_are_exact_octaves() {
+        let cell = GrMacCell::fp6_e2m3_schematic();
+        let w = 15; // full mantissa
+        let q: Vec<f64> = (1..=4)
+            .map(|l| cell.transfer(w, l, 1.0).unwrap().0)
+            .collect();
+        for j in 1..4 {
+            assert!(
+                approx_eq(q[j] / q[j - 1], 2.0, 1e-6),
+                "level {} ratio {}",
+                j,
+                q[j] / q[j - 1]
+            );
+        }
+    }
+
+    #[test]
+    fn w_sweep_is_linear() {
+        let cell = GrMacCell::fp6_e2m3_schematic();
+        for level in 1..=4 {
+            let q0 = cell.transfer(0, level, 1.0).unwrap().0;
+            let lsb = cell.transfer(1, level, 1.0).unwrap().0 - q0;
+            for w in 0..16u64 {
+                let q = cell.transfer(w, level, 1.0).unwrap().0;
+                assert!(
+                    approx_eq(q - q0, w as f64 * lsb, 1e-6),
+                    "level {level} w {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn solver_matches_closed_form() {
+        let cell = GrMacCell::design(4, 4, 1.0, 0.8);
+        for level in 1..=4 {
+            for w in [0u64, 1, 7, 8, 15] {
+                let (q, _) = cell.transfer(w, level, 0.9).unwrap();
+                let qc = cell.transfer_closed_form(w, level, 0.9);
+                assert!(
+                    approx_eq(q, qc, 1e-6) || (q.abs() < 1e-15 && qc.abs() < 1e-15),
+                    "w={w} level={level}: {q} vs {qc}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parasitic_compensation_restores_octaves() {
+        // uncompensated parasitic perturbs the ratios...
+        let c_p1 = 1.5;
+        let mut naive = GrMacCell::fp6_e2m3_schematic();
+        naive.c_p1 = c_p1;
+        let q2 = naive.transfer(15, 2, 1.0).unwrap().0;
+        let q1 = naive.transfer(15, 1, 1.0).unwrap().0;
+        let naive_ratio = q2 / q1;
+        assert!((naive_ratio - 2.0).abs() > 0.005, "ratio {naive_ratio}");
+        // ...eq. (1) with C_p1 in the numerator restores them exactly
+        let comp = GrMacCell::design(4, 4, 1.0, c_p1);
+        let q2 = comp.transfer(15, 2, 1.0).unwrap().0;
+        let q1 = comp.transfer(15, 1, 1.0).unwrap().0;
+        assert!(approx_eq(q2 / q1, 2.0, 1e-6), "ratio {}", q2 / q1);
+    }
+
+    #[test]
+    fn c_p2_does_not_affect_linearity() {
+        // C_p2 hangs on the virtually-grounded column net: pure offset-free
+        // attenuation of nothing (node is at 0 V), Sec. III-D1.
+        let mut cell = GrMacCell::fp6_e2m3_schematic();
+        let q_ref = cell.transfer(9, 3, 1.0).unwrap().0;
+        cell.c_p2 = 2.0;
+        let q = cell.transfer(9, 3, 1.0).unwrap().0;
+        assert!(approx_eq(q, q_ref, 1e-6));
+    }
+
+    #[test]
+    fn transfer_scales_with_input_voltage() {
+        let cell = GrMacCell::fp6_e2m3_schematic();
+        let q1 = cell.transfer(11, 2, 0.5).unwrap().0;
+        let q2 = cell.transfer(11, 2, 1.0).unwrap().0;
+        assert!(approx_eq(q2, 2.0 * q1, 1e-9));
+    }
+
+    #[test]
+    fn zero_weight_transfers_zero() {
+        let cell = GrMacCell::fp6_e2m3_schematic();
+        for level in 1..=4 {
+            let (q, _) = cell.transfer(0, level, 1.0).unwrap();
+            assert!(q.abs() < 1e-12);
+        }
+    }
+}

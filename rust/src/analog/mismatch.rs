@@ -1,0 +1,269 @@
+//! Pelgrom-model capacitor mismatch Monte Carlo and DNL/INL extraction —
+//! the machinery behind Fig. 8 (Sec. III-E1).
+//!
+//! Mismatch of a metal-oxide-metal capacitor follows Pelgrom's area
+//! relation; since capacitance scales linearly with finger length for a
+//! fixed cross-section this is written as
+//!
+//! ```text
+//! sigma(dC/C) = K_C / sqrt(C)
+//! ```
+//!
+//! with K_C in %·sqrt(fF). The paper brackets its structure between
+//! K_C = 0.45 (five-layer interdigitated, from Omran's measured K_A) and
+//! K_C = 0.85 (Tripathi's single-layer measurement) and simulates both.
+
+use super::grmac_cell::GrMacCell;
+use crate::rng::Pcg64;
+
+/// Pelgrom mismatch model.
+#[derive(Debug, Clone, Copy)]
+pub struct MismatchModel {
+    /// Matching coefficient, %·sqrt(fF).
+    pub k_c_pct_sqrt_ff: f64,
+}
+
+impl MismatchModel {
+    /// Lower bound of the paper's range (five-layer MOM estimate).
+    pub fn low() -> Self {
+        MismatchModel { k_c_pct_sqrt_ff: 0.45 }
+    }
+
+    /// Upper bound (Tripathi's 32 nm lateral-finger measurement).
+    pub fn high() -> Self {
+        MismatchModel { k_c_pct_sqrt_ff: 0.85 }
+    }
+
+    /// Relative sigma for a capacitor of `c` fF.
+    pub fn sigma(&self, c_ff: f64) -> f64 {
+        assert!(c_ff > 0.0);
+        self.k_c_pct_sqrt_ff / 100.0 / c_ff.sqrt()
+    }
+
+    /// Perturb one capacitor value.
+    pub fn perturb(&self, c_ff: f64, rng: &mut Pcg64) -> f64 {
+        c_ff * (1.0 + self.sigma(c_ff) * rng.normal())
+    }
+
+    /// A mismatched instance of a designed cell.
+    pub fn instance(&self, cell: &GrMacCell, rng: &mut Pcg64) -> GrMacCell {
+        let mut inst = cell.clone();
+        for c in inst.c_m.iter_mut().chain(inst.c_e.iter_mut()) {
+            *c = self.perturb(*c, rng);
+        }
+        inst
+    }
+}
+
+/// DNL/INL of a measured staircase, in LSB, against the best-fit line
+/// (Fig. 8 convention: endpoint-corrected linear reference).
+#[derive(Debug, Clone)]
+pub struct Sweep {
+    /// Measured output per code.
+    pub values: Vec<f64>,
+    /// DNL per step (len = codes - 1), in LSB.
+    pub dnl: Vec<f64>,
+    /// INL per code, in LSB (endpoint-fit reference).
+    pub inl: Vec<f64>,
+}
+
+/// Extract DNL and INL from a monotone staircase `values[code]`.
+pub fn dnl_inl(values: &[f64]) -> Sweep {
+    assert!(values.len() >= 2);
+    let n = values.len();
+    // endpoint-fit LSB
+    let lsb = (values[n - 1] - values[0]) / (n - 1) as f64;
+    assert!(lsb != 0.0, "degenerate staircase");
+    let dnl: Vec<f64> = values
+        .windows(2)
+        .map(|w| (w[1] - w[0]) / lsb - 1.0)
+        .collect();
+    let inl: Vec<f64> = values
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| (v - (values[0] + i as f64 * lsb)) / lsb)
+        .collect();
+    Sweep { values: values.to_vec(), dnl, inl }
+}
+
+impl Sweep {
+    pub fn max_abs_dnl(&self) -> f64 {
+        self.dnl.iter().fold(0.0, |a, &b| a.max(b.abs()))
+    }
+
+    pub fn max_abs_inl(&self) -> f64 {
+        self.inl.iter().fold(0.0, |a, &b| a.max(b.abs()))
+    }
+}
+
+/// W-sweep of a cell at one gain level: measured charge per mantissa code.
+pub fn w_sweep(cell: &GrMacCell, level: usize, v_in: f64) -> Vec<f64> {
+    (0..cell.m_codes())
+        .map(|w| cell.transfer_closed_form(w, level, v_in))
+        .collect()
+}
+
+/// E-sweep of a cell at fixed mantissa code: measured charge per level,
+/// with relative error against the ideal octave response normalized to the
+/// W-input LSB (Fig. 8b convention).
+pub fn e_sweep_error_lsb(cell: &GrMacCell, ideal: &GrMacCell, w_code: u64, v_in: f64) -> Vec<f64> {
+    let lsb_top = ideal.lsb(ideal.levels(), v_in);
+    (1..=cell.levels())
+        .map(|l| {
+            let q = cell.transfer_closed_form(w_code, l, v_in);
+            let qi = ideal.transfer_closed_form(w_code, l, v_in);
+            (q - qi) / lsb_top
+        })
+        .collect()
+}
+
+/// Monte-Carlo DNL/INL study: returns per-run (max|DNL|, max|INL|) across
+/// all gain levels, n runs.
+pub fn mc_dnl_inl(
+    cell: &GrMacCell,
+    model: MismatchModel,
+    runs: usize,
+    seed: u64,
+) -> Vec<(f64, f64)> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..runs)
+        .map(|_| {
+            let inst = model.instance(cell, &mut rng);
+            let mut worst_dnl = 0.0f64;
+            let mut worst_inl = 0.0f64;
+            for level in 1..=inst.levels() {
+                let s = dnl_inl(&w_sweep(&inst, level, 1.0));
+                worst_dnl = worst_dnl.max(s.max_abs_dnl());
+                worst_inl = worst_inl.max(s.max_abs_inl());
+            }
+            (worst_dnl, worst_inl)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::approx_eq;
+
+    #[test]
+    fn sigma_follows_pelgrom() {
+        let m = MismatchModel::low();
+        // quadrupling C halves sigma
+        assert!(approx_eq(m.sigma(1.0), 2.0 * m.sigma(4.0), 1e-12));
+        assert!(approx_eq(m.sigma(1.0), 0.0045, 1e-12));
+        assert!(approx_eq(MismatchModel::high().sigma(1.0), 0.0085, 1e-12));
+    }
+
+    #[test]
+    fn perturbation_statistics() {
+        let m = MismatchModel::high();
+        let mut rng = Pcg64::seeded(41);
+        let c = 2.0;
+        let n = 50_000;
+        let vals: Vec<f64> = (0..n).map(|_| m.perturb(c, &mut rng)).collect();
+        let mean = vals.iter().sum::<f64>() / n as f64;
+        let sd = (vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+            / n as f64)
+            .sqrt();
+        assert!(approx_eq(mean, c, 1e-3));
+        assert!(approx_eq(sd / c, m.sigma(c), 0.02));
+    }
+
+    #[test]
+    fn ideal_staircase_has_zero_dnl_inl() {
+        let vals: Vec<f64> = (0..16).map(|i| i as f64 * 0.5).collect();
+        let s = dnl_inl(&vals);
+        assert!(s.max_abs_dnl() < 1e-12);
+        assert!(s.max_abs_inl() < 1e-12);
+    }
+
+    #[test]
+    fn known_dnl_detected() {
+        // one double-height step at code 2
+        let vals = vec![0.0, 1.0, 3.0, 4.0];
+        let s = dnl_inl(&vals);
+        // endpoint lsb = 4/3
+        assert!(approx_eq(s.dnl[1], 2.0 / (4.0 / 3.0) - 1.0, 1e-12));
+        assert!(s.max_abs_inl() > 0.2);
+    }
+
+    #[test]
+    fn nominal_cell_is_linear() {
+        let cell = GrMacCell::fp6_e2m3_schematic();
+        for level in 1..=4 {
+            let s = dnl_inl(&w_sweep(&cell, level, 1.0));
+            assert!(s.max_abs_dnl() < 1e-9, "level {level}");
+            assert!(s.max_abs_inl() < 1e-9, "level {level}");
+        }
+    }
+
+    #[test]
+    fn paper_fig8_mismatch_within_half_lsb() {
+        // "post-layout simulation under 3sigma mismatch remains within the
+        // 1/2 LSB bound": the 99.7th percentile of max|DNL|, max|INL| at
+        // both K_C bounds stays below 0.5 LSB.
+        let cell = GrMacCell::fp6_e2m3_schematic();
+        for model in [MismatchModel::low(), MismatchModel::high()] {
+            let mut runs = mc_dnl_inl(&cell, model, 1000, 7);
+            runs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let p997_dnl = runs[996].0;
+            runs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            let p997_inl = runs[996].1;
+            assert!(
+                p997_dnl < 0.5 && p997_inl < 0.5,
+                "K_C={} p99.7 DNL={p997_dnl} INL={p997_inl}",
+                model.k_c_pct_sqrt_ff
+            );
+        }
+    }
+
+    #[test]
+    fn higher_kc_gives_worse_linearity() {
+        let cell = GrMacCell::fp6_e2m3_schematic();
+        let lo = mc_dnl_inl(&cell, MismatchModel::low(), 300, 11);
+        let hi = mc_dnl_inl(&cell, MismatchModel::high(), 300, 11);
+        let mean = |v: &[(f64, f64)]| {
+            v.iter().map(|x| x.0).sum::<f64>() / v.len() as f64
+        };
+        assert!(mean(&hi) > mean(&lo));
+    }
+
+    #[test]
+    fn e_sweep_error_zero_for_ideal() {
+        let cell = GrMacCell::fp6_e2m3_schematic();
+        let err = e_sweep_error_lsb(&cell, &cell, 15, 1.0);
+        assert!(err.iter().all(|e| e.abs() < 1e-12));
+    }
+
+    #[test]
+    fn low_levels_most_sensitive_in_lsb_terms() {
+        // paper: "highest mismatch sensitivity occurs at low E values due
+        // to the small output LSB step size" — relative to the level's own
+        // LSB. Verify DNL (normalized per-level) grows as level drops.
+        let cell = GrMacCell::fp6_e2m3_schematic();
+        let model = MismatchModel::high();
+        let mut rng = Pcg64::seeded(13);
+        let mut acc = vec![0.0f64; 4];
+        let runs = 200;
+        for _ in 0..runs {
+            let inst = model.instance(&cell, &mut rng);
+            for level in 1..=4 {
+                // error vs ideal octave response, normalized to the
+                // *top-level* W LSB as in Fig. 8(b)
+                let e = e_sweep_error_lsb(&inst, &cell, 15, 1.0);
+                acc[level - 1] += e[level - 1].abs();
+            }
+        }
+        // absolute (top-LSB-normalized) error is *largest* at the top
+        // level; the sensitivity claim is about each level's own LSB:
+        let per_level_lsb: Vec<f64> =
+            (1..=4).map(|l| cell.lsb(l, 1.0)).collect();
+        let rel: Vec<f64> = acc
+            .iter()
+            .zip(&per_level_lsb)
+            .map(|(a, l)| a / runs as f64 * cell.lsb(4, 1.0) / l)
+            .collect();
+        assert!(rel[0] > rel[3], "relative sensitivity {rel:?}");
+    }
+}

@@ -1,0 +1,24 @@
+//! Analog circuit substrate — the behavioral replacement for the paper's
+//! 22 nm post-layout SPICE (DESIGN.md §1 substitution table).
+//!
+//! The GR-MAC cell is a switched *linear* capacitor network, so its static
+//! transfer — the quantity Fig. 8 characterizes (W-sweep linearity, E-sweep
+//! exponential gain, DNL/INL under mismatch) — is exactly the solution of
+//! the linear charge-redistribution equations. Three layers:
+//!
+//! * [`capnet`] — general capacitive-network nodal solver (charge
+//!   conservation at floating nodes, Gaussian elimination);
+//! * [`grmac_cell`] — the FP6_E2M3 GR-MAC netlist of Fig. 6/7: the
+//!   binary-weighted mantissa divider, the gain-ranging coupling stage with
+//!   the paper's two layout transformations, eq. (1) parasitic
+//!   compensation, and the Table I capacitor values;
+//! * [`mismatch`] — Pelgrom-model Monte Carlo (σ(ΔC/C) = K_C/√C) and the
+//!   DNL/INL extraction behind Fig. 8.
+
+pub mod capnet;
+pub mod grmac_cell;
+pub mod mismatch;
+
+pub use capnet::CapNetwork;
+pub use grmac_cell::GrMacCell;
+pub use mismatch::{dnl_inl, MismatchModel, Sweep};

@@ -1,0 +1,183 @@
+//! Minimal benchmark harness (the vendor set has no criterion). Used by
+//! the `cargo bench` targets (`rust/benches/*.rs`, `harness = false`).
+//!
+//! Methodology: warmup, then `reps` timed repetitions of the closure;
+//! reports min / median / mean wall time per repetition. Throughput-style
+//! benches pass an items count to get items/s.
+
+use std::time::Instant;
+
+/// One measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub reps: usize,
+    pub min_s: f64,
+    pub median_s: f64,
+    pub mean_s: f64,
+    /// items/s based on the median, if items were declared.
+    pub throughput: Option<f64>,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        let t = |s: f64| {
+            if s < 1e-3 {
+                format!("{:.1} µs", s * 1e6)
+            } else if s < 1.0 {
+                format!("{:.2} ms", s * 1e3)
+            } else {
+                format!("{s:.3} s")
+            }
+        };
+        let tp = match self.throughput {
+            Some(v) if v >= 1e6 => format!("  ({:.2} Mitems/s)", v / 1e6),
+            Some(v) if v >= 1e3 => format!("  ({:.1} Kitems/s)", v / 1e3),
+            Some(v) => format!("  ({v:.1} items/s)"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} min {:>10}  median {:>10}  mean {:>10}{}",
+            self.name,
+            t(self.min_s),
+            t(self.median_s),
+            t(self.mean_s),
+            tp
+        )
+    }
+}
+
+/// Benchmark runner; collects measurements and prints them.
+pub struct Bench {
+    pub measurements: Vec<Measurement>,
+    /// Reduce reps for smoke runs (GRCIM_BENCH_QUICK=1).
+    quick: bool,
+    /// Optional name filter from argv.
+    filter: Option<String>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        let quick = std::env::var("GRCIM_BENCH_QUICK").is_ok();
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-') && a != "--bench");
+        Bench { measurements: Vec::new(), quick, filter }
+    }
+
+    fn enabled(&self, name: &str) -> bool {
+        self.filter.as_ref().map(|f| name.contains(f.as_str())).unwrap_or(true)
+    }
+
+    /// Time `f` for `reps` repetitions (reduced in quick mode), with one
+    /// untimed warmup call.
+    pub fn run<F: FnMut()>(&mut self, name: &str, reps: usize, mut f: F) {
+        self.run_with_items(name, reps, None, &mut f)
+    }
+
+    /// Like [`Bench::run`], reporting items/s throughput.
+    pub fn run_items<F: FnMut()>(
+        &mut self,
+        name: &str,
+        reps: usize,
+        items: usize,
+        mut f: F,
+    ) {
+        self.run_with_items(name, reps, Some(items), &mut f)
+    }
+
+    fn run_with_items(
+        &mut self,
+        name: &str,
+        reps: usize,
+        items: Option<usize>,
+        f: &mut dyn FnMut(),
+    ) {
+        if !self.enabled(name) {
+            return;
+        }
+        let reps = if self.quick { reps.div_ceil(4).max(2) } else { reps.max(2) };
+        f(); // warmup
+        let mut times = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let m = Measurement {
+            name: name.to_string(),
+            reps,
+            min_s: times[0],
+            median_s: median,
+            mean_s: times.iter().sum::<f64>() / reps as f64,
+            throughput: items.map(|n| n as f64 / median),
+        };
+        println!("{}", m.report());
+        self.measurements.push(m);
+    }
+
+    pub fn finish(&self) {
+        println!(
+            "\n{} benchmarks, {} mode",
+            self.measurements.len(),
+            if self.quick { "quick" } else { "full" }
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let mut b = Bench { measurements: vec![], quick: true, filter: None };
+        let mut acc = 0u64;
+        b.run_items("spin", 4, 1000, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i);
+            }
+        });
+        assert_eq!(b.measurements.len(), 1);
+        let m = &b.measurements[0];
+        assert!(m.min_s <= m.median_s);
+        assert!(m.throughput.unwrap() > 0.0);
+        assert!(m.report().contains("spin"));
+        assert!(acc > 0);
+    }
+
+    #[test]
+    fn filter_skips_unmatched() {
+        let mut b = Bench {
+            measurements: vec![],
+            quick: true,
+            filter: Some("xyz".into()),
+        };
+        b.run("abc", 2, || {});
+        assert!(b.measurements.is_empty());
+        b.run("has_xyz_inside", 2, || {});
+        assert_eq!(b.measurements.len(), 1);
+    }
+
+    #[test]
+    fn report_formats_scales() {
+        let m = Measurement {
+            name: "n".into(),
+            reps: 3,
+            min_s: 5e-6,
+            median_s: 5e-6,
+            mean_s: 5e-6,
+            throughput: Some(2e6),
+        };
+        let r = m.report();
+        assert!(r.contains("µs") && r.contains("Mitems/s"));
+    }
+}

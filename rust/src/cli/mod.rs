@@ -1,0 +1,158 @@
+//! Minimal CLI argument parser (the vendor set has no clap).
+//!
+//! Grammar: `grcim <command> [--flag value] [--switch] [positional...]`.
+//! Flags may appear in any order; `--flag=value` is also accepted.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Switch-style flags (no value).
+const SWITCHES: &[&str] = &["quick", "verbose", "quiet", "help"];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if SWITCHES.contains(&name) {
+                    args.switches.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .with_context(|| format!("--{name} needs a value"))?;
+                    args.flags.insert(name.to_string(), v.clone());
+                }
+            } else if args.command.is_empty() {
+                args.command = a.clone();
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, flag: &str) -> Option<&str> {
+        self.flags.get(flag).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, flag: &str, default: &'a str) -> &'a str {
+        self.get(flag).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, flag: &str, default: usize) -> Result<usize> {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .with_context(|| format!("--{flag} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, flag: &str, default: u64) -> Result<u64> {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<u64>()
+                .with_context(|| format!("--{flag} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, flag: &str, default: f64) -> Result<f64> {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .with_context(|| format!("--{flag} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Error on unknown flags (catches typos early).
+    pub fn ensure_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>())
+            .unwrap()
+    }
+
+    #[test]
+    fn basic_command_and_flags() {
+        let a = parse(&["figures", "--fig", "fig10", "--samples", "1000", "--quick"]);
+        assert_eq!(a.command, "figures");
+        assert_eq!(a.get("fig"), Some("fig10"));
+        assert_eq!(a.get_usize("samples", 0).unwrap(), 1000);
+        assert!(a.has("quick"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["energy", "--dr=30.1", "--sqnr=22.8"]);
+        assert_eq!(a.get_f64("dr", 0.0).unwrap(), 30.1);
+        assert_eq!(a.get_f64("sqnr", 0.0).unwrap(), 22.8);
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["sweep", "configs/fig12.toml"]);
+        assert_eq!(a.positional, vec!["configs/fig12.toml"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::parse(&["figures".into(), "--fig".into()]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["x", "--samples", "abc"]);
+        assert!(a.get_usize("samples", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse(&["x", "--smaples", "3"]);
+        assert!(a.ensure_known(&["samples"]).is_err());
+        assert!(a.ensure_known(&["smaples"]).is_ok());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["x"]);
+        assert_eq!(a.get_or("engine", "auto"), "auto");
+        assert_eq!(a.get_usize("samples", 42).unwrap(), 42);
+    }
+}

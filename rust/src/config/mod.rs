@@ -1,0 +1,269 @@
+//! Configuration: a minimal TOML-subset parser for campaign/figure config
+//! files plus the crate's JSON codec (artifact manifest, result stores).
+//!
+//! Supported TOML subset: `[section]` and `[[array-of-tables]]` headers,
+//! `key = value` with strings, numbers, booleans, and flat arrays; `#`
+//! comments. This covers everything in `configs/*.toml`.
+
+pub mod json;
+
+pub use json::Json;
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A TOML scalar or flat array.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// One `[section]` (or one element of an `[[array-of-tables]]`).
+pub type Table = BTreeMap<String, Value>;
+
+/// A parsed config document.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    /// Top-level (pre-section) keys.
+    pub root: Table,
+    /// Named sections in file order: (name, table).
+    pub sections: Vec<(String, Table)>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut current: Option<(String, Table)> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = header(line) {
+                if let Some(done) = current.take() {
+                    cfg.sections.push(done);
+                }
+                current = Some((name.to_string(), Table::new()));
+            } else {
+                let (k, v) = parse_kv(line)
+                    .with_context(|| format!("line {}", lineno + 1))?;
+                match &mut current {
+                    Some((_, t)) => t.insert(k, v),
+                    None => cfg.root.insert(k, v),
+                };
+            }
+        }
+        if let Some(done) = current.take() {
+            cfg.sections.push(done);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// All sections with the given name (array-of-tables semantics).
+    pub fn sections_named<'a>(&'a self, name: &str) -> Vec<&'a Table> {
+        self.sections
+            .iter()
+            .filter(|(n, _)| n == name)
+            .map(|(_, t)| t)
+            .collect()
+    }
+
+    /// First section with the given name.
+    pub fn section<'a>(&'a self, name: &str) -> Option<&'a Table> {
+        self.sections_named(name).into_iter().next()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn header(line: &str) -> Option<&str> {
+    let l = line.strip_prefix("[[").and_then(|l| l.strip_suffix("]]"));
+    if let Some(name) = l {
+        return Some(name.trim());
+    }
+    line.strip_prefix('[')
+        .and_then(|l| l.strip_suffix(']'))
+        .map(str::trim)
+}
+
+fn parse_kv(line: &str) -> Result<(String, Value)> {
+    let eq = line.find('=').context("expected 'key = value'")?;
+    let key = line[..eq].trim().to_string();
+    if key.is_empty() {
+        bail!("empty key");
+    }
+    let value = parse_value(line[eq + 1..].trim())?;
+    Ok((key, value))
+}
+
+fn parse_value(text: &str) -> Result<Value> {
+    if text.starts_with('"') {
+        let inner = text
+            .strip_prefix('"')
+            .and_then(|t| t.strip_suffix('"'))
+            .context("unterminated string")?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if text == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if text == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if text.starts_with('[') {
+        let inner = text
+            .strip_prefix('[')
+            .and_then(|t| t.strip_suffix(']'))
+            .context("unterminated array")?;
+        let mut items = Vec::new();
+        // split on commas outside strings
+        let mut depth_str = false;
+        let mut start = 0usize;
+        let bytes = inner.as_bytes();
+        for i in 0..bytes.len() {
+            match bytes[i] {
+                b'"' => depth_str = !depth_str,
+                b',' if !depth_str => {
+                    let piece = inner[start..i].trim();
+                    if !piece.is_empty() {
+                        items.push(parse_value(piece)?);
+                    }
+                    start = i + 1;
+                }
+                _ => {}
+            }
+        }
+        let piece = inner[start..].trim();
+        if !piece.is_empty() {
+            items.push(parse_value(piece)?);
+        }
+        return Ok(Value::Arr(items));
+    }
+    text.parse::<f64>()
+        .map(Value::Num)
+        .with_context(|| format!("cannot parse value: {text}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_campaign_style_config() {
+        let text = r#"
+# campaign config
+seed = 42
+samples = 65536        # per grid point
+
+[engine]
+kind = "pjrt"
+artifacts = "artifacts"
+
+[[experiment]]
+name = "fig10"
+n_e = [1, 2, 3, 4, 5]
+n_m_x = 2
+
+[[experiment]]
+name = "fig11"
+n_m = [1, 2, 3, 4, 5, 6]
+"#;
+        let cfg = Config::parse(text).unwrap();
+        assert_eq!(cfg.root["seed"].as_usize(), Some(42));
+        assert_eq!(
+            cfg.section("engine").unwrap()["kind"].as_str(),
+            Some("pjrt")
+        );
+        let exps = cfg.sections_named("experiment");
+        assert_eq!(exps.len(), 2);
+        assert_eq!(exps[0]["name"].as_str(), Some("fig10"));
+        assert_eq!(exps[0]["n_e"].as_arr().unwrap().len(), 5);
+        assert_eq!(exps[1]["n_m"].as_arr().unwrap().len(), 6);
+    }
+
+    #[test]
+    fn values() {
+        assert_eq!(parse_value("1.5").unwrap(), Value::Num(1.5));
+        assert_eq!(parse_value("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse_value("\"a#b\"").unwrap(), Value::Str("a#b".into()));
+        assert_eq!(
+            parse_value("[1, 2]").unwrap(),
+            Value::Arr(vec![Value::Num(1.0), Value::Num(2.0)])
+        );
+        assert_eq!(parse_value("[]").unwrap(), Value::Arr(vec![]));
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let cfg = Config::parse("k = \"a # not comment\" # real comment").unwrap();
+        assert_eq!(cfg.root["k"].as_str(), Some("a # not comment"));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("k = @?!").is_err());
+        assert!(Config::parse("= 3").is_err());
+    }
+
+    #[test]
+    fn empty_config_ok() {
+        let cfg = Config::parse("\n# just comments\n").unwrap();
+        assert!(cfg.root.is_empty());
+        assert!(cfg.sections.is_empty());
+    }
+}

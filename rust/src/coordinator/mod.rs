@@ -1,0 +1,263 @@
+//! L3 coordinator: the simulation-campaign manager.
+//!
+//! A *campaign* is a grid of [`ExperimentSpec`]s (format x distribution x
+//! array depth), each requiring a number of Monte-Carlo samples. The
+//! coordinator splits every experiment into engine-sized batch jobs,
+//! schedules them over a worker pool (each worker owns its backend — PJRT
+//! wrapper types are not `Send`, so engines are built per-thread through
+//! [`crate::runtime::build_engine`]), streams per-job aggregates back, and
+//! merges them into one [`ColumnAgg`] per experiment.
+//!
+//! Determinism: job RNG streams are `Pcg64::seeded(job_seed(campaign_seed,
+//! spec_index, batch_index))`, so results are independent of worker count
+//! and scheduling order (verified in `pool_order_independence`).
+
+pub mod pool;
+
+use crate::distributions::Distribution;
+use crate::mac::FormatPair;
+use crate::rng::{job_seed, Pcg64};
+use crate::runtime::{build_engine, Engine, EngineKind};
+use crate::stats::ColumnAgg;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// One grid point of a campaign.
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    /// Stable identifier (participates in reports, not in seeding).
+    pub id: String,
+    pub fmts: FormatPair,
+    pub dist_x: Distribution,
+    pub dist_w: Distribution,
+    pub nr: usize,
+    /// Requested Monte-Carlo samples (rounded up to whole engine batches).
+    pub samples: usize,
+}
+
+/// Campaign-wide settings.
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    pub engine: EngineKind,
+    pub artifacts_dir: PathBuf,
+    /// Worker threads; 0 = available_parallelism.
+    pub workers: usize,
+    pub seed: u64,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        CampaignConfig {
+            engine: EngineKind::Rust,
+            artifacts_dir: crate::runtime::ArtifactRegistry::default_dir(),
+            workers: 0,
+            seed: 0xC1A0_57A7,
+        }
+    }
+}
+
+impl CampaignConfig {
+    pub fn effective_workers(&self) -> usize {
+        if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        }
+    }
+}
+
+/// Generate one job's inputs and run it on an engine.
+pub fn run_job(
+    engine: &dyn Engine,
+    spec: &ExperimentSpec,
+    campaign_seed: u64,
+    spec_idx: u64,
+    batch_idx: u64,
+    batch_samples: usize,
+) -> Result<ColumnAgg> {
+    let mut rng = Pcg64::seeded(job_seed(campaign_seed, spec_idx, batch_idx));
+    let n = batch_samples * spec.nr;
+    let mut x = vec![0.0f32; n];
+    let mut w = vec![0.0f32; n];
+    spec.dist_x.fill_f32(&mut rng, &mut x);
+    spec.dist_w.fill_f32(&mut rng, &mut w);
+    let batch = engine
+        .simulate(&x, &w, spec.nr, spec.fmts)
+        .with_context(|| format!("job {}/{batch_idx}", spec.id))?;
+    let mut agg = ColumnAgg::new(spec.nr);
+    agg.push_batch(&batch);
+    Ok(agg)
+}
+
+/// Run a whole experiment on one engine (single-threaded convenience used
+/// by tests and small figures).
+pub fn run_experiment(
+    engine: &dyn Engine,
+    spec: &ExperimentSpec,
+    campaign_seed: u64,
+) -> Result<ColumnAgg> {
+    let batch = engine.preferred_batch(spec.nr);
+    let jobs = spec.samples.div_ceil(batch);
+    let mut agg = ColumnAgg::new(spec.nr);
+    for j in 0..jobs {
+        agg.merge(&run_job(engine, spec, campaign_seed, 0, j as u64, batch)?);
+    }
+    Ok(agg)
+}
+
+/// Run a campaign grid across the worker pool; returns one aggregate per
+/// spec, in input order.
+pub fn run_campaign(
+    specs: &[ExperimentSpec],
+    cfg: &CampaignConfig,
+) -> Result<Vec<ColumnAgg>> {
+    if specs.is_empty() {
+        return Ok(Vec::new());
+    }
+    let specs: Arc<Vec<ExperimentSpec>> = Arc::new(specs.to_vec());
+
+    // plan jobs: (spec_idx, batch_idx, batch_samples)
+    // batch sizing must not depend on which engine a worker builds, so we
+    // use the canonical artifact batch (2048) — both engines accept it.
+    const JOB_BATCH: usize = 2048;
+    let mut jobs = Vec::new();
+    for (si, spec) in specs.iter().enumerate() {
+        let n_jobs = spec.samples.div_ceil(JOB_BATCH);
+        for bi in 0..n_jobs {
+            jobs.push(pool::Job { spec_idx: si, batch_idx: bi as u64 });
+        }
+    }
+
+    let seed = cfg.seed;
+    let engine_kind = cfg.engine;
+    let artifacts = cfg.artifacts_dir.clone();
+    let specs_for_worker = Arc::clone(&specs);
+
+    let results = pool::run_jobs(
+        jobs,
+        cfg.effective_workers(),
+        move || {
+            let engine = build_engine(engine_kind, &artifacts)?;
+            let specs = Arc::clone(&specs_for_worker);
+            Ok(move |job: pool::Job| -> Result<(usize, ColumnAgg)> {
+                let spec = &specs[job.spec_idx];
+                let agg = run_job(
+                    engine.as_ref(),
+                    spec,
+                    seed,
+                    job.spec_idx as u64,
+                    job.batch_idx,
+                    JOB_BATCH,
+                )?;
+                Ok((job.spec_idx, agg))
+            })
+        },
+    )?;
+
+    // merge per spec
+    let mut aggs: Vec<ColumnAgg> =
+        specs.iter().map(|s| ColumnAgg::new(s.nr)).collect();
+    for (spec_idx, agg) in results {
+        aggs[spec_idx].merge(&agg);
+    }
+    Ok(aggs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::FpFormat;
+    use crate::runtime::RustEngine;
+
+    fn spec(samples: usize) -> ExperimentSpec {
+        ExperimentSpec {
+            id: "t".into(),
+            fmts: FormatPair::new(FpFormat::fp6_e3m2(), FpFormat::fp4_e2m1()),
+            dist_x: Distribution::Uniform,
+            dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+            nr: 32,
+            samples,
+        }
+    }
+
+    #[test]
+    fn run_job_deterministic() {
+        let e = RustEngine;
+        let a = run_job(&e, &spec(64), 7, 0, 0, 64).unwrap();
+        let b = run_job(&e, &spec(64), 7, 0, 0, 64).unwrap();
+        assert_eq!(a.nf.sum.to_bits(), b.nf.sum.to_bits());
+        // different batch index -> different stream
+        let c = run_job(&e, &spec(64), 7, 0, 1, 64).unwrap();
+        assert_ne!(a.nf.sum.to_bits(), c.nf.sum.to_bits());
+    }
+
+    #[test]
+    fn run_experiment_rounds_up_to_batches() {
+        let e = RustEngine;
+        let agg = run_experiment(&e, &spec(3000), 1).unwrap();
+        // rounded up to 2 x 2048
+        assert_eq!(agg.samples(), 4096);
+    }
+
+    #[test]
+    fn campaign_matches_single_threaded() {
+        let specs = vec![spec(4096), {
+            let mut s = spec(2048);
+            s.id = "t2".into();
+            s.dist_x = Distribution::clipped_gauss4();
+            s
+        }];
+        let cfg = CampaignConfig {
+            engine: EngineKind::Rust,
+            workers: 4,
+            seed: 99,
+            ..Default::default()
+        };
+        let par = run_campaign(&specs, &cfg).unwrap();
+
+        // single-threaded reference with the same seeding scheme
+        let e = RustEngine;
+        for (si, spec) in specs.iter().enumerate() {
+            let jobs = spec.samples.div_ceil(2048);
+            let mut agg = ColumnAgg::new(spec.nr);
+            for bi in 0..jobs {
+                agg.merge(
+                    &run_job(&e, spec, 99, si as u64, bi as u64, 2048).unwrap(),
+                );
+            }
+            assert_eq!(par[si].samples(), agg.samples());
+            assert_eq!(par[si].nf.sum.to_bits(), agg.nf.sum.to_bits());
+            assert_eq!(par[si].sig.sum_sq.to_bits(), agg.sig.sum_sq.to_bits());
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let specs = vec![spec(6144)];
+        let mut aggs = Vec::new();
+        for workers in [1, 3, 8] {
+            let cfg = CampaignConfig {
+                engine: EngineKind::Rust,
+                workers,
+                seed: 5,
+                ..Default::default()
+            };
+            aggs.push(run_campaign(&specs, &cfg).unwrap());
+        }
+        for pair in aggs.windows(2) {
+            assert_eq!(
+                pair[0][0].nf.sum.to_bits(),
+                pair[1][0].nf.sum.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn empty_campaign_is_fine() {
+        let cfg = CampaignConfig::default();
+        assert!(run_campaign(&[], &cfg).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,189 @@
+//! Worker pool built on std threads and channels (no tokio in the vendor
+//! set — and the workload is CPU-bound batch compute, not I/O, so a
+//! thread-per-worker pool with a shared job queue is the right shape).
+//!
+//! Each worker constructs its own job-processing closure through a factory
+//! (this is where per-thread PJRT engines are built), pulls jobs from the
+//! shared queue, and streams results back over a channel. The first error
+//! aborts the pool (remaining jobs are drained and dropped).
+
+use anyhow::{Context, Result};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// A schedulable unit: one Monte-Carlo batch of one experiment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Job {
+    pub spec_idx: usize,
+    pub batch_idx: u64,
+}
+
+/// Run `jobs` over `workers` threads.
+///
+/// `make_worker` is called once per thread and returns the thread's job
+/// closure (building any non-`Send` state, e.g. a PJRT engine, inside the
+/// thread). Results are returned unordered; scheduling must therefore not
+/// affect job semantics (the coordinator seeds jobs by index, not order).
+pub fn run_jobs<T, F, W>(
+    jobs: Vec<Job>,
+    workers: usize,
+    make_worker: F,
+) -> Result<Vec<T>>
+where
+    T: Send + 'static,
+    W: FnMut(Job) -> Result<T>,
+    F: Fn() -> Result<W> + Send + Sync + 'static,
+{
+    let total = jobs.len();
+    if total == 0 {
+        return Ok(Vec::new());
+    }
+    let workers = workers.max(1).min(total);
+    let queue = Arc::new(Mutex::new(jobs.into_iter()));
+    let (tx, rx) = mpsc::channel::<Result<T>>();
+    let make_worker = Arc::new(make_worker);
+
+    let mut handles = Vec::with_capacity(workers);
+    for wid in 0..workers {
+        let queue = Arc::clone(&queue);
+        let tx = tx.clone();
+        let make_worker = Arc::clone(&make_worker);
+        let handle = std::thread::Builder::new()
+            .name(format!("grcim-worker-{wid}"))
+            .spawn(move || {
+                let mut work = match make_worker() {
+                    Ok(w) => w,
+                    Err(e) => {
+                        let _ = tx.send(Err(e.context(format!(
+                            "worker {wid} failed to initialize"
+                        ))));
+                        return;
+                    }
+                };
+                loop {
+                    let job = {
+                        let mut q = queue.lock().unwrap();
+                        q.next()
+                    };
+                    let Some(job) = job else { break };
+                    let res = work(job);
+                    let failed = res.is_err();
+                    if tx.send(res).is_err() || failed {
+                        break; // receiver gone or error sent: stop
+                    }
+                }
+            })
+            .context("spawning worker")?;
+        handles.push(handle);
+    }
+    drop(tx);
+
+    let mut out = Vec::with_capacity(total);
+    let mut first_err: Option<anyhow::Error> = None;
+    for res in rx {
+        match res {
+            Ok(v) => out.push(v),
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+                // drain the queue so workers stop picking up new jobs
+                let mut q = queue.lock().unwrap();
+                while q.next().is_some() {}
+            }
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    if out.len() != total {
+        anyhow::bail!("pool lost jobs: {} of {total} completed", out.len());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn jobs(n: usize) -> Vec<Job> {
+        (0..n).map(|i| Job { spec_idx: 0, batch_idx: i as u64 }).collect()
+    }
+
+    #[test]
+    fn runs_all_jobs() {
+        let out = run_jobs(jobs(100), 4, || {
+            Ok(|job: Job| Ok(job.batch_idx * 2))
+        })
+        .unwrap();
+        assert_eq!(out.len(), 100);
+        let sum: u64 = out.iter().sum();
+        assert_eq!(sum, (0..100u64).map(|i| i * 2).sum());
+    }
+
+    #[test]
+    fn single_worker_and_more_workers_than_jobs() {
+        for workers in [1, 64] {
+            let out =
+                run_jobs(jobs(3), workers, || Ok(|j: Job| Ok(j.batch_idx)))
+                    .unwrap();
+            assert_eq!(out.len(), 3);
+        }
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let out: Vec<u64> =
+            run_jobs(vec![], 4, || Ok(|j: Job| Ok(j.batch_idx))).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn propagates_job_error_and_stops() {
+        static DONE: AtomicUsize = AtomicUsize::new(0);
+        let res: Result<Vec<u64>> = run_jobs(jobs(1000), 4, || {
+            Ok(|job: Job| {
+                if job.batch_idx == 5 {
+                    anyhow::bail!("boom");
+                }
+                DONE.fetch_add(1, Ordering::Relaxed);
+                Ok(job.batch_idx)
+            })
+        });
+        let err = res.unwrap_err().to_string();
+        assert!(err.contains("boom"), "{err}");
+        // far fewer than 1000 jobs should have completed
+        assert!(DONE.load(Ordering::Relaxed) < 500);
+    }
+
+    #[test]
+    fn propagates_worker_init_error() {
+        let res: Result<Vec<u64>> =
+            run_jobs(jobs(10), 2, || -> Result<fn(Job) -> Result<u64>> {
+                anyhow::bail!("no engine")
+            });
+        let err = format!("{:#}", res.unwrap_err());
+        assert!(err.contains("failed to initialize"), "{err}");
+    }
+
+    #[test]
+    fn per_worker_state_is_isolated() {
+        // each worker keeps its own counter; total equals job count
+        let out = run_jobs(jobs(64), 4, || {
+            let mut local = 0u64;
+            Ok(move |_: Job| {
+                local += 1;
+                Ok(local)
+            })
+        })
+        .unwrap();
+        let total: u64 = out.len() as u64;
+        assert_eq!(total, 64);
+        // max per-worker counter can't exceed total jobs
+        assert!(out.iter().all(|&c| c >= 1 && c <= 64));
+    }
+}

@@ -1,0 +1,317 @@
+//! Array-level energy composition per architecture and normalization
+//! granularity (paper Sec. III-C and IV-B; DESIGN.md #7).
+//!
+//! Bit-width conventions (fractional widths allowed — the Fig. 12 axes are
+//! continuous):
+//!
+//! * aligned magnitude width (FP->INT): `(n_m + 1) + (e_max - 1)` —
+//!   mantissa incl. implicit bit plus the exponent shift range;
+//! * normalized mantissa width (GR): `n_m + 1`;
+//! * exponent field bits: `log2(e_max + 1)`;
+//! * one-hot exponent-sum range (unit norm): `e_max_x + e_max_w - 1`
+//!   levels, fed to a `log2`-bit adder.
+//!
+//! Amortization (Sec. III-C): per-cell logic is not amortized; per-row
+//! logic amortizes over N_C; per-column logic over N_R; per-array over
+//! N_R * N_C. Energy per op divides one MVM by 2 * NR * NC.
+
+use super::{adder_tree_fa_count, TechParams};
+use crate::mac::FormatPair;
+
+/// CIM architecture / normalization granularity (Sec. III-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CimArch {
+    /// Conventional direct-accumulation CIM on FP->INT-aligned data.
+    Conventional,
+    /// GR-MAC, per-unit normalization (input + weight exponents ranged).
+    GrUnit,
+    /// GR-MAC, per-row normalization (input exponents only; weights stored
+    /// pre-aligned as in [18]).
+    GrRow,
+    /// GR-MAC, INT-input normalization (weight exponents ranged only;
+    /// column exponent sums precomputed at compile time).
+    GrInt,
+}
+
+impl CimArch {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CimArch::Conventional => "conventional",
+            CimArch::GrUnit => "gr-unit",
+            CimArch::GrRow => "gr-row",
+            CimArch::GrInt => "gr-int",
+        }
+    }
+
+    /// The spec-solver architecture whose referral gain dimensions this
+    /// granularity's ADC.
+    pub fn spec_arch(&self) -> crate::spec::Arch {
+        match self {
+            CimArch::Conventional => crate::spec::Arch::Conventional,
+            CimArch::GrUnit => crate::spec::Arch::GrUnit,
+            CimArch::GrRow => crate::spec::Arch::GrRow,
+            CimArch::GrInt => crate::spec::Arch::GrInt,
+        }
+    }
+}
+
+/// Per-op energy breakdown in fJ (the Fig. 12 pie charts).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// Column ADCs.
+    pub adc: f64,
+    /// Row DACs.
+    pub dac: f64,
+    /// Cell-array capacitor switching.
+    pub cells: f64,
+    /// Per-cell / per-row exponent logic (adders + decoders).
+    pub exp_logic: f64,
+    /// Column exponent adder trees.
+    pub tree: f64,
+    /// Column output normalization multipliers.
+    pub norm_mult: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.adc + self.dac + self.cells + self.exp_logic + self.tree + self.norm_mult
+    }
+
+    /// Named components for reports.
+    pub fn components(&self) -> [(&'static str, f64); 6] {
+        [
+            ("adc", self.adc),
+            ("dac", self.dac),
+            ("cells", self.cells),
+            ("exp_logic", self.exp_logic),
+            ("tree", self.tree),
+            ("norm_mult", self.norm_mult),
+        ]
+    }
+}
+
+fn exponent_field_bits(e_max: f64) -> f64 {
+    (e_max + 1.0).log2().max(1.0)
+}
+
+/// Energy per operation of one architecture at a given ADC ENOB.
+///
+/// `enob` comes from the spec solver (`spec::required_enob`) with the
+/// matching [`CimArch::spec_arch`] referral gain.
+pub fn energy_per_op(
+    arch: CimArch,
+    fmts: FormatPair,
+    nr: usize,
+    nc: usize,
+    enob: f64,
+    tech: &TechParams,
+) -> EnergyBreakdown {
+    assert!(nr > 0 && nc > 0);
+    let ops = 2.0 * (nr * nc) as f64;
+    let fx = fmts.x;
+    let fw = fmts.w;
+
+    let mant_x = fx.n_m + 1.0; // mantissa incl. implicit bit
+    let mant_w = fw.n_m + 1.0;
+    let aligned_x = mant_x + (fx.e_max - 1.0); // FP->INT width (magnitude)
+    let aligned_w = mant_w + (fw.e_max - 1.0);
+    let ebits_x = exponent_field_bits(fx.e_max);
+    let ebits_w = exponent_field_bits(fw.e_max);
+
+    let mut b = EnergyBreakdown::default();
+
+    // Column ADCs: one conversion per column per MVM.
+    b.adc = nc as f64 * tech.e_adc(enob) / ops;
+
+    match arch {
+        CimArch::Conventional => {
+            // Row DACs drive the aligned input word (sign handled
+            // differentially, charged on magnitude bits as in [27]).
+            b.dac = nr as f64 * tech.e_dac(aligned_x) / ops;
+            // Cell divider switches span the aligned weight width.
+            b.cells = tech.e_cell_array(aligned_w, nr, nc) / ops;
+        }
+        CimArch::GrUnit => {
+            // DAC carries only the normalized mantissa.
+            b.dac = nr as f64 * tech.e_dac(mant_x) / ops;
+            // mantissa switches + the gain-ranging coupling toggle
+            b.cells = tech.e_cell_array(mant_w + 1.0, nr, nc) / ops;
+            // per-cell: exponent adder (max field width + carry) + decoder
+            // driving the one-hot coupling switches
+            let sum_levels = (fx.e_max + fw.e_max - 1.0).max(1.0);
+            let sum_bits = sum_levels.log2().max(1.0) + 1.0;
+            let fa_per_cell = ebits_x.max(ebits_w) + 1.0;
+            let cell_logic = tech.e_fa() * fa_per_cell
+                + tech.e_decoder(sum_bits, sum_levels);
+            b.exp_logic = (nr * nc) as f64 * cell_logic / ops;
+            // per-column adder tree over NR one-hot magnitude words
+            let fa = adder_tree_fa_count(nr, sum_levels);
+            b.tree = nc as f64 * tech.e_adder_tree(fa) / ops;
+            // per-column normalization multiplier: ADC word x S word
+            let s_bits = sum_levels + (nr as f64).log2();
+            b.norm_mult = nc as f64 * tech.e_mult(enob, s_bits) / ops;
+        }
+        CimArch::GrRow => {
+            b.dac = nr as f64 * tech.e_dac(mant_x) / ops;
+            // weights stored pre-aligned; + gain-ranging toggle
+            b.cells = tech.e_cell_array(aligned_w + 1.0, nr, nc) / ops;
+            // one decoder per row (input exponent -> one-hot), amortized
+            // over the row's NC cells
+            let levels = fx.e_max.max(1.0);
+            let row_logic = tech.e_decoder(ebits_x, levels);
+            b.exp_logic = nr as f64 * row_logic / ops;
+            // one exponent adder tree per array (inputs shared by columns)
+            let fa = adder_tree_fa_count(nr, levels);
+            b.tree = tech.e_adder_tree(fa) / ops;
+            let s_bits = levels + (nr as f64).log2();
+            b.norm_mult = nc as f64 * tech.e_mult(enob, s_bits) / ops;
+        }
+        CimArch::GrInt => {
+            // INT inputs: DAC carries the full input word (= its DR bits,
+            // which for an INT format equals its total width - sign).
+            b.dac = nr as f64 * tech.e_dac(fx.dr_bits() - 1.0) / ops;
+            b.cells = tech.e_cell_array(mant_w + 1.0, nr, nc) / ops;
+            // per-cell decoder on the stored weight exponent
+            let levels = fw.e_max.max(1.0);
+            b.exp_logic =
+                (nr * nc) as f64 * tech.e_decoder(ebits_w, levels) / ops;
+            // column exponent sums precomputed at compile time: no tree
+            b.tree = 0.0;
+            let s_bits = levels + (nr as f64).log2();
+            b.norm_mult = nc as f64 * tech.e_mult(enob, s_bits) / ops;
+        }
+    }
+    b
+}
+
+/// Energy per op of the optional global-normalization wrapper (Sec. III,
+/// Fig. 3 dashed): per-MVM max-exponent search over the input block plus a
+/// per-input exponent subtract; modeled with the paper's FA primitives.
+/// Charged identically to either architecture when a spec exceeds native
+/// DR; excluded from Fig. 12's pies ("only CIM array energy is included").
+pub fn global_norm_energy_per_op(
+    fmts: FormatPair,
+    nr: usize,
+    nc: usize,
+    tech: &TechParams,
+) -> f64 {
+    let ops = 2.0 * (nr * nc) as f64;
+    let ebits = exponent_field_bits(fmts.x.e_max);
+    // max-find tree: NR-1 comparators ~ ebits-bit adders each
+    let maxfind = tech.e_adder_tree(adder_tree_fa_count(nr, ebits));
+    // per-input exponent subtract + shift control decoder
+    let per_input = tech.e_fa() * ebits
+        + tech.e_decoder(ebits, fmts.x.e_max.max(1.0));
+    (maxfind + nr as f64 * per_input) / ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::FpFormat;
+
+    fn fp4_pair() -> FormatPair {
+        FormatPair::new(FpFormat::fp4_e2m1(), FpFormat::fp4_e2m1())
+    }
+
+    #[test]
+    fn breakdown_total_is_sum() {
+        let t = TechParams::default();
+        let b = energy_per_op(CimArch::GrUnit, fp4_pair(), 32, 32, 8.0, &t);
+        let sum: f64 = b.components().iter().map(|(_, v)| v).sum();
+        assert!((b.total() - sum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conventional_has_no_exponent_logic() {
+        let t = TechParams::default();
+        let b =
+            energy_per_op(CimArch::Conventional, fp4_pair(), 32, 32, 8.0, &t);
+        assert_eq!(b.exp_logic, 0.0);
+        assert_eq!(b.tree, 0.0);
+        assert_eq!(b.norm_mult, 0.0);
+        assert!(b.adc > 0.0 && b.dac > 0.0 && b.cells > 0.0);
+    }
+
+    #[test]
+    fn gr_dac_cheaper_than_conventional_dac() {
+        // GR drives mantissa-only DACs; conventional drives aligned words
+        let t = TechParams::default();
+        let conv =
+            energy_per_op(CimArch::Conventional, fp4_pair(), 32, 32, 8.0, &t);
+        let gr = energy_per_op(CimArch::GrUnit, fp4_pair(), 32, 32, 8.0, &t);
+        assert!(gr.dac < conv.dac);
+    }
+
+    #[test]
+    fn unit_logic_exceeds_row_logic() {
+        // per-cell adders+decoders vs per-row decoders (Sec. III-C)
+        let t = TechParams::default();
+        let fmts = FormatPair::new(FpFormat::fp6_e3m2(), FpFormat::fp4_e2m1());
+        let unit = energy_per_op(CimArch::GrUnit, fmts, 32, 32, 8.0, &t);
+        let row = energy_per_op(CimArch::GrRow, fmts, 32, 32, 8.0, &t);
+        assert!(unit.exp_logic > row.exp_logic);
+        assert!(unit.tree > row.tree); // per-column trees vs one tree
+    }
+
+    #[test]
+    fn adc_dominates_at_high_enob() {
+        let t = TechParams::default();
+        let b = energy_per_op(CimArch::Conventional, fp4_pair(), 32, 32, 12.0, &t);
+        assert!(b.adc > 0.5 * b.total());
+    }
+
+    #[test]
+    fn energy_monotone_in_enob() {
+        let t = TechParams::default();
+        let mut prev = 0.0;
+        for enob in [4.0, 6.0, 8.0, 10.0, 12.0] {
+            let e = energy_per_op(CimArch::GrUnit, fp4_pair(), 32, 32, enob, &t)
+                .total();
+            assert!(e > prev);
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn adc_amortizes_over_rows() {
+        // deeper arrays amortize the column ADC over more ops
+        let t = TechParams::default();
+        let e32 = energy_per_op(CimArch::Conventional, fp4_pair(), 32, 32, 10.0, &t);
+        let e128 =
+            energy_per_op(CimArch::Conventional, fp4_pair(), 128, 32, 10.0, &t);
+        assert!(e128.adc < e32.adc);
+        // but cell switching per op is depth-independent
+        assert!((e128.cells - e32.cells).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fp4_energy_in_paper_ballpark() {
+        // Fig. 12 pie: FP4 inputs at 32x32 sit around tens of fJ/Op.
+        // This pins the units (fJ) more than the exact value.
+        let t = TechParams::default();
+        let b = energy_per_op(CimArch::GrUnit, fp4_pair(), 32, 32, 7.0, &t);
+        assert!(
+            b.total() > 5.0 && b.total() < 100.0,
+            "total = {} fJ/Op",
+            b.total()
+        );
+    }
+
+    #[test]
+    fn global_norm_wrapper_is_small_but_nonzero() {
+        let t = TechParams::default();
+        let fmts = FormatPair::new(FpFormat::fp8_e4m3(), FpFormat::fp4_e2m1());
+        let e = global_norm_energy_per_op(fmts, 32, 32, &t);
+        assert!(e > 0.0 && e < 5.0, "global norm = {e} fJ/Op");
+    }
+
+    #[test]
+    fn spec_arch_mapping() {
+        assert_eq!(CimArch::GrUnit.spec_arch(), crate::spec::Arch::GrUnit);
+        assert_eq!(
+            CimArch::Conventional.spec_arch(),
+            crate::spec::Arch::Conventional
+        );
+    }
+}

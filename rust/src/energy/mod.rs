@@ -1,0 +1,234 @@
+//! Energy models — the paper's Appendix (Tables II and III), from Sun et
+//! al., ICCAD'23, plus the array-level composition for each architecture
+//! and normalization granularity (Sec. III-C, Sec. IV-B).
+//!
+//! All component energies are in **femtojoules** (capacitance parameters in
+//! fF, V_DD in volts). Per-operation figures divide one matrix-vector
+//! multiplication by `2 * NR * NC` (each MAC counts as two operations).
+
+pub mod arch;
+
+pub use arch::{energy_per_op, global_norm_energy_per_op, CimArch, EnergyBreakdown};
+
+/// Technology/cost parameters (paper Table III: 0.9 V, 28 nm).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TechParams {
+    /// Reference NAND2/NOR2 gate capacitance, fF.
+    pub c_gate_ff: f64,
+    /// ADC linear coefficient, fF (energy per conversion step).
+    pub k1_ff: f64,
+    /// ADC thermal-noise coefficient, fF (multiplies 4^ENOB). 1 aF.
+    pub k2_ff: f64,
+    /// DAC switching capacitance per bit, fF.
+    pub k3_ff: f64,
+    /// Supply voltage, V.
+    pub vdd: f64,
+}
+
+impl Default for TechParams {
+    fn default() -> Self {
+        TechParams {
+            c_gate_ff: 0.7,
+            k1_ff: 100.0,
+            k2_ff: 0.001, // 1 aF
+            k3_ff: 50.0,
+            vdd: 0.9,
+        }
+    }
+}
+
+impl TechParams {
+    /// Scale the ADC coefficients (the paper's ±10% sensitivity study).
+    pub fn with_adc_scale(mut self, scale: f64) -> Self {
+        self.k1_ff *= scale;
+        self.k2_ff *= scale;
+        self
+    }
+
+    fn v2(&self) -> f64 {
+        self.vdd * self.vdd
+    }
+
+    /// ADC energy per conversion: (k1*ENOB + k2*4^ENOB) * V_DD^2.
+    ///
+    /// Linear term = technology-limited regime; 4^ENOB term = thermal-noise
+    /// -limited regime (SAR). Crossover N_cross ~ 10 bits with Table III
+    /// values (Murmann's boundary).
+    pub fn e_adc(&self, enob: f64) -> f64 {
+        assert!(enob >= 0.0);
+        (self.k1_ff * enob + self.k2_ff * 4f64.powf(enob)) * self.v2()
+    }
+
+    /// ADC thermal/technology crossover resolution: k1*N = k2*4^N.
+    pub fn adc_crossover_bits(&self) -> f64 {
+        // solve by bisection; monotone in N for N >= 1
+        let f = |n: f64| self.k2_ff * 4f64.powf(n) - self.k1_ff * n;
+        let (mut lo, mut hi) = (1.0, 20.0);
+        for _ in 0..80 {
+            let mid = 0.5 * (lo + hi);
+            if f(mid) > 0.0 {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    /// DAC energy per conversion: k3 * res * V_DD^2.
+    pub fn e_dac(&self, res_bits: f64) -> f64 {
+        assert!(res_bits >= 0.0);
+        self.k3_ff * res_bits * self.v2()
+    }
+
+    /// Full-adder energy: 6 * C_gate * V_DD^2.
+    pub fn e_fa(&self) -> f64 {
+        6.0 * self.c_gate_ff * self.v2()
+    }
+
+    /// Adder-tree energy from its full-adder count.
+    pub fn e_adder_tree(&self, fa_count: f64) -> f64 {
+        self.e_fa() * fa_count
+    }
+
+    /// Na x Nb multiplier: (1.5*C_gate*V^2 + E_FA) * Na * Nb.
+    ///
+    /// Table II gives the square-array N-bit form (N^2); the rectangular
+    /// generalization keeps the same per-cell (AND + FA) cost.
+    pub fn e_mult(&self, na_bits: f64, nb_bits: f64) -> f64 {
+        (1.5 * self.c_gate_ff * self.v2() + self.e_fa()) * na_bits * nb_bits
+    }
+
+    /// Binary decoder: (0.5*N_in + N_out + 1) * C_gate * V_DD^2.
+    pub fn e_decoder(&self, n_in: f64, n_out: f64) -> f64 {
+        (0.5 * n_in + n_out + 1.0) * self.c_gate_ff * self.v2()
+    }
+
+    /// Cell-array switching for one MVM:
+    /// 0.5 * C_gate * V^2 * N_SW * NR * NC.
+    pub fn e_cell_array(&self, n_sw: f64, nr: usize, nc: usize) -> f64 {
+        0.5 * self.c_gate_ff * self.v2() * n_sw * (nr * nc) as f64
+    }
+}
+
+/// Full-adder count of a balanced binary adder tree over `n` operands of
+/// `width` bits each: stage k has floor(remaining/2) adders of
+/// (width + k - 1) bits. (The GR exponent trees sum one-hot magnitude
+/// words — low activity, but the paper's model charges per-FA switching
+/// uniformly, which is conservative for us.)
+pub fn adder_tree_fa_count(n: usize, width: f64) -> f64 {
+    assert!(n >= 1);
+    let mut count = 0.0;
+    let mut remaining = n;
+    let mut stage = 1.0;
+    while remaining > 1 {
+        let pairs = remaining / 2;
+        count += pairs as f64 * (width + stage - 1.0);
+        remaining = remaining / 2 + remaining % 2;
+        stage += 1.0;
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::approx_eq;
+
+    #[test]
+    fn table_iii_defaults() {
+        let t = TechParams::default();
+        assert_eq!(t.c_gate_ff, 0.7);
+        assert_eq!(t.k1_ff, 100.0);
+        assert_eq!(t.k2_ff, 0.001);
+        assert_eq!(t.k3_ff, 50.0);
+        assert_eq!(t.vdd, 0.9);
+    }
+
+    #[test]
+    fn adc_energy_formula() {
+        let t = TechParams::default();
+        // 8-bit: (100*8 + 0.001*65536) * 0.81 = (800 + 65.536)*0.81
+        assert!(approx_eq(t.e_adc(8.0), 865.536 * 0.81, 1e-9));
+        // linear regime dominates at low ENOB
+        assert!(approx_eq(t.e_adc(4.0), (400.0 + 0.256) * 0.81, 1e-9));
+    }
+
+    #[test]
+    fn adc_crossover_near_ten_bits() {
+        // paper: N_cross ~ 10 bits for these parameters
+        let n = TechParams::default().adc_crossover_bits();
+        assert!((9.5..10.5).contains(&n), "N_cross = {n}");
+    }
+
+    #[test]
+    fn adc_thermal_regime_quadruples_per_bit() {
+        let t = TechParams::default();
+        let r = t.e_adc(16.0) / t.e_adc(15.0);
+        assert!((3.5..4.1).contains(&r), "ratio {r}");
+    }
+
+    #[test]
+    fn dac_energy_linear() {
+        let t = TechParams::default();
+        assert!(approx_eq(t.e_dac(4.0), 50.0 * 4.0 * 0.81, 1e-12));
+        assert!(approx_eq(t.e_dac(8.0), 2.0 * t.e_dac(4.0), 1e-12));
+    }
+
+    #[test]
+    fn fa_and_mult_formulas() {
+        let t = TechParams::default();
+        assert!(approx_eq(t.e_fa(), 6.0 * 0.7 * 0.81, 1e-12));
+        // square multiplier reduces to Table II's N^2 form
+        let n = 5.0;
+        assert!(approx_eq(
+            t.e_mult(n, n),
+            (1.5 * 0.7 * 0.81 + t.e_fa()) * n * n,
+            1e-12
+        ));
+    }
+
+    #[test]
+    fn decoder_formula() {
+        let t = TechParams::default();
+        // 3-in, 8-out: (1.5 + 8 + 1) * 0.7 * 0.81
+        assert!(approx_eq(t.e_decoder(3.0, 8.0), 10.5 * 0.7 * 0.81, 1e-12));
+    }
+
+    #[test]
+    fn cell_array_scales_with_size() {
+        let t = TechParams::default();
+        let e32 = t.e_cell_array(4.0, 32, 32);
+        let e64 = t.e_cell_array(4.0, 64, 64);
+        assert!(approx_eq(e64, 4.0 * e32, 1e-12));
+    }
+
+    #[test]
+    fn adder_tree_counts() {
+        // 2 operands, width w: one w-bit adder
+        assert_eq!(adder_tree_fa_count(2, 4.0), 4.0);
+        // 4 operands: 2 adders @ w + 1 adder @ w+1
+        assert_eq!(adder_tree_fa_count(4, 4.0), 2.0 * 4.0 + 5.0);
+        // 1 operand: nothing to add
+        assert_eq!(adder_tree_fa_count(1, 4.0), 0.0);
+        // odd count: 3 operands -> 1 adder @ w, then 2 -> 1 adder @ w+1
+        assert_eq!(adder_tree_fa_count(3, 4.0), 4.0 + 5.0);
+    }
+
+    #[test]
+    fn adder_tree_grows_log_depth() {
+        let w = 6.0;
+        let f32_ = adder_tree_fa_count(32, w);
+        let f64_ = adder_tree_fa_count(64, w);
+        // doubling operands roughly doubles FAs (31 vs 63 adders)
+        assert!(f64_ / f32_ > 1.9 && f64_ / f32_ < 2.2);
+    }
+
+    #[test]
+    fn adc_sensitivity_scaling() {
+        let t = TechParams::default().with_adc_scale(1.1);
+        assert!(approx_eq(t.k1_ff, 110.0, 1e-12));
+        assert!(approx_eq(t.k2_ff, 0.0011, 1e-12));
+        assert_eq!(t.k3_ff, 50.0); // DAC untouched
+    }
+}

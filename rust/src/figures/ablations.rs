@@ -1,0 +1,167 @@
+//! Ablations on DESIGN.md's called-out choices (not paper figures, but
+//! claims made in the paper's prose):
+//!
+//! * **granularity** — unit vs row energy crossover as input precision
+//!   grows (Sec. III-C1: "the efficiency crossover point is identified at
+//!   N_M,x >= 6 in 28 nm"): unit's extra logic pays off only once the
+//!   baseline ADC resolution is high.
+//! * **array depth** — N_eff and the GR ENOB advantage vs NR (the
+//!   shrinkage term the GR-MAC attacks grows with column depth).
+//! * **margin** — sensitivity of the ADC spec to the 6 dB safety margin.
+
+use super::FigureCtx;
+use crate::coordinator::{run_campaign, ExperimentSpec};
+use crate::distributions::Distribution;
+use crate::energy::{energy_per_op, CimArch, TechParams};
+use crate::formats::FpFormat;
+use crate::mac::FormatPair;
+use crate::report::{FigureResult, Table};
+use crate::spec::{required_enob, Arch, SpecConfig};
+use anyhow::Result;
+
+pub fn run(ctx: &FigureCtx) -> Result<FigureResult> {
+    let mut fr = FigureResult::new("ablations");
+    let tech = TechParams::default();
+    let w_fmt = FpFormat::fp4_e2m1();
+    let w_dist = Distribution::max_entropy(w_fmt);
+    let samples = ctx.samples.min(16_384);
+
+    // ---- granularity crossover vs input mantissa bits ----
+    let mut specs = Vec::new();
+    let n_ms: Vec<u32> = (1..=8).collect();
+    for &n_m in &n_ms {
+        let fmt = FpFormat::fp(2, n_m); // small exponent so unit is native
+        specs.push(ExperimentSpec {
+            id: format!("gran-m{n_m}"),
+            fmts: FormatPair::new(fmt, w_fmt),
+            dist_x: Distribution::Uniform,
+            dist_w: w_dist.clone(),
+            nr: 32,
+            samples,
+        });
+    }
+    let aggs = run_campaign(&specs, &ctx.campaign)?;
+    let cfg = SpecConfig::default();
+    let mut gran = Table::new(
+        "granularity crossover",
+        &["n_m_x", "enob_unit", "e_unit_fj", "enob_row", "e_row_fj", "winner"],
+    );
+    let mut crossover: Option<u32> = None;
+    let mut prev_winner_row = true;
+    for (i, &n_m) in n_ms.iter().enumerate() {
+        let fmt = FpFormat::fp(2, n_m);
+        let fmts = FormatPair::new(fmt, w_fmt);
+        let e_unit = required_enob(&aggs[i], Arch::GrUnit, cfg).enob;
+        let e_row = required_enob(&aggs[i], Arch::GrRow, cfg).enob;
+        let en_unit =
+            energy_per_op(CimArch::GrUnit, fmts, 32, 32, e_unit, &tech).total();
+        let en_row =
+            energy_per_op(CimArch::GrRow, fmts, 32, 32, e_row, &tech).total();
+        let unit_wins = en_unit < en_row;
+        if unit_wins && prev_winner_row && crossover.is_none() {
+            crossover = Some(n_m);
+        }
+        prev_winner_row = !unit_wins;
+        gran.row(vec![
+            n_m.to_string(),
+            Table::f(e_unit),
+            Table::f(en_unit),
+            Table::f(e_row),
+            Table::f(en_row),
+            if unit_wins { "unit" } else { "row" }.into(),
+        ]);
+    }
+    fr.tables.push(gran);
+    fr.check(
+        "unit normalization wins only at high input precision",
+        "crossover at N_M,x >= 6 (28 nm)",
+        match crossover {
+            Some(m) => format!("unit wins from N_M,x = {m}"),
+            None => "row wins everywhere in 1..=8".to_string(),
+        },
+        crossover.map(|m| m >= 4).unwrap_or(true),
+    );
+
+    // ---- N_eff / advantage vs array depth ----
+    let depths = [16usize, 32, 64, 128];
+    let mut specs = Vec::new();
+    for &nr in &depths {
+        specs.push(ExperimentSpec {
+            id: format!("nr{nr}"),
+            fmts: FormatPair::new(FpFormat::fp6_e2m3(), FpFormat::fp6_e2m3()),
+            dist_x: Distribution::clipped_gauss4(),
+            dist_w: Distribution::clipped_gauss4(),
+            nr,
+            samples,
+        });
+    }
+    let aggs = run_campaign(&specs, &ctx.campaign)?;
+    let mut deep = Table::new(
+        "array depth",
+        &["nr", "mean_n_eff", "n_eff_over_nr", "enob_conv", "enob_gr", "delta"],
+    );
+    let mut deltas = Vec::new();
+    for (i, &nr) in depths.iter().enumerate() {
+        let conv = required_enob(&aggs[i], Arch::Conventional, cfg).enob;
+        let gr = required_enob(&aggs[i], Arch::GrUnit, cfg).enob;
+        deltas.push(conv - gr);
+        deep.row(vec![
+            nr.to_string(),
+            Table::f(aggs[i].mean_n_eff()),
+            Table::f(aggs[i].mean_n_eff() / nr as f64),
+            Table::f(conv),
+            Table::f(gr),
+            Table::f(conv - gr),
+        ]);
+    }
+    fr.tables.push(deep);
+    fr.check(
+        "GR advantage persists across array depths",
+        "N_eff << NR at every depth",
+        format!("delta ENOB = {deltas:?}"),
+        deltas.iter().all(|&d| d > 0.8),
+    );
+
+    // ---- margin sensitivity ----
+    let spec = ExperimentSpec {
+        id: "margin".into(),
+        fmts: FormatPair::new(FpFormat::fp6_e3m2(), w_fmt),
+        dist_x: Distribution::Uniform,
+        dist_w: w_dist.clone(),
+        nr: 32,
+        samples,
+    };
+    let aggs = run_campaign(&[spec], &ctx.campaign)?;
+    let mut marg =
+        Table::new("margin sensitivity", &["margin_db", "enob_conv", "enob_gr"]);
+    let mut margin_effect = Vec::new();
+    for margin_db in [3.0, 6.0, 9.0, 12.0] {
+        let c = SpecConfig { margin_db, empirical_floor: false };
+        let conv = required_enob(&aggs[0], Arch::Conventional, c).enob;
+        let gr = required_enob(&aggs[0], Arch::GrUnit, c).enob;
+        margin_effect.push(conv);
+        marg.row(vec![Table::f(margin_db), Table::f(conv), Table::f(gr)]);
+    }
+    fr.tables.push(marg);
+    let per3db = (margin_effect[3] - margin_effect[0]) / 3.0;
+    fr.check(
+        "ADC spec shifts 0.5 bit per 3 dB of margin (both archs equally)",
+        "log2(sqrt(2)) per 3 dB",
+        format!("{per3db:.3} bits per 3 dB"),
+        (per3db - 0.498).abs() < 0.01,
+    );
+
+    Ok(fr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablations_hold() {
+        let ctx = FigureCtx::default().quick();
+        let fr = run(&ctx).unwrap();
+        assert!(fr.all_hold(), "{:#?}", fr.checks);
+    }
+}

@@ -1,0 +1,109 @@
+//! Fig. 11 — required ADC resolution (ENOB) vs input precision,
+//! parameterized by mantissa bits N_M,x (N_E,x = 3 so every studied
+//! distribution fits the format's range), weights max-entropy FP4_E2M1,
+//! NR = 32.
+//!
+//! Paper shape: ENOB scales linearly with input precision, and the GR
+//! advantage (1.5–6+ bits depending on distribution) is independent of the
+//! input resolution.
+
+use super::fig10::{sweep, Dist};
+use super::FigureCtx;
+use crate::formats::FpFormat;
+use crate::report::{FigureResult, Table};
+use anyhow::Result;
+
+pub const N_E_X: u32 = 3;
+pub const N_M_RANGE: std::ops::RangeInclusive<u32> = 1..=6;
+
+pub fn run(ctx: &FigureCtx) -> Result<FigureResult> {
+    let formats: Vec<(u32, FpFormat)> = N_M_RANGE
+        .map(|n_m| (n_m, FpFormat::fp(N_E_X, n_m)))
+        .collect();
+    let data = sweep(ctx, &formats)?;
+
+    let mut fr = FigureResult::new("fig11");
+    let mut t = Table::new(
+        "enob vs precision",
+        &["n_m_x", "sqnr_db", "distribution", "enob_conventional", "enob_gr_unit", "delta"],
+    );
+    for &(n_m, dist, conv, gr) in &data.rows {
+        let fmt = FpFormat::fp(N_E_X, n_m);
+        t.row(vec![
+            n_m.to_string(),
+            Table::f(fmt.sqnr_db()),
+            dist.name().into(),
+            Table::f(conv),
+            Table::f(gr),
+            Table::f(conv - gr),
+        ]);
+    }
+    fr.tables.push(t);
+
+    let series = |d: Dist, gr_side: bool| -> Vec<f64> {
+        N_M_RANGE
+            .map(|nm| {
+                data.rows
+                    .iter()
+                    .find(|(t, dist, _, _)| *t == nm && *dist == d)
+                    .map(|&(_, _, c, g)| if gr_side { g } else { c })
+                    .unwrap()
+            })
+            .collect()
+    };
+
+    // linear scaling: successive increments ~1 bit per mantissa bit
+    let gr_uni = series(Dist::Uniform, true);
+    let incs: Vec<f64> = gr_uni.windows(2).map(|w| w[1] - w[0]).collect();
+    let inc_ok = incs.iter().all(|&d| (0.6..=1.4).contains(&d));
+    fr.check(
+        "ENOB scales linearly with input precision (~1 b per mantissa bit)",
+        "linear",
+        format!("GR/uniform increments: {incs:?}"),
+        inc_ok,
+    );
+
+    // advantage independent of resolution
+    let conv_uni = series(Dist::Uniform, false);
+    let gaps: Vec<f64> = conv_uni
+        .iter()
+        .zip(&gr_uni)
+        .map(|(c, g)| c - g)
+        .collect();
+    let spread = gaps.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        - gaps.iter().cloned().fold(f64::INFINITY, f64::min);
+    fr.check(
+        "GR advantage independent of input resolution",
+        "constant 1.5-6 b offset",
+        format!("uniform-dist gap spread {spread:.2} b across N_M=1..6"),
+        spread < 1.0 && gaps.iter().all(|&g| g >= 1.3),
+    );
+
+    let conv_go = series(Dist::GaussOutliers, false);
+    let gr_go = series(Dist::GaussOutliers, true);
+    let go_gaps: Vec<f64> =
+        conv_go.iter().zip(&gr_go).map(|(c, g)| c - g).collect();
+    fr.check(
+        "large gauss+outliers advantage at every precision",
+        "1.5-6+ bits",
+        format!(
+            "min {:.1} b",
+            go_gaps.iter().cloned().fold(f64::INFINITY, f64::min)
+        ),
+        go_gaps.iter().all(|&g| g > 4.0),
+    );
+    Ok(fr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig11_reproduces_paper_shape() {
+        let ctx = FigureCtx::default().quick();
+        let fr = run(&ctx).unwrap();
+        assert!(fr.all_hold(), "{:#?}", fr.checks);
+        assert_eq!(fr.tables[0].rows.len(), 6 * 3);
+    }
+}

@@ -1,0 +1,144 @@
+//! Fig. 8 — GR-MAC cell linearity: (a) W-sweep staircases with DNL/INL,
+//! nominal and under capacitor-mismatch Monte Carlo at both K_C bounds
+//! (n = 1000); (b) E-sweep exponential response with relative error
+//! normalized to the W-input LSB.
+
+use super::FigureCtx;
+use crate::analog::{
+    dnl_inl,
+    mismatch::{e_sweep_error_lsb, mc_dnl_inl, w_sweep},
+    GrMacCell, MismatchModel,
+};
+use crate::report::{FigureResult, Table};
+use crate::rng::Pcg64;
+use anyhow::Result;
+
+pub const MC_RUNS: usize = 1000;
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx]
+}
+
+pub fn run(ctx: &FigureCtx) -> Result<FigureResult> {
+    let cell = GrMacCell::fp6_e2m3_schematic();
+    let mut fr = FigureResult::new("fig8");
+
+    // (a) nominal staircases + DNL/INL per level
+    let mut stair = Table::new(
+        "w sweep",
+        &["level", "w_code", "charge_fF_V", "dnl_lsb", "inl_lsb"],
+    );
+    for level in 1..=cell.levels() {
+        let vals = w_sweep(&cell, level, 1.0);
+        let s = dnl_inl(&vals);
+        for (w, &v) in vals.iter().enumerate() {
+            let d = if w > 0 { s.dnl[w - 1] } else { 0.0 };
+            stair.row(vec![
+                level.to_string(),
+                w.to_string(),
+                Table::f(v),
+                Table::f(d),
+                Table::f(s.inl[w]),
+            ]);
+        }
+    }
+    fr.tables.push(stair);
+
+    // mismatch MC at both K_C bounds
+    let mut mc = Table::new(
+        "mismatch mc",
+        &["k_c", "runs", "p50_dnl", "p99.7_dnl", "p50_inl", "p99.7_inl"],
+    );
+    let mut all_within_half_lsb = true;
+    for model in [MismatchModel::low(), MismatchModel::high()] {
+        let runs = mc_dnl_inl(&cell, model, MC_RUNS, ctx.campaign.seed ^ 0xF18);
+        let mut dnl: Vec<f64> = runs.iter().map(|r| r.0).collect();
+        let mut inl: Vec<f64> = runs.iter().map(|r| r.1).collect();
+        dnl.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        inl.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p997_dnl = percentile(&dnl, 0.997);
+        let p997_inl = percentile(&inl, 0.997);
+        all_within_half_lsb &= p997_dnl < 0.5 && p997_inl < 0.5;
+        mc.row(vec![
+            format!("{}%sqrt(fF)", model.k_c_pct_sqrt_ff),
+            MC_RUNS.to_string(),
+            Table::f(percentile(&dnl, 0.5)),
+            Table::f(p997_dnl),
+            Table::f(percentile(&inl, 0.5)),
+            Table::f(p997_inl),
+        ]);
+    }
+    fr.tables.push(mc);
+
+    // (b) E-sweep: exponential response + mismatch error percentiles
+    let mut esweep = Table::new(
+        "e sweep",
+        &["level", "charge_nominal", "ratio_to_prev", "p99.7_err_lsb"],
+    );
+    let mut rng = Pcg64::seeded(ctx.campaign.seed ^ 0xE5);
+    let model = MismatchModel::high();
+    let mut prev = f64::NAN;
+    let mut max_ratio_err = 0.0f64;
+    for level in 1..=cell.levels() {
+        let q = cell.transfer_closed_form(15, level, 1.0);
+        let ratio = q / prev;
+        if level > 1 {
+            max_ratio_err = max_ratio_err.max((ratio - 2.0).abs());
+        }
+        // error at this level across mismatch instances
+        let mut errs: Vec<f64> = (0..MC_RUNS)
+            .map(|_| {
+                let inst = model.instance(&cell, &mut rng);
+                e_sweep_error_lsb(&inst, &cell, 15, 1.0)[level - 1].abs()
+            })
+            .collect();
+        errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        esweep.row(vec![
+            level.to_string(),
+            Table::f(q),
+            if level > 1 { Table::f(ratio) } else { "-".into() },
+            Table::f(percentile(&errs, 0.997)),
+        ]);
+        prev = q;
+    }
+    fr.tables.push(esweep);
+
+    // nominal linearity
+    let worst_nominal = (1..=cell.levels())
+        .map(|l| dnl_inl(&w_sweep(&cell, l, 1.0)).max_abs_inl())
+        .fold(0.0f64, f64::max);
+
+    fr.check(
+        "nominal DNL/INL negligible",
+        "within bounds under nominal conditions",
+        format!("max |INL| = {worst_nominal:.2e} LSB"),
+        worst_nominal < 1e-6,
+    );
+    fr.check(
+        "3-sigma mismatch within 1/2 LSB at both K_C bounds",
+        "within 1/2 LSB",
+        format!("p99.7 of max|DNL|,|INL| < 0.5 at K_C in {{0.45, 0.85}}"),
+        all_within_half_lsb,
+    );
+    fr.check(
+        "E-sweep response is exponential (x2 per level)",
+        "exponential",
+        format!("max octave-ratio error {max_ratio_err:.2e}"),
+        max_ratio_err < 1e-9,
+    );
+    Ok(fr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig8_reproduces_paper_shape() {
+        let fr = run(&FigureCtx::default()).unwrap();
+        assert!(fr.all_hold(), "{:#?}", fr.checks);
+        // 4 levels x 16 codes
+        assert_eq!(fr.tables[0].rows.len(), 64);
+    }
+}

@@ -1,0 +1,87 @@
+//! Figure/table regeneration harness — one module per artifact of the
+//! paper's evaluation (DESIGN.md §4 experiment index).
+//!
+//! Every generator returns a [`FigureResult`]: the series/rows the paper
+//! plots (persisted as CSV under the output directory) plus explicit
+//! paper-vs-measured checks. `grcim figures --fig <id>` drives these;
+//! EXPERIMENTS.md records the outcomes.
+
+pub mod ablations;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig4;
+pub mod fig8;
+pub mod fig9;
+pub mod table1;
+
+use crate::coordinator::CampaignConfig;
+use crate::report::FigureResult;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+/// Shared settings for figure regeneration.
+#[derive(Debug, Clone)]
+pub struct FigureCtx {
+    /// Campaign settings (engine, workers, seed) for MC-heavy figures.
+    pub campaign: CampaignConfig,
+    /// Monte-Carlo samples per experiment point.
+    pub samples: usize,
+    /// Output directory for CSVs.
+    pub out_dir: PathBuf,
+}
+
+impl Default for FigureCtx {
+    fn default() -> Self {
+        FigureCtx {
+            campaign: CampaignConfig::default(),
+            samples: 65_536,
+            out_dir: PathBuf::from("results"),
+        }
+    }
+}
+
+impl FigureCtx {
+    /// Reduced sample count for smoke runs (`--quick`).
+    pub fn quick(mut self) -> Self {
+        self.samples = 8_192;
+        self
+    }
+}
+
+/// All known figure ids, in paper order.
+pub const ALL: &[&str] = &[
+    "fig4", "table1", "fig8", "fig9", "fig10", "fig11", "fig12", "ablations",
+];
+
+/// Run one figure by id.
+pub fn run(id: &str, ctx: &FigureCtx) -> Result<FigureResult> {
+    match id {
+        "fig4" => fig4::run(ctx),
+        "table1" => table1::run(ctx),
+        "fig8" => fig8::run(ctx),
+        "fig9" => fig9::run(ctx),
+        "fig10" => fig10::run(ctx),
+        "fig11" => fig11::run(ctx),
+        "fig12" => fig12::run(ctx),
+        "ablations" => ablations::run(ctx),
+        _ => bail!("unknown figure '{id}' (known: {})", ALL.join(", ")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_figure_rejected() {
+        let err = run("fig99", &FigureCtx::default()).unwrap_err().to_string();
+        assert!(err.contains("unknown figure"));
+    }
+
+    #[test]
+    fn quick_reduces_samples() {
+        let ctx = FigureCtx::default().quick();
+        assert!(ctx.samples < FigureCtx::default().samples);
+    }
+}

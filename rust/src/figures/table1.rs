@@ -1,0 +1,96 @@
+//! Table I — FP6_E2M3 GR-MAC capacitor values.
+//!
+//! The schematic column comes straight out of the design procedure
+//! (eq. (1) + the two layout transformations); the paper's post-layout
+//! columns depend on a 22 nm extraction we substitute with explicit
+//! parasitic-compensated designs at representative C_p1 values.
+
+use super::FigureCtx;
+use crate::analog::GrMacCell;
+use crate::report::{FigureResult, Table};
+use crate::util::approx_eq;
+use anyhow::Result;
+
+/// Paper Table I schematic values (fF).
+pub const PAPER_C_M: [f64; 4] = [1.0, 2.0, 4.0, 8.0];
+pub const PAPER_C_E: [f64; 4] = [1.0, 1.14, 4.0, 10.0];
+
+pub fn run(_ctx: &FigureCtx) -> Result<FigureResult> {
+    let mut fr = FigureResult::new("table1");
+    let schematic = GrMacCell::fp6_e2m3_schematic();
+    let comp05 = GrMacCell::design(4, 4, 1.0, 0.5);
+    let comp10 = GrMacCell::design(4, 4, 1.0, 1.0);
+
+    let mut t = Table::new(
+        "capacitors",
+        &["capacitor", "paper_schematic_fF", "ours_fF", "comp_Cp1_0.5fF", "comp_Cp1_1.0fF"],
+    );
+    for (i, paper) in PAPER_C_M.iter().enumerate() {
+        t.row(vec![
+            format!("C_M{i}"),
+            Table::f(*paper),
+            Table::f(schematic.c_m[i]),
+            Table::f(comp05.c_m[i]),
+            Table::f(comp10.c_m[i]),
+        ]);
+    }
+    for (i, paper) in PAPER_C_E.iter().enumerate() {
+        t.row(vec![
+            format!("C_E{}", i + 1),
+            Table::f(*paper),
+            Table::f(schematic.c_e[i]),
+            Table::f(comp05.c_e[i]),
+            Table::f(comp10.c_e[i]),
+        ]);
+    }
+    fr.tables.push(t);
+
+    let mut ok = true;
+    for (ours, paper) in schematic.c_m.iter().zip(&PAPER_C_M) {
+        ok &= approx_eq(*ours, *paper, 1e-9);
+    }
+    for (ours, paper) in schematic.c_e.iter().zip(&PAPER_C_E) {
+        ok &= (ours - paper).abs() < 0.005; // paper rounds 8/7 to 1.14
+    }
+    fr.check(
+        "schematic capacitor values match Table I",
+        "C_E = {1, 1.14, 4, 10} fF",
+        format!(
+            "C_E = {{{}}} fF",
+            schematic
+                .c_e
+                .iter()
+                .map(|c| format!("{c:.3}"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+        ok,
+    );
+
+    // gain ratios stay exact octaves after compensation
+    let q = |cell: &GrMacCell| -> Vec<f64> {
+        (1..=4).map(|l| cell.transfer_closed_form(15, l, 1.0)).collect()
+    };
+    let ratios_ok = |cell: &GrMacCell| -> bool {
+        let qs = q(cell);
+        qs.windows(2).all(|w| approx_eq(w[1] / w[0], 2.0, 1e-9))
+    };
+    fr.check(
+        "compensated design preserves exact octave gains",
+        "eq. (1)",
+        "exact at C_p1 = 0.5 and 1.0 fF",
+        ratios_ok(&comp05) && ratios_ok(&comp10),
+    );
+    Ok(fr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let fr = run(&FigureCtx::default()).unwrap();
+        assert!(fr.all_hold(), "{:#?}", fr.checks);
+    }
+}

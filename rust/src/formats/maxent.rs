@@ -1,0 +1,132 @@
+//! Maximum-entropy sampling of a floating-point format.
+//!
+//! The paper (Sec. IV-A, distribution ii) defines the maximum-entropy
+//! distribution of a format as "the distribution matching the quantizer
+//! prior ... obtained by uniformly randomizing the bits of a given format":
+//! sign, stored exponent code, and stored mantissa field are each drawn
+//! uniformly and independently. It is the floating-point analogue of the
+//! uniform INT baseline and is information-optimal for the format (QLoRA's
+//! explicit objective), so the paper uses it as the first-order model of
+//! empirical weight distributions.
+
+use super::FpFormat;
+use crate::rng::Pcg64;
+
+/// Sampler over uniformly random bit patterns of an integral format.
+#[derive(Debug, Clone)]
+pub struct MaxEntropy {
+    fmt: FpFormat,
+    e_codes: u64, // 2^N_E  (stored exponent codes, incl. subnormal code 0)
+    m_codes: u64, // 2^N_M  (stored mantissa codes)
+}
+
+impl MaxEntropy {
+    pub fn new(fmt: FpFormat) -> Self {
+        assert!(
+            fmt.is_integral(),
+            "max-entropy sampling needs an integral format, got {fmt:?}"
+        );
+        let e_codes = fmt.e_max as u64 + 1;
+        let m_codes = 1u64 << (fmt.n_m as u64);
+        MaxEntropy { fmt, e_codes, m_codes }
+    }
+
+    pub fn format(&self) -> FpFormat {
+        self.fmt
+    }
+
+    /// Decode (sign, stored exponent code, stored mantissa code) -> value.
+    pub fn decode(&self, sign: f64, e_stored: u64, m_stored: u64) -> f64 {
+        debug_assert!(e_stored < self.e_codes && m_stored < self.m_codes);
+        let step = self.fmt.step();
+        let m = if e_stored == 0 {
+            // subnormal: M = 0.M_stored / 2
+            m_stored as f64 * step
+        } else {
+            // normal: M = 1.M_stored / 2 in [0.5, 1)
+            0.5 + m_stored as f64 * step
+        };
+        let e_eff = e_stored.max(1) as f64;
+        sign * m * super::exp2(e_eff - self.fmt.e_max)
+    }
+
+    /// Draw one value with uniformly random bit fields.
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        let sign = rng.sign();
+        let e = rng.below(self.e_codes);
+        let m = rng.below(self.m_codes);
+        self.decode(sign, e, m)
+    }
+
+    /// Fill a slice.
+    pub fn fill(&self, rng: &mut Pcg64, out: &mut [f64]) {
+        for v in out {
+            *v = self.sample(rng);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_are_exactly_representable() {
+        let me = MaxEntropy::new(FpFormat::fp4_e2m1());
+        let mut rng = Pcg64::seeded(23);
+        for _ in 0..2000 {
+            let v = me.sample(&mut rng);
+            assert_eq!(me.format().quantize(v), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn covers_full_codebook() {
+        let fmt = FpFormat::fp4_e2m1();
+        let me = MaxEntropy::new(fmt);
+        let mut rng = Pcg64::seeded(29);
+        let book = fmt.codebook();
+        let mut seen = vec![false; book.len()];
+        for _ in 0..5000 {
+            let v = me.sample(&mut rng).abs();
+            let idx = book.iter().position(|b| (b - v).abs() < 1e-12);
+            // +0 and -0 both map to magnitude 0
+            seen[idx.expect("sample not in codebook")] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "not all codes seen: {seen:?}");
+    }
+
+    #[test]
+    fn exponent_codes_are_uniform() {
+        // with 2 exponent bits, each of the 4 codes should get ~25%
+        let fmt = FpFormat::fp4_e2m1();
+        let me = MaxEntropy::new(fmt);
+        let mut rng = Pcg64::seeded(31);
+        let n = 40_000;
+        // count samples in the top binade [0.5, 1): exactly the e_max code
+        let top = (0..n)
+            .filter(|_| {
+                let v = me.sample(&mut rng).abs();
+                v >= 0.5
+            })
+            .count() as f64
+            / n as f64;
+        assert!((top - 0.25).abs() < 0.02, "top binade frac = {top}");
+    }
+
+    #[test]
+    fn decode_subnormals_and_normals() {
+        let me = MaxEntropy::new(FpFormat::fp4_e2m1()); // e_max=3, step=.25
+        assert_eq!(me.decode(1.0, 0, 0), 0.0);
+        assert_eq!(me.decode(1.0, 0, 1), 0.0625); // 0.25 * 2^-2
+        assert_eq!(me.decode(1.0, 1, 0), 0.125); // 0.5 * 2^-2
+        assert_eq!(me.decode(1.0, 3, 1), 0.75); // 0.75 * 2^0
+        assert_eq!(me.decode(-1.0, 3, 0), -0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "integral")]
+    fn rejects_fractional_formats() {
+        MaxEntropy::new(FpFormat { e_max: 2.5, n_m: 1.0 });
+    }
+}

@@ -1,0 +1,499 @@
+//! Floating-point format arithmetic — the Rust twin of
+//! `python/compile/fpfmt.py` (kept in lockstep; see the cross-check
+//! integration test `rust/tests/runtime_crosscheck.rs`).
+//!
+//! The paper's value convention (Sec. III-A):
+//!
+//! ```text
+//! x = (-1)^S * M * 2^(E - e_max),   e_max = 2^N_E - 1
+//! ```
+//!
+//! with effective significand `M in [0.5, 1)` for normals
+//! (`M = 1.M_stored / 2`), `M in [0, 0.5)` for subnormals (stored exponent
+//! code 0, effective exponent `E = 1`), effective exponent
+//! `E = max(1, E_stored)`.
+//!
+//! Formats are parameterized by `(e_max, n_m)` rather than `(N_E, N_M)`:
+//! `e_max` and `n_m` may be **fractional** — the continuous dynamic-range /
+//! SQNR axes of the Fig. 12 design-space map — and the quantizer stays
+//! well-defined (the exponent grid remains integer-stepped, offset by
+//! `e_max`). `INT-N` is the exact degenerate case `e_max = 1`
+//! (uniform grid of step `2^-(N-1)` over [-1, 1]); see [`FpFormat::int`].
+
+pub mod maxent;
+
+pub use maxent::MaxEntropy;
+
+/// Exact 2^t for integer t (bit-constructed), standard exp2 otherwise.
+///
+/// Mirrors `fpfmt.exp2` on the Python side, where XLA-CPU's f32 `exp2` is
+/// inexact even at integer arguments. Rust's `f64::exp2` is exact at
+/// integers on every libm we target, but the bit construction makes the
+/// contract explicit and cheap.
+#[inline]
+pub fn exp2(t: f64) -> f64 {
+    let ti = t.floor();
+    let fr = t - ti;
+    let ip = if (-1022.0..=1023.0).contains(&ti) {
+        f64::from_bits((((ti as i64) + 1023) as u64) << 52)
+    } else {
+        ti.exp2()
+    };
+    if fr == 0.0 {
+        ip
+    } else {
+        ip * fr.exp2()
+    }
+}
+
+/// A (possibly fractional) floating-point format specification.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FpFormat {
+    /// Largest stored exponent code (2^N_E - 1 for integer N_E); effective
+    /// exponents live in [1, e_max], code 0 is the subnormal marker.
+    pub e_max: f64,
+    /// Stored mantissa bits (excluding the implicit leading bit).
+    pub n_m: f64,
+}
+
+impl FpFormat {
+    /// Standard format from exponent/mantissa bit widths: FP(N_E, N_M).
+    pub fn fp(n_e: u32, n_m: u32) -> Self {
+        assert!(n_e >= 1, "FP formats need at least one exponent bit");
+        FpFormat { e_max: (1u64 << n_e) as f64 - 1.0, n_m: n_m as f64 }
+    }
+
+    /// Signed integer format INT-N on [-1, 1]: the e_max = 1 degenerate
+    /// case (uniform grid, step 2^-(N-1); vmax = 1 - 2^-(N-1)).
+    pub fn int(n_bits: u32) -> Self {
+        assert!(n_bits >= 2, "INT formats need sign + at least one bit");
+        FpFormat { e_max: 1.0, n_m: n_bits as f64 - 2.0 }
+    }
+
+    /// Continuous-axis format from a (DR_dB, SQNR_dB) design-space point.
+    ///
+    /// DESIGN.md #2/#3 conventions:
+    ///   SQNR_dB = 6.02 * (n_m + 1) + 10.79   (paper Sec. IV-A, N_M incl.
+    ///                                         implicit bit)
+    ///   DR_bits = e_max + n_m + 1,  DR_dB = 6.02 * DR_bits
+    ///             (full scale over smallest step; reduces to N for INT-N)
+    ///
+    /// Returns None when the point is left of the INT line (e_max < 1):
+    /// the dynamic range is below the minimum needed for that SQNR.
+    pub fn from_spec(dr_db: f64, sqnr_db: f64) -> Option<Self> {
+        let n_m = (sqnr_db - 10.79) / 6.02 - 1.0;
+        if n_m < 0.0 {
+            return None;
+        }
+        let e_max = dr_db / 6.02 - n_m - 1.0;
+        if e_max < 1.0 - 1e-9 {
+            return None;
+        }
+        Some(FpFormat { e_max: e_max.max(1.0), n_m })
+    }
+
+    /// FP4_E2M1 — the OCP MX 4-bit format.
+    pub fn fp4_e2m1() -> Self {
+        Self::fp(2, 1)
+    }
+
+    /// FP6_E2M3.
+    pub fn fp6_e2m3() -> Self {
+        Self::fp(2, 3)
+    }
+
+    /// FP6_E3M2.
+    pub fn fp6_e3m2() -> Self {
+        Self::fp(3, 2)
+    }
+
+    /// FP8_E4M3.
+    pub fn fp8_e4m3() -> Self {
+        Self::fp(4, 3)
+    }
+
+    /// Mantissa grid step on the effective significand: 2^-(n_m + 1).
+    #[inline]
+    pub fn step(&self) -> f64 {
+        exp2(-(self.n_m + 1.0))
+    }
+
+    /// Largest representable magnitude: (1 - step) * 2^0.
+    #[inline]
+    pub fn vmax(&self) -> f64 {
+        1.0 - self.step()
+    }
+
+    /// Smallest positive normal magnitude: 0.5 * 2^(1 - e_max).
+    #[inline]
+    pub fn min_normal(&self) -> f64 {
+        0.5 * exp2(1.0 - self.e_max)
+    }
+
+    /// Smallest positive (subnormal) step: step * 2^(1 - e_max).
+    #[inline]
+    pub fn min_step(&self) -> f64 {
+        self.step() * exp2(1.0 - self.e_max)
+    }
+
+    /// Dynamic range in bits: full-scale (2.0) over the smallest step,
+    /// log2. Equals e_max + n_m + 1 (and N for INT-N).
+    pub fn dr_bits(&self) -> f64 {
+        self.e_max + self.n_m + 1.0
+    }
+
+    /// Dynamic range in dB (power convention: 6.02 dB / bit).
+    pub fn dr_db(&self) -> f64 {
+        6.02 * self.dr_bits()
+    }
+
+    /// Format SQNR in dB: 6.02 * N_M + 10.79 with N_M counting the implicit
+    /// bit (paper Sec. IV-A, from Widrow & Kollar).
+    pub fn sqnr_db(&self) -> f64 {
+        6.02 * (self.n_m + 1.0) + 10.79
+    }
+
+    /// True if (e_max, n_m) are integers — required for codebook
+    /// enumeration and max-entropy sampling.
+    pub fn is_integral(&self) -> bool {
+        self.e_max.fract() == 0.0 && self.n_m.fract() == 0.0
+    }
+
+    /// Number of exponent bits for integral formats.
+    pub fn n_e_bits(&self) -> f64 {
+        (self.e_max + 1.0).log2()
+    }
+
+    /// Decompose a magnitude into (M, E_eff).
+    ///
+    /// `a == 0` maps to `(0.0, 1.0)`: the zero encoding keeps the subnormal
+    /// exponent, which matters for the GR-MAC — a zero-mantissa cell still
+    /// drives its one-hot exponent coupling switches (Sec. III-B2).
+    #[inline]
+    pub fn decompose(&self, a: f64) -> (f64, f64) {
+        let safe = a.max(1e-300);
+        // floor(log2(safe)) is exactly the unbiased f64 exponent field
+        // (safe is normal by construction): a bit extraction instead of a
+        // libm log2 — exact AND ~3x faster (§Perf iteration 2).
+        let floor_log2 = ((safe.to_bits() >> 52) & 0x7ff) as f64 - 1023.0;
+        let e = (floor_log2 + 1.0 + self.e_max).clamp(1.0, self.e_max);
+        let m = a * exp2(self.e_max - e);
+        (m, e)
+    }
+
+    /// Quantize to this format: round-half-up on the mantissa grid,
+    /// saturating at +/- vmax; sub-grid magnitudes flush on the subnormal
+    /// grid. Matches `fpfmt.quantize` (Python) semantics.
+    #[inline]
+    pub fn quantize(&self, x: f64) -> f64 {
+        let step = self.step();
+        let s = if x < 0.0 { -1.0 } else { 1.0 };
+        let a = x.abs();
+        let (m, e) = self.decompose(a);
+        let m_q = (m / step + 0.5).floor() * step;
+        let a_q = (m_q * exp2(e - self.e_max)).min(self.vmax());
+        if a_q == 0.0 {
+            0.0 // avoid -0.0
+        } else {
+            s * a_q
+        }
+    }
+
+    /// Local quantization step at quantized magnitude `a_q`:
+    /// Delta = step * 2^(E_eff - e_max).
+    #[inline]
+    pub fn ulp(&self, a_q: f64) -> f64 {
+        let (_, e) = self.decompose(a_q);
+        self.step() * exp2(e - self.e_max)
+    }
+
+    /// Fused quantize + decompose: returns `(x_q, M_signed, E_eff)` such
+    /// that `x_q == quantize(x)` and `(|M|, E) == decompose(|x_q|)` — one
+    /// log2 instead of two. This is the Monte-Carlo engine's hot call
+    /// (see EXPERIMENTS.md §Perf).
+    #[inline]
+    pub fn quantize_parts(&self, x: f64) -> (f64, f64, f64) {
+        let step = self.step();
+        let s = if x < 0.0 { -1.0 } else { 1.0 };
+        let a = x.abs();
+        let (m, e) = self.decompose(a);
+        let m_q = (m / step + 0.5).floor() * step;
+        let a_q = (m_q * exp2(e - self.e_max)).min(self.vmax());
+        if self.e_max.fract() != 0.0 {
+            // fractional e_max (the Fig. 12 continuous DR axis): the e = 1
+            // clamp is offset from the binade ladder, so mantissa rounding
+            // can cross binades — recanonicalize through decompose. This
+            // is the cold path; campaigns run integral formats.
+            let (m_f, e_f) = self.decompose(a_q);
+            return if a_q == 0.0 {
+                (0.0, 0.0, 1.0)
+            } else {
+                (s * a_q, s * m_f, e_f)
+            };
+        }
+        let (a_f, m_f, e_f) = if a_q >= self.vmax() {
+            // saturation (includes the m_q == 1.0 rollover at e == e_max)
+            (self.vmax(), self.vmax(), self.e_max)
+        } else if m_q >= 1.0 {
+            // rollover renormalizes to 0.5 at the next binade
+            (a_q, 0.5, e + 1.0)
+        } else {
+            (a_q, m_q, e)
+        };
+        if a_f == 0.0 {
+            (0.0, 0.0, 1.0)
+        } else {
+            (s * a_f, s * m_f, e_f)
+        }
+    }
+
+    /// Enumerate all representable magnitudes (integral formats only),
+    /// ascending, including 0.
+    pub fn codebook(&self) -> Vec<f64> {
+        assert!(self.is_integral(), "codebook needs an integral format");
+        let step = self.step();
+        let n_sub = (0.5 / step).round() as u64;
+        let n_norm = (0.5 / step).round() as u64;
+        let mut vals = Vec::new();
+        let sub_scale = exp2(1.0 - self.e_max);
+        for k in 0..n_sub {
+            vals.push(k as f64 * step * sub_scale);
+        }
+        for e in 1..=(self.e_max as u64) {
+            let scale = exp2(e as f64 - self.e_max);
+            for k in 0..n_norm {
+                vals.push((0.5 + k as f64 * step) * scale);
+            }
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vals.dedup();
+        vals
+    }
+}
+
+impl std::fmt::Display for FpFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_integral() {
+            if self.e_max == 1.0 {
+                write!(f, "INT{}", self.n_m as u64 + 2)
+            } else {
+                let n_e = self.n_e_bits();
+                if n_e.fract() == 0.0 {
+                    let total = 1 + n_e as u64 + self.n_m as u64;
+                    write!(f, "FP{}_E{}M{}", total, n_e as u64, self.n_m as u64)
+                } else {
+                    write!(f, "FP(emax={},m={})", self.e_max, self.n_m)
+                }
+            }
+        } else {
+            write!(f, "FP(emax={:.2},m={:.2})", self.e_max, self.n_m)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::approx_eq;
+
+    #[test]
+    fn exp2_exact_at_integers() {
+        for e in -60..=60 {
+            assert_eq!(exp2(e as f64), (e as f64).exp2(), "e={e}");
+            let bits = exp2(e as f64);
+            assert_eq!(bits, 2f64.powi(e));
+        }
+        assert_eq!(exp2(13.0), 8192.0);
+    }
+
+    #[test]
+    fn exp2_fractional_close() {
+        assert!(approx_eq(exp2(0.5), std::f64::consts::SQRT_2, 1e-12));
+        assert!(approx_eq(exp2(-2.5), 2f64.powf(-2.5), 1e-12));
+    }
+
+    #[test]
+    fn fp4_e2m1_codebook_is_ocp_set() {
+        let f = FpFormat::fp4_e2m1();
+        let book: Vec<f64> = f.codebook().iter().map(|v| v * 8.0).collect();
+        assert_eq!(book, vec![0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn codebook_values_are_quantizer_fixed_points() {
+        for f in [
+            FpFormat::fp4_e2m1(),
+            FpFormat::fp6_e2m3(),
+            FpFormat::fp6_e3m2(),
+            FpFormat::fp8_e4m3(),
+            FpFormat::int(4),
+            FpFormat::int(8),
+        ] {
+            for v in f.codebook() {
+                assert_eq!(f.quantize(v), v, "{f} value {v}");
+                assert_eq!(f.quantize(-v), -v, "{f} value -{v}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        let f = FpFormat::fp4_e2m1();
+        assert_eq!(f.quantize(5.0), 0.75);
+        assert_eq!(f.quantize(-5.0), -0.75);
+        assert_eq!(f.quantize(1.0), 0.75);
+    }
+
+    #[test]
+    fn quantize_zero_and_subnormals() {
+        let f = FpFormat::fp4_e2m1();
+        assert_eq!(f.quantize(0.0), 0.0);
+        assert_eq!(f.quantize(0.01), 0.0); // below half-subnormal-step
+        assert_eq!(f.quantize(0.05), 0.0625);
+        assert_eq!(f.quantize(-0.05), -0.0625);
+    }
+
+    #[test]
+    fn quantize_error_within_half_ulp() {
+        let f = FpFormat::fp6_e2m3();
+        let mut rng = crate::rng::Pcg64::seeded(3);
+        for _ in 0..5000 {
+            let x = rng.uniform_in(-f.vmax(), f.vmax());
+            let q = f.quantize(x);
+            let delta = f.ulp(q.abs());
+            assert!(
+                (q - x).abs() <= 0.5 * delta + 1e-15,
+                "x={x} q={q} delta={delta}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantize_monotone() {
+        let f = FpFormat::fp6_e3m2();
+        let mut rng = crate::rng::Pcg64::seeded(5);
+        for _ in 0..2000 {
+            let a = rng.uniform_in(-1.0, 1.0);
+            let b = rng.uniform_in(-1.0, 1.0);
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            assert!(f.quantize(lo) <= f.quantize(hi));
+        }
+    }
+
+    #[test]
+    fn quantize_idempotent_and_odd() {
+        let f = FpFormat::fp(3, 2);
+        let mut rng = crate::rng::Pcg64::seeded(5);
+        for _ in 0..2000 {
+            let x = rng.uniform_in(-1.5, 1.5);
+            let q = f.quantize(x);
+            assert_eq!(f.quantize(q), q);
+            assert_eq!(f.quantize(-x), -q);
+        }
+    }
+
+    #[test]
+    fn decompose_convention_matches_paper() {
+        let f = FpFormat::fp4_e2m1(); // e_max = 3
+        assert_eq!(f.decompose(0.75), (0.75, 3.0));
+        assert_eq!(f.decompose(0.125), (0.5, 1.0)); // 0.5 * 2^-2, min normal
+        let (m, e) = f.decompose(0.0625); // subnormal
+        assert_eq!(e, 1.0);
+        assert!(approx_eq(m, 0.25, 1e-15));
+        assert_eq!(f.decompose(0.0), (0.0, 1.0)); // zero keeps E_eff = 1
+    }
+
+    #[test]
+    fn int_format_is_uniform_grid()
+    {
+        let f = FpFormat::int(4); // step 2^-3 = 0.125 on [-1,1]
+        let book = f.codebook();
+        for w in book.windows(2) {
+            assert!(approx_eq(w[1] - w[0], 0.125, 1e-12));
+        }
+        assert_eq!(f.quantize(0.3), 0.25);
+        assert_eq!(f.quantize(0.33), 0.375);
+        assert_eq!(f.vmax(), 0.875);
+        assert_eq!(f.dr_bits(), 4.0);
+    }
+
+    #[test]
+    fn dr_and_sqnr_conventions() {
+        assert_eq!(FpFormat::fp4_e2m1().dr_bits(), 5.0);
+        assert_eq!(FpFormat::fp6_e3m2().dr_bits(), 10.0);
+        assert_eq!(FpFormat::fp8_e4m3().dr_bits(), 19.0);
+        assert_eq!(FpFormat::int(8).dr_bits(), 8.0);
+        // SQNR: FP4_E2M1 has 2 effective mantissa bits
+        assert!(approx_eq(FpFormat::fp4_e2m1().sqnr_db(), 22.83, 1e-2));
+    }
+
+    #[test]
+    fn from_spec_round_trips_formats() {
+        for f in [FpFormat::fp4_e2m1(), FpFormat::fp6_e3m2(), FpFormat::fp(2, 3)] {
+            let g = FpFormat::from_spec(f.dr_db(), f.sqnr_db()).unwrap();
+            assert!(approx_eq(g.e_max, f.e_max, 1e-9), "{f}: {g:?}");
+            assert!(approx_eq(g.n_m + 1.0, f.n_m + 1.0, 1e-9), "{f}: {g:?}");
+        }
+    }
+
+    #[test]
+    fn from_spec_rejects_points_left_of_int_line() {
+        // DR far below what the SQNR needs
+        assert!(FpFormat::from_spec(12.0, 47.0).is_none());
+        // INT line itself is valid
+        let f = FpFormat::int(6);
+        assert!(FpFormat::from_spec(f.dr_db(), f.sqnr_db()).is_some());
+    }
+
+    #[test]
+    fn fractional_format_quantizer_is_sane() {
+        let f = FpFormat { e_max: 5.5, n_m: 2.25 };
+        let mut rng = crate::rng::Pcg64::seeded(7);
+        for _ in 0..1000 {
+            let x = rng.uniform_in(-1.0, 1.0);
+            let q = f.quantize(x);
+            assert!(q.is_finite());
+            assert_eq!(f.quantize(q), q); // idempotent
+        }
+    }
+
+    #[test]
+    fn display_names() {
+        assert_eq!(FpFormat::fp4_e2m1().to_string(), "FP4_E2M1");
+        assert_eq!(FpFormat::fp6_e3m2().to_string(), "FP6_E3M2");
+        assert_eq!(FpFormat::int(8).to_string(), "INT8");
+    }
+
+    #[test]
+    fn quantize_parts_consistent_with_quantize_and_decompose() {
+        let mut rng = crate::rng::Pcg64::seeded(91);
+        for fmt in [
+            FpFormat::fp4_e2m1(),
+            FpFormat::fp6_e2m3(),
+            FpFormat::fp(4, 2),
+            FpFormat::int(5),
+            FpFormat { e_max: 5.5, n_m: 2.25 },
+        ] {
+            for _ in 0..3000 {
+                let x = rng.uniform_in(-1.5, 1.5);
+                let (xq, m, e) = fmt.quantize_parts(x);
+                assert_eq!(xq, fmt.quantize(x), "{fmt} at {x}");
+                let (md, ed) = fmt.decompose(xq.abs());
+                assert_eq!(m.abs(), md, "{fmt} mantissa at {x}");
+                assert_eq!(e, ed, "{fmt} exponent at {x}");
+                if xq != 0.0 {
+                    assert_eq!(m.signum(), xq.signum());
+                }
+            }
+            // exact edge cases
+            assert_eq!(fmt.quantize_parts(0.0), (0.0, 0.0, 1.0));
+        }
+    }
+
+    #[test]
+    fn rollover_renormalizes() {
+        // FP(e_max=3, n_m=1): 0.47 -> m = 0.94 -> rounds to 1.0 -> 0.5 @ e+1
+        let f = FpFormat::fp4_e2m1();
+        assert_eq!(f.quantize(0.47), 0.5);
+    }
+}

@@ -1,0 +1,46 @@
+//! # grcim — Gain-Ranging Compute-in-Memory design-space exploration
+//!
+//! Reproduction of *"Investigating Energy Bounds of Analog Compute-in-Memory
+//! with Local Normalization"* (Rojkov et al., 2026) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the simulation-campaign coordinator, the PJRT
+//!   runtime that executes AOT-lowered HLO artifacts, and every substrate
+//!   the paper's analysis depends on: FP format arithmetic, workload
+//!   distribution generators, a capacitive-network circuit solver with
+//!   Pelgrom mismatch Monte Carlo, the paper's Table II/III energy models,
+//!   the ADC ENOB requirement solver, and the figure/table regeneration
+//!   harness.
+//! * **L2 (python/compile/model.py)** — the JAX signal-chain graph, lowered
+//!   once to HLO text (`artifacts/*.hlo.txt`).
+//! * **L1 (python/compile/kernels/grmac.py)** — the fused Pallas Monte-Carlo
+//!   kernel inside that graph.
+//!
+//! Python never runs at campaign time: the `grcim` binary is self-contained
+//! once `make artifacts` has produced the HLO artifacts.
+//!
+//! Entry points: the [`coordinator`] runs sweep campaigns over the
+//! [`runtime`] engines; [`figures`] regenerates every table and figure of
+//! the paper's evaluation; `examples/` shows the public API.
+
+pub mod analog;
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod distributions;
+pub mod energy;
+pub mod figures;
+pub mod formats;
+pub mod mac;
+pub mod nn;
+pub mod propcheck;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod spec;
+pub mod stats;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

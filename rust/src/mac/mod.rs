@@ -1,0 +1,320 @@
+//! Pure-Rust signal-chain engine — the semantic twin of the L1 Pallas
+//! kernel (`python/compile/kernels/grmac.py`), in f64.
+//!
+//! Serves three roles:
+//! 1. **Oracle** for the PJRT artifact (cross-checked in
+//!    `rust/tests/runtime_crosscheck.rs`);
+//! 2. **Fallback backend** for the coordinator when artifacts are absent or
+//!    a non-artifact array depth is requested;
+//! 3. **Trace source** for the Fig. 4 distribution panels (per-cell
+//!    intermediates that the statistics artifact intentionally reduces
+//!    away).
+
+pub mod trace;
+
+use crate::formats::{exp2, FpFormat};
+use crate::stats::ColumnBatch;
+
+/// Formats of one experiment: input (activation) and weight.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FormatPair {
+    pub x: FpFormat,
+    pub w: FpFormat,
+}
+
+impl FormatPair {
+    pub fn new(x: FpFormat, w: FpFormat) -> Self {
+        FormatPair { x, w }
+    }
+
+    /// The artifact's runtime format vector [e_max_x, n_m_x, e_max_w, n_m_w].
+    pub fn to_vec4(&self) -> [f32; 4] {
+        [
+            self.x.e_max as f32,
+            self.x.n_m as f32,
+            self.w.e_max as f32,
+            self.w.n_m as f32,
+        ]
+    }
+}
+
+/// Simulate a batch of column MACs. `x` and `w` are row-major `[b][nr]`
+/// raw (pre-quantization) values; returns the ten per-sample statistics in
+/// the artifact's layout (see `kernels/ref.py` for definitions).
+pub fn simulate_column(x: &[f64], w: &[f64], nr: usize, fmts: FormatPair) -> ColumnBatch {
+    assert_eq!(x.len(), w.len());
+    assert!(nr > 0 && x.len() % nr == 0);
+    let b = x.len() / nr;
+    let fx = fmts.x;
+    let fw = fmts.w;
+    let stx = fx.step();
+
+    let mut out = ColumnBatch {
+        nr,
+        z_ideal: Vec::with_capacity(b),
+        z_q: Vec::with_capacity(b),
+        v_conv: Vec::with_capacity(b),
+        g_conv: Vec::with_capacity(b),
+        v_gr: Vec::with_capacity(b),
+        s_sum: Vec::with_capacity(b),
+        s2_sum: Vec::with_capacity(b),
+        sx_sum: Vec::with_capacity(b),
+        g_w: Vec::with_capacity(b),
+        nf: Vec::with_capacity(b),
+        wq2_mean: Vec::with_capacity(b),
+    };
+
+    // Single fused pass per sample (§Perf iteration 1): `quantize_parts`
+    // folds quantize + decompose into one log2; the per-value scale
+    // factors 2^(E - e_max) are computed once and reused by the GR weight,
+    // the row factor, and the ulp floor; the conventional compute-line
+    // voltage is reconstructed exactly from the linear-chain identity
+    // v_conv = z_q / g_conv (power-of-two scaling is lossless), removing
+    // the old second (alignment) pass entirely.
+    for s in 0..b {
+        let xs = &x[s * nr..(s + 1) * nr];
+        let ws = &w[s * nr..(s + 1) * nr];
+
+        let mut z_ideal = 0.0;
+        let mut z_q = 0.0;
+        let mut ebx = 1.0f64;
+        let mut ebw = 1.0f64;
+        let mut v_gr_num = 0.0;
+        let mut s_sum = 0.0;
+        let mut s2_sum = 0.0;
+        let mut sx_sum = 0.0;
+        let mut nf = 0.0;
+        let mut wq2 = 0.0;
+        for i in 0..nr {
+            z_ideal += xs[i] * ws[i];
+            let (xq, mxi, exi) = fx.quantize_parts(xs[i]);
+            let (wq, mwi, ewi) = fw.quantize_parts(ws[i]);
+            z_q += xq * wq;
+            ebx = ebx.max(exi);
+            ebw = ebw.max(ewi);
+            // per-value binade scales, shared by every statistic below
+            let ux = exp2(exi - fx.e_max);
+            let uw = exp2(ewi - fw.e_max);
+            let u = ux * uw;
+            s_sum += u;
+            s2_sum += u * u;
+            v_gr_num += mxi * mwi * u;
+            sx_sum += ux;
+            // ulp-based *input* noise floor (input-side only: the ADC spec
+            // protects the input format's fidelity; weight quantization is
+            // part of the model, not noise — paper Fig. 10 caption)
+            let dx = stx * ux;
+            nf += wq * wq * dx * dx;
+            wq2 += wq * wq;
+        }
+        z_ideal /= nr as f64;
+        z_q /= nr as f64;
+        nf /= 12.0 * (nr * nr) as f64;
+        let g_w = exp2(ebw - fw.e_max);
+        let g_conv = exp2(ebx - fx.e_max) * g_w;
+        let v_conv = z_q / g_conv;
+
+        out.z_ideal.push(z_ideal);
+        out.z_q.push(z_q);
+        out.v_conv.push(v_conv);
+        out.g_conv.push(g_conv);
+        out.v_gr.push(v_gr_num / s_sum);
+        out.s_sum.push(s_sum);
+        out.s2_sum.push(s2_sum);
+        out.sx_sum.push(sx_sum);
+        out.g_w.push(g_w);
+        out.nf.push(nf);
+        out.wq2_mean.push(wq2 / nr as f64);
+    }
+    out
+}
+
+/// Apply an ideal mid-rise ADC of the given ENOB over full scale [-1, 1]
+/// to a voltage (the digital post-normalization is the caller's job).
+pub fn adc_quantize(v: f64, enob: f64) -> f64 {
+    let delta = 2.0 / exp2(enob);
+    let q = ((v / delta + 0.5).floor()) * delta;
+    q.clamp(-1.0, 1.0)
+}
+
+/// Reconstruct the final dot-product outputs of each architecture after an
+/// ADC of `enob` bits, from a simulated batch. Returns (conventional, GR).
+pub fn apply_adc(b: &ColumnBatch, enob: f64) -> (Vec<f64>, Vec<f64>) {
+    let nr = b.nr as f64;
+    let conv: Vec<f64> = b
+        .v_conv
+        .iter()
+        .zip(&b.g_conv)
+        .map(|(&v, &g)| adc_quantize(v, enob) * g)
+        .collect();
+    let gr: Vec<f64> = b
+        .v_gr
+        .iter()
+        .zip(&b.s_sum)
+        .map(|(&v, &s)| adc_quantize(v, enob) * s / nr)
+        .collect();
+    (conv, gr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributions::Distribution;
+    use crate::rng::Pcg64;
+    use crate::util::approx_eq;
+
+    fn rand_case(seed: u64, b: usize, nr: usize) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Pcg64::seeded(seed);
+        let mut x = vec![0.0; b * nr];
+        let mut w = vec![0.0; b * nr];
+        Distribution::Uniform.fill(&mut rng, &mut x);
+        Distribution::clipped_gauss4().fill(&mut rng, &mut w);
+        (x, w)
+    }
+
+    fn fp63() -> FormatPair {
+        FormatPair::new(FpFormat::fp6_e3m2(), FpFormat::fp4_e2m1())
+    }
+
+    #[test]
+    fn linear_chain_identity() {
+        // z_q == v_conv * g_conv == v_gr * S / NR for every sample
+        let (x, w) = rand_case(1, 64, 32);
+        let b = simulate_column(&x, &w, 32, fp63());
+        for i in 0..b.len() {
+            assert!(
+                approx_eq(b.z_q[i], b.v_conv[i] * b.g_conv[i], 1e-10),
+                "conv sample {i}"
+            );
+            assert!(
+                approx_eq(b.z_q[i], b.v_gr[i] * b.s_sum[i] / 32.0, 1e-10),
+                "gr sample {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn adc_inputs_within_full_scale() {
+        let (x, w) = rand_case(2, 128, 32);
+        let b = simulate_column(&x, &w, 32, fp63());
+        for i in 0..b.len() {
+            assert!(b.v_conv[i].abs() <= 1.0 + 1e-12);
+            assert!(b.v_gr[i].abs() <= 1.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn neff_bounds() {
+        let (x, w) = rand_case(3, 128, 32);
+        let b = simulate_column(&x, &w, 32, fp63());
+        for i in 0..b.len() {
+            let neff = b.s_sum[i] * b.s_sum[i] / b.s2_sum[i];
+            assert!(neff >= 1.0 - 1e-12 && neff <= 32.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn equal_exponents_give_neff_equal_nr() {
+        let nr = 16;
+        let x = vec![0.6; nr]; // e = e_max for all
+        let w = vec![0.55; nr];
+        let b = simulate_column(&x, &w, nr, fp63());
+        let neff = b.s_sum[0] * b.s_sum[0] / b.s2_sum[0];
+        assert!(approx_eq(neff, nr as f64, 1e-12));
+        // and no shrinkage benefit: S/NR = 1 exactly
+        assert!(approx_eq(b.s_sum[0] / nr as f64, 1.0, 1e-12));
+    }
+
+    #[test]
+    fn int_formats_have_unity_referral() {
+        // INT x INT: every exponent is 1 == e_max -> g_conv = 1, u = 1
+        let fmts = FormatPair::new(FpFormat::int(4), FpFormat::int(4));
+        let (x, w) = rand_case(4, 32, 8);
+        let b = simulate_column(&x, &w, 8, fmts);
+        for i in 0..b.len() {
+            assert_eq!(b.g_conv[i], 1.0);
+            assert_eq!(b.s_sum[i], 8.0);
+            assert!(approx_eq(b.v_conv[i], b.z_q[i], 1e-12));
+        }
+    }
+
+    #[test]
+    fn zero_inputs() {
+        let b = simulate_column(&[0.0; 32], &[0.0; 32], 32, fp63());
+        assert_eq!(b.z_q[0], 0.0);
+        assert_eq!(b.v_gr[0], 0.0);
+        assert!(b.s_sum[0] > 0.0); // zero cells still couple
+    }
+
+    #[test]
+    fn gr_signal_power_exceeds_conventional_for_spread_data() {
+        let mut rng = Pcg64::seeded(9);
+        let nr = 32;
+        let bsz = 2048;
+        let mut x = vec![0.0; bsz * nr];
+        let mut w = vec![0.0; bsz * nr];
+        Distribution::clipped_gauss4().fill(&mut rng, &mut x);
+        Distribution::clipped_gauss4().fill(&mut rng, &mut w);
+        let b = simulate_column(&x, &w, nr, fp63());
+        let p_gr: f64 =
+            b.v_gr.iter().map(|v| v * v).sum::<f64>() / bsz as f64;
+        let p_conv: f64 =
+            b.v_conv.iter().map(|v| v * v).sum::<f64>() / bsz as f64;
+        assert!(p_gr > 3.0 * p_conv, "gr={p_gr} conv={p_conv}");
+    }
+
+    #[test]
+    fn quantization_error_matches_noise_floor_order() {
+        let (x, w) = rand_case(11, 4096, 32);
+        let b = simulate_column(&x, &w, 32, fp63());
+        let emp: f64 = b
+            .z_q
+            .iter()
+            .zip(&b.z_ideal)
+            .map(|(q, i)| (q - i) * (q - i))
+            .sum::<f64>()
+            / b.len() as f64;
+        let floor: f64 = b.nf.iter().sum::<f64>() / b.len() as f64;
+        // floor is input-side only; empirical error also carries weight
+        // quantization noise (coarse FP4 weights), so the ratio sits above 1
+        let ratio = emp / floor;
+        assert!(ratio > 0.2 && ratio < 40.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn adc_quantize_basics() {
+        // 1-bit ADC over [-1,1]: step 1.0, levels {-1, 0, 1}
+        assert_eq!(adc_quantize(0.3, 1.0), 0.0);
+        assert_eq!(adc_quantize(0.6, 1.0), 1.0);
+        assert_eq!(adc_quantize(-0.6, 1.0), -1.0);
+        // high-res ADC is nearly transparent
+        let v = 0.123456;
+        assert!((adc_quantize(v, 20.0) - v).abs() < 2e-6);
+    }
+
+    #[test]
+    fn apply_adc_converges_to_zq_with_resolution() {
+        let (x, w) = rand_case(13, 256, 32);
+        let b = simulate_column(&x, &w, 32, fp63());
+        let (conv, gr) = apply_adc(&b, 24.0);
+        for i in 0..b.len() {
+            assert!(approx_eq(conv[i], b.z_q[i], 1e-4));
+            assert!(approx_eq(gr[i], b.z_q[i], 1e-4));
+        }
+        // and a coarse ADC hurts the conventional path more (shrinkage)
+        let (conv4, gr4) = apply_adc(&b, 6.0);
+        let err = |o: &[f64]| -> f64 {
+            o.iter()
+                .zip(&b.z_q)
+                .map(|(a, q)| (a - q) * (a - q))
+                .sum::<f64>()
+        };
+        assert!(err(&conv4) > err(&gr4));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_ragged_input() {
+        simulate_column(&[0.0; 33], &[0.0; 33], 32, fp63());
+    }
+}

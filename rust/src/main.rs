@@ -1,0 +1,326 @@
+//! `grcim` — CLI launcher for the GR-CIM design-space exploration
+//! framework.
+//!
+//! Subcommands:
+//!   figures   regenerate paper tables/figures (--fig all|fig4|...|table1)
+//!   energy    query the energy model at one (DR, SQNR) spec point
+//!   validate  cross-check the PJRT artifacts against the Rust oracle
+//!   info      show artifact registry + engine status
+//!   sweep     run a campaign described by a TOML config
+//!
+//! Common flags: --engine rust|pjrt|auto, --artifacts DIR, --out DIR,
+//! --samples N, --seed N, --workers N, --quick, --verbose, --quiet.
+
+use anyhow::{bail, Context, Result};
+use grcim::cli::Args;
+use grcim::coordinator::{run_campaign, CampaignConfig, ExperimentSpec};
+use grcim::distributions::Distribution;
+use grcim::figures::{FigureCtx, ALL};
+use grcim::formats::FpFormat;
+use grcim::mac::FormatPair;
+use grcim::report::Table;
+use grcim::runtime::{ArtifactRegistry, EngineKind};
+use grcim::spec::{required_enob, Arch, SpecConfig};
+use grcim::util::{self, Level};
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+grcim — Gain-Ranging CIM design-space exploration (paper reproduction)
+
+USAGE: grcim <command> [flags]
+
+COMMANDS:
+  figures    regenerate paper figures/tables
+             --fig all|fig4|table1|fig8|fig9|fig10|fig11|fig12|ablations
+             --out results --samples 65536 --quick
+  energy     energy model at a spec point: --dr <dB> --sqnr <dB>
+  validate   PJRT artifacts vs the pure-Rust oracle
+  sweep      run a TOML campaign: grcim sweep <config.toml>
+  info       artifact + engine status
+
+COMMON FLAGS:
+  --engine rust|pjrt|auto   backend (default auto)
+  --artifacts DIR           artifact directory (default ./artifacts)
+  --workers N               worker threads (default: cores)
+  --seed N                  campaign seed
+  --verbose / --quiet       log level
+";
+
+fn campaign_from_args(args: &Args) -> Result<CampaignConfig> {
+    Ok(CampaignConfig {
+        engine: EngineKind::parse(args.get_or("engine", "auto"))?,
+        artifacts_dir: PathBuf::from(args.get_or(
+            "artifacts",
+            ArtifactRegistry::default_dir().to_str().unwrap_or("artifacts"),
+        )),
+        workers: args.get_usize("workers", 0)?,
+        seed: args.get_u64("seed", 0xC1A0_57A7)?,
+    })
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    args.ensure_known(&[
+        "fig", "out", "samples", "engine", "artifacts", "workers", "seed",
+    ])?;
+    let mut ctx = FigureCtx {
+        campaign: campaign_from_args(args)?,
+        samples: args.get_usize("samples", 65_536)?,
+        out_dir: PathBuf::from(args.get_or("out", "results")),
+    };
+    if args.has("quick") {
+        ctx = ctx.quick();
+    }
+    let which = args.get_or("fig", "all");
+    let ids: Vec<&str> = if which == "all" {
+        ALL.to_vec()
+    } else {
+        which.split(',').collect()
+    };
+    let mut failed = Vec::new();
+    for id in ids {
+        let t = util::Timer::new(format!("figure {id}"));
+        let fr = grcim::figures::run(id, &ctx)?;
+        let text = fr.emit(&ctx.out_dir)?;
+        println!("{text}");
+        grcim::info!("{id} done in {:.1}s", t.elapsed_s());
+        if !fr.all_hold() {
+            failed.push(id.to_string());
+        }
+    }
+    if !failed.is_empty() {
+        bail!("paper-shape checks failed for: {}", failed.join(", "));
+    }
+    Ok(())
+}
+
+fn cmd_energy(args: &Args) -> Result<()> {
+    args.ensure_known(&[
+        "dr", "sqnr", "samples", "engine", "artifacts", "workers", "seed",
+    ])?;
+    let dr = args.get_f64("dr", 30.1)?;
+    let sqnr = args.get_f64("sqnr", 22.83)?;
+    let ctx = FigureCtx {
+        campaign: campaign_from_args(args)?,
+        samples: args.get_usize("samples", 16_384)?,
+        out_dir: PathBuf::from("results"),
+    };
+    let p = grcim::figures::fig12::SpecPoint {
+        dr_bits: dr / 6.02,
+        n_m_eff: (sqnr - 10.79) / 6.02,
+    };
+    let tech = grcim::energy::TechParams::default();
+    let res =
+        grcim::figures::fig12::evaluate_points(&ctx, &[p], ctx.samples, &tech)?;
+    let Some(r) = &res[0] else {
+        bail!("spec point (DR {dr} dB, SQNR {sqnr} dB) is left of the INT line");
+    };
+    let mut t = Table::new(
+        format!("energy @ DR={dr} dB, SQNR={sqnr} dB"),
+        &["arch", "enob", "fJ/op", "adc", "dac", "cells", "logic+tree+mult"],
+    );
+    t.row(vec![
+        "conventional".into(),
+        Table::f(r.enob_conv),
+        Table::f(r.e_conv.total()),
+        Table::f(r.e_conv.adc),
+        Table::f(r.e_conv.dac),
+        Table::f(r.e_conv.cells),
+        Table::f(r.e_conv.exp_logic + r.e_conv.tree + r.e_conv.norm_mult),
+    ]);
+    for (arch, enob, b) in &r.gr_all {
+        t.row(vec![
+            arch.name().into(),
+            Table::f(*enob),
+            Table::f(b.total()),
+            Table::f(b.adc),
+            Table::f(b.dac),
+            Table::f(b.cells),
+            Table::f(b.exp_logic + b.tree + b.norm_mult),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    args.ensure_known(&["artifacts", "samples", "seed"])?;
+    let dir = PathBuf::from(args.get_or(
+        "artifacts",
+        ArtifactRegistry::default_dir().to_str().unwrap_or("artifacts"),
+    ));
+    let reg = ArtifactRegistry::load(&dir)?;
+    let pjrt = grcim::runtime::PjrtEngine::from_registry(&reg)?;
+    let rust = grcim::runtime::RustEngine;
+    println!("platform: {}", pjrt.platform());
+    let fmts = FormatPair::new(FpFormat::fp6_e3m2(), FpFormat::fp4_e2m1());
+    let mut worst = 0.0f64;
+    for nr in pjrt.depths() {
+        use grcim::runtime::Engine as _;
+        let batch = pjrt.preferred_batch(nr);
+        let mut rng = grcim::rng::Pcg64::seeded(args.get_u64("seed", 7)?);
+        let mut x = vec![0.0f32; batch * nr];
+        let mut w = vec![0.0f32; batch * nr];
+        Distribution::Uniform.fill_f32(&mut rng, &mut x);
+        Distribution::clipped_gauss4().fill_f32(&mut rng, &mut w);
+        let bp = pjrt.simulate(&x, &w, nr, fmts)?;
+        let br = rust.simulate(&x, &w, nr, fmts)?;
+        let mut max_diff = 0.0f64;
+        for (a, b) in bp.z_q.iter().zip(&br.z_q) {
+            max_diff = max_diff.max((a - b).abs());
+        }
+        worst = worst.max(max_diff);
+        println!("nr={nr:<4} batch={batch:<6} max|z_q diff|={max_diff:.3e}");
+    }
+    if worst > 1e-5 {
+        bail!("validation failed: max diff {worst:.3e}");
+    }
+    println!("validate OK");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get_or(
+        "artifacts",
+        ArtifactRegistry::default_dir().to_str().unwrap_or("artifacts"),
+    ));
+    match ArtifactRegistry::load(&dir) {
+        Ok(reg) => {
+            println!(
+                "artifacts: {} ({} entries)",
+                dir.display(),
+                reg.entries.len()
+            );
+            for e in &reg.entries {
+                println!(
+                    "  {:<24} graph={:<8} nr={:<4} batch={}",
+                    e.file, e.graph, e.nr, e.batch
+                );
+            }
+            match grcim::runtime::PjrtEngine::from_registry(&reg) {
+                Ok(p) => println!("pjrt: ok ({})", p.platform()),
+                Err(e) => println!("pjrt: UNAVAILABLE ({e})"),
+            }
+        }
+        Err(e) => println!("artifacts: none ({e}); rust engine only"),
+    }
+    println!(
+        "workers default: {}",
+        CampaignConfig::default().effective_workers()
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .cloned()
+        .or_else(|| args.get("config").map(String::from))
+        .context("sweep needs a config file: grcim sweep <config.toml>")?;
+    let cfg = grcim::config::Config::load(std::path::Path::new(&path))?;
+    let mut campaign = CampaignConfig::default();
+    if let Some(seed) = cfg.root.get("seed").and_then(|v| v.as_f64()) {
+        campaign.seed = seed as u64;
+    }
+    if let Some(engine) = cfg
+        .section("engine")
+        .and_then(|t| t.get("kind"))
+        .and_then(|v| v.as_str())
+    {
+        campaign.engine = EngineKind::parse(engine)?;
+    }
+    let samples = cfg
+        .root
+        .get("samples")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(16_384);
+
+    let mut specs = Vec::new();
+    for exp in cfg.sections_named("experiment") {
+        let name = exp
+            .get("name")
+            .and_then(|v| v.as_str())
+            .context("experiment needs a name")?;
+        let n_e = exp.get("n_e").and_then(|v| v.as_f64()).unwrap_or(2.0);
+        let n_m = exp.get("n_m").and_then(|v| v.as_f64()).unwrap_or(2.0);
+        let nr = exp.get("nr").and_then(|v| v.as_usize()).unwrap_or(32);
+        let dist = exp
+            .get("distribution")
+            .and_then(|v| v.as_str())
+            .unwrap_or("uniform");
+        let fmt = FpFormat::fp(n_e as u32, n_m as u32);
+        let dist_x = match dist {
+            "uniform" => Distribution::Uniform,
+            "max_entropy" => Distribution::max_entropy(fmt),
+            "gauss_outliers" => Distribution::gauss_outliers(),
+            "clipped_gauss" => Distribution::clipped_gauss4(),
+            other => bail!("unknown distribution '{other}'"),
+        };
+        specs.push(ExperimentSpec {
+            id: name.to_string(),
+            fmts: FormatPair::new(fmt, FpFormat::fp4_e2m1()),
+            dist_x,
+            dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+            nr,
+            samples,
+        });
+    }
+    if specs.is_empty() {
+        bail!("config has no [[experiment]] sections");
+    }
+    let aggs = run_campaign(&specs, &campaign)?;
+    let mut t = Table::new(
+        "sweep results",
+        &[
+            "experiment", "samples", "enob_conv", "enob_gr_unit",
+            "enob_gr_row", "mean_n_eff",
+        ],
+    );
+    let scfg = SpecConfig::default();
+    for (spec, agg) in specs.iter().zip(&aggs) {
+        t.row(vec![
+            spec.id.clone(),
+            agg.samples().to_string(),
+            Table::f(required_enob(agg, Arch::Conventional, scfg).enob),
+            Table::f(required_enob(agg, Arch::GrUnit, scfg).enob),
+            Table::f(required_enob(agg, Arch::GrRow, scfg).enob),
+            Table::f(agg.mean_n_eff()),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    Ok(())
+}
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if args.has("verbose") {
+        util::set_level(Level::Debug);
+    } else if args.has("quiet") {
+        util::set_level(Level::Error);
+    }
+    if args.command.is_empty() || args.has("help") {
+        println!("{USAGE}");
+        return;
+    }
+    let result = match args.command.as_str() {
+        "figures" => cmd_figures(&args),
+        "energy" => cmd_energy(&args),
+        "validate" => cmd_validate(&args),
+        "info" => cmd_info(&args),
+        "sweep" => cmd_sweep(&args),
+        other => {
+            eprintln!("unknown command '{other}'\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

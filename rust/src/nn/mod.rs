@@ -1,0 +1,420 @@
+//! Tiny neural-network substrate for the end-to-end driver
+//! (`examples/mlp_inference.rs`): a from-scratch MLP with SGD training on
+//! synthetic data, plus CIM-quantized inference that routes every layer
+//! matmul through the simulated analog array (conventional or GR-MAC
+//! signal chain, ADC at the spec-solved ENOB) via a [`runtime::Engine`].
+
+use crate::mac::{adc_quantize, FormatPair};
+use crate::rng::Pcg64;
+use crate::runtime::Engine;
+use crate::spec::Arch;
+use anyhow::Result;
+
+/// A dense layer: row-major weights `[out][inp]`, bias `[out]`.
+#[derive(Debug, Clone)]
+pub struct Dense {
+    pub inp: usize,
+    pub out: usize,
+    pub w: Vec<f64>,
+    pub b: Vec<f64>,
+}
+
+impl Dense {
+    fn new(inp: usize, out: usize, rng: &mut Pcg64) -> Self {
+        // He init
+        let scale = (2.0 / inp as f64).sqrt();
+        let w = (0..inp * out).map(|_| rng.normal() * scale).collect();
+        Dense { inp, out, w, b: vec![0.0; out] }
+    }
+
+    fn forward(&self, x: &[f64], z: &mut Vec<f64>) {
+        z.clear();
+        for o in 0..self.out {
+            let row = &self.w[o * self.inp..(o + 1) * self.inp];
+            let mut acc = self.b[o];
+            for i in 0..self.inp {
+                acc += row[i] * x[i];
+            }
+            z.push(acc);
+        }
+    }
+}
+
+/// Multi-layer perceptron with ReLU hidden activations and softmax output.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub layers: Vec<Dense>,
+}
+
+impl Mlp {
+    pub fn new(dims: &[usize], seed: u64) -> Self {
+        assert!(dims.len() >= 2);
+        let mut rng = Pcg64::seeded(seed);
+        let layers = dims
+            .windows(2)
+            .map(|d| Dense::new(d[0], d[1], &mut rng))
+            .collect();
+        Mlp { layers }
+    }
+
+    /// Float forward; returns logits.
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        let mut act = x.to_vec();
+        let mut z = Vec::new();
+        for (li, layer) in self.layers.iter().enumerate() {
+            layer.forward(&act, &mut z);
+            if li + 1 < self.layers.len() {
+                for v in z.iter_mut() {
+                    *v = v.max(0.0); // ReLU
+                }
+            }
+            std::mem::swap(&mut act, &mut z);
+        }
+        act
+    }
+
+    pub fn predict(&self, x: &[f64]) -> usize {
+        argmax(&self.forward(x))
+    }
+
+    /// One SGD epoch of softmax cross-entropy; returns mean loss.
+    pub fn train_epoch(
+        &mut self,
+        xs: &[Vec<f64>],
+        ys: &[usize],
+        lr: f64,
+        rng: &mut Pcg64,
+    ) -> f64 {
+        assert_eq!(xs.len(), ys.len());
+        let mut order: Vec<usize> = (0..xs.len()).collect();
+        // Fisher-Yates shuffle
+        for i in (1..order.len()).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            order.swap(i, j);
+        }
+        let mut total_loss = 0.0;
+        for &idx in &order {
+            total_loss += self.sgd_step(&xs[idx], ys[idx], lr);
+        }
+        total_loss / xs.len() as f64
+    }
+
+    fn sgd_step(&mut self, x: &[f64], y: usize, lr: f64) -> f64 {
+        // forward with cached activations
+        let mut acts: Vec<Vec<f64>> = vec![x.to_vec()];
+        let mut z = Vec::new();
+        for (li, layer) in self.layers.iter().enumerate() {
+            layer.forward(acts.last().unwrap(), &mut z);
+            let mut a = z.clone();
+            if li + 1 < self.layers.len() {
+                for v in a.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            acts.push(a);
+        }
+        // softmax + loss
+        let logits = acts.last().unwrap().clone();
+        let max = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = logits.iter().map(|v| (v - max).exp()).collect();
+        let sum: f64 = exps.iter().sum();
+        let probs: Vec<f64> = exps.iter().map(|e| e / sum).collect();
+        let loss = -probs[y].max(1e-12).ln();
+
+        // backward
+        let mut delta: Vec<f64> = probs;
+        delta[y] -= 1.0;
+        for li in (0..self.layers.len()).rev() {
+            let (prev_act, this_act) = (&acts[li], &acts[li + 1]);
+            // relu grad for hidden layers
+            if li + 1 < self.layers.len() {
+                for (d, a) in delta.iter_mut().zip(this_act) {
+                    if *a <= 0.0 {
+                        *d = 0.0;
+                    }
+                }
+            }
+            let layer = &mut self.layers[li];
+            let mut next_delta = vec![0.0; layer.inp];
+            for o in 0..layer.out {
+                let d = delta[o];
+                let row = &mut layer.w[o * layer.inp..(o + 1) * layer.inp];
+                for i in 0..layer.inp {
+                    next_delta[i] += row[i] * d;
+                    row[i] -= lr * d * prev_act[i];
+                }
+                layer.b[o] -= lr * d;
+            }
+            delta = next_delta;
+        }
+        loss
+    }
+}
+
+pub fn argmax(v: &[f64]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Synthetic k-class Gaussian-blob dataset in d dimensions.
+pub fn make_blobs(
+    n: usize,
+    d: usize,
+    k: usize,
+    spread: f64,
+    seed: u64,
+) -> (Vec<Vec<f64>>, Vec<usize>) {
+    let mut rng = Pcg64::seeded(seed);
+    // class centers on a scaled hypercube corner pattern
+    let centers: Vec<Vec<f64>> = (0..k)
+        .map(|_| (0..d).map(|_| rng.uniform_in(-1.0, 1.0)).collect())
+        .collect();
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % k;
+        let x: Vec<f64> = centers[c]
+            .iter()
+            .map(|&m| m + rng.normal() * spread)
+            .collect();
+        xs.push(x);
+        ys.push(c);
+    }
+    (xs, ys)
+}
+
+/// CIM inference configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct CimInference {
+    pub fmts: FormatPair,
+    pub arch: Arch,
+    pub enob: f64,
+    /// Array depth (row-chunk size of each tiled matmul).
+    pub nr: usize,
+}
+
+/// Run a batch of inputs through the network with every matmul executed
+/// by the simulated CIM array: activations and weights are scaled
+/// per-layer/per-batch to [-1, 1] (static per-tensor calibration),
+/// quantized to the configured formats inside the engine, split into
+/// NR-row column dot products, passed through the selected analog signal
+/// chain, digitized at `enob`, renormalized, and rescaled.
+///
+/// All samples' tiles are batched into one engine call per layer (padded
+/// to the engine's preferred batch), so the PJRT path runs at full
+/// artifact batch efficiency.
+pub fn cim_forward_batch(
+    mlp: &Mlp,
+    engine: &dyn Engine,
+    cfg: &CimInference,
+    xs: &[Vec<f64>],
+) -> Result<Vec<Vec<f64>>> {
+    let n = xs.len();
+    let nr = cfg.nr;
+    let mut acts: Vec<Vec<f64>> = xs.to_vec();
+    for (li, layer) in mlp.layers.iter().enumerate() {
+        // static per-tensor scales over the whole batch
+        let a_scale = acts
+            .iter()
+            .flat_map(|a| a.iter())
+            .fold(0.0f64, |m, v| m.max(v.abs()))
+            .max(1e-12);
+        let w_scale = layer
+            .w
+            .iter()
+            .fold(0.0f64, |m, v| m.max(v.abs()))
+            .max(1e-12);
+
+        let chunks = layer.inp.div_ceil(nr);
+        let rows = n * layer.out * chunks;
+        let engine_batch = engine.preferred_batch(nr);
+        let padded = rows.div_ceil(engine_batch) * engine_batch;
+        let mut xb = vec![0.0f32; padded * nr];
+        let mut wb = vec![0.0f32; padded * nr];
+        for (s, act) in acts.iter().enumerate() {
+            for o in 0..layer.out {
+                let w_row = &layer.w[o * layer.inp..(o + 1) * layer.inp];
+                for c in 0..chunks {
+                    let base = ((s * layer.out + o) * chunks + c) * nr;
+                    for i in 0..nr {
+                        let src = c * nr + i;
+                        if src < layer.inp {
+                            xb[base + i] = (act[src] / a_scale) as f32;
+                            wb[base + i] = (w_row[src] / w_scale) as f32;
+                        }
+                    }
+                }
+            }
+        }
+        let sim = engine.simulate(&xb, &wb, nr, cfg.fmts)?;
+
+        // digitize per the architecture and reassemble z = sum over chunks
+        let mut next = Vec::with_capacity(n);
+        for s in 0..n {
+            let mut z = vec![0.0f64; layer.out];
+            for (o, zo) in z.iter_mut().enumerate() {
+                for c in 0..chunks {
+                    let r = (s * layer.out + o) * chunks + c;
+                    let zhat = match cfg.arch {
+                        Arch::Conventional => {
+                            adc_quantize(sim.v_conv[r], cfg.enob)
+                                * sim.g_conv[r]
+                        }
+                        // the row-normalized chain is not separately
+                        // simulated; unit normalization is used for both
+                        // GR granularities (identical column voltage)
+                        Arch::GrUnit | Arch::GrInt | Arch::GrRow => {
+                            adc_quantize(sim.v_gr[r], cfg.enob)
+                                * sim.s_sum[r]
+                                / nr as f64
+                        }
+                    };
+                    *zo += zhat * nr as f64;
+                }
+                *zo = *zo * a_scale * w_scale + layer.b[o];
+                if li + 1 < mlp.layers.len() {
+                    *zo = zo.max(0.0);
+                }
+            }
+            next.push(z);
+        }
+        acts = next;
+    }
+    Ok(acts)
+}
+
+/// Single-input convenience wrapper over [`cim_forward_batch`].
+pub fn cim_forward(
+    mlp: &Mlp,
+    engine: &dyn Engine,
+    cfg: &CimInference,
+    x: &[f64],
+) -> Result<Vec<f64>> {
+    Ok(cim_forward_batch(mlp, engine, cfg, &[x.to_vec()])?.remove(0))
+}
+
+/// Classification accuracy of float inference.
+pub fn accuracy(mlp: &Mlp, xs: &[Vec<f64>], ys: &[usize]) -> f64 {
+    let correct = xs
+        .iter()
+        .zip(ys)
+        .filter(|(x, &y)| mlp.predict(x) == y)
+        .count();
+    correct as f64 / xs.len() as f64
+}
+
+/// Classification accuracy of CIM-simulated inference (batched).
+pub fn cim_accuracy(
+    mlp: &Mlp,
+    engine: &dyn Engine,
+    cfg: &CimInference,
+    xs: &[Vec<f64>],
+    ys: &[usize],
+) -> Result<f64> {
+    let logits = cim_forward_batch(mlp, engine, cfg, xs)?;
+    let correct = logits
+        .iter()
+        .zip(ys)
+        .filter(|(l, &y)| argmax(l) == y)
+        .count();
+    Ok(correct as f64 / xs.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::FpFormat;
+    use crate::runtime::RustEngine;
+
+    fn train_small() -> (Mlp, Vec<Vec<f64>>, Vec<usize>) {
+        let (xs, ys) = make_blobs(512, 16, 4, 0.25, 7);
+        let mut mlp = Mlp::new(&[16, 32, 4], 3);
+        let mut rng = Pcg64::seeded(11);
+        for _ in 0..30 {
+            mlp.train_epoch(&xs, &ys, 0.05, &mut rng);
+        }
+        (mlp, xs, ys)
+    }
+
+    #[test]
+    fn training_reduces_loss_and_fits_blobs() {
+        let (xs, ys) = make_blobs(512, 16, 4, 0.25, 7);
+        let mut mlp = Mlp::new(&[16, 32, 4], 3);
+        let mut rng = Pcg64::seeded(11);
+        let first = mlp.train_epoch(&xs, &ys, 0.05, &mut rng);
+        let mut last = first;
+        for _ in 0..29 {
+            last = mlp.train_epoch(&xs, &ys, 0.05, &mut rng);
+        }
+        assert!(last < 0.5 * first, "loss {first} -> {last}");
+        assert!(accuracy(&mlp, &xs, &ys) > 0.9);
+    }
+
+    #[test]
+    fn cim_inference_with_fine_format_matches_float() {
+        let (mlp, xs, ys) = train_small();
+        let float_acc = accuracy(&mlp, &xs, &ys);
+        let cfg = CimInference {
+            fmts: FormatPair::new(FpFormat::fp(4, 6), FpFormat::fp(4, 6)),
+            arch: Arch::GrUnit,
+            enob: 16.0,
+            nr: 16,
+        };
+        let acc =
+            cim_accuracy(&mlp, &RustEngine, &cfg, &xs[..128], &ys[..128])
+                .unwrap();
+        assert!(
+            acc >= float_acc - 0.05,
+            "cim {acc} vs float {float_acc}"
+        );
+    }
+
+    #[test]
+    fn cim_forward_logits_close_to_float_at_high_precision() {
+        let (mlp, xs, _) = train_small();
+        let cfg = CimInference {
+            fmts: FormatPair::new(FpFormat::fp(4, 7), FpFormat::fp(4, 7)),
+            arch: Arch::GrUnit,
+            enob: 18.0,
+            nr: 16,
+        };
+        let f = mlp.forward(&xs[0]);
+        let c = cim_forward(&mlp, &RustEngine, &cfg, &xs[0]).unwrap();
+        for (a, b) in f.iter().zip(&c) {
+            assert!((a - b).abs() < 0.05 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn coarse_adc_degrades_conventional_more_than_gr() {
+        let (mlp, xs, ys) = train_small();
+        let fmts = FormatPair::new(FpFormat::fp6_e2m3(), FpFormat::fp6_e2m3());
+        let acc_at = |arch: Arch, enob: f64| {
+            cim_accuracy(
+                &mlp,
+                &RustEngine,
+                &CimInference { fmts, arch, enob, nr: 16 },
+                &xs[..192],
+                &ys[..192],
+            )
+            .unwrap()
+        };
+        let gr = acc_at(Arch::GrUnit, 6.0);
+        let conv = acc_at(Arch::Conventional, 6.0);
+        assert!(
+            gr >= conv - 0.02,
+            "gr {gr} should not trail conventional {conv} at coarse ADC"
+        );
+    }
+
+    #[test]
+    fn blobs_are_deterministic_and_labeled() {
+        let (xa, ya) = make_blobs(64, 8, 4, 0.1, 5);
+        let (xb, _) = make_blobs(64, 8, 4, 0.1, 5);
+        assert_eq!(xa[0], xb[0]);
+        assert!(ya.iter().all(|&y| y < 4));
+    }
+}

@@ -1,0 +1,143 @@
+//! Tiny property-testing kit (the vendor set has no proptest): generate
+//! `cases` random inputs from a generator, assert a property on each, and
+//! on failure report the seed + a human-readable rendering of the minimal
+//! failing case found by a bounded shrink loop.
+//!
+//! Used by the invariant suite in `rust/tests/properties.rs` and by inline
+//! module tests where hand-rolled loops would repeat boilerplate.
+
+use crate::rng::Pcg64;
+use std::fmt::Debug;
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` generated inputs. Panics with diagnostics on
+/// the first failure; tries `shrink` up to 64 times to find a simpler
+/// failing case (pass `|_| None` for no shrinking).
+pub fn check<T, G, P, S>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: G,
+    mut shrink: S,
+    mut prop: P,
+) where
+    T: Debug + Clone,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> PropResult,
+    S: FnMut(&T) -> Option<T>,
+{
+    let mut rng = Pcg64::seeded(seed);
+    for case_idx in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // bounded shrink
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut cur = input;
+            for _ in 0..64 {
+                match shrink(&cur) {
+                    Some(smaller) => match prop(&smaller) {
+                        Err(m) => {
+                            best = smaller.clone();
+                            best_msg = m;
+                            cur = smaller;
+                        }
+                        Ok(()) => break,
+                    },
+                    None => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case_idx}):\n  \
+                 input: {best:?}\n  reason: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Shorthand for properties without shrinking.
+pub fn check_simple<T, G, P>(name: &str, seed: u64, cases: usize, gen: G, prop: P)
+where
+    T: Debug + Clone,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> PropResult,
+{
+    check(name, seed, cases, gen, |_| None, prop)
+}
+
+/// Property helper: require a boolean with a lazily formatted reason.
+pub fn ensure(cond: bool, reason: impl FnOnce() -> String) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(reason())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check_simple(
+            "count",
+            1,
+            100,
+            |rng| rng.uniform(),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_name() {
+        check_simple(
+            "fails",
+            2,
+            10,
+            |rng| rng.uniform(),
+            |x| ensure(*x < 0.0, || format!("{x} not negative")),
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_smaller_case() {
+        // property fails for any v > 10; shrink halves; minimal found
+        // failing value must be <= 22 (one halving above the boundary)
+        let result = std::panic::catch_unwind(|| {
+            check(
+                "shrinks",
+                3,
+                50,
+                |rng| (rng.uniform() * 1000.0) as u64,
+                |v| if *v > 11 { Some(v / 2) } else { None },
+                |v| ensure(*v <= 10, || format!("{v} too big")),
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        let shown: u64 = msg
+            .split("input: ")
+            .nth(1)
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(shown <= 22, "shrunk case {shown} in: {msg}");
+    }
+
+    #[test]
+    fn ensure_formats_lazily() {
+        assert!(ensure(true, || unreachable!()).is_ok());
+        assert_eq!(ensure(false, || "bad".into()), Err("bad".into()));
+    }
+}

@@ -1,0 +1,237 @@
+//! Result tables: CSV + aligned-text (markdown-ish) emitters used by the
+//! figure harness and the CLI.
+
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A rectangular result table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width mismatch in '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+    }
+
+    /// Format a float with sensible figure precision.
+    pub fn f(v: f64) -> String {
+        if v == 0.0 {
+            "0".into()
+        } else if v.abs() >= 1000.0 || v.abs() < 1e-3 {
+            format!("{v:.4e}")
+        } else {
+            format!("{v:.4}")
+        }
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(
+            s,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                s,
+                "{}",
+                r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        s
+    }
+
+    /// Markdown table (also readable as plain text).
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "### {}", self.title);
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(line, " {:<w$} |", c, w = width[i]);
+            }
+            line
+        };
+        let _ = writeln!(s, "{}", fmt_row(&self.headers));
+        let mut sep = String::from("|");
+        for w in &width {
+            let _ = write!(sep, "{:-<w$}|", "", w = w + 2);
+        }
+        let _ = writeln!(s, "{sep}");
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", fmt_row(r));
+        }
+        s
+    }
+
+    /// Write `<dir>/<stem>.csv`.
+    pub fn save_csv(&self, dir: &Path, stem: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let path = dir.join(format!("{stem}.csv"));
+        std::fs::write(&path, self.to_csv())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+}
+
+/// A completed figure/table reproduction: tables plus the headline
+/// comparisons against the paper.
+#[derive(Debug, Clone, Default)]
+pub struct FigureResult {
+    pub name: String,
+    pub tables: Vec<Table>,
+    /// (claim, paper value, measured value, holds?)
+    pub checks: Vec<Check>,
+}
+
+/// One paper-vs-measured comparison.
+#[derive(Debug, Clone)]
+pub struct Check {
+    pub claim: String,
+    pub paper: String,
+    pub measured: String,
+    pub holds: bool,
+}
+
+impl FigureResult {
+    pub fn new(name: impl Into<String>) -> Self {
+        FigureResult { name: name.into(), ..Default::default() }
+    }
+
+    pub fn check(
+        &mut self,
+        claim: impl Into<String>,
+        paper: impl Into<String>,
+        measured: impl Into<String>,
+        holds: bool,
+    ) {
+        self.checks.push(Check {
+            claim: claim.into(),
+            paper: paper.into(),
+            measured: measured.into(),
+            holds,
+        });
+    }
+
+    pub fn all_hold(&self) -> bool {
+        self.checks.iter().all(|c| c.holds)
+    }
+
+    /// Persist all tables and render the summary text.
+    pub fn emit(&self, out_dir: &Path) -> Result<String> {
+        let mut s = String::new();
+        let _ = writeln!(s, "== {} ==", self.name);
+        for t in &self.tables {
+            let stem = format!(
+                "{}_{}",
+                self.name,
+                t.title.to_lowercase().replace([' ', '/', ':'], "_")
+            );
+            t.save_csv(out_dir, &stem)?;
+            let _ = writeln!(s, "{}", t.to_markdown());
+        }
+        if !self.checks.is_empty() {
+            let mut ct = Table::new(
+                format!("{} paper-vs-measured", self.name),
+                &["claim", "paper", "measured", "holds"],
+            );
+            for c in &self.checks {
+                ct.row(vec![
+                    c.claim.clone(),
+                    c.paper.clone(),
+                    c.measured.clone(),
+                    if c.holds { "yes" } else { "NO" }.into(),
+                ]);
+            }
+            ct.save_csv(out_dir, &format!("{}_checks", self.name))?;
+            let _ = writeln!(s, "{}", ct.to_markdown());
+        }
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into(), "x,y".into()]);
+        t.row(vec![Table::f(0.123456), Table::f(12345.6)]);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("a,b\n"));
+        assert!(csv.contains("\"x,y\""));
+        let md = t.to_markdown();
+        assert!(md.contains("### demo"));
+        assert!(md.contains("| a "));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn float_formatting() {
+        assert_eq!(Table::f(0.0), "0");
+        assert_eq!(Table::f(1.5), "1.5000");
+        assert!(Table::f(1e-9).contains('e'));
+        assert!(Table::f(1.23e6).contains('e'));
+    }
+
+    #[test]
+    fn figure_result_emits_files() {
+        let dir = std::env::temp_dir().join("grcim_test_report");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut fr = FigureResult::new("figX");
+        let mut t = Table::new("series", &["x", "y"]);
+        t.row(vec!["1".into(), "2".into()]);
+        fr.tables.push(t);
+        fr.check("gap", ">= 1.5 b", "1.7 b", true);
+        let text = fr.emit(&dir).unwrap();
+        assert!(text.contains("figX"));
+        assert!(dir.join("figX_series.csv").exists());
+        assert!(dir.join("figX_checks.csv").exists());
+        assert!(fr.all_hold());
+    }
+}

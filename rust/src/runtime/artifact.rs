@@ -1,0 +1,176 @@
+//! Artifact registry: discovers and validates the AOT outputs that
+//! `python/compile/aot.py` wrote into `artifacts/` (HLO text files plus a
+//! `manifest.json` describing shapes).
+
+use crate::config::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Number of outputs of the column-simulation graph (must match
+/// `python/compile/kernels/grmac.py::N_OUTPUTS`).
+pub const N_OUTPUTS: usize = 11;
+
+/// One lowered module.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    pub file: String,
+    /// "macsim" (statistics batches) or "mvmsim" (e2e tile batches).
+    pub graph: String,
+    pub nr: usize,
+    pub batch: usize,
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactRegistry {
+    root: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl ArtifactRegistry {
+    /// Load `<dir>/manifest.json` and verify each artifact file exists.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let man_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&man_path)
+            .with_context(|| format!("reading {}", man_path.display()))?;
+        let json = Json::parse(&text)
+            .with_context(|| format!("parsing {}", man_path.display()))?;
+
+        let outputs = json
+            .get("outputs")
+            .and_then(Json::as_usize)
+            .context("manifest missing 'outputs'")?;
+        if outputs != N_OUTPUTS {
+            bail!(
+                "manifest declares {outputs} outputs but this binary expects \
+                 {N_OUTPUTS} — re-run `make artifacts`"
+            );
+        }
+
+        let mut entries = Vec::new();
+        for e in json.get("entries").context("manifest missing 'entries'")?.items() {
+            let entry = ArtifactEntry {
+                file: e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .context("entry missing 'file'")?
+                    .to_string(),
+                graph: e
+                    .get("graph")
+                    .and_then(Json::as_str)
+                    .context("entry missing 'graph'")?
+                    .to_string(),
+                nr: e.get("nr").and_then(Json::as_usize).context("entry nr")?,
+                batch: e
+                    .get("batch")
+                    .and_then(Json::as_usize)
+                    .context("entry batch")?,
+            };
+            let path = dir.join(&entry.file);
+            if !path.exists() {
+                bail!("artifact listed but missing: {}", path.display());
+            }
+            entries.push(entry);
+        }
+        if entries.is_empty() {
+            bail!("manifest has no entries");
+        }
+        Ok(ArtifactRegistry { root: dir.to_path_buf(), entries })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Statistics-graph entries (one per array depth).
+    pub fn macsim_entries(&self) -> Vec<&ArtifactEntry> {
+        self.entries.iter().filter(|e| e.graph == "macsim").collect()
+    }
+
+    /// MVM-tile entries (used by the e2e example).
+    pub fn mvmsim_entries(&self) -> Vec<&ArtifactEntry> {
+        self.entries.iter().filter(|e| e.graph == "mvmsim").collect()
+    }
+
+    pub fn entry(&self, graph: &str, nr: usize) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.graph == graph && e.nr == nr)
+    }
+
+    /// Default artifacts directory: `$GRCIM_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("GRCIM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, text: &str, files: &[&str]) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(text.as_bytes()).unwrap();
+        for file in files {
+            std::fs::File::create(dir.join(file)).unwrap();
+        }
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = std::env::temp_dir().join("grcim_test_manifest_ok");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_manifest(
+            &dir,
+            r#"{"batch":2048,"mvm_batch":32,"outputs":11,"entries":[
+                {"file":"macsim_nr32.hlo.txt","graph":"macsim","nr":32,"batch":2048},
+                {"file":"mvmsim_nr32.hlo.txt","graph":"mvmsim","nr":32,"batch":32}
+            ]}"#,
+            &["macsim_nr32.hlo.txt", "mvmsim_nr32.hlo.txt"],
+        );
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert_eq!(reg.entries.len(), 2);
+        assert_eq!(reg.macsim_entries().len(), 1);
+        assert_eq!(reg.mvmsim_entries().len(), 1);
+        assert_eq!(reg.entry("macsim", 32).unwrap().batch, 2048);
+        assert!(reg.entry("macsim", 64).is_none());
+    }
+
+    #[test]
+    fn rejects_output_count_mismatch() {
+        let dir = std::env::temp_dir().join("grcim_test_manifest_badout");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_manifest(
+            &dir,
+            r#"{"outputs":8,"entries":[
+                {"file":"a.hlo.txt","graph":"macsim","nr":32,"batch":2048}
+            ]}"#,
+            &["a.hlo.txt"],
+        );
+        let err = ArtifactRegistry::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("re-run"), "{err}");
+    }
+
+    #[test]
+    fn rejects_missing_file() {
+        let dir = std::env::temp_dir().join("grcim_test_manifest_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_manifest(
+            &dir,
+            r#"{"outputs":11,"entries":[
+                {"file":"gone.hlo.txt","graph":"macsim","nr":32,"batch":2048}
+            ]}"#,
+            &[],
+        );
+        assert!(ArtifactRegistry::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_absent_dir() {
+        assert!(
+            ArtifactRegistry::load(Path::new("/nonexistent/grcim")).is_err()
+        );
+    }
+}

@@ -1,0 +1,340 @@
+//! ADC resolution (ENOB) requirement solver — paper Sec. IV-A.
+//!
+//! The spec rule: noise introduced by the ADC, referred to the MAC output,
+//! must sit at least `margin_db` (6 dB) below the quantization noise floor
+//! of the data representation the architecture actually processes:
+//!
+//! Both architectures share the same floor — the output-referred,
+//! input-side ulp noise of the quantized data (`nf`; for INT formats the
+//! ulp is the uniform grid step, which unifies the Fig. 10 FP->INT view
+//! with Fig. 12's static-INT conventional CIM) — and differ in the gain
+//! `g` through which ADC noise refers to the output:
+//!
+//! * **Conventional**: global normalization is static (alignment to the
+//!   format maximum, Fig. 2c), so g = 1: the ADC must resolve the floor at
+//!   full scale even though accumulation shrank the signal.
+//! * **GR unit**: g = S/NR — the exponent-weighted normalization factor the
+//!   digital back-end multiplies out; ADC noise is scaled down with it.
+//! * **GR row**: g = S_x/NR (input exponents only; weights stored aligned).
+//!
+//! With an ideal uniform ADC of step `Delta` over full scale `V_FS = 2`:
+//!
+//! ```text
+//! Delta_max^2 = 12 * floor / (10^(margin/10) * E[g^2])
+//! ENOB        = log2(V_FS / Delta_max)        (continuous bits)
+//! ```
+//!
+//! The input-side-only convention follows the Fig. 10 caption ("only input
+//! quantization noise is considered"); weight quantization is part of the
+//! model, not noise to protect.
+
+use crate::stats::ColumnAgg;
+use crate::util::from_db;
+
+/// Which architecture's floor/referral to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Arch {
+    /// Conventional direct-accumulation CIM on statically aligned INT data.
+    Conventional,
+    /// GR-MAC, per-unit normalization (input + weight exponents ranged).
+    GrUnit,
+    /// GR-MAC, per-row normalization (input exponents ranged, weights
+    /// block-aligned).
+    GrRow,
+    /// GR-MAC, INT-input normalization (weight exponents ranged only).
+    /// Coincides with `GrUnit` referral when the input format is INT
+    /// (input exponents are constant).
+    GrInt,
+}
+
+impl Arch {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arch::Conventional => "conventional",
+            Arch::GrUnit => "gr-unit",
+            Arch::GrRow => "gr-row",
+            Arch::GrInt => "gr-int",
+        }
+    }
+}
+
+/// The ADC specification produced by the solver.
+#[derive(Debug, Clone, Copy)]
+pub struct AdcSpec {
+    /// Required effective number of bits.
+    pub enob: f64,
+    /// Maximum tolerable ADC step over V_FS = 2.
+    pub delta_max: f64,
+    /// The noise floor used (output-referred power).
+    pub noise_floor: f64,
+    /// The referral power E[g^2] used.
+    pub g2: f64,
+}
+
+/// Solver configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SpecConfig {
+    /// Safety margin between ADC noise and the quantization floor.
+    pub margin_db: f64,
+    /// Use the empirical E[(z_q - z_ideal)^2] instead of the
+    /// representation floor (diagnostic only; breaks down for max-entropy
+    /// inputs where the empirical error is exactly zero).
+    pub empirical_floor: bool,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        SpecConfig { margin_db: 6.0, empirical_floor: false }
+    }
+}
+
+/// Solve the required ENOB for one architecture from an aggregate.
+pub fn required_enob(agg: &ColumnAgg, arch: Arch, cfg: SpecConfig) -> AdcSpec {
+    assert!(agg.samples() > 0, "empty aggregate");
+    let (floor, g2) = match arch {
+        // static global alignment: unity referral, the FP ulp floor (for
+        // INT formats the ulp is the uniform grid step, so this unifies
+        // the Fig. 10 FP->INT view with the Fig. 12 static-INT view)
+        Arch::Conventional => (agg.nf.mean(), 1.0),
+        Arch::GrUnit | Arch::GrInt => (agg.nf.mean(), agg.g_unit.mean_sq()),
+        Arch::GrRow => (agg.nf.mean(), agg.g_row.mean_sq()),
+    };
+    let floor = if cfg.empirical_floor { agg.qerr.mean_sq() } else { floor };
+    assert!(g2 > 0.0, "degenerate referral gain for {arch:?}");
+    let floor = floor.max(1e-300);
+    let delta_max = (12.0 * floor / (from_db(cfg.margin_db) * g2)).sqrt();
+    let enob = (2.0 / delta_max).log2();
+    AdcSpec { enob, delta_max, noise_floor: floor, g2 }
+}
+
+/// Convenience: ENOB advantage of the GR unit-normalized architecture over
+/// the conventional one for the same aggregate (the paper's ΔENOB).
+pub fn delta_enob(agg: &ColumnAgg, cfg: SpecConfig) -> f64 {
+    required_enob(agg, Arch::Conventional, cfg).enob
+        - required_enob(agg, Arch::GrUnit, cfg).enob
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributions::Distribution;
+    use crate::formats::FpFormat;
+    use crate::mac::{simulate_column, FormatPair};
+    use crate::rng::Pcg64;
+    use crate::stats::ColumnAgg;
+    use crate::util::approx_eq;
+
+    fn agg_for(
+        dist_x: &Distribution,
+        dist_w: &Distribution,
+        fmts: FormatPair,
+        nr: usize,
+        samples: usize,
+        seed: u64,
+    ) -> ColumnAgg {
+        let mut rng = Pcg64::seeded(seed);
+        let mut x = vec![0.0; samples * nr];
+        let mut w = vec![0.0; samples * nr];
+        dist_x.fill(&mut rng, &mut x);
+        dist_w.fill(&mut rng, &mut w);
+        let batch = simulate_column(&x, &w, nr, fmts);
+        let mut agg = ColumnAgg::new(nr);
+        agg.push_batch(&batch);
+        agg
+    }
+
+    fn std_fmts() -> FormatPair {
+        // Fig. 10 setup: x = FP(N_E=3, 2), w = FP4_E2M1
+        FormatPair::new(FpFormat::fp(3, 2), FpFormat::fp4_e2m1())
+    }
+
+    #[test]
+    fn enob_scales_with_margin() {
+        let agg = agg_for(
+            &Distribution::Uniform,
+            &Distribution::max_entropy(FpFormat::fp4_e2m1()),
+            std_fmts(),
+            32,
+            4096,
+            1,
+        );
+        let e6 = required_enob(&agg, Arch::Conventional, SpecConfig::default());
+        let e12 = required_enob(
+            &agg,
+            Arch::Conventional,
+            SpecConfig { margin_db: 12.0, empirical_floor: false },
+        );
+        // +6 dB margin: delta scales by sqrt(10^0.6) -> +0.9966 bits
+        assert!(
+            approx_eq(e12.enob - e6.enob, 0.9966, 1e-3),
+            "{}",
+            e12.enob - e6.enob
+        );
+    }
+
+    #[test]
+    fn gr_requires_less_resolution_than_conventional() {
+        // the paper's core claim, under its own upper bound (uniform)
+        let agg = agg_for(
+            &Distribution::Uniform,
+            &Distribution::max_entropy(FpFormat::fp4_e2m1()),
+            std_fmts(),
+            32,
+            8192,
+            2,
+        );
+        let d = delta_enob(&agg, SpecConfig::default());
+        assert!(d > 1.0, "delta ENOB = {d}");
+    }
+
+    #[test]
+    fn conventional_grows_with_range_for_long_tailed_data() {
+        // under gauss+outliers, each extra exponent bit refines the core's
+        // ulp (the floor drops ~4x per binade) so the conventional
+        // requirement keeps climbing, while GR's referral gain tracks it
+        let mut conv = Vec::new();
+        let mut gr = Vec::new();
+        for n_e in [2u32, 3, 4] {
+            let fmts =
+                FormatPair::new(FpFormat::fp(n_e, 2), FpFormat::fp4_e2m1());
+            let agg = agg_for(
+                &Distribution::gauss_outliers(),
+                &Distribution::max_entropy(FpFormat::fp4_e2m1()),
+                fmts,
+                32,
+                8192,
+                10 + n_e as u64,
+            );
+            let cfg = SpecConfig::default();
+            conv.push(required_enob(&agg, Arch::Conventional, cfg).enob);
+            gr.push(required_enob(&agg, Arch::GrUnit, cfg).enob);
+        }
+        // conventional climbs until the core is fully resolved (~E3 for
+        // the 1/150-sigma core), then plateaus
+        assert!(conv[1] - conv[0] > 1.0, "conv growth {conv:?}");
+        assert!(conv[2] >= conv[1] - 0.2, "conv plateau {conv:?}");
+        // GR grows far less than conventional
+        assert!(gr[2] - gr[0] < 0.5 * (conv[2] - conv[0]), "gr {gr:?}");
+    }
+
+    #[test]
+    fn gr_advantage_explodes_for_llm_stress() {
+        let fmts = FormatPair::new(FpFormat::fp(4, 2), FpFormat::fp4_e2m1());
+        let agg = agg_for(
+            &Distribution::gauss_outliers(),
+            &Distribution::max_entropy(FpFormat::fp4_e2m1()),
+            fmts,
+            32,
+            8192,
+            3,
+        );
+        let d = delta_enob(&agg, SpecConfig::default());
+        assert!(d > 6.0, "delta ENOB = {d}");
+    }
+
+    #[test]
+    fn row_referral_between_unit_and_conventional() {
+        let fmts = std_fmts();
+        let agg = agg_for(
+            &Distribution::clipped_gauss4(),
+            &Distribution::clipped_gauss4(),
+            fmts,
+            32,
+            4096,
+            4,
+        );
+        let cfg = SpecConfig::default();
+        let conv = required_enob(&agg, Arch::Conventional, cfg).enob;
+        let unit = required_enob(&agg, Arch::GrUnit, cfg).enob;
+        let row = required_enob(&agg, Arch::GrRow, cfg).enob;
+        assert!(unit <= row + 1e-9, "unit {unit} row {row}");
+        assert!(row <= conv + 1e-9, "row {row} conv {conv}");
+    }
+
+    #[test]
+    fn enob_grows_with_finer_input_mantissa() {
+        // Fig. 11: ~1 bit per mantissa bit, for both architectures
+        let mut prev_gr = 0.0;
+        let mut prev_conv = 0.0;
+        for n_m in 1..=5 {
+            let fmts =
+                FormatPair::new(FpFormat::fp(3, n_m), FpFormat::fp4_e2m1());
+            let agg = agg_for(
+                &Distribution::Uniform,
+                &Distribution::max_entropy(FpFormat::fp4_e2m1()),
+                fmts,
+                32,
+                4096,
+                20 + n_m as u64,
+            );
+            let cfg = SpecConfig::default();
+            let gr = required_enob(&agg, Arch::GrUnit, cfg).enob;
+            let conv = required_enob(&agg, Arch::Conventional, cfg).enob;
+            if n_m > 1 {
+                assert!(
+                    (0.6..1.4).contains(&(gr - prev_gr)),
+                    "n_m={n_m}: gr step {}",
+                    gr - prev_gr
+                );
+                assert!(
+                    (0.6..1.4).contains(&(conv - prev_conv)),
+                    "n_m={n_m}: conv step {}",
+                    conv - prev_conv
+                );
+            }
+            prev_gr = gr;
+            prev_conv = conv;
+        }
+    }
+
+    #[test]
+    fn int_formats_make_archs_coincide() {
+        // for INT inputs the FP ulp floor equals the INT grid floor and
+        // the unit referral is weight-driven; conventional == gr-int
+        // modulo the weight-side normalization gain
+        let fmts = FormatPair::new(FpFormat::int(6), FpFormat::int(4));
+        let agg = agg_for(
+            &Distribution::Uniform,
+            &Distribution::Uniform,
+            fmts,
+            32,
+            4096,
+            5,
+        );
+        let cfg = SpecConfig::default();
+        let conv = required_enob(&agg, Arch::Conventional, cfg);
+        let gri = required_enob(&agg, Arch::GrInt, cfg);
+        // INT weights too: g_unit == 1 exactly, floors identical
+        assert!(approx_eq(conv.noise_floor, gri.noise_floor, 1e-9));
+        assert!(approx_eq(conv.enob, gri.enob, 1e-6));
+    }
+
+    #[test]
+    fn empirical_floor_close_to_ulp_floor_for_gr() {
+        // with fine weights, the empirical output error approaches the
+        // input-only FP ulp floor used by the GR spec
+        let fmts = FormatPair::new(FpFormat::fp(3, 2), FpFormat::fp(3, 7));
+        let agg = agg_for(
+            &Distribution::Uniform,
+            &Distribution::Uniform,
+            fmts,
+            32,
+            16384,
+            6,
+        );
+        let ul = required_enob(&agg, Arch::GrUnit, SpecConfig::default());
+        let emp = required_enob(
+            &agg,
+            Arch::GrUnit,
+            SpecConfig { margin_db: 6.0, empirical_floor: true },
+        );
+        assert!((ul.enob - emp.enob).abs() < 1.0, "{} vs {}", ul.enob, emp.enob);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty aggregate")]
+    fn rejects_empty_aggregate() {
+        let agg = ColumnAgg::new(32);
+        required_enob(&agg, Arch::Conventional, SpecConfig::default());
+    }
+}

@@ -1,0 +1,352 @@
+//! Streaming statistics: O(1)-memory moment accumulators, histograms, and
+//! the SQNR/N_eff reductions the spec solver and figures consume.
+
+use crate::util::db;
+
+/// Streaming first/second moments (mergeable across worker batches).
+#[derive(Debug, Clone, Default)]
+pub struct Moments {
+    pub n: u64,
+    pub sum: f64,
+    pub sum_sq: f64,
+}
+
+impl Moments {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.sum_sq += x * x;
+    }
+
+    pub fn push_slice(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.push(x);
+        }
+    }
+
+    pub fn merge(&mut self, other: &Moments) {
+        self.n += other.n;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// E[x^2] — the power of the accumulated quantity.
+    pub fn mean_sq(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum_sq / self.n as f64
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        let m = self.mean();
+        (self.mean_sq() - m * m).max(0.0)
+    }
+}
+
+/// Fixed-range histogram (for the Fig. 4 distribution panels).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins], total: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let t = (x - self.lo) / (self.hi - self.lo);
+        let idx = ((t * bins as f64) as isize).clamp(0, bins as isize - 1);
+        self.counts[idx as usize] += 1;
+        self.total += 1;
+    }
+
+    pub fn push_slice(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.push(x);
+        }
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+
+    /// Bin centers.
+    pub fn centers(&self) -> Vec<f64> {
+        let bins = self.counts.len();
+        let w = (self.hi - self.lo) / bins as f64;
+        (0..bins).map(|i| self.lo + (i as f64 + 0.5) * w).collect()
+    }
+
+    /// Normalized densities (sum * bin_width = 1).
+    pub fn density(&self) -> Vec<f64> {
+        let bins = self.counts.len();
+        let w = (self.hi - self.lo) / bins as f64;
+        let norm = (self.total.max(1)) as f64 * w;
+        self.counts.iter().map(|&c| c as f64 / norm).collect()
+    }
+}
+
+/// The full aggregate of one column-simulation experiment: every moment the
+/// ADC spec solver (`spec::`) and the figure harness need, streamed over
+/// Monte-Carlo batches from either engine (PJRT or pure Rust).
+#[derive(Debug, Clone, Default)]
+pub struct ColumnAgg {
+    /// Array depth the samples were produced with.
+    pub nr: usize,
+    /// E[z_ideal^2] — output signal power.
+    pub sig: Moments,
+    /// E[(z_q - z_ideal)^2] — empirical input-quantization noise.
+    pub qerr: Moments,
+    /// E[nf] — FP ulp-based input noise floor (the GR-side ADC spec
+    /// reference).
+    pub nf: Moments,
+    /// E[w_q^2] — conventional INT-grid floor ingredient.
+    pub wq2: Moments,
+    /// E[g_conv^2] — conventional-path ADC noise referral power.
+    pub g_conv: Moments,
+    /// E[(S/NR)^2] — GR unit-normalization referral power.
+    pub g_unit: Moments,
+    /// E[(S_x/NR)^2] — GR row-normalization referral power (weights are
+    /// statically aligned, so only the input factor applies).
+    pub g_row: Moments,
+    /// N_eff = S^2/S2 statistics (paper Sec. III-B2).
+    pub n_eff: Moments,
+    /// ADC-input amplitudes (for signal-power comparisons, Fig. 4).
+    pub v_conv: Moments,
+    pub v_gr: Moments,
+}
+
+/// One batch of per-sample outputs in the artifact's layout (see
+/// `python/compile/kernels/ref.py` for definitions).
+#[derive(Debug, Clone)]
+pub struct ColumnBatch {
+    pub nr: usize,
+    pub z_ideal: Vec<f64>,
+    pub z_q: Vec<f64>,
+    pub v_conv: Vec<f64>,
+    pub g_conv: Vec<f64>,
+    pub v_gr: Vec<f64>,
+    pub s_sum: Vec<f64>,
+    pub s2_sum: Vec<f64>,
+    pub sx_sum: Vec<f64>,
+    pub g_w: Vec<f64>,
+    pub nf: Vec<f64>,
+    pub wq2_mean: Vec<f64>,
+}
+
+impl ColumnBatch {
+    pub fn len(&self) -> usize {
+        self.z_ideal.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.z_ideal.is_empty()
+    }
+}
+
+impl ColumnAgg {
+    pub fn new(nr: usize) -> Self {
+        ColumnAgg { nr, ..Default::default() }
+    }
+
+    pub fn push_batch(&mut self, b: &ColumnBatch) {
+        assert_eq!(self.nr, b.nr, "batch from a different array depth");
+        let nr = b.nr as f64;
+        for i in 0..b.len() {
+            self.sig.push(b.z_ideal[i]);
+            self.qerr.push(b.z_q[i] - b.z_ideal[i]);
+            self.nf.push(b.nf[i]);
+            self.wq2.push(b.wq2_mean[i]);
+            self.g_conv.push(b.g_conv[i]);
+            self.g_unit.push(b.s_sum[i] / nr);
+            self.g_row.push(b.sx_sum[i] / nr);
+            self.n_eff.push(b.s_sum[i] * b.s_sum[i] / b.s2_sum[i]);
+            self.v_conv.push(b.v_conv[i]);
+            self.v_gr.push(b.v_gr[i]);
+        }
+    }
+
+    pub fn merge(&mut self, other: &ColumnAgg) {
+        assert_eq!(self.nr, other.nr);
+        self.sig.merge(&other.sig);
+        self.qerr.merge(&other.qerr);
+        self.nf.merge(&other.nf);
+        self.wq2.merge(&other.wq2);
+        self.g_conv.merge(&other.g_conv);
+        self.g_unit.merge(&other.g_unit);
+        self.g_row.merge(&other.g_row);
+        self.n_eff.merge(&other.n_eff);
+        self.v_conv.merge(&other.v_conv);
+        self.v_gr.merge(&other.v_gr);
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.sig.n
+    }
+
+    /// Global output SQNR (dB): signal power over empirical quantization
+    /// error power (Fig. 9's metric, at the MAC output).
+    pub fn sqnr_db(&self) -> f64 {
+        db(self.sig.mean_sq() / self.qerr.mean_sq().max(1e-300))
+    }
+
+    /// Mean effective number of contributors (paper: N_eff <= NR).
+    pub fn mean_n_eff(&self) -> f64 {
+        self.n_eff.mean()
+    }
+
+    /// GR-over-conventional ADC-input power ratio (Fig. 4's "20x").
+    pub fn signal_power_gain(&self) -> f64 {
+        self.v_gr.mean_sq() / self.v_conv.mean_sq().max(1e-300)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::approx_eq;
+
+    #[test]
+    fn moments_basic() {
+        let mut m = Moments::default();
+        m.push_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.n, 4);
+        assert!(approx_eq(m.mean(), 2.5, 1e-15));
+        assert!(approx_eq(m.mean_sq(), 7.5, 1e-15));
+        assert!(approx_eq(m.variance(), 1.25, 1e-12));
+    }
+
+    #[test]
+    fn moments_merge_equals_concat() {
+        let mut a = Moments::default();
+        let mut b = Moments::default();
+        let mut all = Moments::default();
+        for i in 0..100 {
+            let x = (i as f64).sin();
+            if i % 2 == 0 {
+                a.push(x)
+            } else {
+                b.push(x)
+            }
+            all.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.n, all.n);
+        assert!(approx_eq(a.mean(), all.mean(), 1e-12));
+        assert!(approx_eq(a.mean_sq(), all.mean_sq(), 1e-12));
+    }
+
+    #[test]
+    fn empty_moments_are_zero() {
+        let m = Moments::default();
+        assert_eq!(m.mean(), 0.0);
+        assert_eq!(m.mean_sq(), 0.0);
+        assert_eq!(m.variance(), 0.0);
+    }
+
+    #[test]
+    fn histogram_bins_and_clamping() {
+        let mut h = Histogram::new(-1.0, 1.0, 4);
+        h.push_slice(&[-0.9, -0.1, 0.1, 0.9, 5.0, -5.0]); // outliers clamp
+        assert_eq!(h.total, 6);
+        assert_eq!(h.counts, vec![2, 1, 1, 2]);
+    }
+
+    #[test]
+    fn histogram_density_integrates_to_one() {
+        let mut h = Histogram::new(0.0, 2.0, 10);
+        let mut rng = crate::rng::Pcg64::seeded(3);
+        for _ in 0..10_000 {
+            h.push(rng.uniform_in(0.0, 2.0));
+        }
+        let w = 0.2;
+        let integral: f64 = h.density().iter().map(|d| d * w).sum();
+        assert!(approx_eq(integral, 1.0, 1e-12));
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::new(0.0, 1.0, 2);
+        let mut b = Histogram::new(0.0, 1.0, 2);
+        a.push(0.25);
+        b.push(0.75);
+        a.merge(&b);
+        assert_eq!(a.counts, vec![1, 1]);
+        assert_eq!(a.total, 2);
+    }
+
+    fn tiny_batch() -> ColumnBatch {
+        ColumnBatch {
+            nr: 4,
+            z_ideal: vec![0.1, -0.2],
+            z_q: vec![0.11, -0.19],
+            v_conv: vec![0.4, -0.5],
+            g_conv: vec![1.0, 0.5],
+            v_gr: vec![0.6, -0.7],
+            s_sum: vec![2.0, 4.0],
+            s2_sum: vec![2.0, 4.0],
+            sx_sum: vec![2.0, 3.0],
+            g_w: vec![1.0, 0.5],
+            nf: vec![1e-6, 2e-6],
+            wq2_mean: vec![0.3, 0.4],
+        }
+    }
+
+    #[test]
+    fn column_agg_accumulates() {
+        let mut agg = ColumnAgg::new(4);
+        agg.push_batch(&tiny_batch());
+        assert_eq!(agg.samples(), 2);
+        // N_eff entries: 4/2=2 and 16/4=4 -> mean 3
+        assert!(approx_eq(agg.mean_n_eff(), 3.0, 1e-12));
+        // g_unit mean-sq: (0.5^2 + 1^2)/2
+        assert!(approx_eq(agg.g_unit.mean_sq(), (0.25 + 1.0) / 2.0, 1e-12));
+        // g_row entries: 2/4=0.5, 3/4=0.75
+        assert!(approx_eq(
+            agg.g_row.mean_sq(),
+            (0.25 + 0.5625) / 2.0,
+            1e-12
+        ));
+    }
+
+    #[test]
+    fn column_agg_merge_equals_two_pushes() {
+        let mut a = ColumnAgg::new(4);
+        a.push_batch(&tiny_batch());
+        let mut b = ColumnAgg::new(4);
+        b.push_batch(&tiny_batch());
+        let mut m = ColumnAgg::new(4);
+        m.push_batch(&tiny_batch());
+        m.push_batch(&tiny_batch());
+        a.merge(&b);
+        assert_eq!(a.samples(), m.samples());
+        assert!(approx_eq(a.nf.sum, m.nf.sum, 1e-15));
+    }
+
+    #[test]
+    #[should_panic(expected = "different array depth")]
+    fn column_agg_rejects_mismatched_nr() {
+        let mut agg = ColumnAgg::new(8);
+        agg.push_batch(&tiny_batch());
+    }
+}

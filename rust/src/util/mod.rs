@@ -1,0 +1,175 @@
+//! Small shared utilities: leveled stderr logger, wall-clock timing, and
+//! numeric helpers used across the crate (dB conversions, approximate
+//! comparison). No external deps — the image's vendor set has no `log`
+//! facade implementation.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+/// Log verbosity. Default `Info`; the CLI's `-q`/`-v` flags move it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+pub fn log(lvl: Level, args: std::fmt::Arguments<'_>) {
+    if lvl <= level() {
+        let tag = match lvl {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        };
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(err, "[{tag}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::log($crate::util::Level::Info, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! warn_ {
+    ($($t:tt)*) => { $crate::util::log($crate::util::Level::Warn, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! debug {
+    ($($t:tt)*) => { $crate::util::log($crate::util::Level::Debug, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! error {
+    ($($t:tt)*) => { $crate::util::log($crate::util::Level::Error, format_args!($($t)*)) };
+}
+
+/// Wall-clock scope timer; reports at Debug level on drop.
+pub struct Timer {
+    label: String,
+    start: Instant,
+}
+
+impl Timer {
+    pub fn new(label: impl Into<String>) -> Self {
+        Timer { label: label.into(), start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Drop for Timer {
+    fn drop(&mut self) {
+        log(
+            Level::Debug,
+            format_args!("{}: {:.3}s", self.label, self.elapsed_s()),
+        );
+    }
+}
+
+/// Power ratio -> decibels.
+pub fn db(power_ratio: f64) -> f64 {
+    10.0 * power_ratio.log10()
+}
+
+/// Decibels -> power ratio.
+pub fn from_db(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+/// Relative closeness for test assertions on physical quantities.
+pub fn approx_eq(a: f64, b: f64, rel: f64) -> bool {
+    let scale = a.abs().max(b.abs()).max(1e-300);
+    (a - b).abs() <= rel * scale
+}
+
+/// Mean of a slice (0.0 for empty — callers guard).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population variance of a slice.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn db_round_trip() {
+        for p in [1e-6, 0.5, 1.0, 42.0, 1e9] {
+            assert!(approx_eq(from_db(db(p)), p, 1e-12));
+        }
+    }
+
+    #[test]
+    fn db_of_unity_is_zero() {
+        assert_eq!(db(1.0), 0.0);
+    }
+
+    #[test]
+    fn db_known_values() {
+        assert!(approx_eq(db(10.0), 10.0, 1e-12));
+        assert!(approx_eq(db(100.0), 20.0, 1e-12));
+        assert!(approx_eq(db(2.0), 3.0102999566, 1e-9));
+    }
+
+    #[test]
+    fn mean_and_variance() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!(approx_eq(mean(&xs), 2.5, 1e-15));
+        assert!(approx_eq(variance(&xs), 1.25, 1e-15));
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(variance(&[]), 0.0);
+    }
+
+    #[test]
+    fn approx_eq_relative_semantics() {
+        assert!(approx_eq(1.0, 1.0 + 1e-9, 1e-6));
+        assert!(!approx_eq(1.0, 1.1, 1e-6));
+        assert!(approx_eq(0.0, 0.0, 1e-12));
+    }
+
+    #[test]
+    fn timer_measures_time() {
+        let t = Timer::new("x");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_s() >= 0.004);
+    }
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+}

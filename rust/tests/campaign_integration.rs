@@ -1,0 +1,194 @@
+//! Coordinator integration: campaigns over the PJRT backend, the
+//! auto-fallback path, CLI-level sweep configs, and the e2e NN pipeline.
+
+use grcim::coordinator::{run_campaign, CampaignConfig, ExperimentSpec};
+use grcim::distributions::Distribution;
+use grcim::formats::FpFormat;
+use grcim::mac::FormatPair;
+use grcim::nn::{accuracy, cim_accuracy, make_blobs, CimInference, Mlp};
+use grcim::rng::Pcg64;
+use grcim::runtime::{ArtifactRegistry, EngineKind};
+use grcim::spec::{required_enob, Arch, SpecConfig};
+
+fn have_artifacts() -> bool {
+    ArtifactRegistry::load(&ArtifactRegistry::default_dir()).is_ok()
+}
+
+fn demo_specs() -> Vec<ExperimentSpec> {
+    vec![
+        ExperimentSpec {
+            id: "a".into(),
+            fmts: FormatPair::new(FpFormat::fp6_e3m2(), FpFormat::fp4_e2m1()),
+            dist_x: Distribution::Uniform,
+            dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+            nr: 32,
+            samples: 4096,
+        },
+        ExperimentSpec {
+            id: "b".into(),
+            fmts: FormatPair::new(FpFormat::fp(4, 2), FpFormat::fp4_e2m1()),
+            dist_x: Distribution::gauss_outliers(),
+            dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+            nr: 64,
+            samples: 2048,
+        },
+    ]
+}
+
+#[test]
+fn pjrt_campaign_end_to_end() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let cfg = CampaignConfig {
+        engine: EngineKind::Pjrt,
+        workers: 2,
+        seed: 7,
+        ..Default::default()
+    };
+    let aggs = run_campaign(&demo_specs(), &cfg).unwrap();
+    assert_eq!(aggs.len(), 2);
+    assert_eq!(aggs[0].samples(), 4096);
+    assert_eq!(aggs[1].samples(), 2048);
+    // spec solver produces sane ENOBs from the PJRT-backed aggregates
+    let cfg2 = SpecConfig::default();
+    for agg in &aggs {
+        let conv = required_enob(agg, Arch::Conventional, cfg2).enob;
+        let gr = required_enob(agg, Arch::GrUnit, cfg2).enob;
+        assert!(conv > gr, "conv {conv} gr {gr}");
+        assert!((2.0..20.0).contains(&conv));
+    }
+}
+
+#[test]
+fn pjrt_and_rust_campaigns_agree_on_identical_streams() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let specs = demo_specs();
+    let mk = |engine| CampaignConfig {
+        engine,
+        workers: 3,
+        seed: 99,
+        ..Default::default()
+    };
+    let p = run_campaign(&specs, &mk(EngineKind::Pjrt)).unwrap();
+    let r = run_campaign(&specs, &mk(EngineKind::Rust)).unwrap();
+    for (a, b) in p.iter().zip(&r) {
+        assert_eq!(a.samples(), b.samples());
+        let rel = |x: f64, y: f64| (x - y).abs() / y.abs().max(1e-30);
+        assert!(rel(a.nf.mean(), b.nf.mean()) < 1e-4);
+        assert!(rel(a.g_unit.mean_sq(), b.g_unit.mean_sq()) < 1e-4);
+        assert!(rel(a.mean_n_eff(), b.mean_n_eff()) < 1e-4);
+    }
+}
+
+#[test]
+fn auto_engine_falls_back_when_artifacts_missing() {
+    let cfg = CampaignConfig {
+        engine: EngineKind::Auto,
+        artifacts_dir: std::path::PathBuf::from("/nonexistent/grcim-artifacts"),
+        workers: 1,
+        seed: 1,
+    };
+    let specs = vec![ExperimentSpec {
+        id: "fallback".into(),
+        fmts: FormatPair::new(FpFormat::fp4_e2m1(), FpFormat::fp4_e2m1()),
+        dist_x: Distribution::Uniform,
+        dist_w: Distribution::Uniform,
+        nr: 8,
+        samples: 2048,
+    }];
+    let aggs = run_campaign(&specs, &cfg).unwrap();
+    assert_eq!(aggs[0].samples(), 2048);
+}
+
+#[test]
+fn pjrt_engine_rejects_missing_depth_in_campaign() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let cfg = CampaignConfig {
+        engine: EngineKind::Pjrt,
+        workers: 1,
+        seed: 1,
+        ..Default::default()
+    };
+    let specs = vec![ExperimentSpec {
+        id: "bad-depth".into(),
+        fmts: FormatPair::new(FpFormat::fp4_e2m1(), FpFormat::fp4_e2m1()),
+        dist_x: Distribution::Uniform,
+        dist_w: Distribution::Uniform,
+        nr: 24, // no artifact lowered for this depth
+        samples: 2048,
+    }];
+    assert!(run_campaign(&specs, &cfg).is_err());
+}
+
+#[test]
+fn sweep_config_round_trip() {
+    // the TOML config the `grcim sweep` command consumes
+    let text = r#"
+seed = 5
+samples = 2048
+
+[engine]
+kind = "rust"
+
+[[experiment]]
+name = "fp63-uniform"
+n_e = 3
+n_m = 2
+nr = 32
+distribution = "uniform"
+
+[[experiment]]
+name = "fp42-llm"
+n_e = 4
+n_m = 2
+nr = 32
+distribution = "gauss_outliers"
+"#;
+    let cfg = grcim::config::Config::parse(text).unwrap();
+    assert_eq!(cfg.sections_named("experiment").len(), 2);
+    assert_eq!(
+        cfg.section("engine").unwrap()["kind"].as_str(),
+        Some("rust")
+    );
+}
+
+#[test]
+fn nn_e2e_through_pjrt_tiles() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let engine = grcim::runtime::build_engine(
+        EngineKind::Pjrt,
+        &ArtifactRegistry::default_dir(),
+    )
+    .unwrap();
+    let (xs, ys) = make_blobs(768, 32, 4, 0.3, 3);
+    let mut mlp = Mlp::new(&[32, 32, 4], 1);
+    let mut rng = Pcg64::seeded(2);
+    for _ in 0..25 {
+        mlp.train_epoch(&xs[..512], &ys[..512], 0.05, &mut rng);
+    }
+    let float_acc = accuracy(&mlp, &xs[512..], &ys[512..]);
+    assert!(float_acc > 0.9, "training failed: {float_acc}");
+    let cim = CimInference {
+        fmts: FormatPair::new(FpFormat::fp6_e2m3(), FpFormat::fp6_e2m3()),
+        arch: Arch::GrUnit,
+        enob: 9.0,
+        nr: 32,
+    };
+    let acc = cim_accuracy(&mlp, engine.as_ref(), &cim, &xs[512..], &ys[512..])
+        .unwrap();
+    assert!(
+        acc >= float_acc - 0.05,
+        "pjrt cim accuracy {acc} vs float {float_acc}"
+    );
+}

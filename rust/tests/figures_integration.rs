@@ -1,0 +1,96 @@
+//! Figure harness integration: every generator runs end-to-end in quick
+//! mode, persists its CSVs, and its paper-shape checks hold. (The
+//! heavyweight figures run through the same code in `cargo bench` and via
+//! the CLI; this keeps `cargo test` within a couple of minutes.)
+
+use grcim::figures::{self, FigureCtx};
+use grcim::runtime::EngineKind;
+
+fn ctx(tag: &str) -> FigureCtx {
+    let mut ctx = FigureCtx::default().quick();
+    ctx.campaign.engine = EngineKind::Rust; // deterministic, artifact-free
+    ctx.out_dir = std::env::temp_dir().join(format!("grcim_figtest_{tag}"));
+    let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    ctx
+}
+
+fn run_and_check(id: &str) {
+    let ctx = ctx(id);
+    let fr = figures::run(id, &ctx).unwrap();
+    assert_eq!(fr.name, id);
+    assert!(!fr.tables.is_empty(), "{id}: no tables");
+    assert!(!fr.checks.is_empty(), "{id}: no checks");
+    assert!(fr.all_hold(), "{id}: checks failed: {:#?}", fr.checks);
+    let text = fr.emit(&ctx.out_dir).unwrap();
+    assert!(text.contains(id));
+    // at least one CSV landed
+    let n_csv = std::fs::read_dir(&ctx.out_dir)
+        .unwrap()
+        .filter(|e| {
+            e.as_ref()
+                .unwrap()
+                .path()
+                .extension()
+                .map(|x| x == "csv")
+                .unwrap_or(false)
+        })
+        .count();
+    assert!(n_csv >= 1, "{id}: no CSVs written");
+}
+
+#[test]
+fn fig4_end_to_end() {
+    run_and_check("fig4");
+}
+
+#[test]
+fn table1_end_to_end() {
+    run_and_check("table1");
+}
+
+#[test]
+fn fig8_end_to_end() {
+    run_and_check("fig8");
+}
+
+#[test]
+fn fig9_end_to_end() {
+    run_and_check("fig9");
+}
+
+#[test]
+fn fig10_end_to_end() {
+    run_and_check("fig10");
+}
+
+#[test]
+fn fig11_end_to_end() {
+    run_and_check("fig11");
+}
+
+#[test]
+fn fig12_end_to_end() {
+    run_and_check("fig12");
+}
+
+#[test]
+fn ablations_end_to_end() {
+    run_and_check("ablations");
+}
+
+#[test]
+fn fig10_pjrt_engine_if_available() {
+    // same figure through the PJRT backend must also hold
+    if grcim::runtime::ArtifactRegistry::load(
+        &grcim::runtime::ArtifactRegistry::default_dir(),
+    )
+    .is_err()
+    {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let mut ctx = ctx("fig10_pjrt");
+    ctx.campaign.engine = EngineKind::Pjrt;
+    let fr = figures::run("fig10", &ctx).unwrap();
+    assert!(fr.all_hold(), "{:#?}", fr.checks);
+}

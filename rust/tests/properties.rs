@@ -1,0 +1,289 @@
+//! Property-based invariant suite over the whole stack, driven by the
+//! in-repo `propcheck` kit (no proptest in the vendor set).
+
+use grcim::analog::GrMacCell;
+use grcim::distributions::Distribution;
+use grcim::energy::{energy_per_op, CimArch, TechParams};
+use grcim::formats::FpFormat;
+use grcim::mac::{adc_quantize, simulate_column, FormatPair};
+use grcim::propcheck::{check_simple, ensure};
+use grcim::rng::Pcg64;
+use grcim::spec::{required_enob, Arch, SpecConfig};
+use grcim::stats::ColumnAgg;
+
+fn rand_fmt(rng: &mut Pcg64) -> FpFormat {
+    FpFormat::fp(1 + rng.below(5) as u32, 1 + rng.below(5) as u32)
+}
+
+#[derive(Debug, Clone)]
+struct Case {
+    fmts: FormatPair,
+    nr: usize,
+    x: Vec<f64>,
+    w: Vec<f64>,
+}
+
+fn rand_case(rng: &mut Pcg64) -> Case {
+    let nr = [4usize, 8, 16, 32][rng.below(4) as usize];
+    let b = 8;
+    let fmts = FormatPair::new(rand_fmt(rng), rand_fmt(rng));
+    let dist = match rng.below(3) {
+        0 => Distribution::Uniform,
+        1 => Distribution::clipped_gauss4(),
+        _ => Distribution::gauss_outliers(),
+    };
+    let mut x = vec![0.0; b * nr];
+    let mut w = vec![0.0; b * nr];
+    dist.fill(rng, &mut x);
+    Distribution::Uniform.fill(rng, &mut w);
+    Case { fmts, nr, x, w }
+}
+
+#[test]
+fn prop_linear_chain_identities() {
+    check_simple("linear chain", 101, 150, rand_case, |c| {
+        let b = simulate_column(&c.x, &c.w, c.nr, c.fmts);
+        for i in 0..b.len() {
+            let conv = b.v_conv[i] * b.g_conv[i];
+            let gr = b.v_gr[i] * b.s_sum[i] / c.nr as f64;
+            ensure(
+                (conv - b.z_q[i]).abs() < 1e-9,
+                || format!("conv path sample {i}: {conv} vs {}", b.z_q[i]),
+            )?;
+            ensure(
+                (gr - b.z_q[i]).abs() < 1e-9,
+                || format!("gr path sample {i}: {gr} vs {}", b.z_q[i]),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adc_inputs_and_gains_bounded() {
+    check_simple("bounded signals", 102, 150, rand_case, |c| {
+        let b = simulate_column(&c.x, &c.w, c.nr, c.fmts);
+        for i in 0..b.len() {
+            ensure(b.v_conv[i].abs() <= 1.0 + 1e-12, || "v_conv".into())?;
+            ensure(b.v_gr[i].abs() <= 1.0 + 1e-12, || "v_gr".into())?;
+            ensure(b.g_conv[i] > 0.0 && b.g_conv[i] <= 1.0 + 1e-12, || {
+                "g_conv".into()
+            })?;
+            ensure(
+                b.s_sum[i] > 0.0 && b.s_sum[i] <= c.nr as f64 + 1e-9,
+                || "s_sum".into(),
+            )?;
+            let neff = b.s_sum[i] * b.s_sum[i] / b.s2_sum[i];
+            ensure(
+                (1.0 - 1e-9..=c.nr as f64 + 1e-9).contains(&neff),
+                || format!("n_eff {neff}"),
+            )?;
+            ensure(b.nf[i] >= 0.0, || "nf".into())?;
+            ensure(
+                (0.0..=1.0 + 1e-12).contains(&b.wq2_mean[i]),
+                || "wq2_mean".into(),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantizer_round_trip_under_all_formats() {
+    let mut rng = Pcg64::seeded(103);
+    for _ in 0..40 {
+        let fmt = rand_fmt(&mut rng);
+        check_simple(
+            "quantizer",
+            rng.next_u64(),
+            100,
+            |r| r.uniform_in(-2.0, 2.0),
+            |&x| {
+                let q = fmt.quantize(x);
+                ensure(fmt.quantize(q) == q, || {
+                    format!("{fmt}: not idempotent at {x}")
+                })?;
+                ensure(q.abs() <= fmt.vmax() + 1e-15, || "exceeds vmax".into())?;
+                ensure(
+                    fmt.quantize(-x) == -q,
+                    || format!("{fmt}: not odd at {x}"),
+                )?;
+                if x.abs() < fmt.vmax() {
+                    let err = (q - x).abs();
+                    let lim = 0.5 * fmt.ulp(q.abs()) + 1e-15;
+                    ensure(err <= lim, || {
+                        format!("{fmt}: err {err} > half-ulp {lim} at {x}")
+                    })?;
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_adc_quantize_is_monotone_and_bounded() {
+    check_simple(
+        "adc quantize",
+        104,
+        300,
+        |r| {
+            (
+                r.uniform_in(-1.2, 1.2),
+                r.uniform_in(-1.2, 1.2),
+                1.0 + r.uniform() * 14.0,
+            )
+        },
+        |&(a, b, enob)| {
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            let ql = adc_quantize(lo, enob);
+            let qh = adc_quantize(hi, enob);
+            ensure(ql <= qh, || format!("not monotone at enob {enob}"))?;
+            ensure(ql.abs() <= 1.0 && qh.abs() <= 1.0, || "exceeds FS".into())?;
+            let delta = 2.0 / 2f64.powf(enob);
+            if hi.abs() < 1.0 - delta {
+                ensure(
+                    (qh - hi).abs() <= 0.5 * delta + 1e-12,
+                    || format!("err beyond half-step at enob {enob}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_spec_solver_orderings() {
+    // for any sampled aggregate: unit <= row <= conventional ENOB, and all
+    // finite/positive
+    check_simple("spec ordering", 105, 60, rand_case, |c| {
+        // need enough samples for stable moments
+        let mut rng = Pcg64::seeded(c.nr as u64 + 7);
+        let mut x = vec![0.0; 512 * c.nr];
+        let mut w = vec![0.0; 512 * c.nr];
+        Distribution::clipped_gauss4().fill(&mut rng, &mut x);
+        Distribution::Uniform.fill(&mut rng, &mut w);
+        let b = simulate_column(&x, &w, c.nr, c.fmts);
+        let mut agg = ColumnAgg::new(c.nr);
+        agg.push_batch(&b);
+        let cfg = SpecConfig::default();
+        let conv = required_enob(&agg, Arch::Conventional, cfg).enob;
+        let unit = required_enob(&agg, Arch::GrUnit, cfg).enob;
+        let row = required_enob(&agg, Arch::GrRow, cfg).enob;
+        ensure(conv.is_finite() && unit.is_finite() && row.is_finite(), || {
+            "non-finite enob".into()
+        })?;
+        ensure(unit <= row + 1e-9, || format!("unit {unit} > row {row}"))?;
+        ensure(row <= conv + 1e-9, || format!("row {row} > conv {conv}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_energy_model_monotonicity() {
+    check_simple(
+        "energy monotone",
+        106,
+        200,
+        |r| {
+            (
+                FormatPair::new(rand_fmt(r), rand_fmt(r)),
+                4.0 + r.uniform() * 8.0,
+                [
+                    CimArch::Conventional,
+                    CimArch::GrUnit,
+                    CimArch::GrRow,
+                    CimArch::GrInt,
+                ][r.below(4) as usize],
+            )
+        },
+        |&(fmts, enob, arch)| {
+            let t = TechParams::default();
+            let e1 = energy_per_op(arch, fmts, 32, 32, enob, &t).total();
+            let e2 = energy_per_op(arch, fmts, 32, 32, enob + 1.0, &t).total();
+            ensure(e2 > e1, || format!("{arch:?} not monotone in enob"))?;
+            ensure(e1 > 0.0, || "non-positive energy".into())?;
+            // deeper arrays amortize converters: ADC per-op shrinks
+            let d1 = energy_per_op(arch, fmts, 64, 32, enob, &t);
+            let s1 = energy_per_op(arch, fmts, 32, 32, enob, &t);
+            ensure(d1.adc < s1.adc, || "adc not amortized by depth".into())?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_capnet_cell_linearity_under_random_design() {
+    check_simple(
+        "cell linearity",
+        107,
+        60,
+        |r| {
+            (
+                GrMacCell::design(
+                    3 + r.below(3) as usize,
+                    3 + r.below(2) as usize,
+                    0.5 + r.uniform() * 2.0,
+                    r.uniform() * 1.5,
+                ),
+                r.uniform_in(0.1, 1.0),
+            )
+        },
+        |(cell, v_in)| {
+            for level in 1..=cell.levels() {
+                let q0 = cell.transfer_closed_form(0, level, *v_in);
+                let q1 = cell.transfer_closed_form(1, level, *v_in);
+                let lsb = q1 - q0;
+                ensure(lsb > 0.0, || "non-positive LSB".into())?;
+                for w in [2u64, 3, cell.m_codes() - 1] {
+                    let q = cell.transfer_closed_form(w, level, *v_in);
+                    ensure(
+                        (q - q0 - w as f64 * lsb).abs()
+                            < 1e-9 * q.abs().max(1.0),
+                        || format!("nonlinear at level {level} w {w}"),
+                    )?;
+                }
+            }
+            // octave gains (design is compensated for its own c_p1)
+            let top = cell.m_codes() - 1;
+            for level in 2..=cell.levels() {
+                let r = cell.transfer_closed_form(top, level, *v_in)
+                    / cell.transfer_closed_form(top, level - 1, *v_in);
+                ensure(
+                    (r - 2.0).abs() < 1e-9,
+                    || format!("gain ratio {r} at level {level}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_campaign_seeding_is_scheduling_invariant() {
+    use grcim::coordinator::{run_campaign, CampaignConfig, ExperimentSpec};
+    use grcim::runtime::EngineKind;
+    let spec = ExperimentSpec {
+        id: "prop".into(),
+        fmts: FormatPair::new(FpFormat::fp6_e3m2(), FpFormat::fp4_e2m1()),
+        dist_x: Distribution::Uniform,
+        dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+        nr: 16,
+        samples: 6144,
+    };
+    let mut reference: Option<u64> = None;
+    for workers in [1usize, 2, 5, 9] {
+        let cfg = CampaignConfig {
+            engine: EngineKind::Rust,
+            workers,
+            seed: 1234,
+            ..Default::default()
+        };
+        let aggs = run_campaign(&[spec.clone()], &cfg).unwrap();
+        let bits = aggs[0].nf.sum.to_bits();
+        match reference {
+            None => reference = Some(bits),
+            Some(r) => assert_eq!(r, bits, "workers={workers} changed results"),
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! Integration: the PJRT engine (executing the AOT-lowered Pallas kernel)
+//! must agree with the pure-Rust f64 oracle on every output, across
+//! formats, distributions, and array depths.
+//!
+//! Requires `make artifacts` (skips with a notice otherwise — CI always
+//! builds artifacts first via the Makefile).
+
+use grcim::coordinator::{run_experiment, ExperimentSpec};
+use grcim::distributions::Distribution;
+use grcim::formats::FpFormat;
+use grcim::mac::FormatPair;
+use grcim::rng::Pcg64;
+use grcim::runtime::{ArtifactRegistry, Engine, PjrtEngine, RustEngine};
+
+fn registry() -> Option<ArtifactRegistry> {
+    let dir = ArtifactRegistry::default_dir();
+    match ArtifactRegistry::load(&dir) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts: {e}) — run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn gen_inputs(
+    n: usize,
+    dist_x: &Distribution,
+    dist_w: &Distribution,
+    seed: u64,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg64::seeded(seed);
+    let mut x = vec![0.0f32; n];
+    let mut w = vec![0.0f32; n];
+    dist_x.fill_f32(&mut rng, &mut x);
+    dist_w.fill_f32(&mut rng, &mut w);
+    (x, w)
+}
+
+struct FieldTol {
+    name: &'static str,
+    /// absolute tolerance on per-sample values (f32 artifact vs f64 oracle)
+    abs: f64,
+}
+
+const FIELDS: &[FieldTol] = &[
+    FieldTol { name: "z_ideal", abs: 3e-6 },
+    FieldTol { name: "z_q", abs: 3e-6 },
+    FieldTol { name: "v_conv", abs: 3e-6 },
+    FieldTol { name: "g_conv", abs: 1e-6 },
+    FieldTol { name: "v_gr", abs: 5e-6 },
+    FieldTol { name: "s_sum", abs: 1e-4 },
+    FieldTol { name: "s2_sum", abs: 1e-4 },
+    FieldTol { name: "sx_sum", abs: 1e-4 },
+    FieldTol { name: "g_w", abs: 1e-6 },
+    FieldTol { name: "nf", abs: 1e-9 },
+    FieldTol { name: "wq2_mean", abs: 3e-6 },
+];
+
+fn compare(
+    pjrt: &grcim::stats::ColumnBatch,
+    rust: &grcim::stats::ColumnBatch,
+    ctx: &str,
+) -> usize {
+    let fields_p: [&Vec<f64>; 11] = [
+        &pjrt.z_ideal, &pjrt.z_q, &pjrt.v_conv, &pjrt.g_conv, &pjrt.v_gr,
+        &pjrt.s_sum, &pjrt.s2_sum, &pjrt.sx_sum, &pjrt.g_w, &pjrt.nf,
+        &pjrt.wq2_mean,
+    ];
+    let fields_r: [&Vec<f64>; 11] = [
+        &rust.z_ideal, &rust.z_q, &rust.v_conv, &rust.g_conv, &rust.v_gr,
+        &rust.s_sum, &rust.s2_sum, &rust.sx_sum, &rust.g_w, &rust.nf,
+        &rust.wq2_mean,
+    ];
+    let mut mismatches = 0usize;
+    for ((tol, p), r) in FIELDS.iter().zip(fields_p).zip(fields_r) {
+        assert_eq!(p.len(), r.len(), "{ctx}: length {}", tol.name);
+        for i in 0..p.len() {
+            let scale = r[i].abs().max(1.0);
+            if (p[i] - r[i]).abs() > tol.abs * scale {
+                mismatches += 1;
+                if mismatches < 5 {
+                    eprintln!(
+                        "{ctx}: {}[{i}] pjrt={} rust={} (diff {:.3e})",
+                        tol.name,
+                        p[i],
+                        r[i],
+                        (p[i] - r[i]).abs()
+                    );
+                }
+            }
+        }
+    }
+    mismatches
+}
+
+#[test]
+fn pjrt_matches_rust_oracle_across_formats_and_distributions() {
+    let Some(reg) = registry() else { return };
+    let pjrt = PjrtEngine::from_registry(&reg).expect("compile artifacts");
+    let rust = RustEngine;
+    let nr = 32;
+    let batch = pjrt.preferred_batch(nr);
+
+    let cases: Vec<(FormatPair, Distribution, Distribution, u64)> = vec![
+        (
+            FormatPair::new(FpFormat::fp6_e3m2(), FpFormat::fp4_e2m1()),
+            Distribution::Uniform,
+            Distribution::max_entropy(FpFormat::fp4_e2m1()),
+            1,
+        ),
+        (
+            FormatPair::new(FpFormat::fp(2, 3), FpFormat::fp(2, 3)),
+            Distribution::clipped_gauss4(),
+            Distribution::clipped_gauss4(),
+            2,
+        ),
+        (
+            FormatPair::new(FpFormat::fp(4, 2), FpFormat::fp4_e2m1()),
+            Distribution::gauss_outliers(),
+            Distribution::max_entropy(FpFormat::fp4_e2m1()),
+            3,
+        ),
+        (
+            // fractional format (design-space grid point)
+            FormatPair::new(
+                FpFormat { e_max: 5.5, n_m: 2.25 },
+                FpFormat::fp4_e2m1(),
+            ),
+            Distribution::Uniform,
+            Distribution::Uniform,
+            4,
+        ),
+        (
+            // INT degenerate case
+            FormatPair::new(FpFormat::int(4), FpFormat::int(4)),
+            Distribution::Uniform,
+            Distribution::Uniform,
+            5,
+        ),
+    ];
+
+    for (fmts, dx, dw, seed) in cases {
+        let (x, w) = gen_inputs(batch * nr, &dx, &dw, seed);
+        let bp = pjrt.simulate(&x, &w, nr, fmts).expect("pjrt run");
+        let br = rust.simulate(&x, &w, nr, fmts).expect("rust run");
+        let ctx = format!("fmts={fmts:?} dist={}", dx.name());
+        let bad = compare(&bp, &br, &ctx);
+        let frac = bad as f64 / (11 * batch) as f64;
+        // f32 vs f64 rounding at quantizer decision boundaries can flip a
+        // handful of samples; demand bit-level agreement for 99.9%.
+        assert!(
+            frac < 1e-3,
+            "{ctx}: {bad} mismatched values ({frac:.2e} of outputs)"
+        );
+    }
+}
+
+#[test]
+fn pjrt_supports_all_artifact_depths() {
+    let Some(reg) = registry() else { return };
+    let pjrt = PjrtEngine::from_registry(&reg).expect("compile artifacts");
+    let rust = RustEngine;
+    let fmts = FormatPair::new(FpFormat::fp6_e2m3(), FpFormat::fp6_e2m3());
+    for nr in pjrt.depths() {
+        let batch = pjrt.preferred_batch(nr);
+        let (x, w) = gen_inputs(
+            batch * nr,
+            &Distribution::clipped_gauss4(),
+            &Distribution::clipped_gauss4(),
+            nr as u64,
+        );
+        let bp = pjrt.simulate(&x, &w, nr, fmts).expect("pjrt");
+        let br = rust.simulate(&x, &w, nr, fmts).expect("rust");
+        let bad = compare(&bp, &br, &format!("nr={nr}"));
+        assert!(bad < 11 * batch / 1000 + 5, "nr={nr}: {bad} mismatches");
+    }
+}
+
+#[test]
+fn pjrt_multi_chunk_execution() {
+    let Some(reg) = registry() else { return };
+    let pjrt = PjrtEngine::from_registry(&reg).expect("compile artifacts");
+    let nr = 16;
+    let batch = pjrt.preferred_batch(nr);
+    let fmts = FormatPair::new(FpFormat::fp4_e2m1(), FpFormat::fp4_e2m1());
+    let (x, w) =
+        gen_inputs(3 * batch * nr, &Distribution::Uniform, &Distribution::Uniform, 9);
+    let b = pjrt.simulate(&x, &w, nr, fmts).expect("multi-chunk");
+    assert_eq!(b.len(), 3 * batch);
+    // ragged input rejected
+    assert!(pjrt.simulate(&x[..nr * 7], &w[..nr * 7], nr, fmts).is_err());
+    // unknown depth rejected
+    assert!(pjrt.simulate(&x, &w, 24, fmts).is_err());
+}
+
+#[test]
+fn experiment_aggregates_agree_between_engines() {
+    // campaign-level agreement: aggregate moments from both engines match
+    // to Monte-Carlo-irrelevant precision on identical streams
+    let Some(reg) = registry() else { return };
+    let pjrt = PjrtEngine::from_registry(&reg).expect("compile artifacts");
+    let rust = RustEngine;
+    let spec = ExperimentSpec {
+        id: "xcheck".into(),
+        fmts: FormatPair::new(FpFormat::fp6_e3m2(), FpFormat::fp4_e2m1()),
+        dist_x: Distribution::gauss_outliers(),
+        dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+        nr: 32,
+        samples: 4096,
+    };
+    let ap = run_experiment(&pjrt, &spec, 42).unwrap();
+    let ar = run_experiment(&rust, &spec, 42).unwrap();
+    assert_eq!(ap.samples(), ar.samples());
+    let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-30);
+    assert!(rel(ap.nf.mean(), ar.nf.mean()) < 1e-4);
+    assert!(rel(ap.g_conv.mean_sq(), ar.g_conv.mean_sq()) < 1e-4);
+    assert!(rel(ap.g_unit.mean_sq(), ar.g_unit.mean_sq()) < 1e-4);
+    assert!(rel(ap.mean_n_eff(), ar.mean_n_eff()) < 1e-4);
+    // and the spec solver lands on the same ENOB from either engine
+    let cfg = grcim::spec::SpecConfig::default();
+    for arch in [
+        grcim::spec::Arch::Conventional,
+        grcim::spec::Arch::GrUnit,
+        grcim::spec::Arch::GrRow,
+    ] {
+        let ep = grcim::spec::required_enob(&ap, arch, cfg).enob;
+        let er = grcim::spec::required_enob(&ar, arch, cfg).enob;
+        assert!((ep - er).abs() < 1e-3, "{arch:?}: {ep} vs {er}");
+    }
+}

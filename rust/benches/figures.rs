@@ -40,7 +40,9 @@ fn main() {
     });
 
     // end-to-end anchor: one fig10 sweep at full default samples via the
-    // PJRT engine when artifacts exist (the production configuration)
+    // PJRT engine when compiled in (--features pjrt) and artifacts exist
+    // (the production configuration)
+    #[cfg(feature = "pjrt")]
     if grcim::runtime::ArtifactRegistry::load(
         &grcim::runtime::ArtifactRegistry::default_dir(),
     )

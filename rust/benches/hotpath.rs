@@ -1,16 +1,58 @@
 //! `cargo bench --bench hotpath` — micro/meso benchmarks of the hot paths
-//! the §Perf pass optimizes: the pure-Rust MC engine, the PJRT engine
-//! (artifact execution), the quantizer, campaign scheduling overhead, the
-//! analog solver, and the NN e2e tile path. Throughputs are in MAC
+//! the §Perf pass optimizes: the pure-Rust MC engine (allocating and
+//! chunked allocation-free variants), the PJRT engine when compiled in
+//! (`--features pjrt`) and artifacts exist, the quantizer, campaign
+//! scheduling overhead, the analog solver. Throughputs are in MAC
 //! samples/s (one sample = one NR-deep column MAC).
+//!
+//! The run is persisted to `BENCH_hotpath.json` (override the path with
+//! `GRCIM_BENCH_JSON=...`) via the in-repo benchkit JSON schema, so the
+//! perf trajectory is comparable across PRs.
+//!
+//! A counting global allocator verifies the chunked `simulate_column_into`
+//! path performs **zero** heap allocations per batch in steady state.
 
 use grcim::benchkit::Bench;
-use grcim::coordinator::{run_campaign, CampaignConfig, ExperimentSpec};
+use grcim::coordinator::{
+    run_campaign, CampaignConfig, ExperimentSpec, JobBuffers,
+};
 use grcim::distributions::Distribution;
 use grcim::formats::FpFormat;
-use grcim::mac::{simulate_column, FormatPair};
+use grcim::mac::{simulate_column, simulate_column_into, FormatPair};
 use grcim::rng::Pcg64;
-use grcim::runtime::{ArtifactRegistry, Engine, EngineKind, PjrtEngine, RustEngine};
+use grcim::runtime::{Engine, EngineKind, RustEngine, SimScratch};
+use grcim::stats::ColumnBatch;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counts heap allocations so the zero-allocation claim of the chunked
+/// path is measured, not assumed.
+struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOC_COUNT.load(Ordering::Relaxed)
+}
 
 fn main() {
     let mut b = Bench::new();
@@ -37,10 +79,34 @@ fn main() {
         std::hint::black_box(acc);
     });
 
-    // pure-Rust engine, single batch
+    // pure-Rust engine, single batch (allocating baseline)
     b.run_items("engine/rust_simulate_2048x32", 10, batch, || {
         std::hint::black_box(simulate_column(&xf, &wf, nr, fmts));
     });
+
+    // chunked allocation-free path: same math through a reused batch
+    let mut out = ColumnBatch::empty(nr);
+    simulate_column_into(&xf, &wf, nr, fmts, &mut out); // warm capacities
+    b.run_items("engine/rust_simulate_into_2048x32", 10, batch, || {
+        simulate_column_into(&xf, &wf, nr, fmts, &mut out);
+        std::hint::black_box(out.len());
+    });
+
+    // measured zero-allocation guarantee of the steady-state inner loop
+    let inner_batches = 5u64;
+    let before = allocs();
+    for _ in 0..inner_batches {
+        simulate_column_into(&xf, &wf, nr, fmts, &mut out);
+    }
+    let delta = allocs() - before;
+    println!(
+        "engine/rust_simulate_into_2048x32: {delta} heap allocations over \
+         {inner_batches} steady-state batches"
+    );
+    assert_eq!(
+        delta, 0,
+        "chunked simulate_column_into must not allocate in steady state"
+    );
 
     // engine trait path (includes f32->f64 conversion)
     let re = RustEngine;
@@ -50,27 +116,60 @@ fn main() {
         std::hint::black_box(re.simulate(&x32, &w32, nr, fmts).unwrap());
     });
 
-    // PJRT engine (the production path)
-    if let Ok(reg) = ArtifactRegistry::load(&ArtifactRegistry::default_dir()) {
-        let pjrt = PjrtEngine::from_registry(&reg).unwrap();
-        b.run_items("engine/pjrt_simulate_2048x32", 10, batch, || {
-            std::hint::black_box(pjrt.simulate(&x32, &w32, nr, fmts).unwrap());
-        });
-        for depth in [16usize, 64, 128] {
-            if pjrt.supports_nr(depth) {
-                let n = batch * depth;
-                let xd = vec![0.25f32; n];
-                let wd = vec![0.5f32; n];
-                b.run_items(
-                    &format!("engine/pjrt_simulate_2048x{depth}"),
-                    5,
-                    batch,
-                    || {
+    // trait buffered path: reusable scratch + batch, also allocation-free
+    let mut scratch = SimScratch::default();
+    re.simulate_into(&x32, &w32, nr, fmts, &mut scratch, &mut out).unwrap();
+    b.run_items("engine/rust_trait_into_2048x32", 10, batch, || {
+        re.simulate_into(&x32, &w32, nr, fmts, &mut scratch, &mut out)
+            .unwrap();
+        std::hint::black_box(out.len());
+    });
+    let before = allocs();
+    for _ in 0..inner_batches {
+        re.simulate_into(&x32, &w32, nr, fmts, &mut scratch, &mut out)
+            .unwrap();
+    }
+    let delta = allocs() - before;
+    println!(
+        "engine/rust_trait_into_2048x32: {delta} heap allocations over \
+         {inner_batches} steady-state batches"
+    );
+    assert_eq!(delta, 0, "trait simulate_into must not allocate in steady state");
+
+    // PJRT engine (the production path, --features pjrt + artifacts)
+    #[cfg(feature = "pjrt")]
+    {
+        use grcim::runtime::{ArtifactRegistry, PjrtEngine};
+        if let Ok(reg) =
+            ArtifactRegistry::load(&ArtifactRegistry::default_dir())
+        {
+            match PjrtEngine::from_registry(&reg) {
+                Ok(pjrt) => {
+                    b.run_items("engine/pjrt_simulate_2048x32", 10, batch, || {
                         std::hint::black_box(
-                            pjrt.simulate(&xd, &wd, depth, fmts).unwrap(),
+                            pjrt.simulate(&x32, &w32, nr, fmts).unwrap(),
                         );
-                    },
-                );
+                    });
+                    for depth in [16usize, 64, 128] {
+                        if pjrt.supports_nr(depth) {
+                            let n = batch * depth;
+                            let xd = vec![0.25f32; n];
+                            let wd = vec![0.5f32; n];
+                            b.run_items(
+                                &format!("engine/pjrt_simulate_2048x{depth}"),
+                                5,
+                                batch,
+                                || {
+                                    std::hint::black_box(
+                                        pjrt.simulate(&xd, &wd, depth, fmts)
+                                            .unwrap(),
+                                    );
+                                },
+                            );
+                        }
+                    }
+                }
+                Err(e) => eprintln!("pjrt benches skipped: {e}"),
             }
         }
     }
@@ -95,6 +194,19 @@ fn main() {
         std::hint::black_box(run_campaign(&[spec.clone()], &cfg).unwrap());
     });
 
+    // single worker-style buffered job loop (what each pool thread runs)
+    let mut bufs = JobBuffers::default();
+    grcim::coordinator::run_job_buffered(&re, &spec, 3, 0, 0, batch, &mut bufs)
+        .unwrap();
+    b.run_items("coordinator/job_buffered_2048x32", 10, batch, || {
+        std::hint::black_box(
+            grcim::coordinator::run_job_buffered(
+                &re, &spec, 3, 0, 1, batch, &mut bufs,
+            )
+            .unwrap(),
+        );
+    });
+
     // analog substrate: full mismatch MC of Fig. 8
     let cell = grcim::analog::GrMacCell::fp6_e2m3_schematic();
     b.run_items("analog/mismatch_mc_1000", 5, 1000, || {
@@ -114,4 +226,29 @@ fn main() {
     });
 
     b.finish();
+
+    // Persist the run. The default baseline path is only written by full,
+    // unfiltered runs so a quick smoke or a name-filtered run never
+    // clobbers the committed perf trajectory; set GRCIM_BENCH_JSON to
+    // force a write anywhere.
+    let explicit = std::env::var("GRCIM_BENCH_JSON").ok();
+    let quick = std::env::var("GRCIM_BENCH_QUICK").is_ok();
+    let filtered = std::env::args()
+        .skip(1)
+        .any(|a| !a.starts_with('-') && a != "--bench");
+    let path = match explicit {
+        Some(p) => p,
+        None if quick || filtered => {
+            println!(
+                "not writing BENCH_hotpath.json (quick/filtered run); \
+                 set GRCIM_BENCH_JSON=path to record this run"
+            );
+            return;
+        }
+        None => "BENCH_hotpath.json".to_string(),
+    };
+    match b.save_json(std::path::Path::new(&path)) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

@@ -3,8 +3,13 @@
 //!
 //! Methodology: warmup, then `reps` timed repetitions of the closure;
 //! reports min / median / mean wall time per repetition. Throughput-style
-//! benches pass an items count to get items/s.
+//! benches pass an items count to get items/s. [`Bench::save_json`]
+//! persists the run (e.g. `BENCH_hotpath.json`) so successive PRs can
+//! track the perf trajectory.
 
+use crate::config::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::Instant;
 
 /// One measured benchmark.
@@ -131,6 +136,43 @@ impl Bench {
             if self.quick { "quick" } else { "full" }
         );
     }
+
+    /// Serialize all measurements as JSON (stable schema for the perf
+    /// trajectory files, e.g. `BENCH_hotpath.json`).
+    pub fn to_json(&self) -> Json {
+        let measurements: Vec<Json> = self
+            .measurements
+            .iter()
+            .map(|m| {
+                let mut o = BTreeMap::new();
+                o.insert("name".to_string(), Json::Str(m.name.clone()));
+                o.insert("reps".to_string(), Json::Num(m.reps as f64));
+                o.insert("min_s".to_string(), Json::Num(m.min_s));
+                o.insert("median_s".to_string(), Json::Num(m.median_s));
+                o.insert("mean_s".to_string(), Json::Num(m.mean_s));
+                o.insert(
+                    "items_per_s".to_string(),
+                    match m.throughput {
+                        Some(v) => Json::Num(v),
+                        None => Json::Null,
+                    },
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert(
+            "mode".to_string(),
+            Json::Str(if self.quick { "quick" } else { "full" }.to_string()),
+        );
+        root.insert("measurements".to_string(), Json::Arr(measurements));
+        Json::Obj(root)
+    }
+
+    /// Write the JSON report to `path`.
+    pub fn save_json(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
 }
 
 #[cfg(test)]
@@ -165,6 +207,29 @@ mod tests {
         assert!(b.measurements.is_empty());
         b.run("has_xyz_inside", 2, || {});
         assert_eq!(b.measurements.len(), 1);
+    }
+
+    #[test]
+    fn json_export_round_trips() {
+        let b = Bench {
+            measurements: vec![Measurement {
+                name: "m".into(),
+                reps: 3,
+                min_s: 0.001,
+                median_s: 0.002,
+                mean_s: 0.002,
+                throughput: Some(1000.0),
+            }],
+            quick: true,
+            filter: None,
+        };
+        let j = b.to_json();
+        let again = Json::parse(&j.to_string()).unwrap();
+        let ms = again.get("measurements").unwrap().items();
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].get("name").unwrap().as_str(), Some("m"));
+        assert_eq!(ms[0].get("items_per_s").unwrap().as_f64(), Some(1000.0));
+        assert_eq!(again.get("mode").unwrap().as_str(), Some("quick"));
     }
 
     #[test]

@@ -351,4 +351,70 @@ mod tests {
         let j = Json::parse("\"héllo → ∑\"").unwrap();
         assert_eq!(j.as_str(), Some("héllo → ∑"));
     }
+
+    /// parse -> serialize -> parse must be a fixed point.
+    fn assert_round_trip(text: &str) -> Json {
+        let j = Json::parse(text).unwrap_or_else(|e| panic!("{text}: {e}"));
+        let emitted = j.to_string();
+        let again = Json::parse(&emitted)
+            .unwrap_or_else(|e| panic!("re-parse of {emitted}: {e}"));
+        assert_eq!(j, again, "round trip of {text} via {emitted}");
+        // serialization itself must also be a fixed point
+        assert_eq!(emitted, again.to_string());
+        again
+    }
+
+    #[test]
+    fn round_trip_escapes() {
+        assert_round_trip(r#""line\nbreak\ttab \"quoted\" back\\slash""#);
+        assert_round_trip(r#""solidus \/ bs \b ff \f cr \r""#);
+        // control characters survive via \uXXXX
+        let j = assert_round_trip("\"\\u0001\\u001f\"");
+        assert_eq!(j, Json::Str("\u{1}\u{1f}".into()));
+        // non-ASCII passthrough
+        assert_round_trip("\"héllo → ∑ 漢字\"");
+        // escaped object keys
+        assert_round_trip(r#"{"a\nb":1,"c\"d":[true,"\\"]}"#);
+    }
+
+    #[test]
+    fn round_trip_nested_arrays() {
+        assert_round_trip("[[[[1],[2,[3,[]]]],[]],[null,[true,[false]]]]");
+        let j = assert_round_trip(r#"{"grid":[[1,2],[3,4],[[5],[6,7]]]}"#);
+        let grid = j.get("grid").unwrap();
+        assert_eq!(grid.items()[2].items()[1].items()[1].as_f64(), Some(7.0));
+    }
+
+    #[test]
+    fn round_trip_number_edge_cases() {
+        for text in [
+            "0",
+            "-1",
+            "0.1",
+            "-2.5e-5",
+            "1e-308",
+            "1.7976931348623157e308",
+            "2.2250738585072014e-308",
+            "9007199254740991",
+            "1e15",
+            "123456789.123456789",
+            "6.02",
+            "1e+16",
+        ] {
+            let j = assert_round_trip(text);
+            // value preserved exactly against the reference parse
+            assert_eq!(j.as_f64(), Some(text.parse::<f64>().unwrap()), "{text}");
+        }
+        // integer-valued floats below 1e15 serialize without exponent and
+        // re-parse to the same value
+        assert_eq!(Json::Num(2048.0).to_string(), "2048");
+        assert_eq!(Json::parse("2.048e3").unwrap(), Json::Num(2048.0));
+    }
+
+    #[test]
+    fn round_trip_mixed_document() {
+        assert_round_trip(
+            r#"{"_tol":1e-9,"values":{"a":1.5,"b":[0.25,-3,"x"],"c":null,"d":{"e":false}}}"#,
+        );
+    }
 }

@@ -17,8 +17,8 @@ pub mod pool;
 use crate::distributions::Distribution;
 use crate::mac::FormatPair;
 use crate::rng::{job_seed, Pcg64};
-use crate::runtime::{build_engine, Engine, EngineKind};
-use crate::stats::ColumnAgg;
+use crate::runtime::{build_engine, Engine, EngineKind, SimScratch};
+use crate::stats::{ColumnAgg, ColumnBatch};
 use anyhow::{Context, Result};
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -69,7 +69,64 @@ impl CampaignConfig {
     }
 }
 
-/// Generate one job's inputs and run it on an engine.
+/// Reusable per-worker buffers for the allocation-free job path: the f32
+/// input slabs, the engine's widening scratch, and one [`ColumnBatch`]
+/// that every chunk is simulated into. After the first job at a given
+/// shape, running further jobs performs no heap allocation in the hot loop
+/// (verified by `cargo bench --bench hotpath`).
+#[derive(Debug, Default)]
+pub struct JobBuffers {
+    x: Vec<f32>,
+    w: Vec<f32>,
+    scratch: SimScratch,
+    batch: ColumnBatch,
+}
+
+/// Generate one job's inputs into `bufs` and stream it through the engine
+/// in chunks of the engine's preferred batch, merging the per-sample
+/// statistics into one [`ColumnAgg`].
+///
+/// Results are bit-identical to [`run_job`] for any chunking: the RNG
+/// fills the whole job's `x` then `w` up front (the seeding contract), and
+/// aggregation is per-sample in order, so chunk boundaries are invisible.
+pub fn run_job_buffered(
+    engine: &dyn Engine,
+    spec: &ExperimentSpec,
+    campaign_seed: u64,
+    spec_idx: u64,
+    batch_idx: u64,
+    batch_samples: usize,
+    bufs: &mut JobBuffers,
+) -> Result<ColumnAgg> {
+    let mut rng = Pcg64::seeded(job_seed(campaign_seed, spec_idx, batch_idx));
+    let n = batch_samples * spec.nr;
+    bufs.x.resize(n, 0.0);
+    bufs.w.resize(n, 0.0);
+    spec.dist_x.fill_f32(&mut rng, &mut bufs.x);
+    spec.dist_w.fill_f32(&mut rng, &mut bufs.w);
+    let mut agg = ColumnAgg::new(spec.nr);
+    let chunk = engine.preferred_batch(spec.nr).max(1) * spec.nr;
+    let mut lo = 0usize;
+    while lo < n {
+        let hi = (lo + chunk).min(n);
+        engine
+            .simulate_into(
+                &bufs.x[lo..hi],
+                &bufs.w[lo..hi],
+                spec.nr,
+                spec.fmts,
+                &mut bufs.scratch,
+                &mut bufs.batch,
+            )
+            .with_context(|| format!("job {}/{batch_idx}", spec.id))?;
+        agg.push_batch(&bufs.batch);
+        lo = hi;
+    }
+    Ok(agg)
+}
+
+/// Generate one job's inputs and run it on an engine (allocating
+/// convenience wrapper over [`run_job_buffered`]).
 pub fn run_job(
     engine: &dyn Engine,
     spec: &ExperimentSpec,
@@ -78,22 +135,21 @@ pub fn run_job(
     batch_idx: u64,
     batch_samples: usize,
 ) -> Result<ColumnAgg> {
-    let mut rng = Pcg64::seeded(job_seed(campaign_seed, spec_idx, batch_idx));
-    let n = batch_samples * spec.nr;
-    let mut x = vec![0.0f32; n];
-    let mut w = vec![0.0f32; n];
-    spec.dist_x.fill_f32(&mut rng, &mut x);
-    spec.dist_w.fill_f32(&mut rng, &mut w);
-    let batch = engine
-        .simulate(&x, &w, spec.nr, spec.fmts)
-        .with_context(|| format!("job {}/{batch_idx}", spec.id))?;
-    let mut agg = ColumnAgg::new(spec.nr);
-    agg.push_batch(&batch);
-    Ok(agg)
+    let mut bufs = JobBuffers::default();
+    run_job_buffered(
+        engine,
+        spec,
+        campaign_seed,
+        spec_idx,
+        batch_idx,
+        batch_samples,
+        &mut bufs,
+    )
 }
 
 /// Run a whole experiment on one engine (single-threaded convenience used
-/// by tests and small figures).
+/// by tests and small figures). Buffers are reused across the experiment's
+/// jobs.
 pub fn run_experiment(
     engine: &dyn Engine,
     spec: &ExperimentSpec,
@@ -102,8 +158,17 @@ pub fn run_experiment(
     let batch = engine.preferred_batch(spec.nr);
     let jobs = spec.samples.div_ceil(batch);
     let mut agg = ColumnAgg::new(spec.nr);
+    let mut bufs = JobBuffers::default();
     for j in 0..jobs {
-        agg.merge(&run_job(engine, spec, campaign_seed, 0, j as u64, batch)?);
+        agg.merge(&run_job_buffered(
+            engine,
+            spec,
+            campaign_seed,
+            0,
+            j as u64,
+            batch,
+            &mut bufs,
+        )?);
     }
     Ok(agg)
 }
@@ -142,15 +207,20 @@ pub fn run_campaign(
         move || {
             let engine = build_engine(engine_kind, &artifacts)?;
             let specs = Arc::clone(&specs_for_worker);
+            // per-worker reusable buffers: every job this worker pulls is
+            // chunked through the same slabs + ColumnBatch, so the hot
+            // loop is allocation-free after the first job
+            let mut bufs = JobBuffers::default();
             Ok(move |job: pool::Job| -> Result<(usize, ColumnAgg)> {
                 let spec = &specs[job.spec_idx];
-                let agg = run_job(
+                let agg = run_job_buffered(
                     engine.as_ref(),
                     spec,
                     seed,
                     job.spec_idx as u64,
                     job.batch_idx,
                     JOB_BATCH,
+                    &mut bufs,
                 )?;
                 Ok((job.spec_idx, agg))
             })
@@ -259,5 +329,61 @@ mod tests {
     fn empty_campaign_is_fine() {
         let cfg = CampaignConfig::default();
         assert!(run_campaign(&[], &cfg).unwrap().is_empty());
+    }
+
+    #[test]
+    fn buffered_jobs_reuse_is_bit_identical() {
+        let e = RustEngine;
+        let mut bufs = JobBuffers::default();
+        // run two different shapes through the same buffers; each must
+        // match a fresh allocating run exactly
+        let s32 = spec(256);
+        let mut s8 = spec(128);
+        s8.nr = 8;
+        for (sp, bi) in [(&s32, 0u64), (&s8, 1), (&s32, 2)] {
+            let reused =
+                run_job_buffered(&e, sp, 11, 0, bi, 128, &mut bufs).unwrap();
+            let fresh = run_job(&e, sp, 11, 0, bi, 128).unwrap();
+            assert_eq!(reused.samples(), fresh.samples());
+            assert_eq!(reused.nf.sum.to_bits(), fresh.nf.sum.to_bits());
+            assert_eq!(reused.sig.sum_sq.to_bits(), fresh.sig.sum_sq.to_bits());
+            assert_eq!(
+                reused.n_eff.sum.to_bits(),
+                fresh.n_eff.sum.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn chunking_does_not_change_job_results() {
+        // a job larger than the engine's preferred batch is split into
+        // chunks internally; the aggregate must not depend on that split
+        struct SmallBatch;
+        impl crate::runtime::Engine for SmallBatch {
+            fn simulate(
+                &self,
+                x: &[f32],
+                w: &[f32],
+                nr: usize,
+                fmts: crate::mac::FormatPair,
+            ) -> anyhow::Result<crate::stats::ColumnBatch> {
+                RustEngine.simulate(x, w, nr, fmts)
+            }
+            fn preferred_batch(&self, _nr: usize) -> usize {
+                7 // force many ragged-looking chunks
+            }
+            fn supports_nr(&self, _nr: usize) -> bool {
+                true
+            }
+            fn name(&self) -> &'static str {
+                "small"
+            }
+        }
+        let sp = spec(64);
+        let whole = run_job(&RustEngine, &sp, 3, 0, 0, 64).unwrap();
+        let chunked = run_job(&SmallBatch, &sp, 3, 0, 0, 64).unwrap();
+        assert_eq!(whole.samples(), chunked.samples());
+        assert_eq!(whole.nf.sum.to_bits(), chunked.nf.sum.to_bits());
+        assert_eq!(whole.qerr.sum_sq.to_bits(), chunked.qerr.sum_sq.to_bits());
     }
 }

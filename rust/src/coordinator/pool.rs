@@ -3,9 +3,12 @@
 //! thread-per-worker pool with a shared job queue is the right shape).
 //!
 //! Each worker constructs its own job-processing closure through a factory
-//! (this is where per-thread PJRT engines are built), pulls jobs from the
-//! shared queue, and streams results back over a channel. The first error
-//! aborts the pool (remaining jobs are drained and dropped).
+//! (this is where per-thread engines and their reusable
+//! `coordinator::JobBuffers` are built — each worker chunks every job it
+//! pulls through the same buffers, so the MC hot loop is allocation-free),
+//! pulls jobs from the shared queue, and streams results back over a
+//! channel. The first error aborts the pool (remaining jobs are drained
+//! and dropped).
 
 use anyhow::{Context, Result};
 use std::sync::mpsc;

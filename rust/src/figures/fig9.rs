@@ -64,6 +64,39 @@ fn fmt_for(n_e: u32) -> FpFormat {
     }
 }
 
+/// The Fig. 9 series at exact f64 precision: for each `n_e` in
+/// [`N_E_RANGE`], the element-level SQNR (dB) under
+/// `[uniform, max_entropy, gauss_outliers, gauss_outliers_core]`.
+/// Public so the golden regression suite (`rust/tests/golden.rs`) can pin
+/// the values without going through formatted report tables.
+pub fn sqnr_series(samples: usize, seed: u64) -> Vec<[f64; 4]> {
+    N_E_RANGE
+        .map(|n_e| {
+            let fmt = fmt_for(n_e);
+            let uni = sqnr_db(
+                fmt,
+                &Distribution::Uniform,
+                samples,
+                seed + 1,
+                false,
+                false,
+            );
+            let me = sqnr_db(
+                fmt,
+                &Distribution::max_entropy(fmt),
+                samples,
+                seed + 2,
+                false,
+                true,
+            );
+            let go = Distribution::gauss_outliers();
+            let go_all = sqnr_db(fmt, &go, samples, seed + 3, false, false);
+            let go_core = sqnr_db(fmt, &go, samples, seed + 3, true, false);
+            [uni, me, go_all, go_core]
+        })
+        .collect()
+}
+
 pub fn run(ctx: &FigureCtx) -> Result<FigureResult> {
     let samples = ctx.samples.max(16_384);
     let seed = ctx.campaign.seed ^ 0xF19;
@@ -75,21 +108,9 @@ pub fn run(ctx: &FigureCtx) -> Result<FigureResult> {
         &["n_e", "uniform", "max_entropy", "gauss_outliers", "gauss_outliers_core", "ceiling"],
     );
 
-    let mut series: Vec<[f64; 4]> = Vec::new();
-    for n_e in N_E_RANGE {
-        let fmt = fmt_for(n_e);
-        let uni = sqnr_db(fmt, &Distribution::Uniform, samples, seed + 1, false, false);
-        let me = sqnr_db(
-            fmt,
-            &Distribution::max_entropy(fmt),
-            samples,
-            seed + 2,
-            false,
-            true,
-        );
-        let go = Distribution::gauss_outliers();
-        let go_all = sqnr_db(fmt, &go, samples, seed + 3, false, false);
-        let go_core = sqnr_db(fmt, &go, samples, seed + 3, true, false);
+    let series = sqnr_series(samples, seed);
+    for (i, n_e) in N_E_RANGE.enumerate() {
+        let [uni, me, go_all, go_core] = series[i];
         t.row(vec![
             n_e.to_string(),
             Table::f(uni),
@@ -98,7 +119,6 @@ pub fn run(ctx: &FigureCtx) -> Result<FigureResult> {
             Table::f(go_core),
             Table::f(ceiling),
         ]);
-        series.push([uni, me, go_all, go_core]);
     }
     fr.tables.push(t);
 

@@ -4,24 +4,30 @@
 //! with Local Normalization"* (Rojkov et al., 2026) as a three-layer
 //! Rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the simulation-campaign coordinator, the PJRT
-//!   runtime that executes AOT-lowered HLO artifacts, and every substrate
-//!   the paper's analysis depends on: FP format arithmetic, workload
-//!   distribution generators, a capacitive-network circuit solver with
-//!   Pelgrom mismatch Monte Carlo, the paper's Table II/III energy models,
-//!   the ADC ENOB requirement solver, and the figure/table regeneration
-//!   harness.
+//! * **L3 (this crate)** — the simulation-campaign coordinator, the
+//!   multi-backend [`runtime`] (pure-Rust oracle by default; a PJRT engine
+//!   executing AOT-lowered HLO artifacts behind the `pjrt` cargo feature),
+//!   and every substrate the paper's analysis depends on: FP format
+//!   arithmetic, workload distribution generators, a capacitive-network
+//!   circuit solver with Pelgrom mismatch Monte Carlo, the paper's
+//!   Table II/III energy models, the ADC ENOB requirement solver, and the
+//!   figure/table regeneration harness.
 //! * **L2 (python/compile/model.py)** — the JAX signal-chain graph, lowered
 //!   once to HLO text (`artifacts/*.hlo.txt`).
 //! * **L1 (python/compile/kernels/grmac.py)** — the fused Pallas Monte-Carlo
 //!   kernel inside that graph.
 //!
-//! Python never runs at campaign time: the `grcim` binary is self-contained
-//! once `make artifacts` has produced the HLO artifacts.
+//! The **default build is self-contained**: no artifacts, no Python, no
+//! native XLA toolchain — every campaign, figure, test, and bench runs on
+//! the deterministic [`mac::simulate_column`] oracle. Builds with
+//! `--features pjrt` additionally compile the PJRT path, which executes
+//! `artifacts/*.hlo.txt` when present (lowered once by
+//! `python/compile/aot.py`) and falls back to the oracle otherwise.
 //!
 //! Entry points: the [`coordinator`] runs sweep campaigns over the
 //! [`runtime`] engines; [`figures`] regenerates every table and figure of
-//! the paper's evaluation; `examples/` shows the public API.
+//! the paper's evaluation; `examples/` shows the public API; the golden
+//! regression suite (`rust/tests/golden.rs`) pins exact campaign numbers.
 
 pub mod analog;
 pub mod benchkit;

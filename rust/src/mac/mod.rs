@@ -41,7 +41,27 @@ impl FormatPair {
 /// Simulate a batch of column MACs. `x` and `w` are row-major `[b][nr]`
 /// raw (pre-quantization) values; returns the ten per-sample statistics in
 /// the artifact's layout (see `kernels/ref.py` for definitions).
+///
+/// Allocates a fresh [`ColumnBatch`] per call; hot loops should hold one
+/// batch and call [`simulate_column_into`] instead.
 pub fn simulate_column(x: &[f64], w: &[f64], nr: usize, fmts: FormatPair) -> ColumnBatch {
+    let mut out = ColumnBatch::empty(nr);
+    simulate_column_into(x, w, nr, fmts, &mut out);
+    out
+}
+
+/// Allocation-free form of [`simulate_column`]: resets `out` (keeping its
+/// vector capacities) and fills it with the batch's per-sample statistics.
+/// After the first call at a given batch size, subsequent calls perform no
+/// heap allocation — the coordinator's chunked job path reuses one batch
+/// per worker (see `coordinator::JobBuffers`).
+pub fn simulate_column_into(
+    x: &[f64],
+    w: &[f64],
+    nr: usize,
+    fmts: FormatPair,
+    out: &mut ColumnBatch,
+) {
     assert_eq!(x.len(), w.len());
     assert!(nr > 0 && x.len() % nr == 0);
     let b = x.len() / nr;
@@ -49,20 +69,8 @@ pub fn simulate_column(x: &[f64], w: &[f64], nr: usize, fmts: FormatPair) -> Col
     let fw = fmts.w;
     let stx = fx.step();
 
-    let mut out = ColumnBatch {
-        nr,
-        z_ideal: Vec::with_capacity(b),
-        z_q: Vec::with_capacity(b),
-        v_conv: Vec::with_capacity(b),
-        g_conv: Vec::with_capacity(b),
-        v_gr: Vec::with_capacity(b),
-        s_sum: Vec::with_capacity(b),
-        s2_sum: Vec::with_capacity(b),
-        sx_sum: Vec::with_capacity(b),
-        g_w: Vec::with_capacity(b),
-        nf: Vec::with_capacity(b),
-        wq2_mean: Vec::with_capacity(b),
-    };
+    out.reset(nr);
+    out.reserve(b);
 
     // Single fused pass per sample (§Perf iteration 1): `quantize_parts`
     // folds quantize + decompose into one log2; the per-value scale
@@ -126,7 +134,6 @@ pub fn simulate_column(x: &[f64], w: &[f64], nr: usize, fmts: FormatPair) -> Col
         out.nf.push(nf);
         out.wq2_mean.push(wq2 / nr as f64);
     }
-    out
 }
 
 /// Apply an ideal mid-rise ADC of the given ENOB over full scale [-1, 1]
@@ -316,5 +323,33 @@ mod tests {
     #[should_panic]
     fn rejects_ragged_input() {
         simulate_column(&[0.0; 33], &[0.0; 33], 32, fp63());
+    }
+
+    #[test]
+    fn simulate_into_reused_batch_matches_fresh_batch() {
+        let (x1, w1) = rand_case(21, 96, 32);
+        let (x2, w2) = rand_case(22, 16, 8);
+        let mut reused = crate::stats::ColumnBatch::empty(32);
+        // first fill at one shape, then reuse at another: results must be
+        // bit-identical to fresh simulate_column calls
+        simulate_column_into(&x1, &w1, 32, fp63(), &mut reused);
+        let fresh1 = simulate_column(&x1, &w1, 32, fp63());
+        assert_eq!(reused.len(), fresh1.len());
+        for i in 0..fresh1.len() {
+            assert_eq!(reused.z_q[i].to_bits(), fresh1.z_q[i].to_bits());
+            assert_eq!(reused.nf[i].to_bits(), fresh1.nf[i].to_bits());
+        }
+        let fmts = FormatPair::new(FpFormat::fp4_e2m1(), FpFormat::fp4_e2m1());
+        simulate_column_into(&x2, &w2, 8, fmts, &mut reused);
+        let fresh2 = simulate_column(&x2, &w2, 8, fmts);
+        assert_eq!(reused.nr, 8);
+        assert_eq!(reused.len(), fresh2.len());
+        for i in 0..fresh2.len() {
+            assert_eq!(reused.v_gr[i].to_bits(), fresh2.v_gr[i].to_bits());
+            assert_eq!(
+                reused.s_sum[i].to_bits(),
+                fresh2.s_sum[i].to_bits()
+            );
+        }
     }
 }

@@ -5,11 +5,15 @@
 //!   figures   regenerate paper tables/figures (--fig all|fig4|...|table1)
 //!   energy    query the energy model at one (DR, SQNR) spec point
 //!   validate  cross-check the PJRT artifacts against the Rust oracle
+//!             (needs a build with `--features pjrt`)
 //!   info      show artifact registry + engine status
 //!   sweep     run a campaign described by a TOML config
 //!
 //! Common flags: --engine rust|pjrt|auto, --artifacts DIR, --out DIR,
 //! --samples N, --seed N, --workers N, --quick, --verbose, --quiet.
+//!
+//! The default build is self-contained: every command runs on the pure-
+//! Rust oracle with no artifacts present (`--engine auto` falls back).
 
 use anyhow::{bail, Context, Result};
 use grcim::cli::Args;
@@ -34,7 +38,7 @@ COMMANDS:
              --fig all|fig4|table1|fig8|fig9|fig10|fig11|fig12|ablations
              --out results --samples 65536 --quick
   energy     energy model at a spec point: --dr <dB> --sqnr <dB>
-  validate   PJRT artifacts vs the pure-Rust oracle
+  validate   PJRT artifacts vs the pure-Rust oracle (--features pjrt builds)
   sweep      run a TOML campaign: grcim sweep <config.toml>
   info       artifact + engine status
 
@@ -142,6 +146,15 @@ fn cmd_energy(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_validate(_args: &Args) -> Result<()> {
+    bail!(
+        "validate cross-checks the PJRT backend, which is not compiled in — \
+         rebuild with `cargo build --release --features pjrt`"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_validate(args: &Args) -> Result<()> {
     args.ensure_known(&["artifacts", "samples", "seed"])?;
     let dir = PathBuf::from(args.get_or(
@@ -196,10 +209,13 @@ fn cmd_info(args: &Args) -> Result<()> {
                     e.file, e.graph, e.nr, e.batch
                 );
             }
+            #[cfg(feature = "pjrt")]
             match grcim::runtime::PjrtEngine::from_registry(&reg) {
                 Ok(p) => println!("pjrt: ok ({})", p.platform()),
                 Err(e) => println!("pjrt: UNAVAILABLE ({e})"),
             }
+            #[cfg(not(feature = "pjrt"))]
+            println!("pjrt: not compiled in (build with --features pjrt)");
         }
         Err(e) => println!("artifacts: none ({e}); rust engine only"),
     }

@@ -2,27 +2,47 @@
 //!
 //! Two interchangeable backends implement [`Engine`]:
 //!
-//! * [`PjrtEngine`] — loads the AOT artifacts (`artifacts/*.hlo.txt`,
-//!   lowered once by `python/compile/aot.py`), compiles them on the PJRT
-//!   CPU client via the `xla` crate, and executes them with f32 literals.
-//!   This is the production path: Python never runs here.
 //! * [`RustEngine`] — the pure-Rust f64 oracle (`mac::simulate_column`);
-//!   bit-compatible semantics, used for cross-checking, for array depths
-//!   with no artifact, and as a no-artifact fallback.
+//!   always available, deterministic, and the default backend. This is the
+//!   self-contained path: no artifacts, no native toolchain.
+//! * `PjrtEngine` (behind the `pjrt` cargo feature) — loads AOT artifacts
+//!   (`artifacts/*.hlo.txt`, lowered once by `python/compile/aot.py`),
+//!   compiles them on the PJRT CPU client via the `xla` crate, and executes
+//!   them with f32 literals. Bit-compatible semantics are cross-checked in
+//!   `rust/tests/runtime_crosscheck.rs`.
+//!
+//! Backend selection goes through [`EngineKind`] + [`build_engine`]:
+//! `Auto` prefers PJRT when the feature is compiled in *and* artifacts are
+//! present, and falls back to [`RustEngine`] otherwise, so default builds
+//! run everything end-to-end without artifacts.
 //!
 //! HLO **text** is the interchange format (not serialized protos): jax
 //! >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
-//! the text parser reassigns ids (see /opt/xla-example/README.md).
+//! the text parser reassigns ids.
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+mod rust_engine;
 
 pub use artifact::{ArtifactEntry, ArtifactRegistry};
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtEngine;
+pub use rust_engine::RustEngine;
 
-use crate::mac::{self, FormatPair};
+use crate::mac::FormatPair;
 use crate::stats::ColumnBatch;
-use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use anyhow::Result;
 use std::path::Path;
+
+/// Reusable engine-internal temporaries for the allocation-free
+/// [`Engine::simulate_into`] path (e.g. the Rust oracle's f32 -> f64
+/// widening buffers). One scratch per worker, reused across jobs.
+#[derive(Debug, Default)]
+pub struct SimScratch {
+    pub xf: Vec<f64>,
+    pub wf: Vec<f64>,
+}
 
 /// A backend able to run the column simulation.
 pub trait Engine {
@@ -31,6 +51,24 @@ pub trait Engine {
     /// multiple of their preferred batch (see [`Engine::preferred_batch`]).
     fn simulate(&self, x: &[f32], w: &[f32], nr: usize, fmts: FormatPair)
         -> Result<ColumnBatch>;
+
+    /// Like [`Engine::simulate`], but writes into a caller-owned batch and
+    /// uses caller-owned scratch, so steady-state loops do not allocate.
+    /// The default implementation falls back to [`Engine::simulate`];
+    /// backends with a native buffer-reuse path override it.
+    fn simulate_into(
+        &self,
+        x: &[f32],
+        w: &[f32],
+        nr: usize,
+        fmts: FormatPair,
+        scratch: &mut SimScratch,
+        out: &mut ColumnBatch,
+    ) -> Result<()> {
+        let _ = scratch;
+        *out = self.simulate(x, w, nr, fmts)?;
+        Ok(())
+    }
 
     /// The batch size this engine executes natively (callers should chunk
     /// work into multiples of this).
@@ -42,184 +80,13 @@ pub trait Engine {
     fn name(&self) -> &'static str;
 }
 
-/// Pure-Rust oracle backend.
-#[derive(Debug, Default, Clone)]
-pub struct RustEngine;
-
-impl Engine for RustEngine {
-    fn simulate(&self, x: &[f32], w: &[f32], nr: usize, fmts: FormatPair)
-        -> Result<ColumnBatch> {
-        if x.len() != w.len() || nr == 0 || x.len() % nr != 0 {
-            bail!("ragged input: x={} w={} nr={}", x.len(), w.len(), nr);
-        }
-        let xf: Vec<f64> = x.iter().map(|&v| v as f64).collect();
-        let wf: Vec<f64> = w.iter().map(|&v| v as f64).collect();
-        Ok(mac::simulate_column(&xf, &wf, nr, fmts))
-    }
-
-    fn preferred_batch(&self, _nr: usize) -> usize {
-        2048
-    }
-
-    fn supports_nr(&self, _nr: usize) -> bool {
-        true
-    }
-
-    fn name(&self) -> &'static str {
-        "rust"
-    }
-}
-
-/// PJRT-backed engine: one compiled executable per array depth.
-pub struct PjrtEngine {
-    client: xla::PjRtClient,
-    /// nr -> (executable, batch)
-    execs: HashMap<usize, (xla::PjRtLoadedExecutable, usize)>,
-}
-
-impl PjrtEngine {
-    /// Load and compile every `macsim` artifact in the registry.
-    pub fn from_registry(reg: &ArtifactRegistry) -> Result<Self> {
-        Self::from_entries(reg.root(), &reg.macsim_entries())
-    }
-
-    /// Load and compile a specific set of artifact entries.
-    pub fn from_entries(root: &Path, entries: &[&ArtifactEntry]) -> Result<Self> {
-        if entries.is_empty() {
-            bail!("no artifacts to load — run `make artifacts` first");
-        }
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
-        let mut execs = HashMap::new();
-        for entry in entries {
-            let path = root.join(&entry.file);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
-            execs.insert(entry.nr, (exe, entry.batch));
-        }
-        Ok(PjrtEngine { client, execs })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn depths(&self) -> Vec<usize> {
-        let mut d: Vec<usize> = self.execs.keys().copied().collect();
-        d.sort();
-        d
-    }
-
-    fn run_one(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        x: &[f32],
-        w: &[f32],
-        b: usize,
-        nr: usize,
-        fmts: FormatPair,
-    ) -> Result<Vec<Vec<f64>>> {
-        let xl = xla::Literal::vec1(x)
-            .reshape(&[b as i64, nr as i64])
-            .map_err(|e| anyhow::anyhow!("reshape x: {e}"))?;
-        let wl = xla::Literal::vec1(w)
-            .reshape(&[b as i64, nr as i64])
-            .map_err(|e| anyhow::anyhow!("reshape w: {e}"))?;
-        let fmtl = xla::Literal::vec1(&fmts.to_vec4()[..]);
-        let result = exe
-            .execute::<xla::Literal>(&[xl, wl, fmtl])
-            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
-        let parts = lit
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
-        if parts.len() != artifact::N_OUTPUTS {
-            bail!("expected {} outputs, got {}", artifact::N_OUTPUTS, parts.len());
-        }
-        parts
-            .into_iter()
-            .map(|p| {
-                let v: Vec<f32> = p
-                    .to_vec::<f32>()
-                    .map_err(|e| anyhow::anyhow!("output to_vec: {e}"))?;
-                if v.len() != b {
-                    bail!("output length {} != batch {b}", v.len());
-                }
-                Ok(v.into_iter().map(|f| f as f64).collect())
-            })
-            .collect()
-    }
-}
-
-impl Engine for PjrtEngine {
-    fn simulate(&self, x: &[f32], w: &[f32], nr: usize, fmts: FormatPair)
-        -> Result<ColumnBatch> {
-        let (exe, batch) = self
-            .execs
-            .get(&nr)
-            .with_context(|| format!("no artifact for NR={nr}"))?;
-        if x.len() != w.len() || x.len() % (nr * batch) != 0 {
-            bail!(
-                "PJRT engine needs multiples of batch {} x nr {} (got {})",
-                batch,
-                nr,
-                x.len()
-            );
-        }
-        let chunks = x.len() / (nr * batch);
-        let mut outs: Vec<Vec<f64>> = vec![Vec::new(); artifact::N_OUTPUTS];
-        for c in 0..chunks {
-            let lo = c * batch * nr;
-            let hi = lo + batch * nr;
-            let parts =
-                self.run_one(exe, &x[lo..hi], &w[lo..hi], *batch, nr, fmts)?;
-            for (acc, part) in outs.iter_mut().zip(parts) {
-                acc.extend(part);
-            }
-        }
-        let mut it = outs.into_iter();
-        Ok(ColumnBatch {
-            nr,
-            z_ideal: it.next().unwrap(),
-            z_q: it.next().unwrap(),
-            v_conv: it.next().unwrap(),
-            g_conv: it.next().unwrap(),
-            v_gr: it.next().unwrap(),
-            s_sum: it.next().unwrap(),
-            s2_sum: it.next().unwrap(),
-            sx_sum: it.next().unwrap(),
-            g_w: it.next().unwrap(),
-            nf: it.next().unwrap(),
-            wq2_mean: it.next().unwrap(),
-        })
-    }
-
-    fn preferred_batch(&self, nr: usize) -> usize {
-        self.execs.get(&nr).map(|(_, b)| *b).unwrap_or(2048)
-    }
-
-    fn supports_nr(&self, nr: usize) -> bool {
-        self.execs.contains_key(&nr)
-    }
-
-    fn name(&self) -> &'static str {
-        "pjrt"
-    }
-}
-
 /// Which backend a campaign should use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
     Rust,
     Pjrt,
-    /// Prefer PJRT, fall back to Rust when artifacts are missing or the
-    /// requested depth has no artifact.
+    /// Prefer PJRT, fall back to Rust when the backend is not compiled in,
+    /// artifacts are missing, or the requested depth has no artifact.
     Auto,
 }
 
@@ -229,60 +96,65 @@ impl EngineKind {
             "rust" => Ok(EngineKind::Rust),
             "pjrt" => Ok(EngineKind::Pjrt),
             "auto" => Ok(EngineKind::Auto),
-            _ => bail!("unknown engine '{s}' (rust|pjrt|auto)"),
+            _ => anyhow::bail!("unknown engine '{s}' (rust|pjrt|auto)"),
         }
     }
 }
 
 /// Build an engine for a worker thread. PJRT wrapper types are not `Send`,
 /// so each worker constructs its own engine through this factory.
+///
+/// Without the `pjrt` cargo feature, `Auto` silently resolves to
+/// [`RustEngine`] and an explicit `Pjrt` request is an error.
 pub fn build_engine(kind: EngineKind, artifacts_dir: &Path) -> Result<Box<dyn Engine>> {
     match kind {
         EngineKind::Rust => Ok(Box::new(RustEngine)),
         EngineKind::Pjrt => {
-            let reg = ArtifactRegistry::load(artifacts_dir)?;
-            Ok(Box::new(PjrtEngine::from_registry(&reg)?))
-        }
-        EngineKind::Auto => match ArtifactRegistry::load(artifacts_dir) {
-            Ok(reg) => match PjrtEngine::from_registry(&reg) {
-                Ok(e) => Ok(Box::new(e)),
-                Err(err) => {
-                    crate::warn_!("PJRT unavailable ({err}); using rust engine");
-                    Ok(Box::new(RustEngine))
-                }
-            },
-            Err(err) => {
-                crate::warn_!("no artifacts ({err}); using rust engine");
-                Ok(Box::new(RustEngine))
+            #[cfg(feature = "pjrt")]
+            {
+                let reg = ArtifactRegistry::load(artifacts_dir)?;
+                Ok(Box::new(PjrtEngine::from_registry(&reg)?))
             }
-        },
+            #[cfg(not(feature = "pjrt"))]
+            {
+                let _ = artifacts_dir;
+                anyhow::bail!(
+                    "this binary was built without the `pjrt` feature — \
+                     rebuild with `cargo build --features pjrt`, or use \
+                     --engine rust|auto"
+                )
+            }
+        }
+        EngineKind::Auto => {
+            #[cfg(feature = "pjrt")]
+            {
+                match ArtifactRegistry::load(artifacts_dir) {
+                    Ok(reg) => match PjrtEngine::from_registry(&reg) {
+                        Ok(e) => return Ok(Box::new(e)),
+                        Err(err) => {
+                            crate::warn_!(
+                                "PJRT unavailable ({err}); using rust engine"
+                            );
+                        }
+                    },
+                    Err(err) => {
+                        crate::warn_!("no artifacts ({err}); using rust engine");
+                    }
+                }
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                let _ = artifacts_dir;
+                crate::debug!("pjrt feature not compiled in; using rust engine");
+            }
+            Ok(Box::new(RustEngine))
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::formats::FpFormat;
-
-    #[test]
-    fn rust_engine_basic() {
-        let e = RustEngine;
-        let fmts = FormatPair::new(FpFormat::fp6_e3m2(), FpFormat::fp4_e2m1());
-        let x = vec![0.5f32; 64];
-        let w = vec![0.25f32; 64];
-        let b = e.simulate(&x, &w, 32, fmts).unwrap();
-        assert_eq!(b.len(), 2);
-        assert!(e.supports_nr(7));
-        assert_eq!(e.name(), "rust");
-    }
-
-    #[test]
-    fn rust_engine_rejects_ragged() {
-        let e = RustEngine;
-        let fmts = FormatPair::new(FpFormat::fp4_e2m1(), FpFormat::fp4_e2m1());
-        assert!(e.simulate(&[0.0; 33], &[0.0; 33], 32, fmts).is_err());
-        assert!(e.simulate(&[0.0; 32], &[0.0; 64], 32, fmts).is_err());
-    }
 
     #[test]
     fn engine_kind_parses() {
@@ -290,5 +162,32 @@ mod tests {
         assert_eq!(EngineKind::parse("pjrt").unwrap(), EngineKind::Pjrt);
         assert_eq!(EngineKind::parse("auto").unwrap(), EngineKind::Auto);
         assert!(EngineKind::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn auto_engine_always_builds() {
+        let e = build_engine(
+            EngineKind::Auto,
+            Path::new("/nonexistent/grcim-artifacts"),
+        )
+        .unwrap();
+        // with no artifacts the auto path must resolve to the oracle
+        assert_eq!(e.name(), "rust");
+    }
+
+    #[test]
+    fn rust_engine_kind_builds_rust() {
+        let e = build_engine(EngineKind::Rust, Path::new(".")).unwrap();
+        assert_eq!(e.name(), "rust");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_kind_errors_without_feature() {
+        let err = build_engine(EngineKind::Pjrt, Path::new("."))
+            .err()
+            .expect("must fail without the pjrt feature")
+            .to_string();
+        assert!(err.contains("pjrt"), "{err}");
     }
 }

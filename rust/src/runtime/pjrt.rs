@@ -1,0 +1,158 @@
+//! PJRT-backed engine (behind the `pjrt` cargo feature): compiles the AOT
+//! artifacts (`artifacts/*.hlo.txt`) on the PJRT CPU client via the `xla`
+//! crate and executes them with f32 literals. This is the production path
+//! when a native XLA toolchain is vendored; the default build ships an
+//! offline `xla` API stub (see `rust/xla-stub/`) so this module always
+//! compiles but reports a clear runtime error until the real bindings are
+//! wired in.
+
+use super::artifact::{self, ArtifactEntry, ArtifactRegistry};
+use super::Engine;
+use crate::mac::FormatPair;
+use crate::stats::ColumnBatch;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// PJRT-backed engine: one compiled executable per array depth.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    /// nr -> (executable, batch)
+    execs: HashMap<usize, (xla::PjRtLoadedExecutable, usize)>,
+}
+
+impl PjrtEngine {
+    /// Load and compile every `macsim` artifact in the registry.
+    pub fn from_registry(reg: &ArtifactRegistry) -> Result<Self> {
+        Self::from_entries(reg.root(), &reg.macsim_entries())
+    }
+
+    /// Load and compile a specific set of artifact entries.
+    pub fn from_entries(root: &Path, entries: &[&ArtifactEntry]) -> Result<Self> {
+        if entries.is_empty() {
+            bail!("no artifacts to load — regenerate them with python/compile/aot.py");
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+        let mut execs = HashMap::new();
+        for entry in entries {
+            let path = root.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
+            execs.insert(entry.nr, (exe, entry.batch));
+        }
+        Ok(PjrtEngine { client, execs })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn depths(&self) -> Vec<usize> {
+        let mut d: Vec<usize> = self.execs.keys().copied().collect();
+        d.sort();
+        d
+    }
+
+    fn run_one(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        x: &[f32],
+        w: &[f32],
+        b: usize,
+        nr: usize,
+        fmts: FormatPair,
+    ) -> Result<Vec<Vec<f64>>> {
+        let xl = xla::Literal::vec1(x)
+            .reshape(&[b as i64, nr as i64])
+            .map_err(|e| anyhow::anyhow!("reshape x: {e}"))?;
+        let wl = xla::Literal::vec1(w)
+            .reshape(&[b as i64, nr as i64])
+            .map_err(|e| anyhow::anyhow!("reshape w: {e}"))?;
+        let fmtl = xla::Literal::vec1(&fmts.to_vec4()[..]);
+        let result = exe
+            .execute::<xla::Literal>(&[xl, wl, fmtl])
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+        if parts.len() != artifact::N_OUTPUTS {
+            bail!("expected {} outputs, got {}", artifact::N_OUTPUTS, parts.len());
+        }
+        parts
+            .into_iter()
+            .map(|p| {
+                let v: Vec<f32> = p
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("output to_vec: {e}"))?;
+                if v.len() != b {
+                    bail!("output length {} != batch {b}", v.len());
+                }
+                Ok(v.into_iter().map(|f| f as f64).collect())
+            })
+            .collect()
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn simulate(&self, x: &[f32], w: &[f32], nr: usize, fmts: FormatPair)
+        -> Result<ColumnBatch> {
+        let (exe, batch) = self
+            .execs
+            .get(&nr)
+            .with_context(|| format!("no artifact for NR={nr}"))?;
+        if x.len() != w.len() || x.len() % (nr * batch) != 0 {
+            bail!(
+                "PJRT engine needs multiples of batch {} x nr {} (got {})",
+                batch,
+                nr,
+                x.len()
+            );
+        }
+        let chunks = x.len() / (nr * batch);
+        let mut outs: Vec<Vec<f64>> = vec![Vec::new(); artifact::N_OUTPUTS];
+        for c in 0..chunks {
+            let lo = c * batch * nr;
+            let hi = lo + batch * nr;
+            let parts =
+                self.run_one(exe, &x[lo..hi], &w[lo..hi], *batch, nr, fmts)?;
+            for (acc, part) in outs.iter_mut().zip(parts) {
+                acc.extend(part);
+            }
+        }
+        let mut it = outs.into_iter();
+        Ok(ColumnBatch {
+            nr,
+            z_ideal: it.next().unwrap(),
+            z_q: it.next().unwrap(),
+            v_conv: it.next().unwrap(),
+            g_conv: it.next().unwrap(),
+            v_gr: it.next().unwrap(),
+            s_sum: it.next().unwrap(),
+            s2_sum: it.next().unwrap(),
+            sx_sum: it.next().unwrap(),
+            g_w: it.next().unwrap(),
+            nf: it.next().unwrap(),
+            wq2_mean: it.next().unwrap(),
+        })
+    }
+
+    fn preferred_batch(&self, nr: usize) -> usize {
+        self.execs.get(&nr).map(|(_, b)| *b).unwrap_or(2048)
+    }
+
+    fn supports_nr(&self, nr: usize) -> bool {
+        self.execs.contains_key(&nr)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,102 @@
+//! The pure-Rust oracle backend: f64 semantics, always available, and the
+//! reference the PJRT artifact path is cross-checked against.
+
+use super::{Engine, SimScratch};
+use crate::mac::{self, FormatPair};
+use crate::stats::ColumnBatch;
+use anyhow::{bail, Result};
+
+/// Pure-Rust oracle backend.
+#[derive(Debug, Default, Clone)]
+pub struct RustEngine;
+
+impl Engine for RustEngine {
+    fn simulate(&self, x: &[f32], w: &[f32], nr: usize, fmts: FormatPair)
+        -> Result<ColumnBatch> {
+        let mut scratch = SimScratch::default();
+        let mut out = ColumnBatch::empty(nr);
+        self.simulate_into(x, w, nr, fmts, &mut scratch, &mut out)?;
+        Ok(out)
+    }
+
+    fn simulate_into(
+        &self,
+        x: &[f32],
+        w: &[f32],
+        nr: usize,
+        fmts: FormatPair,
+        scratch: &mut SimScratch,
+        out: &mut ColumnBatch,
+    ) -> Result<()> {
+        if x.len() != w.len() || nr == 0 || x.len() % nr != 0 {
+            bail!("ragged input: x={} w={} nr={}", x.len(), w.len(), nr);
+        }
+        scratch.xf.clear();
+        scratch.xf.extend(x.iter().map(|&v| v as f64));
+        scratch.wf.clear();
+        scratch.wf.extend(w.iter().map(|&v| v as f64));
+        mac::simulate_column_into(&scratch.xf, &scratch.wf, nr, fmts, out);
+        Ok(())
+    }
+
+    fn preferred_batch(&self, _nr: usize) -> usize {
+        2048
+    }
+
+    fn supports_nr(&self, _nr: usize) -> bool {
+        true
+    }
+
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::FpFormat;
+
+    #[test]
+    fn rust_engine_basic() {
+        let e = RustEngine;
+        let fmts = FormatPair::new(FpFormat::fp6_e3m2(), FpFormat::fp4_e2m1());
+        let x = vec![0.5f32; 64];
+        let w = vec![0.25f32; 64];
+        let b = e.simulate(&x, &w, 32, fmts).unwrap();
+        assert_eq!(b.len(), 2);
+        assert!(e.supports_nr(7));
+        assert_eq!(e.name(), "rust");
+    }
+
+    #[test]
+    fn rust_engine_rejects_ragged() {
+        let e = RustEngine;
+        let fmts = FormatPair::new(FpFormat::fp4_e2m1(), FpFormat::fp4_e2m1());
+        assert!(e.simulate(&[0.0; 33], &[0.0; 33], 32, fmts).is_err());
+        assert!(e.simulate(&[0.0; 32], &[0.0; 64], 32, fmts).is_err());
+    }
+
+    #[test]
+    fn simulate_into_matches_simulate_bitwise() {
+        let e = RustEngine;
+        let fmts = FormatPair::new(FpFormat::fp6_e3m2(), FpFormat::fp4_e2m1());
+        let mut rng = crate::rng::Pcg64::seeded(31);
+        let mut x = vec![0.0f32; 8 * 32];
+        let mut w = vec![0.0f32; 8 * 32];
+        crate::distributions::Distribution::Uniform.fill_f32(&mut rng, &mut x);
+        crate::distributions::Distribution::Uniform.fill_f32(&mut rng, &mut w);
+        let fresh = e.simulate(&x, &w, 32, fmts).unwrap();
+        let mut scratch = SimScratch::default();
+        let mut reused = ColumnBatch::empty(32);
+        // run twice to exercise the reuse path
+        e.simulate_into(&x, &w, 32, fmts, &mut scratch, &mut reused).unwrap();
+        e.simulate_into(&x, &w, 32, fmts, &mut scratch, &mut reused).unwrap();
+        assert_eq!(fresh.len(), reused.len());
+        for i in 0..fresh.len() {
+            assert_eq!(fresh.z_q[i].to_bits(), reused.z_q[i].to_bits());
+            assert_eq!(fresh.v_gr[i].to_bits(), reused.v_gr[i].to_bits());
+            assert_eq!(fresh.nf[i].to_bits(), reused.nf[i].to_bits());
+        }
+    }
+}

@@ -138,7 +138,12 @@ pub struct ColumnAgg {
 
 /// One batch of per-sample outputs in the artifact's layout (see
 /// `python/compile/kernels/ref.py` for definitions).
-#[derive(Debug, Clone)]
+///
+/// Batches are designed for reuse: [`ColumnBatch::reset`] clears the
+/// per-sample vectors while keeping their heap capacity, so the chunked
+/// simulation path (`mac::simulate_column_into`) runs allocation-free in
+/// steady state.
+#[derive(Debug, Clone, Default)]
 pub struct ColumnBatch {
     pub nr: usize,
     pub z_ideal: Vec<f64>,
@@ -155,12 +160,49 @@ pub struct ColumnBatch {
 }
 
 impl ColumnBatch {
+    /// A batch with no samples for array depth `nr` (no allocation yet).
+    pub fn empty(nr: usize) -> Self {
+        ColumnBatch { nr, ..Default::default() }
+    }
+
     pub fn len(&self) -> usize {
         self.z_ideal.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.z_ideal.is_empty()
+    }
+
+    /// Re-target the batch to array depth `nr` and drop all samples,
+    /// keeping every vector's capacity for reuse.
+    pub fn reset(&mut self, nr: usize) {
+        self.nr = nr;
+        self.z_ideal.clear();
+        self.z_q.clear();
+        self.v_conv.clear();
+        self.g_conv.clear();
+        self.v_gr.clear();
+        self.s_sum.clear();
+        self.s2_sum.clear();
+        self.sx_sum.clear();
+        self.g_w.clear();
+        self.nf.clear();
+        self.wq2_mean.clear();
+    }
+
+    /// Reserve room for `additional` more samples in every field.
+    pub fn reserve(&mut self, additional: usize) {
+        self.z_ideal.reserve(additional);
+        self.z_q.reserve(additional);
+        self.v_conv.reserve(additional);
+        self.g_conv.reserve(additional);
+        self.v_gr.reserve(additional);
+        self.s_sum.reserve(additional);
+        self.s2_sum.reserve(additional);
+        self.sx_sum.reserve(additional);
+        self.g_w.reserve(additional);
+        self.nf.reserve(additional);
+        self.wq2_mean.reserve(additional);
     }
 }
 
@@ -348,5 +390,19 @@ mod tests {
     fn column_agg_rejects_mismatched_nr() {
         let mut agg = ColumnAgg::new(8);
         agg.push_batch(&tiny_batch());
+    }
+
+    #[test]
+    fn column_batch_reset_keeps_capacity() {
+        let mut b = tiny_batch();
+        let cap = b.z_q.capacity();
+        b.reset(16);
+        assert_eq!(b.nr, 16);
+        assert!(b.is_empty());
+        assert_eq!(b.z_q.capacity(), cap);
+        b.reserve(8);
+        assert!(b.z_q.capacity() >= 8);
+        assert_eq!(ColumnBatch::empty(4).nr, 4);
+        assert!(ColumnBatch::empty(4).is_empty());
     }
 }

@@ -1,0 +1,356 @@
+//! Golden-value regression suite: small deterministic campaigns (fixed
+//! seeds, `RustEngine`) and closed-form analog figures, pinned against
+//! committed JSON snapshots under `rust/tests/golden/` and compared via
+//! the in-repo `config::json` parser.
+//!
+//! * Regenerate snapshots with `GOLDEN_UPDATE=1 cargo test -q --test golden`.
+//! * Each file carries its own `_tol` (relative). Pure-arithmetic paths
+//!   (Table 1, Fig. 8 staircases) pin to ~1e-10; Monte-Carlo statistics
+//!   pin to 1e-6 — tight enough that perturbing any spec constant (paper
+//!   capacitor values, the 6 dB ADC margin, format/distribution
+//!   parameters, seeding) fails the suite, loose enough to absorb 1-ulp
+//!   libm differences across platforms.
+//!
+//! The committed snapshots were produced by the independent Python twin
+//! `tools/gen_goldens.py`, which re-implements the seeded pipeline
+//! (SplitMix64/PCG64, FP quantizer, column MAC, ADC spec solver, GR-MAC
+//! cell design) in exact IEEE-754 f64 — so these tests also cross-check
+//! the Rust implementation against a second implementation, not just
+//! against its own history.
+
+use grcim::config::Json;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+/// Compare measured values against a golden map. Returns every violation
+/// (missing/extra keys, out-of-tolerance values) as messages.
+fn compare(
+    golden: &BTreeMap<String, f64>,
+    measured: &[(String, f64)],
+    tol: f64,
+) -> Result<(), Vec<String>> {
+    let mut errs = Vec::new();
+    let measured_map: BTreeMap<&str, f64> =
+        measured.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    for (k, &g) in golden {
+        match measured_map.get(k.as_str()) {
+            None => errs.push(format!("golden key '{k}' not measured")),
+            Some(&m) => {
+                let scale = g.abs().max(m.abs()).max(1e-12);
+                let rel = (m - g).abs() / scale;
+                if !(rel <= tol) {
+                    errs.push(format!(
+                        "{k}: measured {m} vs golden {g} (rel {rel:.3e} > {tol:.1e})"
+                    ));
+                }
+            }
+        }
+    }
+    for (k, _) in measured {
+        if !golden.contains_key(k) {
+            errs.push(format!("measured key '{k}' missing from golden file"));
+        }
+    }
+    if errs.is_empty() {
+        Ok(())
+    } else {
+        Err(errs)
+    }
+}
+
+/// One golden snapshot under construction.
+struct Golden {
+    name: &'static str,
+    tol: f64,
+    values: Vec<(String, f64)>,
+}
+
+impl Golden {
+    fn new(name: &'static str, tol: f64) -> Self {
+        Golden { name, tol, values: Vec::new() }
+    }
+
+    fn push(&mut self, key: impl Into<String>, v: f64) {
+        assert!(v.is_finite(), "golden values must be finite");
+        self.values.push((key.into(), v));
+    }
+
+    fn write(&self) {
+        let path = golden_dir().join(format!("{}.json", self.name));
+        let mut values = BTreeMap::new();
+        for (k, v) in &self.values {
+            values.insert(k.clone(), Json::Num(*v));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("_tol".to_string(), Json::Num(self.tol));
+        root.insert("values".to_string(), Json::Obj(values));
+        std::fs::create_dir_all(golden_dir()).expect("create golden dir");
+        std::fs::write(&path, Json::Obj(root).to_string())
+            .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+        eprintln!("GOLDEN_UPDATE: wrote {}", path.display());
+    }
+
+    /// Compare against the committed snapshot (or rewrite it under
+    /// GOLDEN_UPDATE=1).
+    fn check(self) {
+        if std::env::var("GOLDEN_UPDATE").ok().as_deref() == Some("1") {
+            self.write();
+            return;
+        }
+        let path = golden_dir().join(format!("{}.json", self.name));
+        let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+            panic!(
+                "missing golden snapshot {}: {e}\n\
+                 regenerate with: GOLDEN_UPDATE=1 cargo test -q --test golden",
+                path.display()
+            )
+        });
+        let j = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("parsing {}: {e}", path.display()));
+        let tol = j
+            .get("_tol")
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("{}: missing _tol", path.display()));
+        let Some(Json::Obj(map)) = j.get("values") else {
+            panic!("{}: missing 'values' object", path.display());
+        };
+        let golden: BTreeMap<String, f64> = map
+            .iter()
+            .map(|(k, v)| {
+                (
+                    k.clone(),
+                    v.as_f64().unwrap_or_else(|| {
+                        panic!("{}: non-numeric value '{k}'", path.display())
+                    }),
+                )
+            })
+            .collect();
+        if let Err(errs) = compare(&golden, &self.values, tol) {
+            panic!(
+                "golden snapshot '{}' drifted ({} violations):\n  {}\n\
+                 (if the change is intentional, regenerate with \
+                 GOLDEN_UPDATE=1 cargo test -q --test golden)",
+                self.name,
+                errs.len(),
+                errs.join("\n  ")
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Table 1 — GR-MAC capacitor design values (closed form, no RNG).
+// ---------------------------------------------------------------------
+
+#[test]
+fn golden_table1_capacitors() {
+    use grcim::analog::GrMacCell;
+    use grcim::figures::table1::{PAPER_C_E, PAPER_C_M};
+
+    let mut g = Golden::new("table1", 1e-10);
+    let schematic = GrMacCell::fp6_e2m3_schematic();
+    let comp05 = GrMacCell::design(4, 4, 1.0, 0.5);
+    let comp10 = GrMacCell::design(4, 4, 1.0, 1.0);
+
+    for (label, cell) in
+        [("schematic", &schematic), ("comp05", &comp05), ("comp10", &comp10)]
+    {
+        for (i, &c) in cell.c_m.iter().enumerate() {
+            g.push(format!("{label}_c_m{i}"), c);
+        }
+        for (i, &c) in cell.c_e.iter().enumerate() {
+            g.push(format!("{label}_c_e{}", i + 1), c);
+        }
+        for level in 1..=cell.levels() {
+            g.push(
+                format!("{label}_coupling_t{level}"),
+                cell.coupling_total(level),
+            );
+            g.push(
+                format!("{label}_q_w15_l{level}"),
+                cell.transfer_closed_form(15, level, 1.0),
+            );
+        }
+    }
+    // the paper constants themselves participate so a perturbed spec
+    // constant in figures::table1 fails the suite
+    for (i, &c) in PAPER_C_M.iter().enumerate() {
+        g.push(format!("paper_c_m{i}"), c);
+    }
+    for (i, &c) in PAPER_C_E.iter().enumerate() {
+        g.push(format!("paper_c_e{}", i + 1), c);
+    }
+    g.check();
+}
+
+// ---------------------------------------------------------------------
+// Fig. 8 — cell linearity staircases and octave gains (closed form).
+// ---------------------------------------------------------------------
+
+#[test]
+fn golden_fig8_staircases() {
+    use grcim::analog::{mismatch::w_sweep, GrMacCell};
+
+    let mut g = Golden::new("fig8", 1e-10);
+    let cell = GrMacCell::fp6_e2m3_schematic();
+    for level in 1..=cell.levels() {
+        let vals = w_sweep(&cell, level, 1.0);
+        for w in [1usize, 7, 15] {
+            g.push(format!("q_l{level}_w{w}"), vals[w]);
+        }
+        g.push(format!("lsb_l{level}"), cell.lsb(level, 1.0));
+        if level >= 2 {
+            let top = cell.m_codes() - 1;
+            let ratio = cell.transfer_closed_form(top, level, 1.0)
+                / cell.transfer_closed_form(top, level - 1, 1.0);
+            g.push(format!("octave_ratio_l{level}"), ratio);
+        }
+    }
+    g.check();
+}
+
+// ---------------------------------------------------------------------
+// Fig. 9 — element-level SQNR series (seeded Monte Carlo).
+// ---------------------------------------------------------------------
+
+const FIG9_SAMPLES: usize = 16_384;
+const FIG9_SEED: u64 = 0xF19D;
+
+#[test]
+fn golden_fig9_sqnr_series() {
+    let mut g = Golden::new("fig9", 1e-6);
+    let series = grcim::figures::fig9::sqnr_series(FIG9_SAMPLES, FIG9_SEED);
+    let names = ["uniform", "max_entropy", "gauss_outliers", "gauss_core"];
+    for (i, row) in series.iter().enumerate() {
+        for (j, name) in names.iter().enumerate() {
+            g.push(format!("ne{i}_{name}"), row[j]);
+        }
+    }
+    g.check();
+}
+
+// ---------------------------------------------------------------------
+// ENOB solutions — seeded RustEngine campaigns through the full stack
+// (rng -> distributions -> f32 inputs -> column MAC -> moments -> spec).
+// ---------------------------------------------------------------------
+
+const CAMPAIGN_SEED: u64 = 42;
+const CAMPAIGN_SAMPLES: usize = 2048;
+
+fn campaign_specs() -> Vec<grcim::coordinator::ExperimentSpec> {
+    use grcim::coordinator::ExperimentSpec;
+    use grcim::distributions::Distribution;
+    use grcim::formats::FpFormat;
+    use grcim::mac::FormatPair;
+    vec![
+        // Fig. 10 mid-sweep point: FP(3,2) activations, uniform inputs
+        ExperimentSpec {
+            id: "ne3-uniform".into(),
+            fmts: FormatPair::new(FpFormat::fp(3, 2), FpFormat::fp4_e2m1()),
+            dist_x: Distribution::Uniform,
+            dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+            nr: 32,
+            samples: CAMPAIGN_SAMPLES,
+        },
+        // the LLM stress point: FP(4,2) + gauss/outliers activations
+        ExperimentSpec {
+            id: "ne4-llm".into(),
+            fmts: FormatPair::new(FpFormat::fp(4, 2), FpFormat::fp4_e2m1()),
+            dist_x: Distribution::gauss_outliers(),
+            dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+            nr: 32,
+            samples: CAMPAIGN_SAMPLES,
+        },
+        // INT degenerate case at a different depth
+        ExperimentSpec {
+            id: "int6".into(),
+            fmts: FormatPair::new(FpFormat::int(6), FpFormat::int(4)),
+            dist_x: Distribution::Uniform,
+            dist_w: Distribution::Uniform,
+            nr: 16,
+            samples: CAMPAIGN_SAMPLES,
+        },
+    ]
+}
+
+#[test]
+fn golden_campaign_enob_solutions() {
+    use grcim::coordinator::run_experiment;
+    use grcim::runtime::RustEngine;
+    use grcim::spec::{delta_enob, required_enob, Arch, SpecConfig};
+
+    let mut g = Golden::new("campaign_enob", 1e-6);
+    let engine = RustEngine;
+    let cfg = SpecConfig::default();
+    for spec in campaign_specs() {
+        let agg = run_experiment(&engine, &spec, CAMPAIGN_SEED).unwrap();
+        assert_eq!(agg.samples() as usize, CAMPAIGN_SAMPLES);
+        let tag = spec.id.clone();
+        g.push(
+            format!("{tag}_enob_conv"),
+            required_enob(&agg, Arch::Conventional, cfg).enob,
+        );
+        g.push(
+            format!("{tag}_enob_unit"),
+            required_enob(&agg, Arch::GrUnit, cfg).enob,
+        );
+        g.push(
+            format!("{tag}_enob_row"),
+            required_enob(&agg, Arch::GrRow, cfg).enob,
+        );
+        g.push(format!("{tag}_delta_enob"), delta_enob(&agg, cfg));
+        g.push(format!("{tag}_mean_n_eff"), agg.mean_n_eff());
+        g.push(format!("{tag}_power_gain"), agg.signal_power_gain());
+        g.push(format!("{tag}_sqnr_db"), agg.sqnr_db());
+        g.push(format!("{tag}_nf_mean"), agg.nf.mean());
+        g.push(format!("{tag}_g_unit_ms"), agg.g_unit.mean_sq());
+        g.push(format!("{tag}_g_row_ms"), agg.g_row.mean_sq());
+    }
+    g.check();
+}
+
+// ---------------------------------------------------------------------
+// Determinism + harness self-tests.
+// ---------------------------------------------------------------------
+
+#[test]
+fn golden_campaign_is_deterministic_run_to_run() {
+    use grcim::coordinator::run_experiment;
+    use grcim::runtime::RustEngine;
+    // two in-process runs of the same campaign must agree bit-for-bit —
+    // the property the snapshot files rely on
+    let specs = campaign_specs();
+    let spec = &specs[0];
+    let a = run_experiment(&RustEngine, spec, CAMPAIGN_SEED).unwrap();
+    let b = run_experiment(&RustEngine, spec, CAMPAIGN_SEED).unwrap();
+    assert_eq!(a.nf.sum.to_bits(), b.nf.sum.to_bits());
+    assert_eq!(a.sig.sum_sq.to_bits(), b.sig.sum_sq.to_bits());
+    assert_eq!(a.n_eff.sum.to_bits(), b.n_eff.sum.to_bits());
+}
+
+#[test]
+fn golden_compare_detects_perturbation_and_key_drift() {
+    let golden: BTreeMap<String, f64> =
+        [("a".to_string(), 1.0), ("b".to_string(), 20.0)].into();
+    // identical values pass
+    let ok = vec![("a".to_string(), 1.0 + 1e-12), ("b".to_string(), 20.0)];
+    assert!(compare(&golden, &ok, 1e-9).is_ok());
+    // a perturbed spec constant fails
+    let drift = vec![("a".to_string(), 1.01), ("b".to_string(), 20.0)];
+    let errs = compare(&golden, &drift, 1e-9).unwrap_err();
+    assert_eq!(errs.len(), 1);
+    assert!(errs[0].contains("'a'") || errs[0].contains("a:"), "{errs:?}");
+    // missing and extra keys fail
+    let missing = vec![("a".to_string(), 1.0)];
+    assert!(compare(&golden, &missing, 1e-9).is_err());
+    let extra = vec![
+        ("a".to_string(), 1.0),
+        ("b".to_string(), 20.0),
+        ("c".to_string(), 3.0),
+    ];
+    assert!(compare(&golden, &extra, 1e-9).is_err());
+}

@@ -260,6 +260,142 @@ fn prop_capnet_cell_linearity_under_random_design() {
 }
 
 #[test]
+fn prop_adc_quantize_idempotent_at_integer_enob() {
+    // For integer ENOB the step divides full scale exactly, so every ADC
+    // output (including the clamped +/-1 rails) is a fixed point. (For
+    // fractional ENOB the rail codes are not representable, so only
+    // monotonicity is guaranteed — see prop_adc_quantize_is_monotone.)
+    check_simple(
+        "adc idempotent",
+        108,
+        400,
+        |r| (r.uniform_in(-2.0, 2.0), 1.0 + r.below(14) as f64),
+        |&(v, enob)| {
+            let q = adc_quantize(v, enob);
+            let qq = adc_quantize(q, enob);
+            ensure(qq == q, || {
+                format!("adc(adc({v})) = {qq} != {q} at enob {enob}")
+            })?;
+            ensure(q.abs() <= 1.0, || "output beyond full scale".into())
+        },
+    );
+}
+
+#[test]
+fn prop_energy_components_nonnegative_and_total_positive() {
+    check_simple(
+        "energy nonnegative",
+        109,
+        300,
+        |r| {
+            (
+                FormatPair::new(rand_fmt(r), rand_fmt(r)),
+                0.5 + r.uniform() * 13.5,
+                [
+                    CimArch::Conventional,
+                    CimArch::GrUnit,
+                    CimArch::GrRow,
+                    CimArch::GrInt,
+                ][r.below(4) as usize],
+                8usize << r.below(4), // nr in {8,16,32,64}
+                8usize << r.below(4),
+            )
+        },
+        |&(fmts, enob, arch, nr, nc)| {
+            let t = TechParams::default();
+            let b = energy_per_op(arch, fmts, nr, nc, enob, &t);
+            for (name, v) in b.components() {
+                ensure(v >= 0.0 && v.is_finite(), || {
+                    format!("{arch:?} component {name} = {v}")
+                })?;
+            }
+            ensure(b.total() > 0.0, || format!("{arch:?} total {}", b.total()))
+        },
+    );
+}
+
+#[test]
+fn prop_energy_monotone_in_enob_for_every_arch() {
+    // strict monotonicity in ENOB, separately per architecture (the
+    // existing mixed-arch property samples; this one sweeps a ladder)
+    for arch in [
+        CimArch::Conventional,
+        CimArch::GrUnit,
+        CimArch::GrRow,
+        CimArch::GrInt,
+    ] {
+        let t = TechParams::default();
+        let fmts =
+            FormatPair::new(FpFormat::fp6_e3m2(), FpFormat::fp4_e2m1());
+        let mut prev = 0.0;
+        for step in 0..20 {
+            let enob = 1.0 + step as f64 * 0.65;
+            let e = energy_per_op(arch, fmts, 32, 32, enob, &t).total();
+            assert!(
+                e > prev,
+                "{arch:?}: energy not monotone at enob {enob}: {e} <= {prev}"
+            );
+            prev = e;
+        }
+    }
+}
+
+#[test]
+fn coordinator_bit_identical_aggregates_across_1_2_4_workers() {
+    use grcim::coordinator::{run_campaign, CampaignConfig, ExperimentSpec};
+    use grcim::runtime::EngineKind;
+    // every aggregate field, not just one moment, must be bit-identical
+    // regardless of worker count (same seeds => same ColumnAgg)
+    fn agg_bits(a: &ColumnAgg) -> Vec<u64> {
+        let mut out = Vec::new();
+        for m in [
+            &a.sig, &a.qerr, &a.nf, &a.wq2, &a.g_conv, &a.g_unit, &a.g_row,
+            &a.n_eff, &a.v_conv, &a.v_gr,
+        ] {
+            out.push(m.n);
+            out.push(m.sum.to_bits());
+            out.push(m.sum_sq.to_bits());
+        }
+        out
+    }
+    let specs = vec![
+        ExperimentSpec {
+            id: "det-a".into(),
+            fmts: FormatPair::new(FpFormat::fp6_e3m2(), FpFormat::fp4_e2m1()),
+            dist_x: Distribution::Uniform,
+            dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+            nr: 32,
+            samples: 4096,
+        },
+        ExperimentSpec {
+            id: "det-b".into(),
+            fmts: FormatPair::new(FpFormat::fp(4, 2), FpFormat::fp4_e2m1()),
+            dist_x: Distribution::gauss_outliers(),
+            dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+            nr: 16,
+            samples: 6144,
+        },
+    ];
+    let mut reference: Option<Vec<Vec<u64>>> = None;
+    for workers in [1usize, 2, 4] {
+        let cfg = CampaignConfig {
+            engine: EngineKind::Rust,
+            workers,
+            seed: 0xDEC0DE,
+            ..Default::default()
+        };
+        let aggs = run_campaign(&specs, &cfg).unwrap();
+        let bits: Vec<Vec<u64>> = aggs.iter().map(agg_bits).collect();
+        match &reference {
+            None => reference = Some(bits),
+            Some(r) => {
+                assert_eq!(r, &bits, "workers={workers} changed aggregates")
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_campaign_seeding_is_scheduling_invariant() {
     use grcim::coordinator::{run_campaign, CampaignConfig, ExperimentSpec};
     use grcim::runtime::EngineKind;

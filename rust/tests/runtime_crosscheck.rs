@@ -2,8 +2,10 @@
 //! must agree with the pure-Rust f64 oracle on every output, across
 //! formats, distributions, and array depths.
 //!
-//! Requires `make artifacts` (skips with a notice otherwise — CI always
-//! builds artifacts first via the Makefile).
+//! Only meaningful for `--features pjrt` builds (compiled out otherwise);
+//! at runtime it additionally requires AOT artifacts (regenerated with
+//! `python/compile/aot.py`) and skips with a notice when they are absent.
+#![cfg(feature = "pjrt")]
 
 use grcim::coordinator::{run_experiment, ExperimentSpec};
 use grcim::distributions::Distribution;
@@ -17,7 +19,9 @@ fn registry() -> Option<ArtifactRegistry> {
     match ArtifactRegistry::load(&dir) {
         Ok(r) => Some(r),
         Err(e) => {
-            eprintln!("SKIP (no artifacts: {e}) — run `make artifacts`");
+            eprintln!(
+                "SKIP (no artifacts: {e}) — regenerate with python/compile/aot.py"
+            );
             None
         }
     }

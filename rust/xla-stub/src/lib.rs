@@ -1,0 +1,136 @@
+//! Offline stub of the `xla` crate API surface used by `grcim`'s PJRT
+//! backend (`rust/src/runtime/pjrt.rs`).
+//!
+//! The real `xla` bindings wrap a native XLA/PJRT toolchain that is not
+//! part of this repository's vendor set. This stub keeps the PJRT code
+//! paths *compiling* under `--features pjrt` while failing cleanly at
+//! runtime: [`PjRtClient::cpu`] returns an error, so `EngineKind::Auto`
+//! falls back to the pure-Rust oracle and `EngineKind::Pjrt` reports a
+//! clear message. To execute AOT artifacts for real, replace the
+//! `xla = { path = "xla-stub" }` dependency in `rust/Cargo.toml` with the
+//! real bindings (same API surface).
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real crate's (only Display is relied upon).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: XLA/PJRT runtime not available in this build (offline \
+         `xla` stub — point rust/Cargo.toml's `xla` dependency at the real \
+         bindings to execute artifacts)"
+    )))
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let _ = path.as_ref();
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Host literal (stub).
+#[derive(Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Device buffer (stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_client_fails_with_clear_message() {
+        let err = PjRtClient::cpu().err().expect("stub must not construct");
+        let msg = err.to_string();
+        assert!(msg.contains("stub"), "{msg}");
+    }
+}

@@ -1,0 +1,729 @@
+#!/usr/bin/env python3
+"""Generate the golden snapshots under rust/tests/golden/.
+
+This is an *independent twin* of the Rust pipeline (rust/src/{rng,formats,
+distributions,mac,stats,spec,analog,figures/fig9}): it re-implements the
+seeded deterministic paths in exact IEEE-754 f64 (Python floats are
+doubles; all integer RNG state is emulated with masked big ints), so the
+snapshots it writes cross-check the Rust implementation against a second
+implementation rather than against its own history.
+
+Exactness notes:
+  * The FP quantizer chain (decompose/quantize/quantize_parts) uses only
+    sign/abs/floor, exact power-of-two scaling (math.ldexp), and the f64
+    exponent field (math.frexp) — bit-exact on every platform.
+  * Uniform / max-entropy sampling is bit-exact (integer RNG + exact
+    scaling). Gaussian sampling goes through libm log(); the golden
+    tolerances (1e-6 relative) absorb cross-libm 1-ulp differences.
+  * f32 input rounding uses struct pack/unpack (round-to-nearest-even,
+    identical to Rust `as f32`).
+
+Run from the repo root:  python3 tools/gen_goldens.py
+"""
+
+import json
+import math
+import os
+import struct
+
+M64 = (1 << 64) - 1
+M128 = (1 << 128) - 1
+
+# ----------------------------------------------------------------- rng --
+
+
+def rotl64(x, k):
+    k %= 64
+    if k == 0:
+        return x & M64
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+def rotr64(x, k):
+    k %= 64
+    if k == 0:
+        return x & M64
+    return ((x >> k) | (x << (64 - k))) & M64
+
+
+class SplitMix64:
+    def __init__(self, seed):
+        self.state = seed & M64
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+        return z ^ (z >> 31)
+
+
+def job_seed(campaign_seed, grid_index, batch_index):
+    sm = SplitMix64(campaign_seed ^ rotl64(grid_index, 21) ^ rotl64(batch_index, 42))
+    sm.next_u64()
+    return sm.next_u64()
+
+
+PCG_MULT = 0x2360ED051FC65DA44385DF649FCCF645
+
+
+class Pcg64:
+    """PCG XSL-RR 128/64, seeded exactly like rust/src/rng/mod.rs."""
+
+    def __init__(self, seed):
+        sm = SplitMix64(seed)
+        state = (sm.next_u64() << 64) | sm.next_u64()
+        inc = (sm.next_u64() << 64) | sm.next_u64()
+        self.state = 0
+        self.inc = ((inc << 1) | 1) & M128
+        self.next_u64()
+        self.state = (self.state + state) & M128
+        self.next_u64()
+
+    def next_u64(self):
+        self.state = (self.state * PCG_MULT + self.inc) & M128
+        rot = self.state >> 122
+        xored = ((self.state >> 64) ^ self.state) & M64
+        return rotr64(xored, rot)
+
+    def uniform(self):
+        return (self.next_u64() >> 11) * (1.0 / float(1 << 53))
+
+    def uniform_in(self, lo, hi):
+        return lo + (hi - lo) * self.uniform()
+
+    def below(self, n):
+        assert n > 0
+        zone = M64 - (M64 % n)
+        while True:
+            v = self.next_u64()
+            if v < zone:
+                return v % n
+
+    def normal(self):
+        while True:
+            u = 2.0 * self.uniform() - 1.0
+            v = 2.0 * self.uniform() - 1.0
+            s = u * u + v * v
+            if 0.0 < s < 1.0:
+                return u * math.sqrt((-2.0 * math.log(s)) / s)
+
+    def sign(self):
+        return 1.0 if (self.next_u64() & 1) == 0 else -1.0
+
+
+# ------------------------------------------------------------- formats --
+
+
+def exp2i(t):
+    """Rust formats::exp2 for the integer arguments the golden paths use."""
+    ti = math.floor(t)
+    fr = t - ti
+    assert fr == 0.0, "golden paths only use integer exponents"
+    if -1022.0 <= ti <= 1023.0:
+        return math.ldexp(1.0, int(ti))
+    return math.ldexp(1.0, int(ti))  # out-of-range never hit here
+
+
+class FpFormat:
+    def __init__(self, e_max, n_m):
+        self.e_max = float(e_max)
+        self.n_m = float(n_m)
+
+    @staticmethod
+    def fp(n_e, n_m):
+        assert n_e >= 1
+        return FpFormat(float(1 << n_e) - 1.0, float(n_m))
+
+    @staticmethod
+    def int_(n_bits):
+        assert n_bits >= 2
+        return FpFormat(1.0, float(n_bits) - 2.0)
+
+    @staticmethod
+    def fp4_e2m1():
+        return FpFormat.fp(2, 1)
+
+    def step(self):
+        return exp2i(-(self.n_m + 1.0))
+
+    def vmax(self):
+        return 1.0 - self.step()
+
+    def decompose(self, a):
+        safe = max(a, 1e-300)
+        # floor(log2(safe)) == unbiased f64 exponent field (safe is normal)
+        _, e2 = math.frexp(safe)
+        floor_log2 = float(e2 - 1)
+        e = floor_log2 + 1.0 + self.e_max
+        e = min(max(e, 1.0), self.e_max)
+        m = a * exp2i(self.e_max - e)
+        return m, e
+
+    def quantize(self, x):
+        step = self.step()
+        s = -1.0 if x < 0.0 else 1.0
+        a = abs(x)
+        m, e = self.decompose(a)
+        m_q = math.floor(m / step + 0.5) * step
+        a_q = min(m_q * exp2i(e - self.e_max), self.vmax())
+        if a_q == 0.0:
+            return 0.0
+        return s * a_q
+
+    def ulp(self, a_q):
+        _, e = self.decompose(a_q)
+        return self.step() * exp2i(e - self.e_max)
+
+    def quantize_parts(self, x):
+        step = self.step()
+        s = -1.0 if x < 0.0 else 1.0
+        a = abs(x)
+        m, e = self.decompose(a)
+        m_q = math.floor(m / step + 0.5) * step
+        a_q = min(m_q * exp2i(e - self.e_max), self.vmax())
+        assert self.e_max == math.floor(self.e_max)  # integral formats only
+        if a_q >= self.vmax():
+            a_f, m_f, e_f = self.vmax(), self.vmax(), self.e_max
+        elif m_q >= 1.0:
+            a_f, m_f, e_f = a_q, 0.5, e + 1.0
+        else:
+            a_f, m_f, e_f = a_q, m_q, e
+        if a_f == 0.0:
+            return 0.0, 0.0, 1.0
+        return s * a_f, s * m_f, e_f
+
+
+class MaxEntropy:
+    def __init__(self, fmt):
+        self.fmt = fmt
+        self.e_codes = int(fmt.e_max) + 1
+        self.m_codes = 1 << int(fmt.n_m)
+
+    def decode(self, sign, e_stored, m_stored):
+        step = self.fmt.step()
+        if e_stored == 0:
+            m = float(m_stored) * step
+        else:
+            m = 0.5 + float(m_stored) * step
+        e_eff = float(max(e_stored, 1))
+        return sign * m * exp2i(e_eff - self.fmt.e_max)
+
+    def sample(self, rng):
+        sign = rng.sign()
+        e = rng.below(self.e_codes)
+        m = rng.below(self.m_codes)
+        return self.decode(sign, e, m)
+
+
+# -------------------------------------------------------- distributions --
+
+GO_EPS = 0.01
+GO_K = 50.0
+
+
+def go_core_sigma():
+    return 1.0 / (3.0 * GO_K)
+
+
+class Dist:
+    UNIFORM = "uniform"
+
+    def __init__(self, kind, fmt=None):
+        self.kind = kind
+        self.me = MaxEntropy(fmt) if kind == "maxent" else None
+
+    def sample(self, rng):
+        if self.kind == "uniform":
+            return rng.uniform_in(-1.0, 1.0)
+        if self.kind == "maxent":
+            return self.me.sample(rng)
+        if self.kind == "gauss_outliers":
+            if rng.uniform() < GO_EPS:
+                return rng.sign() * rng.uniform_in(0.5, 1.0)
+            sigma = go_core_sigma()
+            v = rng.normal() * sigma
+            return min(max(v, -1.0), 1.0)
+        if self.kind == "clipped_gauss4":
+            v = rng.normal() / 4.0
+            return min(max(v, -1.0), 1.0)
+        raise ValueError(self.kind)
+
+    def is_outlier(self, x):
+        if self.kind == "gauss_outliers":
+            return abs(x) > 4.0 * go_core_sigma()
+        return False
+
+
+def f32(x):
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+def fill_f32(dist, rng, n):
+    return [f32(dist.sample(rng)) for _ in range(n)]
+
+
+# ----------------------------------------------------------------- mac --
+
+
+def simulate_column(x, w, nr, fx, fw):
+    """Twin of mac::simulate_column — identical arithmetic order."""
+    assert len(x) == len(w) and nr > 0 and len(x) % nr == 0
+    b = len(x) // nr
+    stx = fx.step()
+    out = {k: [] for k in (
+        "z_ideal", "z_q", "v_conv", "g_conv", "v_gr", "s_sum", "s2_sum",
+        "sx_sum", "g_w", "nf", "wq2_mean")}
+    for s in range(b):
+        xs = x[s * nr:(s + 1) * nr]
+        ws = w[s * nr:(s + 1) * nr]
+        z_ideal = 0.0
+        z_q = 0.0
+        ebx = 1.0
+        ebw = 1.0
+        v_gr_num = 0.0
+        s_sum = 0.0
+        s2_sum = 0.0
+        sx_sum = 0.0
+        nf = 0.0
+        wq2 = 0.0
+        for i in range(nr):
+            z_ideal += xs[i] * ws[i]
+            xq, mxi, exi = fx.quantize_parts(xs[i])
+            wq, mwi, ewi = fw.quantize_parts(ws[i])
+            z_q += xq * wq
+            ebx = max(ebx, exi)
+            ebw = max(ebw, ewi)
+            ux = exp2i(exi - fx.e_max)
+            uw = exp2i(ewi - fw.e_max)
+            u = ux * uw
+            s_sum += u
+            s2_sum += u * u
+            v_gr_num += mxi * mwi * u
+            sx_sum += ux
+            dx = stx * ux
+            nf += wq * wq * dx * dx
+            wq2 += wq * wq
+        z_ideal /= float(nr)
+        z_q /= float(nr)
+        nf /= 12.0 * float(nr * nr)
+        g_w = exp2i(ebw - fw.e_max)
+        g_conv = exp2i(ebx - fx.e_max) * g_w
+        v_conv = z_q / g_conv
+        out["z_ideal"].append(z_ideal)
+        out["z_q"].append(z_q)
+        out["v_conv"].append(v_conv)
+        out["g_conv"].append(g_conv)
+        out["v_gr"].append(v_gr_num / s_sum)
+        out["s_sum"].append(s_sum)
+        out["s2_sum"].append(s2_sum)
+        out["sx_sum"].append(sx_sum)
+        out["g_w"].append(g_w)
+        out["nf"].append(nf)
+        out["wq2_mean"].append(wq2 / float(nr))
+    return out
+
+
+class Moments:
+    def __init__(self):
+        self.n = 0
+        self.sum = 0.0
+        self.sum_sq = 0.0
+
+    def push(self, x):
+        self.n += 1
+        self.sum += x
+        self.sum_sq += x * x
+
+    def mean(self):
+        return self.sum / float(self.n) if self.n else 0.0
+
+    def mean_sq(self):
+        return self.sum_sq / float(self.n) if self.n else 0.0
+
+
+class ColumnAgg:
+    FIELDS = ("sig", "qerr", "nf", "wq2", "g_conv", "g_unit", "g_row",
+              "n_eff", "v_conv", "v_gr")
+
+    def __init__(self, nr):
+        self.nr = nr
+        for f in self.FIELDS:
+            setattr(self, f, Moments())
+
+    def push_batch(self, b):
+        nr = float(self.nr)
+        n = len(b["z_ideal"])
+        for i in range(n):
+            self.sig.push(b["z_ideal"][i])
+            self.qerr.push(b["z_q"][i] - b["z_ideal"][i])
+            self.nf.push(b["nf"][i])
+            self.wq2.push(b["wq2_mean"][i])
+            self.g_conv.push(b["g_conv"][i])
+            self.g_unit.push(b["s_sum"][i] / nr)
+            self.g_row.push(b["sx_sum"][i] / nr)
+            self.n_eff.push(b["s_sum"][i] * b["s_sum"][i] / b["s2_sum"][i])
+            self.v_conv.push(b["v_conv"][i])
+            self.v_gr.push(b["v_gr"][i])
+
+    def sqnr_db(self):
+        return db(self.sig.mean_sq() / max(self.qerr.mean_sq(), 1e-300))
+
+    def mean_n_eff(self):
+        return self.n_eff.mean()
+
+    def signal_power_gain(self):
+        return self.v_gr.mean_sq() / max(self.v_conv.mean_sq(), 1e-300)
+
+
+def db(p):
+    return 10.0 * math.log10(p)
+
+
+def from_db(d):
+    return 10.0 ** (d / 10.0)
+
+
+MARGIN_DB = 6.0
+
+
+def required_enob(agg, arch):
+    if arch == "conv":
+        floor, g2 = agg.nf.mean(), 1.0
+    elif arch == "unit":
+        floor, g2 = agg.nf.mean(), agg.g_unit.mean_sq()
+    elif arch == "row":
+        floor, g2 = agg.nf.mean(), agg.g_row.mean_sq()
+    else:
+        raise ValueError(arch)
+    floor = max(floor, 1e-300)
+    delta_max = math.sqrt(12.0 * floor / (from_db(MARGIN_DB) * g2))
+    return math.log2(2.0 / delta_max)
+
+
+def run_experiment(spec, campaign_seed, preferred_batch=2048):
+    jobs = -(-spec["samples"] // preferred_batch)
+    agg = ColumnAgg(spec["nr"])
+    for j in range(jobs):
+        rng = Pcg64(job_seed(campaign_seed, 0, j))
+        n = preferred_batch * spec["nr"]
+        x = fill_f32(spec["dist_x"], rng, n)
+        w = fill_f32(spec["dist_w"], rng, n)
+        batch = simulate_column(x, w, spec["nr"], spec["fx"], spec["fw"])
+        agg.push_batch(batch)
+    return agg
+
+
+# -------------------------------------------------------------- analog --
+
+
+class GrMacCell:
+    def __init__(self, m_bits, levels, c_u, c_p1):
+        assert m_bits >= 1 and levels >= 3
+        self.c_m = [c_u * float(1 << i) for i in range(m_bits)]
+        c_sum = 0.0
+        for c in self.c_m:
+            c_sum += c
+
+        def t(j):
+            return (c_sum + c_p1) / (float(1 << (levels - j + 1)) - 1.0)
+
+        c_e = [t(1)]
+        for j in range(2, levels):
+            c_e.append(t(j) - t(1))
+        c_e.append(t(levels) - t(levels - 1))
+        self.c_e = c_e
+        self.c_p1 = c_p1
+
+    @staticmethod
+    def fp6_e2m3_schematic():
+        return GrMacCell(4, 4, 1.0, 0.0)
+
+    def levels(self):
+        return len(self.c_e)
+
+    def m_codes(self):
+        return 1 << len(self.c_m)
+
+    def c_sum(self):
+        s = 0.0
+        for c in self.c_m:
+            s += c
+        return s
+
+    def coupling_total(self, level):
+        l = self.levels()
+        assert 1 <= level <= l
+        t = self.c_e[0]
+        if 2 <= level < l:
+            t += self.c_e[level - 1]
+        elif level == l:
+            t += self.c_e[l - 2] + self.c_e[l - 1]
+        return t
+
+    def transfer_closed_form(self, w_code, level, v_in):
+        c_sel = 0.0
+        for i, c in enumerate(self.c_m):
+            if (w_code >> i) & 1 == 1:
+                c_sel += c
+        cs = self.c_sum() + self.c_p1
+        t = self.coupling_total(level)
+        return v_in * c_sel * t / (cs + t)
+
+    def lsb(self, level, v_in):
+        return (self.transfer_closed_form(1, level, v_in)
+                - self.transfer_closed_form(0, level, v_in))
+
+
+# ---------------------------------------------------------------- fig9 --
+
+
+def fig9_sqnr_db(fmt, dist, samples, seed, core_only, ulp_floor):
+    rng = Pcg64(seed)
+    sig = 0.0
+    noise = 0.0
+    n = 0
+    for _ in range(samples):
+        x = dist.sample(rng)
+        if core_only and dist.is_outlier(x):
+            continue
+        q = fmt.quantize(x)
+        sig += x * x
+        if ulp_floor:
+            u = fmt.ulp(abs(q))
+            noise += u * u / 12.0
+        else:
+            noise += (x - q) * (x - q)
+        n += 1
+    if n == 0:
+        return float("-inf")
+    return db(sig / max(noise, 1e-300))
+
+
+def fig9_fmt_for(n_e):
+    if n_e == 0:
+        return FpFormat.int_(2 + 2)  # N_M + 2 with N_M = 2
+    return FpFormat.fp(n_e, 2)
+
+
+def fig9_series(samples, seed):
+    rows = []
+    for n_e in range(0, 6):
+        fmt = fig9_fmt_for(n_e)
+        uni = fig9_sqnr_db(fmt, Dist("uniform"), samples, seed + 1, False, False)
+        me = fig9_sqnr_db(fmt, Dist("maxent", fmt), samples, seed + 2, False, True)
+        go = Dist("gauss_outliers")
+        go_all = fig9_sqnr_db(fmt, go, samples, seed + 3, False, False)
+        go_core = fig9_sqnr_db(fmt, go, samples, seed + 3, True, False)
+        rows.append([uni, me, go_all, go_core])
+    return rows
+
+
+# ---------------------------------------------------- self-validation --
+
+
+def self_check():
+    """Pin the twin against value vectors from the Rust unit tests."""
+    # SplitMix64 canonical vector (Steele et al. reference, seed 0)
+    assert SplitMix64(0).next_u64() == 0xE220A8397B1DCDAF
+
+    # FP4_E2M1 codebook (formats::tests::fp4_e2m1_codebook_is_ocp_set)
+    f4 = FpFormat.fp4_e2m1()
+    book = sorted({abs(f4.quantize(v / 32.0)) for v in range(-32, 33)})
+    assert book == [0.0, 0.0625, 0.125, 0.1875, 0.25, 0.375, 0.5, 0.75], book
+
+    # quantize vectors (formats::tests)
+    assert f4.quantize(5.0) == 0.75 and f4.quantize(-5.0) == -0.75
+    assert f4.quantize(1.0) == 0.75
+    assert f4.quantize(0.0) == 0.0
+    assert f4.quantize(0.01) == 0.0
+    assert f4.quantize(0.05) == 0.0625
+    assert f4.quantize(-0.05) == -0.0625
+    assert f4.quantize(0.47) == 0.5  # rollover renormalizes
+    assert f4.decompose(0.75) == (0.75, 3.0)
+    assert f4.decompose(0.125) == (0.5, 1.0)
+    m, e = f4.decompose(0.0625)
+    assert e == 1.0 and abs(m - 0.25) < 1e-15
+    assert f4.decompose(0.0) == (0.0, 1.0)
+    i4 = FpFormat.int_(4)
+    assert i4.quantize(0.3) == 0.25
+    assert i4.quantize(0.33) == 0.375
+    assert i4.vmax() == 0.875
+
+    # quantize_parts zero convention
+    assert f4.quantize_parts(0.0) == (0.0, 0.0, 1.0)
+
+    # max-entropy decode vectors (maxent::tests::decode_subnormals_and_normals)
+    me = MaxEntropy(f4)
+    assert me.decode(1.0, 0, 0) == 0.0
+    assert me.decode(1.0, 0, 1) == 0.0625
+    assert me.decode(1.0, 1, 0) == 0.125
+    assert me.decode(1.0, 3, 1) == 0.75
+    assert me.decode(-1.0, 3, 0) == -0.5
+
+    # GR-MAC cell Table I vectors (grmac_cell::tests)
+    cell = GrMacCell.fp6_e2m3_schematic()
+    assert cell.c_m == [1.0, 2.0, 4.0, 8.0]
+    assert abs(cell.c_e[0] - 1.0) < 1e-12
+    assert abs(cell.c_e[1] - 8.0 / 7.0) < 1e-12
+    assert abs(cell.c_e[2] - 4.0) < 1e-12
+    assert abs(cell.c_e[3] - 10.0) < 1e-12
+    assert abs(cell.coupling_total(1) - 1.0) < 1e-12
+    assert abs(cell.coupling_total(2) - 15.0 / 7.0) < 1e-12
+    assert abs(cell.coupling_total(3) - 5.0) < 1e-12
+    assert abs(cell.coupling_total(4) - 15.0) < 1e-12
+
+    # rng statistical sanity (mirrors rng::tests tolerances)
+    rng = Pcg64(11)
+    n = 20000
+    xs = [rng.uniform() for _ in range(n)]
+    mean = sum(xs) / n
+    assert abs(mean - 0.5) < 0.02, mean
+    rng = Pcg64(13)
+    ys = [rng.normal() for _ in range(n)]
+    mv = sum(ys) / n
+    var = sum((y - mv) ** 2 for y in ys) / n
+    assert abs(mv) < 0.05 and abs(var - 1.0) < 0.05, (mv, var)
+
+    # simulate_column linear-chain identity (mac::tests)
+    rng = Pcg64(1)
+    nr = 32
+    x = [rng.uniform_in(-1.0, 1.0) for _ in range(64 * nr)]
+    rngw = Pcg64(2)
+    w = [min(max(rngw.normal() / 4.0, -1.0), 1.0) for _ in range(64 * nr)]
+    fx = FpFormat.fp(3, 2)
+    fw = f4
+    b = simulate_column(x, w, nr, fx, fw)
+    for i in range(64):
+        assert abs(b["z_q"][i] - b["v_conv"][i] * b["g_conv"][i]) < 1e-10
+        assert abs(b["z_q"][i] - b["v_gr"][i] * b["s_sum"][i] / 32.0) < 1e-10
+        neff = b["s_sum"][i] ** 2 / b["s2_sum"][i]
+        assert 1.0 - 1e-12 <= neff <= 32.0 + 1e-9
+
+    print("self-check OK")
+
+
+# ------------------------------------------------------------ emission --
+
+
+def write_golden(path, tol, values):
+    doc = {"_tol": tol, "values": {k: v for k, v in values}}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path} ({len(values)} values)")
+
+
+def gen_table1(outdir):
+    vals = []
+    paper_c_m = [1.0, 2.0, 4.0, 8.0]
+    paper_c_e = [1.0, 1.14, 4.0, 10.0]
+    cells = [
+        ("schematic", GrMacCell.fp6_e2m3_schematic()),
+        ("comp05", GrMacCell(4, 4, 1.0, 0.5)),
+        ("comp10", GrMacCell(4, 4, 1.0, 1.0)),
+    ]
+    for label, cell in cells:
+        for i, c in enumerate(cell.c_m):
+            vals.append((f"{label}_c_m{i}", c))
+        for i, c in enumerate(cell.c_e):
+            vals.append((f"{label}_c_e{i + 1}", c))
+        for level in range(1, cell.levels() + 1):
+            vals.append((f"{label}_coupling_t{level}", cell.coupling_total(level)))
+            vals.append((f"{label}_q_w15_l{level}",
+                         cell.transfer_closed_form(15, level, 1.0)))
+    for i, c in enumerate(paper_c_m):
+        vals.append((f"paper_c_m{i}", c))
+    for i, c in enumerate(paper_c_e):
+        vals.append((f"paper_c_e{i + 1}", c))
+    write_golden(os.path.join(outdir, "table1.json"), 1e-10, vals)
+
+
+def gen_fig8(outdir):
+    vals = []
+    cell = GrMacCell.fp6_e2m3_schematic()
+    for level in range(1, cell.levels() + 1):
+        sweep = [cell.transfer_closed_form(wc, level, 1.0)
+                 for wc in range(cell.m_codes())]
+        for w in (1, 7, 15):
+            vals.append((f"q_l{level}_w{w}", sweep[w]))
+        vals.append((f"lsb_l{level}", cell.lsb(level, 1.0)))
+        if level >= 2:
+            top = cell.m_codes() - 1
+            ratio = (cell.transfer_closed_form(top, level, 1.0)
+                     / cell.transfer_closed_form(top, level - 1, 1.0))
+            vals.append((f"octave_ratio_l{level}", ratio))
+    write_golden(os.path.join(outdir, "fig8.json"), 1e-10, vals)
+
+
+def gen_fig9(outdir):
+    samples = 16384
+    seed = 0xF19D
+    rows = fig9_series(samples, seed)
+    names = ["uniform", "max_entropy", "gauss_outliers", "gauss_core"]
+    vals = []
+    for i, row in enumerate(rows):
+        for j, name in enumerate(names):
+            assert math.isfinite(row[j]), (i, name)
+            vals.append((f"ne{i}_{name}", row[j]))
+    write_golden(os.path.join(outdir, "fig9.json"), 1e-6, vals)
+
+
+def gen_campaign(outdir):
+    fp4 = FpFormat.fp4_e2m1()
+    specs = [
+        {
+            "id": "ne3-uniform",
+            "fx": FpFormat.fp(3, 2), "fw": fp4,
+            "dist_x": Dist("uniform"), "dist_w": Dist("maxent", fp4),
+            "nr": 32, "samples": 2048,
+        },
+        {
+            "id": "ne4-llm",
+            "fx": FpFormat.fp(4, 2), "fw": fp4,
+            "dist_x": Dist("gauss_outliers"), "dist_w": Dist("maxent", fp4),
+            "nr": 32, "samples": 2048,
+        },
+        {
+            "id": "int6",
+            "fx": FpFormat.int_(6), "fw": FpFormat.int_(4),
+            "dist_x": Dist("uniform"), "dist_w": Dist("uniform"),
+            "nr": 16, "samples": 2048,
+        },
+    ]
+    vals = []
+    for spec in specs:
+        agg = run_experiment(spec, 42)
+        assert agg.sig.n == spec["samples"]
+        tag = spec["id"]
+        conv = required_enob(agg, "conv")
+        unit = required_enob(agg, "unit")
+        row = required_enob(agg, "row")
+        vals.append((f"{tag}_enob_conv", conv))
+        vals.append((f"{tag}_enob_unit", unit))
+        vals.append((f"{tag}_enob_row", row))
+        vals.append((f"{tag}_delta_enob", conv - unit))
+        vals.append((f"{tag}_mean_n_eff", agg.mean_n_eff()))
+        vals.append((f"{tag}_power_gain", agg.signal_power_gain()))
+        vals.append((f"{tag}_sqnr_db", agg.sqnr_db()))
+        vals.append((f"{tag}_nf_mean", agg.nf.mean()))
+        vals.append((f"{tag}_g_unit_ms", agg.g_unit.mean_sq()))
+        vals.append((f"{tag}_g_row_ms", agg.g_row.mean_sq()))
+        print(f"  {tag}: enob conv={conv:.4f} unit={unit:.4f} row={row:.4f} "
+              f"n_eff={agg.mean_n_eff():.3f}")
+    write_golden(os.path.join(outdir, "campaign_enob.json"), 1e-6, vals)
+
+
+def main():
+    self_check()
+    outdir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "..", "rust", "tests", "golden")
+    os.makedirs(outdir, exist_ok=True)
+    gen_table1(outdir)
+    gen_fig8(outdir)
+    gen_fig9(outdir)
+    gen_campaign(outdir)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,9 +2,49 @@
 //!
 //! Grammar: `grcim <command> [--flag value] [--switch] [positional...]`.
 //! Flags may appear in any order; `--flag=value` is also accepted.
+//!
+//! The per-subcommand flag sets live in [`flags`] so `main.rs` and the
+//! tests validate against the same registry; the full flag reference is
+//! `docs/CLI.md`.
+
+pub mod sweep;
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
+
+/// Known value-taking flags per subcommand (`Args::ensure_known` input).
+/// `main.rs` consumes these; the tests typo-check against them.
+pub mod flags {
+    /// Flags shared by every campaign-running subcommand.
+    pub const CAMPAIGN: &[&str] = &["engine", "artifacts", "workers", "seed"];
+
+    pub const FIGURES: &[&str] =
+        &["fig", "out", "samples", "engine", "artifacts", "workers", "seed"];
+    pub const ENERGY: &[&str] =
+        &["dr", "sqnr", "samples", "engine", "artifacts", "workers", "seed"];
+    pub const VALIDATE: &[&str] = &["artifacts", "samples", "seed"];
+    pub const SWEEP: &[&str] = &["config"];
+    pub const INFO: &[&str] = &["artifacts"];
+    pub const SERVE: &[&str] =
+        &["addr", "cache", "engine", "artifacts", "workers", "seed"];
+    pub const QUERY: &[&str] =
+        &["addr", "json", "dr", "sqnr", "samples", "seed", "id"];
+}
+
+/// Expand a `--fig` value: `"all"` maps to the full list, otherwise a
+/// comma-separated selection (whitespace tolerated, empties dropped).
+pub fn fig_list(which: &str, all: &[&str]) -> Vec<String> {
+    if which == "all" {
+        all.iter().map(|s| s.to_string()).collect()
+    } else {
+        which
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(String::from)
+            .collect()
+    }
+}
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
@@ -154,5 +194,48 @@ mod tests {
         let a = parse(&["x"]);
         assert_eq!(a.get_or("engine", "auto"), "auto");
         assert_eq!(a.get_usize("samples", 42).unwrap(), 42);
+    }
+
+    #[test]
+    fn typoed_flags_rejected_per_subcommand() {
+        // a typo'd --samples against each registry entry that accepts it
+        for known in [flags::FIGURES, flags::ENERGY, flags::VALIDATE] {
+            let a = parse(&["x", "--smaples", "64"]);
+            let err = a.ensure_known(known).unwrap_err().to_string();
+            assert!(err.contains("--smaples"), "{err}");
+            assert!(err.contains("known:"), "{err}");
+        }
+        // serve/query accept their own flags…
+        let a = parse(&["serve", "--addr", "127.0.0.1:0", "--cache", "64"]);
+        assert!(a.ensure_known(flags::SERVE).is_ok());
+        let a = parse(&["query", "--json", "{}"]);
+        assert!(a.ensure_known(flags::QUERY).is_ok());
+        // …and reject each other's
+        let a = parse(&["query", "--cache", "64"]);
+        assert!(a.ensure_known(flags::QUERY).is_err());
+    }
+
+    #[test]
+    fn campaign_flags_are_a_subset_everywhere_they_apply() {
+        for known in [flags::FIGURES, flags::ENERGY, flags::SERVE] {
+            for f in flags::CAMPAIGN {
+                assert!(known.contains(f), "{f} missing from {known:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig_list_expansion() {
+        let all = ["fig4", "table1", "fig8"];
+        assert_eq!(fig_list("all", &all), vec!["fig4", "table1", "fig8"]);
+        assert_eq!(fig_list("fig8", &all), vec!["fig8"]);
+        assert_eq!(
+            fig_list("fig4, table1", &all),
+            vec!["fig4", "table1"],
+            "whitespace around commas is tolerated"
+        );
+        assert_eq!(fig_list("fig4,,table1,", &all), vec!["fig4", "table1"]);
+        // unknown ids pass through — figures::run reports them properly
+        assert_eq!(fig_list("fig99", &all), vec!["fig99"]);
     }
 }

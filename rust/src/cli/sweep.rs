@@ -1,0 +1,202 @@
+//! Sweep-campaign construction shared by the `grcim sweep` subcommand,
+//! the `grcim query sweep` client, and the serve layer's `sweep` handler —
+//! one place turns "experiment descriptions" (TOML sections or JSON
+//! request entries) into [`ExperimentSpec`]s, so the CLI and the service
+//! cannot drift.
+
+use crate::config::Config;
+use crate::coordinator::{CampaignConfig, ExperimentSpec};
+use crate::distributions::Distribution;
+use crate::formats::FpFormat;
+use crate::mac::FormatPair;
+use crate::runtime::EngineKind;
+use anyhow::{bail, Context, Result};
+
+/// Default Monte-Carlo samples per experiment when the config has no
+/// top-level `samples` key.
+pub const DEFAULT_SAMPLES: usize = 16_384;
+
+/// Input-distribution names accepted by sweep configs and requests.
+pub const DISTRIBUTIONS: &[&str] =
+    &["uniform", "max_entropy", "gauss_outliers", "clipped_gauss"];
+
+/// Resolve a distribution by its config name; `fmt` parameterizes
+/// `max_entropy` (the experiment's input format).
+pub fn dist_by_name(name: &str, fmt: FpFormat) -> Result<Distribution> {
+    Ok(match name {
+        "uniform" => Distribution::Uniform,
+        "max_entropy" => Distribution::max_entropy(fmt),
+        "gauss_outliers" => Distribution::gauss_outliers(),
+        "clipped_gauss" => Distribution::clipped_gauss4(),
+        other => bail!(
+            "unknown distribution '{other}' (known: {})",
+            DISTRIBUTIONS.join(", ")
+        ),
+    })
+}
+
+/// Build one experiment from sweep fields: input format FP(n_e, n_m)
+/// against max-entropy FP4 weights (the paper's sweep convention).
+pub fn experiment_spec(
+    name: &str,
+    n_e: f64,
+    n_m: f64,
+    nr: usize,
+    distribution: &str,
+    samples: usize,
+) -> Result<ExperimentSpec> {
+    if n_e < 1.0 || n_m < 0.0 {
+        bail!("experiment '{name}': n_e must be >= 1 and n_m >= 0");
+    }
+    if nr == 0 {
+        bail!("experiment '{name}': nr must be positive");
+    }
+    let fmt = FpFormat::fp(n_e as u32, n_m as u32);
+    Ok(ExperimentSpec {
+        id: name.to_string(),
+        fmts: FormatPair::new(fmt, FpFormat::fp4_e2m1()),
+        dist_x: dist_by_name(distribution, fmt)?,
+        dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+        nr,
+        samples,
+    })
+}
+
+/// A fully resolved sweep: campaign settings plus the experiment grid.
+#[derive(Debug, Clone)]
+pub struct SweepPlan {
+    pub campaign: CampaignConfig,
+    pub samples: usize,
+    pub specs: Vec<ExperimentSpec>,
+}
+
+impl SweepPlan {
+    /// Resolve a parsed TOML config: top-level `seed`/`samples`, an
+    /// optional `[engine] kind`, and one `[[experiment]]` section per
+    /// grid point (`name` required; `n_e`, `n_m`, `nr`, `distribution`
+    /// optional with the paper's defaults).
+    pub fn from_config(cfg: &Config) -> Result<SweepPlan> {
+        let mut campaign = CampaignConfig::default();
+        if let Some(seed) = cfg.root.get("seed").and_then(|v| v.as_f64()) {
+            campaign.seed = seed as u64;
+        }
+        if let Some(engine) = cfg
+            .section("engine")
+            .and_then(|t| t.get("kind"))
+            .and_then(|v| v.as_str())
+        {
+            campaign.engine = EngineKind::parse(engine)?;
+        }
+        let samples = cfg
+            .root
+            .get("samples")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(DEFAULT_SAMPLES);
+
+        let mut specs = Vec::new();
+        for exp in cfg.sections_named("experiment") {
+            let name = exp
+                .get("name")
+                .and_then(|v| v.as_str())
+                .context("experiment needs a name")?;
+            let n_e = exp.get("n_e").and_then(|v| v.as_f64()).unwrap_or(2.0);
+            let n_m = exp.get("n_m").and_then(|v| v.as_f64()).unwrap_or(2.0);
+            let nr = exp.get("nr").and_then(|v| v.as_usize()).unwrap_or(32);
+            let dist = exp
+                .get("distribution")
+                .and_then(|v| v.as_str())
+                .unwrap_or("uniform");
+            specs.push(experiment_spec(name, n_e, n_m, nr, dist, samples)?);
+        }
+        if specs.is_empty() {
+            bail!("config has no [[experiment]] sections");
+        }
+        Ok(SweepPlan { campaign, samples, specs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = r#"
+seed = 42
+samples = 2048
+
+[engine]
+kind = "rust"
+
+[[experiment]]
+name = "fig10-e3"
+n_e = 3
+n_m = 2
+nr = 32
+distribution = "uniform"
+
+[[experiment]]
+name = "llm"
+n_e = 4
+distribution = "gauss_outliers"
+"#;
+
+    #[test]
+    fn resolves_full_config() {
+        let plan =
+            SweepPlan::from_config(&Config::parse(GOOD).unwrap()).unwrap();
+        assert_eq!(plan.campaign.seed, 42);
+        assert_eq!(plan.campaign.engine, EngineKind::Rust);
+        assert_eq!(plan.samples, 2048);
+        assert_eq!(plan.specs.len(), 2);
+        assert_eq!(plan.specs[0].id, "fig10-e3");
+        assert_eq!(plan.specs[0].fmts.x, FpFormat::fp(3, 2));
+        assert_eq!(plan.specs[0].samples, 2048);
+        // defaults applied: n_m = 2, nr = 32, FP4 max-entropy weights
+        assert_eq!(plan.specs[1].fmts.x, FpFormat::fp(4, 2));
+        assert_eq!(plan.specs[1].nr, 32);
+    }
+
+    #[test]
+    fn missing_experiment_sections_is_an_error() {
+        let err = SweepPlan::from_config(
+            &Config::parse("seed = 1\nsamples = 64\n").unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("no [[experiment]] sections"), "{err}");
+    }
+
+    #[test]
+    fn nameless_experiment_is_an_error() {
+        let text = "[[experiment]]\nn_e = 2\n";
+        let err = SweepPlan::from_config(&Config::parse(text).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("needs a name"), "{err}");
+    }
+
+    #[test]
+    fn unknown_distribution_is_an_error() {
+        let text = "[[experiment]]\nname = \"x\"\ndistribution = \"cauchy\"\n";
+        let err = format!(
+            "{:#}",
+            SweepPlan::from_config(&Config::parse(text).unwrap()).unwrap_err()
+        );
+        assert!(err.contains("unknown distribution 'cauchy'"), "{err}");
+    }
+
+    #[test]
+    fn invalid_format_fields_are_errors_not_panics() {
+        assert!(experiment_spec("x", 0.0, 2.0, 32, "uniform", 64).is_err());
+        assert!(experiment_spec("x", 2.0, 2.0, 0, "uniform", 64).is_err());
+    }
+
+    #[test]
+    fn every_listed_distribution_resolves() {
+        for name in DISTRIBUTIONS {
+            assert!(
+                dist_by_name(name, FpFormat::fp6_e3m2()).is_ok(),
+                "{name}"
+            );
+        }
+    }
+}

@@ -5,6 +5,24 @@
 //! All component energies are in **femtojoules** (capacitance parameters in
 //! fF, V_DD in volts). Per-operation figures divide one matrix-vector
 //! multiplication by `2 * NR * NC` (each MAC counts as two operations).
+//!
+//! # Example
+//!
+//! ```
+//! use grcim::energy::{energy_per_op, CimArch, TechParams};
+//! use grcim::formats::FpFormat;
+//! use grcim::mac::FormatPair;
+//!
+//! let tech = TechParams::default();
+//! // ADC energy grows with resolution (linear + 4^ENOB thermal terms)
+//! assert!(tech.e_adc(8.0) > tech.e_adc(6.0));
+//!
+//! let fmts = FormatPair::new(FpFormat::fp4_e2m1(), FpFormat::fp4_e2m1());
+//! let e = energy_per_op(CimArch::GrUnit, fmts, 32, 32, 6.0, &tech);
+//! assert!(e.total() > 0.0);
+//! let sum: f64 = e.components().iter().map(|(_, v)| *v).sum();
+//! assert!((sum - e.total()).abs() < 1e-9);
+//! ```
 
 pub mod arch;
 

@@ -83,6 +83,13 @@ impl SpecPoint {
     pub fn from_format(fmt: FpFormat) -> Self {
         SpecPoint { dr_bits: fmt.dr_bits(), n_m_eff: fmt.n_m + 1.0 }
     }
+
+    /// From the paper's dB axes: DR_dB = 6.02 · DR_bits and
+    /// SQNR_dB = 6.02 · N_M_eff + 10.79. The single conversion shared by
+    /// `grcim energy` and the serve layer's `energy` request.
+    pub fn from_db(dr_db: f64, sqnr_db: f64) -> Self {
+        SpecPoint { dr_bits: dr_db / 6.02, n_m_eff: (sqnr_db - 10.79) / 6.02 }
+    }
 }
 
 /// Whether a granularity fits the native gain-ranging range.
@@ -116,9 +123,74 @@ impl PointResult {
 }
 
 /// Dimensioning distribution for the conventional/INT side: uniform at the
-/// spec's narrowest valid bounds (paper Sec. IV-B).
-fn narrow_bounds_dist(fp: FpFormat) -> Distribution {
+/// spec's narrowest valid bounds (paper Sec. IV-B). Public because the
+/// serve layer builds the same two experiments per spec point to route
+/// them through its aggregate cache.
+pub fn narrow_bounds_dist(fp: FpFormat) -> Distribution {
     Distribution::UniformScaled { r: (2.0 * exp2(-fp.e_max)).min(1.0) }
+}
+
+/// Evaluate one spec point from its two campaign aggregates: `agg_int` is
+/// the INT/narrow-bounds experiment (conventional + gr-int dimensioning),
+/// `agg_fp` the FP/full-scale one (gr-unit / gr-row). Returns `None` left
+/// of the INT line. Shared by [`evaluate_points`] and the serve layer's
+/// `energy` handler (which feeds it cached aggregates).
+pub fn evaluate_at(
+    p: &SpecPoint,
+    agg_int: &ColumnAgg,
+    agg_fp: &ColumnAgg,
+    tech: &TechParams,
+) -> Option<PointResult> {
+    let (fp, int) = (p.fp_format()?, p.int_format()?);
+    let w_fmt = weight_fmt();
+    let cfg = SpecConfig::default();
+
+    let enob_conv = required_enob(agg_int, Arch::Conventional, cfg).enob;
+    let e_conv = energy_per_op(
+        CimArch::Conventional,
+        FormatPair::new(int, w_fmt),
+        NR,
+        NC,
+        enob_conv,
+        tech,
+    );
+
+    let mut gr_all = Vec::new();
+    // unit / row on the FP aggregate
+    for (arch, sarch) in
+        [(CimArch::GrUnit, Arch::GrUnit), (CimArch::GrRow, Arch::GrRow)]
+    {
+        if native_ok(arch, fp, w_fmt) {
+            let enob = required_enob(agg_fp, sarch, cfg).enob;
+            let e = energy_per_op(
+                arch,
+                FormatPair::new(fp, w_fmt),
+                NR,
+                NC,
+                enob,
+                tech,
+            );
+            gr_all.push((arch, enob, e));
+        }
+    }
+    // INT granularity on the INT aggregate (weight-side gain ranging)
+    if native_ok(CimArch::GrInt, int, w_fmt) {
+        let enob = required_enob(agg_int, Arch::GrInt, cfg).enob;
+        let e = energy_per_op(
+            CimArch::GrInt,
+            FormatPair::new(int, w_fmt),
+            NR,
+            NC,
+            enob,
+            tech,
+        );
+        gr_all.push((CimArch::GrInt, enob, e));
+    }
+    let gr_best = gr_all
+        .iter()
+        .min_by(|a, b| a.2.total().partial_cmp(&b.2.total()).unwrap())
+        .cloned();
+    Some(PointResult { spec: *p, enob_conv, e_conv, gr_best, gr_all })
 }
 
 /// Evaluate a set of spec points with a single campaign (two MC
@@ -162,7 +234,6 @@ pub fn evaluate_points(
     }
 
     let aggs = run_campaign(&specs, &ctx.campaign)?;
-    let cfg = SpecConfig::default();
 
     let mut out = Vec::with_capacity(points.len());
     for (p, idx) in points.iter().zip(index) {
@@ -170,64 +241,9 @@ pub fn evaluate_points(
             out.push(None);
             continue;
         };
-        let fp = p.fp_format().unwrap();
-        let int = p.int_format().unwrap();
         let agg_int: &ColumnAgg = &aggs[int_idx];
         let agg_fp: &ColumnAgg = &aggs[fp_idx];
-
-        let enob_conv = required_enob(agg_int, Arch::Conventional, cfg).enob;
-        let e_conv = energy_per_op(
-            CimArch::Conventional,
-            FormatPair::new(int, w_fmt),
-            NR,
-            NC,
-            enob_conv,
-            tech,
-        );
-
-        let mut gr_all = Vec::new();
-        // unit / row on the FP aggregate
-        for (arch, sarch) in [
-            (CimArch::GrUnit, Arch::GrUnit),
-            (CimArch::GrRow, Arch::GrRow),
-        ] {
-            if native_ok(arch, fp, w_fmt) {
-                let enob = required_enob(agg_fp, sarch, cfg).enob;
-                let e = energy_per_op(
-                    arch,
-                    FormatPair::new(fp, w_fmt),
-                    NR,
-                    NC,
-                    enob,
-                    tech,
-                );
-                gr_all.push((arch, enob, e));
-            }
-        }
-        // INT granularity on the INT aggregate (weight-side gain ranging)
-        if native_ok(CimArch::GrInt, int, w_fmt) {
-            let enob = required_enob(agg_int, Arch::GrInt, cfg).enob;
-            let e = energy_per_op(
-                CimArch::GrInt,
-                FormatPair::new(int, w_fmt),
-                NR,
-                NC,
-                enob,
-                tech,
-            );
-            gr_all.push((CimArch::GrInt, enob, e));
-        }
-        let gr_best = gr_all
-            .iter()
-            .min_by(|a, b| a.2.total().partial_cmp(&b.2.total()).unwrap())
-            .cloned();
-        out.push(Some(PointResult {
-            spec: *p,
-            enob_conv,
-            e_conv,
-            gr_best,
-            gr_all,
-        }));
+        out.push(evaluate_at(p, agg_int, agg_fp, tech));
     }
     Ok(out)
 }

@@ -19,6 +19,23 @@
 //! well-defined (the exponent grid remains integer-stepped, offset by
 //! `e_max`). `INT-N` is the exact degenerate case `e_max = 1`
 //! (uniform grid of step `2^-(N-1)` over [-1, 1]); see [`FpFormat::int`].
+//!
+//! # Example
+//!
+//! ```
+//! use grcim::formats::FpFormat;
+//!
+//! let fp4 = FpFormat::fp4_e2m1(); // the OCP MX 4-bit format
+//! assert_eq!(fp4.to_string(), "FP4_E2M1");
+//! assert_eq!(fp4.quantize(5.0), 0.75); // saturates at vmax
+//! assert_eq!(fp4.quantize(0.26), 0.25); // rounds on the mantissa grid
+//! assert_eq!(fp4.codebook().len(), 8); // non-negative magnitudes
+//!
+//! // INT-N is the e_max = 1 degenerate case of the same quantizer
+//! let int8 = FpFormat::int(8);
+//! assert_eq!(int8.dr_bits(), 8.0);
+//! assert_eq!(int8.quantize(0.3), 0.296875); // uniform 2^-7 grid
+//! ```
 
 pub mod maxent;
 

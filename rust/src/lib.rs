@@ -26,8 +26,39 @@
 //!
 //! Entry points: the [`coordinator`] runs sweep campaigns over the
 //! [`runtime`] engines; [`figures`] regenerates every table and figure of
-//! the paper's evaluation; `examples/` shows the public API; the golden
-//! regression suite (`rust/tests/golden.rs`) pins exact campaign numbers.
+//! the paper's evaluation; the [`server`] keeps the process resident and
+//! answers spec-point queries over TCP from a spec-keyed result cache;
+//! `examples/` shows the public API; the golden regression suite
+//! (`rust/tests/golden.rs`) pins exact campaign numbers.
+//!
+//! # Quickstart
+//!
+//! One Monte-Carlo experiment end-to-end — simulate a column MAC
+//! campaign on the pure-Rust oracle, then solve the paper's ADC
+//! requirement from the aggregate:
+//!
+//! ```
+//! use grcim::coordinator::{run_experiment, ExperimentSpec};
+//! use grcim::distributions::Distribution;
+//! use grcim::formats::FpFormat;
+//! use grcim::mac::FormatPair;
+//! use grcim::runtime::RustEngine;
+//! use grcim::spec::{delta_enob, SpecConfig};
+//!
+//! let spec = ExperimentSpec {
+//!     id: "quickstart".into(),
+//!     fmts: FormatPair::new(FpFormat::fp6_e3m2(), FpFormat::fp4_e2m1()),
+//!     dist_x: Distribution::Uniform,
+//!     dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+//!     nr: 32,
+//!     samples: 2048,
+//! };
+//! let agg = run_experiment(&RustEngine, &spec, 7)?;
+//! assert_eq!(agg.samples(), 2048);
+//! // the paper's headline: gain ranging relaxes the ADC requirement
+//! assert!(delta_enob(&agg, SpecConfig::default()) > 1.0);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
 pub mod analog;
 pub mod benchkit;
@@ -44,6 +75,7 @@ pub mod propcheck;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod server;
 pub mod spec;
 pub mod stats;
 pub mod util;

@@ -1,29 +1,25 @@
 //! `grcim` — CLI launcher for the GR-CIM design-space exploration
 //! framework.
 //!
-//! Subcommands:
-//!   figures   regenerate paper tables/figures (--fig all|fig4|...|table1)
-//!   energy    query the energy model at one (DR, SQNR) spec point
-//!   validate  cross-check the PJRT artifacts against the Rust oracle
-//!             (needs a build with `--features pjrt`)
-//!   info      show artifact registry + engine status
-//!   sweep     run a campaign described by a TOML config
-//!
-//! Common flags: --engine rust|pjrt|auto, --artifacts DIR, --out DIR,
-//! --samples N, --seed N, --workers N, --quick, --verbose, --quiet.
-//!
-//! The default build is self-contained: every command runs on the pure-
-//! Rust oracle with no artifacts present (`--engine auto` falls back).
+//! Subcommands: `figures`, `energy`, `sweep`, `serve`, `query`,
+//! `validate`, `info`. The full flag and wire-protocol reference lives in
+//! `docs/CLI.md`; the module map in `docs/ARCHITECTURE.md`.
 
 use anyhow::{bail, Context, Result};
-use grcim::cli::Args;
-use grcim::coordinator::{run_campaign, CampaignConfig, ExperimentSpec};
+use grcim::cli::sweep::SweepPlan;
+use grcim::cli::{fig_list, flags, Args};
+use grcim::config::Json;
+use grcim::coordinator::{run_campaign, CampaignConfig};
+#[cfg(feature = "pjrt")]
 use grcim::distributions::Distribution;
 use grcim::figures::{FigureCtx, ALL};
+#[cfg(feature = "pjrt")]
 use grcim::formats::FpFormat;
+#[cfg(feature = "pjrt")]
 use grcim::mac::FormatPair;
 use grcim::report::Table;
 use grcim::runtime::{ArtifactRegistry, EngineKind};
+use grcim::server::{proto, ServeConfig, Server, DEFAULT_ADDR};
 use grcim::spec::{required_enob, Arch, SpecConfig};
 use grcim::util::{self, Level};
 use std::path::PathBuf;
@@ -31,41 +27,41 @@ use std::path::PathBuf;
 const USAGE: &str = "\
 grcim — Gain-Ranging CIM design-space exploration (paper reproduction)
 
-USAGE: grcim <command> [flags]
+USAGE: grcim <command> [flags]          full reference: docs/CLI.md
 
 COMMANDS:
-  figures    regenerate paper figures/tables
-             --fig all|fig4|table1|fig8|fig9|fig10|fig11|fig12|ablations
-             --out results --samples 65536 --quick
-  energy     energy model at a spec point: --dr <dB> --sqnr <dB>
-  validate   PJRT artifacts vs the pure-Rust oracle (--features pjrt builds)
-  sweep      run a TOML campaign: grcim sweep <config.toml>
+  figures    regenerate paper figures/tables   --fig all|fig4|...|table1
+  energy     energy model at a spec point      --dr <dB> --sqnr <dB>
+  sweep      run a TOML campaign               grcim sweep <config.toml>
+  serve      resident campaign service (NDJSON/TCP, cached + coalesced)
+  query      client for a running serve        grcim query energy --dr 36
+  validate   PJRT artifacts vs the Rust oracle (--features pjrt builds)
   info       artifact + engine status
 
-COMMON FLAGS:
-  --engine rust|pjrt|auto   backend (default auto)
-  --artifacts DIR           artifact directory (default ./artifacts)
-  --workers N               worker threads (default: cores)
-  --seed N                  campaign seed
-  --verbose / --quiet       log level
+COMMON FLAGS: --engine rust|pjrt|auto, --artifacts DIR, --workers N,
+  --seed N, --samples N, --verbose, --quiet
 ";
+
+/// The artifact directory for this invocation: `--artifacts`, else
+/// `$GRCIM_ARTIFACTS`, else `./artifacts` (one resolution shared by every
+/// subcommand that touches artifacts).
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(ArtifactRegistry::default_dir)
+}
 
 fn campaign_from_args(args: &Args) -> Result<CampaignConfig> {
     Ok(CampaignConfig {
         engine: EngineKind::parse(args.get_or("engine", "auto"))?,
-        artifacts_dir: PathBuf::from(args.get_or(
-            "artifacts",
-            ArtifactRegistry::default_dir().to_str().unwrap_or("artifacts"),
-        )),
+        artifacts_dir: artifacts_dir(args),
         workers: args.get_usize("workers", 0)?,
         seed: args.get_u64("seed", 0xC1A0_57A7)?,
     })
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {
-    args.ensure_known(&[
-        "fig", "out", "samples", "engine", "artifacts", "workers", "seed",
-    ])?;
+    args.ensure_known(flags::FIGURES)?;
     let mut ctx = FigureCtx {
         campaign: campaign_from_args(args)?,
         samples: args.get_usize("samples", 65_536)?,
@@ -74,14 +70,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     if args.has("quick") {
         ctx = ctx.quick();
     }
-    let which = args.get_or("fig", "all");
-    let ids: Vec<&str> = if which == "all" {
-        ALL.to_vec()
-    } else {
-        which.split(',').collect()
-    };
+    let ids = fig_list(args.get_or("fig", "all"), ALL);
     let mut failed = Vec::new();
-    for id in ids {
+    for id in &ids {
         let t = util::Timer::new(format!("figure {id}"));
         let fr = grcim::figures::run(id, &ctx)?;
         let text = fr.emit(&ctx.out_dir)?;
@@ -98,9 +89,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
 }
 
 fn cmd_energy(args: &Args) -> Result<()> {
-    args.ensure_known(&[
-        "dr", "sqnr", "samples", "engine", "artifacts", "workers", "seed",
-    ])?;
+    args.ensure_known(flags::ENERGY)?;
     let dr = args.get_f64("dr", 30.1)?;
     let sqnr = args.get_f64("sqnr", 22.83)?;
     let ctx = FigureCtx {
@@ -108,10 +97,7 @@ fn cmd_energy(args: &Args) -> Result<()> {
         samples: args.get_usize("samples", 16_384)?,
         out_dir: PathBuf::from("results"),
     };
-    let p = grcim::figures::fig12::SpecPoint {
-        dr_bits: dr / 6.02,
-        n_m_eff: (sqnr - 10.79) / 6.02,
-    };
+    let p = grcim::figures::fig12::SpecPoint::from_db(dr, sqnr);
     let tech = grcim::energy::TechParams::default();
     let res =
         grcim::figures::fig12::evaluate_points(&ctx, &[p], ctx.samples, &tech)?;
@@ -156,11 +142,8 @@ fn cmd_validate(_args: &Args) -> Result<()> {
 
 #[cfg(feature = "pjrt")]
 fn cmd_validate(args: &Args) -> Result<()> {
-    args.ensure_known(&["artifacts", "samples", "seed"])?;
-    let dir = PathBuf::from(args.get_or(
-        "artifacts",
-        ArtifactRegistry::default_dir().to_str().unwrap_or("artifacts"),
-    ));
+    args.ensure_known(flags::VALIDATE)?;
+    let dir = artifacts_dir(args);
     let reg = ArtifactRegistry::load(&dir)?;
     let pjrt = grcim::runtime::PjrtEngine::from_registry(&reg)?;
     let rust = grcim::runtime::RustEngine;
@@ -192,10 +175,8 @@ fn cmd_validate(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let dir = PathBuf::from(args.get_or(
-        "artifacts",
-        ArtifactRegistry::default_dir().to_str().unwrap_or("artifacts"),
-    ));
+    args.ensure_known(flags::INFO)?;
+    let dir = artifacts_dir(args);
     match ArtifactRegistry::load(&dir) {
         Ok(reg) => {
             println!(
@@ -227,6 +208,7 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
+    args.ensure_known(flags::SWEEP)?;
     let path = args
         .positional
         .first()
@@ -234,57 +216,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .or_else(|| args.get("config").map(String::from))
         .context("sweep needs a config file: grcim sweep <config.toml>")?;
     let cfg = grcim::config::Config::load(std::path::Path::new(&path))?;
-    let mut campaign = CampaignConfig::default();
-    if let Some(seed) = cfg.root.get("seed").and_then(|v| v.as_f64()) {
-        campaign.seed = seed as u64;
-    }
-    if let Some(engine) = cfg
-        .section("engine")
-        .and_then(|t| t.get("kind"))
-        .and_then(|v| v.as_str())
-    {
-        campaign.engine = EngineKind::parse(engine)?;
-    }
-    let samples = cfg
-        .root
-        .get("samples")
-        .and_then(|v| v.as_usize())
-        .unwrap_or(16_384);
-
-    let mut specs = Vec::new();
-    for exp in cfg.sections_named("experiment") {
-        let name = exp
-            .get("name")
-            .and_then(|v| v.as_str())
-            .context("experiment needs a name")?;
-        let n_e = exp.get("n_e").and_then(|v| v.as_f64()).unwrap_or(2.0);
-        let n_m = exp.get("n_m").and_then(|v| v.as_f64()).unwrap_or(2.0);
-        let nr = exp.get("nr").and_then(|v| v.as_usize()).unwrap_or(32);
-        let dist = exp
-            .get("distribution")
-            .and_then(|v| v.as_str())
-            .unwrap_or("uniform");
-        let fmt = FpFormat::fp(n_e as u32, n_m as u32);
-        let dist_x = match dist {
-            "uniform" => Distribution::Uniform,
-            "max_entropy" => Distribution::max_entropy(fmt),
-            "gauss_outliers" => Distribution::gauss_outliers(),
-            "clipped_gauss" => Distribution::clipped_gauss4(),
-            other => bail!("unknown distribution '{other}'"),
-        };
-        specs.push(ExperimentSpec {
-            id: name.to_string(),
-            fmts: FormatPair::new(fmt, FpFormat::fp4_e2m1()),
-            dist_x,
-            dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
-            nr,
-            samples,
-        });
-    }
-    if specs.is_empty() {
-        bail!("config has no [[experiment]] sections");
-    }
-    let aggs = run_campaign(&specs, &campaign)?;
+    let plan = SweepPlan::from_config(&cfg)?;
+    let aggs = run_campaign(&plan.specs, &plan.campaign)?;
     let mut t = Table::new(
         "sweep results",
         &[
@@ -293,7 +226,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         ],
     );
     let scfg = SpecConfig::default();
-    for (spec, agg) in specs.iter().zip(&aggs) {
+    for (spec, agg) in plan.specs.iter().zip(&aggs) {
         t.row(vec![
             spec.id.clone(),
             agg.samples().to_string(),
@@ -304,6 +237,159 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", t.to_markdown());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.ensure_known(flags::SERVE)?;
+    let server = Server::spawn(ServeConfig {
+        addr: args.get_or("addr", DEFAULT_ADDR).to_string(),
+        campaign: campaign_from_args(args)?,
+        cache_entries: args.get_usize("cache", 1024)?,
+    })?;
+    println!("grcim serve listening on {}", server.local_addr());
+    println!("protocol: one JSON request per line (see docs/CLI.md)");
+    server.join()
+}
+
+/// `--seed` as a JSON-safe number (JSON carries f64; larger seeds would
+/// silently truncate, so they are rejected here like on the server).
+fn json_seed(args: &Args) -> Result<Option<f64>> {
+    if args.get("seed").is_none() {
+        return Ok(None);
+    }
+    let s = args.get_u64("seed", 0)?;
+    if s > proto::MAX_JSON_SEED {
+        bail!("--seed must be <= 2^53 for query (JSON numbers are f64)");
+    }
+    Ok(Some(s as f64))
+}
+
+/// Build a request line from `grcim query <kind>` flags (or pass raw JSON
+/// through with `--json`).
+fn build_request(kind: &str, args: &Args) -> Result<String> {
+    match kind {
+        "info" => Ok(r#"{"cmd":"info"}"#.to_string()),
+        "energy" => {
+            let mut pairs = vec![
+                ("cmd", Json::Str("energy".to_string())),
+                ("dr", Json::Num(args.get_f64("dr", 30.1)?)),
+                ("sqnr", Json::Num(args.get_f64("sqnr", 22.83)?)),
+                (
+                    "samples",
+                    Json::Num(args.get_usize(
+                        "samples",
+                        proto::DEFAULT_SAMPLES,
+                    )? as f64),
+                ),
+            ];
+            if let Some(s) = json_seed(args)? {
+                pairs.push(("seed", Json::Num(s)));
+            }
+            Ok(proto::obj(pairs).to_string())
+        }
+        "figure" => {
+            let id = args
+                .get("id")
+                .map(String::from)
+                .or_else(|| args.positional.get(1).cloned())
+                .context("figure query needs an id: grcim query figure --id fig9")?;
+            let mut pairs = vec![
+                ("cmd", Json::Str("figure".to_string())),
+                ("id", Json::Str(id)),
+                (
+                    "samples",
+                    Json::Num(args.get_usize(
+                        "samples",
+                        proto::DEFAULT_FIGURE_SAMPLES,
+                    )? as f64),
+                ),
+            ];
+            if let Some(s) = json_seed(args)? {
+                pairs.push(("seed", Json::Num(s)));
+            }
+            Ok(proto::obj(pairs).to_string())
+        }
+        "sweep" => {
+            let path = args.positional.get(1).context(
+                "sweep query needs a config: grcim query sweep <config.toml>",
+            )?;
+            let cfg = grcim::config::Config::load(std::path::Path::new(path))?;
+            let mut exps = Vec::new();
+            for exp in cfg.sections_named("experiment") {
+                let mut pairs = Vec::new();
+                if let Some(name) = exp.get("name").and_then(|v| v.as_str()) {
+                    pairs.push(("name", Json::Str(name.to_string())));
+                }
+                for key in ["n_e", "n_m", "nr"] {
+                    if let Some(n) = exp.get(key).and_then(|v| v.as_f64()) {
+                        pairs.push((key, Json::Num(n)));
+                    }
+                }
+                if let Some(d) =
+                    exp.get("distribution").and_then(|v| v.as_str())
+                {
+                    pairs.push(("distribution", Json::Str(d.to_string())));
+                }
+                exps.push(proto::obj(pairs));
+            }
+            let mut pairs = vec![
+                ("cmd", Json::Str("sweep".to_string())),
+                ("experiments", Json::Arr(exps)),
+            ];
+            // flag overrides config, config overrides the server default
+            if let Some(n) = args
+                .get("samples")
+                .map(|_| args.get_usize("samples", 0))
+                .transpose()?
+                .or_else(|| cfg.root.get("samples").and_then(|v| v.as_usize()))
+            {
+                pairs.push(("samples", Json::Num(n as f64)));
+            }
+            if let Some(s) = json_seed(args)? {
+                pairs.push(("seed", Json::Num(s)));
+            } else if let Some(s) =
+                cfg.root.get("seed").and_then(|v| v.as_f64())
+            {
+                pairs.push(("seed", Json::Num(s)));
+            }
+            Ok(proto::obj(pairs).to_string())
+        }
+        other => bail!(
+            "unknown query kind '{other}' (energy|sweep|figure|info, or \
+             --json '<raw request>')"
+        ),
+    }
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    args.ensure_known(flags::QUERY)?;
+    let addr = args.get_or("addr", DEFAULT_ADDR);
+    let line = match args.get("json") {
+        // the server ignores blank lines, so an empty request would hang
+        // the client waiting for a response that never comes
+        Some(raw) if raw.trim().is_empty() => {
+            bail!("--json needs a non-empty request object")
+        }
+        Some(raw) => raw.to_string(),
+        None => {
+            let kind = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .unwrap_or("info");
+            build_request(kind, args)?
+        }
+    };
+    let resp = grcim::server::query_once(addr, &line)?;
+    println!("{resp}");
+    let j = Json::parse(&resp).context("server sent malformed JSON")?;
+    if j.get("ok") != Some(&Json::Bool(true)) {
+        bail!(
+            "server error: {}",
+            j.get("error").and_then(Json::as_str).unwrap_or("unknown")
+        );
+    }
     Ok(())
 }
 
@@ -330,6 +416,8 @@ fn main() {
         "validate" => cmd_validate(&args),
         "info" => cmd_info(&args),
         "sweep" => cmd_sweep(&args),
+        "serve" => cmd_serve(&args),
+        "query" => cmd_query(&args),
         other => {
             eprintln!("unknown command '{other}'\n\n{USAGE}");
             std::process::exit(2);

@@ -1,7 +1,10 @@
 //! Result tables: CSV + aligned-text (markdown-ish) emitters used by the
-//! figure harness and the CLI.
+//! figure harness and the CLI, plus the machine-readable JSON forms the
+//! serve layer returns over the wire.
 
+use crate::config::Json;
 use anyhow::{Context, Result};
+use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::path::Path;
 
@@ -100,6 +103,29 @@ impl Table {
         s
     }
 
+    /// Machine-readable form: `{"title", "headers": [...], "rows": [[...]]}`
+    /// (cells stay strings — they are already formatted for display).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("title".to_string(), Json::Str(self.title.clone()));
+        m.insert(
+            "headers".to_string(),
+            Json::Arr(self.headers.iter().cloned().map(Json::Str).collect()),
+        );
+        m.insert(
+            "rows".to_string(),
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| {
+                        Json::Arr(r.iter().cloned().map(Json::Str).collect())
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+
     /// Write `<dir>/<stem>.csv`.
     pub fn save_csv(&self, dir: &Path, stem: &str) -> Result<()> {
         std::fs::create_dir_all(dir)
@@ -152,6 +178,39 @@ impl FigureResult {
 
     pub fn all_hold(&self) -> bool {
         self.checks.iter().all(|c| c.holds)
+    }
+
+    /// Machine-readable form of the whole figure (the serve layer's
+    /// `figure` response): name, tables, paper-vs-measured checks, and the
+    /// overall verdict.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("all_hold".to_string(), Json::Bool(self.all_hold()));
+        m.insert(
+            "tables".to_string(),
+            Json::Arr(self.tables.iter().map(Table::to_json).collect()),
+        );
+        m.insert(
+            "checks".to_string(),
+            Json::Arr(
+                self.checks
+                    .iter()
+                    .map(|c| {
+                        let mut cm = BTreeMap::new();
+                        cm.insert("claim".into(), Json::Str(c.claim.clone()));
+                        cm.insert("paper".into(), Json::Str(c.paper.clone()));
+                        cm.insert(
+                            "measured".into(),
+                            Json::Str(c.measured.clone()),
+                        );
+                        cm.insert("holds".into(), Json::Bool(c.holds));
+                        Json::Obj(cm)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
     }
 
     /// Persist all tables and render the summary text.
@@ -217,6 +276,32 @@ mod tests {
         assert_eq!(Table::f(1.5), "1.5000");
         assert!(Table::f(1e-9).contains('e'));
         assert!(Table::f(1.23e6).contains('e'));
+    }
+
+    #[test]
+    fn table_and_figure_json_round_trip() {
+        let mut t = Table::new("series", &["x", "y"]);
+        t.row(vec!["1".into(), "a,b".into()]);
+        let j = t.to_json();
+        // must survive the wire codec
+        let again = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(again.get("title").and_then(Json::as_str), Some("series"));
+        assert_eq!(again.get("headers").unwrap().items().len(), 2);
+        assert_eq!(
+            again.get("rows").unwrap().items()[0].items()[1].as_str(),
+            Some("a,b")
+        );
+
+        let mut fr = FigureResult::new("figX");
+        fr.tables.push(t);
+        fr.check("gap", ">= 1.5 b", "1.2 b", false);
+        let j = Json::parse(&fr.to_json().to_string()).unwrap();
+        assert_eq!(j.get("name").and_then(Json::as_str), Some("figX"));
+        assert_eq!(j.get("all_hold"), Some(&Json::Bool(false)));
+        let checks = j.get("checks").unwrap().items();
+        assert_eq!(checks.len(), 1);
+        assert_eq!(checks[0].get("holds"), Some(&Json::Bool(false)));
+        assert_eq!(j.get("tables").unwrap().items().len(), 1);
     }
 
     #[test]

@@ -1,0 +1,435 @@
+//! Sharded LRU result cache with single-flight miss coalescing.
+//!
+//! The serve layer keys every expensive computation (a Monte-Carlo
+//! campaign aggregate, a rendered figure) by a **canonical spec string**
+//! (see [`crate::server::proto::spec_key`]) and stores the result behind
+//! an `Arc`, so repeated requests share one immutable value. Two
+//! guarantees matter for correctness under load:
+//!
+//! 1. **Bit-stable hits** — a hit returns the exact value the cold
+//!    compute produced (same `Arc`), so responses rendered from it are
+//!    byte-identical to the cold response.
+//! 2. **Single-flight misses** — concurrent requests for the same key
+//!    perform the computation exactly once; followers block on the
+//!    leader's flight and receive its result. The `computes` counter
+//!    therefore equals the number of distinct cold keys, which the
+//!    integration test asserts directly.
+//!
+//! Sharding bounds lock contention: keys hash to one of
+//! [`ShardedCache::SHARDS`] independently locked maps, so concurrent
+//! requests for different keys rarely serialize. Eviction is
+//! least-recently-used per shard (an access-tick scan — shards are small,
+//! so the O(len) scan on insert is noise next to the campaigns being
+//! cached).
+//!
+//! # Example
+//!
+//! ```
+//! use grcim::server::cache::{Outcome, ShardedCache};
+//!
+//! let cache: ShardedCache<u64> = ShardedCache::new(64);
+//! let (v, how) = cache.get_or_compute("answer", || Ok(42)).unwrap();
+//! assert_eq!((*v, how), (42, Outcome::Computed));
+//! let (v, how) = cache.get_or_compute("answer", || unreachable!()).unwrap();
+//! assert_eq!((*v, how), (42, Outcome::Hit));
+//! assert_eq!(cache.stats().computes, 1);
+//! ```
+
+use anyhow::{anyhow, Result};
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// How a [`ShardedCache::get_or_compute`] call was served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Served from the cache without blocking.
+    Hit,
+    /// Coalesced onto another thread's in-flight computation.
+    Coalesced,
+    /// This call ran the computation (cold miss).
+    Computed,
+}
+
+impl Outcome {
+    /// True when no fresh computation ran for this call.
+    pub fn is_cached(&self) -> bool {
+        !matches!(self, Outcome::Computed)
+    }
+}
+
+/// Monotonic counters exposed by the `info` request.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+    /// Computations actually executed (single-flight leaders only).
+    pub computes: u64,
+    /// Misses that waited on another thread's computation.
+    pub coalesced: u64,
+    pub evictions: u64,
+    /// Entries currently resident.
+    pub entries: u64,
+}
+
+#[derive(Debug, Default)]
+struct Counters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    computes: AtomicU64,
+    coalesced: AtomicU64,
+    evictions: AtomicU64,
+}
+
+struct Entry<V> {
+    value: Arc<V>,
+    /// Last-access tick for LRU eviction.
+    tick: u64,
+}
+
+struct Shard<V> {
+    map: HashMap<String, Entry<V>>,
+    tick: u64,
+}
+
+impl<V> Default for Shard<V> {
+    fn default() -> Self {
+        Shard { map: HashMap::new(), tick: 0 }
+    }
+}
+
+/// One in-flight computation; followers wait on the condvar.
+struct Flight<V> {
+    /// `None` while pending; errors are carried as strings so followers
+    /// can reconstruct them (`anyhow::Error` is not `Clone`).
+    state: Mutex<Option<std::result::Result<Arc<V>, String>>>,
+    cv: Condvar,
+}
+
+impl<V> Flight<V> {
+    fn new() -> Self {
+        Flight { state: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn finish(&self, res: std::result::Result<Arc<V>, String>) {
+        let mut st = self.state.lock().unwrap();
+        if st.is_none() {
+            *st = Some(res);
+        }
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> std::result::Result<Arc<V>, String> {
+        let mut st = self.state.lock().unwrap();
+        while st.is_none() {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.as_ref().unwrap().clone()
+    }
+}
+
+/// If the leader's computation panics, deregister the flight and mark it
+/// failed, so followers neither wait forever nor inherit a permanently
+/// poisoned key.
+struct FlightGuard<'a, V> {
+    flight: &'a Flight<V>,
+    flights: &'a Mutex<HashMap<String, Arc<Flight<V>>>>,
+    key: &'a str,
+    done: bool,
+}
+
+impl<V> Drop for FlightGuard<'_, V> {
+    fn drop(&mut self) {
+        if !self.done {
+            if let Ok(mut flights) = self.flights.lock() {
+                flights.remove(self.key);
+            }
+            self.flight.finish(Err("computation panicked".into()));
+        }
+    }
+}
+
+/// A sharded, capacity-bounded, single-flight LRU cache.
+pub struct ShardedCache<V> {
+    shards: Vec<Mutex<Shard<V>>>,
+    per_shard_cap: usize,
+    flights: Mutex<HashMap<String, Arc<Flight<V>>>>,
+    counters: Counters,
+}
+
+impl<V: Send + Sync> ShardedCache<V> {
+    /// Lock stripes; capacity divides evenly across them.
+    pub const SHARDS: usize = 8;
+
+    /// A cache holding at most `capacity` entries (minimum one per shard).
+    pub fn new(capacity: usize) -> Self {
+        let per_shard_cap = (capacity / Self::SHARDS).max(1);
+        ShardedCache {
+            shards: (0..Self::SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
+            per_shard_cap,
+            flights: Mutex::new(HashMap::new()),
+            counters: Counters::default(),
+        }
+    }
+
+    fn shard(&self, key: &str) -> &Mutex<Shard<V>> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    /// Look up `key` without computing on a miss.
+    pub fn get(&self, key: &str) -> Option<Arc<V>> {
+        let mut shard = self.shard(key).lock().unwrap();
+        shard.tick += 1;
+        let tick = shard.tick;
+        shard.map.get_mut(key).map(|e| {
+            e.tick = tick;
+            Arc::clone(&e.value)
+        })
+    }
+
+    fn insert(&self, key: &str, value: Arc<V>) {
+        let mut shard = self.shard(key).lock().unwrap();
+        shard.tick += 1;
+        let tick = shard.tick;
+        if !shard.map.contains_key(key) && shard.map.len() >= self.per_shard_cap {
+            // evict the least-recently-used entry of this shard
+            if let Some(lru) = shard
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(k, _)| k.clone())
+            {
+                shard.map.remove(&lru);
+                self.counters.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        shard.map.insert(key.to_string(), Entry { value, tick });
+    }
+
+    /// Return the cached value for `key`, or run `compute` exactly once
+    /// across all concurrent callers and cache its result.
+    ///
+    /// The returned [`Outcome`] reports how this particular call was
+    /// served. Errors are not cached: a failed computation is re-run by
+    /// the next request for the same key (its followers receive the same
+    /// error).
+    pub fn get_or_compute(
+        &self,
+        key: &str,
+        compute: impl FnOnce() -> Result<V>,
+    ) -> Result<(Arc<V>, Outcome)> {
+        if let Some(v) = self.get(key) {
+            self.counters.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((v, Outcome::Hit));
+        }
+
+        // Become the leader or join an existing flight. The cache is
+        // re-checked under the flights lock: a leader that just finished
+        // inserts into the cache *before* removing its flight (also under
+        // this lock), so a miss here cannot lose a completed value. The
+        // miss counter is bumped only once the role is decided, keeping
+        // the invariant hits + coalesced + computes == lookups exact
+        // (and misses == coalesced + computes).
+        let (flight, leader) = {
+            let mut flights = self.flights.lock().unwrap();
+            if let Some(v) = self.get(key) {
+                self.counters.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((v, Outcome::Hit));
+            }
+            self.counters.misses.fetch_add(1, Ordering::Relaxed);
+            match flights.get(key) {
+                Some(f) => (Arc::clone(f), false),
+                None => {
+                    let f = Arc::new(Flight::new());
+                    flights.insert(key.to_string(), Arc::clone(&f));
+                    (f, true)
+                }
+            }
+        };
+
+        if !leader {
+            self.counters.coalesced.fetch_add(1, Ordering::Relaxed);
+            return match flight.wait() {
+                Ok(v) => Ok((v, Outcome::Coalesced)),
+                Err(msg) => Err(anyhow!(msg)),
+            };
+        }
+
+        self.counters.computes.fetch_add(1, Ordering::Relaxed);
+        let mut guard = FlightGuard {
+            flight: &flight,
+            flights: &self.flights,
+            key,
+            done: false,
+        };
+        let result = compute();
+        guard.done = true;
+        drop(guard);
+
+        match result {
+            Ok(v) => {
+                let v = Arc::new(v);
+                {
+                    // insert, then retire the flight under the flights
+                    // lock (see the re-check above)
+                    let mut flights = self.flights.lock().unwrap();
+                    self.insert(key, Arc::clone(&v));
+                    flights.remove(key);
+                }
+                flight.finish(Ok(Arc::clone(&v)));
+                Ok((v, Outcome::Computed))
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                {
+                    let mut flights = self.flights.lock().unwrap();
+                    flights.remove(key);
+                }
+                flight.finish(Err(msg));
+                Err(e)
+            }
+        }
+    }
+
+    /// Current counter values plus resident entry count.
+    pub fn stats(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            hits: self.counters.hits.load(Ordering::Relaxed),
+            misses: self.counters.misses.load(Ordering::Relaxed),
+            computes: self.counters.computes.load(Ordering::Relaxed),
+            coalesced: self.counters.coalesced.load(Ordering::Relaxed),
+            evictions: self.counters.evictions.load(Ordering::Relaxed),
+            entries: self
+                .shards
+                .iter()
+                .map(|s| s.lock().unwrap().map.len() as u64)
+                .sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Barrier;
+
+    #[test]
+    fn hit_returns_same_arc() {
+        let c: ShardedCache<Vec<f64>> = ShardedCache::new(16);
+        let (a, o1) = c.get_or_compute("k", || Ok(vec![1.0, 2.0])).unwrap();
+        let (b, o2) = c.get_or_compute("k", || Ok(vec![9.0])).unwrap();
+        assert_eq!(o1, Outcome::Computed);
+        assert_eq!(o2, Outcome::Hit);
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.computes), (1, 1, 1));
+        assert_eq!(s.entries, 1);
+    }
+
+    #[test]
+    fn errors_are_not_cached() {
+        let c: ShardedCache<u32> = ShardedCache::new(16);
+        assert!(c.get_or_compute("k", || anyhow::bail!("nope")).is_err());
+        let (v, o) = c.get_or_compute("k", || Ok(7)).unwrap();
+        assert_eq!((*v, o), (7, Outcome::Computed));
+        assert_eq!(c.stats().computes, 2);
+    }
+
+    #[test]
+    fn concurrent_identical_keys_compute_once() {
+        const THREADS: usize = 8;
+        static CALLS: AtomicUsize = AtomicUsize::new(0);
+        let c: Arc<ShardedCache<u64>> = Arc::new(ShardedCache::new(16));
+        let barrier = Arc::new(Barrier::new(THREADS));
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                let barrier = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    let (v, _) = c
+                        .get_or_compute("shared", || {
+                            CALLS.fetch_add(1, Ordering::SeqCst);
+                            // widen the race window
+                            std::thread::sleep(
+                                std::time::Duration::from_millis(20),
+                            );
+                            Ok(99)
+                        })
+                        .unwrap();
+                    *v
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 99);
+        }
+        assert_eq!(CALLS.load(Ordering::SeqCst), 1, "single-flight violated");
+        assert_eq!(c.stats().computes, 1);
+    }
+
+    #[test]
+    fn followers_see_leader_error() {
+        let c: Arc<ShardedCache<u64>> = Arc::new(ShardedCache::new(16));
+        let barrier = Arc::new(Barrier::new(2));
+        let c2 = Arc::clone(&c);
+        let b2 = Arc::clone(&barrier);
+        let follower = std::thread::spawn(move || {
+            b2.wait();
+            // let the leader claim the flight first
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            c2.get_or_compute("k", || Ok(1)).map(|(v, o)| (*v, o))
+        });
+        barrier.wait();
+        let lead = c.get_or_compute("k", || {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            anyhow::bail!("leader failed")
+        });
+        // overwhelmingly this thread leads (the follower sleeps first);
+        // if scheduling inverts the race, it coalesced onto the
+        // follower's successful compute instead — both are valid
+        if let Err(e) = &lead {
+            assert!(format!("{e:#}").contains("leader failed"));
+        }
+        // the follower either coalesced onto the failing flight (error),
+        // arrived after its removal and recomputed, or led successfully
+        match follower.join().unwrap() {
+            Err(e) => assert!(format!("{e:#}").contains("leader failed")),
+            Ok((v, _)) => assert_eq!(v, 1),
+        }
+    }
+
+    #[test]
+    fn lru_evicts_oldest_within_shard() {
+        // capacity 8 over 8 shards = 1 entry per shard: inserting two keys
+        // that land in the same shard must evict the older one
+        let c: ShardedCache<u32> = ShardedCache::new(8);
+        let keys: Vec<String> = (0..64).map(|i| format!("k{i}")).collect();
+        for (i, k) in keys.iter().enumerate() {
+            c.get_or_compute(k, || Ok(i as u32)).unwrap();
+        }
+        let s = c.stats();
+        assert!(s.entries as usize <= ShardedCache::<u32>::SHARDS);
+        assert_eq!(s.evictions, 64 - s.entries);
+        // most recent key per shard survives; re-getting an evicted key
+        // recomputes
+        assert!(c.get("k0").is_none() || c.get("k63").is_some());
+    }
+
+    #[test]
+    fn distinct_keys_do_not_coalesce() {
+        let c: ShardedCache<u32> = ShardedCache::new(16);
+        c.get_or_compute("a", || Ok(1)).unwrap();
+        c.get_or_compute("b", || Ok(2)).unwrap();
+        let s = c.stats();
+        assert_eq!(s.computes, 2);
+        assert_eq!(s.coalesced, 0);
+        assert_eq!(*c.get("a").unwrap(), 1);
+        assert_eq!(*c.get("b").unwrap(), 2);
+    }
+}

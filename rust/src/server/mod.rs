@@ -1,0 +1,736 @@
+//! `grcim serve` — a resident campaign service over TCP.
+//!
+//! The one-shot CLI pays the full Monte-Carlo cost on every invocation.
+//! This layer keeps the process resident and serves spec-point queries
+//! over newline-delimited JSON (see [`proto`]), with three properties:
+//!
+//! * **Spec-keyed caching** — every campaign aggregate is addressed by a
+//!   canonical key ([`proto::spec_key`]) covering exactly the inputs that
+//!   determine its bits; repeated queries are O(lookup).
+//! * **Single-flight coalescing** — concurrent identical requests share
+//!   one computation ([`cache::ShardedCache`]), so a thundering herd of
+//!   the same spec costs one campaign.
+//! * **Coordinator dispatch** — misses run through
+//!   [`crate::coordinator::run_campaign`] and its per-worker
+//!   `JobBuffers`, so the MC hot path stays allocation-free under load.
+//!
+//! Request lifecycle:
+//!
+//! ```text
+//!  client line ── parse_request ──▶ Request
+//!                                     │ canonicalize (spec_key)
+//!                                     ▼
+//!                          ShardedCache::get_or_compute
+//!                           hit │          │ miss (single-flight leader)
+//!                               │          ▼
+//!                               │   run_campaign ──▶ worker pool
+//!                               ▼          │         (JobBuffers)
+//!                           Arc<ColumnAgg> ◀─────────┘
+//!                                     │ evaluate (spec solver + energy)
+//!                                     ▼
+//!  client line ◀── ok_line/err_line ── Json result
+//! ```
+//!
+//! Threading: one acceptor thread plus one thread per connection; all
+//! handles are joined on [`Server::shutdown`], which is graceful (idle
+//! handlers notice the flag within one read-timeout tick; busy handlers
+//! finish their in-flight request first).
+
+pub mod cache;
+pub mod proto;
+
+use crate::cli::sweep::experiment_spec;
+use crate::config::Json;
+use crate::coordinator::{run_campaign, CampaignConfig, ExperimentSpec};
+use crate::distributions::Distribution;
+use crate::energy::{EnergyBreakdown, TechParams};
+use crate::figures::{self, fig12, FigureCtx};
+use crate::mac::FormatPair;
+use crate::runtime::EngineKind;
+use crate::spec::{required_enob, Arch, SpecConfig};
+use crate::stats::ColumnAgg;
+use anyhow::{bail, Context, Result};
+use cache::{Outcome, ShardedCache, StatsSnapshot};
+use proto::{obj, Request};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Default listen address of `grcim serve`.
+pub const DEFAULT_ADDR: &str = "127.0.0.1:4080";
+
+/// How often idle connection handlers re-check the shutdown flag.
+const IDLE_TICK: Duration = Duration::from_millis(200);
+
+/// Largest accepted request line; a client streaming more without a
+/// newline gets an error and is disconnected (bounds per-connection
+/// memory).
+const MAX_LINE: usize = 1 << 20;
+
+/// Server construction parameters.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Listen address; port 0 binds an ephemeral port (tests).
+    pub addr: String,
+    /// Campaign settings every computation runs under (engine, workers,
+    /// default seed, artifacts directory).
+    pub campaign: CampaignConfig,
+    /// Total cached entries across the aggregate and figure caches.
+    pub cache_entries: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: DEFAULT_ADDR.to_string(),
+            campaign: CampaignConfig::default(),
+            cache_entries: 1024,
+        }
+    }
+}
+
+/// The request handlers plus their result caches — everything the server
+/// shares across connections. Usable without the TCP layer (the unit
+/// tests drive [`CampaignService::respond`] directly).
+pub struct CampaignService {
+    campaign: CampaignConfig,
+    aggs: ShardedCache<ColumnAgg>,
+    figs: ShardedCache<String>,
+}
+
+fn arch_json(name: &str, enob: f64, b: &EnergyBreakdown) -> Json {
+    obj(vec![
+        ("arch", Json::Str(name.to_string())),
+        ("enob", Json::Num(enob)),
+        ("total_fj", Json::Num(b.total())),
+        ("adc", Json::Num(b.adc)),
+        ("dac", Json::Num(b.dac)),
+        ("cells", Json::Num(b.cells)),
+        ("exp_logic", Json::Num(b.exp_logic)),
+        ("tree", Json::Num(b.tree)),
+        ("norm_mult", Json::Num(b.norm_mult)),
+    ])
+}
+
+fn stats_json(s: &StatsSnapshot) -> Json {
+    obj(vec![
+        ("entries", Json::Num(s.entries as f64)),
+        ("hits", Json::Num(s.hits as f64)),
+        ("misses", Json::Num(s.misses as f64)),
+        ("computes", Json::Num(s.computes as f64)),
+        ("coalesced", Json::Num(s.coalesced as f64)),
+        ("evictions", Json::Num(s.evictions as f64)),
+    ])
+}
+
+impl CampaignService {
+    pub fn new(campaign: CampaignConfig, cache_entries: usize) -> Self {
+        CampaignService {
+            campaign,
+            aggs: ShardedCache::new(cache_entries),
+            figs: ShardedCache::new((cache_entries / 8).max(8)),
+        }
+    }
+
+    fn engine_name(&self) -> &'static str {
+        match self.campaign.engine {
+            EngineKind::Rust => "rust",
+            EngineKind::Pjrt => "pjrt",
+            EngineKind::Auto => "auto",
+        }
+    }
+
+    /// The campaign aggregate for one spec, through the cache. A miss
+    /// runs the spec as its own single-spec campaign (grid index 0 in the
+    /// seeding scheme), so the result is a pure function of
+    /// (spec, seed, engine) — the property the cache key relies on.
+    pub fn aggregate(
+        &self,
+        spec: &ExperimentSpec,
+        seed: u64,
+    ) -> Result<(Arc<ColumnAgg>, Outcome)> {
+        let key = proto::spec_key(spec, seed, self.engine_name());
+        self.aggs.get_or_compute(&key, || {
+            let cfg = CampaignConfig { seed, ..self.campaign.clone() };
+            let mut aggs = run_campaign(std::slice::from_ref(spec), &cfg)?;
+            Ok(aggs.pop().expect("one aggregate per spec"))
+        })
+    }
+
+    /// Cache counters for the aggregate cache (the integration test's
+    /// single-flight assertion reads `computes` from here via `info`).
+    pub fn aggregate_stats(&self) -> StatsSnapshot {
+        self.aggs.stats()
+    }
+
+    /// Handle one parsed request; returns the response line (no newline).
+    pub fn respond(&self, req: &Request) -> String {
+        let out = match req {
+            Request::Info => self.info().map(|j| (j, false)),
+            Request::Energy { dr_db, sqnr_db, samples, seed } => {
+                self.energy(*dr_db, *sqnr_db, *samples, *seed)
+            }
+            Request::Sweep { samples, seed, experiments } => {
+                self.sweep(*samples, *seed, experiments)
+            }
+            Request::Figure { id, samples, seed } => {
+                self.figure(id, *samples, *seed)
+            }
+        };
+        match out {
+            Ok((result, cached)) => proto::ok_line(result, cached),
+            Err(e) => proto::err_line(&format!("{e:#}")),
+        }
+    }
+
+    fn info(&self) -> Result<Json> {
+        Ok(obj(vec![
+            ("version", Json::Str(env!("CARGO_PKG_VERSION").to_string())),
+            ("proto", Json::Num(proto::PROTO_VERSION as f64)),
+            ("engine", Json::Str(self.engine_name().to_string())),
+            ("workers", Json::Num(self.campaign.effective_workers() as f64)),
+            ("seed", Json::Num(self.campaign.seed as f64)),
+            ("aggregates", stats_json(&self.aggs.stats())),
+            ("figures", stats_json(&self.figs.stats())),
+        ]))
+    }
+
+    /// The Fig. 12 spec-point query: two cached aggregates (INT/narrow
+    /// bounds and FP/full scale) evaluated through
+    /// [`fig12::evaluate_at`].
+    fn energy(
+        &self,
+        dr_db: f64,
+        sqnr_db: f64,
+        samples: usize,
+        seed: Option<u64>,
+    ) -> Result<(Json, bool)> {
+        if samples == 0 {
+            bail!("samples must be positive");
+        }
+        let seed = seed.unwrap_or(self.campaign.seed);
+        let p = fig12::SpecPoint::from_db(dr_db, sqnr_db);
+        let (Some(fp), Some(int)) = (p.fp_format(), p.int_format()) else {
+            bail!(
+                "spec point (DR {dr_db} dB, SQNR {sqnr_db} dB) is left of \
+                 the INT line"
+            );
+        };
+        let w_fmt = fig12::weight_fmt();
+        let w_dist = Distribution::max_entropy(w_fmt);
+        let int_spec = ExperimentSpec {
+            id: "serve-int".to_string(),
+            fmts: FormatPair::new(int, w_fmt),
+            dist_x: fig12::narrow_bounds_dist(fp),
+            dist_w: w_dist.clone(),
+            nr: fig12::NR,
+            samples,
+        };
+        let fp_spec = ExperimentSpec {
+            id: "serve-fp".to_string(),
+            fmts: FormatPair::new(fp, w_fmt),
+            dist_x: Distribution::Uniform,
+            dist_w: w_dist,
+            nr: fig12::NR,
+            samples,
+        };
+        let (agg_int, o1) = self.aggregate(&int_spec, seed)?;
+        let (agg_fp, o2) = self.aggregate(&fp_spec, seed)?;
+        let tech = TechParams::default();
+        let r = fig12::evaluate_at(&p, &agg_int, &agg_fp, &tech)
+            .expect("formats validated above");
+
+        let mut archs = vec![arch_json("conventional", r.enob_conv, &r.e_conv)];
+        for (arch, enob, b) in &r.gr_all {
+            archs.push(arch_json(arch.name(), *enob, b));
+        }
+        let gr_best = match &r.gr_best {
+            Some((a, _, _)) => Json::Str(a.name().to_string()),
+            None => Json::Null,
+        };
+        let result = obj(vec![
+            ("dr_db", Json::Num(dr_db)),
+            ("sqnr_db", Json::Num(sqnr_db)),
+            ("samples", Json::Num(agg_int.samples() as f64)),
+            ("seed", Json::Num(seed as f64)),
+            ("gr_best", gr_best),
+            ("archs", Json::Arr(archs)),
+        ]);
+        Ok((result, o1.is_cached() && o2.is_cached()))
+    }
+
+    /// The sweep query: one cached aggregate per experiment, reported
+    /// like the CLI's sweep table. (Each experiment runs as its own
+    /// single-spec campaign, so its aggregate is reusable across sweeps
+    /// that mix experiments differently — see [`CampaignService::aggregate`].)
+    fn sweep(
+        &self,
+        samples: usize,
+        seed: Option<u64>,
+        experiments: &[proto::SweepExperiment],
+    ) -> Result<(Json, bool)> {
+        if samples == 0 {
+            bail!("samples must be positive");
+        }
+        let seed = seed.unwrap_or(self.campaign.seed);
+        let scfg = SpecConfig::default();
+        let mut rows = Vec::new();
+        let mut cached = true;
+        for e in experiments {
+            let spec = experiment_spec(
+                &e.name,
+                e.n_e,
+                e.n_m,
+                e.nr,
+                &e.distribution,
+                samples,
+            )?;
+            let (agg, o) = self.aggregate(&spec, seed)?;
+            cached &= o.is_cached();
+            rows.push(obj(vec![
+                ("name", Json::Str(e.name.clone())),
+                ("samples", Json::Num(agg.samples() as f64)),
+                (
+                    "enob_conv",
+                    Json::Num(
+                        required_enob(&agg, Arch::Conventional, scfg).enob,
+                    ),
+                ),
+                (
+                    "enob_gr_unit",
+                    Json::Num(required_enob(&agg, Arch::GrUnit, scfg).enob),
+                ),
+                (
+                    "enob_gr_row",
+                    Json::Num(required_enob(&agg, Arch::GrRow, scfg).enob),
+                ),
+                ("mean_n_eff", Json::Num(agg.mean_n_eff())),
+                ("sqnr_db", Json::Num(agg.sqnr_db())),
+            ]));
+        }
+        let result = obj(vec![
+            ("seed", Json::Num(seed as f64)),
+            ("experiments", Json::Arr(rows)),
+        ]);
+        Ok((result, cached))
+    }
+
+    /// The figure query: regenerate one paper figure/table and return it
+    /// as JSON ([`crate::report::FigureResult::to_json`]); the rendered
+    /// JSON text is what the figure cache stores.
+    fn figure(
+        &self,
+        id: &str,
+        samples: usize,
+        seed: Option<u64>,
+    ) -> Result<(Json, bool)> {
+        if samples == 0 {
+            bail!("samples must be positive");
+        }
+        let seed = seed.unwrap_or(self.campaign.seed);
+        let key = proto::figure_key(id, samples, seed, self.engine_name());
+        let campaign = CampaignConfig { seed, ..self.campaign.clone() };
+        let id_owned = id.to_string();
+        let (text, o) = self.figs.get_or_compute(&key, move || {
+            let ctx = FigureCtx {
+                campaign,
+                samples,
+                // figures only write files through `FigureResult::emit`,
+                // which the service never calls; out_dir is unused
+                out_dir: std::env::temp_dir(),
+            };
+            let fr = figures::run(&id_owned, &ctx)?;
+            Ok(fr.to_json().to_string())
+        })?;
+        let figure =
+            Json::parse(&text).context("re-parsing cached figure JSON")?;
+        let result = obj(vec![
+            ("id", Json::Str(id.to_string())),
+            ("figure", figure),
+        ]);
+        Ok((result, o.is_cached()))
+    }
+}
+
+/// A running `grcim serve` instance: acceptor thread + per-connection
+/// handler threads, all joined on [`Server::shutdown`].
+pub struct Server {
+    addr: SocketAddr,
+    service: Arc<CampaignService>,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl Server {
+    /// Bind and start serving in background threads; returns immediately.
+    pub fn spawn(cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let service =
+            Arc::new(CampaignService::new(cfg.campaign, cfg.cache_entries));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+
+        let accept = {
+            let service = Arc::clone(&service);
+            let shutdown = Arc::clone(&shutdown);
+            let conns = Arc::clone(&conns);
+            std::thread::Builder::new()
+                .name("grcim-accept".to_string())
+                .spawn(move || {
+                    for incoming in listener.incoming() {
+                        if shutdown.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let stream = match incoming {
+                            Ok(s) => s,
+                            Err(_) => {
+                                // e.g. EMFILE under fd exhaustion: back
+                                // off instead of busy-spinning on a
+                                // persistently failing accept
+                                std::thread::sleep(IDLE_TICK);
+                                continue;
+                            }
+                        };
+                        let service = Arc::clone(&service);
+                        let flag = Arc::clone(&shutdown);
+                        let handle = std::thread::Builder::new()
+                            .name("grcim-conn".to_string())
+                            .spawn(move || handle_conn(stream, service, flag));
+                        let mut guard = conns.lock().unwrap();
+                        // reap finished handlers so the handle list stays
+                        // bounded by the number of live connections
+                        let (done, live): (Vec<_>, Vec<_>) = guard
+                            .drain(..)
+                            .partition(|h: &JoinHandle<()>| h.is_finished());
+                        *guard = live;
+                        for h in done {
+                            let _ = h.join();
+                        }
+                        if let Ok(h) = handle {
+                            guard.push(h);
+                        }
+                    }
+                })
+                .context("spawning accept thread")?
+        };
+        Ok(Server { addr, service, shutdown, accept: Some(accept), conns })
+    }
+
+    /// The actually bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Direct access to the handlers/caches (stats, in-process queries).
+    pub fn service(&self) -> &CampaignService {
+        &self.service
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // wake the blocking accept with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // idle handlers notice the flag within one IDLE_TICK; busy ones
+        // finish their current request first
+        let handles: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting, drain and join every thread. Clean by
+    /// construction: the acceptor and all connection handlers are joined
+    /// before this returns.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.shutdown_inner();
+        Ok(())
+    }
+
+    /// Block on the acceptor (until the process is killed or another
+    /// thread trips the shutdown flag). `grcim serve` runs this.
+    pub fn join(mut self) -> Result<()> {
+        if let Some(h) = self.accept.take() {
+            h.join()
+                .map_err(|_| anyhow::anyhow!("accept thread panicked"))?;
+        }
+        let handles: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.shutdown_inner();
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    service: Arc<CampaignService>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(IDLE_TICK)).is_err() {
+        return;
+    }
+    let reader_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(reader_half);
+    let mut writer = BufWriter::new(stream);
+    let mut line = String::new();
+    loop {
+        // cap how much a newline-less client can make us buffer
+        let budget = MAX_LINE.saturating_sub(line.len()) as u64;
+        if budget == 0 {
+            let msg = proto::err_line(&format!(
+                "request line exceeds {MAX_LINE} bytes"
+            ));
+            let _ = writer.write_all(msg.as_bytes());
+            let _ = writer.write_all(b"\n");
+            let _ = writer.flush();
+            break;
+        }
+        match std::io::Read::take(&mut reader, budget).read_line(&mut line) {
+            Ok(0) => break, // EOF: client closed
+            Ok(_) if !line.ends_with('\n') && line.len() >= MAX_LINE => {
+                // budget exhausted mid-line: handled at the loop top
+                continue;
+            }
+            Ok(_) => {
+                let resp = respond_line(&service, line.trim());
+                line.clear();
+                if let Some(resp) = resp {
+                    if writer.write_all(resp.as_bytes()).is_err()
+                        || writer.write_all(b"\n").is_err()
+                        || writer.flush().is_err()
+                    {
+                        break;
+                    }
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                // idle tick; any partial input stays accumulated in `line`
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+fn respond_line(service: &CampaignService, line: &str) -> Option<String> {
+    if line.is_empty() {
+        return None; // blank keep-alive lines are ignored
+    }
+    Some(match proto::parse_request(line) {
+        Ok(req) => service.respond(&req),
+        Err(e) => proto::err_line(&format!("{e:#}")),
+    })
+}
+
+/// One-shot client: send a single request line, read a single response
+/// line. Backs `grcim query` and the integration tests.
+pub fn query_once(addr: &str, request_line: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    stream.write_all(request_line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let n = reader.read_line(&mut line)?;
+    if n == 0 {
+        bail!("server closed the connection without responding");
+    }
+    Ok(line.trim_end().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_service() -> CampaignService {
+        CampaignService::new(
+            CampaignConfig {
+                engine: EngineKind::Rust,
+                workers: 2,
+                seed: 11,
+                ..Default::default()
+            },
+            64,
+        )
+    }
+
+    fn result_str(line: &str) -> String {
+        let j = Json::parse(line).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{line}");
+        j.get("result").unwrap().to_string()
+    }
+
+    #[test]
+    fn energy_response_shape_and_cache_flag() {
+        let svc = test_service();
+        let req = proto::parse_request(
+            r#"{"cmd":"energy","dr":30.1,"sqnr":22.83,"samples":512}"#,
+        )
+        .unwrap();
+        let cold = svc.respond(&req);
+        let j = Json::parse(&cold).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("cached"), Some(&Json::Bool(false)));
+        let r = j.get("result").unwrap();
+        // rounded up to one whole coordinator job
+        assert_eq!(r.get("samples").unwrap().as_usize(), Some(2048));
+        let archs = r.get("archs").unwrap().items();
+        assert!(archs.len() >= 2, "conventional + at least one GR");
+        assert_eq!(
+            archs[0].get("arch").and_then(Json::as_str),
+            Some("conventional")
+        );
+        for a in archs {
+            assert!(a.get("total_fj").unwrap().as_f64().unwrap() > 0.0);
+        }
+
+        let warm = svc.respond(&req);
+        let jw = Json::parse(&warm).unwrap();
+        assert_eq!(jw.get("cached"), Some(&Json::Bool(true)));
+        assert_eq!(result_str(&cold), result_str(&warm), "hit must be bit-identical");
+        assert_eq!(svc.aggregate_stats().computes, 2); // int + fp aggregates
+    }
+
+    #[test]
+    fn energy_left_of_int_line_is_an_error() {
+        let svc = test_service();
+        let req = proto::parse_request(
+            r#"{"cmd":"energy","dr":12.0,"sqnr":47.0}"#,
+        )
+        .unwrap();
+        let resp = svc.respond(&req);
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        assert!(j
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("INT line"));
+    }
+
+    #[test]
+    fn sweep_reuses_energy_aggregates_only_when_specs_match() {
+        let svc = test_service();
+        let req = proto::parse_request(
+            r#"{"cmd":"sweep","samples":512,"experiments":[
+                {"name":"a","n_e":3,"n_m":2,"nr":32,"distribution":"uniform"},
+                {"name":"b","n_e":4,"n_m":2,"nr":32,"distribution":"gauss_outliers"}]}"#,
+        )
+        .unwrap();
+        let cold = svc.respond(&req);
+        let j = Json::parse(&cold).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        let rows = j.get("result").unwrap().get("experiments").unwrap().items();
+        assert_eq!(rows.len(), 2);
+        for row in rows {
+            let conv = row.get("enob_conv").unwrap().as_f64().unwrap();
+            let unit = row.get("enob_gr_unit").unwrap().as_f64().unwrap();
+            assert!(conv > unit, "conv {conv} vs gr-unit {unit}");
+        }
+        assert_eq!(svc.aggregate_stats().computes, 2);
+        let warm = svc.respond(&req);
+        assert_eq!(result_str(&cold), result_str(&warm));
+        assert_eq!(svc.aggregate_stats().computes, 2);
+    }
+
+    #[test]
+    fn figure_request_is_cached_and_identical() {
+        let svc = test_service();
+        // table1 is closed-form: fast and deterministic
+        let req = proto::parse_request(
+            r#"{"cmd":"figure","id":"table1","samples":256}"#,
+        )
+        .unwrap();
+        let cold = svc.respond(&req);
+        let warm = svc.respond(&req);
+        assert_eq!(result_str(&cold), result_str(&warm));
+        let j = Json::parse(&warm).unwrap();
+        assert_eq!(j.get("cached"), Some(&Json::Bool(true)));
+        let fig = j.get("result").unwrap().get("figure").unwrap();
+        assert_eq!(fig.get("name").and_then(Json::as_str), Some("table1"));
+        assert_eq!(fig.get("all_hold"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn unknown_figure_id_is_a_clean_error() {
+        let svc = test_service();
+        let req =
+            proto::parse_request(r#"{"cmd":"figure","id":"fig99"}"#).unwrap();
+        let j = Json::parse(&svc.respond(&req)).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        assert!(j
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("unknown figure"));
+    }
+
+    #[test]
+    fn info_reports_engine_and_stats() {
+        let svc = test_service();
+        let j = Json::parse(&svc.respond(&Request::Info)).unwrap();
+        let r = j.get("result").unwrap();
+        assert_eq!(r.get("engine").and_then(Json::as_str), Some("rust"));
+        assert_eq!(r.get("proto").unwrap().as_usize(), Some(1));
+        let aggs = r.get("aggregates").unwrap();
+        assert_eq!(aggs.get("computes").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn server_spawns_serves_and_shuts_down() {
+        let server = Server::spawn(ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            campaign: CampaignConfig {
+                engine: EngineKind::Rust,
+                workers: 2,
+                seed: 3,
+                ..Default::default()
+            },
+            cache_entries: 64,
+        })
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        let resp = query_once(&addr, r#"{"cmd":"info"}"#).unwrap();
+        assert!(Json::parse(&resp).unwrap().get("ok") == Some(&Json::Bool(true)));
+        // malformed input gets an error line, connection stays usable
+        let resp = query_once(&addr, "definitely not json").unwrap();
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        server.shutdown().unwrap();
+        assert!(
+            TcpStream::connect(&addr).is_err(),
+            "listener must be closed after shutdown"
+        );
+    }
+}

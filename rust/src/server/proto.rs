@@ -1,0 +1,391 @@
+//! Wire protocol of `grcim serve`: newline-delimited JSON over TCP, plus
+//! the canonical spec keys the result cache is addressed with.
+//!
+//! Every request is one JSON object on one line with a `"cmd"` field;
+//! every response is one JSON object on one line:
+//!
+//! ```text
+//! -> {"cmd":"energy","dr":30.1,"sqnr":22.83,"samples":4096}
+//! <- {"ok":true,"cached":false,"result":{...}}
+//! -> {"cmd":"nonsense"}
+//! <- {"ok":false,"error":"unknown cmd 'nonsense' (energy|sweep|figure|info)"}
+//! ```
+//!
+//! The `"cached"` flag sits **outside** `"result"` so clients (and the
+//! integration test) can compare the result payload of a cache hit
+//! byte-for-byte against the cold compute — numbers serialize in shortest
+//! round-trip form, so bit-identical aggregates produce identical result
+//! strings.
+//!
+//! # Example
+//!
+//! ```
+//! use grcim::server::proto::{parse_request, Request};
+//!
+//! let req = parse_request(r#"{"cmd":"energy","dr":30.1,"sqnr":22.83}"#).unwrap();
+//! match req {
+//!     Request::Energy { dr_db, sqnr_db, .. } => {
+//!         assert_eq!(dr_db, 30.1);
+//!         assert_eq!(sqnr_db, 22.83);
+//!     }
+//!     _ => panic!("wrong request kind"),
+//! }
+//! assert!(parse_request("{\"cmd\":\"warp\"}").is_err());
+//! ```
+
+use crate::config::Json;
+use crate::coordinator::ExperimentSpec;
+use crate::distributions::Distribution;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Protocol revision; bumped on any incompatible wire or key change.
+pub const PROTO_VERSION: u64 = 1;
+
+/// Default Monte-Carlo samples for `energy`/`sweep` requests — one
+/// definition shared with the sweep-TOML path so the CLI and the service
+/// cannot drift.
+pub const DEFAULT_SAMPLES: usize = crate::cli::sweep::DEFAULT_SAMPLES;
+
+/// Largest seed a JSON number can carry exactly (2^53; JSON numbers are
+/// f64). Larger seeds are rejected rather than silently truncated.
+pub const MAX_JSON_SEED: u64 = 1 << 53;
+/// Default samples for `figure` requests (the `--quick` figure budget —
+/// figures sweep many campaign points, so the service default is modest).
+pub const DEFAULT_FIGURE_SAMPLES: usize = 8_192;
+
+/// One `[[experiment]]`-shaped entry of a `sweep` request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepExperiment {
+    pub name: String,
+    pub n_e: f64,
+    pub n_m: f64,
+    pub nr: usize,
+    pub distribution: String,
+}
+
+/// A parsed request line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Server, engine, and cache status.
+    Info,
+    /// Energy model at one (DR, SQNR) spec point — the Fig. 12 query unit.
+    Energy {
+        dr_db: f64,
+        sqnr_db: f64,
+        samples: usize,
+        seed: Option<u64>,
+    },
+    /// A campaign over explicit experiments (the TOML sweep, as JSON).
+    Sweep {
+        samples: usize,
+        seed: Option<u64>,
+        experiments: Vec<SweepExperiment>,
+    },
+    /// Regenerate one paper figure/table and return it as JSON.
+    Figure {
+        id: String,
+        samples: usize,
+        seed: Option<u64>,
+    },
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let j = Json::parse(line.trim()).context("request is not valid JSON")?;
+    let cmd = j
+        .get("cmd")
+        .and_then(Json::as_str)
+        .context("request needs a string 'cmd' field")?;
+    let seed = match j.get("seed").and_then(Json::as_f64) {
+        None => None,
+        Some(s) => {
+            if s < 0.0 || s.fract() != 0.0 || s > MAX_JSON_SEED as f64 {
+                bail!(
+                    "seed must be a non-negative integer <= 2^53 \
+                     (JSON numbers are f64), got {s}"
+                );
+            }
+            Some(s as u64)
+        }
+    };
+    match cmd {
+        "info" => Ok(Request::Info),
+        "energy" => Ok(Request::Energy {
+            dr_db: j.get("dr").and_then(Json::as_f64).unwrap_or(30.1),
+            sqnr_db: j.get("sqnr").and_then(Json::as_f64).unwrap_or(22.83),
+            samples: j
+                .get("samples")
+                .and_then(Json::as_usize)
+                .unwrap_or(DEFAULT_SAMPLES),
+            seed,
+        }),
+        "sweep" => {
+            let mut experiments = Vec::new();
+            let items = j
+                .get("experiments")
+                .context("sweep needs an 'experiments' array")?
+                .items();
+            for e in items {
+                experiments.push(SweepExperiment {
+                    name: e
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .context("experiment needs a name")?
+                        .to_string(),
+                    n_e: e.get("n_e").and_then(Json::as_f64).unwrap_or(2.0),
+                    n_m: e.get("n_m").and_then(Json::as_f64).unwrap_or(2.0),
+                    nr: e.get("nr").and_then(Json::as_usize).unwrap_or(32),
+                    distribution: e
+                        .get("distribution")
+                        .and_then(Json::as_str)
+                        .unwrap_or("uniform")
+                        .to_string(),
+                });
+            }
+            if experiments.is_empty() {
+                bail!("sweep has no experiments");
+            }
+            Ok(Request::Sweep {
+                samples: j
+                    .get("samples")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(DEFAULT_SAMPLES),
+                seed,
+                experiments,
+            })
+        }
+        "figure" => Ok(Request::Figure {
+            id: j
+                .get("id")
+                .and_then(Json::as_str)
+                .context("figure needs an 'id' field")?
+                .to_string(),
+            samples: j
+                .get("samples")
+                .and_then(Json::as_usize)
+                .unwrap_or(DEFAULT_FIGURE_SAMPLES),
+            seed,
+        }),
+        other => bail!("unknown cmd '{other}' (energy|sweep|figure|info)"),
+    }
+}
+
+/// Build a JSON object from key/value pairs (stable key order courtesy of
+/// the underlying `BTreeMap`).
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+/// Render a success response line (no trailing newline).
+pub fn ok_line(result: Json, cached: bool) -> String {
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("cached", Json::Bool(cached)),
+        ("result", result),
+    ])
+    .to_string()
+}
+
+/// Render an error response line (no trailing newline).
+pub fn err_line(message: &str) -> String {
+    obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(message.to_string())),
+    ])
+    .to_string()
+}
+
+/// Hex of the exact bit pattern of an `f64` — canonical-key fragments must
+/// distinguish parameters that differ in any bit (display rounding like
+/// `{:.3}` would alias nearby design-space points onto one key).
+fn bits(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+fn canonical_dist(d: &Distribution) -> String {
+    match d {
+        Distribution::Uniform => "uniform".into(),
+        Distribution::MaxEntropy(me) => {
+            let f = me.format();
+            format!("maxent:{}:{}", bits(f.e_max), bits(f.n_m))
+        }
+        Distribution::GaussOutliers(p) => {
+            format!("gaussout:{}:{}", bits(p.eps), bits(p.k))
+        }
+        Distribution::ClippedGauss { clip_sigmas } => {
+            format!("clipgauss:{}", bits(*clip_sigmas))
+        }
+        Distribution::UniformScaled { r } => format!("uscaled:{}", bits(*r)),
+    }
+}
+
+/// Canonical cache key of one experiment's campaign aggregate.
+///
+/// Covers exactly the inputs that determine the aggregate bit pattern:
+/// both formats (exact bits), both distributions (exact parameter bits),
+/// array depth, requested samples, campaign seed, and the engine kind.
+/// The experiment `id` is deliberately excluded (it labels reports, it
+/// does not seed anything), as is the worker count (aggregates are
+/// bit-identical for any worker count — a coordinator invariant asserted
+/// in `rust/tests/properties.rs`).
+pub fn spec_key(spec: &ExperimentSpec, seed: u64, engine: &str) -> String {
+    format!(
+        "v{PROTO_VERSION}|agg|eng={engine}|seed={seed}|nr={}|n={}|x={}:{}|w={}:{}|dx={}|dw={}",
+        spec.nr,
+        spec.samples,
+        bits(spec.fmts.x.e_max),
+        bits(spec.fmts.x.n_m),
+        bits(spec.fmts.w.e_max),
+        bits(spec.fmts.w.n_m),
+        canonical_dist(&spec.dist_x),
+        canonical_dist(&spec.dist_w),
+    )
+}
+
+/// Canonical cache key of one rendered figure.
+pub fn figure_key(id: &str, samples: usize, seed: u64, engine: &str) -> String {
+    format!("v{PROTO_VERSION}|fig|eng={engine}|seed={seed}|n={samples}|id={id}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::FpFormat;
+    use crate::mac::FormatPair;
+
+    fn spec() -> ExperimentSpec {
+        ExperimentSpec {
+            id: "t".into(),
+            fmts: FormatPair::new(FpFormat::fp6_e3m2(), FpFormat::fp4_e2m1()),
+            dist_x: Distribution::Uniform,
+            dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+            nr: 32,
+            samples: 4096,
+        }
+    }
+
+    #[test]
+    fn parses_every_request_kind() {
+        assert_eq!(parse_request(r#"{"cmd":"info"}"#).unwrap(), Request::Info);
+        let e = parse_request(
+            r#"{"cmd":"energy","dr":36.12,"sqnr":28.85,"samples":2048,"seed":9}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            e,
+            Request::Energy {
+                dr_db: 36.12,
+                sqnr_db: 28.85,
+                samples: 2048,
+                seed: Some(9)
+            }
+        );
+        let s = parse_request(
+            r#"{"cmd":"sweep","samples":1024,"experiments":[
+                {"name":"a","n_e":3,"n_m":2,"nr":32,"distribution":"uniform"}]}"#,
+        )
+        .unwrap();
+        match s {
+            Request::Sweep { samples, seed, experiments } => {
+                assert_eq!(samples, 1024);
+                assert_eq!(seed, None);
+                assert_eq!(experiments.len(), 1);
+                assert_eq!(experiments[0].name, "a");
+                assert_eq!(experiments[0].distribution, "uniform");
+            }
+            other => panic!("{other:?}"),
+        }
+        let f = parse_request(r#"{"cmd":"figure","id":"table1"}"#).unwrap();
+        assert_eq!(
+            f,
+            Request::Figure {
+                id: "table1".into(),
+                samples: DEFAULT_FIGURE_SAMPLES,
+                seed: None
+            }
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"no_cmd":1}"#).is_err());
+        assert!(parse_request(r#"{"cmd":"warp"}"#).is_err());
+        // seeds a JSON f64 cannot carry exactly are rejected, not aliased
+        assert!(parse_request(r#"{"cmd":"info","seed":-1}"#).is_err());
+        assert!(parse_request(r#"{"cmd":"info","seed":1.5}"#).is_err());
+        assert!(
+            parse_request(r#"{"cmd":"info","seed":18446744073709551615}"#)
+                .is_err()
+        );
+        assert!(parse_request(r#"{"cmd":"figure"}"#).is_err()); // no id
+        assert!(parse_request(r#"{"cmd":"sweep","experiments":[]}"#).is_err());
+        assert!(
+            parse_request(r#"{"cmd":"sweep","experiments":[{"n_e":2}]}"#)
+                .is_err(),
+            "experiment without a name must be rejected"
+        );
+    }
+
+    #[test]
+    fn response_lines_are_parseable_json() {
+        let ok = ok_line(obj(vec![("x", Json::Num(1.5))]), true);
+        let j = Json::parse(&ok).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("cached"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("result").unwrap().get("x").unwrap().as_f64(), Some(1.5));
+
+        let err = err_line("boom \"quoted\"");
+        let j = Json::parse(&err).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(j.get("error").and_then(Json::as_str), Some("boom \"quoted\""));
+    }
+
+    #[test]
+    fn spec_key_distinguishes_every_input() {
+        let base = spec();
+        let k0 = spec_key(&base, 7, "rust");
+        // id does NOT participate
+        let mut renamed = base.clone();
+        renamed.id = "other".into();
+        assert_eq!(spec_key(&renamed, 7, "rust"), k0);
+        // everything else does
+        let mut m = base.clone();
+        m.nr = 64;
+        assert_ne!(spec_key(&m, 7, "rust"), k0);
+        let mut m = base.clone();
+        m.samples = 8192;
+        assert_ne!(spec_key(&m, 7, "rust"), k0);
+        let mut m = base.clone();
+        m.fmts = FormatPair::new(FpFormat::fp(3, 3), FpFormat::fp4_e2m1());
+        assert_ne!(spec_key(&m, 7, "rust"), k0);
+        let mut m = base.clone();
+        m.dist_x = Distribution::clipped_gauss4();
+        assert_ne!(spec_key(&m, 7, "rust"), k0);
+        assert_ne!(spec_key(&base, 8, "rust"), k0);
+        assert_ne!(spec_key(&base, 7, "pjrt"), k0);
+    }
+
+    #[test]
+    fn spec_key_separates_nearby_scaled_distributions() {
+        // display rounding would alias these; exact bits must not
+        let mut a = spec();
+        a.dist_x = Distribution::UniformScaled { r: 0.001953125 };
+        let mut b = spec();
+        b.dist_x = Distribution::UniformScaled { r: 0.0019531251 };
+        assert_ne!(spec_key(&a, 7, "rust"), spec_key(&b, 7, "rust"));
+    }
+
+    #[test]
+    fn figure_keys_are_distinct() {
+        let a = figure_key("fig9", 1024, 7, "rust");
+        assert_ne!(a, figure_key("fig10", 1024, 7, "rust"));
+        assert_ne!(a, figure_key("fig9", 2048, 7, "rust"));
+        assert_ne!(a, figure_key("fig9", 1024, 8, "rust"));
+    }
+}

@@ -27,6 +27,34 @@
 //! The input-side-only convention follows the Fig. 10 caption ("only input
 //! quantization noise is considered"); weight quantization is part of the
 //! model, not noise to protect.
+//!
+//! # Example
+//!
+//! ```
+//! use grcim::distributions::Distribution;
+//! use grcim::formats::FpFormat;
+//! use grcim::mac::{simulate_column, FormatPair};
+//! use grcim::rng::Pcg64;
+//! use grcim::spec::{required_enob, Arch, SpecConfig};
+//! use grcim::stats::ColumnAgg;
+//!
+//! // a small Monte-Carlo aggregate straight from the oracle
+//! let (nr, samples) = (32, 512);
+//! let mut rng = Pcg64::seeded(1);
+//! let mut x = vec![0.0; samples * nr];
+//! let mut w = vec![0.0; samples * nr];
+//! Distribution::Uniform.fill(&mut rng, &mut x);
+//! Distribution::max_entropy(FpFormat::fp4_e2m1()).fill(&mut rng, &mut w);
+//! let fmts = FormatPair::new(FpFormat::fp6_e3m2(), FpFormat::fp4_e2m1());
+//! let mut agg = ColumnAgg::new(nr);
+//! agg.push_batch(&simulate_column(&x, &w, nr, fmts));
+//!
+//! // gain ranging needs fewer ADC bits than the conventional path
+//! let cfg = SpecConfig::default();
+//! let conv = required_enob(&agg, Arch::Conventional, cfg);
+//! let gr = required_enob(&agg, Arch::GrUnit, cfg);
+//! assert!(conv.enob > gr.enob);
+//! ```
 
 use crate::stats::ColumnAgg;
 use crate::util::from_db;

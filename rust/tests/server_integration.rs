@@ -1,0 +1,217 @@
+//! Serve-layer integration: a real TCP server hammered by concurrent
+//! clients, asserting the ISSUE-2 acceptance criteria directly —
+//!
+//! * with 8 concurrent clients issuing a mix of 4 distinct specs, the
+//!   server computes each spec exactly once (single-flight `computes`
+//!   counter),
+//! * cache-hit responses are bit-identical to the cold computes, and
+//! * shutdown is clean (acceptor + connection handlers joined; the
+//!   listener port actually closes).
+
+use grcim::config::Json;
+use grcim::coordinator::CampaignConfig;
+use grcim::runtime::EngineKind;
+use grcim::server::{query_once, ServeConfig, Server};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+
+fn spawn_server() -> Server {
+    Server::spawn(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        campaign: CampaignConfig {
+            engine: EngineKind::Rust,
+            workers: 2,
+            seed: 7,
+            ..Default::default()
+        },
+        cache_entries: 256,
+    })
+    .expect("server spawns on an ephemeral port")
+}
+
+/// The payload of a successful response, rendered back to a canonical
+/// string (numbers in shortest round-trip form: equal strings <=> equal
+/// bit patterns).
+fn result_str(line: &str) -> String {
+    let j = Json::parse(line).unwrap_or_else(|e| panic!("{line}: {e}"));
+    assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{line}");
+    j.get("result").expect("ok responses carry a result").to_string()
+}
+
+fn cached_flag(line: &str) -> bool {
+    Json::parse(line).unwrap().get("cached") == Some(&Json::Bool(true))
+}
+
+/// Four distinct spec points (distinct DR ⇒ distinct INT and FP
+/// experiments ⇒ 8 distinct aggregate cache keys).
+fn distinct_requests() -> Vec<String> {
+    [(30.1, 22.83), (36.12, 22.83), (42.14, 28.85), (48.16, 28.85)]
+        .iter()
+        .map(|(dr, sqnr)| {
+            format!(
+                r#"{{"cmd":"energy","dr":{dr},"sqnr":{sqnr},"samples":512}}"#
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn concurrent_clients_single_flight_and_bit_identical_hits() {
+    const CLIENTS: usize = 8;
+    let server = spawn_server();
+    let addr = server.local_addr().to_string();
+    let reqs = distinct_requests();
+
+    // 8 clients, 2 per spec, released together; each client sends its
+    // request twice (the second is a guaranteed cache hit — its own
+    // first response completed).
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|i| {
+            let req = reqs[i % 4].clone();
+            let addr = addr.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                let first = query_once(&addr, &req).unwrap();
+                let second = query_once(&addr, &req).unwrap();
+                (i % 4, first, second)
+            })
+        })
+        .collect();
+
+    let mut per_spec: Vec<Vec<String>> = vec![Vec::new(); 4];
+    for h in handles {
+        let (spec_idx, first, second) = h.join().expect("client panicked");
+        assert!(
+            cached_flag(&second),
+            "second identical request must be served from cache"
+        );
+        per_spec[spec_idx].push(result_str(&first));
+        per_spec[spec_idx].push(result_str(&second));
+    }
+
+    // bit-identical: every response for one spec — cold, coalesced, or
+    // cached — carries the exact same payload
+    for (i, results) in per_spec.iter().enumerate() {
+        assert_eq!(results.len(), 4, "2 clients x 2 requests per spec");
+        for r in &results[1..] {
+            assert_eq!(r, &results[0], "spec {i} responses diverged");
+        }
+    }
+
+    // a later cold-start-free client sees the same bytes again
+    for (i, req) in reqs.iter().enumerate() {
+        let resp = query_once(&addr, req).unwrap();
+        assert!(cached_flag(&resp), "spec {i} must be resident");
+        assert_eq!(result_str(&resp), per_spec[i][0]);
+    }
+
+    // single-flight: 4 specs x 2 aggregates (INT + FP) = exactly 8
+    // computations despite 24 requests
+    let info = query_once(&addr, r#"{"cmd":"info"}"#).unwrap();
+    let j = Json::parse(&info).unwrap();
+    let aggs = j.get("result").unwrap().get("aggregates").unwrap();
+    assert_eq!(
+        aggs.get("computes").unwrap().as_usize(),
+        Some(8),
+        "single-flight violated: {info}"
+    );
+    assert_eq!(aggs.get("entries").unwrap().as_usize(), Some(8));
+    let hits = aggs.get("hits").unwrap().as_usize().unwrap();
+    let coalesced = aggs.get("coalesced").unwrap().as_usize().unwrap();
+    // 20 energy requests -> 40 aggregate lookups, 8 computed, the rest
+    // either hit the cache or coalesced onto a leader
+    assert_eq!(hits + coalesced, 40 - 8, "{info}");
+
+    // clean shutdown: all handles joined inside, port actually closed
+    server.shutdown().expect("clean shutdown");
+    assert!(
+        TcpStream::connect(&addr).is_err(),
+        "listener must be closed after shutdown"
+    );
+}
+
+#[test]
+fn mixed_request_kinds_share_one_connection() {
+    let server = spawn_server();
+    let addr = server.local_addr().to_string();
+
+    // one persistent connection, several request kinds back-to-back
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut send = |line: &str| -> String {
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        resp.trim_end().to_string()
+    };
+
+    let sweep = send(
+        r#"{"cmd":"sweep","samples":512,"experiments":[
+            {"name":"a","n_e":3,"n_m":2,"nr":32,"distribution":"uniform"}]}"#,
+    );
+    let rows = Json::parse(&sweep)
+        .unwrap()
+        .get("result")
+        .unwrap()
+        .get("experiments")
+        .unwrap()
+        .items()
+        .len();
+    assert_eq!(rows, 1);
+
+    // malformed line -> error response, connection survives
+    let err = send("garbage");
+    assert_eq!(Json::parse(&err).unwrap().get("ok"), Some(&Json::Bool(false)));
+
+    let fig = send(r#"{"cmd":"figure","id":"table1","samples":256}"#);
+    let fig_cached = send(r#"{"cmd":"figure","id":"table1","samples":256}"#);
+    assert_eq!(result_str(&fig), result_str(&fig_cached));
+    assert!(cached_flag(&fig_cached));
+
+    let info = send(r#"{"cmd":"info"}"#);
+    assert_eq!(Json::parse(&info).unwrap().get("ok"), Some(&Json::Bool(true)));
+
+    drop(writer);
+    drop(reader);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn shutdown_is_clean_with_an_idle_connection_open() {
+    let server = spawn_server();
+    let addr = server.local_addr().to_string();
+    // a client that connects and then goes silent
+    let idle = TcpStream::connect(&addr).unwrap();
+    // the handler notices the shutdown flag on its next idle tick; this
+    // must not hang even though the client never closed
+    server.shutdown().expect("shutdown with idle connection");
+    drop(idle);
+    assert!(TcpStream::connect(&addr).is_err());
+}
+
+#[test]
+fn distinct_seeds_are_distinct_cache_entries() {
+    let server = spawn_server();
+    let addr = server.local_addr().to_string();
+    let a = query_once(
+        &addr,
+        r#"{"cmd":"energy","dr":30.1,"sqnr":22.83,"samples":512,"seed":1}"#,
+    )
+    .unwrap();
+    let b = query_once(
+        &addr,
+        r#"{"cmd":"energy","dr":30.1,"sqnr":22.83,"samples":512,"seed":2}"#,
+    )
+    .unwrap();
+    assert_ne!(
+        result_str(&a),
+        result_str(&b),
+        "different seeds must not alias in the cache"
+    );
+    server.shutdown().unwrap();
+}

@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""Relative-link checker for the repo's markdown docs.
+
+Usage: python3 tools/check_links.py FILE.md [FILE.md ...]
+
+For every markdown link or image `[text](target)` whose target is not an
+external URL (http/https/mailto) or a pure in-page anchor, verify that
+the referenced file or directory exists relative to the markdown file.
+In-repo anchors (`other.md#section`) are checked for file existence and,
+for markdown targets, for the presence of a matching GitHub-style
+heading slug. Exits non-zero listing every broken link.
+"""
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+CODE_FENCE_RE = re.compile(r"^\s*(```|~~~)")
+
+
+def heading_slugs(md_path):
+    """GitHub-style anchor slugs of every heading in a markdown file."""
+    slugs = set()
+    in_fence = False
+    with open(md_path, encoding="utf-8") as fh:
+        for line in fh:
+            if CODE_FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence or not line.startswith("#"):
+                continue
+            text = line.lstrip("#").strip()
+            # drop inline code/emphasis markers, then slugify
+            text = re.sub(r"[`*_]", "", text)
+            slug = re.sub(r"[^\w\- ]", "", text.lower())
+            slugs.add(slug.replace(" ", "-"))
+    return slugs
+
+
+def iter_links(md_path):
+    """(lineno, target) for every link outside fenced code blocks."""
+    in_fence = False
+    with open(md_path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            if CODE_FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in LINK_RE.finditer(line):
+                yield lineno, m.group(1)
+
+
+def check_file(md_path):
+    errors = []
+    base = os.path.dirname(os.path.abspath(md_path))
+    for lineno, target in iter_links(md_path):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path, _, anchor = target.partition("#")
+        if not path:  # pure in-page anchor
+            if anchor and anchor not in heading_slugs(md_path):
+                errors.append((lineno, target, "missing heading anchor"))
+            continue
+        resolved = os.path.normpath(os.path.join(base, path))
+        if not os.path.exists(resolved):
+            errors.append((lineno, target, f"missing file {resolved}"))
+            continue
+        if anchor and path.endswith(".md"):
+            if anchor not in heading_slugs(resolved):
+                errors.append(
+                    (lineno, target, f"missing heading anchor in {path}")
+                )
+    return errors
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__.strip())
+        return 2
+    failed = False
+    for md in argv[1:]:
+        if not os.path.exists(md):
+            print(f"{md}: file not found")
+            failed = True
+            continue
+        errors = check_file(md)
+        for lineno, target, why in errors:
+            print(f"{md}:{lineno}: broken link '{target}' ({why})")
+            failed = True
+        if not errors:
+            print(f"{md}: ok")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

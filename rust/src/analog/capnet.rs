@@ -40,6 +40,7 @@ impl Default for CapNetwork {
 }
 
 impl CapNetwork {
+    /// An empty network.
     pub fn new() -> Self {
         CapNetwork { kinds: Vec::new(), caps: Vec::new() }
     }
@@ -65,6 +66,7 @@ impl CapNetwork {
         }
     }
 
+    /// Total nodes added so far (driven + floating).
     pub fn node_count(&self) -> usize {
         self.kinds.len()
     }

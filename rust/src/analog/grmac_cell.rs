@@ -75,10 +75,12 @@ impl GrMacCell {
         Self::design(4, 4, 1.0, 0.0)
     }
 
+    /// Number of gain-ranging levels L.
     pub fn levels(&self) -> usize {
         self.c_e.len()
     }
 
+    /// Number of mantissa magnitude codes (2^m_bits).
     pub fn m_codes(&self) -> u64 {
         1u64 << self.c_m.len()
     }

@@ -87,10 +87,12 @@ pub fn dnl_inl(values: &[f64]) -> Sweep {
 }
 
 impl Sweep {
+    /// Worst-case |DNL| across the staircase, LSB.
     pub fn max_abs_dnl(&self) -> f64 {
         self.dnl.iter().fold(0.0, |a, &b| a.max(b.abs()))
     }
 
+    /// Worst-case |INL| across the staircase, LSB.
     pub fn max_abs_inl(&self) -> f64 {
         self.inl.iter().fold(0.0, |a, &b| a.max(b.abs()))
     }

@@ -15,16 +15,23 @@ use std::time::Instant;
 /// One measured benchmark.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Benchmark name.
     pub name: String,
+    /// Timed repetitions (after one untimed warmup).
     pub reps: usize,
+    /// Fastest repetition, seconds.
     pub min_s: f64,
+    /// Median repetition, seconds.
     pub median_s: f64,
+    /// Mean repetition, seconds.
     pub mean_s: f64,
     /// items/s based on the median, if items were declared.
     pub throughput: Option<f64>,
 }
 
 impl Measurement {
+    /// One human-readable result line (times auto-scaled, throughput
+    /// appended when declared).
     pub fn report(&self) -> String {
         let t = |s: f64| {
             if s < 1e-3 {
@@ -54,6 +61,7 @@ impl Measurement {
 
 /// Benchmark runner; collects measurements and prints them.
 pub struct Bench {
+    /// Everything measured so far, in run order.
     pub measurements: Vec<Measurement>,
     /// Reduce reps for smoke runs (GRCIM_BENCH_QUICK=1).
     quick: bool,
@@ -68,6 +76,8 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// A runner configured from the environment (`GRCIM_BENCH_QUICK`,
+    /// argv name filter).
     pub fn new() -> Self {
         let quick = std::env::var("GRCIM_BENCH_QUICK").is_ok();
         let filter = std::env::args()
@@ -129,6 +139,7 @@ impl Bench {
         self.measurements.push(m);
     }
 
+    /// Print the closing summary line.
     pub fn finish(&self) {
         println!(
             "\n{} benchmarks, {} mode",

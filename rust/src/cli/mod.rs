@@ -18,17 +18,27 @@ pub mod flags {
     /// Flags shared by every campaign-running subcommand.
     pub const CAMPAIGN: &[&str] = &["engine", "artifacts", "workers", "seed"];
 
+    /// `grcim figures` flags.
     pub const FIGURES: &[&str] =
         &["fig", "out", "samples", "engine", "artifacts", "workers", "seed"];
+    /// `grcim energy` flags.
     pub const ENERGY: &[&str] =
         &["dr", "sqnr", "samples", "engine", "artifacts", "workers", "seed"];
+    /// `grcim validate` flags.
     pub const VALIDATE: &[&str] = &["artifacts", "samples", "seed"];
+    /// `grcim sweep` flags.
     pub const SWEEP: &[&str] = &["config"];
+    /// `grcim info` flags.
     pub const INFO: &[&str] = &["artifacts"];
+    /// `grcim serve` flags.
     pub const SERVE: &[&str] =
         &["addr", "cache", "engine", "artifacts", "workers", "seed"];
+    /// `grcim query` flags.
     pub const QUERY: &[&str] =
-        &["addr", "json", "dr", "sqnr", "samples", "seed", "id"];
+        &["addr", "json", "dr", "sqnr", "samples", "seed", "id", "trace"];
+    /// `grcim workload` flags.
+    pub const WORKLOAD: &[&str] =
+        &["trace", "out", "samples", "engine", "artifacts", "workers", "seed"];
 }
 
 /// Expand a `--fig` value: `"all"` maps to the full list, otherwise a
@@ -49,9 +59,13 @@ pub fn fig_list(which: &str, all: &[&str]) -> Vec<String> {
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// The subcommand (first non-flag argument).
     pub command: String,
+    /// Value-taking flags, e.g. `--samples 4096`.
     pub flags: BTreeMap<String, String>,
+    /// Valueless switches, e.g. `--quick`.
     pub switches: Vec<String>,
+    /// Remaining positional arguments, in order.
     pub positional: Vec<String>,
 }
 
@@ -59,6 +73,7 @@ pub struct Args {
 const SWITCHES: &[&str] = &["quick", "verbose", "quiet", "help"];
 
 impl Args {
+    /// Parse an argument vector (excluding the program name).
     pub fn parse(argv: &[String]) -> Result<Args> {
         let mut args = Args::default();
         let mut it = argv.iter().peekable();
@@ -83,23 +98,29 @@ impl Args {
         Ok(args)
     }
 
+    /// Parse the process's own command line.
     pub fn from_env() -> Result<Args> {
         let argv: Vec<String> = std::env::args().skip(1).collect();
         Self::parse(&argv)
     }
 
+    /// Whether a switch was passed.
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
 
+    /// A flag's value, if passed.
     pub fn get(&self, flag: &str) -> Option<&str> {
         self.flags.get(flag).map(String::as_str)
     }
 
+    /// A flag's value, or `default` when absent.
     pub fn get_or<'a>(&'a self, flag: &str, default: &'a str) -> &'a str {
         self.get(flag).unwrap_or(default)
     }
 
+    /// A flag parsed as usize (`default` when absent; parse errors are
+    /// reported with the flag name).
     pub fn get_usize(&self, flag: &str, default: usize) -> Result<usize> {
         match self.get(flag) {
             None => Ok(default),
@@ -109,6 +130,7 @@ impl Args {
         }
     }
 
+    /// A flag parsed as u64 (`default` when absent).
     pub fn get_u64(&self, flag: &str, default: u64) -> Result<u64> {
         match self.get(flag) {
             None => Ok(default),
@@ -118,6 +140,7 @@ impl Args {
         }
     }
 
+    /// A flag parsed as f64 (`default` when absent).
     pub fn get_f64(&self, flag: &str, default: f64) -> Result<f64> {
         match self.get(flag) {
             None => Ok(default),
@@ -217,11 +240,18 @@ mod tests {
 
     #[test]
     fn campaign_flags_are_a_subset_everywhere_they_apply() {
-        for known in [flags::FIGURES, flags::ENERGY, flags::SERVE] {
+        for known in
+            [flags::FIGURES, flags::ENERGY, flags::SERVE, flags::WORKLOAD]
+        {
             for f in flags::CAMPAIGN {
                 assert!(known.contains(f), "{f} missing from {known:?}");
             }
         }
+        // workload accepts its trace flag; query forwards it
+        let a = parse(&["workload", "--trace", "acts.grtt", "--samples", "64"]);
+        assert!(a.ensure_known(flags::WORKLOAD).is_ok());
+        let a = parse(&["query", "workload", "--trace", "acts.grtt"]);
+        assert!(a.ensure_known(flags::QUERY).is_ok());
     }
 
     #[test]

@@ -17,19 +17,32 @@ use anyhow::{bail, Context, Result};
 pub const DEFAULT_SAMPLES: usize = 16_384;
 
 /// Input-distribution names accepted by sweep configs and requests.
+/// `empirical:<trace-file>` additionally resolves a fitted
+/// [`crate::workload::TensorTrace`] (the file is read where the config is
+/// interpreted — client-side for `grcim sweep`, server-side for the
+/// `sweep` request).
 pub const DISTRIBUTIONS: &[&str] =
     &["uniform", "max_entropy", "gauss_outliers", "clipped_gauss"];
 
 /// Resolve a distribution by its config name; `fmt` parameterizes
 /// `max_entropy` (the experiment's input format).
 pub fn dist_by_name(name: &str, fmt: FpFormat) -> Result<Distribution> {
+    if let Some(path) = name.strip_prefix("empirical:") {
+        let trace =
+            crate::workload::TensorTrace::read(std::path::Path::new(path))?;
+        let dist = Distribution::empirical(
+            crate::workload::EmpiricalDist::fit(&trace)?,
+        );
+        return Ok(dist);
+    }
     Ok(match name {
         "uniform" => Distribution::Uniform,
         "max_entropy" => Distribution::max_entropy(fmt),
         "gauss_outliers" => Distribution::gauss_outliers(),
         "clipped_gauss" => Distribution::clipped_gauss4(),
         other => bail!(
-            "unknown distribution '{other}' (known: {})",
+            "unknown distribution '{other}' (known: {}, or \
+             empirical:<trace-file>)",
             DISTRIBUTIONS.join(", ")
         ),
     })
@@ -65,8 +78,11 @@ pub fn experiment_spec(
 /// A fully resolved sweep: campaign settings plus the experiment grid.
 #[derive(Debug, Clone)]
 pub struct SweepPlan {
+    /// Campaign settings (engine, seed, workers).
     pub campaign: CampaignConfig,
+    /// Monte-Carlo samples per experiment.
     pub samples: usize,
+    /// The experiment grid, in config order.
     pub specs: Vec<ExperimentSpec>,
 }
 
@@ -198,5 +214,23 @@ distribution = "gauss_outliers"
                 "{name}"
             );
         }
+    }
+
+    #[test]
+    fn empirical_distribution_resolves_from_trace_file() {
+        use crate::workload::TensorTrace;
+        let dir = std::env::temp_dir().join("grcim_sweep_empirical");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("acts.grtt");
+        TensorTrace::from_f32("acts", vec![4], vec![0.5, -1.0, 0.25, 0.125])
+            .unwrap()
+            .write(&path)
+            .unwrap();
+        let spec = format!("empirical:{}", path.display());
+        let d = dist_by_name(&spec, FpFormat::fp6_e3m2()).unwrap();
+        assert!(d.name().starts_with("empirical[acts@"), "{}", d.name());
+        // a missing trace file is a clean error, not a panic
+        assert!(dist_by_name("empirical:/nonexistent/x.grtt", FpFormat::fp6_e3m2())
+            .is_err());
     }
 }

@@ -8,15 +8,22 @@ use std::collections::BTreeMap;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (JSON numbers are f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys — serialization is canonical).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing bytes are an error).
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.ws();
@@ -28,6 +35,7 @@ impl Json {
         Ok(v)
     }
 
+    /// The number, if this is a [`Json::Num`].
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -35,10 +43,12 @@ impl Json {
         }
     }
 
+    /// The number truncated to usize, if this is a [`Json::Num`].
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// The string, if this is a [`Json::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -46,6 +56,7 @@ impl Json {
         }
     }
 
+    /// Object field lookup (None for non-objects and missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -53,6 +64,7 @@ impl Json {
         }
     }
 
+    /// Array items (empty slice for non-arrays).
     pub fn items(&self) -> &[Json] {
         match self {
             Json::Arr(v) => v,

@@ -15,13 +15,18 @@ use std::collections::BTreeMap;
 /// A TOML scalar or flat array.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// A number (all TOML numbers parse as f64).
     Num(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A flat array of values.
     Arr(Vec<Value>),
 }
 
 impl Value {
+    /// The number, if this is a [`Value::Num`].
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(n) => Some(*n),
@@ -29,10 +34,12 @@ impl Value {
         }
     }
 
+    /// The number truncated to usize, if this is a [`Value::Num`].
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// The string, if this is a [`Value::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -40,6 +47,7 @@ impl Value {
         }
     }
 
+    /// The boolean, if this is a [`Value::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -47,6 +55,7 @@ impl Value {
         }
     }
 
+    /// The items, if this is a [`Value::Arr`].
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(v) => Some(v),
@@ -68,6 +77,8 @@ pub struct Config {
 }
 
 impl Config {
+    /// Parse a TOML-subset document (see the module docs for the
+    /// supported grammar).
     pub fn parse(text: &str) -> Result<Config> {
         let mut cfg = Config::default();
         let mut current: Option<(String, Table)> = None;
@@ -96,6 +107,7 @@ impl Config {
         Ok(cfg)
     }
 
+    /// Read and parse a config file.
     pub fn load(path: &std::path::Path) -> Result<Config> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;

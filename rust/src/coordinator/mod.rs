@@ -28,9 +28,13 @@ use std::sync::Arc;
 pub struct ExperimentSpec {
     /// Stable identifier (participates in reports, not in seeding).
     pub id: String,
+    /// Input/weight format pair.
     pub fmts: FormatPair,
+    /// Input (activation) workload distribution.
     pub dist_x: Distribution,
+    /// Weight workload distribution.
     pub dist_w: Distribution,
+    /// Array depth (accumulation length).
     pub nr: usize,
     /// Requested Monte-Carlo samples (rounded up to whole engine batches).
     pub samples: usize,
@@ -39,10 +43,13 @@ pub struct ExperimentSpec {
 /// Campaign-wide settings.
 #[derive(Debug, Clone)]
 pub struct CampaignConfig {
+    /// Which backend workers build.
     pub engine: EngineKind,
+    /// AOT artifact directory (PJRT builds).
     pub artifacts_dir: PathBuf,
     /// Worker threads; 0 = available_parallelism.
     pub workers: usize,
+    /// Campaign seed (job streams derive from it via `rng::job_seed`).
     pub seed: u64,
 }
 
@@ -58,6 +65,8 @@ impl Default for CampaignConfig {
 }
 
 impl CampaignConfig {
+    /// The worker count actually used (resolves 0 to the host's
+    /// available parallelism).
     pub fn effective_workers(&self) -> usize {
         if self.workers > 0 {
             self.workers

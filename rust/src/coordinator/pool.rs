@@ -17,7 +17,9 @@ use std::sync::{Arc, Mutex};
 /// A schedulable unit: one Monte-Carlo batch of one experiment.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Job {
+    /// Index into the campaign's spec grid.
     pub spec_idx: usize,
+    /// Batch index within that spec (seeds the job's RNG stream).
     pub batch_idx: u64,
 }
 

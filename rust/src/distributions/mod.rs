@@ -13,9 +13,33 @@
 //!    with probability-ε outliers of magnitude ~k·(3σ).
 //! 4. **Clipped Gaussian(c)** — N(0, (1/c)²) clipped to ±1 (c sigmas at
 //!    full scale); Fig. 4 uses c = 4.
+//! 5. **Empirical(trace)** — a fitted tensor trace
+//!    ([`crate::workload::EmpiricalDist`]): measured workload statistics
+//!    sampled by inverse-CDF lookup, so real activations drive the same
+//!    Monte-Carlo paths as the parametric models.
+//!
+//! # Example
+//!
+//! ```
+//! use grcim::distributions::Distribution;
+//! use grcim::rng::Pcg64;
+//!
+//! let d = Distribution::gauss_outliers();
+//! let mut rng = Pcg64::seeded(1);
+//! let mut xs = vec![0.0; 10_000];
+//! d.fill(&mut rng, &mut xs);
+//! // every workload distribution lives on [-1, 1] …
+//! assert!(xs.iter().all(|x| x.abs() <= 1.0));
+//! // … and the LLM stress model has rare large outliers over a tiny core
+//! let outliers = xs.iter().filter(|x| d.is_outlier(**x)).count();
+//! assert!(outliers > 0 && outliers < 300, "outliers = {outliers}");
+//! assert_eq!(d.name(), "gauss+outliers[eps=0.01,k=50]");
+//! ```
 
 use crate::formats::{FpFormat, MaxEntropy};
 use crate::rng::Pcg64;
+use crate::workload::EmpiricalDist;
+use std::sync::Arc;
 
 /// Parameters of the Gaussian+outliers stress distribution.
 ///
@@ -27,7 +51,9 @@ use crate::rng::Pcg64;
 /// magnitude k, not the outlier's own spread).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GaussOutlierParams {
+    /// Outlier probability per element (paper: 0.01).
     pub eps: f64,
+    /// Outlier magnitude relative to the core's 3-sigma (paper: 50).
     pub k: f64,
 }
 
@@ -47,23 +73,41 @@ pub enum Distribution {
     /// Gaussian core + rare large outliers (LLM activations).
     GaussOutliers(GaussOutlierParams),
     /// N(0, (1/c)²) clipped to [-1, 1].
-    ClippedGauss { clip_sigmas: f64 },
+    ClippedGauss {
+        /// c: how many sigmas full scale sits at (Fig. 4 uses 4).
+        clip_sigmas: f64,
+    },
     /// Uniform on [-r, r] — the "narrowest valid bounds" dimensioning input
     /// of the Fig. 12 energy map (r = 2 · min_normal of the input format).
-    UniformScaled { r: f64 },
+    UniformScaled {
+        /// Half-range r (≤ 1).
+        r: f64,
+    },
+    /// A fitted empirical tensor trace, sampled by inverse-CDF lookup
+    /// (`grcim workload`; see [`crate::workload`]).
+    Empirical(Arc<EmpiricalDist>),
 }
 
 impl Distribution {
+    /// Max-entropy distribution of `fmt` (uniform over its bit patterns).
     pub fn max_entropy(fmt: FpFormat) -> Self {
         Distribution::MaxEntropy(MaxEntropy::new(fmt))
     }
 
+    /// The LLM-activation stress distribution at the paper's (ε, k).
     pub fn gauss_outliers() -> Self {
         Distribution::GaussOutliers(GaussOutlierParams::default())
     }
 
+    /// The Fig. 4 illustration distribution: N(0, (1/4)²) clipped to ±1.
     pub fn clipped_gauss4() -> Self {
         Distribution::ClippedGauss { clip_sigmas: 4.0 }
+    }
+
+    /// Wrap a fitted trace ([`crate::workload::EmpiricalDist`]) as a
+    /// workload distribution.
+    pub fn empirical(fit: EmpiricalDist) -> Self {
+        Distribution::Empirical(Arc::new(fit))
     }
 
     /// Core standard deviation of the Gaussian+outliers distribution.
@@ -88,6 +132,7 @@ impl Distribution {
                 (rng.normal() / clip_sigmas).clamp(-1.0, 1.0)
             }
             Distribution::UniformScaled { r } => rng.uniform_in(-r, *r),
+            Distribution::Empirical(e) => e.sample(rng),
         }
     }
 
@@ -106,12 +151,15 @@ impl Distribution {
     }
 
     /// Whether a sample magnitude counts as an outlier (used for the
-    /// Fig. 9 "core" subset metric). Only meaningful for GaussOutliers.
+    /// Fig. 9 "core" subset metric). Meaningful for GaussOutliers (beyond
+    /// 4 core sigma) and Empirical (beyond the fitted 4·sigma_core
+    /// threshold); always false otherwise.
     pub fn is_outlier(&self, x: f64) -> bool {
         match self {
             Distribution::GaussOutliers(p) => {
                 x.abs() > 4.0 * Self::core_sigma(*p)
             }
+            Distribution::Empirical(e) => e.is_outlier(x),
             _ => false,
         }
     }
@@ -130,6 +178,9 @@ impl Distribution {
                 format!("clipgauss[{clip_sigmas}s]")
             }
             Distribution::UniformScaled { r } => format!("uniform[±{r:.3e}]"),
+            Distribution::Empirical(e) => {
+                format!("empirical[{}@{:016x}]", e.name(), e.content_hash())
+            }
         }
     }
 }
@@ -226,5 +277,25 @@ mod tests {
             Distribution::max_entropy(FpFormat::fp4_e2m1()).name(),
             "maxent[FP4_E2M1]"
         );
+    }
+
+    #[test]
+    fn empirical_variant_samples_and_names() {
+        use crate::workload::{EmpiricalDist, TensorTrace};
+        let t = TensorTrace::from_f64(
+            "acts",
+            vec![4],
+            vec![-1.0, -0.5, 0.5, 1.0],
+        )
+        .unwrap();
+        let d = Distribution::empirical(EmpiricalDist::fit(&t).unwrap());
+        let xs = draw(&d, 5000, 8);
+        assert!(xs.iter().all(|x| x.abs() <= 1.0));
+        // symmetric source -> near-zero mean
+        assert!(mean(&xs).abs() < 0.05, "mean {}", mean(&xs));
+        // deterministic given the seed
+        assert_eq!(draw(&d, 64, 9), draw(&d, 64, 9));
+        let n = d.name();
+        assert!(n.starts_with("empirical[acts@"), "{n}");
     }
 }

@@ -34,6 +34,7 @@ pub enum CimArch {
 }
 
 impl CimArch {
+    /// Stable lowercase name for reports and wire responses.
     pub fn name(&self) -> &'static str {
         match self {
             CimArch::Conventional => "conventional",
@@ -73,6 +74,7 @@ pub struct EnergyBreakdown {
 }
 
 impl EnergyBreakdown {
+    /// Total energy per operation (sum of every component), fJ.
     pub fn total(&self) -> f64 {
         self.adc + self.dac + self.cells + self.exp_logic + self.tree + self.norm_mult
     }

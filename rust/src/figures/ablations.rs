@@ -19,6 +19,7 @@ use crate::report::{FigureResult, Table};
 use crate::spec::{required_enob, Arch, SpecConfig};
 use anyhow::Result;
 
+/// Run the three ablations (granularity crossover, array depth, margin).
 pub fn run(ctx: &FigureCtx) -> Result<FigureResult> {
     let mut fr = FigureResult::new("ablations");
     let tech = TechParams::default();

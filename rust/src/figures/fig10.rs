@@ -18,18 +18,25 @@ use crate::report::{FigureResult, Table};
 use crate::spec::{required_enob, Arch, SpecConfig};
 use anyhow::Result;
 
+/// Array depth of the sweep (paper: NR = 32).
 pub const NR: usize = 32;
+/// Input mantissa bits (paper: N_M,x = 2).
 pub const N_M_X: u32 = 2;
+/// Exponent-bit axis of the dynamic-range sweep.
 pub const N_E_RANGE: std::ops::RangeInclusive<u32> = 1..=5;
 
 pub(crate) fn weight_fmt() -> FpFormat {
     FpFormat::fp4_e2m1()
 }
 
+/// The three input distributions the Fig. 10/11 sweeps compare.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dist {
+    /// Uniform on [-1, 1].
     Uniform,
+    /// Max-entropy over the input format's bit patterns.
     MaxEntropy,
+    /// The Gaussian+outliers LLM stress model.
     GaussOutliers,
 }
 
@@ -56,6 +63,7 @@ impl Dist {
 
 /// ENOB results per (n_e, distribution): [conventional, gr-unit].
 pub struct Fig10Data {
+    /// (axis tag, distribution, conventional ENOB, gr-unit ENOB) rows.
     pub rows: Vec<(u32, Dist, f64, f64)>,
 }
 
@@ -90,6 +98,7 @@ pub(crate) fn sweep(
     Ok(Fig10Data { rows })
 }
 
+/// Regenerate Fig. 10 (required ENOB vs input dynamic range).
 pub fn run(ctx: &FigureCtx) -> Result<FigureResult> {
     let formats: Vec<(u32, FpFormat)> = N_E_RANGE
         .map(|n_e| (n_e, FpFormat::fp(n_e, N_M_X)))

@@ -13,9 +13,12 @@ use crate::formats::FpFormat;
 use crate::report::{FigureResult, Table};
 use anyhow::Result;
 
+/// Input exponent bits across the sweep (every distribution fits E3).
 pub const N_E_X: u32 = 3;
+/// Mantissa-bit axis of the precision sweep.
 pub const N_M_RANGE: std::ops::RangeInclusive<u32> = 1..=6;
 
+/// Regenerate Fig. 11 (required ENOB vs input precision).
 pub fn run(ctx: &FigureCtx) -> Result<FigureResult> {
     let formats: Vec<(u32, FpFormat)> = N_M_RANGE
         .map(|n_m| (n_m, FpFormat::fp(N_E_X, n_m)))

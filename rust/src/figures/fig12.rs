@@ -31,7 +31,9 @@ use crate::spec::{required_enob, Arch, SpecConfig};
 use crate::stats::ColumnAgg;
 use anyhow::Result;
 
+/// Array depth of the energy map (paper: 32).
 pub const NR: usize = 32;
+/// Array width of the energy map (paper: 32).
 pub const NC: usize = 32;
 /// Native range of the gain-ranging stage, in octaves (bits).
 pub const GAIN_RANGE_BITS: f64 = 6.0;
@@ -46,15 +48,19 @@ pub fn weight_fmt() -> FpFormat {
 /// One design-space specification.
 #[derive(Debug, Clone, Copy)]
 pub struct SpecPoint {
+    /// Dynamic range in bits (DR_dB / 6.02).
     pub dr_bits: f64,
+    /// Effective mantissa bits, implicit bit included.
     pub n_m_eff: f64,
 }
 
 impl SpecPoint {
+    /// The point's dynamic-range axis value, dB.
     pub fn dr_db(&self) -> f64 {
         6.02 * self.dr_bits
     }
 
+    /// The point's SQNR axis value, dB.
     pub fn sqnr_db(&self) -> f64 {
         6.02 * self.n_m_eff + 10.79
     }
@@ -80,6 +86,7 @@ impl SpecPoint {
         Some(FpFormat { e_max: 1.0, n_m: self.dr_bits - 2.0 })
     }
 
+    /// The design-space point a concrete format occupies.
     pub fn from_format(fmt: FpFormat) -> Self {
         SpecPoint { dr_bits: fmt.dr_bits(), n_m_eff: fmt.n_m + 1.0 }
     }
@@ -107,8 +114,11 @@ pub fn native_ok(arch: CimArch, fmt_x: FpFormat, fmt_w: FpFormat) -> bool {
 /// Evaluated energies at one spec point.
 #[derive(Debug, Clone)]
 pub struct PointResult {
+    /// The evaluated spec point.
     pub spec: SpecPoint,
+    /// Conventional-architecture ADC requirement, bits.
     pub enob_conv: f64,
+    /// Conventional-architecture energy breakdown.
     pub e_conv: EnergyBreakdown,
     /// Best native GR option, if any: (granularity, ENOB, breakdown).
     pub gr_best: Option<(CimArch, f64, EnergyBreakdown)>,
@@ -117,6 +127,7 @@ pub struct PointResult {
 }
 
 impl PointResult {
+    /// Total energy of the best native GR option, if any, fJ/Op.
     pub fn gr_total(&self) -> Option<f64> {
         self.gr_best.as_ref().map(|(_, _, b)| b.total())
     }
@@ -290,6 +301,7 @@ fn pie_rows(t: &mut Table, label: &str, arch: &str, enob: f64, b: &EnergyBreakdo
     ]);
 }
 
+/// Regenerate Fig. 12 (energy map, pies, headlines, sensitivity).
 pub fn run(ctx: &FigureCtx) -> Result<FigureResult> {
     let tech = TechParams::default();
     let grid_samples = ctx.samples.min(16_384);

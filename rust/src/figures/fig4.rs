@@ -17,8 +17,10 @@ use crate::stats::{ColumnAgg, Histogram};
 use crate::util::variance;
 use anyhow::Result;
 
+/// Array depth of the Fig. 4 setup (paper: NR = 32).
 pub const NR: usize = 32;
 
+/// Regenerate Fig. 4 (the six distribution panels + annotations).
 pub fn run(ctx: &FigureCtx) -> Result<FigureResult> {
     let fmts = FormatPair::new(FpFormat::fp6_e2m3(), FpFormat::fp6_e2m3());
     let dist = Distribution::clipped_gauss4();

@@ -13,6 +13,7 @@ use crate::report::{FigureResult, Table};
 use crate::rng::Pcg64;
 use anyhow::Result;
 
+/// Mismatch Monte-Carlo instances per K_C bound (paper: n = 1000).
 pub const MC_RUNS: usize = 1000;
 
 fn percentile(sorted: &[f64], p: f64) -> f64 {
@@ -20,6 +21,7 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[idx]
 }
 
+/// Regenerate Fig. 8 (cell linearity, nominal + under mismatch).
 pub fn run(ctx: &FigureCtx) -> Result<FigureResult> {
     let cell = GrMacCell::fp6_e2m3_schematic();
     let mut fr = FigureResult::new("fig8");

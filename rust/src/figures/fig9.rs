@@ -15,7 +15,9 @@ use crate::rng::Pcg64;
 use crate::util::db;
 use anyhow::Result;
 
+/// Input mantissa bits across the sweep (paper: N_M,x = 2).
 pub const N_M: u32 = 2;
+/// Exponent-bit axis (0 = the same-total-bits INT point).
 pub const N_E_RANGE: std::ops::RangeInclusive<u32> = 0..=5;
 
 /// Element-level SQNR of `dist` quantized to `fmt`.
@@ -23,7 +25,9 @@ pub const N_E_RANGE: std::ops::RangeInclusive<u32> = 0..=5;
 /// `core_only` restricts both signal and noise to non-outlier samples.
 /// `ulp_floor` replaces the empirical error with the format's ulp noise
 /// (exact for max-entropy inputs, whose empirical error is zero).
-fn sqnr_db(
+/// Shared with the workload report (`workload::sqnr_sweep`), which runs
+/// the same sweep over an empirical trace distribution.
+pub(crate) fn sqnr_db(
     fmt: FpFormat,
     dist: &Distribution,
     samples: usize,
@@ -56,7 +60,9 @@ fn sqnr_db(
     db(sig / noise.max(1e-300))
 }
 
-fn fmt_for(n_e: u32) -> FpFormat {
+/// The format at `n_e` exponent bits on the Fig. 9 axis: FP(n_e, N_M) for
+/// n_e >= 1, and the same-total-bits INT format at the n_e = 0 origin.
+pub(crate) fn fmt_for(n_e: u32) -> FpFormat {
     if n_e == 0 {
         FpFormat::int(N_M + 2) // INT with the same total bits
     } else {
@@ -97,6 +103,7 @@ pub fn sqnr_series(samples: usize, seed: u64) -> Vec<[f64; 4]> {
         .collect()
 }
 
+/// Regenerate Fig. 9 (SQNR vs exponent bits, four distributions).
 pub fn run(ctx: &FigureCtx) -> Result<FigureResult> {
     let samples = ctx.samples.max(16_384);
     let seed = ctx.campaign.seed ^ 0xF19;

@@ -11,10 +11,12 @@ use crate::report::{FigureResult, Table};
 use crate::util::approx_eq;
 use anyhow::Result;
 
-/// Paper Table I schematic values (fF).
+/// Paper Table I schematic mantissa-divider values (fF).
 pub const PAPER_C_M: [f64; 4] = [1.0, 2.0, 4.0, 8.0];
+/// Paper Table I schematic coupling-stage values (fF).
 pub const PAPER_C_E: [f64; 4] = [1.0, 1.14, 4.0, 10.0];
 
+/// Regenerate Table I (designed capacitor values vs the paper's).
 pub fn run(_ctx: &FigureCtx) -> Result<FigureResult> {
     let mut fr = FigureResult::new("table1");
     let schematic = GrMacCell::fp6_e2m3_schematic();

@@ -21,6 +21,7 @@ pub struct MaxEntropy {
 }
 
 impl MaxEntropy {
+    /// A sampler for `fmt` (must be integral — bit fields are enumerable).
     pub fn new(fmt: FpFormat) -> Self {
         assert!(
             fmt.is_integral(),
@@ -31,6 +32,7 @@ impl MaxEntropy {
         MaxEntropy { fmt, e_codes, m_codes }
     }
 
+    /// The format being sampled.
     pub fn format(&self) -> FpFormat {
         self.fmt
     }

@@ -60,6 +60,8 @@
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 
+#![warn(missing_docs)]
+
 pub mod analog;
 pub mod benchkit;
 pub mod cli;
@@ -79,6 +81,7 @@ pub mod server;
 pub mod spec;
 pub mod stats;
 pub mod util;
+pub mod workload;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -18,11 +18,14 @@ use crate::stats::ColumnBatch;
 /// Formats of one experiment: input (activation) and weight.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FormatPair {
+    /// Input (activation) format.
     pub x: FpFormat,
+    /// Weight format.
     pub w: FpFormat,
 }
 
 impl FormatPair {
+    /// Pair an input format with a weight format.
     pub fn new(x: FpFormat, w: FpFormat) -> Self {
         FormatPair { x, w }
     }

@@ -1,9 +1,10 @@
 //! `grcim` — CLI launcher for the GR-CIM design-space exploration
 //! framework.
 //!
-//! Subcommands: `figures`, `energy`, `sweep`, `serve`, `query`,
-//! `validate`, `info`. The full flag and wire-protocol reference lives in
-//! `docs/CLI.md`; the module map in `docs/ARCHITECTURE.md`.
+//! Subcommands: `figures`, `energy`, `sweep`, `workload`, `serve`,
+//! `query`, `validate`, `info`. The full flag and wire-protocol reference
+//! lives in `docs/CLI.md`; the module map in `docs/ARCHITECTURE.md`; the
+//! paper-equation-to-code map in `docs/THEORY.md`.
 
 use anyhow::{bail, Context, Result};
 use grcim::cli::sweep::SweepPlan;
@@ -33,8 +34,11 @@ COMMANDS:
   figures    regenerate paper figures/tables   --fig all|fig4|...|table1
   energy     energy model at a spec point      --dr <dB> --sqnr <dB>
   sweep      run a TOML campaign               grcim sweep <config.toml>
+  workload   analyze an empirical trace        grcim workload --trace t.grtt
   serve      resident campaign service (NDJSON/TCP, cached + coalesced)
   query      client for a running serve        grcim query energy --dr 36
+             raw mode: grcim query --json '<request>' (non-empty object;
+             --seed must fit in 2^53 — JSON numbers are f64)
   validate   PJRT artifacts vs the Rust oracle (--features pjrt builds)
   info       artifact + engine status
 
@@ -129,6 +133,33 @@ fn cmd_energy(args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", t.to_markdown());
+    Ok(())
+}
+
+/// `grcim workload --trace <file>`: fit an empirical tensor trace and
+/// print/persist the workload analysis (summary, Fig. 9-style SQNR sweep,
+/// conventional-vs-GR energy bounds). Exits non-zero if one of the
+/// distribution-independent invariant checks fails.
+fn cmd_workload(args: &Args) -> Result<()> {
+    args.ensure_known(flags::WORKLOAD)?;
+    let path = args
+        .get("trace")
+        .map(String::from)
+        .or_else(|| args.positional.first().cloned())
+        .context("workload needs a trace: grcim workload --trace <file>")?;
+    let trace = grcim::workload::TensorTrace::read(std::path::Path::new(&path))?;
+    let fit = std::sync::Arc::new(grcim::workload::EmpiricalDist::fit(&trace)?);
+    let campaign = campaign_from_args(args)?;
+    let samples = args.get_usize("samples", 16_384)?;
+    let out_dir = PathBuf::from(args.get_or("out", "results"));
+    let t = util::Timer::new("workload");
+    let fr = grcim::workload::report(&fit, &campaign, samples)?;
+    let text = fr.emit(&out_dir)?;
+    println!("{text}");
+    grcim::info!("workload done in {:.1}s", t.elapsed_s());
+    if !fr.all_hold() {
+        bail!("workload invariant checks failed (see table above)");
+    }
     Ok(())
 }
 
@@ -310,6 +341,32 @@ fn build_request(kind: &str, args: &Args) -> Result<String> {
             }
             Ok(proto::obj(pairs).to_string())
         }
+        "workload" => {
+            let path = args
+                .get("trace")
+                .map(String::from)
+                .or_else(|| args.positional.get(1).cloned())
+                .context(
+                    "workload query needs a trace path: \
+                     grcim query workload --trace <file> (a relative path, \
+                     resolved in the server's working directory)",
+                )?;
+            let mut pairs = vec![
+                ("cmd", Json::Str("workload".to_string())),
+                ("path", Json::Str(path)),
+                (
+                    "samples",
+                    Json::Num(args.get_usize(
+                        "samples",
+                        proto::DEFAULT_FIGURE_SAMPLES,
+                    )? as f64),
+                ),
+            ];
+            if let Some(s) = json_seed(args)? {
+                pairs.push(("seed", Json::Num(s)));
+            }
+            Ok(proto::obj(pairs).to_string())
+        }
         "sweep" => {
             let path = args.positional.get(1).context(
                 "sweep query needs a config: grcim query sweep <config.toml>",
@@ -356,8 +413,8 @@ fn build_request(kind: &str, args: &Args) -> Result<String> {
             Ok(proto::obj(pairs).to_string())
         }
         other => bail!(
-            "unknown query kind '{other}' (energy|sweep|figure|info, or \
-             --json '<raw request>')"
+            "unknown query kind '{other}' (energy|sweep|figure|workload|info, \
+             or --json '<raw request>')"
         ),
     }
 }
@@ -413,6 +470,7 @@ fn main() {
     let result = match args.command.as_str() {
         "figures" => cmd_figures(&args),
         "energy" => cmd_energy(&args),
+        "workload" => cmd_workload(&args),
         "validate" => cmd_validate(&args),
         "info" => cmd_info(&args),
         "sweep" => cmd_sweep(&args),

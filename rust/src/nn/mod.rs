@@ -2,7 +2,42 @@
 //! (`examples/mlp_inference.rs`): a from-scratch MLP with SGD training on
 //! synthetic data, plus CIM-quantized inference that routes every layer
 //! matmul through the simulated analog array (conventional or GR-MAC
-//! signal chain, ADC at the spec-solved ENOB) via a [`runtime::Engine`].
+//! signal chain, ADC at the spec-solved ENOB) via a
+//! [`crate::runtime::Engine`].
+//!
+//! # Example
+//!
+//! Train a small classifier on synthetic blobs, then run the same batch
+//! through the simulated CIM array at high precision:
+//!
+//! ```
+//! use grcim::formats::FpFormat;
+//! use grcim::mac::FormatPair;
+//! use grcim::nn::{accuracy, cim_accuracy, make_blobs, CimInference, Mlp};
+//! use grcim::rng::Pcg64;
+//! use grcim::runtime::RustEngine;
+//! use grcim::spec::Arch;
+//!
+//! let (xs, ys) = make_blobs(128, 8, 2, 0.15, 7);
+//! let mut mlp = Mlp::new(&[8, 8, 2], 3);
+//! let mut rng = Pcg64::seeded(11);
+//! for _ in 0..10 {
+//!     mlp.train_epoch(&xs, &ys, 0.1, &mut rng);
+//! }
+//! let float_acc = accuracy(&mlp, &xs, &ys);
+//! assert!(float_acc > 0.8, "float accuracy {float_acc}");
+//!
+//! // fine formats + generous ADC: CIM inference tracks float inference
+//! let cfg = CimInference {
+//!     fmts: FormatPair::new(FpFormat::fp(4, 6), FpFormat::fp(4, 6)),
+//!     arch: Arch::GrUnit,
+//!     enob: 16.0,
+//!     nr: 8,
+//! };
+//! let cim_acc = cim_accuracy(&mlp, &RustEngine, &cfg, &xs[..32], &ys[..32])?;
+//! assert!(cim_acc >= float_acc - 0.1);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
 use crate::mac::{adc_quantize, FormatPair};
 use crate::rng::Pcg64;
@@ -13,9 +48,13 @@ use anyhow::Result;
 /// A dense layer: row-major weights `[out][inp]`, bias `[out]`.
 #[derive(Debug, Clone)]
 pub struct Dense {
+    /// Input width.
     pub inp: usize,
+    /// Output width.
     pub out: usize,
+    /// Row-major weights `[out][inp]`.
     pub w: Vec<f64>,
+    /// Per-output biases.
     pub b: Vec<f64>,
 }
 
@@ -43,10 +82,13 @@ impl Dense {
 /// Multi-layer perceptron with ReLU hidden activations and softmax output.
 #[derive(Debug, Clone)]
 pub struct Mlp {
+    /// Dense layers, input to output.
     pub layers: Vec<Dense>,
 }
 
 impl Mlp {
+    /// He-initialized MLP with the given layer widths (at least
+    /// `[input, output]`).
     pub fn new(dims: &[usize], seed: u64) -> Self {
         assert!(dims.len() >= 2);
         let mut rng = Pcg64::seeded(seed);
@@ -73,6 +115,7 @@ impl Mlp {
         act
     }
 
+    /// Class prediction: argmax of the float logits.
     pub fn predict(&self, x: &[f64]) -> usize {
         argmax(&self.forward(x))
     }
@@ -151,6 +194,7 @@ impl Mlp {
     }
 }
 
+/// Index of the largest element (0 for an empty slice).
 pub fn argmax(v: &[f64]) -> usize {
     v.iter()
         .enumerate()
@@ -189,8 +233,11 @@ pub fn make_blobs(
 /// CIM inference configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct CimInference {
+    /// Input/weight formats the array quantizes to.
     pub fmts: FormatPair,
+    /// Which signal chain digitizes each column.
     pub arch: Arch,
+    /// ADC resolution, effective bits.
     pub enob: f64,
     /// Array depth (row-chunk size of each tiled matmul).
     pub nr: usize,

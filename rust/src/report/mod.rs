@@ -11,12 +11,16 @@ use std::path::Path;
 /// A rectangular result table.
 #[derive(Debug, Clone)]
 pub struct Table {
+    /// Table title (also names the CSV file stem).
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Rows of pre-formatted cells (width must match the headers).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given title and column headers.
     pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
         Table {
             title: title.into(),
@@ -25,6 +29,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(
             cells.len(),
@@ -46,6 +51,7 @@ impl Table {
         }
     }
 
+    /// Render as CSV (quoting cells containing commas or quotes).
     pub fn to_csv(&self) -> String {
         let mut s = String::new();
         let esc = |c: &str| {
@@ -141,7 +147,9 @@ impl Table {
 /// comparisons against the paper.
 #[derive(Debug, Clone, Default)]
 pub struct FigureResult {
+    /// Figure/table identifier (e.g. `"fig9"`).
     pub name: String,
+    /// The series/rows the paper plots.
     pub tables: Vec<Table>,
     /// (claim, paper value, measured value, holds?)
     pub checks: Vec<Check>,
@@ -150,17 +158,23 @@ pub struct FigureResult {
 /// One paper-vs-measured comparison.
 #[derive(Debug, Clone)]
 pub struct Check {
+    /// What the paper claims.
     pub claim: String,
+    /// The paper's stated value/shape.
     pub paper: String,
+    /// What we measured.
     pub measured: String,
+    /// Whether the measurement supports the claim.
     pub holds: bool,
 }
 
 impl FigureResult {
+    /// An empty result for the named figure.
     pub fn new(name: impl Into<String>) -> Self {
         FigureResult { name: name.into(), ..Default::default() }
     }
 
+    /// Record one paper-vs-measured comparison.
     pub fn check(
         &mut self,
         claim: impl Into<String>,
@@ -176,6 +190,7 @@ impl FigureResult {
         });
     }
 
+    /// True when every recorded check holds.
     pub fn all_hold(&self) -> bool {
         self.checks.iter().all(|c| c.holds)
     }

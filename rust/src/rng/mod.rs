@@ -16,10 +16,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Seed the generator (any u64, including 0).
     pub fn new(seed: u64) -> Self {
         SplitMix64 { state: seed }
     }
 
+    /// Next 64 pseudo-random bits.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;
@@ -61,6 +63,7 @@ impl Pcg64 {
         rng
     }
 
+    /// Next 64 pseudo-random bits (XSL-RR output permutation).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);

@@ -13,10 +13,13 @@ pub const N_OUTPUTS: usize = 11;
 /// One lowered module.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ArtifactEntry {
+    /// HLO text file name, relative to the artifact directory.
     pub file: String,
     /// "macsim" (statistics batches) or "mvmsim" (e2e tile batches).
     pub graph: String,
+    /// Array depth the module was lowered for.
     pub nr: usize,
+    /// Batch size the module was lowered for.
     pub batch: usize,
 }
 
@@ -24,6 +27,7 @@ pub struct ArtifactEntry {
 #[derive(Debug, Clone)]
 pub struct ArtifactRegistry {
     root: PathBuf,
+    /// Every artifact the manifest lists (all files verified to exist).
     pub entries: Vec<ArtifactEntry>,
 }
 
@@ -78,6 +82,7 @@ impl ArtifactRegistry {
         Ok(ArtifactRegistry { root: dir.to_path_buf(), entries })
     }
 
+    /// The artifact directory the registry was loaded from.
     pub fn root(&self) -> &Path {
         &self.root
     }
@@ -92,6 +97,7 @@ impl ArtifactRegistry {
         self.entries.iter().filter(|e| e.graph == "mvmsim").collect()
     }
 
+    /// The entry for a (graph, depth) pair, if lowered.
     pub fn entry(&self, graph: &str, nr: usize) -> Option<&ArtifactEntry> {
         self.entries.iter().find(|e| e.graph == graph && e.nr == nr)
     }

@@ -40,7 +40,9 @@ use std::path::Path;
 /// widening buffers). One scratch per worker, reused across jobs.
 #[derive(Debug, Default)]
 pub struct SimScratch {
+    /// f32 -> f64 widening buffer for the inputs.
     pub xf: Vec<f64>,
+    /// f32 -> f64 widening buffer for the weights.
     pub wf: Vec<f64>,
 }
 
@@ -77,13 +79,17 @@ pub trait Engine {
     /// Array depths this engine supports.
     fn supports_nr(&self, nr: usize) -> bool;
 
+    /// Stable backend name (`"rust"` / `"pjrt"`).
     fn name(&self) -> &'static str;
 }
 
 /// Which backend a campaign should use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
+    /// The pure-Rust f64 oracle (always available).
     Rust,
+    /// The PJRT artifact executor (requires the `pjrt` feature +
+    /// artifacts; an explicit request errors when unavailable).
     Pjrt,
     /// Prefer PJRT, fall back to Rust when the backend is not compiled in,
     /// artifacts are missing, or the requested depth has no artifact.
@@ -91,6 +97,7 @@ pub enum EngineKind {
 }
 
 impl EngineKind {
+    /// Parse a `--engine` value (`rust` | `pjrt` | `auto`).
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "rust" => Ok(EngineKind::Rust),

@@ -48,10 +48,12 @@ impl PjrtEngine {
         Ok(PjrtEngine { client, execs })
     }
 
+    /// The PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// Array depths with a compiled executable, ascending.
     pub fn depths(&self) -> Vec<usize> {
         let mut d: Vec<usize> = self.execs.keys().copied().collect();
         d.sort();

@@ -63,12 +63,15 @@ impl Outcome {
 /// Monotonic counters exposed by the `info` request.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct StatsSnapshot {
+    /// Lookups served from the cache.
     pub hits: u64,
+    /// Lookups that found no resident entry.
     pub misses: u64,
     /// Computations actually executed (single-flight leaders only).
     pub computes: u64,
     /// Misses that waited on another thread's computation.
     pub coalesced: u64,
+    /// Entries discarded by per-shard LRU eviction.
     pub evictions: u64,
     /// Entries currently resident.
     pub entries: u64,

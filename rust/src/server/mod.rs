@@ -50,8 +50,9 @@ use crate::runtime::EngineKind;
 use crate::spec::{required_enob, Arch, SpecConfig};
 use crate::stats::ColumnAgg;
 use anyhow::{bail, Context, Result};
+use crate::workload::{self, EmpiricalDist, TensorTrace};
 use cache::{Outcome, ShardedCache, StatsSnapshot};
-use proto::{obj, Request};
+use proto::{obj, Request, TraceSource};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -99,6 +100,7 @@ pub struct CampaignService {
     campaign: CampaignConfig,
     aggs: ShardedCache<ColumnAgg>,
     figs: ShardedCache<String>,
+    workloads: ShardedCache<String>,
 }
 
 fn arch_json(name: &str, enob: f64, b: &EnergyBreakdown) -> Json {
@@ -127,11 +129,14 @@ fn stats_json(s: &StatsSnapshot) -> Json {
 }
 
 impl CampaignService {
+    /// Build the handlers around one campaign configuration and a total
+    /// cache budget (split across the aggregate/figure/workload caches).
     pub fn new(campaign: CampaignConfig, cache_entries: usize) -> Self {
         CampaignService {
             campaign,
             aggs: ShardedCache::new(cache_entries),
             figs: ShardedCache::new((cache_entries / 8).max(8)),
+            workloads: ShardedCache::new((cache_entries / 8).max(8)),
         }
     }
 
@@ -179,6 +184,9 @@ impl CampaignService {
             Request::Figure { id, samples, seed } => {
                 self.figure(id, *samples, *seed)
             }
+            Request::Workload { source, samples, seed } => {
+                self.workload(source, *samples, *seed)
+            }
         };
         match out {
             Ok((result, cached)) => proto::ok_line(result, cached),
@@ -195,6 +203,7 @@ impl CampaignService {
             ("seed", Json::Num(self.campaign.seed as f64)),
             ("aggregates", stats_json(&self.aggs.stats())),
             ("figures", stats_json(&self.figs.stats())),
+            ("workloads", stats_json(&self.workloads.stats())),
         ]))
     }
 
@@ -280,6 +289,11 @@ impl CampaignService {
         let mut rows = Vec::new();
         let mut cached = true;
         for e in experiments {
+            // empirical distributions read a server-side trace file; the
+            // same confinement as the workload request applies
+            if let Some(path) = e.distribution.strip_prefix("empirical:") {
+                confined_trace_path(path)?;
+            }
             let spec = experiment_spec(
                 &e.name,
                 e.n_e,
@@ -350,6 +364,61 @@ impl CampaignService {
         let result = obj(vec![
             ("id", Json::Str(id.to_string())),
             ("figure", figure),
+        ]);
+        Ok((result, o.is_cached()))
+    }
+
+    /// The workload query: fit an empirical trace and run the full
+    /// `grcim workload` analysis ([`crate::workload::report`]), cached by
+    /// the trace's **content hash** — two uploads of the same tensor (even
+    /// under different names or paths) share one entry, and hits are
+    /// byte-identical to the cold compute (the cache stores the rendered
+    /// JSON text). Server-side trace paths are confined (see
+    /// [`confined_trace_path`]).
+    fn workload(
+        &self,
+        source: &TraceSource,
+        samples: usize,
+        seed: Option<u64>,
+    ) -> Result<(Json, bool)> {
+        if samples == 0 {
+            bail!("samples must be positive");
+        }
+        let seed = seed.unwrap_or(self.campaign.seed);
+        let trace = match source {
+            TraceSource::Path(p) => {
+                TensorTrace::read(&confined_trace_path(p)?)?
+            }
+            TraceSource::Inline { name, values } => TensorTrace::from_f64(
+                name.clone(),
+                vec![values.len()],
+                values.clone(),
+            )?,
+        };
+        let fit = Arc::new(EmpiricalDist::fit(&trace)?);
+        let key = proto::workload_key(
+            fit.content_hash(),
+            samples,
+            seed,
+            self.engine_name(),
+        );
+        let campaign = CampaignConfig { seed, ..self.campaign.clone() };
+        let fit_for_compute = Arc::clone(&fit);
+        let (text, o) = self.workloads.get_or_compute(&key, move || {
+            let fr = workload::report(&fit_for_compute, &campaign, samples)?;
+            Ok(fr.to_json().to_string())
+        })?;
+        let report =
+            Json::parse(&text).context("re-parsing cached workload JSON")?;
+        let result = obj(vec![
+            ("trace", Json::Str(trace.name().to_string())),
+            (
+                "content_hash",
+                Json::Str(format!("{:016x}", fit.content_hash())),
+            ),
+            ("samples_in_trace", Json::Num(trace.len() as f64)),
+            ("seed", Json::Num(seed as f64)),
+            ("workload", report),
         ]);
         Ok((result, o.is_cached()))
     }
@@ -543,6 +612,43 @@ fn handle_conn(
     }
 }
 
+/// Confine a trace path received over the wire: requests may only name
+/// **relative** paths without `..` components, and the path must
+/// *resolve* (symlinks included) to a file under the serve process's
+/// working directory. Without this, any TCP client could read and
+/// statistically summarize arbitrary files on the server (the other
+/// request kinds never touch the filesystem); the canonicalization step
+/// closes the symlink escape a purely lexical check would leave open.
+fn confined_trace_path(p: &str) -> Result<std::path::PathBuf> {
+    use std::path::Component;
+    let path = std::path::Path::new(p);
+    let confined = !path.is_absolute()
+        && path
+            .components()
+            .all(|c| matches!(c, Component::Normal(_) | Component::CurDir));
+    if !confined {
+        bail!(
+            "trace path '{p}' is not allowed over the wire: server-side \
+             traces must be relative paths without '..' (resolved in the \
+             serve process's working directory)"
+        );
+    }
+    let cwd = std::env::current_dir()
+        .and_then(|d| d.canonicalize())
+        .context("resolving the serve working directory")?;
+    let real = path
+        .canonicalize()
+        .with_context(|| format!("resolving trace path '{p}'"))?;
+    if !real.starts_with(&cwd) {
+        bail!(
+            "trace path '{p}' is not allowed over the wire: it resolves to \
+             {} outside the serve working directory",
+            real.display()
+        );
+    }
+    Ok(real)
+}
+
 fn respond_line(service: &CampaignService, line: &str) -> Option<String> {
     if line.is_empty() {
         return None; // blank keep-alive lines are ignored
@@ -694,6 +800,128 @@ mod tests {
             .and_then(Json::as_str)
             .unwrap()
             .contains("unknown figure"));
+    }
+
+    #[test]
+    fn workload_request_cached_by_content_hash() {
+        let svc = test_service();
+        // a small deterministic synthetic-LLM trace, inline
+        let mut vals = String::new();
+        let mut rng = crate::rng::Pcg64::seeded(21);
+        let d = Distribution::gauss_outliers();
+        for i in 0..256 {
+            if i > 0 {
+                vals.push(',');
+            }
+            vals.push_str(&format!("{}", d.sample(&mut rng) as f32));
+        }
+        let line = format!(
+            r#"{{"cmd":"workload","name":"acts","values":[{vals}],"samples":256}}"#
+        );
+        let req = proto::parse_request(&line).unwrap();
+        let cold = svc.respond(&req);
+        let j = Json::parse(&cold).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{cold}");
+        assert_eq!(j.get("cached"), Some(&Json::Bool(false)));
+        let r = j.get("result").unwrap();
+        assert_eq!(r.get("trace").and_then(Json::as_str), Some("acts"));
+        let wl = r.get("workload").unwrap();
+        assert_eq!(wl.get("name").and_then(Json::as_str), Some("workload"));
+        assert_eq!(wl.get("all_hold"), Some(&Json::Bool(true)));
+        // three tables: summary, sqnr sweep, energy bounds
+        assert_eq!(wl.get("tables").unwrap().items().len(), 3);
+
+        // repeat: byte-identical hit
+        let warm = svc.respond(&req);
+        let jw = Json::parse(&warm).unwrap();
+        assert_eq!(jw.get("cached"), Some(&Json::Bool(true)));
+        assert_eq!(result_str(&cold), result_str(&warm));
+        assert_eq!(svc.workloads.stats().computes, 1);
+
+        // the same payload under a different *name* shares the cache
+        // entry (content-hash identity, names are labels)
+        let renamed = format!(
+            r#"{{"cmd":"workload","name":"other","values":[{vals}],"samples":256}}"#
+        );
+        let req2 = proto::parse_request(&renamed).unwrap();
+        let j2 = Json::parse(&svc.respond(&req2)).unwrap();
+        assert_eq!(j2.get("cached"), Some(&Json::Bool(true)));
+        assert_eq!(svc.workloads.stats().computes, 1);
+
+        // a perturbed payload is a different trace
+        let perturbed = format!(
+            r#"{{"cmd":"workload","name":"acts","values":[{vals},0.123],"samples":256}}"#
+        );
+        let req3 = proto::parse_request(&perturbed).unwrap();
+        let j3 = Json::parse(&svc.respond(&req3)).unwrap();
+        assert_eq!(j3.get("cached"), Some(&Json::Bool(false)));
+        assert_eq!(svc.workloads.stats().computes, 2);
+    }
+
+    #[test]
+    fn workload_bad_traces_are_clean_errors() {
+        let svc = test_service();
+        for line in [
+            r#"{"cmd":"workload","values":[0,0,0]}"#, // all-zero
+            r#"{"cmd":"workload","values":[1.0]}"#,   // too small
+            r#"{"cmd":"workload","path":"nonexistent-grcim.trace"}"#,
+        ] {
+            let req = proto::parse_request(line).unwrap();
+            let j = Json::parse(&svc.respond(&req)).unwrap();
+            assert_eq!(j.get("ok"), Some(&Json::Bool(false)), "{line}");
+        }
+    }
+
+    #[test]
+    fn wire_trace_paths_are_confined() {
+        let svc = test_service();
+        // escaping paths are rejected before touching the filesystem, for
+        // both the workload request and empirical sweep distributions
+        for line in [
+            r#"{"cmd":"workload","path":"/etc/hostname"}"#,
+            r#"{"cmd":"workload","path":"../secrets.json"}"#,
+            r#"{"cmd":"workload","path":"a/../../b.grtt"}"#,
+            r#"{"cmd":"sweep","experiments":[{"name":"x",
+                "distribution":"empirical:/etc/hostname"}]}"#,
+        ] {
+            let req = proto::parse_request(line).unwrap();
+            let j = Json::parse(&svc.respond(&req)).unwrap();
+            assert_eq!(j.get("ok"), Some(&Json::Bool(false)), "{line}");
+            assert!(
+                j.get("error")
+                    .and_then(Json::as_str)
+                    .unwrap()
+                    .contains("not allowed over the wire"),
+                "{line}"
+            );
+        }
+        // a relative path to a real file under the cwd resolves (tests run
+        // with cwd = the package root, where Cargo.toml exists)
+        assert!(confined_trace_path("Cargo.toml").is_ok());
+        assert!(confined_trace_path("./Cargo.toml").is_ok());
+        // nonexistent paths fail at resolution rather than being probed
+        assert!(confined_trace_path("traces/acts.grtt").is_err());
+        assert!(confined_trace_path("/abs").is_err());
+        assert!(confined_trace_path("up/../../x").is_err());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn wire_trace_paths_reject_symlink_escapes() {
+        // a lexically clean relative path whose symlink resolves outside
+        // the cwd must be rejected (canonicalization-based confinement)
+        let outside = std::env::temp_dir().join("grcim_symlink_target.json");
+        std::fs::write(&outside, r#"{"values":[1,2]}"#).unwrap();
+        let link = std::path::Path::new("grcim-test-escape-link.json");
+        let _ = std::fs::remove_file(link);
+        std::os::unix::fs::symlink(&outside, link).unwrap();
+        let res = confined_trace_path("grcim-test-escape-link.json");
+        let _ = std::fs::remove_file(link);
+        let err = format!("{:#}", res.unwrap_err());
+        assert!(
+            err.contains("outside the serve working directory"),
+            "{err}"
+        );
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! -> {"cmd":"energy","dr":30.1,"sqnr":22.83,"samples":4096}
 //! <- {"ok":true,"cached":false,"result":{...}}
 //! -> {"cmd":"nonsense"}
-//! <- {"ok":false,"error":"unknown cmd 'nonsense' (energy|sweep|figure|info)"}
+//! <- {"ok":false,"error":"unknown cmd 'nonsense' (energy|sweep|figure|workload|info)"}
 //! ```
 //!
 //! The `"cached"` flag sits **outside** `"result"` so clients (and the
@@ -57,10 +57,15 @@ pub const DEFAULT_FIGURE_SAMPLES: usize = 8_192;
 /// One `[[experiment]]`-shaped entry of a `sweep` request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepExperiment {
+    /// Experiment label (reports only).
     pub name: String,
+    /// Input exponent bits.
     pub n_e: f64,
+    /// Input mantissa bits.
     pub n_m: f64,
+    /// Array depth.
     pub nr: usize,
+    /// Input distribution name (see `cli::sweep::dist_by_name`).
     pub distribution: String,
 }
 
@@ -71,22 +76,58 @@ pub enum Request {
     Info,
     /// Energy model at one (DR, SQNR) spec point — the Fig. 12 query unit.
     Energy {
+        /// Dynamic range, dB.
         dr_db: f64,
+        /// SQNR, dB.
         sqnr_db: f64,
+        /// Monte-Carlo samples per campaign point.
         samples: usize,
+        /// Campaign seed override (server default when absent).
         seed: Option<u64>,
     },
     /// A campaign over explicit experiments (the TOML sweep, as JSON).
     Sweep {
+        /// Monte-Carlo samples per experiment.
         samples: usize,
+        /// Campaign seed override (server default when absent).
         seed: Option<u64>,
+        /// The experiment grid.
         experiments: Vec<SweepExperiment>,
     },
     /// Regenerate one paper figure/table and return it as JSON.
     Figure {
+        /// Figure id (one of [`crate::figures::ALL`]).
         id: String,
+        /// Monte-Carlo samples per campaign point.
         samples: usize,
+        /// Campaign seed override (server default when absent).
         seed: Option<u64>,
+    },
+    /// Analyze an empirical tensor trace: summary, SQNR sweep, and the
+    /// conventional-vs-GR energy-bound comparison (`grcim workload` over
+    /// the wire). Cached by the trace's content hash.
+    Workload {
+        /// Where the trace comes from.
+        source: TraceSource,
+        /// Monte-Carlo samples per campaign point.
+        samples: usize,
+        /// Campaign seed override (server default when absent).
+        seed: Option<u64>,
+    },
+}
+
+/// How a `workload` request supplies its trace.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceSource {
+    /// A trace file resolved on the *server's* filesystem (binary or JSON
+    /// form; see `docs/CLI.md`).
+    Path(String),
+    /// Payload carried inline in the request (small traces, tests).
+    Inline {
+        /// Trace label (reports only; not part of the cache identity).
+        name: String,
+        /// The tensor values (a flat f64 vector).
+        values: Vec<f64>,
     },
 }
 
@@ -167,7 +208,53 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 .unwrap_or(DEFAULT_FIGURE_SAMPLES),
             seed,
         }),
-        other => bail!("unknown cmd '{other}' (energy|sweep|figure|info)"),
+        "workload" => {
+            let source = match (j.get("path"), j.get("values")) {
+                (Some(p), None) => TraceSource::Path(
+                    p.as_str()
+                        .context("workload 'path' must be a string")?
+                        .to_string(),
+                ),
+                (None, Some(vals)) => {
+                    let mut values = Vec::new();
+                    for v in vals.items() {
+                        values.push(
+                            v.as_f64()
+                                .context("workload values must be numbers")?,
+                        );
+                    }
+                    if values.is_empty() {
+                        bail!("workload 'values' array is empty");
+                    }
+                    TraceSource::Inline {
+                        name: j
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .unwrap_or("inline")
+                            .to_string(),
+                        values,
+                    }
+                }
+                (Some(_), Some(_)) => {
+                    bail!("workload takes 'path' or 'values', not both")
+                }
+                (None, None) => bail!(
+                    "workload needs a 'path' (server-side trace file) or a \
+                     'values' array"
+                ),
+            };
+            Ok(Request::Workload {
+                source,
+                samples: j
+                    .get("samples")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(DEFAULT_FIGURE_SAMPLES),
+                seed,
+            })
+        }
+        other => {
+            bail!("unknown cmd '{other}' (energy|sweep|figure|workload|info)")
+        }
     }
 }
 
@@ -221,6 +308,12 @@ fn canonical_dist(d: &Distribution) -> String {
             format!("clipgauss:{}", bits(*clip_sigmas))
         }
         Distribution::UniformScaled { r } => format!("uscaled:{}", bits(*r)),
+        // the content hash covers dtype + shape + exact payload bits; the
+        // trace *name* is a label and is deliberately excluded (same rule
+        // as the experiment id)
+        Distribution::Empirical(e) => {
+            format!("empirical:{:016x}", e.content_hash())
+        }
     }
 }
 
@@ -250,6 +343,22 @@ pub fn spec_key(spec: &ExperimentSpec, seed: u64, engine: &str) -> String {
 /// Canonical cache key of one rendered figure.
 pub fn figure_key(id: &str, samples: usize, seed: u64, engine: &str) -> String {
     format!("v{PROTO_VERSION}|fig|eng={engine}|seed={seed}|n={samples}|id={id}")
+}
+
+/// Canonical cache key of one rendered workload report: the trace is
+/// identified by its content hash ([`crate::workload::TensorTrace::content_hash`]
+/// — dtype, shape, and exact payload bits; *not* the trace name or the
+/// path it was read from), so renamed or re-uploaded copies of the same
+/// tensor hit the same entry.
+pub fn workload_key(
+    content_hash: u64,
+    samples: usize,
+    seed: u64,
+    engine: &str,
+) -> String {
+    format!(
+        "v{PROTO_VERSION}|wl|eng={engine}|seed={seed}|n={samples}|trace={content_hash:016x}"
+    )
 }
 
 #[cfg(test)]
@@ -387,5 +496,77 @@ mod tests {
         assert_ne!(a, figure_key("fig10", 1024, 7, "rust"));
         assert_ne!(a, figure_key("fig9", 2048, 7, "rust"));
         assert_ne!(a, figure_key("fig9", 1024, 8, "rust"));
+    }
+
+    #[test]
+    fn parses_workload_requests() {
+        let p = parse_request(
+            r#"{"cmd":"workload","path":"acts.grtt","samples":2048,"seed":3}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            p,
+            Request::Workload {
+                source: TraceSource::Path("acts.grtt".into()),
+                samples: 2048,
+                seed: Some(3),
+            }
+        );
+        let i = parse_request(
+            r#"{"cmd":"workload","name":"t","values":[0.5,-0.5,1,-1]}"#,
+        )
+        .unwrap();
+        match i {
+            Request::Workload {
+                source: TraceSource::Inline { name, values },
+                samples,
+                seed,
+            } => {
+                assert_eq!(name, "t");
+                assert_eq!(values, vec![0.5, -0.5, 1.0, -1.0]);
+                assert_eq!(samples, DEFAULT_FIGURE_SAMPLES);
+                assert_eq!(seed, None);
+            }
+            other => panic!("{other:?}"),
+        }
+        // neither / both / empty sources are rejected
+        assert!(parse_request(r#"{"cmd":"workload"}"#).is_err());
+        assert!(parse_request(
+            r#"{"cmd":"workload","path":"x","values":[1]}"#
+        )
+        .is_err());
+        assert!(parse_request(r#"{"cmd":"workload","values":[]}"#).is_err());
+        assert!(
+            parse_request(r#"{"cmd":"workload","values":["a"]}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn workload_keys_cover_hash_samples_seed_engine() {
+        let a = workload_key(0xDEAD_BEEF, 1024, 7, "rust");
+        assert_ne!(a, workload_key(0xDEAD_BEF0, 1024, 7, "rust"));
+        assert_ne!(a, workload_key(0xDEAD_BEEF, 2048, 7, "rust"));
+        assert_ne!(a, workload_key(0xDEAD_BEEF, 1024, 8, "rust"));
+        assert_ne!(a, workload_key(0xDEAD_BEEF, 1024, 7, "pjrt"));
+        assert_eq!(a, workload_key(0xDEAD_BEEF, 1024, 7, "rust"));
+    }
+
+    #[test]
+    fn spec_key_distinguishes_empirical_traces_by_content() {
+        use crate::workload::{EmpiricalDist, TensorTrace};
+        let fit = |name: &str, vals: Vec<f64>| {
+            let t =
+                TensorTrace::from_f64(name, vec![vals.len()], vals).unwrap();
+            Distribution::empirical(EmpiricalDist::fit(&t).unwrap())
+        };
+        let mut a = spec();
+        a.dist_x = fit("a", vec![0.5, -0.5, 1.0]);
+        let mut renamed = spec();
+        renamed.dist_x = fit("b", vec![0.5, -0.5, 1.0]);
+        let mut different = spec();
+        different.dist_x = fit("a", vec![0.5, -0.5, 0.9999]);
+        // same bits, different name -> same key; different bits -> new key
+        assert_eq!(spec_key(&a, 7, "rust"), spec_key(&renamed, 7, "rust"));
+        assert_ne!(spec_key(&a, 7, "rust"), spec_key(&different, 7, "rust"));
     }
 }

@@ -76,6 +76,7 @@ pub enum Arch {
 }
 
 impl Arch {
+    /// Stable lowercase name for reports and wire responses.
     pub fn name(&self) -> &'static str {
         match self {
             Arch::Conventional => "conventional",

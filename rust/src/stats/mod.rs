@@ -6,30 +6,37 @@ use crate::util::db;
 /// Streaming first/second moments (mergeable across worker batches).
 #[derive(Debug, Clone, Default)]
 pub struct Moments {
+    /// Number of accumulated samples.
     pub n: u64,
+    /// Running sum of samples.
     pub sum: f64,
+    /// Running sum of squared samples.
     pub sum_sq: f64,
 }
 
 impl Moments {
+    /// Accumulate one sample.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         self.sum += x;
         self.sum_sq += x * x;
     }
 
+    /// Accumulate every sample of a slice.
     pub fn push_slice(&mut self, xs: &[f64]) {
         for &x in xs {
             self.push(x);
         }
     }
 
+    /// Fold another accumulator in (exact: plain sum addition).
     pub fn merge(&mut self, other: &Moments) {
         self.n += other.n;
         self.sum += other.sum;
         self.sum_sq += other.sum_sq;
     }
 
+    /// Sample mean (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -47,6 +54,7 @@ impl Moments {
         }
     }
 
+    /// Population variance (0 when empty; clamped non-negative).
     pub fn variance(&self) -> f64 {
         let m = self.mean();
         (self.mean_sq() - m * m).max(0.0)
@@ -56,18 +64,24 @@ impl Moments {
 /// Fixed-range histogram (for the Fig. 4 distribution panels).
 #[derive(Debug, Clone)]
 pub struct Histogram {
+    /// Lower edge of the binned range.
     pub lo: f64,
+    /// Upper edge of the binned range.
     pub hi: f64,
+    /// Per-bin sample counts (out-of-range samples clamp to the edges).
     pub counts: Vec<u64>,
+    /// Total samples pushed.
     pub total: u64,
 }
 
 impl Histogram {
+    /// An empty histogram of `bins` equal bins over [`lo`, `hi`].
     pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
         assert!(hi > lo && bins > 0);
         Histogram { lo, hi, counts: vec![0; bins], total: 0 }
     }
 
+    /// Bin one sample (out-of-range values clamp to the edge bins).
     pub fn push(&mut self, x: f64) {
         let bins = self.counts.len();
         let t = (x - self.lo) / (self.hi - self.lo);
@@ -76,12 +90,14 @@ impl Histogram {
         self.total += 1;
     }
 
+    /// Bin every sample of a slice.
     pub fn push_slice(&mut self, xs: &[f64]) {
         for &x in xs {
             self.push(x);
         }
     }
 
+    /// Fold another histogram with identical binning in.
     pub fn merge(&mut self, other: &Histogram) {
         assert_eq!(self.counts.len(), other.counts.len());
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
@@ -131,8 +147,10 @@ pub struct ColumnAgg {
     pub g_row: Moments,
     /// N_eff = S^2/S2 statistics (paper Sec. III-B2).
     pub n_eff: Moments,
-    /// ADC-input amplitudes (for signal-power comparisons, Fig. 4).
+    /// Conventional ADC-input amplitudes (signal-power comparisons,
+    /// Fig. 4).
     pub v_conv: Moments,
+    /// GR ADC-input amplitudes (signal-power comparisons, Fig. 4).
     pub v_gr: Moments,
 }
 
@@ -145,17 +163,29 @@ pub struct ColumnAgg {
 /// steady state.
 #[derive(Debug, Clone, Default)]
 pub struct ColumnBatch {
+    /// Array depth the samples were simulated at.
     pub nr: usize,
+    /// Ideal (unquantized) outputs `z = (1/NR) Σ x_i w_i`.
     pub z_ideal: Vec<f64>,
+    /// Quantized-chain outputs.
     pub z_q: Vec<f64>,
+    /// Conventional compute-line voltages (`z_q / g_conv`).
     pub v_conv: Vec<f64>,
+    /// Conventional static alignment gains.
     pub g_conv: Vec<f64>,
+    /// GR column voltages (exponent-weighted mantissa-product averages).
     pub v_gr: Vec<f64>,
+    /// Exponent-weight sums `S = Σ u_i`.
     pub s_sum: Vec<f64>,
+    /// Squared-weight sums `S₂ = Σ u_i²` (the N_eff denominator).
     pub s2_sum: Vec<f64>,
+    /// Input-exponent-only sums `S_x` (row-normalization referral).
     pub sx_sum: Vec<f64>,
+    /// Weight-side block alignment gains.
     pub g_w: Vec<f64>,
+    /// Output-referred input ulp noise floors.
     pub nf: Vec<f64>,
+    /// Mean squared quantized weights per sample.
     pub wq2_mean: Vec<f64>,
 }
 
@@ -165,10 +195,12 @@ impl ColumnBatch {
         ColumnBatch { nr, ..Default::default() }
     }
 
+    /// Number of samples in the batch.
     pub fn len(&self) -> usize {
         self.z_ideal.len()
     }
 
+    /// True when the batch holds no samples.
     pub fn is_empty(&self) -> bool {
         self.z_ideal.is_empty()
     }
@@ -207,10 +239,12 @@ impl ColumnBatch {
 }
 
 impl ColumnAgg {
+    /// An empty aggregate for array depth `nr`.
     pub fn new(nr: usize) -> Self {
         ColumnAgg { nr, ..Default::default() }
     }
 
+    /// Accumulate every sample of a batch (must match this depth).
     pub fn push_batch(&mut self, b: &ColumnBatch) {
         assert_eq!(self.nr, b.nr, "batch from a different array depth");
         let nr = b.nr as f64;
@@ -228,6 +262,7 @@ impl ColumnAgg {
         }
     }
 
+    /// Fold another aggregate of the same depth in (exact).
     pub fn merge(&mut self, other: &ColumnAgg) {
         assert_eq!(self.nr, other.nr);
         self.sig.merge(&other.sig);
@@ -242,6 +277,7 @@ impl ColumnAgg {
         self.v_gr.merge(&other.v_gr);
     }
 
+    /// Number of Monte-Carlo samples accumulated.
     pub fn samples(&self) -> u64 {
         self.sig.n
     }

@@ -10,18 +10,24 @@ use std::time::Instant;
 /// Log verbosity. Default `Info`; the CLI's `-q`/`-v` flags move it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
+    /// Errors only.
     Error = 0,
+    /// Warnings and errors.
     Warn = 1,
+    /// Normal progress reporting (the default).
     Info = 2,
+    /// Everything, including per-phase timings.
     Debug = 3,
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
+/// Set the global log verbosity (`--verbose` / `--quiet`).
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// The current global log verbosity.
 pub fn level() -> Level {
     match LEVEL.load(Ordering::Relaxed) {
         0 => Level::Error,
@@ -31,6 +37,8 @@ pub fn level() -> Level {
     }
 }
 
+/// Write one log line to stderr if `lvl` is enabled (the macro target;
+/// prefer `info!`/`warn_!`/`debug!`/`error!`).
 pub fn log(lvl: Level, args: std::fmt::Arguments<'_>) {
     if lvl <= level() {
         let tag = match lvl {
@@ -44,18 +52,23 @@ pub fn log(lvl: Level, args: std::fmt::Arguments<'_>) {
     }
 }
 
+/// Log at [`util::Level::Info`](crate::util::Level).
 #[macro_export]
 macro_rules! info {
     ($($t:tt)*) => { $crate::util::log($crate::util::Level::Info, format_args!($($t)*)) };
 }
+/// Log at [`util::Level::Warn`](crate::util::Level) (named `warn_!` to
+/// avoid colliding with the built-in `warn` lint attribute namespace).
 #[macro_export]
 macro_rules! warn_ {
     ($($t:tt)*) => { $crate::util::log($crate::util::Level::Warn, format_args!($($t)*)) };
 }
+/// Log at [`util::Level::Debug`](crate::util::Level).
 #[macro_export]
 macro_rules! debug {
     ($($t:tt)*) => { $crate::util::log($crate::util::Level::Debug, format_args!($($t)*)) };
 }
+/// Log at [`util::Level::Error`](crate::util::Level).
 #[macro_export]
 macro_rules! error {
     ($($t:tt)*) => { $crate::util::log($crate::util::Level::Error, format_args!($($t)*)) };
@@ -68,10 +81,12 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start timing a labeled scope.
     pub fn new(label: impl Into<String>) -> Self {
         Timer { label: label.into(), start: Instant::now() }
     }
 
+    /// Seconds elapsed since construction.
     pub fn elapsed_s(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }

@@ -1,0 +1,468 @@
+//! `EmpiricalDist` — the streaming fitter that turns a [`TensorTrace`]
+//! into a sampleable workload distribution.
+//!
+//! Fitting normalizes the payload to [-1, 1] by its largest magnitude (the
+//! same per-tensor calibration the CIM inference path applies,
+//! `nn::cim_forward_batch`), then summarizes it in one pass over the
+//! sorted data:
+//!
+//! * an **inverse-CDF table** of [`QUANTILE_KNOTS`] equally spaced
+//!   quantile knots (linear interpolation of order statistics) — sampling
+//!   draws one uniform variate and interpolates the table, so a fitted
+//!   trace plugs into every Monte-Carlo path exactly like the parametric
+//!   distributions;
+//! * a fixed 64-bin **histogram** over [-1, 1];
+//! * **dynamic range** in bits: `-log2(min nonzero |x| / max |x|)` — the
+//!   empirical analogue of a format's `dr_bits`;
+//! * a **robust core sigma** `(Q(0.84) - Q(0.16)) / 2` (the central-68%
+//!   half-width; ±1σ for a Gaussian core, insensitive to outliers) and the
+//!   **outlier mass** beyond `4·sigma_core` — mirroring the
+//!   `gauss_outliers` convention of
+//!   [`crate::distributions::Distribution::is_outlier`].
+//!
+//! The arithmetic (normalization, sort, knot interpolation, moment
+//! accumulation) is implemented identically in the Python twin
+//! (`tools/gen_goldens.py`), so the golden snapshot
+//! (`rust/tests/golden/workload_empirical.json`) cross-checks this module
+//! against a second implementation.
+//!
+//! # Example
+//!
+//! ```
+//! use grcim::rng::Pcg64;
+//! use grcim::workload::{EmpiricalDist, TensorTrace};
+//!
+//! let trace =
+//!     TensorTrace::from_f64("t", vec![5], vec![-2.0, -1.0, 0.0, 1.0, 2.0]).unwrap();
+//! let fit = EmpiricalDist::fit(&trace).unwrap();
+//! assert_eq!(fit.scale(), 2.0); // normalized by max |x|
+//! assert_eq!(fit.quantile(0.0), -1.0);
+//! assert_eq!(fit.quantile(1.0), 1.0);
+//! let mut rng = Pcg64::seeded(7);
+//! let v = fit.sample(&mut rng);
+//! assert!((-1.0..=1.0).contains(&v));
+//! ```
+
+use super::trace::TensorTrace;
+use crate::rng::Pcg64;
+use crate::stats::{Histogram, Moments};
+use anyhow::{bail, Result};
+
+/// Knots in the inverse-CDF sampling table (power of two + 1, so knot
+/// positions land on exact binary fractions of the sample range).
+pub const QUANTILE_KNOTS: usize = 513;
+
+/// Histogram bins of the fitted density summary.
+pub const HIST_BINS: usize = 64;
+
+/// Linear interpolation of sorted order statistics at fractional position
+/// `pos` (in [0, n-1]). The exact twin of `interp_sorted` in
+/// `tools/gen_goldens.py`.
+fn interp_sorted(sorted: &[f64], pos: f64) -> f64 {
+    let i = pos.floor() as usize;
+    if i + 1 >= sorted.len() {
+        return sorted[sorted.len() - 1];
+    }
+    let frac = pos - i as f64;
+    sorted[i] + (sorted[i + 1] - sorted[i]) * frac
+}
+
+/// A fitted empirical distribution over [-1, 1] (see the module docs).
+#[derive(Clone)]
+pub struct EmpiricalDist {
+    name: String,
+    content_hash: u64,
+    samples: usize,
+    scale: f64,
+    knots: Vec<f64>,
+    mean: f64,
+    std: f64,
+    min_nonzero: f64,
+    sigma_core: f64,
+    outlier_thresh: f64,
+    outlier_mass: f64,
+    hist: Histogram,
+}
+
+impl std::fmt::Debug for EmpiricalDist {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EmpiricalDist")
+            .field("name", &self.name)
+            .field("content_hash", &format_args!("{:016x}", self.content_hash))
+            .field("samples", &self.samples)
+            .field("scale", &self.scale)
+            .field("dr_bits", &self.dr_bits())
+            .field("sigma_core", &self.sigma_core)
+            .field("outlier_mass", &self.outlier_mass)
+            .finish_non_exhaustive()
+    }
+}
+
+impl EmpiricalDist {
+    /// Fit a trace. Fails on traces with fewer than two elements or with
+    /// no nonzero value (an all-zero tensor cannot drive a campaign).
+    pub fn fit(trace: &TensorTrace) -> Result<EmpiricalDist> {
+        let raw = trace.values();
+        if raw.len() < 2 {
+            bail!(
+                "trace '{}': need at least 2 values to fit, got {}",
+                trace.name(),
+                raw.len()
+            );
+        }
+        let scale = raw.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        if scale == 0.0 {
+            bail!("trace '{}': all values are zero", trace.name());
+        }
+
+        // normalize in capture order (moments/histogram accumulate here)
+        let mut norm = Vec::with_capacity(raw.len());
+        let mut moments = Moments::default();
+        let mut hist = Histogram::new(-1.0, 1.0, HIST_BINS);
+        let mut min_nonzero = f64::INFINITY;
+        for &v in raw {
+            let x = v / scale;
+            moments.push(x);
+            hist.push(x);
+            if x != 0.0 {
+                min_nonzero = min_nonzero.min(x.abs());
+            }
+            norm.push(x);
+        }
+
+        // sorted view: quantile knots + robust spread + outlier mass
+        let mut sorted = norm;
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let mut knots = Vec::with_capacity(QUANTILE_KNOTS);
+        for j in 0..QUANTILE_KNOTS {
+            let pos =
+                ((j * (n - 1)) as f64) / ((QUANTILE_KNOTS - 1) as f64);
+            knots.push(interp_sorted(&sorted, pos));
+        }
+        let q = |p: f64| interp_sorted(&sorted, p * (n - 1) as f64);
+        let sigma_core = (q(0.84) - q(0.16)) / 2.0;
+        // Sparse (e.g. post-ReLU) traces can have >= 68% exact zeros, which
+        // collapses the quantile spread to 0 — a zero threshold would brand
+        // every nonzero sample an "outlier" and empty the core subset.
+        // Fall back to the full std; a constant-magnitude trace (std = 0)
+        // gets threshold 1.0, i.e. no outliers on the normalized scale.
+        let spread = if sigma_core > 0.0 {
+            sigma_core
+        } else {
+            moments.variance().sqrt()
+        };
+        let outlier_thresh = if spread > 0.0 { 4.0 * spread } else { 1.0 };
+        let outlier_mass = sorted
+            .iter()
+            .filter(|x| x.abs() > outlier_thresh)
+            .count() as f64
+            / n as f64;
+
+        Ok(EmpiricalDist {
+            name: trace.name().to_string(),
+            content_hash: trace.content_hash(),
+            samples: n,
+            scale,
+            knots,
+            mean: moments.mean(),
+            std: moments.variance().sqrt(),
+            min_nonzero,
+            sigma_core,
+            outlier_thresh,
+            outlier_mass,
+            hist,
+        })
+    }
+
+    /// Draw one sample in [-1, 1] by inverse-CDF lookup: one uniform
+    /// variate, one table interpolation. Consumes exactly one RNG draw per
+    /// sample (the property the golden twin relies on).
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        let u = rng.uniform();
+        let pos = u * (QUANTILE_KNOTS - 1) as f64;
+        interp_sorted(&self.knots, pos)
+    }
+
+    /// Whether a (normalized) magnitude sits beyond the fitted outlier
+    /// threshold `4·sigma_core`.
+    pub fn is_outlier(&self, x: f64) -> bool {
+        x.abs() > self.outlier_thresh
+    }
+
+    /// Quantile of the fitted (normalized) distribution at `p` in [0, 1],
+    /// interpolated from the knot table.
+    pub fn quantile(&self, p: f64) -> f64 {
+        interp_sorted(&self.knots, p.clamp(0.0, 1.0) * (QUANTILE_KNOTS - 1) as f64)
+    }
+
+    /// Trace label the fit came from.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Content hash of the source trace ([`TensorTrace::content_hash`]).
+    pub fn content_hash(&self) -> u64 {
+        self.content_hash
+    }
+
+    /// Number of trace elements the fit summarizes.
+    pub fn samples(&self) -> usize {
+        self.samples
+    }
+
+    /// Normalization factor: the largest magnitude of the raw payload.
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// Mean of the normalized values.
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population standard deviation of the normalized values.
+    pub fn std(&self) -> f64 {
+        self.std
+    }
+
+    /// Empirical dynamic range in bits: `-log2(min nonzero |x|)` over the
+    /// normalized values (full scale over the smallest resolved magnitude
+    /// — the analogue of `FpFormat::dr_bits` for measured data).
+    pub fn dr_bits(&self) -> f64 {
+        -self.min_nonzero.log2()
+    }
+
+    /// Robust core spread: half the central-68% width, `(Q(0.84) -
+    /// Q(0.16)) / 2` (±1σ for a Gaussian core, insensitive to outliers).
+    /// Can be 0 for sparse traces (≥ 68% exact zeros); the outlier
+    /// threshold then falls back to `4·std` (see [`EmpiricalDist::is_outlier`]).
+    pub fn sigma_core(&self) -> f64 {
+        self.sigma_core
+    }
+
+    /// The fitted outlier threshold on the normalized scale: `4·sigma_core`,
+    /// falling back to `4·std` for sparse traces and to full scale (1.0,
+    /// i.e. no outliers) for constant-magnitude ones.
+    pub fn outlier_thresh(&self) -> f64 {
+        self.outlier_thresh
+    }
+
+    /// Fraction of values with `|x| > 4·sigma_core` — the LLM.int8()-style
+    /// emergent-outlier mass the paper's Gaussian+outliers model stands in
+    /// for.
+    pub fn outlier_mass(&self) -> f64 {
+        self.outlier_mass
+    }
+
+    /// The fitted 64-bin density histogram over [-1, 1].
+    pub fn histogram(&self) -> &Histogram {
+        &self.hist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributions::Distribution;
+    use crate::propcheck::{check_simple, ensure};
+    use crate::util::approx_eq;
+
+    fn trace_from(dist: &Distribution, n: usize, seed: u64) -> TensorTrace {
+        let mut rng = Pcg64::seeded(seed);
+        let mut buf = vec![0.0f32; n];
+        dist.fill_f32(&mut rng, &mut buf);
+        TensorTrace::from_f32("test", vec![n], buf).unwrap()
+    }
+
+    #[test]
+    fn uniform_trace_fits_uniform_quantiles() {
+        let t = trace_from(&Distribution::Uniform, 40_000, 1);
+        let fit = EmpiricalDist::fit(&t).unwrap();
+        // inverse CDF of U[-1,1] is 2p - 1
+        for p in [0.1, 0.25, 0.5, 0.75, 0.9] {
+            let expect = 2.0 * p - 1.0;
+            assert!(
+                (fit.quantile(p) - expect).abs() < 0.02,
+                "Q({p}) = {} vs {expect}",
+                fit.quantile(p)
+            );
+        }
+        assert!(fit.mean().abs() < 0.02);
+        assert!(approx_eq(fit.std(), (1.0f64 / 3.0).sqrt(), 0.03));
+        // central-68% half width of U[-1,1] is 0.68
+        assert!(approx_eq(fit.sigma_core(), 0.68, 0.05));
+        assert_eq!(fit.outlier_mass(), 0.0); // 4 sigma > full scale
+    }
+
+    #[test]
+    fn sampling_reproduces_the_fitted_distribution() {
+        let t = trace_from(&Distribution::clipped_gauss4(), 30_000, 2);
+        let fit = EmpiricalDist::fit(&t).unwrap();
+        let mut rng = Pcg64::seeded(3);
+        let mut m = Moments::default();
+        for _ in 0..50_000 {
+            let v = fit.sample(&mut rng);
+            assert!((-1.0..=1.0).contains(&v));
+            m.push(v);
+        }
+        // scale: clipped gauss has sigma 0.25; max|x| of 30k draws ~ 0.95+,
+        // so the normalized std sits near 0.25 / scale
+        assert!(m.mean().abs() < 0.01, "mean {}", m.mean());
+        assert!(
+            approx_eq(m.variance().sqrt(), fit.std(), 0.05),
+            "sampled std {} vs fitted {}",
+            m.variance().sqrt(),
+            fit.std()
+        );
+    }
+
+    #[test]
+    fn round_trip_property_known_synthetic_distributions() {
+        // sample a known distribution -> trace -> fit -> the fit's
+        // quantiles, outlier mass, and ENOB solution match the source
+        // within Monte-Carlo tolerance
+        check_simple(
+            "empirical-round-trip",
+            7,
+            3,
+            |rng| rng.below(1 << 30) + 1,
+            |&seed| {
+                let src = Distribution::gauss_outliers();
+                let t = trace_from(&src, 50_000, seed);
+                let fit = EmpiricalDist::fit(&t).unwrap();
+                // outlier mass ~ eps = 0.01 (the injected outliers dominate
+                // the >4 sigma-core tail)
+                ensure(
+                    (0.006..0.016).contains(&fit.outlier_mass()),
+                    || format!("outlier mass {}", fit.outlier_mass()),
+                )?;
+                // core sigma ~ (1/150) / scale; scale ~ 1 (outliers reach
+                // full scale)
+                let expect = 1.0 / 150.0 / fit.scale();
+                ensure(
+                    approx_eq(fit.sigma_core(), expect, 0.15),
+                    || format!("sigma_core {} vs {expect}", fit.sigma_core()),
+                )?;
+                // median of the heavy core is ~0
+                ensure(fit.quantile(0.5).abs() < 0.01, || {
+                    format!("median {}", fit.quantile(0.5))
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn round_trip_enob_matches_source_distribution() {
+        use crate::coordinator::{run_experiment, ExperimentSpec};
+        use crate::formats::FpFormat;
+        use crate::mac::FormatPair;
+        use crate::runtime::RustEngine;
+        use crate::spec::{delta_enob, SpecConfig};
+
+        let src = Distribution::gauss_outliers();
+        let t = trace_from(&src, 50_000, 11);
+        let fit = EmpiricalDist::fit(&t).unwrap();
+        let spec_with = |dist_x: Distribution| ExperimentSpec {
+            id: "rt".into(),
+            fmts: FormatPair::new(FpFormat::fp(4, 2), FpFormat::fp4_e2m1()),
+            dist_x,
+            dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+            nr: 32,
+            samples: 4096,
+        };
+        let e = RustEngine;
+        let agg_src = run_experiment(&e, &spec_with(src), 5).unwrap();
+        let agg_emp = run_experiment(
+            &e,
+            &spec_with(Distribution::empirical(fit)),
+            5,
+        )
+        .unwrap();
+        let cfg = SpecConfig::default();
+        let d_src = delta_enob(&agg_src, cfg);
+        let d_emp = delta_enob(&agg_emp, cfg);
+        assert!(
+            (d_src - d_emp).abs() < 0.75,
+            "delta ENOB source {d_src} vs empirical {d_emp}"
+        );
+        // the headline survives the round trip
+        assert!(d_emp > 6.0, "delta ENOB {d_emp}");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_uses_one_draw() {
+        let t = trace_from(&Distribution::Uniform, 1000, 4);
+        let fit = EmpiricalDist::fit(&t).unwrap();
+        let mut a = Pcg64::seeded(9);
+        let mut b = Pcg64::seeded(9);
+        for _ in 0..100 {
+            assert_eq!(fit.sample(&mut a).to_bits(), fit.sample(&mut b).to_bits());
+        }
+        // exactly one u64 consumed per sample
+        let mut c = Pcg64::seeded(10);
+        let mut d = Pcg64::seeded(10);
+        fit.sample(&mut c);
+        d.next_u64();
+        assert_eq!(c.next_u64(), d.next_u64());
+    }
+
+    #[test]
+    fn rejects_degenerate_traces() {
+        let z = TensorTrace::from_f64("z", vec![3], vec![0.0, 0.0, 0.0]).unwrap();
+        let err = EmpiricalDist::fit(&z).unwrap_err().to_string();
+        assert!(err.contains("all values are zero"), "{err}");
+
+        let one = TensorTrace::from_f64("one", vec![1], vec![1.0]).unwrap();
+        assert!(EmpiricalDist::fit(&one).unwrap_err().to_string().contains("at least 2"));
+    }
+
+    #[test]
+    fn dr_bits_and_outlier_threshold() {
+        // values spanning 8 binades: min nonzero = 2^-8 of full scale
+        let vals = vec![1.0, 0.5, 0.25, 2f64.powi(-8), -1.0, 0.0];
+        let t = TensorTrace::from_f64("dr", vec![6], vals).unwrap();
+        let fit = EmpiricalDist::fit(&t).unwrap();
+        assert!(approx_eq(fit.dr_bits(), 8.0, 1e-12), "{}", fit.dr_bits());
+        // is_outlier matches the stored threshold
+        let th = 4.0 * fit.sigma_core();
+        assert!(fit.is_outlier(th + 1e-9));
+        assert!(!fit.is_outlier(th - 1e-9));
+    }
+
+    #[test]
+    fn sparse_relu_trace_does_not_degenerate() {
+        // >= 68% exact zeros: the quantile spread collapses to 0, so the
+        // outlier threshold must fall back to 4*std rather than branding
+        // every nonzero activation an outlier
+        let mut vals = vec![0.0f64; 900];
+        let mut rng = Pcg64::seeded(12);
+        for _ in 0..100 {
+            vals.push(rng.uniform_in(0.1, 1.0)); // post-ReLU activations
+        }
+        let n = vals.len();
+        let t = TensorTrace::from_f64("relu", vec![n], vals).unwrap();
+        let fit = EmpiricalDist::fit(&t).unwrap();
+        assert_eq!(fit.sigma_core(), 0.0);
+        assert!(fit.outlier_thresh() > 0.0);
+        // the bulk of the nonzero activations stay in the core
+        assert!(
+            fit.outlier_mass() < 0.05,
+            "outlier mass {}",
+            fit.outlier_mass()
+        );
+        // a constant-magnitude trace has no outliers at all
+        let c = TensorTrace::from_f64("const", vec![4], vec![0.7; 4]).unwrap();
+        let cf = EmpiricalDist::fit(&c).unwrap();
+        assert_eq!(cf.outlier_thresh(), 1.0);
+        assert_eq!(cf.outlier_mass(), 0.0);
+    }
+
+    #[test]
+    fn histogram_covers_all_samples() {
+        let t = trace_from(&Distribution::Uniform, 5000, 6);
+        let fit = EmpiricalDist::fit(&t).unwrap();
+        assert_eq!(fit.histogram().total, 5000);
+        assert_eq!(fit.samples(), 5000);
+    }
+}

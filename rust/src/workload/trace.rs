@@ -1,0 +1,555 @@
+//! `TensorTrace` — the self-describing empirical tensor trace format.
+//!
+//! A trace carries one tensor captured from a real (or synthetically
+//! generated) workload: a name, a shape, and an f32/f64 payload. Two
+//! encodings are accepted, distinguished by the first byte of the file:
+//!
+//! **Binary** (what `tools/export_trace.py` writes):
+//!
+//! ```text
+//! offset  size        field
+//! 0       4           magic  b"GRTT"
+//! 4       4           format version, u32 LE (currently 1)
+//! 8       4           header length H, u32 LE
+//! 12      H           JSON header: {"name": str, "dtype": "f32"|"f64",
+//!                                   "shape": [d0, d1, ...]}
+//! 12+H    N*4 or N*8  payload, little-endian, N = product(shape)
+//! ```
+//!
+//! **JSON** (first byte `{`, convenient for tests and tiny traces):
+//!
+//! ```text
+//! {"name": "t", "shape": [4], "values": [0.5, -0.25, 0.0, 1.0]}
+//! ```
+//!
+//! Parsing is strict: bad magic, unsupported versions, truncated or
+//! oversized payloads, shape/payload count mismatches, and non-finite
+//! values (NaN/Inf) are all hard errors — a trace that loads is safe to
+//! fit and simulate from.
+//!
+//! # Content hash
+//!
+//! [`TensorTrace::content_hash`] is an FNV-1a 64 digest of the dtype, the
+//! shape, and the exact payload bit patterns. The **name is deliberately
+//! excluded**: like the experiment `id` in [`crate::server::proto::spec_key`],
+//! it labels reports but cannot influence any computed number, so two
+//! differently-named copies of the same tensor share one cache entry in
+//! `grcim serve`.
+//!
+//! # Example
+//!
+//! ```
+//! use grcim::workload::TensorTrace;
+//!
+//! let t = TensorTrace::from_f32("acts", vec![2, 2], vec![0.5, -1.0, 0.25, 0.0]).unwrap();
+//! assert_eq!(t.len(), 4);
+//! // binary round trip is bit-exact and hash-stable
+//! let again = TensorTrace::from_bytes(&t.to_bytes()).unwrap();
+//! assert_eq!(again.values(), t.values());
+//! assert_eq!(again.content_hash(), t.content_hash());
+//! // the name does not participate in the hash
+//! let renamed = TensorTrace::from_f32("other", vec![2, 2], vec![0.5, -1.0, 0.25, 0.0]).unwrap();
+//! assert_eq!(renamed.content_hash(), t.content_hash());
+//! ```
+
+use crate::config::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Magic bytes opening a binary trace file.
+pub const MAGIC: &[u8; 4] = b"GRTT";
+/// Binary trace format version this build reads and writes.
+pub const VERSION: u32 = 1;
+
+/// Element type of a trace payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    /// 32-bit IEEE-754 (what the engines consume; the common capture type).
+    F32,
+    /// 64-bit IEEE-754 (lossless captures; JSON traces parse as f64).
+    F64,
+}
+
+impl Dtype {
+    /// The header string for this dtype (`"f32"` / `"f64"`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::F64 => "f64",
+        }
+    }
+
+    /// Payload bytes per element.
+    pub fn size(&self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F64 => 8,
+        }
+    }
+
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "f64" => Ok(Dtype::F64),
+            other => bail!("unsupported trace dtype '{other}' (f32|f64)"),
+        }
+    }
+}
+
+/// One empirical tensor trace: name, shape, and a validated finite
+/// payload (widened to f64 in memory; the original bit patterns feed the
+/// content hash).
+#[derive(Debug, Clone)]
+pub struct TensorTrace {
+    name: String,
+    shape: Vec<usize>,
+    dtype: Dtype,
+    values: Vec<f64>,
+    content_hash: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Hash dtype + shape + raw payload bit patterns (name excluded — see the
+/// module docs).
+fn hash_content(dtype: Dtype, shape: &[usize], payload_bits: &[u8]) -> u64 {
+    let mut h = fnv1a(FNV_OFFSET, dtype.name().as_bytes());
+    h = fnv1a(h, &(shape.len() as u64).to_le_bytes());
+    for &d in shape {
+        h = fnv1a(h, &(d as u64).to_le_bytes());
+    }
+    fnv1a(h, payload_bits)
+}
+
+fn shape_count(name: &str, shape: &[usize]) -> Result<usize> {
+    if shape.is_empty() {
+        bail!("trace '{name}': shape must have at least one dimension");
+    }
+    let mut count = 1usize;
+    for &d in shape {
+        if d == 0 {
+            bail!("trace '{name}': zero-sized dimension in shape {shape:?}");
+        }
+        count = count
+            .checked_mul(d)
+            .with_context(|| format!("trace '{name}': shape {shape:?} overflows"))?;
+    }
+    Ok(count)
+}
+
+fn ensure_finite(name: &str, values: &[f64]) -> Result<()> {
+    for (i, v) in values.iter().enumerate() {
+        if !v.is_finite() {
+            bail!("trace '{name}': non-finite value {v} at index {i}");
+        }
+    }
+    Ok(())
+}
+
+impl TensorTrace {
+    /// Build a trace from f32 data (validates shape/count and finiteness).
+    pub fn from_f32(
+        name: impl Into<String>,
+        shape: Vec<usize>,
+        data: Vec<f32>,
+    ) -> Result<TensorTrace> {
+        let name = name.into();
+        let count = shape_count(&name, &shape)?;
+        if count != data.len() {
+            bail!(
+                "trace '{name}': shape {shape:?} implies {count} values, \
+                 payload has {}",
+                data.len()
+            );
+        }
+        let values: Vec<f64> = data.iter().map(|&v| v as f64).collect();
+        ensure_finite(&name, &values)?;
+        let mut bits = Vec::with_capacity(data.len() * 4);
+        for v in &data {
+            bits.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        let content_hash = hash_content(Dtype::F32, &shape, &bits);
+        Ok(TensorTrace { name, shape, dtype: Dtype::F32, values, content_hash })
+    }
+
+    /// Build a trace from f64 data (validates shape/count and finiteness).
+    pub fn from_f64(
+        name: impl Into<String>,
+        shape: Vec<usize>,
+        values: Vec<f64>,
+    ) -> Result<TensorTrace> {
+        let name = name.into();
+        let count = shape_count(&name, &shape)?;
+        if count != values.len() {
+            bail!(
+                "trace '{name}': shape {shape:?} implies {count} values, \
+                 payload has {}",
+                values.len()
+            );
+        }
+        ensure_finite(&name, &values)?;
+        let mut bits = Vec::with_capacity(values.len() * 8);
+        for v in &values {
+            bits.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        let content_hash = hash_content(Dtype::F64, &shape, &bits);
+        Ok(TensorTrace { name, shape, dtype: Dtype::F64, values, content_hash })
+    }
+
+    /// Trace label (reports only; excluded from the content hash).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Tensor shape as captured.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Payload element type.
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    /// Payload values, widened to f64, in capture order.
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// True for a zero-element trace (unreachable for parsed traces —
+    /// empty shapes are rejected — but part of the slice-like API).
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// FNV-1a 64 digest of dtype + shape + exact payload bits. This is the
+    /// identity `grcim serve` caches workload results under.
+    pub fn content_hash(&self) -> u64 {
+        self.content_hash
+    }
+
+    /// Read a trace file, dispatching on the first byte: `{` parses the
+    /// JSON form, anything else the binary form.
+    pub fn read(path: &Path) -> Result<TensorTrace> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        if bytes.first() == Some(&b'{') {
+            let text = std::str::from_utf8(&bytes)
+                .with_context(|| format!("trace {} is not UTF-8", path.display()))?;
+            Self::from_json_str(text)
+                .with_context(|| format!("parsing JSON trace {}", path.display()))
+        } else {
+            Self::from_bytes(&bytes)
+                .with_context(|| format!("parsing binary trace {}", path.display()))
+        }
+    }
+
+    /// Parse the binary encoding (see the module docs for the layout).
+    pub fn from_bytes(bytes: &[u8]) -> Result<TensorTrace> {
+        if bytes.len() < 12 {
+            bail!("truncated trace: {} bytes, header needs 12", bytes.len());
+        }
+        if &bytes[0..4] != MAGIC {
+            bail!("bad magic {:?} (expected {MAGIC:?})", &bytes[0..4]);
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != VERSION {
+            bail!("unsupported trace version {version} (this build reads {VERSION})");
+        }
+        let hlen = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let Some(header_bytes) = bytes.get(12..12 + hlen) else {
+            bail!("truncated trace: header says {hlen} bytes, file ends early");
+        };
+        let header = std::str::from_utf8(header_bytes)
+            .context("trace header is not UTF-8")?;
+        let j = Json::parse(header).context("trace header is not valid JSON")?;
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .context("trace header missing 'name'")?
+            .to_string();
+        let dtype = Dtype::parse(
+            j.get("dtype")
+                .and_then(Json::as_str)
+                .context("trace header missing 'dtype'")?,
+        )?;
+        let shape_json = j.get("shape").context("trace header missing 'shape'")?;
+        let mut shape = Vec::new();
+        for d in shape_json.items() {
+            shape.push(
+                d.as_usize()
+                    .context("trace header shape must be an array of integers")?,
+            );
+        }
+        let count = shape_count(&name, &shape)?;
+        let payload = &bytes[12 + hlen..];
+        let need = count * dtype.size();
+        if payload.len() < need {
+            bail!(
+                "trace '{name}': truncated payload — shape {shape:?} needs \
+                 {need} bytes, got {}",
+                payload.len()
+            );
+        }
+        if payload.len() > need {
+            bail!(
+                "trace '{name}': {} trailing bytes after the payload",
+                payload.len() - need
+            );
+        }
+        match dtype {
+            Dtype::F32 => {
+                let data: Vec<f32> = payload
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Self::from_f32(name, shape, data)
+            }
+            Dtype::F64 => {
+                let data: Vec<f64> = payload
+                    .chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Self::from_f64(name, shape, data)
+            }
+        }
+    }
+
+    /// Parse the JSON encoding: `{"name", "shape"?, "values": [...]}`
+    /// (shape defaults to `[values.len()]`; values parse as f64).
+    pub fn from_json_str(text: &str) -> Result<TensorTrace> {
+        let j = Json::parse(text).context("trace is not valid JSON")?;
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("json-trace")
+            .to_string();
+        let items = j.get("values").context("JSON trace needs a 'values' array")?;
+        let mut values = Vec::new();
+        for v in items.items() {
+            values.push(v.as_f64().context("trace values must be numbers")?);
+        }
+        if values.is_empty() {
+            bail!("trace '{name}': 'values' array is empty");
+        }
+        let shape = match j.get("shape") {
+            None => vec![values.len()],
+            Some(s) => {
+                let mut shape = Vec::new();
+                for d in s.items() {
+                    shape.push(
+                        d.as_usize().context("trace shape must be integers")?,
+                    );
+                }
+                shape
+            }
+        };
+        Self::from_f64(name, shape, values)
+    }
+
+    /// Serialize into the binary encoding (round-trips bit-exactly through
+    /// [`TensorTrace::from_bytes`]).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let shape: Vec<Json> = self
+            .shape
+            .iter()
+            .map(|&d| Json::Num(d as f64))
+            .collect();
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("dtype".to_string(), Json::Str(self.dtype.name().to_string()));
+        m.insert("shape".to_string(), Json::Arr(shape));
+        let header = Json::Obj(m).to_string();
+        let mut out = Vec::with_capacity(12 + header.len() + self.values.len() * 8);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        for &v in &self.values {
+            match self.dtype {
+                Dtype::F32 => {
+                    out.extend_from_slice(&(v as f32).to_bits().to_le_bytes())
+                }
+                Dtype::F64 => out.extend_from_slice(&v.to_bits().to_le_bytes()),
+            }
+        }
+        out
+    }
+
+    /// Write the binary encoding to `path`.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("writing trace {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> TensorTrace {
+        TensorTrace::from_f32(
+            "t",
+            vec![2, 3],
+            vec![0.5, -0.25, 0.0, 1.0, -1.0, 0.125],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn binary_round_trip_is_bit_exact() {
+        let t = small();
+        let bytes = t.to_bytes();
+        let again = TensorTrace::from_bytes(&bytes).unwrap();
+        assert_eq!(again.name(), "t");
+        assert_eq!(again.shape(), &[2, 3]);
+        assert_eq!(again.dtype(), Dtype::F32);
+        assert_eq!(again.len(), 6);
+        for (a, b) in again.values().iter().zip(t.values()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(again.content_hash(), t.content_hash());
+    }
+
+    #[test]
+    fn f64_round_trip_and_file_io() {
+        let t = TensorTrace::from_f64("w", vec![4], vec![0.1, 0.2, -0.3, 0.4])
+            .unwrap();
+        let dir = std::env::temp_dir().join("grcim_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.grtt");
+        t.write(&path).unwrap();
+        let again = TensorTrace::read(&path).unwrap();
+        assert_eq!(again.dtype(), Dtype::F64);
+        assert_eq!(again.values(), t.values());
+        assert_eq!(again.content_hash(), t.content_hash());
+    }
+
+    #[test]
+    fn json_form_parses_and_defaults_shape() {
+        let t = TensorTrace::from_json_str(
+            r#"{"name":"j","values":[0.5,-0.5,0.25]}"#,
+        )
+        .unwrap();
+        assert_eq!(t.shape(), &[3]);
+        assert_eq!(t.values(), &[0.5, -0.5, 0.25]);
+        // explicit shape must match the value count
+        assert!(TensorTrace::from_json_str(
+            r#"{"name":"j","shape":[2],"values":[1,2,3]}"#
+        )
+        .is_err());
+        // file dispatch: a JSON file read through TensorTrace::read
+        let dir = std::env::temp_dir().join("grcim_trace_test_json");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.json");
+        std::fs::write(&path, r#"{"name":"j","values":[1, -1]}"#).unwrap();
+        assert_eq!(TensorTrace::read(&path).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        let mut bytes = small().to_bytes();
+        bytes[0] = b'X';
+        let err = TensorTrace::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+
+        let mut bytes = small().to_bytes();
+        bytes[4] = 99;
+        let err = TensorTrace::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("unsupported trace version"), "{err}");
+    }
+
+    #[test]
+    fn rejects_truncated_payload_and_trailing_bytes() {
+        let bytes = small().to_bytes();
+        let err = TensorTrace::from_bytes(&bytes[..bytes.len() - 3])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("truncated payload"), "{err}");
+
+        let mut extra = bytes.clone();
+        extra.push(0);
+        let err = TensorTrace::from_bytes(&extra).unwrap_err().to_string();
+        assert!(err.contains("trailing bytes"), "{err}");
+
+        // header-level truncation
+        let err = TensorTrace::from_bytes(&bytes[..8]).unwrap_err().to_string();
+        assert!(err.contains("truncated trace"), "{err}");
+    }
+
+    #[test]
+    fn rejects_shape_payload_mismatch() {
+        let err = TensorTrace::from_f32("t", vec![4], vec![1.0, 2.0])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("implies 4 values"), "{err}");
+        assert!(TensorTrace::from_f64("t", vec![0], vec![]).is_err());
+        assert!(TensorTrace::from_f64("t", vec![], vec![]).is_err());
+    }
+
+    #[test]
+    fn rejects_non_finite_values() {
+        let err = TensorTrace::from_f32("t", vec![2], vec![1.0, f32::NAN])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("non-finite"), "{err}");
+        assert!(err.contains("index 1"), "{err}");
+        assert!(
+            TensorTrace::from_f64("t", vec![1], vec![f64::INFINITY]).is_err()
+        );
+        assert!(TensorTrace::from_json_str(
+            r#"{"name":"j","values":[1e999]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn content_hash_covers_payload_shape_dtype_but_not_name() {
+        let base = small();
+        let renamed = TensorTrace::from_f32(
+            "other-name",
+            vec![2, 3],
+            vec![0.5, -0.25, 0.0, 1.0, -1.0, 0.125],
+        )
+        .unwrap();
+        assert_eq!(base.content_hash(), renamed.content_hash());
+
+        let reshaped = TensorTrace::from_f32(
+            "t",
+            vec![6],
+            vec![0.5, -0.25, 0.0, 1.0, -1.0, 0.125],
+        )
+        .unwrap();
+        assert_ne!(base.content_hash(), reshaped.content_hash());
+
+        let perturbed = TensorTrace::from_f32(
+            "t",
+            vec![2, 3],
+            vec![0.5, -0.25, 0.0, 1.0, -1.0, 0.1250001],
+        )
+        .unwrap();
+        assert_ne!(base.content_hash(), perturbed.content_hash());
+
+        let widened = TensorTrace::from_f64(
+            "t",
+            vec![2, 3],
+            vec![0.5, -0.25, 0.0, 1.0, -1.0, 0.125],
+        )
+        .unwrap();
+        assert_ne!(base.content_hash(), widened.content_hash());
+    }
+}

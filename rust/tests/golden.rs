@@ -314,6 +314,86 @@ fn golden_campaign_enob_solutions() {
 }
 
 // ---------------------------------------------------------------------
+// Workload — empirical-trace fit, SQNR sweep, and trace-driven ENOB
+// (rng -> f32 trace -> EmpiricalDist -> inverse-CDF sampling -> campaign).
+// ---------------------------------------------------------------------
+
+const WORKLOAD_TRACE_SEED: u64 = 0xE3;
+const WORKLOAD_TRACE_N: usize = 4096;
+const WORKLOAD_SQNR_SAMPLES: usize = 8192;
+const WORKLOAD_SQNR_SEED: u64 = 0x17E;
+
+#[test]
+fn golden_workload_empirical() {
+    use grcim::coordinator::{run_experiment, ExperimentSpec};
+    use grcim::distributions::Distribution;
+    use grcim::formats::FpFormat;
+    use grcim::mac::FormatPair;
+    use grcim::rng::Pcg64;
+    use grcim::runtime::RustEngine;
+    use grcim::spec::{required_enob, Arch, SpecConfig};
+    use grcim::workload::{sqnr_sweep, EmpiricalDist, TensorTrace};
+    use std::sync::Arc;
+
+    let mut g = Golden::new("workload_empirical", 1e-6);
+
+    // the synthetic-LLM trace (same seeded draws as the Python twin)
+    let mut rng = Pcg64::seeded(WORKLOAD_TRACE_SEED);
+    let mut raw = vec![0.0f32; WORKLOAD_TRACE_N];
+    Distribution::gauss_outliers().fill_f32(&mut rng, &mut raw);
+    let trace =
+        TensorTrace::from_f32("golden-llm", vec![WORKLOAD_TRACE_N], raw)
+            .unwrap();
+    let fit = Arc::new(EmpiricalDist::fit(&trace).unwrap());
+
+    g.push("fit_scale", fit.scale());
+    g.push("fit_dr_bits", fit.dr_bits());
+    g.push("fit_sigma_core", fit.sigma_core());
+    g.push("fit_outlier_mass", fit.outlier_mass());
+    g.push("fit_mean", fit.mean());
+    g.push("fit_std", fit.std());
+    for j in [0usize, 128, 256, 384, 512] {
+        g.push(
+            format!("fit_knot{j}"),
+            fit.quantile(j as f64 / 512.0),
+        );
+    }
+
+    // Fig. 9-style SQNR sweep over the fitted distribution
+    let dist = Distribution::Empirical(Arc::clone(&fit));
+    let sweep =
+        sqnr_sweep(&dist, WORKLOAD_SQNR_SAMPLES, WORKLOAD_SQNR_SEED);
+    for (n_e, row) in sweep.iter().enumerate() {
+        g.push(format!("sqnr_ne{n_e}_all"), row[0]);
+        g.push(format!("sqnr_ne{n_e}_core"), row[1]);
+    }
+
+    // trace-driven campaign at the LLM stress format
+    let spec = ExperimentSpec {
+        id: "trace-ne4".into(),
+        fmts: FormatPair::new(FpFormat::fp(4, 2), FpFormat::fp4_e2m1()),
+        dist_x: dist,
+        dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+        nr: 32,
+        samples: CAMPAIGN_SAMPLES,
+    };
+    let agg = run_experiment(&RustEngine, &spec, CAMPAIGN_SEED).unwrap();
+    assert_eq!(agg.samples() as usize, CAMPAIGN_SAMPLES);
+    let cfg = SpecConfig::default();
+    let conv = required_enob(&agg, Arch::Conventional, cfg).enob;
+    let unit = required_enob(&agg, Arch::GrUnit, cfg).enob;
+    g.push("enob_conv", conv);
+    g.push("enob_unit", unit);
+    g.push("enob_row", required_enob(&agg, Arch::GrRow, cfg).enob);
+    g.push("delta_enob", conv - unit);
+    g.push("mean_n_eff", agg.mean_n_eff());
+    g.push("sqnr_db", agg.sqnr_db());
+    g.push("nf_mean", agg.nf.mean());
+    g.push("g_unit_ms", agg.g_unit.mean_sq());
+    g.check();
+}
+
+// ---------------------------------------------------------------------
 // Determinism + harness self-tests.
 // ---------------------------------------------------------------------
 

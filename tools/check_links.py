@@ -4,11 +4,13 @@
 Usage: python3 tools/check_links.py FILE.md [FILE.md ...]
 
 For every markdown link or image `[text](target)` whose target is not an
-external URL (http/https/mailto) or a pure in-page anchor, verify that
-the referenced file or directory exists relative to the markdown file.
-In-repo anchors (`other.md#section`) are checked for file existence and,
-for markdown targets, for the presence of a matching GitHub-style
-heading slug. Exits non-zero listing every broken link.
+external URL (http/https/mailto), verify that the referenced file or
+directory exists relative to the markdown file. Anchor fragments are
+validated against GitHub-style heading slugs — both cross-document
+(`other.md#section`) and intra-document (`#section`) forms — including
+the `-1`, `-2`, ... suffixes GitHub appends to duplicate headings, with
+link markup inside heading text stripped the way GitHub slugifies it.
+Exits non-zero listing every broken link.
 """
 
 import os
@@ -17,11 +19,24 @@ import sys
 
 LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
 CODE_FENCE_RE = re.compile(r"^\s*(```|~~~)")
+HEADING_LINK_RE = re.compile(r"!?\[([^\]]*)\]\([^)]*\)")
+
+
+def slugify(text):
+    """One heading's GitHub slug (before duplicate numbering)."""
+    # links contribute their text, not their target; drop inline
+    # code/emphasis markers, then slugify
+    text = HEADING_LINK_RE.sub(r"\1", text)
+    text = re.sub(r"[`*_]", "", text)
+    slug = re.sub(r"[^\w\- ]", "", text.lower())
+    return slug.replace(" ", "-")
 
 
 def heading_slugs(md_path):
-    """GitHub-style anchor slugs of every heading in a markdown file."""
+    """GitHub-style anchor slugs of every heading in a markdown file,
+    with `-N` suffixes for repeated headings (GitHub's disambiguation)."""
     slugs = set()
+    seen = {}
     in_fence = False
     with open(md_path, encoding="utf-8") as fh:
         for line in fh:
@@ -30,11 +45,10 @@ def heading_slugs(md_path):
                 continue
             if in_fence or not line.startswith("#"):
                 continue
-            text = line.lstrip("#").strip()
-            # drop inline code/emphasis markers, then slugify
-            text = re.sub(r"[`*_]", "", text)
-            slug = re.sub(r"[^\w\- ]", "", text.lower())
-            slugs.add(slug.replace(" ", "-"))
+            slug = slugify(line.lstrip("#").strip())
+            n = seen.get(slug, 0)
+            seen[slug] = n + 1
+            slugs.add(slug if n == 0 else f"{slug}-{n}")
     return slugs
 
 

@@ -1,0 +1,174 @@
+#!/usr/bin/env python3
+"""Emit TensorTrace files (the `grcim workload` input format).
+
+Two sources:
+
+  * synthetic models of LLM tensor statistics (no dependencies):
+      - `llm-acts`:    Gaussian core + probability-eps outliers of
+                       magnitude ~k*(3 sigma) — the paper's Sec. IV-A
+                       model of emergent outlier features (LLM.int8()).
+      - `llm-weights`: plain Gaussian, the standard first-order weight
+                       model.
+  * a real checkpoint tensor, read from a `.npy` file (NumPy format v1/v2,
+    little-endian f16/f32/f64, C order) with a pure-stdlib parser — no
+    numpy required. Export one from any framework first, e.g.:
+      python -c "import numpy, torch; t = torch.load('ckpt.pt')['w']; \\
+                 numpy.save('w.npy', t.float().numpy())"
+
+Trace format (matches rust/src/workload/trace.rs):
+
+  magic b"GRTT" | u32 version=1 | u32 header_len | JSON header
+  {"name","dtype":"f32"|"f64","shape":[...]} | little-endian payload
+
+Examples:
+
+  python3 tools/export_trace.py llm-acts   --n 65536 --out acts.grtt
+  python3 tools/export_trace.py llm-weights --n 16384 --out w.grtt
+  python3 tools/export_trace.py from-npy   --npy layer0.npy --out l0.grtt
+
+Then:  grcim workload --trace acts.grtt
+"""
+
+import argparse
+import ast
+import json
+import math
+import random
+import struct
+import sys
+
+
+def write_trace(path, name, shape, values, dtype="f32"):
+    """Write one binary TensorTrace file."""
+    count = 1
+    for d in shape:
+        count *= d
+    assert count == len(values), f"shape {shape} vs {len(values)} values"
+    for i, v in enumerate(values):
+        if not math.isfinite(v):
+            raise SystemExit(f"non-finite value {v} at index {i}")
+    header = json.dumps(
+        {"name": name, "dtype": dtype, "shape": list(shape)},
+        separators=(",", ":"),
+        sort_keys=True,
+    ).encode("utf-8")
+    fmt = {"f32": "<f", "f64": "<d"}[dtype]
+    with open(path, "wb") as fh:
+        fh.write(b"GRTT")
+        fh.write(struct.pack("<I", 1))
+        fh.write(struct.pack("<I", len(header)))
+        fh.write(header)
+        for v in values:
+            fh.write(struct.pack(fmt, v))
+    print(f"wrote {path}: '{name}' shape={list(shape)} dtype={dtype} "
+          f"({len(values)} values)")
+
+
+def gen_llm_acts(n, seed, eps=0.01, k=50.0):
+    """Gaussian core (sigma = 1/(3k)) + eps outliers in [0.5, 1]*sign —
+    the paper's Gaussian+outliers activation model, in raw units scaled
+    to a realistic activation magnitude."""
+    rng = random.Random(seed)
+    amax = 12.0  # typical pre-norm activation max magnitude
+    out = []
+    sigma = 1.0 / (3.0 * k)
+    for _ in range(n):
+        if rng.random() < eps:
+            v = rng.choice([-1.0, 1.0]) * rng.uniform(0.5, 1.0)
+        else:
+            v = max(-1.0, min(1.0, rng.gauss(0.0, sigma)))
+        out.append(v * amax)
+    return out
+
+
+def gen_llm_weights(n, seed, sigma=0.02):
+    """Plain Gaussian weight model (typical transformer init scale)."""
+    rng = random.Random(seed)
+    return [rng.gauss(0.0, sigma) for _ in range(n)]
+
+
+def read_npy(path):
+    """Parse a .npy file (format v1/v2) without numpy. Returns
+    (shape, values, dtype) for little-endian f16/f32/f64 C-order arrays,
+    where dtype is the matching trace dtype ("f32" for f16/f32 sources,
+    "f64" for f64 — no silent narrowing)."""
+    with open(path, "rb") as fh:
+        magic = fh.read(6)
+        if magic != b"\x93NUMPY":
+            raise SystemExit(f"{path}: not a .npy file")
+        major, _minor = struct.unpack("<BB", fh.read(2))
+        if major == 1:
+            (hlen,) = struct.unpack("<H", fh.read(2))
+        elif major in (2, 3):
+            (hlen,) = struct.unpack("<I", fh.read(4))
+        else:
+            raise SystemExit(f"{path}: unsupported .npy version {major}")
+        header = ast.literal_eval(fh.read(hlen).decode("latin1"))
+        descr = header["descr"]
+        if header.get("fortran_order"):
+            raise SystemExit(f"{path}: Fortran-order arrays not supported")
+        widths = {
+            "<f2": ("<e", 2, "f32"),
+            "<f4": ("<f", 4, "f32"),
+            "<f8": ("<d", 8, "f64"),
+        }
+        if descr not in widths:
+            raise SystemExit(
+                f"{path}: dtype {descr} not supported (need <f2/<f4/<f8)")
+        fmt, size, trace_dtype = widths[descr]
+        shape = list(header["shape"]) or [1]
+        count = 1
+        for d in shape:
+            count *= d
+        raw = fh.read(count * size)
+        if len(raw) != count * size:
+            raise SystemExit(f"{path}: truncated payload")
+        values = [v[0] for v in struct.iter_unpack(fmt, raw)]
+        return shape, values, trace_dtype
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="mode", required=True)
+
+    acts = sub.add_parser("llm-acts", help="synthetic LLM activations "
+                          "(Gaussian core + emergent outliers)")
+    acts.add_argument("--n", type=int, default=65536)
+    acts.add_argument("--seed", type=int, default=1)
+    acts.add_argument("--eps", type=float, default=0.01,
+                      help="outlier probability (paper: 0.01)")
+    acts.add_argument("--k", type=float, default=50.0,
+                      help="outlier relative magnitude (paper: 50)")
+    acts.add_argument("--name", default="llm-acts")
+    acts.add_argument("--out", required=True)
+
+    w = sub.add_parser("llm-weights", help="synthetic Gaussian weights")
+    w.add_argument("--n", type=int, default=16384)
+    w.add_argument("--seed", type=int, default=2)
+    w.add_argument("--sigma", type=float, default=0.02)
+    w.add_argument("--name", default="llm-weights")
+    w.add_argument("--out", required=True)
+
+    npy = sub.add_parser("from-npy", help="convert a real checkpoint "
+                         "tensor exported as .npy")
+    npy.add_argument("--npy", required=True)
+    npy.add_argument("--name", default=None,
+                     help="trace name (default: the .npy filename)")
+    npy.add_argument("--out", required=True)
+
+    args = ap.parse_args()
+    if args.mode == "llm-acts":
+        vals = gen_llm_acts(args.n, args.seed, args.eps, args.k)
+        write_trace(args.out, args.name, [args.n], vals)
+    elif args.mode == "llm-weights":
+        vals = gen_llm_weights(args.n, args.seed, args.sigma)
+        write_trace(args.out, args.name, [args.n], vals)
+    elif args.mode == "from-npy":
+        shape, vals, dtype = read_npy(args.npy)
+        name = args.name or args.npy.rsplit("/", 1)[-1]
+        write_trace(args.out, name, shape, vals, dtype=dtype)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -263,6 +263,71 @@ def fill_f32(dist, rng, n):
     return [f32(dist.sample(rng)) for _ in range(n)]
 
 
+# ------------------------------------------------------------ workload --
+
+QUANTILE_KNOTS = 513
+
+
+def interp_sorted(s, pos):
+    """Twin of workload::fit::interp_sorted — identical arithmetic."""
+    i = int(math.floor(pos))
+    if i + 1 >= len(s):
+        return s[-1]
+    frac = pos - float(i)
+    return s[i] + (s[i + 1] - s[i]) * frac
+
+
+class EmpDist:
+    """Twin of workload::EmpiricalDist (fit + inverse-CDF sampling).
+
+    Field-for-field mirror of EmpiricalDist::fit: same normalization,
+    same accumulation order, same knot/quantile interpolation formulas.
+    """
+
+    def __init__(self, raw):
+        assert len(raw) >= 2
+        self.scale = max(abs(v) for v in raw)
+        assert self.scale > 0.0
+        norm = []
+        total = 0.0
+        total_sq = 0.0
+        min_nonzero = float("inf")
+        for v in raw:
+            x = v / self.scale
+            total += x
+            total_sq += x * x
+            if x != 0.0:
+                min_nonzero = min(min_nonzero, abs(x))
+            norm.append(x)
+        n = len(norm)
+        self.mean = total / float(n)
+        mean_sq = total_sq / float(n)
+        self.std = math.sqrt(max(mean_sq - self.mean * self.mean, 0.0))
+        s = sorted(norm)
+        self.knots = [
+            interp_sorted(s, (j * (n - 1)) / (QUANTILE_KNOTS - 1))
+            for j in range(QUANTILE_KNOTS)
+        ]
+        q = lambda p: interp_sorted(s, p * (n - 1))
+        self.sigma_core = (q(0.84) - q(0.16)) / 2.0
+        # mirror of workload::fit: sparse traces fall back to 4*std, and
+        # constant-magnitude ones to threshold 1.0 (no outliers)
+        spread = self.sigma_core if self.sigma_core > 0.0 else self.std
+        self.thresh = 4.0 * spread if spread > 0.0 else 1.0
+        self.outlier_mass = (
+            sum(1 for x in s if abs(x) > self.thresh) / float(n))
+        self.min_nonzero = min_nonzero
+        self.dr_bits = -math.log2(min_nonzero)
+
+    def sample(self, rng):
+        u = rng.uniform()
+        pos = u * float(QUANTILE_KNOTS - 1)
+        return interp_sorted(self.knots, pos)
+
+    def is_outlier(self, x):
+        return abs(x) > self.thresh
+
+
 # ----------------------------------------------------------------- mac --
 
 
@@ -714,8 +779,90 @@ def gen_campaign(outdir):
     write_golden(os.path.join(outdir, "campaign_enob.json"), 1e-6, vals)
 
 
+WORKLOAD_TRACE_SEED = 0xE3
+WORKLOAD_TRACE_N = 4096
+WORKLOAD_SQNR_SAMPLES = 8192
+WORKLOAD_SQNR_SEED = 0x17E
+
+
+def gen_workload(outdir):
+    """Twin of tests/golden.rs::golden_workload_empirical: generate the
+    same synthetic-LLM trace (seeded f32 gauss+outliers draws), fit the
+    EmpiricalDist twin, and pin the fit summary, the Fig. 9-style SQNR
+    sweep, and the trace-driven campaign ENOB solutions."""
+    rng = Pcg64(WORKLOAD_TRACE_SEED)
+    raw = fill_f32(Dist("gauss_outliers"), rng, WORKLOAD_TRACE_N)
+    emp = EmpDist(raw)
+
+    vals = [
+        ("fit_scale", emp.scale),
+        ("fit_dr_bits", emp.dr_bits),
+        ("fit_sigma_core", emp.sigma_core),
+        ("fit_outlier_mass", emp.outlier_mass),
+        ("fit_mean", emp.mean),
+        ("fit_std", emp.std),
+    ]
+    for j in (0, 128, 256, 384, 512):
+        vals.append((f"fit_knot{j}", emp.knots[j]))
+
+    for n_e in range(0, 6):
+        fmt = fig9_fmt_for(n_e)
+        seed = WORKLOAD_SQNR_SEED + n_e
+        all_db = fig9_sqnr_db(fmt, emp, WORKLOAD_SQNR_SAMPLES, seed,
+                              False, False)
+        core_db = fig9_sqnr_db(fmt, emp, WORKLOAD_SQNR_SAMPLES, seed,
+                               True, False)
+        assert math.isfinite(all_db) and math.isfinite(core_db), n_e
+        vals.append((f"sqnr_ne{n_e}_all", all_db))
+        vals.append((f"sqnr_ne{n_e}_core", core_db))
+
+    fp4 = FpFormat.fp4_e2m1()
+    spec = {
+        "id": "trace-ne4",
+        "fx": FpFormat.fp(4, 2), "fw": fp4,
+        "dist_x": emp, "dist_w": Dist("maxent", fp4),
+        "nr": 32, "samples": 2048,
+    }
+    agg = run_experiment(spec, 42)
+    assert agg.sig.n == spec["samples"]
+    conv = required_enob(agg, "conv")
+    unit = required_enob(agg, "unit")
+    row = required_enob(agg, "row")
+    vals += [
+        ("enob_conv", conv),
+        ("enob_unit", unit),
+        ("enob_row", row),
+        ("delta_enob", conv - unit),
+        ("mean_n_eff", agg.mean_n_eff()),
+        ("sqnr_db", agg.sqnr_db()),
+        ("nf_mean", agg.nf.mean()),
+        ("g_unit_ms", agg.g_unit.mean_sq()),
+    ]
+    print(f"  workload: enob conv={conv:.4f} unit={unit:.4f} "
+          f"outlier_mass={emp.outlier_mass:.4f} dr={emp.dr_bits:.2f}b")
+    write_golden(os.path.join(outdir, "workload_empirical.json"), 1e-6, vals)
+
+
+def workload_self_check():
+    """Pin the EmpDist twin against the Rust unit-test vectors
+    (workload::fit doctest: values [-2,-1,0,1,2])."""
+    emp = EmpDist([-2.0, -1.0, 0.0, 1.0, 2.0])
+    assert emp.scale == 2.0
+    assert emp.knots[0] == -1.0 and emp.knots[-1] == 1.0
+    assert abs(interp_sorted(emp.knots, 256.0)) < 1e-12  # median 0
+    # one rng draw per sample (the contract fill_f32 relies on)
+    a, b = Pcg64(7), Pcg64(7)
+    emp.sample(a)
+    b.next_u64()
+    assert a.next_u64() == b.next_u64()
+    # dr example from workload::fit tests: 8 binades
+    emp2 = EmpDist([1.0, 0.5, 0.25, 2.0 ** -8, -1.0, 0.0])
+    assert abs(emp2.dr_bits - 8.0) < 1e-12
+
+
 def main():
     self_check()
+    workload_self_check()
     outdir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           "..", "rust", "tests", "golden")
     os.makedirs(outdir, exist_ok=True)
@@ -723,6 +870,7 @@ def main():
     gen_fig8(outdir)
     gen_fig9(outdir)
     gen_campaign(outdir)
+    gen_workload(outdir)
 
 
 if __name__ == "__main__":

@@ -99,7 +99,7 @@ fn main() -> anyhow::Result<()> {
         ("GR-CIM (unit norm)", Arch::GrUnit, CimArch::GrUnit, enob_gr),
     ] {
         let t = Timer::new(label);
-        let cim = CimInference { fmts, arch, enob, nr };
+        let cim = CimInference { fmts, arch, enob, nr, nc: nr };
         let acc = cim_accuracy(
             &mlp,
             engine.as_ref(),

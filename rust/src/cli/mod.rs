@@ -34,11 +34,18 @@ pub mod flags {
     pub const SERVE: &[&str] =
         &["addr", "cache", "engine", "artifacts", "workers", "seed"];
     /// `grcim query` flags.
-    pub const QUERY: &[&str] =
-        &["addr", "json", "dr", "sqnr", "samples", "seed", "id", "trace"];
+    pub const QUERY: &[&str] = &[
+        "addr", "json", "dr", "sqnr", "samples", "seed", "id", "trace", "shape", "tokens",
+        "arch", "nr", "nc", "ne", "nm", "dist",
+    ];
     /// `grcim workload` flags.
     pub const WORKLOAD: &[&str] =
         &["trace", "out", "samples", "engine", "artifacts", "workers", "seed"];
+    /// `grcim layer` flags.
+    pub const LAYER: &[&str] = &[
+        "shape", "tokens", "arch", "nr", "nc", "ne", "nm", "dist", "out", "engine",
+        "artifacts", "workers", "seed",
+    ];
 }
 
 /// Expand a `--fig` value: `"all"` maps to the full list, otherwise a
@@ -240,9 +247,13 @@ mod tests {
 
     #[test]
     fn campaign_flags_are_a_subset_everywhere_they_apply() {
-        for known in
-            [flags::FIGURES, flags::ENERGY, flags::SERVE, flags::WORKLOAD]
-        {
+        for known in [
+            flags::FIGURES,
+            flags::ENERGY,
+            flags::SERVE,
+            flags::WORKLOAD,
+            flags::LAYER,
+        ] {
             for f in flags::CAMPAIGN {
                 assert!(known.contains(f), "{f} missing from {known:?}");
             }
@@ -252,6 +263,14 @@ mod tests {
         assert!(a.ensure_known(flags::WORKLOAD).is_ok());
         let a = parse(&["query", "workload", "--trace", "acts.grtt"]);
         assert!(a.ensure_known(flags::QUERY).is_ok());
+        // layer accepts its shape/array flags; query forwards them
+        let a = parse(&["layer", "--shape", "mlp-up:4096", "--arch", "gr", "--nc", "64"]);
+        assert!(a.ensure_known(flags::LAYER).is_ok());
+        let a = parse(&["query", "layer", "--shape", "qkv:1024", "--tokens", "8"]);
+        assert!(a.ensure_known(flags::QUERY).is_ok());
+        // …but not each other's unrelated flags
+        let a = parse(&["layer", "--addr", "127.0.0.1:0"]);
+        assert!(a.ensure_known(flags::LAYER).is_err());
     }
 
     #[test]

@@ -7,14 +7,35 @@
 use crate::config::Config;
 use crate::coordinator::{CampaignConfig, ExperimentSpec};
 use crate::distributions::Distribution;
+use crate::energy::{CimArch, TechParams};
 use crate::formats::FpFormat;
 use crate::mac::FormatPair;
 use crate::runtime::EngineKind;
+use crate::tile::{parse_shape, AdcPolicy, LayerSpec, TileConfig};
 use anyhow::{bail, Context, Result};
 
 /// Default Monte-Carlo samples per experiment when the config has no
 /// top-level `samples` key.
 pub const DEFAULT_SAMPLES: usize = 16_384;
+
+/// Largest accepted input exponent / mantissa bit width. Far beyond
+/// anything physical (the paper sweeps N_E ≤ 5), and required for
+/// soundness: `FpFormat::fp` shifts `1 << n_e`, so an unchecked wire
+/// value like `n_e = 64` would panic inside a worker thread instead of
+/// failing validation.
+pub const MAX_FORMAT_BITS: f64 = 32.0;
+
+fn check_format_bits(what: &str, n_e: f64, n_m: f64) -> Result<()> {
+    // NaN fails every comparison, so the range checks alone would wave
+    // it through into `as u32` / `FpFormat::fp`'s assert
+    if !n_e.is_finite() || !n_m.is_finite() || n_e < 1.0 || n_m < 0.0 {
+        bail!("{what}: n_e must be a finite number >= 1 and n_m >= 0");
+    }
+    if n_e > MAX_FORMAT_BITS || n_m > MAX_FORMAT_BITS {
+        bail!("{what}: n_e and n_m must be <= {MAX_FORMAT_BITS}");
+    }
+    Ok(())
+}
 
 /// Input-distribution names accepted by sweep configs and requests.
 /// `empirical:<trace-file>` additionally resolves a fitted
@@ -58,9 +79,7 @@ pub fn experiment_spec(
     distribution: &str,
     samples: usize,
 ) -> Result<ExperimentSpec> {
-    if n_e < 1.0 || n_m < 0.0 {
-        bail!("experiment '{name}': n_e must be >= 1 and n_m >= 0");
-    }
+    check_format_bits(&format!("experiment '{name}'"), n_e, n_m)?;
     if nr == 0 {
         bail!("experiment '{name}': nr must be positive");
     }
@@ -73,6 +92,75 @@ pub fn experiment_spec(
         nr,
         samples,
     })
+}
+
+/// The raw fields of a layer evaluation — `grcim layer` flags or the
+/// wire `layer` request — before shapes, formats, and distributions
+/// resolve. One resolver serves the CLI and the service, so they cannot
+/// drift (the `experiment_spec` pattern, for layers).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerParams {
+    /// Shape string (see [`crate::tile::parse_shape`]), e.g. `mlp-up:4096`.
+    pub shape: String,
+    /// Batch rows M of the named shapes (ignored by `gemm:` shapes).
+    pub tokens: usize,
+    /// Architecture name (see [`CimArch::parse`]); `gr` = unit granularity.
+    pub arch: String,
+    /// Rows per column (accumulation depth N_R).
+    pub nr: usize,
+    /// Columns per tile N_C.
+    pub nc: usize,
+    /// Input exponent bits.
+    pub n_e: f64,
+    /// Input mantissa bits.
+    pub n_m: f64,
+    /// Activation distribution name (see [`dist_by_name`]), including
+    /// `empirical:<trace-file>`.
+    pub distribution: String,
+}
+
+impl Default for LayerParams {
+    fn default() -> Self {
+        LayerParams {
+            shape: String::new(),
+            tokens: 4,
+            arch: "gr".to_string(),
+            nr: 32,
+            nc: 32,
+            n_e: 4.0,
+            n_m: 2.0,
+            distribution: "gauss_outliers".to_string(),
+        }
+    }
+}
+
+impl LayerParams {
+    /// Resolve into a runnable [`LayerSpec`]: input format FP(n_e, n_m)
+    /// against max-entropy FP4 weights (the paper's sweep convention),
+    /// per-tile spec-solved ADCs, Table III technology parameters.
+    pub fn resolve(&self) -> Result<LayerSpec> {
+        check_format_bits(&format!("layer '{}'", self.shape), self.n_e, self.n_m)?;
+        if self.nr == 0 || self.nc == 0 {
+            bail!("layer '{}': nr and nc must be positive", self.shape);
+        }
+        let shape = parse_shape(&self.shape, self.tokens)?;
+        let fmt = FpFormat::fp(self.n_e as u32, self.n_m as u32);
+        let w_fmt = FpFormat::fp4_e2m1();
+        Ok(LayerSpec {
+            name: self.shape.clone(),
+            shape,
+            cfg: TileConfig {
+                nr: self.nr,
+                nc: self.nc,
+                fmts: FormatPair::new(fmt, w_fmt),
+                arch: CimArch::parse(&self.arch)?,
+                adc: AdcPolicy::PerTileSpec,
+                tech: TechParams::default(),
+            },
+            dist_x: dist_by_name(&self.distribution, fmt)?,
+            dist_w: Distribution::max_entropy(w_fmt),
+        })
+    }
 }
 
 /// A fully resolved sweep: campaign settings plus the experiment grid.
@@ -213,6 +301,42 @@ distribution = "gauss_outliers"
                 dist_by_name(name, FpFormat::fp6_e3m2()).is_ok(),
                 "{name}"
             );
+        }
+    }
+
+    #[test]
+    fn layer_params_resolve_with_defaults() {
+        let p = LayerParams { shape: "mlp-up:64".to_string(), ..Default::default() };
+        let spec = p.resolve().unwrap();
+        assert_eq!(spec.shape.m, 4);
+        assert_eq!(spec.shape.k, 64);
+        assert_eq!(spec.shape.n, 256);
+        assert_eq!(spec.cfg.arch, CimArch::GrUnit);
+        assert_eq!(spec.cfg.nr, 32);
+        assert_eq!(spec.cfg.fmts.x, FpFormat::fp(4, 2));
+        assert_eq!(spec.cfg.adc, AdcPolicy::PerTileSpec);
+        assert_eq!(spec.name, "mlp-up:64");
+    }
+
+    #[test]
+    fn layer_params_reject_invalid_fields() {
+        let ok = LayerParams { shape: "gemm:2x8x8".to_string(), ..Default::default() };
+        assert!(ok.resolve().is_ok());
+        for bad in [
+            LayerParams { shape: "warp:64".to_string(), ..Default::default() },
+            LayerParams { arch: "quantum".to_string(), ..ok.clone() },
+            LayerParams { nr: 0, ..ok.clone() },
+            LayerParams { nc: 0, ..ok.clone() },
+            LayerParams { n_e: 0.0, ..ok.clone() },
+            // beyond the shift width FpFormat::fp could construct
+            LayerParams { n_e: 64.0, ..ok.clone() },
+            LayerParams { n_m: 64.0, ..ok.clone() },
+            // NaN must be a clean validation error, not a worker panic
+            LayerParams { n_e: f64::NAN, ..ok.clone() },
+            LayerParams { n_m: f64::NAN, ..ok.clone() },
+            LayerParams { distribution: "cauchy".to_string(), ..ok.clone() },
+        ] {
+            assert!(bad.resolve().is_err(), "{bad:?}");
         }
     }
 

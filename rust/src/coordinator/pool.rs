@@ -14,7 +14,9 @@ use anyhow::{Context, Result};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
-/// A schedulable unit: one Monte-Carlo batch of one experiment.
+/// A schedulable unit: one Monte-Carlo batch of one experiment. (The
+/// pool itself is generic — the tile mapper schedules plain tile indices
+/// through the same [`run_jobs`].)
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Job {
     /// Index into the campaign's spec grid.
@@ -28,22 +30,24 @@ pub struct Job {
 /// `make_worker` is called once per thread and returns the thread's job
 /// closure (building any non-`Send` state, e.g. a PJRT engine, inside the
 /// thread). Results are returned unordered; scheduling must therefore not
-/// affect job semantics (the coordinator seeds jobs by index, not order).
-pub fn run_jobs<T, F, W>(
-    jobs: Vec<Job>,
+/// affect job semantics (the coordinator seeds jobs by index, not order;
+/// the tile mapper re-orders results by tile index before reducing).
+pub fn run_jobs<J, T, F, W>(
+    jobs: Vec<J>,
     workers: usize,
     make_worker: F,
 ) -> Result<Vec<T>>
 where
+    J: Send + 'static,
     T: Send + 'static,
-    W: FnMut(Job) -> Result<T>,
+    W: FnMut(J) -> Result<T>,
     F: Fn() -> Result<W> + Send + Sync + 'static,
 {
     let total = jobs.len();
     if total == 0 {
         return Ok(Vec::new());
     }
-    let workers = workers.max(1).min(total);
+    let workers = workers.clamp(1, total);
     let queue = Arc::new(Mutex::new(jobs.into_iter()));
     let (tx, rx) = mpsc::channel::<Result<T>>();
     let make_worker = Arc::new(make_worker);
@@ -173,6 +177,17 @@ mod tests {
             });
         let err = format!("{:#}", res.unwrap_err());
         assert!(err.contains("failed to initialize"), "{err}");
+    }
+
+    #[test]
+    fn generic_job_types_schedule() {
+        // the tile mapper schedules plain indices through the same pool
+        let out = run_jobs((0..50usize).collect(), 4, || {
+            Ok(|idx: usize| Ok(idx * idx))
+        })
+        .unwrap();
+        let sum: usize = out.iter().sum();
+        assert_eq!(sum, (0..50).map(|i| i * i).sum());
     }
 
     #[test]

@@ -54,6 +54,31 @@ impl CimArch {
             CimArch::GrInt => crate::spec::Arch::GrInt,
         }
     }
+
+    /// The energy-model granularity matching a spec-solver architecture
+    /// (the inverse of [`CimArch::spec_arch`]).
+    pub fn from_spec(arch: crate::spec::Arch) -> Self {
+        match arch {
+            crate::spec::Arch::Conventional => CimArch::Conventional,
+            crate::spec::Arch::GrUnit => CimArch::GrUnit,
+            crate::spec::Arch::GrRow => CimArch::GrRow,
+            crate::spec::Arch::GrInt => CimArch::GrInt,
+        }
+    }
+
+    /// Parse a `--arch` / wire `arch` value. `gr` is an alias for the
+    /// unit granularity (the paper's default gain-ranging configuration).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "conventional" | "conv" => CimArch::Conventional,
+            "gr" | "gr-unit" | "unit" => CimArch::GrUnit,
+            "gr-row" | "row" => CimArch::GrRow,
+            "gr-int" | "int" => CimArch::GrInt,
+            other => anyhow::bail!(
+                "unknown arch '{other}' (conventional|gr|gr-unit|gr-row|gr-int)"
+            ),
+        })
+    }
 }
 
 /// Per-op energy breakdown in fJ (the Fig. 12 pie charts).
@@ -315,5 +340,34 @@ mod tests {
             CimArch::Conventional.spec_arch(),
             crate::spec::Arch::Conventional
         );
+        // from_spec is the exact inverse
+        for arch in [
+            CimArch::Conventional,
+            CimArch::GrUnit,
+            CimArch::GrRow,
+            CimArch::GrInt,
+        ] {
+            assert_eq!(CimArch::from_spec(arch.spec_arch()), arch);
+        }
+    }
+
+    #[test]
+    fn arch_names_parse() {
+        assert_eq!(CimArch::parse("gr").unwrap(), CimArch::GrUnit);
+        assert_eq!(CimArch::parse("gr-unit").unwrap(), CimArch::GrUnit);
+        assert_eq!(CimArch::parse("conventional").unwrap(), CimArch::Conventional);
+        assert_eq!(CimArch::parse("conv").unwrap(), CimArch::Conventional);
+        assert_eq!(CimArch::parse("gr-row").unwrap(), CimArch::GrRow);
+        assert_eq!(CimArch::parse("gr-int").unwrap(), CimArch::GrInt);
+        assert!(CimArch::parse("quantum").is_err());
+        // every canonical name round-trips through parse
+        for arch in [
+            CimArch::Conventional,
+            CimArch::GrUnit,
+            CimArch::GrRow,
+            CimArch::GrInt,
+        ] {
+            assert_eq!(CimArch::parse(arch.name()).unwrap(), arch);
+        }
     }
 }

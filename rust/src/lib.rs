@@ -80,6 +80,7 @@ pub mod runtime;
 pub mod server;
 pub mod spec;
 pub mod stats;
+pub mod tile;
 pub mod util;
 pub mod workload;
 

@@ -7,7 +7,7 @@
 //! paper-equation-to-code map in `docs/THEORY.md`.
 
 use anyhow::{bail, Context, Result};
-use grcim::cli::sweep::SweepPlan;
+use grcim::cli::sweep::{LayerParams, SweepPlan};
 use grcim::cli::{fig_list, flags, Args};
 use grcim::config::Json;
 use grcim::coordinator::{run_campaign, CampaignConfig};
@@ -35,6 +35,9 @@ COMMANDS:
   energy     energy model at a spec point      --dr <dB> --sqnr <dB>
   sweep      run a TOML campaign               grcim sweep <config.toml>
   workload   analyze an empirical trace        grcim workload --trace t.grtt
+  layer      layer-scale GEMM on the tiled array mapper
+             grcim layer --shape mlp-up:4096 --arch gr [--tokens N]
+             [--nr N] [--nc N] [--ne N] [--nm N] [--dist NAME|empirical:t]
   serve      resident campaign service (NDJSON/TCP, cached + coalesced)
   query      client for a running serve        grcim query energy --dr 36
              raw mode: grcim query --json '<request>' (non-empty object;
@@ -159,6 +162,53 @@ fn cmd_workload(args: &Args) -> Result<()> {
     grcim::info!("workload done in {:.1}s", t.elapsed_s());
     if !fr.all_hold() {
         bail!("workload invariant checks failed (see table above)");
+    }
+    Ok(())
+}
+
+/// Build the [`LayerParams`] shared by `grcim layer` and `grcim query
+/// layer` from flags (defaults from [`LayerParams::default`]).
+fn layer_params(args: &Args, shape: String) -> Result<LayerParams> {
+    let d = LayerParams::default();
+    Ok(LayerParams {
+        shape,
+        tokens: args.get_usize("tokens", d.tokens)?,
+        arch: args.get_or("arch", d.arch.as_str()).to_string(),
+        nr: args.get_usize("nr", d.nr)?,
+        nc: args.get_usize("nc", d.nc)?,
+        n_e: args.get_f64("ne", d.n_e)?,
+        n_m: args.get_f64("nm", d.n_m)?,
+        distribution: args.get_or("dist", d.distribution.as_str()).to_string(),
+    })
+}
+
+/// `grcim layer --shape <shape>`: evaluate one layer-scale GEMM on the
+/// tiled array mapper (per-tile spec-solved ADCs, per-tile energy,
+/// digital partial-sum reduction) and print/persist the report. Exits
+/// non-zero if an invariant check fails.
+fn cmd_layer(args: &Args) -> Result<()> {
+    args.ensure_known(flags::LAYER)?;
+    let shape = args
+        .get("shape")
+        .map(String::from)
+        .or_else(|| args.positional.first().cloned())
+        .context("layer needs a shape: grcim layer --shape mlp-up:4096")?;
+    let spec = layer_params(args, shape)?.resolve()?;
+    let campaign = campaign_from_args(args)?;
+    let out_dir = PathBuf::from(args.get_or("out", "results"));
+    let t = util::Timer::new("layer");
+    let res = grcim::tile::run_layer(&spec, &campaign)?;
+    let fr = res.report.to_figure_result();
+    let text = fr.emit(&out_dir)?;
+    println!("{text}");
+    grcim::info!(
+        "layer done in {:.1}s ({} tiles, {:.2} fJ/MAC)",
+        t.elapsed_s(),
+        res.report.tiles.len(),
+        res.report.fj_per_mac()
+    );
+    if !fr.all_hold() {
+        bail!("layer invariant checks failed (see table above)");
     }
     Ok(())
 }
@@ -367,6 +417,32 @@ fn build_request(kind: &str, args: &Args) -> Result<String> {
             }
             Ok(proto::obj(pairs).to_string())
         }
+        "layer" => {
+            let shape = args
+                .get("shape")
+                .map(String::from)
+                .or_else(|| args.positional.get(1).cloned())
+                .context(
+                    "layer query needs a shape: \
+                     grcim query layer --shape mlp-up:4096",
+                )?;
+            let p = layer_params(args, shape)?;
+            let mut pairs = vec![
+                ("cmd", Json::Str("layer".to_string())),
+                ("shape", Json::Str(p.shape)),
+                ("tokens", Json::Num(p.tokens as f64)),
+                ("arch", Json::Str(p.arch)),
+                ("nr", Json::Num(p.nr as f64)),
+                ("nc", Json::Num(p.nc as f64)),
+                ("n_e", Json::Num(p.n_e)),
+                ("n_m", Json::Num(p.n_m)),
+                ("distribution", Json::Str(p.distribution)),
+            ];
+            if let Some(s) = json_seed(args)? {
+                pairs.push(("seed", Json::Num(s)));
+            }
+            Ok(proto::obj(pairs).to_string())
+        }
         "sweep" => {
             let path = args.positional.get(1).context(
                 "sweep query needs a config: grcim query sweep <config.toml>",
@@ -413,7 +489,8 @@ fn build_request(kind: &str, args: &Args) -> Result<String> {
             Ok(proto::obj(pairs).to_string())
         }
         other => bail!(
-            "unknown query kind '{other}' (energy|sweep|figure|workload|info, \
+            "unknown query kind '{other}' \
+             (energy|sweep|figure|workload|layer|info, \
              or --json '<raw request>')"
         ),
     }
@@ -471,6 +548,7 @@ fn main() {
         "figures" => cmd_figures(&args),
         "energy" => cmd_energy(&args),
         "workload" => cmd_workload(&args),
+        "layer" => cmd_layer(&args),
         "validate" => cmd_validate(&args),
         "info" => cmd_info(&args),
         "sweep" => cmd_sweep(&args),

@@ -33,16 +33,19 @@
 //!     arch: Arch::GrUnit,
 //!     enob: 16.0,
 //!     nr: 8,
+//!     nc: 8,
 //! };
 //! let cim_acc = cim_accuracy(&mlp, &RustEngine, &cfg, &xs[..32], &ys[..32])?;
 //! assert!(cim_acc >= float_acc - 0.1);
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 
-use crate::mac::{adc_quantize, FormatPair};
+use crate::energy::{CimArch, TechParams};
+use crate::mac::FormatPair;
 use crate::rng::Pcg64;
 use crate::runtime::Engine;
 use crate::spec::Arch;
+use crate::tile::{gemm_outputs, AdcPolicy, GemmShape, TileConfig};
 use anyhow::Result;
 
 /// A dense layer: row-major weights `[out][inp]`, bias `[out]`.
@@ -241,18 +244,37 @@ pub struct CimInference {
     pub enob: f64,
     /// Array depth (row-chunk size of each tiled matmul).
     pub nr: usize,
+    /// Columns per CIM tile (the output dimension is split into N_C-wide
+    /// tiles by the array mapper; column results are independent, so this
+    /// only affects energy amortization, not the outputs).
+    pub nc: usize,
+}
+
+impl CimInference {
+    /// The array-mapper configuration this inference setup runs on
+    /// (fixed-ENOB digitization — the resolution is a design input here,
+    /// not a per-tile solve).
+    pub fn tile_config(&self) -> TileConfig {
+        TileConfig {
+            nr: self.nr,
+            nc: self.nc,
+            fmts: self.fmts,
+            arch: CimArch::from_spec(self.arch),
+            adc: AdcPolicy::Fixed(self.enob),
+            tech: TechParams::default(),
+        }
+    }
 }
 
 /// Run a batch of inputs through the network with every matmul executed
 /// by the simulated CIM array: activations and weights are scaled
-/// per-layer/per-batch to [-1, 1] (static per-tensor calibration),
-/// quantized to the configured formats inside the engine, split into
-/// NR-row column dot products, passed through the selected analog signal
-/// chain, digitized at `enob`, renormalized, and rescaled.
-///
-/// All samples' tiles are batched into one engine call per layer (padded
-/// to the engine's preferred batch), so the PJRT path runs at full
-/// artifact batch efficiency.
+/// per-layer/per-batch to [-1, 1] (static per-tensor calibration), then
+/// each layer runs as one tiled GEMM through the array mapper
+/// ([`crate::tile::gemm_outputs`] — the fast path that skips the
+/// reference-GEMM/SQNR accounting): weight-stationary N_R × N_C
+/// tiles, the selected analog signal chain, ADC at `enob`,
+/// renormalization, digital partial-sum reduction — and finally the
+/// bias/ReLU epilogue in the float domain.
 pub fn cim_forward_batch(
     mlp: &Mlp,
     engine: &dyn Engine,
@@ -260,7 +282,10 @@ pub fn cim_forward_batch(
     xs: &[Vec<f64>],
 ) -> Result<Vec<Vec<f64>>> {
     let n = xs.len();
-    let nr = cfg.nr;
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let tcfg = cfg.tile_config();
     let mut acts: Vec<Vec<f64>> = xs.to_vec();
     for (li, layer) in mlp.layers.iter().enumerate() {
         // static per-tensor scales over the whole batch
@@ -275,53 +300,27 @@ pub fn cim_forward_batch(
             .fold(0.0f64, |m, v| m.max(v.abs()))
             .max(1e-12);
 
-        let chunks = layer.inp.div_ceil(nr);
-        let rows = n * layer.out * chunks;
-        let engine_batch = engine.preferred_batch(nr);
-        let padded = rows.div_ceil(engine_batch) * engine_batch;
-        let mut xb = vec![0.0f32; padded * nr];
-        let mut wb = vec![0.0f32; padded * nr];
+        // scaled f32 operands: X [n×inp], Wᵀ [out×inp] (the Dense layout)
+        let mut xf = vec![0.0f32; n * layer.inp];
         for (s, act) in acts.iter().enumerate() {
-            for o in 0..layer.out {
-                let w_row = &layer.w[o * layer.inp..(o + 1) * layer.inp];
-                for c in 0..chunks {
-                    let base = ((s * layer.out + o) * chunks + c) * nr;
-                    for i in 0..nr {
-                        let src = c * nr + i;
-                        if src < layer.inp {
-                            xb[base + i] = (act[src] / a_scale) as f32;
-                            wb[base + i] = (w_row[src] / w_scale) as f32;
-                        }
-                    }
-                }
+            for (dst, v) in xf[s * layer.inp..(s + 1) * layer.inp].iter_mut().zip(act) {
+                *dst = (v / a_scale) as f32;
             }
         }
-        let sim = engine.simulate(&xb, &wb, nr, cfg.fmts)?;
+        let mut wtf = vec![0.0f32; layer.out * layer.inp];
+        for (dst, v) in wtf.iter_mut().zip(&layer.w) {
+            *dst = (v / w_scale) as f32;
+        }
 
-        // digitize per the architecture and reassemble z = sum over chunks
+        let shape = GemmShape { m: n, k: layer.inp, n: layer.out };
+        let res = gemm_outputs(engine, "nn-layer", &tcfg, shape, &xf, &wtf)?;
+
+        // epilogue: rescale, bias, hidden-layer ReLU
         let mut next = Vec::with_capacity(n);
         for s in 0..n {
             let mut z = vec![0.0f64; layer.out];
             for (o, zo) in z.iter_mut().enumerate() {
-                for c in 0..chunks {
-                    let r = (s * layer.out + o) * chunks + c;
-                    let zhat = match cfg.arch {
-                        Arch::Conventional => {
-                            adc_quantize(sim.v_conv[r], cfg.enob)
-                                * sim.g_conv[r]
-                        }
-                        // the row-normalized chain is not separately
-                        // simulated; unit normalization is used for both
-                        // GR granularities (identical column voltage)
-                        Arch::GrUnit | Arch::GrInt | Arch::GrRow => {
-                            adc_quantize(sim.v_gr[r], cfg.enob)
-                                * sim.s_sum[r]
-                                / nr as f64
-                        }
-                    };
-                    *zo += zhat * nr as f64;
-                }
-                *zo = *zo * a_scale * w_scale + layer.b[o];
+                *zo = res.y[s * layer.out + o] * a_scale * w_scale + layer.b[o];
                 if li + 1 < mlp.layers.len() {
                     *zo = zo.max(0.0);
                 }
@@ -409,6 +408,7 @@ mod tests {
             arch: Arch::GrUnit,
             enob: 16.0,
             nr: 16,
+            nc: 16,
         };
         let acc =
             cim_accuracy(&mlp, &RustEngine, &cfg, &xs[..128], &ys[..128])
@@ -427,6 +427,7 @@ mod tests {
             arch: Arch::GrUnit,
             enob: 18.0,
             nr: 16,
+            nc: 16,
         };
         let f = mlp.forward(&xs[0]);
         let c = cim_forward(&mlp, &RustEngine, &cfg, &xs[0]).unwrap();
@@ -443,7 +444,7 @@ mod tests {
             cim_accuracy(
                 &mlp,
                 &RustEngine,
-                &CimInference { fmts, arch, enob, nr: 16 },
+                &CimInference { fmts, arch, enob, nr: 16, nc: 16 },
                 &xs[..192],
                 &ys[..192],
             )

@@ -76,6 +76,15 @@ pub trait Engine {
     /// work into multiples of this).
     fn preferred_batch(&self, nr: usize) -> usize;
 
+    /// Whether [`Engine::simulate`] requires the batch to be a whole
+    /// multiple of [`Engine::preferred_batch`] (AOT artifacts have fixed
+    /// batch shapes baked in). Callers that cannot chunk — e.g. the tile
+    /// mapper's per-tile batches — pad with zero samples and discard the
+    /// padded outputs when this is set. The oracle takes exact batches.
+    fn requires_batch_multiple(&self) -> bool {
+        false
+    }
+
     /// Array depths this engine supports.
     fn supports_nr(&self, nr: usize) -> bool;
 

@@ -150,6 +150,10 @@ impl Engine for PjrtEngine {
         self.execs.get(&nr).map(|(_, b)| *b).unwrap_or(2048)
     }
 
+    fn requires_batch_multiple(&self) -> bool {
+        true // artifact batch shapes are baked in at lowering time
+    }
+
     fn supports_nr(&self, nr: usize) -> bool {
         self.execs.contains_key(&nr)
     }

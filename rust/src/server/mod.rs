@@ -39,7 +39,7 @@
 pub mod cache;
 pub mod proto;
 
-use crate::cli::sweep::experiment_spec;
+use crate::cli::sweep::{experiment_spec, LayerParams};
 use crate::config::Json;
 use crate::coordinator::{run_campaign, CampaignConfig, ExperimentSpec};
 use crate::distributions::Distribution;
@@ -49,8 +49,8 @@ use crate::mac::FormatPair;
 use crate::runtime::EngineKind;
 use crate::spec::{required_enob, Arch, SpecConfig};
 use crate::stats::ColumnAgg;
-use anyhow::{bail, Context, Result};
 use crate::workload::{self, EmpiricalDist, TensorTrace};
+use anyhow::{bail, Context, Result};
 use cache::{Outcome, ShardedCache, StatsSnapshot};
 use proto::{obj, Request, TraceSource};
 use std::io::{BufRead, BufReader, BufWriter, Write};
@@ -70,6 +70,18 @@ const IDLE_TICK: Duration = Duration::from_millis(200);
 /// newline gets an error and is disconnected (bounds per-connection
 /// memory).
 const MAX_LINE: usize = 1 << 20;
+
+/// Largest layer a `layer` request may evaluate, in MACs (M·K·N) — caps
+/// the reference-GEMM compute (a 4096-d MLP up-projection at 4 tokens is
+/// ~2.7e8 MACs, far below it).
+pub const MAX_LAYER_MACS: u64 = 1 << 36;
+
+/// Largest operand slab (`M·K` or `N·K` f32 elements) a `layer` request
+/// may allocate — caps request *memory* independently of the MAC
+/// product (a skinny `gemm:1x1048576x65536` is only 2^36 MACs but would
+/// otherwise allocate a 256 GiB weight slab). 2^27 elements = 512 MiB;
+/// `mlp-up:4096` needs exactly 2^26.
+pub const MAX_LAYER_ELEMS: u64 = 1 << 27;
 
 /// Server construction parameters.
 #[derive(Debug, Clone)]
@@ -101,6 +113,7 @@ pub struct CampaignService {
     aggs: ShardedCache<ColumnAgg>,
     figs: ShardedCache<String>,
     workloads: ShardedCache<String>,
+    layers: ShardedCache<String>,
 }
 
 fn arch_json(name: &str, enob: f64, b: &EnergyBreakdown) -> Json {
@@ -137,6 +150,7 @@ impl CampaignService {
             aggs: ShardedCache::new(cache_entries),
             figs: ShardedCache::new((cache_entries / 8).max(8)),
             workloads: ShardedCache::new((cache_entries / 8).max(8)),
+            layers: ShardedCache::new((cache_entries / 8).max(8)),
         }
     }
 
@@ -184,6 +198,7 @@ impl CampaignService {
             Request::Figure { id, samples, seed } => {
                 self.figure(id, *samples, *seed)
             }
+            Request::Layer { params, seed } => self.layer(params, *seed),
             Request::Workload { source, samples, seed } => {
                 self.workload(source, *samples, *seed)
             }
@@ -203,6 +218,7 @@ impl CampaignService {
             ("seed", Json::Num(self.campaign.seed as f64)),
             ("aggregates", stats_json(&self.aggs.stats())),
             ("figures", stats_json(&self.figs.stats())),
+            ("layers", stats_json(&self.layers.stats())),
             ("workloads", stats_json(&self.workloads.stats())),
         ]))
     }
@@ -364,6 +380,57 @@ impl CampaignService {
         let result = obj(vec![
             ("id", Json::Str(id.to_string())),
             ("figure", figure),
+        ]);
+        Ok((result, o.is_cached()))
+    }
+
+    /// The layer query: evaluate a named layer shape on the tiled array
+    /// mapper ([`crate::tile::run_layer`] — tile jobs shard across the
+    /// worker pool), cached by [`proto::layer_key`] over the **resolved**
+    /// spec, so request aliases (`gr` vs `gr-unit`, named shape vs
+    /// explicit `gemm:`) share one entry. Empirical activation traces are
+    /// confined like workload paths.
+    fn layer(&self, params: &LayerParams, seed: Option<u64>) -> Result<(Json, bool)> {
+        let seed = seed.unwrap_or(self.campaign.seed);
+        // empirical distributions read a server-side trace file
+        if let Some(path) = params.distribution.strip_prefix("empirical:") {
+            confined_trace_path(path)?;
+        }
+        let spec = params.resolve()?;
+        if spec.shape.macs() > MAX_LAYER_MACS {
+            bail!(
+                "layer shape {} is too large for the service ({} MACs > {MAX_LAYER_MACS})",
+                spec.shape,
+                spec.shape.macs()
+            );
+        }
+        // parse_shape bounds each dimension to 2^20, so these products
+        // cannot overflow u64
+        let x_elems = spec.shape.m as u64 * spec.shape.k as u64;
+        let wt_elems = spec.shape.n as u64 * spec.shape.k as u64;
+        if x_elems.max(wt_elems) > MAX_LAYER_ELEMS {
+            bail!(
+                "layer shape {} is too large for the service (operand slab \
+                 of {} elements > {MAX_LAYER_ELEMS})",
+                spec.shape,
+                x_elems.max(wt_elems)
+            );
+        }
+        let key = proto::layer_key(&spec, seed, self.engine_name());
+        let campaign = CampaignConfig { seed, ..self.campaign.clone() };
+        let gemm = spec.shape;
+        let arch = spec.cfg.arch;
+        let (text, o) = self.layers.get_or_compute(&key, move || {
+            let res = crate::tile::run_layer(&spec, &campaign)?;
+            Ok(res.report.to_figure_result().to_json().to_string())
+        })?;
+        let report = Json::parse(&text).context("re-parsing cached layer JSON")?;
+        let result = obj(vec![
+            ("shape", Json::Str(params.shape.clone())),
+            ("gemm", Json::Str(gemm.to_string())),
+            ("arch", Json::Str(arch.name().to_string())),
+            ("seed", Json::Num(seed as f64)),
+            ("layer", report),
         ]);
         Ok((result, o.is_cached()))
     }
@@ -800,6 +867,64 @@ mod tests {
             .and_then(Json::as_str)
             .unwrap()
             .contains("unknown figure"));
+    }
+
+    #[test]
+    fn layer_request_cached_and_reconciled() {
+        let svc = test_service();
+        let line = r#"{"cmd":"layer","shape":"gemm:2x24x10","nr":8,"nc":4,
+            "n_e":2,"arch":"gr","distribution":"gauss_outliers"}"#;
+        let req = proto::parse_request(line).unwrap();
+        let cold = svc.respond(&req);
+        let j = Json::parse(&cold).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{cold}");
+        assert_eq!(j.get("cached"), Some(&Json::Bool(false)));
+        let r = j.get("result").unwrap();
+        assert_eq!(r.get("gemm").and_then(Json::as_str), Some("2x24x10"));
+        assert_eq!(r.get("arch").and_then(Json::as_str), Some("gr-unit"));
+        let layer = r.get("layer").unwrap();
+        assert_eq!(layer.get("name").and_then(Json::as_str), Some("layer"));
+        // the invariant checks (incl. energy reconciliation) all hold
+        assert_eq!(layer.get("all_hold"), Some(&Json::Bool(true)), "{layer}");
+        // summary + components + histogram + tiles
+        assert_eq!(layer.get("tables").unwrap().items().len(), 4);
+
+        // byte-identical hit
+        let warm = svc.respond(&req);
+        let jw = Json::parse(&warm).unwrap();
+        assert_eq!(jw.get("cached"), Some(&Json::Bool(true)));
+        assert_eq!(result_str(&cold), result_str(&warm));
+        assert_eq!(svc.layers.stats().computes, 1);
+
+        // an alias that resolves identically shares the entry
+        let alias = line.replace("\"gr\"", "\"gr-unit\"");
+        let req2 = proto::parse_request(&alias).unwrap();
+        let j2 = Json::parse(&svc.respond(&req2)).unwrap();
+        assert_eq!(j2.get("cached"), Some(&Json::Bool(true)));
+        assert_eq!(svc.layers.stats().computes, 1);
+    }
+
+    #[test]
+    fn layer_request_bad_inputs_are_clean_errors() {
+        let svc = test_service();
+        for line in [
+            r#"{"cmd":"layer","shape":"warp:64"}"#,
+            r#"{"cmd":"layer","shape":"gemm:2x8x8","arch":"quantum"}"#,
+            r#"{"cmd":"layer","shape":"gemm:2x8x8","nr":0}"#,
+            // formats a worker thread could not even construct
+            r#"{"cmd":"layer","shape":"gemm:2x8x8","n_e":64}"#,
+            // over the MAC cap
+            r#"{"cmd":"layer","shape":"gemm:100000x100000x100000"}"#,
+            // under the MAC cap but over the operand-slab cap
+            r#"{"cmd":"layer","shape":"gemm:1x1048576x65536"}"#,
+            // empirical activation traces are confined like workload paths
+            r#"{"cmd":"layer","shape":"gemm:2x8x8",
+                "distribution":"empirical:/etc/hostname"}"#,
+        ] {
+            let req = proto::parse_request(line).unwrap();
+            let j = Json::parse(&svc.respond(&req)).unwrap();
+            assert_eq!(j.get("ok"), Some(&Json::Bool(false)), "{line}");
+        }
     }
 
     #[test]

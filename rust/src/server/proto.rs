@@ -8,7 +8,7 @@
 //! -> {"cmd":"energy","dr":30.1,"sqnr":22.83,"samples":4096}
 //! <- {"ok":true,"cached":false,"result":{...}}
 //! -> {"cmd":"nonsense"}
-//! <- {"ok":false,"error":"unknown cmd 'nonsense' (energy|sweep|figure|workload|info)"}
+//! <- {"ok":false,"error":"unknown cmd 'nonsense' (energy|sweep|figure|workload|layer|info)"}
 //! ```
 //!
 //! The `"cached"` flag sits **outside** `"result"` so clients (and the
@@ -33,9 +33,11 @@
 //! assert!(parse_request("{\"cmd\":\"warp\"}").is_err());
 //! ```
 
+use crate::cli::sweep::LayerParams;
 use crate::config::Json;
 use crate::coordinator::ExperimentSpec;
 use crate::distributions::Distribution;
+use crate::tile::LayerSpec;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
@@ -100,6 +102,17 @@ pub enum Request {
         id: String,
         /// Monte-Carlo samples per campaign point.
         samples: usize,
+        /// Campaign seed override (server default when absent).
+        seed: Option<u64>,
+    },
+    /// Evaluate a named layer shape on the tiled array mapper (`grcim
+    /// layer` over the wire): per-tile ENOB + energy, layer totals, ADC
+    /// histogram. Cached by [`layer_key`] (the resolved spec's exact
+    /// parameter bits).
+    Layer {
+        /// The raw layer fields (resolved server-side via
+        /// [`LayerParams::resolve`]).
+        params: LayerParams,
         /// Campaign seed override (server default when absent).
         seed: Option<u64>,
     },
@@ -208,6 +221,32 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 .unwrap_or(DEFAULT_FIGURE_SAMPLES),
             seed,
         }),
+        "layer" => {
+            let d = LayerParams::default();
+            let params = LayerParams {
+                shape: j
+                    .get("shape")
+                    .and_then(Json::as_str)
+                    .context("layer needs a 'shape' field (e.g. \"mlp-up:4096\")")?
+                    .to_string(),
+                tokens: j.get("tokens").and_then(Json::as_usize).unwrap_or(d.tokens),
+                arch: j
+                    .get("arch")
+                    .and_then(Json::as_str)
+                    .unwrap_or(&d.arch)
+                    .to_string(),
+                nr: j.get("nr").and_then(Json::as_usize).unwrap_or(d.nr),
+                nc: j.get("nc").and_then(Json::as_usize).unwrap_or(d.nc),
+                n_e: j.get("n_e").and_then(Json::as_f64).unwrap_or(d.n_e),
+                n_m: j.get("n_m").and_then(Json::as_f64).unwrap_or(d.n_m),
+                distribution: j
+                    .get("distribution")
+                    .and_then(Json::as_str)
+                    .unwrap_or(&d.distribution)
+                    .to_string(),
+            };
+            Ok(Request::Layer { params, seed })
+        }
         "workload" => {
             let source = match (j.get("path"), j.get("values")) {
                 (Some(p), None) => TraceSource::Path(
@@ -253,7 +292,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
             })
         }
         other => {
-            bail!("unknown cmd '{other}' (energy|sweep|figure|workload|info)")
+            bail!("unknown cmd '{other}' (energy|sweep|figure|workload|layer|info)")
         }
     }
 }
@@ -343,6 +382,44 @@ pub fn spec_key(spec: &ExperimentSpec, seed: u64, engine: &str) -> String {
 /// Canonical cache key of one rendered figure.
 pub fn figure_key(id: &str, samples: usize, seed: u64, engine: &str) -> String {
     format!("v{PROTO_VERSION}|fig|eng={engine}|seed={seed}|n={samples}|id={id}")
+}
+
+/// Canonical cache key of one rendered layer report. Built from the
+/// **resolved** [`LayerSpec`] (not the raw request fields), so aliases
+/// that resolve identically — `--arch gr` vs `--arch gr-unit`, or a
+/// named shape vs the equivalent explicit `gemm:` — share one entry.
+/// Covers exactly what determines the report's bits: the GEMM
+/// dimensions, tile geometry, architecture, exact format bits, both
+/// distributions (empirical traces by content hash), seed, and engine.
+pub fn layer_key(spec: &LayerSpec, seed: u64, engine: &str) -> String {
+    let cfg = &spec.cfg;
+    // adc policy and technology parameters are pinned by
+    // LayerParams::resolve today, but both determine the report's bits —
+    // keying them keeps the cache sound if a future entry point exposes
+    // either (fixed-ENOB or --adc-scale knobs already exist elsewhere)
+    let adc = match cfg.adc {
+        crate::tile::AdcPolicy::Fixed(e) => format!("fixed:{}", bits(e)),
+        crate::tile::AdcPolicy::PerTileSpec => "spec".to_string(),
+    };
+    let t = &cfg.tech;
+    format!(
+        "v{PROTO_VERSION}|layer|eng={engine}|seed={seed}|shape={}|nr={}|nc={}|arch={}|adc={adc}|tech={}:{}:{}:{}:{}|x={}:{}|w={}:{}|dx={}|dw={}",
+        spec.shape,
+        cfg.nr,
+        cfg.nc,
+        cfg.arch.name(),
+        bits(t.c_gate_ff),
+        bits(t.k1_ff),
+        bits(t.k2_ff),
+        bits(t.k3_ff),
+        bits(t.vdd),
+        bits(cfg.fmts.x.e_max),
+        bits(cfg.fmts.x.n_m),
+        bits(cfg.fmts.w.e_max),
+        bits(cfg.fmts.w.n_m),
+        canonical_dist(&spec.dist_x),
+        canonical_dist(&spec.dist_w),
+    )
 }
 
 /// Canonical cache key of one rendered workload report: the trace is
@@ -539,6 +616,73 @@ mod tests {
         assert!(
             parse_request(r#"{"cmd":"workload","values":["a"]}"#).is_err()
         );
+    }
+
+    #[test]
+    fn parses_layer_requests_with_defaults_and_overrides() {
+        let r = parse_request(r#"{"cmd":"layer","shape":"mlp-up:4096"}"#).unwrap();
+        match r {
+            Request::Layer { params, seed } => {
+                assert_eq!(params.shape, "mlp-up:4096");
+                let want = LayerParams { shape: "mlp-up:4096".into(), ..Default::default() };
+                assert_eq!(params, want);
+                assert_eq!(seed, None);
+            }
+            other => panic!("{other:?}"),
+        }
+        let r = parse_request(
+            r#"{"cmd":"layer","shape":"gemm:2x8x8","arch":"conventional",
+                "tokens":8,"nr":16,"nc":8,"n_e":3,"n_m":1,
+                "distribution":"uniform","seed":5}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Layer { params, seed } => {
+                assert_eq!(params.arch, "conventional");
+                assert_eq!(params.tokens, 8);
+                assert_eq!(params.nr, 16);
+                assert_eq!(params.nc, 8);
+                assert_eq!(params.n_e, 3.0);
+                assert_eq!(params.n_m, 1.0);
+                assert_eq!(params.distribution, "uniform");
+                assert_eq!(seed, Some(5));
+            }
+            other => panic!("{other:?}"),
+        }
+        // shape is mandatory
+        assert!(parse_request(r#"{"cmd":"layer"}"#).is_err());
+    }
+
+    #[test]
+    fn layer_keys_cover_every_resolved_input() {
+        let base = LayerParams { shape: "gemm:2x16x8".into(), ..Default::default() };
+        let k0 = layer_key(&base.resolve().unwrap(), 7, "rust");
+        // arch aliases share the entry (keys are built from the resolved spec)
+        let alias = LayerParams { arch: "gr-unit".into(), ..base.clone() };
+        assert_eq!(layer_key(&alias.resolve().unwrap(), 7, "rust"), k0);
+        // every resolved input separates
+        for changed in [
+            LayerParams { shape: "gemm:2x16x9".into(), ..base.clone() },
+            LayerParams { tokens: 4, shape: "mlp-up:4".into(), ..base.clone() },
+            LayerParams { arch: "conventional".into(), ..base.clone() },
+            LayerParams { nr: 16, ..base.clone() },
+            LayerParams { nc: 16, ..base.clone() },
+            LayerParams { n_e: 3.0, ..base.clone() },
+            LayerParams { n_m: 3.0, ..base.clone() },
+            LayerParams { distribution: "uniform".into(), ..base.clone() },
+        ] {
+            assert_ne!(layer_key(&changed.resolve().unwrap(), 7, "rust"), k0, "{changed:?}");
+        }
+        assert_ne!(layer_key(&base.resolve().unwrap(), 8, "rust"), k0);
+        assert_ne!(layer_key(&base.resolve().unwrap(), 7, "pjrt"), k0);
+        // adc policy and tech params are keyed too (pinned by resolve
+        // today, but they determine the report's bits)
+        let mut fixed = base.resolve().unwrap();
+        fixed.cfg.adc = crate::tile::AdcPolicy::Fixed(8.0);
+        assert_ne!(layer_key(&fixed, 7, "rust"), k0);
+        let mut scaled = base.resolve().unwrap();
+        scaled.cfg.tech = scaled.cfg.tech.with_adc_scale(1.1);
+        assert_ne!(layer_key(&scaled, 7, "rust"), k0);
     }
 
     #[test]

@@ -246,9 +246,17 @@ impl ColumnAgg {
 
     /// Accumulate every sample of a batch (must match this depth).
     pub fn push_batch(&mut self, b: &ColumnBatch) {
+        self.push_batch_range(b, 0, b.len());
+    }
+
+    /// Accumulate samples `lo..hi` of a batch (must match this depth).
+    /// The tile mapper uses this to discard batch-padding samples an AOT
+    /// engine required without copying the batch.
+    pub fn push_batch_range(&mut self, b: &ColumnBatch, lo: usize, hi: usize) {
         assert_eq!(self.nr, b.nr, "batch from a different array depth");
+        assert!(lo <= hi && hi <= b.len(), "range {lo}..{hi} out of batch");
         let nr = b.nr as f64;
-        for i in 0..b.len() {
+        for i in lo..hi {
             self.sig.push(b.z_ideal[i]);
             self.qerr.push(b.z_q[i] - b.z_ideal[i]);
             self.nf.push(b.nf[i]);
@@ -419,6 +427,32 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.samples(), m.samples());
         assert!(approx_eq(a.nf.sum, m.nf.sum, 1e-15));
+    }
+
+    #[test]
+    fn column_agg_range_matches_prefix_pushes() {
+        let b = tiny_batch();
+        let mut full = ColumnAgg::new(4);
+        full.push_batch(&b);
+        let mut prefix = ColumnAgg::new(4);
+        prefix.push_batch_range(&b, 0, 1);
+        assert_eq!(prefix.samples(), 1);
+        assert_eq!(prefix.sig.sum.to_bits(), b.z_ideal[0].to_bits());
+        // prefix + suffix == full, bit-exact
+        prefix.push_batch_range(&b, 1, 2);
+        assert_eq!(prefix.samples(), full.samples());
+        assert_eq!(prefix.nf.sum.to_bits(), full.nf.sum.to_bits());
+        assert_eq!(prefix.n_eff.sum.to_bits(), full.n_eff.sum.to_bits());
+        // empty range is a no-op
+        prefix.push_batch_range(&b, 2, 2);
+        assert_eq!(prefix.samples(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of batch")]
+    fn column_agg_range_bounds_checked() {
+        let mut agg = ColumnAgg::new(4);
+        agg.push_batch_range(&tiny_batch(), 0, 3);
     }
 
     #[test]

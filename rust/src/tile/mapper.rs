@@ -1,0 +1,560 @@
+//! The tile mapper's execution engine: weight-stationary tile assembly,
+//! signal-chain simulation through [`Engine::simulate_into`] (reused
+//! scratch, allocation-free in steady state), per-tile ADC solving and
+//! digitization, digital partial-sum reduction, and the pool-sharded
+//! layer runner.
+//!
+//! Determinism contract: a tile's outcome depends only on (operands,
+//! config, tile index) — nothing about scheduling or worker count enters
+//! it — and partial sums are reduced in ascending row-tile order, so
+//! [`run_layer`] is bit-identical for any worker count (asserted in
+//! `rust/tests/properties.rs`).
+
+use super::{
+    AdcPolicy, GemmShape, LayerReport, LayerResult, LayerSpec, TileConfig, TileSummary,
+    MAX_TILE_ENOB,
+};
+use crate::coordinator::{pool, CampaignConfig};
+use crate::energy::{adder_tree_fa_count, energy_per_op, global_norm_energy_per_op, CimArch};
+use crate::mac::adc_quantize;
+use crate::rng::{job_seed, Pcg64};
+use crate::runtime::{build_engine, Engine, SimScratch};
+use crate::spec::{required_enob, SpecConfig};
+use crate::stats::{ColumnAgg, ColumnBatch};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Grid-index namespace of the layer operand RNG stream in
+/// [`crate::rng::job_seed`] — far outside any campaign's spec indices, so
+/// layer operands never collide with campaign job streams at the same
+/// campaign seed. The Python twin (`tools/gen_goldens.py`) uses the same
+/// constant.
+pub const LAYER_STREAM: u64 = 0x711E;
+
+/// Reusable per-worker buffers of the tile hot path: the tile's f32
+/// operand slabs, the engine's widening scratch, and one [`ColumnBatch`]
+/// every tile is simulated into. After the first tile at a given
+/// geometry, further tiles perform no heap allocation inside the signal
+/// chain (outputs — partial sums and summaries — are results and are
+/// allocated per tile).
+#[derive(Debug, Default)]
+pub struct TileBuffers {
+    x: Vec<f32>,
+    w: Vec<f32>,
+    scratch: SimScratch,
+    batch: ColumnBatch,
+}
+
+/// Digitization inputs of one simulated column sample: (ADC input
+/// voltage, digital renormalization gain) per the architecture. The
+/// row-normalized chain is not separately simulated; unit normalization
+/// is used for every GR granularity (identical column voltage — the
+/// `nn` convention).
+fn adc_input(arch: CimArch, batch: &ColumnBatch, s: usize) -> (f64, f64) {
+    match arch {
+        CimArch::Conventional => (batch.v_conv[s], batch.g_conv[s]),
+        CimArch::GrUnit | CimArch::GrRow | CimArch::GrInt => {
+            (batch.v_gr[s], batch.s_sum[s] / batch.nr as f64)
+        }
+    }
+}
+
+/// Simulate one weight-stationary tile.
+///
+/// `x` is the activation matrix, row-major `[M][K]`; `wt` the transposed
+/// weight matrix, row-major `[N][K]` (one row per output column — the
+/// `nn::Dense` layout). The tile covers rows `kt*nr ..` and columns
+/// `nt*nc ..` of the GEMM; samples are all (input row, active column)
+/// pairs, zero-padded to the full N_R depth on the ragged K edge.
+///
+/// Returns the tile summary and the digitized partial sums
+/// `zhat * N_R` (row-major `[M][active cols]`), ready for the digital
+/// reduction across row tiles.
+fn run_tile(
+    engine: &dyn Engine,
+    cfg: &TileConfig,
+    shape: GemmShape,
+    x: &[f32],
+    wt: &[f32],
+    (kt, nt): (usize, usize),
+    bufs: &mut TileBuffers,
+) -> Result<(TileSummary, Vec<f64>)> {
+    let nr = cfg.nr;
+    let k0 = kt * nr;
+    let rows = (shape.k - k0).min(nr);
+    let n0 = nt * cfg.nc;
+    let cols = (shape.n - n0).min(cfg.nc);
+    let b = shape.m * cols;
+
+    // AOT backends execute fixed batch shapes; pad with zero samples and
+    // discard their outputs (the oracle takes the exact batch). Known
+    // trade-off: padding is per tile, so an artifact batch far above
+    // M x N_C wastes AOT throughput — packing multiple same-geometry
+    // tiles into one call is future work; the default oracle is exact.
+    let padded = if engine.requires_batch_multiple() {
+        let unit = engine.preferred_batch(nr).max(1);
+        b.div_ceil(unit) * unit
+    } else {
+        b
+    };
+
+    bufs.x.clear();
+    bufs.x.resize(padded * nr, 0.0);
+    bufs.w.clear();
+    bufs.w.resize(padded * nr, 0.0);
+    for m in 0..shape.m {
+        for j in 0..cols {
+            let s = m * cols + j;
+            let base = s * nr;
+            let xrow = &x[m * shape.k + k0..m * shape.k + k0 + rows];
+            bufs.x[base..base + rows].copy_from_slice(xrow);
+            let wrow = &wt[(n0 + j) * shape.k + k0..(n0 + j) * shape.k + k0 + rows];
+            bufs.w[base..base + rows].copy_from_slice(wrow);
+        }
+    }
+    engine.simulate_into(&bufs.x, &bufs.w, nr, cfg.fmts, &mut bufs.scratch, &mut bufs.batch)?;
+    let batch = &bufs.batch;
+
+    let enob = match cfg.adc {
+        // the resolution is a design input; no aggregate needed
+        AdcPolicy::Fixed(e) => e,
+        AdcPolicy::PerTileSpec => {
+            // aggregate the active samples only (padding is discarded)
+            let mut agg = ColumnAgg::new(nr);
+            agg.push_batch_range(batch, 0, b);
+            required_enob(&agg, cfg.arch.spec_arch(), SpecConfig::default())
+                .enob
+                .clamp(0.0, MAX_TILE_ENOB)
+        }
+    };
+
+    let mut partial = vec![0.0f64; b];
+    for (s, p) in partial.iter_mut().enumerate() {
+        let (v, g) = adc_input(cfg.arch, batch, s);
+        *p = adc_quantize(v, enob) * g * nr as f64;
+    }
+
+    let energy = energy_per_op(cfg.arch, cfg.fmts, nr, cfg.nc, enob, &cfg.tech);
+    let mvm_ops = (2 * nr * cfg.nc * shape.m) as f64;
+    let summary = TileSummary {
+        kt,
+        nt,
+        rows,
+        cols,
+        samples: b as u64,
+        enob,
+        energy,
+        energy_fj: energy.total() * mvm_ops,
+        macs: (shape.m * rows * cols) as u64,
+    };
+    Ok((summary, partial))
+}
+
+/// Validate operand slabs against the shape and config.
+fn validate(cfg: &TileConfig, shape: GemmShape, x: &[f32], wt: &[f32]) -> Result<()> {
+    if cfg.nr == 0 || cfg.nc == 0 {
+        bail!("tile geometry must be positive (nr={}, nc={})", cfg.nr, cfg.nc);
+    }
+    if shape.m == 0 || shape.k == 0 || shape.n == 0 {
+        bail!("GEMM shape must be positive ({shape})");
+    }
+    if x.len() != shape.m * shape.k {
+        bail!("x has {} values, shape {shape} needs {}", x.len(), shape.m * shape.k);
+    }
+    if wt.len() != shape.n * shape.k {
+        bail!("wt has {} values, shape {shape} needs {}", wt.len(), shape.n * shape.k);
+    }
+    Ok(())
+}
+
+/// Reduce per-tile outcomes into the layer result: digital shift-add
+/// partial-sum accumulation (ascending row-tile order — the reduction
+/// tree's deterministic schedule), the exact float reference GEMM, and
+/// the energy totals.
+fn assemble(
+    name: &str,
+    cfg: &TileConfig,
+    shape: GemmShape,
+    x: &[f32],
+    wt: &[f32],
+    outs: Vec<(TileSummary, Vec<f64>)>,
+    with_reference: bool,
+) -> LayerResult {
+    let row_tiles = cfg.row_tiles(shape.k);
+    let col_tiles = cfg.col_tiles(shape.n);
+    debug_assert_eq!(outs.len(), row_tiles * col_tiles);
+
+    // partial-sum reduction: tile-index order is kt-major, so every
+    // output accumulates its row-tile contributions in ascending kt order
+    let mut y = vec![0.0f64; shape.m * shape.n];
+    let mut tiles = Vec::with_capacity(outs.len());
+    let mut tiles_fj = 0.0;
+    for (summary, partial) in outs {
+        let n0 = summary.nt * cfg.nc;
+        for m in 0..shape.m {
+            for j in 0..summary.cols {
+                y[m * shape.n + n0 + j] += partial[m * summary.cols + j];
+            }
+        }
+        tiles_fj += summary.energy_fj;
+        tiles.push(summary);
+    }
+
+    // exact float reference (f64 over the same f32 operands, ascending
+    // k); skipped on the inference fast path, which only consumes `y`
+    let sqnr_db = if with_reference {
+        let mut sig = 0.0f64;
+        let mut err = 0.0f64;
+        for m in 0..shape.m {
+            for n in 0..shape.n {
+                let mut r = 0.0f64;
+                for k in 0..shape.k {
+                    r += x[m * shape.k + k] as f64 * wt[n * shape.k + k] as f64;
+                }
+                sig += r * r;
+                let d = y[m * shape.n + n] - r;
+                err += d * d;
+            }
+        }
+        crate::util::db(sig / err.max(1e-300))
+    } else {
+        f64::NAN
+    };
+
+    // digital shift-add reduction across row tiles: one adder tree per
+    // output over `row_tiles` partial words of (ENOB + log2 N_R) bits
+    let reduction_fj = if row_tiles > 1 {
+        let max_enob = tiles.iter().map(|t| t.enob).fold(f64::NEG_INFINITY, f64::max);
+        let width = max_enob + (cfg.nr as f64).log2();
+        let fa = adder_tree_fa_count(row_tiles, width);
+        cfg.tech.e_adder_tree(fa) * (shape.m * shape.n) as f64
+    } else {
+        0.0
+    };
+
+    // global-normalization wrapper (charged per tile MVM when the formats
+    // exceed the native gain range — Sec. III-D)
+    let global_norm_fj = if cfg.needs_global_norm() {
+        let per_op = global_norm_energy_per_op(cfg.fmts, cfg.nr, cfg.nc, &cfg.tech);
+        per_op * (2 * cfg.nr * cfg.nc * shape.m) as f64 * tiles.len() as f64
+    } else {
+        0.0
+    };
+
+    LayerResult {
+        report: LayerReport {
+            name: name.to_string(),
+            shape,
+            cfg: *cfg,
+            row_tiles,
+            col_tiles,
+            tiles,
+            tiles_fj,
+            reduction_fj,
+            global_norm_fj,
+            sqnr_db,
+        },
+        y,
+    }
+}
+
+/// Run a GEMM through the tile mapper on one engine, sequentially (the
+/// CIM-inference path — see [`crate::nn::cim_forward_batch`] — and the
+/// reference the pooled [`run_layer`] is bit-identical to).
+///
+/// `x` is row-major `[M][K]`, `wt` row-major `[N][K]` (transposed
+/// weights), both pre-scaled to the array's [-1, 1] full scale.
+pub fn gemm_with_engine(
+    engine: &dyn Engine,
+    name: &str,
+    cfg: &TileConfig,
+    shape: GemmShape,
+    x: &[f32],
+    wt: &[f32],
+) -> Result<LayerResult> {
+    gemm_inner(engine, name, cfg, shape, x, wt, true)
+}
+
+/// Like [`gemm_with_engine`] but without the exact float reference GEMM
+/// — the report's `sqnr_db` is NaN. The CIM-inference hot path
+/// ([`crate::nn::cim_forward_batch`]) only consumes the outputs `y`, so
+/// it skips the O(M·K·N) reference work entirely.
+pub fn gemm_outputs(
+    engine: &dyn Engine,
+    name: &str,
+    cfg: &TileConfig,
+    shape: GemmShape,
+    x: &[f32],
+    wt: &[f32],
+) -> Result<LayerResult> {
+    gemm_inner(engine, name, cfg, shape, x, wt, false)
+}
+
+fn gemm_inner(
+    engine: &dyn Engine,
+    name: &str,
+    cfg: &TileConfig,
+    shape: GemmShape,
+    x: &[f32],
+    wt: &[f32],
+    with_reference: bool,
+) -> Result<LayerResult> {
+    validate(cfg, shape, x, wt)?;
+    let row_tiles = cfg.row_tiles(shape.k);
+    let col_tiles = cfg.col_tiles(shape.n);
+    let mut bufs = TileBuffers::default();
+    let mut outs = Vec::with_capacity(row_tiles * col_tiles);
+    for kt in 0..row_tiles {
+        for nt in 0..col_tiles {
+            outs.push(run_tile(engine, cfg, shape, x, wt, (kt, nt), &mut bufs)?);
+        }
+    }
+    Ok(assemble(name, cfg, shape, x, wt, outs, with_reference))
+}
+
+/// Run a GEMM with explicit operands, sharding tile jobs across the
+/// coordinator worker pool. Each worker builds its own engine and owns
+/// one [`TileBuffers`]; results are re-ordered by tile index before the
+/// reduction, so the outcome is bit-identical to [`gemm_with_engine`]
+/// for any worker count.
+pub fn run_layer_with_data(
+    name: &str,
+    cfg: &TileConfig,
+    shape: GemmShape,
+    x: Vec<f32>,
+    wt: Vec<f32>,
+    campaign: &CampaignConfig,
+) -> Result<LayerResult> {
+    validate(cfg, shape, &x, &wt)?;
+    let row_tiles = cfg.row_tiles(shape.k);
+    let col_tiles = cfg.col_tiles(shape.n);
+    let tiles = row_tiles * col_tiles;
+    let x = Arc::new(x);
+    let wt = Arc::new(wt);
+
+    let jobs: Vec<usize> = (0..tiles).collect();
+    let engine_kind = campaign.engine;
+    let artifacts = campaign.artifacts_dir.clone();
+    let cfg_worker = *cfg;
+    let x_worker = Arc::clone(&x);
+    let wt_worker = Arc::clone(&wt);
+    let results = pool::run_jobs(jobs, campaign.effective_workers(), move || {
+        let engine = build_engine(engine_kind, &artifacts)?;
+        let x = Arc::clone(&x_worker);
+        let wt = Arc::clone(&wt_worker);
+        let mut bufs = TileBuffers::default();
+        Ok(move |idx: usize| -> Result<(usize, TileSummary, Vec<f64>)> {
+            let tile = (idx / col_tiles, idx % col_tiles);
+            let (summary, partial) =
+                run_tile(engine.as_ref(), &cfg_worker, shape, &x, &wt, tile, &mut bufs)?;
+            Ok((idx, summary, partial))
+        })
+    })?;
+
+    // results arrive unordered; restore tile-index order for the
+    // deterministic reduction schedule
+    let mut ordered: Vec<Option<(TileSummary, Vec<f64>)>> = (0..tiles).map(|_| None).collect();
+    for (idx, summary, partial) in results {
+        ordered[idx] = Some((summary, partial));
+    }
+    let outs: Vec<(TileSummary, Vec<f64>)> =
+        ordered.into_iter().map(|o| o.expect("pool returned every tile")).collect();
+    Ok(assemble(name, cfg, shape, &x, &wt, outs, true))
+}
+
+/// Evaluate a named layer: draw the operands from the spec's workload
+/// distributions (deterministically from the campaign seed, stream
+/// [`LAYER_STREAM`]), then run the tiled GEMM across the worker pool.
+///
+/// The result is a pure function of (spec, campaign.seed,
+/// campaign.engine) — the property the serve layer's
+/// [`crate::server::proto::layer_key`] relies on.
+pub fn run_layer(spec: &LayerSpec, campaign: &CampaignConfig) -> Result<LayerResult> {
+    let shape = spec.shape;
+    let mut rng = Pcg64::seeded(job_seed(campaign.seed, LAYER_STREAM, 0));
+    let mut x = vec![0.0f32; shape.m * shape.k];
+    spec.dist_x.fill_f32(&mut rng, &mut x);
+    let mut wt = vec![0.0f32; shape.n * shape.k];
+    spec.dist_w.fill_f32(&mut rng, &mut wt);
+    run_layer_with_data(&spec.name, &spec.cfg, shape, x, wt, campaign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributions::Distribution;
+    use crate::energy::TechParams;
+    use crate::formats::FpFormat;
+    use crate::mac::FormatPair;
+    use crate::runtime::{EngineKind, RustEngine};
+
+    fn cfg(nr: usize, nc: usize, adc: AdcPolicy) -> TileConfig {
+        TileConfig {
+            nr,
+            nc,
+            fmts: FormatPair::new(FpFormat::fp(2, 2), FpFormat::fp4_e2m1()),
+            arch: CimArch::GrUnit,
+            adc,
+            tech: TechParams::default(),
+        }
+    }
+
+    fn operands(shape: GemmShape, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg64::seeded(seed);
+        let mut x = vec![0.0f32; shape.m * shape.k];
+        Distribution::clipped_gauss4().fill_f32(&mut rng, &mut x);
+        let mut wt = vec![0.0f32; shape.n * shape.k];
+        Distribution::max_entropy(FpFormat::fp4_e2m1()).fill_f32(&mut rng, &mut wt);
+        (x, wt)
+    }
+
+    #[test]
+    fn ragged_edges_cover_the_gemm() {
+        let shape = GemmShape { m: 3, k: 21, n: 10 };
+        let (x, wt) = operands(shape, 5);
+        let c = cfg(8, 4, AdcPolicy::PerTileSpec);
+        let res = gemm_with_engine(&RustEngine, "t", &c, shape, &x, &wt).unwrap();
+        assert_eq!(res.report.row_tiles, 3);
+        assert_eq!(res.report.col_tiles, 3);
+        let covered: u64 = res.report.tiles.iter().map(|t| t.macs).sum();
+        assert_eq!(covered, shape.macs());
+        // edge tiles are ragged
+        let last = res.report.tiles.last().unwrap();
+        assert_eq!(last.rows, 21 - 16);
+        assert_eq!(last.cols, 10 - 8);
+        // and the report's invariant checks all hold
+        let fr = res.report.to_figure_result();
+        assert!(fr.all_hold(), "{:#?}", fr.checks);
+    }
+
+    #[test]
+    fn high_resolution_adc_recovers_the_float_gemm() {
+        let shape = GemmShape { m: 2, k: 32, n: 6 };
+        let (x, wt) = operands(shape, 7);
+        let mut c = cfg(16, 4, AdcPolicy::Fixed(24.0));
+        c.fmts = FormatPair::new(FpFormat::fp(4, 6), FpFormat::fp(4, 6));
+        let res = gemm_with_engine(&RustEngine, "t", &c, shape, &x, &wt).unwrap();
+        for m in 0..shape.m {
+            for n in 0..shape.n {
+                let mut r = 0.0f64;
+                for k in 0..shape.k {
+                    r += x[m * shape.k + k] as f64 * wt[n * shape.k + k] as f64;
+                }
+                let got = res.y[m * shape.n + n];
+                assert!((got - r).abs() < 2e-2, "y[{m},{n}] = {got} vs {r}");
+            }
+        }
+        assert!(res.report.sqnr_db > 25.0, "sqnr {}", res.report.sqnr_db);
+    }
+
+    #[test]
+    fn pooled_layer_matches_sequential_bitwise() {
+        let shape = GemmShape { m: 2, k: 24, n: 9 };
+        let c = cfg(8, 4, AdcPolicy::PerTileSpec);
+        let spec = LayerSpec {
+            name: "t".into(),
+            shape,
+            cfg: c,
+            dist_x: Distribution::gauss_outliers(),
+            dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+        };
+        let campaign = CampaignConfig {
+            engine: EngineKind::Rust,
+            workers: 3,
+            seed: 9,
+            ..Default::default()
+        };
+        let pooled = run_layer(&spec, &campaign).unwrap();
+
+        // sequential reference over the same deterministic operands
+        let mut rng = Pcg64::seeded(job_seed(9, LAYER_STREAM, 0));
+        let mut x = vec![0.0f32; shape.m * shape.k];
+        spec.dist_x.fill_f32(&mut rng, &mut x);
+        let mut wt = vec![0.0f32; shape.n * shape.k];
+        spec.dist_w.fill_f32(&mut rng, &mut wt);
+        let seq = gemm_with_engine(&RustEngine, "t", &c, shape, &x, &wt).unwrap();
+
+        assert_eq!(pooled.y.len(), seq.y.len());
+        for (a, b) in pooled.y.iter().zip(&seq.y) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(pooled.report.tiles_fj.to_bits(), seq.report.tiles_fj.to_bits());
+        for (a, b) in pooled.report.tiles.iter().zip(&seq.report.tiles) {
+            assert_eq!(a.enob.to_bits(), b.enob.to_bits());
+        }
+    }
+
+    #[test]
+    fn outputs_fast_path_is_bit_identical_minus_the_reference() {
+        let shape = GemmShape { m: 2, k: 20, n: 6 };
+        let (x, wt) = operands(shape, 17);
+        let c = cfg(8, 4, AdcPolicy::PerTileSpec);
+        let full = gemm_with_engine(&RustEngine, "t", &c, shape, &x, &wt).unwrap();
+        let fast = gemm_outputs(&RustEngine, "t", &c, shape, &x, &wt).unwrap();
+        for (a, b) in full.y.iter().zip(&fast.y) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(full.report.tiles_fj.to_bits(), fast.report.tiles_fj.to_bits());
+        assert!(full.report.sqnr_db.is_finite());
+        assert!(fast.report.sqnr_db.is_nan());
+    }
+
+    #[test]
+    fn conventional_and_gr_share_the_linear_chain() {
+        // with a transparent ADC both architectures reconstruct the same
+        // dot products (the linear-chain identity at layer scale)
+        let shape = GemmShape { m: 2, k: 16, n: 4 };
+        let (x, wt) = operands(shape, 11);
+        let mut cg = cfg(8, 4, AdcPolicy::Fixed(26.0));
+        cg.fmts = FormatPair::new(FpFormat::fp(3, 4), FpFormat::fp(3, 4));
+        let mut cc = cg;
+        cc.arch = CimArch::Conventional;
+        let gr = gemm_with_engine(&RustEngine, "gr", &cg, shape, &x, &wt).unwrap();
+        let conv = gemm_with_engine(&RustEngine, "conv", &cc, shape, &x, &wt).unwrap();
+        for (a, b) in gr.y.iter().zip(&conv.y) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn per_tile_spec_tracks_data_statistics() {
+        // an LLM-like activation block needs fewer GR bits than the
+        // conventional chain at every tile (the paper's claim, per tile)
+        let shape = GemmShape { m: 4, k: 32, n: 8 };
+        let mut c = cfg(16, 4, AdcPolicy::PerTileSpec);
+        c.fmts = FormatPair::new(FpFormat::fp(4, 2), FpFormat::fp4_e2m1());
+        let (x, wt) = {
+            let mut rng = Pcg64::seeded(3);
+            let mut x = vec![0.0f32; shape.m * shape.k];
+            Distribution::gauss_outliers().fill_f32(&mut rng, &mut x);
+            let mut wt = vec![0.0f32; shape.n * shape.k];
+            Distribution::max_entropy(FpFormat::fp4_e2m1()).fill_f32(&mut rng, &mut wt);
+            (x, wt)
+        };
+        let gr = gemm_with_engine(&RustEngine, "gr", &c, shape, &x, &wt).unwrap();
+        let mut conv_cfg = c;
+        conv_cfg.arch = CimArch::Conventional;
+        let conv = gemm_with_engine(&RustEngine, "conv", &conv_cfg, shape, &x, &wt).unwrap();
+        for (g, cv) in gr.report.tiles.iter().zip(&conv.report.tiles) {
+            assert!(g.enob < cv.enob, "tile ({},{}): gr {} conv {}", g.kt, g.nt, g.enob, cv.enob);
+        }
+        // and the GR layer is cheaper end to end (gr-unit fits natively
+        // only via the global-norm wrapper here, which is charged)
+        assert!(gr.report.total_fj() < conv.report.total_fj());
+    }
+
+    #[test]
+    fn rejects_bad_operands() {
+        let shape = GemmShape { m: 2, k: 8, n: 2 };
+        let c = cfg(4, 2, AdcPolicy::Fixed(8.0));
+        let x = vec![0.0f32; shape.m * shape.k];
+        let wt = vec![0.0f32; shape.n * shape.k];
+        assert!(gemm_with_engine(&RustEngine, "t", &c, shape, &x[1..], &wt).is_err());
+        assert!(gemm_with_engine(&RustEngine, "t", &c, shape, &x, &wt[1..]).is_err());
+        let mut zero = c;
+        zero.nr = 0;
+        assert!(gemm_with_engine(&RustEngine, "t", &zero, shape, &x, &wt).is_err());
+        let empty = GemmShape { m: 0, k: 8, n: 2 };
+        assert!(gemm_with_engine(&RustEngine, "t", &c, empty, &[], &wt).is_err());
+    }
+}

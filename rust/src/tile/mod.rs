@@ -1,0 +1,476 @@
+//! Tiled array mapper — layer-scale GEMM on GR-MAC tiles (paper Sec. V
+//! outlook; the macro-level view IMAGINE and AFPR-CIM take of their
+//! arrays).
+//!
+//! The column simulator ([`crate::mac`]) prices one N_R-deep MAC; real
+//! workloads execute `[M×K]·[K×N]` GEMMs. This module closes the gap:
+//!
+//! * [`GemmShape`] / [`shapes::parse_shape`] — layer geometry, including
+//!   named transformer shapes (`mlp-up:<d_model>`, `qkv:<d_model>`, …);
+//! * [`TileConfig`] — the physical array: rows per column N_R
+//!   (accumulation depth), columns per tile N_C, formats, architecture
+//!   ([`CimArch`]), ADC policy, and the Table III technology parameters;
+//! * [`mapper`] — partitions the GEMM into a `row_tiles × col_tiles` grid
+//!   of weight-stationary tiles, routes every tile through the existing
+//!   signal chain via [`crate::runtime::Engine::simulate_into`] scratch
+//!   buffers (allocation-free in steady state), digitizes each column at
+//!   the tile's ADC resolution, and reduces partial sums across row tiles
+//!   with a digital shift-add tree;
+//! * [`LayerReport`] — per-tile ENOB + energy ([`crate::energy::arch`]
+//!   composition), layer-level totals (fJ/MAC, fJ/Op), the layer-output
+//!   SQNR against the exact float GEMM, and an ADC-resolution histogram
+//!   across tiles.
+//!
+//! Consumers: [`crate::nn::cim_forward_batch`] runs every network matmul
+//! through [`mapper::gemm_outputs`] (the no-reference fast path of
+//! [`mapper::gemm_with_engine`]); `grcim layer` and the serve
+//! layer's `layer` request evaluate named layer shapes via
+//! [`mapper::run_layer`], which shards tile jobs across the coordinator's
+//! worker pool (bit-identical results at any worker count).
+//!
+//! # Example
+//!
+//! ```
+//! use grcim::energy::{CimArch, TechParams};
+//! use grcim::formats::FpFormat;
+//! use grcim::mac::FormatPair;
+//! use grcim::runtime::RustEngine;
+//! use grcim::tile::{gemm_with_engine, AdcPolicy, GemmShape, TileConfig};
+//!
+//! // a tiny GEMM on 8x4 tiles with a generous fixed ADC
+//! let shape = GemmShape { m: 2, k: 16, n: 6 };
+//! let cfg = TileConfig {
+//!     nr: 8,
+//!     nc: 4,
+//!     fmts: FormatPair::new(FpFormat::fp(4, 6), FpFormat::fp(4, 6)),
+//!     arch: CimArch::GrUnit,
+//!     adc: AdcPolicy::Fixed(20.0),
+//!     tech: TechParams::default(),
+//! };
+//! let x = vec![0.25f32; shape.m * shape.k];
+//! let wt = vec![0.5f32; shape.n * shape.k];
+//! let res = gemm_with_engine(&RustEngine, "demo", &cfg, shape, &x, &wt)?;
+//! assert_eq!(res.y.len(), shape.m * shape.n);
+//! assert_eq!(res.report.tiles.len(), 2 * 2); // 16/8 x 6/4 tiles
+//! // a 20-bit ADC makes the tiled GEMM track the float reference closely
+//! assert!((res.y[0] - 16.0 * 0.25 * 0.5).abs() < 1e-3);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+pub mod mapper;
+pub mod shapes;
+
+pub use mapper::{gemm_outputs, gemm_with_engine, run_layer, run_layer_with_data, TileBuffers};
+pub use shapes::parse_shape;
+
+use crate::distributions::Distribution;
+use crate::energy::{energy_per_op, CimArch, EnergyBreakdown, TechParams};
+use crate::figures::fig12;
+use crate::mac::FormatPair;
+use crate::report::{FigureResult, Table};
+
+/// Largest per-tile ADC resolution the spec policy will request, bits.
+/// Degenerate tiles (e.g. an all-zero weight block whose noise floor
+/// vanishes) would otherwise solve to unbounded ENOB and infinite 4^ENOB
+/// thermal energy; physical ADCs top out far below this.
+pub const MAX_TILE_ENOB: f64 = 32.0;
+
+/// How many tiles the per-tile table of [`LayerReport::to_figure_result`]
+/// lists before truncating (layer-scale grids run to tens of thousands of
+/// tiles; the histogram and totals cover the rest).
+pub const TILE_TABLE_CAP: usize = 32;
+
+/// GEMM dimensions: `Y[M×N] = X[M×K] · W[K×N]`.
+///
+/// `M` is the batch dimension (tokens), `K` the reduction (accumulated in
+/// N_R-row chunks on the array), `N` the output width (mapped to tile
+/// columns, weight-stationary).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmShape {
+    /// Batch rows (tokens).
+    pub m: usize,
+    /// Reduction depth (input features).
+    pub k: usize,
+    /// Output columns (output features).
+    pub n: usize,
+}
+
+impl GemmShape {
+    /// Multiply-accumulates of the exact GEMM (padding excluded). Exact
+    /// for every shape [`shapes::parse_shape`] can produce (dimensions
+    /// are bounded by [`shapes::MAX_DIM`], so the product fits `u64`).
+    pub fn macs(&self) -> u64 {
+        self.m as u64 * self.k as u64 * self.n as u64
+    }
+}
+
+impl std::fmt::Display for GemmShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.m, self.k, self.n)
+    }
+}
+
+/// Per-tile ADC resolution policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdcPolicy {
+    /// Every tile digitizes at this ENOB (the CIM-inference path, where
+    /// the resolution is a design input).
+    Fixed(f64),
+    /// Solve each tile's requirement from its own aggregate via
+    /// [`crate::spec::required_enob`] (clamped to [0, [`MAX_TILE_ENOB`]]),
+    /// so data-dependent tiles get data-dependent ADCs — the layer-level
+    /// analogue of the paper's per-column spec rule.
+    PerTileSpec,
+}
+
+impl AdcPolicy {
+    /// Stable name for reports.
+    pub fn name(&self) -> String {
+        match self {
+            AdcPolicy::Fixed(e) => format!("fixed({e} b)"),
+            AdcPolicy::PerTileSpec => "per-tile spec".to_string(),
+        }
+    }
+}
+
+/// The physical array a layer is mapped onto.
+#[derive(Debug, Clone, Copy)]
+pub struct TileConfig {
+    /// Rows per column — the analog accumulation depth N_R.
+    pub nr: usize,
+    /// Columns per tile N_C (ADCs per tile; amortizes per-array logic).
+    pub nc: usize,
+    /// Input/weight formats the array quantizes to.
+    pub fmts: FormatPair,
+    /// Architecture / normalization granularity of every tile.
+    pub arch: CimArch,
+    /// Per-tile ADC resolution policy.
+    pub adc: AdcPolicy,
+    /// Technology parameters of the energy composition (Table III).
+    pub tech: TechParams,
+}
+
+impl TileConfig {
+    /// Row tiles needed for reduction depth `k` (ceil(K / N_R)).
+    pub fn row_tiles(&self, k: usize) -> usize {
+        k.div_ceil(self.nr)
+    }
+
+    /// Column tiles needed for output width `n` (ceil(N / N_C)).
+    pub fn col_tiles(&self, n: usize) -> usize {
+        n.div_ceil(self.nc)
+    }
+
+    /// Whether this configuration exceeds the native gain-ranging range
+    /// and needs the global-normalization wrapper (Sec. III-D; priced via
+    /// [`crate::energy::global_norm_energy_per_op`]).
+    pub fn needs_global_norm(&self) -> bool {
+        !fig12::native_ok(self.arch, self.fmts.x, self.fmts.w)
+    }
+}
+
+/// A named layer evaluation: geometry, array configuration, and the
+/// workload distributions that generate its operands (activations `X`,
+/// weights `W`). Consumed by [`mapper::run_layer`].
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    /// Layer label (reports only; not part of seeding or cache identity).
+    pub name: String,
+    /// GEMM dimensions.
+    pub shape: GemmShape,
+    /// Array configuration.
+    pub cfg: TileConfig,
+    /// Activation workload distribution.
+    pub dist_x: Distribution,
+    /// Weight workload distribution.
+    pub dist_w: Distribution,
+}
+
+/// Per-tile outcome: geometry, solved ADC resolution, and the energy the
+/// tile is charged.
+#[derive(Debug, Clone, Copy)]
+pub struct TileSummary {
+    /// Row-tile index (which N_R-chunk of K).
+    pub kt: usize,
+    /// Column-tile index (which N_C-chunk of N).
+    pub nt: usize,
+    /// Active rows (< N_R only on the ragged K edge).
+    pub rows: usize,
+    /// Active columns (< N_C only on the ragged N edge).
+    pub cols: usize,
+    /// Monte-Carlo samples aggregated (M × active columns).
+    pub samples: u64,
+    /// The tile's ADC resolution, bits.
+    pub enob: f64,
+    /// Per-op energy breakdown at the tile's physical N_R × N_C geometry.
+    pub energy: EnergyBreakdown,
+    /// Total energy charged to the tile over the layer's M MVMs, fJ.
+    pub energy_fj: f64,
+    /// Useful MACs the tile executes (M × rows × cols).
+    pub macs: u64,
+}
+
+/// The layer-level evaluation: per-tile outcomes plus the aggregate
+/// energy/fidelity picture. Produced by [`mapper::gemm_with_engine`] /
+/// [`mapper::run_layer`]; rendered by [`LayerReport::to_figure_result`].
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    /// Layer label.
+    pub name: String,
+    /// GEMM dimensions.
+    pub shape: GemmShape,
+    /// Array configuration the layer was mapped with.
+    pub cfg: TileConfig,
+    /// Tiles along the reduction dimension.
+    pub row_tiles: usize,
+    /// Tiles along the output dimension.
+    pub col_tiles: usize,
+    /// Per-tile outcomes, in tile-index order (`kt * col_tiles + nt`).
+    pub tiles: Vec<TileSummary>,
+    /// Σ per-tile energy, fJ (the analog array cost).
+    pub tiles_fj: f64,
+    /// Digital shift-add partial-sum reduction across row tiles, fJ.
+    pub reduction_fj: f64,
+    /// Global-normalization wrapper energy, fJ (0 when the configuration
+    /// fits the native gain-ranging range).
+    pub global_norm_fj: f64,
+    /// Layer-output SQNR against the exact float GEMM, dB.
+    pub sqnr_db: f64,
+}
+
+impl LayerReport {
+    /// Total layer energy: tiles + partial-sum reduction + (when needed)
+    /// the global-normalization wrapper, fJ.
+    pub fn total_fj(&self) -> f64 {
+        self.tiles_fj + self.reduction_fj + self.global_norm_fj
+    }
+
+    /// Energy per useful MAC (padding excluded), fJ.
+    pub fn fj_per_mac(&self) -> f64 {
+        self.total_fj() / self.shape.macs() as f64
+    }
+
+    /// Energy per operation (one MAC = two ops, the paper's convention).
+    pub fn fj_per_op(&self) -> f64 {
+        self.fj_per_mac() / 2.0
+    }
+
+    /// Smallest per-tile ADC resolution, bits.
+    pub fn enob_min(&self) -> f64 {
+        self.tiles.iter().map(|t| t.enob).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Largest per-tile ADC resolution, bits.
+    pub fn enob_max(&self) -> f64 {
+        self.tiles.iter().map(|t| t.enob).fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Mean per-tile ADC resolution, bits.
+    pub fn enob_mean(&self) -> f64 {
+        self.tiles.iter().map(|t| t.enob).sum::<f64>() / self.tiles.len() as f64
+    }
+
+    /// ADC-resolution histogram across tiles: (floor(ENOB), tile count),
+    /// ascending.
+    pub fn enob_histogram(&self) -> Vec<(i64, usize)> {
+        let mut bins = std::collections::BTreeMap::new();
+        for t in &self.tiles {
+            *bins.entry(t.enob.floor() as i64).or_insert(0usize) += 1;
+        }
+        bins.into_iter().collect()
+    }
+
+    /// Per-component energy totals over all tiles, fJ (the layer-level
+    /// Fig. 12 pie).
+    pub fn component_totals(&self) -> [(&'static str, f64); 6] {
+        let mvm_ops = (2 * self.cfg.nr * self.cfg.nc * self.shape.m) as f64;
+        let mut totals = EnergyBreakdown::default().components();
+        for t in &self.tiles {
+            for (slot, (_, v)) in totals.iter_mut().zip(t.energy.components()) {
+                slot.1 += v * mvm_ops;
+            }
+        }
+        totals
+    }
+
+    /// Render the report as tables + invariant checks (the `grcim layer`
+    /// output and the serve layer's `layer` response).
+    pub fn to_figure_result(&self) -> FigureResult {
+        let mut fr = FigureResult::new("layer");
+
+        let mut summary = Table::new("layer summary", &["metric", "value"]);
+        let mut kv = |k: &str, v: String| summary.row(vec![k.into(), v]);
+        kv("layer", self.name.clone());
+        kv("shape (MxKxN)", self.shape.to_string());
+        kv("macs", self.shape.macs().to_string());
+        kv("nr", self.cfg.nr.to_string());
+        kv("nc", self.cfg.nc.to_string());
+        kv("arch", self.cfg.arch.name().into());
+        kv("fmt_x", self.cfg.fmts.x.to_string());
+        kv("fmt_w", self.cfg.fmts.w.to_string());
+        kv("adc_policy", self.cfg.adc.name());
+        kv("tiles", format!("{} ({}x{})", self.tiles.len(), self.row_tiles, self.col_tiles));
+        kv("enob_min", Table::f(self.enob_min()));
+        kv("enob_mean", Table::f(self.enob_mean()));
+        kv("enob_max", Table::f(self.enob_max()));
+        kv("layer_sqnr_db", Table::f(self.sqnr_db));
+        kv("tiles_fj", Table::f(self.tiles_fj));
+        kv("reduction_fj", Table::f(self.reduction_fj));
+        kv("global_norm_fj", Table::f(self.global_norm_fj));
+        kv("needs_global_norm", if self.cfg.needs_global_norm() { "yes" } else { "no" }.into());
+        kv("total_fj", Table::f(self.total_fj()));
+        kv("fj_per_mac", Table::f(self.fj_per_mac()));
+        kv("fj_per_op", Table::f(self.fj_per_op()));
+        fr.tables.push(summary);
+
+        let mut comp = Table::new("energy components", &["component", "fj", "pct"]);
+        let total = self.total_fj().max(1e-300);
+        for (name, v) in self.component_totals() {
+            comp.row(vec![name.into(), Table::f(v), Table::f(100.0 * v / total)]);
+        }
+        comp.row(vec![
+            "reduction_tree".into(),
+            Table::f(self.reduction_fj),
+            Table::f(100.0 * self.reduction_fj / total),
+        ]);
+        comp.row(vec![
+            "global_norm".into(),
+            Table::f(self.global_norm_fj),
+            Table::f(100.0 * self.global_norm_fj / total),
+        ]);
+        fr.tables.push(comp);
+
+        let mut hist = Table::new("adc histogram", &["enob_bin", "tiles", "pct"]);
+        for (bin, count) in self.enob_histogram() {
+            hist.row(vec![
+                format!("[{bin},{})", bin + 1),
+                count.to_string(),
+                Table::f(100.0 * count as f64 / self.tiles.len() as f64),
+            ]);
+        }
+        fr.tables.push(hist);
+
+        let shown = self.tiles.len().min(TILE_TABLE_CAP);
+        let mut per_tile = Table::new(
+            format!("tiles (first {shown} of {})", self.tiles.len()),
+            &["kt", "nt", "rows", "cols", "enob", "adc_fj", "tile_fj", "macs"],
+        );
+        let mvm_ops = (2 * self.cfg.nr * self.cfg.nc * self.shape.m) as f64;
+        for t in self.tiles.iter().take(TILE_TABLE_CAP) {
+            per_tile.row(vec![
+                t.kt.to_string(),
+                t.nt.to_string(),
+                t.rows.to_string(),
+                t.cols.to_string(),
+                Table::f(t.enob),
+                Table::f(t.energy.adc * mvm_ops),
+                Table::f(t.energy_fj),
+                t.macs.to_string(),
+            ]);
+        }
+        fr.tables.push(per_tile);
+
+        // ---- invariant checks (distribution-independent) ----
+        // the acceptance rule: the layer's tile total must reconcile with
+        // independent energy::arch evaluations at the reported per-tile
+        // resolutions
+        let independent: f64 = self
+            .tiles
+            .iter()
+            .map(|t| {
+                let cfg = &self.cfg;
+                energy_per_op(cfg.arch, cfg.fmts, cfg.nr, cfg.nc, t.enob, &cfg.tech).total()
+                    * mvm_ops
+            })
+            .sum();
+        let rel = (independent - self.tiles_fj).abs() / self.tiles_fj.max(1e-300);
+        fr.check(
+            "per-tile energy totals reconcile with energy::arch",
+            "sum of independent per-tile evaluations",
+            format!("rel diff {rel:.3e}"),
+            rel < 1e-9,
+        );
+        let covered: u64 = self.tiles.iter().map(|t| t.macs).sum();
+        fr.check(
+            "tile grid covers the GEMM exactly once",
+            format!("{} macs", self.shape.macs()),
+            format!("{covered} macs"),
+            covered == self.shape.macs(),
+        );
+        let enob_ok = self
+            .tiles
+            .iter()
+            .all(|t| t.enob.is_finite() && (0.0..=MAX_TILE_ENOB).contains(&t.enob));
+        fr.check(
+            "per-tile ADC resolutions are finite and physical",
+            format!("0 <= enob <= {MAX_TILE_ENOB}"),
+            format!("min {} max {}", Table::f(self.enob_min()), Table::f(self.enob_max())),
+            enob_ok,
+        );
+        fr.check(
+            "layer SQNR and energy totals are finite",
+            "finite",
+            format!("sqnr {} dB, total {} fJ", Table::f(self.sqnr_db), Table::f(self.total_fj())),
+            self.sqnr_db.is_finite() && self.total_fj().is_finite(),
+        );
+        fr
+    }
+}
+
+/// A completed layer evaluation: the report plus the digitized GEMM
+/// output `Y[M×N]` (row-major), in the operands' scale.
+#[derive(Debug, Clone)]
+pub struct LayerResult {
+    /// Per-tile and layer-level evaluation.
+    pub report: LayerReport,
+    /// The digitized GEMM output, row-major `[M][N]`.
+    pub y: Vec<f64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::FpFormat;
+
+    fn small_cfg() -> TileConfig {
+        TileConfig {
+            nr: 8,
+            nc: 4,
+            fmts: FormatPair::new(FpFormat::fp(2, 2), FpFormat::fp4_e2m1()),
+            arch: CimArch::GrUnit,
+            adc: AdcPolicy::PerTileSpec,
+            tech: TechParams::default(),
+        }
+    }
+
+    #[test]
+    fn shape_display_and_macs() {
+        let s = GemmShape { m: 2, k: 16, n: 6 };
+        assert_eq!(s.to_string(), "2x16x6");
+        assert_eq!(s.macs(), 192);
+    }
+
+    #[test]
+    fn tile_grid_counts() {
+        let cfg = small_cfg();
+        assert_eq!(cfg.row_tiles(16), 2);
+        assert_eq!(cfg.row_tiles(17), 3);
+        assert_eq!(cfg.col_tiles(4), 1);
+        assert_eq!(cfg.col_tiles(5), 2);
+    }
+
+    #[test]
+    fn native_range_gate() {
+        // FP(2,2) x FP4 fits the 6-bit gain range on unit normalization
+        assert!(!small_cfg().needs_global_norm());
+        let mut wide = small_cfg();
+        wide.fmts = FormatPair::new(FpFormat::fp(4, 2), FpFormat::fp4_e2m1());
+        assert!(wide.needs_global_norm());
+    }
+
+    #[test]
+    fn adc_policy_names() {
+        assert_eq!(AdcPolicy::Fixed(8.0).name(), "fixed(8 b)");
+        assert_eq!(AdcPolicy::PerTileSpec.name(), "per-tile spec");
+    }
+}

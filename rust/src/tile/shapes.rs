@@ -1,0 +1,133 @@
+//! Named layer shapes — the transformer GEMMs the trace pipeline (PR 3)
+//! and the paper's LLM motivation care about, resolvable from one CLI /
+//! wire string.
+
+use super::GemmShape;
+use anyhow::{bail, Context, Result};
+
+/// The named shape kinds `parse_shape` accepts (plus `gemm:<M>x<K>x<N>`).
+pub const NAMED_SHAPES: &[&str] = &["mlp-up", "mlp-down", "qkv", "attn-out"];
+
+/// Largest accepted single GEMM dimension (2^20). Bounds every parsed
+/// shape so `M·K·N` fits a `u64` without overflow (2^60 max) — the
+/// serve layer's MAC cap relies on [`GemmShape::macs`] not wrapping —
+/// and so operand-slab sizes stay well inside `usize`.
+pub const MAX_DIM: usize = 1 << 20;
+
+fn scaled(d: usize, factor: usize, what: &str) -> Result<usize> {
+    d.checked_mul(factor).with_context(|| format!("{what}: d_model {d} is too large"))
+}
+
+fn bounded(shape: GemmShape, s: &str) -> Result<GemmShape> {
+    if shape.m > MAX_DIM || shape.k > MAX_DIM || shape.n > MAX_DIM {
+        bail!("shape '{s}': dimensions must be <= {MAX_DIM}");
+    }
+    Ok(shape)
+}
+
+/// Parse a `--shape` / wire `shape` value into a [`GemmShape`]:
+///
+/// | value | GEMM |
+/// |---|---|
+/// | `mlp-up:<d>` | `[tokens×d]·[d×4d]` (FFN up-projection) |
+/// | `mlp-down:<d>` | `[tokens×4d]·[4d×d]` (FFN down-projection) |
+/// | `qkv:<d>` | `[tokens×d]·[d×3d]` (fused attention QKV) |
+/// | `attn-out:<d>` | `[tokens×d]·[d×d]` (attention output projection) |
+/// | `gemm:<M>x<K>x<N>` | explicit dimensions (`tokens` is ignored) |
+///
+/// `tokens` is the batch dimension M of the named shapes.
+pub fn parse_shape(s: &str, tokens: usize) -> Result<GemmShape> {
+    if tokens == 0 {
+        bail!("tokens must be positive");
+    }
+    let (kind, arg) = s.split_once(':').with_context(|| {
+        format!(
+            "shape '{s}' must be '<kind>:<d_model>' ({}) or 'gemm:<M>x<K>x<N>'",
+            NAMED_SHAPES.join("|")
+        )
+    })?;
+    if kind == "gemm" {
+        let dims: Vec<usize> = arg
+            .split('x')
+            .map(|d| {
+                d.parse::<usize>()
+                    .with_context(|| format!("shape '{s}': '{d}' is not a dimension"))
+            })
+            .collect::<Result<_>>()?;
+        let &[m, k, n] = dims.as_slice() else {
+            bail!("shape '{s}': gemm needs exactly three dimensions, 'gemm:<M>x<K>x<N>'");
+        };
+        if m == 0 || k == 0 || n == 0 {
+            bail!("shape '{s}': dimensions must be positive");
+        }
+        return bounded(GemmShape { m, k, n }, s);
+    }
+    let d: usize = arg
+        .parse()
+        .with_context(|| format!("shape '{s}': '{arg}' is not a d_model"))?;
+    if d == 0 {
+        bail!("shape '{s}': d_model must be positive");
+    }
+    let (k, n) = match kind {
+        "mlp-up" => (d, scaled(d, 4, s)?),
+        "mlp-down" => (scaled(d, 4, s)?, d),
+        "qkv" => (d, scaled(d, 3, s)?),
+        "attn-out" => (d, d),
+        other => bail!(
+            "unknown shape kind '{other}' ({}, or gemm:<M>x<K>x<N>)",
+            NAMED_SHAPES.join("|")
+        ),
+    };
+    bounded(GemmShape { m: tokens, k, n }, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn named_shapes_resolve() {
+        assert_eq!(parse_shape("mlp-up:64", 4).unwrap(), GemmShape { m: 4, k: 64, n: 256 });
+        assert_eq!(parse_shape("mlp-down:64", 2).unwrap(), GemmShape { m: 2, k: 256, n: 64 });
+        assert_eq!(parse_shape("qkv:128", 1).unwrap(), GemmShape { m: 1, k: 128, n: 384 });
+        assert_eq!(parse_shape("attn-out:32", 8).unwrap(), GemmShape { m: 8, k: 32, n: 32 });
+    }
+
+    #[test]
+    fn explicit_gemm_ignores_tokens() {
+        assert_eq!(parse_shape("gemm:3x40x40", 99).unwrap(), GemmShape { m: 3, k: 40, n: 40 });
+    }
+
+    #[test]
+    fn malformed_shapes_are_clean_errors() {
+        for bad in [
+            "mlp-up",          // no dims
+            "mlp-up:",         // empty d
+            "mlp-up:abc",      // non-numeric
+            "mlp-up:0",        // zero d
+            "conv2d:64",       // unknown kind
+            "gemm:4x8",        // missing dim
+            "gemm:4x8x0",      // zero dim
+            "gemm:4x8x8x8",    // extra dim
+        ] {
+            assert!(parse_shape(bad, 4).is_err(), "{bad}");
+        }
+        // tokens must be positive for named shapes
+        assert!(parse_shape("mlp-up:64", 0).is_err());
+    }
+
+    #[test]
+    fn oversized_dimensions_are_rejected_not_wrapped() {
+        // a crafted gemm: shape must not wrap GemmShape::macs past the
+        // serve layer's MAC cap
+        let big = (MAX_DIM + 1).to_string();
+        assert!(parse_shape(&format!("gemm:{big}x8x8"), 4).is_err());
+        assert!(parse_shape(&format!("gemm:8x{big}x8"), 4).is_err());
+        assert!(parse_shape(&format!("gemm:8x8x{big}"), 4).is_err());
+        assert!(parse_shape("gemm:4294967296x4294967296x4294967296", 4).is_err());
+        assert!(parse_shape(&format!("mlp-up:{big}"), 4).is_err());
+        assert!(parse_shape("mlp-up:64", MAX_DIM + 1).is_err());
+        // the boundary itself is fine
+        assert!(parse_shape(&format!("gemm:1x1x{MAX_DIM}"), 4).is_ok());
+    }
+}

@@ -184,6 +184,7 @@ fn nn_e2e_through_pjrt_tiles() {
         arch: Arch::GrUnit,
         enob: 9.0,
         nr: 32,
+        nc: 32,
     };
     let acc = cim_accuracy(&mlp, engine.as_ref(), &cim, &xs[512..], &ys[512..])
         .unwrap();

@@ -394,6 +394,86 @@ fn golden_workload_empirical() {
 }
 
 // ---------------------------------------------------------------------
+// Tile mapper — layer-scale GEMM on GR-MAC tiles (rng -> operands ->
+// per-tile column MACs -> spec-solved ADCs -> digitized reduction ->
+// energy::arch totals), pinned for three configurations: native gr-unit,
+// conventional, and a wide format that needs global normalization.
+// ---------------------------------------------------------------------
+
+const LAYER_SEED: u64 = 42;
+const LAYER_SHAPE: grcim::tile::GemmShape =
+    grcim::tile::GemmShape { m: 4, k: 40, n: 40 };
+const LAYER_NR: usize = 16;
+const LAYER_NC: usize = 16;
+
+#[test]
+fn golden_layer_gemm() {
+    use grcim::coordinator::CampaignConfig;
+    use grcim::distributions::Distribution;
+    use grcim::energy::{CimArch, TechParams};
+    use grcim::formats::FpFormat;
+    use grcim::mac::FormatPair;
+    use grcim::runtime::EngineKind;
+    use grcim::tile::{run_layer, AdcPolicy, LayerSpec, TileConfig};
+
+    let mut g = Golden::new("layer_gemm", 1e-6);
+    let fp4 = FpFormat::fp4_e2m1();
+    let configs = [
+        ("gru", FpFormat::fp(2, 2), CimArch::GrUnit),
+        ("conv", FpFormat::fp(2, 2), CimArch::Conventional),
+        ("wide", FpFormat::fp(4, 2), CimArch::GrUnit),
+    ];
+    for (tag, fx, arch) in configs {
+        let spec = LayerSpec {
+            name: tag.to_string(),
+            shape: LAYER_SHAPE,
+            cfg: TileConfig {
+                nr: LAYER_NR,
+                nc: LAYER_NC,
+                fmts: FormatPair::new(fx, fp4),
+                arch,
+                adc: AdcPolicy::PerTileSpec,
+                tech: TechParams::default(),
+            },
+            dist_x: Distribution::gauss_outliers(),
+            dist_w: Distribution::max_entropy(fp4),
+        };
+        let campaign = CampaignConfig {
+            engine: EngineKind::Rust,
+            workers: 2,
+            seed: LAYER_SEED,
+            ..Default::default()
+        };
+        let res = run_layer(&spec, &campaign).unwrap();
+        let r = &res.report;
+        assert_eq!(r.tiles.len(), 9, "3x3 tile grid");
+        for (i, t) in r.tiles.iter().enumerate() {
+            g.push(format!("{tag}_tile{i}_enob"), t.enob);
+        }
+        g.push(format!("{tag}_tiles_fj"), r.tiles_fj);
+        g.push(format!("{tag}_reduction_fj"), r.reduction_fj);
+        g.push(format!("{tag}_global_norm_fj"), r.global_norm_fj);
+        g.push(format!("{tag}_total_fj"), r.total_fj());
+        g.push(format!("{tag}_fj_per_mac"), r.fj_per_mac());
+        g.push(format!("{tag}_sqnr_db"), r.sqnr_db);
+        g.push(
+            format!("{tag}_y_abs_sum"),
+            res.y.iter().map(|v| v.abs()).sum::<f64>(),
+        );
+        g.push(
+            format!("{tag}_y_sq_sum"),
+            res.y.iter().map(|v| v * v).sum::<f64>(),
+        );
+        g.push(format!("{tag}_enob_mean"), r.enob_mean());
+        // the report's own invariant checks (incl. the energy::arch
+        // reconciliation the acceptance criteria pin) must hold
+        let fr = r.to_figure_result();
+        assert!(fr.all_hold(), "{tag}: {:#?}", fr.checks);
+    }
+    g.check();
+}
+
+// ---------------------------------------------------------------------
 // Determinism + harness self-tests.
 // ---------------------------------------------------------------------
 

@@ -423,3 +423,127 @@ fn prop_campaign_seeding_is_scheduling_invariant() {
         }
     }
 }
+
+#[test]
+fn prop_tiled_gemm_with_high_resolution_adc_matches_float_reference() {
+    use grcim::rng::Pcg64;
+    use grcim::runtime::RustEngine;
+    use grcim::tile::{gemm_with_engine, AdcPolicy, GemmShape, TileConfig};
+
+    // max-entropy operands are exactly representable, so with a
+    // near-transparent ADC the tiled GEMM must reproduce the float
+    // matmul reference to reduction-tree rounding (the satellite's
+    // tile-mapper correctness property)
+    let mut rng = Pcg64::seeded(0x71C0);
+    for case in 0..12 {
+        let shape = GemmShape {
+            m: 1 + rng.below(4) as usize,
+            k: 1 + rng.below(48) as usize,
+            n: 1 + rng.below(12) as usize,
+        };
+        let nr = [4usize, 8, 16, 32][rng.below(4) as usize];
+        let nc = [2usize, 4, 8][rng.below(3) as usize];
+        let fmts = FormatPair::new(FpFormat::fp(2, 3), FpFormat::fp4_e2m1());
+        let cfg = TileConfig {
+            nr,
+            nc,
+            fmts,
+            arch: if case % 2 == 0 { CimArch::GrUnit } else { CimArch::Conventional },
+            adc: AdcPolicy::Fixed(40.0),
+            tech: TechParams::default(),
+        };
+        let mut x = vec![0.0f32; shape.m * shape.k];
+        Distribution::max_entropy(fmts.x).fill_f32(&mut rng, &mut x);
+        let mut wt = vec![0.0f32; shape.n * shape.k];
+        Distribution::max_entropy(fmts.w).fill_f32(&mut rng, &mut wt);
+        let res = gemm_with_engine(&RustEngine, "prop", &cfg, shape, &x, &wt).unwrap();
+        for m in 0..shape.m {
+            for n in 0..shape.n {
+                let mut r = 0.0f64;
+                for k in 0..shape.k {
+                    r += x[m * shape.k + k] as f64 * wt[n * shape.k + k] as f64;
+                }
+                let got = res.y[m * shape.n + n];
+                assert!(
+                    (got - r).abs() < 1e-9,
+                    "case {case} {shape} nr={nr} nc={nc}: y[{m},{n}] = {got} vs {r}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_tile_layer_bit_identical_across_1_2_4_workers() {
+    use grcim::coordinator::CampaignConfig;
+    use grcim::runtime::EngineKind;
+    use grcim::tile::{run_layer, AdcPolicy, GemmShape, LayerSpec, TileConfig};
+
+    // the satellite's second property: layer aggregates (per-tile ENOBs,
+    // energy totals, outputs) are bit-identical at any worker count
+    let spec = LayerSpec {
+        name: "det".into(),
+        shape: GemmShape { m: 3, k: 40, n: 18 },
+        cfg: TileConfig {
+            nr: 16,
+            nc: 8,
+            fmts: FormatPair::new(FpFormat::fp(3, 2), FpFormat::fp4_e2m1()),
+            arch: CimArch::GrRow,
+            adc: AdcPolicy::PerTileSpec,
+            tech: TechParams::default(),
+        },
+        dist_x: Distribution::gauss_outliers(),
+        dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+    };
+    let mut reference: Option<(Vec<u64>, Vec<u64>, u64)> = None;
+    for workers in [1usize, 2, 4] {
+        let cfg = CampaignConfig {
+            engine: EngineKind::Rust,
+            workers,
+            seed: 0x7AB5,
+            ..Default::default()
+        };
+        let res = run_layer(&spec, &cfg).unwrap();
+        let y_bits: Vec<u64> = res.y.iter().map(|v| v.to_bits()).collect();
+        let enob_bits: Vec<u64> =
+            res.report.tiles.iter().map(|t| t.enob.to_bits()).collect();
+        let bits = (y_bits, enob_bits, res.report.total_fj().to_bits());
+        match &reference {
+            None => reference = Some(bits),
+            Some(r) => assert_eq!(r, &bits, "workers={workers} changed the layer"),
+        }
+    }
+}
+
+#[test]
+fn prop_tiled_outputs_independent_of_column_grouping() {
+    use grcim::rng::Pcg64;
+    use grcim::runtime::RustEngine;
+    use grcim::tile::{gemm_with_engine, AdcPolicy, GemmShape, TileConfig};
+
+    // column MACs are independent, so N_C only regroups energy
+    // amortization — the digitized outputs must not move by a bit
+    let shape = GemmShape { m: 2, k: 24, n: 10 };
+    let mut rng = Pcg64::seeded(0x9C);
+    let mut x = vec![0.0f32; shape.m * shape.k];
+    Distribution::clipped_gauss4().fill_f32(&mut rng, &mut x);
+    let mut wt = vec![0.0f32; shape.n * shape.k];
+    Distribution::clipped_gauss4().fill_f32(&mut rng, &mut wt);
+    let mut reference: Option<Vec<u64>> = None;
+    for nc in [1usize, 3, 5, 10, 16] {
+        let cfg = TileConfig {
+            nr: 8,
+            nc,
+            fmts: FormatPair::new(FpFormat::fp(3, 2), FpFormat::fp4_e2m1()),
+            arch: CimArch::GrUnit,
+            adc: AdcPolicy::Fixed(7.0),
+            tech: TechParams::default(),
+        };
+        let res = gemm_with_engine(&RustEngine, "nc", &cfg, shape, &x, &wt).unwrap();
+        let bits: Vec<u64> = res.y.iter().map(|v| v.to_bits()).collect();
+        match &reference {
+            None => reference = Some(bits),
+            Some(r) => assert_eq!(r, &bits, "nc={nc} moved the outputs"),
+        }
+    }
+}

@@ -1,0 +1,86 @@
+#!/usr/bin/env python3
+"""Validate a benchkit JSON report (e.g. BENCH_hotpath.json) against the
+stable schema `rust/src/benchkit.rs::Bench::to_json` emits:
+
+    {
+      "mode": "quick" | "full",
+      "measurements": [
+        {"name": str, "reps": int > 0,
+         "min_s": num > 0, "median_s": num > 0, "mean_s": num > 0,
+         "items_per_s": num > 0 | null},
+        ...
+      ]
+    }
+
+CI runs the hotpath bench once per push and gates on this script, so a
+schema regression (or a bench that silently wrote nothing) fails the
+pipeline instead of corrupting the perf trajectory. The committed
+pre-first-run placeholder ({"mode": "pending"}) is rejected too — the CI
+step validates the freshly written report, not the placeholder.
+
+Usage: python3 tools/check_bench.py BENCH_hotpath.json
+"""
+
+import json
+import sys
+
+NUMERIC_FIELDS = ("min_s", "median_s", "mean_s")
+
+
+def fail(msg):
+    print(f"check_bench: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"{path}: {e}")
+    if not isinstance(doc, dict):
+        fail(f"{path}: top level must be an object")
+    mode = doc.get("mode")
+    if mode not in ("quick", "full"):
+        fail(f"{path}: mode must be 'quick' or 'full', got {mode!r}")
+    ms = doc.get("measurements")
+    if not isinstance(ms, list) or not ms:
+        fail(f"{path}: 'measurements' must be a non-empty array")
+    names = set()
+    for i, m in enumerate(ms):
+        where = f"{path}: measurements[{i}]"
+        if not isinstance(m, dict):
+            fail(f"{where}: must be an object")
+        name = m.get("name")
+        if not isinstance(name, str) or not name:
+            fail(f"{where}: 'name' must be a non-empty string")
+        if name in names:
+            fail(f"{where}: duplicate name {name!r}")
+        names.add(name)
+        reps = m.get("reps")
+        if not isinstance(reps, (int, float)) or reps != int(reps) or reps < 1:
+            fail(f"{where} ({name}): 'reps' must be a positive integer")
+        for field in NUMERIC_FIELDS:
+            v = m.get(field)
+            if not isinstance(v, (int, float)) or isinstance(v, bool) or v <= 0:
+                fail(f"{where} ({name}): '{field}' must be a positive number")
+        if not m["min_s"] <= m["median_s"]:
+            fail(f"{where} ({name}): min_s > median_s")
+        thr = m.get("items_per_s", "missing")
+        if thr == "missing":
+            fail(f"{where} ({name}): 'items_per_s' missing (number or null)")
+        if thr is not None and (
+            not isinstance(thr, (int, float)) or isinstance(thr, bool) or thr <= 0
+        ):
+            fail(f"{where} ({name}): 'items_per_s' must be positive or null")
+    print(f"check_bench: OK: {path} ({len(ms)} measurements, {mode} mode)")
+
+
+def main():
+    if len(sys.argv) != 2:
+        fail("usage: check_bench.py <bench-report.json>")
+    check(sys.argv[1])
+
+
+if __name__ == "__main__":
+    main()

@@ -479,6 +479,239 @@ def run_experiment(spec, campaign_seed, preferred_batch=2048):
     return agg
 
 
+# -------------------------------------------------------------- energy --
+# Twin of energy::TechParams (Table III defaults) + energy::arch.
+
+C_GATE = 0.7
+K1 = 100.0
+K2 = 0.001
+K3 = 50.0
+VDD = 0.9
+V2 = VDD * VDD
+
+
+def e_adc(enob):
+    return (K1 * enob + K2 * 4.0 ** enob) * V2
+
+
+def e_dac(bits):
+    return K3 * bits * V2
+
+
+def e_fa():
+    return 6.0 * C_GATE * V2
+
+
+def e_adder_tree(fa_count):
+    return e_fa() * fa_count
+
+
+def e_mult(na, nb):
+    return (1.5 * C_GATE * V2 + e_fa()) * na * nb
+
+
+def e_decoder(n_in, n_out):
+    return (0.5 * n_in + n_out + 1.0) * C_GATE * V2
+
+
+def e_cell_array(n_sw, nr, nc):
+    return 0.5 * C_GATE * V2 * n_sw * float(nr * nc)
+
+
+def adder_tree_fa_count(n, width):
+    count = 0.0
+    remaining = n
+    stage = 1.0
+    while remaining > 1:
+        pairs = remaining // 2
+        count += float(pairs) * (width + stage - 1.0)
+        remaining = remaining // 2 + remaining % 2
+        stage += 1.0
+    return count
+
+
+def exponent_field_bits(e_max):
+    return max(math.log2(e_max + 1.0), 1.0)
+
+
+def energy_per_op(arch, fx, fw, nr, nc, enob):
+    """Twin of energy::arch::energy_per_op — identical formula order.
+
+    Returns the six components; total must be summed in the Rust
+    EnergyBreakdown::total() order (adc, dac, cells, exp_logic, tree,
+    norm_mult)."""
+    ops = 2.0 * float(nr * nc)
+    mant_x = fx.n_m + 1.0
+    mant_w = fw.n_m + 1.0
+    aligned_x = mant_x + (fx.e_max - 1.0)
+    aligned_w = mant_w + (fw.e_max - 1.0)
+    ebits_x = exponent_field_bits(fx.e_max)
+    ebits_w = exponent_field_bits(fw.e_max)
+    b = {"adc": float(nc) * e_adc(enob) / ops, "dac": 0.0, "cells": 0.0,
+         "exp_logic": 0.0, "tree": 0.0, "norm_mult": 0.0}
+    if arch == "conventional":
+        b["dac"] = float(nr) * e_dac(aligned_x) / ops
+        b["cells"] = e_cell_array(aligned_w, nr, nc) / ops
+    elif arch == "gr-unit":
+        b["dac"] = float(nr) * e_dac(mant_x) / ops
+        b["cells"] = e_cell_array(mant_w + 1.0, nr, nc) / ops
+        sum_levels = max(fx.e_max + fw.e_max - 1.0, 1.0)
+        sum_bits = max(math.log2(sum_levels), 1.0) + 1.0
+        fa_per_cell = max(ebits_x, ebits_w) + 1.0
+        cell_logic = e_fa() * fa_per_cell + e_decoder(sum_bits, sum_levels)
+        b["exp_logic"] = float(nr * nc) * cell_logic / ops
+        b["tree"] = float(nc) * e_adder_tree(
+            adder_tree_fa_count(nr, sum_levels)) / ops
+        s_bits = sum_levels + math.log2(float(nr))
+        b["norm_mult"] = float(nc) * e_mult(enob, s_bits) / ops
+    elif arch == "gr-row":
+        b["dac"] = float(nr) * e_dac(mant_x) / ops
+        b["cells"] = e_cell_array(aligned_w + 1.0, nr, nc) / ops
+        levels = max(fx.e_max, 1.0)
+        b["exp_logic"] = float(nr) * e_decoder(ebits_x, levels) / ops
+        b["tree"] = e_adder_tree(adder_tree_fa_count(nr, levels)) / ops
+        s_bits = levels + math.log2(float(nr))
+        b["norm_mult"] = float(nc) * e_mult(enob, s_bits) / ops
+    else:
+        raise ValueError(arch)
+    return b
+
+
+def energy_total(b):
+    # the exact EnergyBreakdown::total() addition order
+    return (b["adc"] + b["dac"] + b["cells"] + b["exp_logic"] + b["tree"]
+            + b["norm_mult"])
+
+
+def global_norm_energy_per_op(fx, nr, nc):
+    ops = 2.0 * float(nr * nc)
+    ebits = exponent_field_bits(fx.e_max)
+    maxfind = e_adder_tree(adder_tree_fa_count(nr, ebits))
+    per_input = e_fa() * ebits + e_decoder(ebits, max(fx.e_max, 1.0))
+    return (maxfind + float(nr) * per_input) / ops
+
+
+def native_ok(arch, fx, fw):
+    """Twin of figures::fig12::native_ok (6-bit native gain range)."""
+    if arch == "conventional":
+        return True
+    if arch == "gr-unit":
+        return (fx.e_max - 1.0) + (fw.e_max - 1.0) <= 6.0
+    if arch == "gr-row":
+        return fx.e_max - 1.0 <= 6.0
+    raise ValueError(arch)
+
+
+# ---------------------------------------------------------------- tile --
+# Twin of tile::mapper — the layer-scale GEMM on GR-MAC tiles.
+
+TILE_STREAM = 0x711E  # tile::mapper::LAYER_STREAM
+MAX_TILE_ENOB = 32.0
+
+
+def exp2f(t):
+    """Twin of formats::exp2 for possibly fractional t."""
+    ti = math.floor(t)
+    fr = t - ti
+    ip = math.ldexp(1.0, int(ti))
+    return ip if fr == 0.0 else ip * 2.0 ** fr
+
+
+def adc_quantize(v, enob):
+    """Twin of mac::adc_quantize (ideal mid-rise ADC over [-1, 1])."""
+    delta = 2.0 / exp2f(enob)
+    q = math.floor(v / delta + 0.5) * delta
+    return min(max(q, -1.0), 1.0)
+
+
+def run_layer_twin(shape, nr, nc, fx, fw, arch, dist_x, dist_w, seed):
+    """Twin of tile::mapper::run_layer: operand generation (stream
+    TILE_STREAM of the campaign seed), kt-major tile grid, per-tile
+    spec-solved ADC (clamped to [0, 32]), digitization, ascending-kt
+    partial-sum reduction, and the energy totals."""
+    m_, k_, n_ = shape
+    rng = Pcg64(job_seed(seed, TILE_STREAM, 0))
+    x = fill_f32(dist_x, rng, m_ * k_)
+    wt = fill_f32(dist_w, rng, n_ * k_)
+    row_tiles = -(-k_ // nr)
+    col_tiles = -(-n_ // nc)
+    spec_arch = {"conventional": "conv", "gr-unit": "unit", "gr-row": "row"}[arch]
+    mvm_ops = float(2 * nr * nc * m_)
+
+    y = [0.0] * (m_ * n_)
+    tiles = []
+    tiles_fj = 0.0
+    for kt in range(row_tiles):
+        for nt in range(col_tiles):
+            k0 = kt * nr
+            rows = min(k_ - k0, nr)
+            n0 = nt * nc
+            cols = min(n_ - n0, nc)
+            xs = []
+            ws = []
+            for mi in range(m_):
+                for j in range(cols):
+                    xs.extend(x[mi * k_ + k0:mi * k_ + k0 + rows])
+                    xs.extend([0.0] * (nr - rows))
+                    ws.extend(wt[(n0 + j) * k_ + k0:(n0 + j) * k_ + k0 + rows])
+                    ws.extend([0.0] * (nr - rows))
+            batch = simulate_column(xs, ws, nr, fx, fw)
+            agg = ColumnAgg(nr)
+            agg.push_batch(batch)
+            enob = min(max(required_enob(agg, spec_arch), 0.0), MAX_TILE_ENOB)
+            for mi in range(m_):
+                for j in range(cols):
+                    s = mi * cols + j
+                    if arch == "conventional":
+                        v, g = batch["v_conv"][s], batch["g_conv"][s]
+                    else:
+                        v, g = batch["v_gr"][s], batch["s_sum"][s] / float(nr)
+                    y[mi * n_ + n0 + j] += adc_quantize(v, enob) * g * float(nr)
+            e_fj = energy_total(energy_per_op(arch, fx, fw, nr, nc, enob)) * mvm_ops
+            tiles.append({"enob": enob, "fj": e_fj})
+            tiles_fj += e_fj
+
+    sig = 0.0
+    err = 0.0
+    for mi in range(m_):
+        for ni in range(n_):
+            r = 0.0
+            for ki in range(k_):
+                r += x[mi * k_ + ki] * wt[ni * k_ + ki]
+            sig += r * r
+            d = y[mi * n_ + ni] - r
+            err += d * d
+    sqnr_db = db(sig / max(err, 1e-300))
+
+    if row_tiles > 1:
+        max_enob = max(t["enob"] for t in tiles)
+        width = max_enob + math.log2(float(nr))
+        reduction_fj = (e_adder_tree(adder_tree_fa_count(row_tiles, width))
+                        * float(m_ * n_))
+    else:
+        reduction_fj = 0.0
+    if native_ok(arch, fx, fw):
+        global_norm_fj = 0.0
+    else:
+        global_norm_fj = (global_norm_energy_per_op(fx, nr, nc)
+                          * float(2 * nr * nc * m_) * float(len(tiles)))
+
+    total_fj = tiles_fj + reduction_fj + global_norm_fj
+    enob_mean = sum(t["enob"] for t in tiles) / float(len(tiles))
+    return {
+        "tiles": tiles,
+        "tiles_fj": tiles_fj,
+        "reduction_fj": reduction_fj,
+        "global_norm_fj": global_norm_fj,
+        "total_fj": total_fj,
+        "fj_per_mac": total_fj / float(m_ * k_ * n_),
+        "sqnr_db": sqnr_db,
+        "y_abs_sum": sum(abs(v) for v in y),
+        "y_sq_sum": sum(v * v for v in y),
+        "enob_mean": enob_mean,
+    }
+
+
 # -------------------------------------------------------------- analog --
 
 
@@ -843,6 +1076,76 @@ def gen_workload(outdir):
     write_golden(os.path.join(outdir, "workload_empirical.json"), 1e-6, vals)
 
 
+LAYER_SEED = 42
+LAYER_SHAPE = (4, 40, 40)
+LAYER_NR = 16
+LAYER_NC = 16
+
+
+def gen_layer(outdir):
+    """Twin of tests/golden.rs::golden_layer_gemm: evaluate one small
+    ragged-edged GEMM (3x3 tile grid, edge tiles 8 deep/wide) under three
+    configurations — native gr-unit, conventional, and a wide-format
+    gr-unit that needs the global-normalization wrapper — and pin the
+    per-tile ENOBs, energy totals, layer SQNR, and output checksums."""
+    fp4 = FpFormat.fp4_e2m1()
+    dist_x = Dist("gauss_outliers")
+    dist_w = Dist("maxent", fp4)
+    configs = [
+        ("gru", FpFormat.fp(2, 2), "gr-unit"),
+        ("conv", FpFormat.fp(2, 2), "conventional"),
+        ("wide", FpFormat.fp(4, 2), "gr-unit"),
+    ]
+    vals = []
+    for tag, fx, arch in configs:
+        r = run_layer_twin(LAYER_SHAPE, LAYER_NR, LAYER_NC, fx, fp4, arch,
+                           dist_x, dist_w, LAYER_SEED)
+        for i, t in enumerate(r["tiles"]):
+            vals.append((f"{tag}_tile{i}_enob", t["enob"]))
+        for key in ("tiles_fj", "reduction_fj", "global_norm_fj", "total_fj",
+                    "fj_per_mac", "sqnr_db", "y_abs_sum", "y_sq_sum",
+                    "enob_mean"):
+            assert math.isfinite(r[key]), (tag, key)
+            vals.append((f"{tag}_{key}", r[key]))
+        print(f"  layer {tag}: enob_mean={r['enob_mean']:.3f} "
+              f"fj/mac={r['fj_per_mac']:.2f} sqnr={r['sqnr_db']:.2f} dB")
+    write_golden(os.path.join(outdir, "layer_gemm.json"), 1e-6, vals)
+
+
+def energy_self_check():
+    """Pin the energy/tile twins against the Rust unit-test vectors
+    (energy::tests, mac::tests::adc_quantize_basics)."""
+    assert abs(e_adc(8.0) - 865.536 * 0.81) < 1e-9
+    assert abs(e_adc(4.0) - (400.0 + 0.256) * 0.81) < 1e-9
+    assert abs(e_dac(4.0) - 50.0 * 4.0 * 0.81) < 1e-12
+    assert abs(e_fa() - 6.0 * 0.7 * 0.81) < 1e-12
+    assert abs(e_decoder(3.0, 8.0) - 10.5 * 0.7 * 0.81) < 1e-12
+    n = 5.0
+    assert abs(e_mult(n, n) - (1.5 * 0.7 * 0.81 + e_fa()) * n * n) < 1e-12
+    assert adder_tree_fa_count(2, 4.0) == 4.0
+    assert adder_tree_fa_count(4, 4.0) == 2.0 * 4.0 + 5.0
+    assert adder_tree_fa_count(1, 4.0) == 0.0
+    assert adder_tree_fa_count(3, 4.0) == 4.0 + 5.0
+    # conventional has no exponent logic; gr-unit does
+    fp4 = FpFormat.fp4_e2m1()
+    conv = energy_per_op("conventional", fp4, fp4, 32, 32, 8.0)
+    assert conv["exp_logic"] == 0.0 and conv["tree"] == 0.0
+    assert conv["norm_mult"] == 0.0
+    gru = energy_per_op("gr-unit", fp4, fp4, 32, 32, 8.0)
+    assert gru["dac"] < conv["dac"]  # mantissa-only DACs
+    assert energy_total(gru) > 0.0
+    # adc_quantize vectors (mac::tests::adc_quantize_basics)
+    assert adc_quantize(0.3, 1.0) == 0.0
+    assert adc_quantize(0.6, 1.0) == 1.0
+    assert adc_quantize(-0.6, 1.0) == -1.0
+    assert abs(adc_quantize(0.123456, 20.0) - 0.123456) < 2e-6
+    # native range gates (figures::fig12::tests::native_limits...)
+    assert native_ok("gr-unit", FpFormat.fp4_e2m1(), fp4)
+    assert native_ok("gr-row", FpFormat.fp(3, 2), fp4)
+    assert not native_ok("gr-unit", FpFormat.fp(3, 2), fp4)
+    assert not native_ok("gr-row", FpFormat.fp(4, 3), fp4)
+
+
 def workload_self_check():
     """Pin the EmpDist twin against the Rust unit-test vectors
     (workload::fit doctest: values [-2,-1,0,1,2])."""
@@ -863,6 +1166,7 @@ def workload_self_check():
 def main():
     self_check()
     workload_self_check()
+    energy_self_check()
     outdir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           "..", "rust", "tests", "golden")
     os.makedirs(outdir, exist_ok=True)
@@ -871,6 +1175,7 @@ def main():
     gen_fig9(outdir)
     gen_campaign(outdir)
     gen_workload(outdir)
+    gen_layer(outdir)
 
 
 if __name__ == "__main__":

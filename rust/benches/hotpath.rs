@@ -207,6 +207,22 @@ fn main() {
         );
     });
 
+    // model-scale chained path: a 3-layer MLP through per-layer
+    // requantization + tile grids + the worker pool (the `grcim model`
+    // hot path; throughput in useful MACs/s)
+    let mut mspec = grcim::model::ModelSpec::preset("mlp:64x48x32", 4).unwrap();
+    mspec.cfg.nr = 16;
+    mspec.cfg.nc = 8;
+    let mcfg = CampaignConfig {
+        engine: EngineKind::Rust,
+        workers: 0,
+        seed: 3,
+        ..Default::default()
+    };
+    b.run_items("model/forward_mlp3", 5, mspec.macs() as usize, || {
+        std::hint::black_box(grcim::model::run_model(&mspec, &mcfg).unwrap());
+    });
+
     // analog substrate: full mismatch MC of Fig. 8
     let cell = grcim::analog::GrMacCell::fp6_e2m3_schematic();
     b.run_items("analog/mismatch_mc_1000", 5, 1000, || {

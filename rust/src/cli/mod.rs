@@ -36,7 +36,7 @@ pub mod flags {
     /// `grcim query` flags.
     pub const QUERY: &[&str] = &[
         "addr", "json", "dr", "sqnr", "samples", "seed", "id", "trace", "shape", "tokens",
-        "arch", "nr", "nc", "ne", "nm", "dist",
+        "arch", "nr", "nc", "ne", "nm", "dist", "model",
     ];
     /// `grcim workload` flags.
     pub const WORKLOAD: &[&str] =
@@ -44,6 +44,11 @@ pub mod flags {
     /// `grcim layer` flags.
     pub const LAYER: &[&str] = &[
         "shape", "tokens", "arch", "nr", "nc", "ne", "nm", "dist", "out", "engine",
+        "artifacts", "workers", "seed",
+    ];
+    /// `grcim model` flags (`--fit` is a switch, not listed here).
+    pub const MODEL: &[&str] = &[
+        "model", "tokens", "arch", "nr", "nc", "ne", "nm", "dist", "out", "engine",
         "artifacts", "workers", "seed",
     ];
 }
@@ -77,7 +82,10 @@ pub struct Args {
 }
 
 /// Switch-style flags (no value).
-const SWITCHES: &[&str] = &["quick", "verbose", "quiet", "help"];
+const SWITCHES: &[&str] = &["quick", "verbose", "quiet", "help", "fit"];
+
+/// Switches every subcommand accepts (logging/help/figure-budget).
+pub const GLOBAL_SWITCHES: &[&str] = &["quick", "verbose", "quiet", "help"];
 
 impl Args {
     /// Parse an argument vector (excluding the program name).
@@ -162,6 +170,19 @@ impl Args {
         for k in self.flags.keys() {
             if !known.contains(&k.as_str()) {
                 bail!("unknown flag --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+
+    /// Error on switches the subcommand does not use — the switch
+    /// analogue of [`Args::ensure_known`] ([`GLOBAL_SWITCHES`] are
+    /// always accepted). Without this, a command-specific switch like
+    /// `--fit` would be silently accepted and ignored everywhere.
+    pub fn ensure_known_switches(&self, extra: &[&str]) -> Result<()> {
+        for s in &self.switches {
+            if !GLOBAL_SWITCHES.contains(&s.as_str()) && !extra.contains(&s.as_str()) {
+                bail!("--{s} does not apply to this command");
             }
         }
         Ok(())
@@ -253,6 +274,7 @@ mod tests {
             flags::SERVE,
             flags::WORKLOAD,
             flags::LAYER,
+            flags::MODEL,
         ] {
             for f in flags::CAMPAIGN {
                 assert!(known.contains(f), "{f} missing from {known:?}");
@@ -268,9 +290,27 @@ mod tests {
         assert!(a.ensure_known(flags::LAYER).is_ok());
         let a = parse(&["query", "layer", "--shape", "qkv:1024", "--tokens", "8"]);
         assert!(a.ensure_known(flags::QUERY).is_ok());
+        // model accepts its chain flags (--fit is a switch); query forwards
+        let a = parse(&["model", "--model", "mlp:64x256x64", "--fit", "--nc", "64"]);
+        assert!(a.ensure_known(flags::MODEL).is_ok());
+        assert!(a.has("fit"));
+        let a = parse(&["query", "model", "--model", "block:1024", "--tokens", "8"]);
+        assert!(a.ensure_known(flags::QUERY).is_ok());
         // …but not each other's unrelated flags
         let a = parse(&["layer", "--addr", "127.0.0.1:0"]);
         assert!(a.ensure_known(flags::LAYER).is_err());
+    }
+
+    #[test]
+    fn command_specific_switches_are_rejected_elsewhere() {
+        // --fit only applies to model/query; other subcommands must
+        // reject it instead of silently ignoring it
+        let a = parse(&["layer", "--fit"]);
+        assert!(a.ensure_known_switches(&[]).is_err());
+        assert!(a.ensure_known_switches(&["fit"]).is_ok());
+        // global switches pass everywhere
+        let a = parse(&["figures", "--quick", "--verbose"]);
+        assert!(a.ensure_known_switches(&[]).is_ok());
     }
 
     #[test]

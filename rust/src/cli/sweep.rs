@@ -10,6 +10,7 @@ use crate::distributions::Distribution;
 use crate::energy::{CimArch, TechParams};
 use crate::formats::FpFormat;
 use crate::mac::FormatPair;
+use crate::model::ModelSpec;
 use crate::runtime::EngineKind;
 use crate::tile::{parse_shape, AdcPolicy, LayerSpec, TileConfig};
 use anyhow::{bail, Context, Result};
@@ -24,6 +25,24 @@ pub const DEFAULT_SAMPLES: usize = 16_384;
 /// value like `n_e = 64` would panic inside a worker thread instead of
 /// failing validation.
 pub const MAX_FORMAT_BITS: f64 = 32.0;
+
+/// Largest accepted tile geometry (N_R rows per column / N_C columns
+/// per tile), 2^20 — far beyond any physical array (the paper sweeps
+/// N_R ≤ 128), and required for soundness: the serve MAC/slab caps
+/// bound the GEMM *shape* only, so an unchecked wire `nr` like 10^12
+/// would otherwise reach the tile mapper and make it allocate
+/// `nr`-deep zero-padded operand slabs (terabytes) inside a worker.
+pub const MAX_TILE_GEOM: usize = 1 << 20;
+
+fn check_tile_geom(what: &str, nr: usize, nc: usize) -> Result<()> {
+    if nr == 0 || nc == 0 {
+        bail!("{what}: nr and nc must be positive");
+    }
+    if nr > MAX_TILE_GEOM || nc > MAX_TILE_GEOM {
+        bail!("{what}: nr and nc must be <= {MAX_TILE_GEOM}");
+    }
+    Ok(())
+}
 
 fn check_format_bits(what: &str, n_e: f64, n_m: f64) -> Result<()> {
     // NaN fails every comparison, so the range checks alone would wave
@@ -140,9 +159,7 @@ impl LayerParams {
     /// per-tile spec-solved ADCs, Table III technology parameters.
     pub fn resolve(&self) -> Result<LayerSpec> {
         check_format_bits(&format!("layer '{}'", self.shape), self.n_e, self.n_m)?;
-        if self.nr == 0 || self.nc == 0 {
-            bail!("layer '{}': nr and nc must be positive", self.shape);
-        }
+        check_tile_geom(&format!("layer '{}'", self.shape), self.nr, self.nc)?;
         let shape = parse_shape(&self.shape, self.tokens)?;
         let fmt = FpFormat::fp(self.n_e as u32, self.n_m as u32);
         let w_fmt = FpFormat::fp4_e2m1();
@@ -160,6 +177,72 @@ impl LayerParams {
             dist_x: dist_by_name(&self.distribution, fmt)?,
             dist_w: Distribution::max_entropy(w_fmt),
         })
+    }
+}
+
+/// The raw fields of a model evaluation — `grcim model` flags or the
+/// wire `model` request — before the layer chain, formats, and
+/// distributions resolve. One resolver serves the CLI and the service
+/// (the [`LayerParams`] pattern, for whole networks).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelParams {
+    /// Model string (see [`crate::model::parse_model`]):
+    /// `mlp:<d0>x<d1>x...`, `block:<d_model>`, or a comma list of shape
+    /// strings.
+    pub model: String,
+    /// Shared token/batch dimension M.
+    pub tokens: usize,
+    /// Architecture name (see [`CimArch::parse`]); `gr` = unit granularity.
+    pub arch: String,
+    /// Rows per column (accumulation depth N_R).
+    pub nr: usize,
+    /// Columns per tile N_C.
+    pub nc: usize,
+    /// Input exponent bits.
+    pub n_e: f64,
+    /// Input mantissa bits.
+    pub n_m: f64,
+    /// Model-input activation distribution name (see [`dist_by_name`]),
+    /// including `empirical:<trace-file>`.
+    pub distribution: String,
+    /// Fit per-layer activation statistics into the report.
+    pub fit: bool,
+}
+
+impl Default for ModelParams {
+    fn default() -> Self {
+        ModelParams {
+            model: String::new(),
+            tokens: 4,
+            arch: "gr".to_string(),
+            nr: 32,
+            nc: 32,
+            n_e: 4.0,
+            n_m: 2.0,
+            distribution: "gauss_outliers".to_string(),
+            fit: false,
+        }
+    }
+}
+
+impl ModelParams {
+    /// Resolve into a runnable [`ModelSpec`]: the library preset
+    /// ([`ModelSpec::preset`] — one place owns the defaults and the
+    /// ReLU rule) customized by these fields. Input format FP(n_e, n_m)
+    /// against max-entropy FP4 weights, per-tile spec-solved ADCs,
+    /// Table III technology parameters.
+    pub fn resolve(&self) -> Result<ModelSpec> {
+        check_format_bits(&format!("model '{}'", self.model), self.n_e, self.n_m)?;
+        check_tile_geom(&format!("model '{}'", self.model), self.nr, self.nc)?;
+        let mut spec = ModelSpec::preset(&self.model, self.tokens)?;
+        let fmt = FpFormat::fp(self.n_e as u32, self.n_m as u32);
+        spec.cfg.nr = self.nr;
+        spec.cfg.nc = self.nc;
+        spec.cfg.fmts.x = fmt;
+        spec.cfg.arch = CimArch::parse(&self.arch)?;
+        spec.dist_x = dist_by_name(&self.distribution, fmt)?;
+        spec.fit_activations = self.fit;
+        Ok(spec)
     }
 }
 
@@ -327,6 +410,9 @@ distribution = "gauss_outliers"
             LayerParams { arch: "quantum".to_string(), ..ok.clone() },
             LayerParams { nr: 0, ..ok.clone() },
             LayerParams { nc: 0, ..ok.clone() },
+            // unbounded wire geometry must not reach the tile mapper
+            LayerParams { nr: MAX_TILE_GEOM + 1, ..ok.clone() },
+            LayerParams { nc: MAX_TILE_GEOM + 1, ..ok.clone() },
             LayerParams { n_e: 0.0, ..ok.clone() },
             // beyond the shift width FpFormat::fp could construct
             LayerParams { n_e: 64.0, ..ok.clone() },
@@ -335,6 +421,43 @@ distribution = "gauss_outliers"
             LayerParams { n_e: f64::NAN, ..ok.clone() },
             LayerParams { n_m: f64::NAN, ..ok.clone() },
             LayerParams { distribution: "cauchy".to_string(), ..ok.clone() },
+        ] {
+            assert!(bad.resolve().is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn model_params_resolve_with_defaults() {
+        let p = ModelParams { model: "mlp:16x12x8".to_string(), ..Default::default() };
+        let spec = p.resolve().unwrap();
+        assert_eq!(spec.layers.len(), 2);
+        assert_eq!(spec.layers[0].shape.m, 4);
+        assert_eq!(spec.cfg.arch, CimArch::GrUnit);
+        assert_eq!(spec.cfg.fmts.x, FpFormat::fp(4, 2));
+        assert!(spec.relu, "mlp presets run with ReLU");
+        assert!(!spec.fit_activations);
+        let b = ModelParams { model: "block:16".to_string(), ..Default::default() };
+        assert!(!b.resolve().unwrap().relu);
+    }
+
+    #[test]
+    fn model_params_reject_invalid_fields() {
+        let ok = ModelParams { model: "mlp:8x8".to_string(), ..Default::default() };
+        assert!(ok.resolve().is_ok());
+        for bad in [
+            ModelParams { model: "mlp:8".to_string(), ..Default::default() },
+            ModelParams { model: "warp:8".to_string(), ..Default::default() },
+            ModelParams { arch: "quantum".to_string(), ..ok.clone() },
+            ModelParams { nr: 0, ..ok.clone() },
+            ModelParams { nc: 0, ..ok.clone() },
+            // unbounded wire geometry must not reach the tile mapper
+            ModelParams { nr: MAX_TILE_GEOM + 1, ..ok.clone() },
+            ModelParams { nc: MAX_TILE_GEOM + 1, ..ok.clone() },
+            ModelParams { n_e: 0.0, ..ok.clone() },
+            ModelParams { n_e: 64.0, ..ok.clone() },
+            ModelParams { n_e: f64::NAN, ..ok.clone() },
+            ModelParams { tokens: 0, ..ok.clone() },
+            ModelParams { distribution: "cauchy".to_string(), ..ok.clone() },
         ] {
             assert!(bad.resolve().is_err(), "{bad:?}");
         }

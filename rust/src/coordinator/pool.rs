@@ -9,10 +9,22 @@
 //! pulls jobs from the shared queue, and streams results back over a
 //! channel. The first error aborts the pool (remaining jobs are drained
 //! and dropped).
+//!
+//! Panic safety: a panicking job closure (or worker factory) is caught
+//! with `catch_unwind` and surfaces as a clean `Err` from [`run_jobs`],
+//! never as a hang or a cascade. Without the catch, the unwinding worker
+//! would poison the shared queue `Mutex`, every other worker's lock
+//! would panic in turn, and the caller would see the secondary symptom
+//! (`pool lost jobs`, or `expect("pool returned every tile")` in the
+//! tile mapper) instead of the root cause. The queue locks additionally
+//! recover from poisoning (`PoisonError::into_inner` — the queue is a
+//! plain iterator, valid after any interrupted `next()`), so even a
+//! panic outside the caught region cannot wedge the pool.
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// A schedulable unit: one Monte-Carlo batch of one experiment. (The
 /// pool itself is generic — the tile mapper schedules plain tile indices
@@ -25,6 +37,23 @@ pub struct Job {
     pub batch_idx: u64,
 }
 
+/// Describe a caught panic payload (panics carry `&str` or `String`
+/// messages in practice; anything else is reported opaquely).
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Lock the job queue, recovering from poisoning (see the module docs).
+fn lock_queue<T>(queue: &Mutex<T>) -> MutexGuard<'_, T> {
+    queue.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 /// Run `jobs` over `workers` threads.
 ///
 /// `make_worker` is called once per thread and returns the thread's job
@@ -32,6 +61,10 @@ pub struct Job {
 /// thread). Results are returned unordered; scheduling must therefore not
 /// affect job semantics (the coordinator seeds jobs by index, not order;
 /// the tile mapper re-orders results by tile index before reducing).
+///
+/// A job closure that panics (rather than returning `Err`) aborts the
+/// pool exactly like an error: the panic is caught, remaining jobs are
+/// drained, and the caller receives a clean `Err` naming the panic.
 pub fn run_jobs<J, T, F, W>(
     jobs: Vec<J>,
     workers: usize,
@@ -60,7 +93,12 @@ where
         let handle = std::thread::Builder::new()
             .name(format!("grcim-worker-{wid}"))
             .spawn(move || {
-                let mut work = match make_worker() {
+                let made = catch_unwind(AssertUnwindSafe(&*make_worker)).unwrap_or_else(
+                    |payload| {
+                        Err(anyhow!("worker {wid} init panicked: {}", panic_msg(&*payload)))
+                    },
+                );
+                let mut work = match made {
                     Ok(w) => w,
                     Err(e) => {
                         let _ = tx.send(Err(e.context(format!(
@@ -71,11 +109,18 @@ where
                 };
                 loop {
                     let job = {
-                        let mut q = queue.lock().unwrap();
+                        let mut q = lock_queue(&queue);
                         q.next()
                     };
                     let Some(job) = job else { break };
-                    let res = work(job);
+                    // a panicking job must not unwind through the pool:
+                    // it would poison the queue and cascade into every
+                    // worker — catch it and report a clean error instead
+                    let res = catch_unwind(AssertUnwindSafe(|| work(job))).unwrap_or_else(
+                        |payload| {
+                            Err(anyhow!("worker {wid} job panicked: {}", panic_msg(&*payload)))
+                        },
+                    );
                     let failed = res.is_err();
                     if tx.send(res).is_err() || failed {
                         break; // receiver gone or error sent: stop
@@ -97,7 +142,7 @@ where
                     first_err = Some(e);
                 }
                 // drain the queue so workers stop picking up new jobs
-                let mut q = queue.lock().unwrap();
+                let mut q = lock_queue(&queue);
                 while q.next().is_some() {}
             }
         }
@@ -177,6 +222,43 @@ mod tests {
             });
         let err = format!("{:#}", res.unwrap_err());
         assert!(err.contains("failed to initialize"), "{err}");
+    }
+
+    #[test]
+    fn panicking_job_is_a_clean_error_not_a_hang() {
+        // the regression this pins: a panic inside the job closure used
+        // to poison the queue Mutex, cascade panics into every worker,
+        // and surface as "pool lost jobs" / the tile mapper's
+        // expect("pool returned every tile") instead of the root cause
+        static DONE: AtomicUsize = AtomicUsize::new(0);
+        let res: Result<Vec<u64>> = run_jobs(jobs(1000), 4, || {
+            Ok(|job: Job| {
+                if job.batch_idx == 7 {
+                    panic!("tile {} exploded", job.batch_idx);
+                }
+                DONE.fetch_add(1, Ordering::Relaxed);
+                Ok(job.batch_idx)
+            })
+        });
+        let err = format!("{:#}", res.unwrap_err());
+        assert!(err.contains("panicked"), "{err}");
+        assert!(err.contains("tile 7 exploded"), "{err}");
+        // the pool aborted early rather than running the full queue
+        assert!(DONE.load(Ordering::Relaxed) < 1000);
+        // and the pool machinery is still usable afterwards
+        let again = run_jobs(jobs(8), 4, || Ok(|j: Job| Ok(j.batch_idx))).unwrap();
+        assert_eq!(again.len(), 8);
+    }
+
+    #[test]
+    fn panicking_worker_init_is_a_clean_error() {
+        let res: Result<Vec<u64>> =
+            run_jobs(jobs(10), 2, || -> Result<fn(Job) -> Result<u64>> {
+                panic!("no backend")
+            });
+        let err = format!("{:#}", res.unwrap_err());
+        assert!(err.contains("failed to initialize"), "{err}");
+        assert!(err.contains("no backend"), "{err}");
     }
 
     #[test]

@@ -26,7 +26,9 @@
 //!
 //! Entry points: the [`coordinator`] runs sweep campaigns over the
 //! [`runtime`] engines; [`figures`] regenerates every table and figure of
-//! the paper's evaluation; the [`server`] keeps the process resident and
+//! the paper's evaluation; [`tile`] maps layer-scale GEMMs onto GR-MAC
+//! arrays and [`model`] chains them into full-network energy reports;
+//! the [`server`] keeps the process resident and
 //! answers spec-point queries over TCP from a spec-keyed result cache;
 //! `examples/` shows the public API; the golden regression suite
 //! (`rust/tests/golden.rs`) pins exact campaign numbers.
@@ -72,6 +74,7 @@ pub mod energy;
 pub mod figures;
 pub mod formats;
 pub mod mac;
+pub mod model;
 pub mod nn;
 pub mod propcheck;
 pub mod report;

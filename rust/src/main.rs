@@ -1,13 +1,14 @@
 //! `grcim` — CLI launcher for the GR-CIM design-space exploration
 //! framework.
 //!
-//! Subcommands: `figures`, `energy`, `sweep`, `workload`, `serve`,
-//! `query`, `validate`, `info`. The full flag and wire-protocol reference
+//! Subcommands: `figures`, `energy`, `sweep`, `workload`, `layer`,
+//! `model`, `serve`, `query`, `validate`, `info`. The full flag and
+//! wire-protocol reference
 //! lives in `docs/CLI.md`; the module map in `docs/ARCHITECTURE.md`; the
 //! paper-equation-to-code map in `docs/THEORY.md`.
 
 use anyhow::{bail, Context, Result};
-use grcim::cli::sweep::{LayerParams, SweepPlan};
+use grcim::cli::sweep::{LayerParams, ModelParams, SweepPlan};
 use grcim::cli::{fig_list, flags, Args};
 use grcim::config::Json;
 use grcim::coordinator::{run_campaign, CampaignConfig};
@@ -38,6 +39,10 @@ COMMANDS:
   layer      layer-scale GEMM on the tiled array mapper
              grcim layer --shape mlp-up:4096 --arch gr [--tokens N]
              [--nr N] [--nc N] [--ne N] [--nm N] [--dist NAME|empirical:t]
+  model      chain tile layers into a full-network energy report
+             grcim model --model mlp:<d0>x<d1>x...|block:<d>|<shape,...>
+             [--fit] [--tokens N] [--arch A] [--nr N] [--nc N] [--ne N]
+             [--nm N] [--dist NAME|empirical:t]
   serve      resident campaign service (NDJSON/TCP, cached + coalesced)
   query      client for a running serve        grcim query energy --dr 36
              raw mode: grcim query --json '<request>' (non-empty object;
@@ -69,6 +74,7 @@ fn campaign_from_args(args: &Args) -> Result<CampaignConfig> {
 
 fn cmd_figures(args: &Args) -> Result<()> {
     args.ensure_known(flags::FIGURES)?;
+    args.ensure_known_switches(&[])?;
     let mut ctx = FigureCtx {
         campaign: campaign_from_args(args)?,
         samples: args.get_usize("samples", 65_536)?,
@@ -97,6 +103,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
 
 fn cmd_energy(args: &Args) -> Result<()> {
     args.ensure_known(flags::ENERGY)?;
+    args.ensure_known_switches(&[])?;
     let dr = args.get_f64("dr", 30.1)?;
     let sqnr = args.get_f64("sqnr", 22.83)?;
     let ctx = FigureCtx {
@@ -145,6 +152,7 @@ fn cmd_energy(args: &Args) -> Result<()> {
 /// distribution-independent invariant checks fails.
 fn cmd_workload(args: &Args) -> Result<()> {
     args.ensure_known(flags::WORKLOAD)?;
+    args.ensure_known_switches(&[])?;
     let path = args
         .get("trace")
         .map(String::from)
@@ -188,6 +196,7 @@ fn layer_params(args: &Args, shape: String) -> Result<LayerParams> {
 /// non-zero if an invariant check fails.
 fn cmd_layer(args: &Args) -> Result<()> {
     args.ensure_known(flags::LAYER)?;
+    args.ensure_known_switches(&[])?;
     let shape = args
         .get("shape")
         .map(String::from)
@@ -213,6 +222,57 @@ fn cmd_layer(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build the [`ModelParams`] shared by `grcim model` and `grcim query
+/// model` from flags (defaults from [`ModelParams::default`]).
+fn model_params(args: &Args, model: String) -> Result<ModelParams> {
+    let d = ModelParams::default();
+    Ok(ModelParams {
+        model,
+        tokens: args.get_usize("tokens", d.tokens)?,
+        arch: args.get_or("arch", d.arch.as_str()).to_string(),
+        nr: args.get_usize("nr", d.nr)?,
+        nc: args.get_usize("nc", d.nc)?,
+        n_e: args.get_f64("ne", d.n_e)?,
+        n_m: args.get_f64("nm", d.n_m)?,
+        distribution: args.get_or("dist", d.distribution.as_str()).to_string(),
+        fit: args.has("fit"),
+    })
+}
+
+/// `grcim model --model <chain>`: chain tile layers into a full-network
+/// energy report (per-layer energy/SQNR, inter-layer requantization,
+/// network totals, end-to-end SQNR) and print/persist it. Exits non-zero
+/// if an invariant check fails.
+fn cmd_model(args: &Args) -> Result<()> {
+    args.ensure_known(flags::MODEL)?;
+    args.ensure_known_switches(&["fit"])?;
+    let model = args
+        .get("model")
+        .map(String::from)
+        .or_else(|| args.positional.first().cloned())
+        .context("model needs a chain: grcim model --model mlp:4096x16384x4096")?;
+    let spec = model_params(args, model)?.resolve()?;
+    let campaign = campaign_from_args(args)?;
+    let out_dir = PathBuf::from(args.get_or("out", "results"));
+    let t = util::Timer::new("model");
+    let res = grcim::model::run_model(&spec, &campaign)?;
+    let fr = res.report.to_figure_result();
+    let text = fr.emit(&out_dir)?;
+    println!("{text}");
+    grcim::info!(
+        "model done in {:.1}s ({} layers, {} tiles, {:.2} fJ/MAC, e2e {:.1} dB)",
+        t.elapsed_s(),
+        res.report.layers.len(),
+        res.report.tile_count(),
+        res.report.fj_per_mac(),
+        res.report.sqnr_db
+    );
+    if !fr.all_hold() {
+        bail!("model invariant checks failed (see table above)");
+    }
+    Ok(())
+}
+
 #[cfg(not(feature = "pjrt"))]
 fn cmd_validate(_args: &Args) -> Result<()> {
     bail!(
@@ -224,6 +284,7 @@ fn cmd_validate(_args: &Args) -> Result<()> {
 #[cfg(feature = "pjrt")]
 fn cmd_validate(args: &Args) -> Result<()> {
     args.ensure_known(flags::VALIDATE)?;
+    args.ensure_known_switches(&[])?;
     let dir = artifacts_dir(args);
     let reg = ArtifactRegistry::load(&dir)?;
     let pjrt = grcim::runtime::PjrtEngine::from_registry(&reg)?;
@@ -257,6 +318,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
 
 fn cmd_info(args: &Args) -> Result<()> {
     args.ensure_known(flags::INFO)?;
+    args.ensure_known_switches(&[])?;
     let dir = artifacts_dir(args);
     match ArtifactRegistry::load(&dir) {
         Ok(reg) => {
@@ -290,6 +352,7 @@ fn cmd_info(args: &Args) -> Result<()> {
 
 fn cmd_sweep(args: &Args) -> Result<()> {
     args.ensure_known(flags::SWEEP)?;
+    args.ensure_known_switches(&[])?;
     let path = args
         .positional
         .first()
@@ -323,6 +386,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     args.ensure_known(flags::SERVE)?;
+    args.ensure_known_switches(&[])?;
     let server = Server::spawn(ServeConfig {
         addr: args.get_or("addr", DEFAULT_ADDR).to_string(),
         campaign: campaign_from_args(args)?,
@@ -443,6 +507,33 @@ fn build_request(kind: &str, args: &Args) -> Result<String> {
             }
             Ok(proto::obj(pairs).to_string())
         }
+        "model" => {
+            let model = args
+                .get("model")
+                .map(String::from)
+                .or_else(|| args.positional.get(1).cloned())
+                .context(
+                    "model query needs a chain: \
+                     grcim query model --model mlp:4096x16384x4096",
+                )?;
+            let p = model_params(args, model)?;
+            let mut pairs = vec![
+                ("cmd", Json::Str("model".to_string())),
+                ("model", Json::Str(p.model)),
+                ("tokens", Json::Num(p.tokens as f64)),
+                ("arch", Json::Str(p.arch)),
+                ("nr", Json::Num(p.nr as f64)),
+                ("nc", Json::Num(p.nc as f64)),
+                ("n_e", Json::Num(p.n_e)),
+                ("n_m", Json::Num(p.n_m)),
+                ("distribution", Json::Str(p.distribution)),
+                ("fit", Json::Bool(p.fit)),
+            ];
+            if let Some(s) = json_seed(args)? {
+                pairs.push(("seed", Json::Num(s)));
+            }
+            Ok(proto::obj(pairs).to_string())
+        }
         "sweep" => {
             let path = args.positional.get(1).context(
                 "sweep query needs a config: grcim query sweep <config.toml>",
@@ -490,7 +581,7 @@ fn build_request(kind: &str, args: &Args) -> Result<String> {
         }
         other => bail!(
             "unknown query kind '{other}' \
-             (energy|sweep|figure|workload|layer|info, \
+             (energy|sweep|figure|workload|layer|model|info, \
              or --json '<raw request>')"
         ),
     }
@@ -498,6 +589,7 @@ fn build_request(kind: &str, args: &Args) -> Result<String> {
 
 fn cmd_query(args: &Args) -> Result<()> {
     args.ensure_known(flags::QUERY)?;
+    args.ensure_known_switches(&["fit"])?;
     let addr = args.get_or("addr", DEFAULT_ADDR);
     let line = match args.get("json") {
         // the server ignores blank lines, so an empty request would hang
@@ -549,6 +641,7 @@ fn main() {
         "energy" => cmd_energy(&args),
         "workload" => cmd_workload(&args),
         "layer" => cmd_layer(&args),
+        "model" => cmd_model(&args),
         "validate" => cmd_validate(&args),
         "info" => cmd_info(&args),
         "sweep" => cmd_sweep(&args),

@@ -1,0 +1,517 @@
+//! The model executor: layer-by-layer forward pass over GR-MAC tile
+//! layers with inter-layer requantization, the float reference chain,
+//! and the pooled model runner.
+//!
+//! Determinism contract: a model run is a pure function of (stages,
+//! input, engine) — [`run_model`] additionally pins the operand draws to
+//! the campaign seed (stream [`MODEL_STREAM`]), and every layer's tile
+//! jobs shard through [`crate::tile::run_layer_with_data`], which
+//! re-orders results by tile index — so model results are bit-identical
+//! at any worker count (asserted in `rust/tests/properties.rs`).
+
+use super::{
+    check_chain, ActStats, LayerOutcome, ModelLayer, ModelReport, ModelResult, ModelSpec,
+};
+use crate::coordinator::CampaignConfig;
+use crate::rng::{job_seed, Pcg64};
+use crate::runtime::Engine;
+use crate::tile::{
+    gemm_outputs, gemm_with_engine, run_layer_with_data, GemmShape, LayerResult, TileConfig,
+};
+use crate::util::db;
+use crate::workload::{EmpiricalDist, TensorTrace};
+use anyhow::{bail, Result};
+
+/// Grid-index namespace of the model operand RNG streams in
+/// [`crate::rng::job_seed`] — disjoint from campaign spec indices and
+/// from the single-layer [`crate::tile::mapper::LAYER_STREAM`], so model
+/// operands never collide with either at the same campaign seed. Batch
+/// index 0 draws the model input; batch index `li + 1` draws layer
+/// `li`'s weights. The Python twin (`tools/gen_goldens.py`) uses the
+/// same constants.
+pub const MODEL_STREAM: u64 = 0x30DE1;
+
+/// Executor options of [`forward_stages`].
+#[derive(Debug, Clone, Copy)]
+pub struct ForwardOpts {
+    /// Run the float reference chain and per-layer reference GEMMs
+    /// (per-layer + end-to-end SQNR). The inference fast path
+    /// ([`crate::nn::cim_forward_batch`]) turns this off and every SQNR
+    /// is NaN.
+    pub with_reference: bool,
+    /// Fit an [`EmpiricalDist`] to the scaled activations feeding each
+    /// layer and attach its summary to the layer outcome.
+    pub fit_activations: bool,
+}
+
+/// One executable layer: geometry, array configuration, and its weights
+/// (pre-scaled to the array's [-1, 1] full scale, transposed `[N][K]` —
+/// the `nn::Dense` layout).
+#[derive(Debug, Clone)]
+pub struct Stage {
+    /// Layer label (reports only).
+    pub name: String,
+    /// GEMM dimensions.
+    pub shape: GemmShape,
+    /// Array configuration this layer maps onto.
+    pub cfg: TileConfig,
+    /// Scaled transposed weights, row-major `[N][K]`.
+    pub wt: Vec<f32>,
+    /// The static weight scale `wt` was divided by (1.0 for operands
+    /// drawn directly in full scale); the epilogue multiplies it back.
+    pub w_scale: f64,
+    /// Per-output biases, applied in the float domain after rescaling.
+    pub bias: Option<Vec<f64>>,
+    /// Apply ReLU after this layer's epilogue.
+    pub relu: bool,
+}
+
+/// How GEMMs execute: sequentially on one engine (the inference path) or
+/// sharded across the coordinator worker pool (the campaign path —
+/// bit-identical to sequential for any worker count).
+#[derive(Clone, Copy)]
+pub enum Runner<'a> {
+    /// One engine, tiles in index order (each worker-free call reuses
+    /// the tile mapper's scratch buffers).
+    Sequential(&'a dyn Engine),
+    /// Tile jobs shard across the worker pool; the pooled path always
+    /// computes the per-layer reference GEMM.
+    Pooled(&'a CampaignConfig),
+}
+
+impl Runner<'_> {
+    fn run(
+        &self,
+        name: &str,
+        cfg: &TileConfig,
+        shape: GemmShape,
+        x: &[f32],
+        wt: &[f32],
+        with_reference: bool,
+    ) -> Result<LayerResult> {
+        match self {
+            Runner::Sequential(engine) => {
+                if with_reference {
+                    gemm_with_engine(*engine, name, cfg, shape, x, wt)
+                } else {
+                    gemm_outputs(*engine, name, cfg, shape, x, wt)
+                }
+            }
+            Runner::Pooled(campaign) => {
+                run_layer_with_data(name, cfg, shape, x.to_vec(), wt.to_vec(), campaign)
+            }
+        }
+    }
+}
+
+/// Fit the scaled activations feeding a layer; `None` when the tensor
+/// cannot be fitted (fewer than two values, or all-zero — e.g. a fully
+/// dead ReLU layer).
+fn fit_stats(name: &str, scaled: &[f64]) -> Option<ActStats> {
+    let trace = TensorTrace::from_f64(name, vec![scaled.len()], scaled.to_vec()).ok()?;
+    let fit = EmpiricalDist::fit(&trace).ok()?;
+    Some(ActStats {
+        dr_bits: fit.dr_bits(),
+        sigma_core: fit.sigma_core(),
+        outlier_mass: fit.outlier_mass(),
+        mean: fit.mean(),
+        std: fit.std(),
+    })
+}
+
+fn validate_stages(name: &str, stages: &[Stage], x0: &[f64]) -> Result<()> {
+    if stages.is_empty() {
+        bail!("model '{name}' has no stages");
+    }
+    let layers: Vec<ModelLayer> = stages
+        .iter()
+        .map(|s| ModelLayer { name: s.name.clone(), shape: s.shape, fmts: Some(s.cfg.fmts) })
+        .collect();
+    check_chain(name, &layers)?;
+    let first = stages[0].shape;
+    if x0.len() != first.m * first.k {
+        bail!(
+            "model '{name}': input has {} values, first layer {} needs {}",
+            x0.len(),
+            first,
+            first.m * first.k
+        );
+    }
+    for s in stages {
+        if s.wt.len() != s.shape.n * s.shape.k {
+            bail!(
+                "model '{name}': layer '{}' has {} weights, shape {} needs {}",
+                s.name,
+                s.wt.len(),
+                s.shape,
+                s.shape.n * s.shape.k
+            );
+        }
+        if let Some(b) = &s.bias {
+            if b.len() != s.shape.n {
+                bail!(
+                    "model '{name}': layer '{}' has {} biases for {} outputs",
+                    s.name,
+                    b.len(),
+                    s.shape.n
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run a stage chain end to end.
+///
+/// Per layer: static per-tensor calibration (`a_scale` = max activation
+/// magnitude), **inter-layer requantization** of the scaled activations
+/// to the layer's input format (quantize the f32 encoding — idempotent
+/// under the array's own input quantization, so this is exactly the
+/// digital re-encode a physical inter-layer path performs), the tiled
+/// GEMM through `runner`, then the float-domain epilogue (rescale, bias,
+/// ReLU). The float reference chain runs the same epilogue over exact
+/// float GEMMs of the *unquantized* activations, so [`ModelReport::sqnr_db`]
+/// prices requantization + array + ADC error jointly.
+///
+/// When a layer consumes fewer features than the previous layer produced
+/// (`K < N_prev`, e.g. `attn-out` after `qkv`), the leading `K` features
+/// feed it — the documented stand-in for the non-GEMM attention stage
+/// (see `docs/THEORY.md`).
+pub fn forward_stages(
+    runner: &Runner<'_>,
+    name: &str,
+    stages: &[Stage],
+    x0: &[f64],
+    opts: ForwardOpts,
+) -> Result<ModelResult> {
+    validate_stages(name, stages, x0)?;
+    let m = stages[0].shape.m;
+    let mut acts = x0.to_vec();
+    let mut width = stages[0].shape.k;
+    let mut ref_acts = if opts.with_reference { Some(x0.to_vec()) } else { None };
+    let mut outcomes = Vec::with_capacity(stages.len());
+
+    for st in stages {
+        let (k, n) = (st.shape.k, st.shape.n);
+        let a_scale = acts.iter().fold(0.0f64, |mx, v| mx.max(v.abs())).max(1e-12);
+
+        // requantize the leading K features of every token row to the
+        // layer's input format, tracking the requantization SQNR
+        let fmt = st.cfg.fmts.x;
+        let mut xq = vec![0.0f32; m * k];
+        let mut scaled =
+            if opts.fit_activations { Vec::with_capacity(m * k) } else { Vec::new() };
+        let mut sig = 0.0f64;
+        let mut err = 0.0f64;
+        for mi in 0..m {
+            for ki in 0..k {
+                let s = acts[mi * width + ki] / a_scale;
+                let q = fmt.quantize(s as f32 as f64) as f32;
+                xq[mi * k + ki] = q;
+                sig += s * s;
+                let d = q as f64 - s;
+                err += d * d;
+                if opts.fit_activations {
+                    scaled.push(s);
+                }
+            }
+        }
+        let requant_sqnr_db = db(sig.max(1e-300) / err.max(1e-300));
+        let act_stats =
+            if opts.fit_activations { fit_stats(&st.name, &scaled) } else { None };
+
+        let res = runner.run(&st.name, &st.cfg, st.shape, &xq, &st.wt, opts.with_reference)?;
+
+        // float-domain epilogue: rescale, bias, ReLU
+        let mut next = vec![0.0f64; m * n];
+        for mi in 0..m {
+            for o in 0..n {
+                let mut v = res.y[mi * n + o] * a_scale * st.w_scale;
+                if let Some(b) = &st.bias {
+                    v += b[o];
+                }
+                if st.relu {
+                    v = v.max(0.0);
+                }
+                next[mi * n + o] = v;
+            }
+        }
+
+        // exact float chain over the same truncation/epilogue
+        if let Some(r) = ref_acts.as_mut() {
+            let mut rn = vec![0.0f64; m * n];
+            for mi in 0..m {
+                for o in 0..n {
+                    let mut acc = 0.0f64;
+                    for ki in 0..k {
+                        acc += r[mi * width + ki] * (st.wt[o * k + ki] as f64 * st.w_scale);
+                    }
+                    if let Some(b) = &st.bias {
+                        acc += b[o];
+                    }
+                    if st.relu {
+                        acc = acc.max(0.0);
+                    }
+                    rn[mi * n + o] = acc;
+                }
+            }
+            *r = rn;
+        }
+
+        acts = next;
+        width = n;
+        outcomes.push(LayerOutcome { report: res.report, a_scale, requant_sqnr_db, act_stats });
+    }
+
+    let sqnr_db = match &ref_acts {
+        Some(r) => {
+            let mut sig = 0.0f64;
+            let mut err = 0.0f64;
+            for (y, rv) in acts.iter().zip(r) {
+                sig += rv * rv;
+                let d = y - rv;
+                err += d * d;
+            }
+            db(sig.max(1e-300) / err.max(1e-300))
+        }
+        None => f64::NAN,
+    };
+
+    Ok(ModelResult {
+        report: ModelReport {
+            name: name.to_string(),
+            tokens: m,
+            layers: outcomes,
+            sqnr_db,
+            accuracy_float: None,
+            accuracy_cim: None,
+        },
+        y: acts,
+    })
+}
+
+/// Evaluate a [`ModelSpec`]: draw the model input and every layer's
+/// weights deterministically from the campaign seed (stream
+/// [`MODEL_STREAM`]), then run the chain with every layer's tile jobs
+/// sharded across the worker pool.
+///
+/// The result is a pure function of (spec, campaign.seed,
+/// campaign.engine) — the property the serve layer's
+/// [`crate::server::proto::model_key`] relies on.
+pub fn run_model(spec: &ModelSpec, campaign: &CampaignConfig) -> Result<ModelResult> {
+    check_chain(&spec.name, &spec.layers)?;
+    let first = spec.layers[0].shape;
+    let mut rng = Pcg64::seeded(job_seed(campaign.seed, MODEL_STREAM, 0));
+    let mut x0f = vec![0.0f32; first.m * first.k];
+    spec.dist_x.fill_f32(&mut rng, &mut x0f);
+    let x0: Vec<f64> = x0f.iter().map(|&v| v as f64).collect();
+
+    let last = spec.layers.len() - 1;
+    let stages: Vec<Stage> = spec
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(li, l)| {
+            let mut rng =
+                Pcg64::seeded(job_seed(campaign.seed, MODEL_STREAM, li as u64 + 1));
+            let mut wt = vec![0.0f32; l.shape.n * l.shape.k];
+            spec.dist_w.fill_f32(&mut rng, &mut wt);
+            Stage {
+                name: l.name.clone(),
+                shape: l.shape,
+                cfg: spec.layer_cfg(li),
+                wt,
+                w_scale: 1.0,
+                bias: None,
+                relu: spec.relu && li < last,
+            }
+        })
+        .collect();
+
+    forward_stages(
+        &Runner::Pooled(campaign),
+        &spec.name,
+        &stages,
+        &x0,
+        ForwardOpts { with_reference: true, fit_activations: spec.fit_activations },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributions::Distribution;
+    use crate::energy::{CimArch, TechParams};
+    use crate::formats::FpFormat;
+    use crate::mac::FormatPair;
+    use crate::runtime::{EngineKind, RustEngine};
+    use crate::tile::AdcPolicy;
+
+    fn small_spec(model: &str, arch: CimArch) -> ModelSpec {
+        let mut spec = ModelSpec::preset(model, 2).unwrap();
+        spec.cfg.nr = 8;
+        spec.cfg.nc = 4;
+        spec.cfg.arch = arch;
+        spec.cfg.fmts = FormatPair::new(FpFormat::fp(2, 2), FpFormat::fp4_e2m1());
+        spec.fit_activations = true;
+        spec
+    }
+
+    fn campaign(workers: usize, seed: u64) -> CampaignConfig {
+        CampaignConfig { engine: EngineKind::Rust, workers, seed, ..Default::default() }
+    }
+
+    #[test]
+    fn pooled_model_matches_sequential_bitwise() {
+        let spec = small_spec("mlp:16x12x8", CimArch::GrUnit);
+        let pooled = run_model(&spec, &campaign(3, 11)).unwrap();
+
+        // sequential reference over the same deterministic operands
+        let first = spec.layers[0].shape;
+        let mut rng = Pcg64::seeded(job_seed(11, MODEL_STREAM, 0));
+        let mut x0f = vec![0.0f32; first.m * first.k];
+        spec.dist_x.fill_f32(&mut rng, &mut x0f);
+        let x0: Vec<f64> = x0f.iter().map(|&v| v as f64).collect();
+        let stages: Vec<Stage> = spec
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(li, l)| {
+                let mut rng = Pcg64::seeded(job_seed(11, MODEL_STREAM, li as u64 + 1));
+                let mut wt = vec![0.0f32; l.shape.n * l.shape.k];
+                spec.dist_w.fill_f32(&mut rng, &mut wt);
+                Stage {
+                    name: l.name.clone(),
+                    shape: l.shape,
+                    cfg: spec.layer_cfg(li),
+                    wt,
+                    w_scale: 1.0,
+                    bias: None,
+                    relu: li + 1 < spec.layers.len(),
+                }
+            })
+            .collect();
+        let seq = forward_stages(
+            &Runner::Sequential(&RustEngine),
+            &spec.name,
+            &stages,
+            &x0,
+            ForwardOpts { with_reference: true, fit_activations: true },
+        )
+        .unwrap();
+
+        assert_eq!(pooled.y.len(), seq.y.len());
+        for (a, b) in pooled.y.iter().zip(&seq.y) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(pooled.report.sqnr_db.to_bits(), seq.report.sqnr_db.to_bits());
+        for (a, b) in pooled.report.layers.iter().zip(&seq.report.layers) {
+            assert_eq!(a.report.tiles_fj.to_bits(), b.report.tiles_fj.to_bits());
+            assert_eq!(a.requant_sqnr_db.to_bits(), b.requant_sqnr_db.to_bits());
+        }
+    }
+
+    #[test]
+    fn report_invariants_hold_for_gr_and_conventional() {
+        for arch in [CimArch::GrUnit, CimArch::Conventional] {
+            let spec = small_spec("mlp:16x12x8", arch);
+            let res = run_model(&spec, &campaign(2, 5)).unwrap();
+            let fr = res.report.to_figure_result();
+            assert!(fr.all_hold(), "{arch:?}: {:#?}", fr.checks);
+            assert_eq!(res.report.layers.len(), 2);
+            // fit was requested and the activations are fittable
+            for l in &res.report.layers {
+                assert!(l.act_stats.is_some(), "{}", l.report.name);
+            }
+            // model totals really are the layer sums
+            let sum: f64 = res.report.layers.iter().map(|l| l.report.total_fj()).sum();
+            assert_eq!(sum.to_bits(), res.report.total_fj().to_bits());
+        }
+    }
+
+    #[test]
+    fn block_preset_truncates_qkv_into_attn_out() {
+        let mut spec = small_spec("block:8", CimArch::GrUnit);
+        spec.relu = false;
+        let res = run_model(&spec, &campaign(2, 3)).unwrap();
+        assert_eq!(res.report.layers.len(), 4);
+        // final activations have the block's d_model width
+        assert_eq!(res.y.len(), 2 * 8);
+        assert!(res.report.sqnr_db.is_finite());
+    }
+
+    #[test]
+    fn requantization_is_idempotent_on_the_format_grid() {
+        // quantizing an already-quantized f32 activation is a no-op —
+        // the property that makes the explicit inter-layer requantize
+        // semantically equal to what the array's DAC input stage does
+        let fmt = FpFormat::fp(3, 2);
+        let mut rng = Pcg64::seeded(17);
+        for _ in 0..500 {
+            let s = rng.uniform_in(-1.5, 1.5);
+            let q = fmt.quantize(s as f32 as f64) as f32;
+            let qq = fmt.quantize(q as f64) as f32;
+            assert_eq!(q.to_bits(), qq.to_bits(), "at {s}");
+        }
+    }
+
+    #[test]
+    fn high_precision_chain_tracks_the_float_chain() {
+        let mut spec = small_spec("mlp:12x10x6", CimArch::GrUnit);
+        spec.cfg.fmts = FormatPair::new(FpFormat::fp(4, 6), FpFormat::fp(4, 6));
+        spec.cfg.adc = AdcPolicy::Fixed(22.0);
+        spec.dist_w = Distribution::clipped_gauss4();
+        spec.cfg.tech = TechParams::default();
+        let res = run_model(&spec, &campaign(2, 9)).unwrap();
+        assert!(res.report.sqnr_db > 25.0, "e2e sqnr {}", res.report.sqnr_db);
+        for l in &res.report.layers {
+            assert!(l.requant_sqnr_db > 25.0, "{} requant", l.report.name);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_stage_chains() {
+        let spec = small_spec("mlp:8x8", CimArch::GrUnit);
+        let cfgc = spec.layer_cfg(0);
+        let stage = |shape: GemmShape| Stage {
+            name: "s".into(),
+            shape,
+            cfg: cfgc,
+            wt: vec![0.0; shape.n * shape.k],
+            w_scale: 1.0,
+            bias: None,
+            relu: false,
+        };
+        let a = stage(GemmShape { m: 2, k: 8, n: 4 });
+        // input size mismatch
+        let r = forward_stages(
+            &Runner::Sequential(&RustEngine),
+            "t",
+            std::slice::from_ref(&a),
+            &[0.0; 7],
+            ForwardOpts { with_reference: false, fit_activations: false },
+        );
+        assert!(r.is_err());
+        // chain break: second layer wants more inputs than the first makes
+        let b = stage(GemmShape { m: 2, k: 6, n: 2 });
+        let r = forward_stages(
+            &Runner::Sequential(&RustEngine),
+            "t",
+            &[a.clone(), b],
+            &[0.0; 16],
+            ForwardOpts { with_reference: false, fit_activations: false },
+        );
+        assert!(r.is_err());
+        // bad weight slab
+        let mut c = a;
+        c.wt.pop();
+        let r = forward_stages(
+            &Runner::Sequential(&RustEngine),
+            "t",
+            &[c],
+            &[0.0; 16],
+            ForwardOpts { with_reference: false, fit_activations: false },
+        );
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,579 @@
+//! Model-scale energy pipeline — chain GR-MAC tile layers into
+//! full-network reports (the end-to-end accounting IMAGINE and the
+//! KU Leuven analog-vs-digital benchmarking model argue is what makes
+//! CIM energy claims comparable; paper Sec. V outlook).
+//!
+//! The tile mapper ([`crate::tile`]) prices one GEMM layer. Real
+//! workloads — the paper's LLM/edge motivation — run *networks* of
+//! layers, and what happens **between** the layers decides whether the
+//! GR-MAC's ADC invariance survives composition: every layer's digital
+//! output must be requantized to the array's input format before it can
+//! drive the next layer's DACs, and every layer sees activation
+//! statistics shaped by the layers before it, so its spec-solved ADC is
+//! data-dependent in a way no single-layer evaluation captures.
+//!
+//! This module closes that gap:
+//!
+//! * [`ModelSpec`] / [`parse_model`] — a named sequence of GEMM layers:
+//!   `mlp:<d0>x<d1>x...` MLP presets, the `block:<d_model>` transformer
+//!   block (expanding to the [`crate::tile::parse_shape`] names
+//!   `qkv`/`attn-out`/`mlp-up`/`mlp-down`), or an explicit comma list of
+//!   shape strings;
+//! * [`exec`] — the layer-by-layer executor: per-layer static
+//!   calibration (max-|x| scale), inter-layer requantization to the
+//!   input format, optional per-layer [`crate::workload::EmpiricalDist`]
+//!   fitting of the activations feeding each layer, every GEMM routed
+//!   through [`crate::tile::mapper::gemm_with_engine`] (or the pooled
+//!   [`crate::tile::run_layer_with_data`], bit-identical at any worker
+//!   count), and the float reference chain for end-to-end SQNR;
+//! * [`ModelReport`] — per-layer [`crate::tile::LayerReport`]s plus
+//!   requantization SQNRs and activation statistics, aggregated into
+//!   network totals: energy, fJ/MAC, the ADC-resolution histogram across
+//!   every tile of every layer, end-to-end SQNR vs. the float chain, and
+//!   (for the trained-MLP path, [`crate::nn::cim_model_report`]) the
+//!   classification-accuracy delta vs. float inference.
+//!
+//! Consumers: [`crate::nn::cim_forward_batch`] is a thin wrapper over
+//! [`exec::forward_stages`]; `grcim model` and the serve layer's `model`
+//! request evaluate model strings via [`exec::run_model`].
+//!
+//! # Example
+//!
+//! ```
+//! use grcim::coordinator::CampaignConfig;
+//! use grcim::model::{parse_model, ModelSpec};
+//! use grcim::runtime::EngineKind;
+//!
+//! let spec = ModelSpec::preset("mlp:16x12x8", 2)?;
+//! assert_eq!(spec.layers.len(), 2);
+//! let campaign = CampaignConfig {
+//!     engine: EngineKind::Rust,
+//!     workers: 2,
+//!     seed: 7,
+//!     ..Default::default()
+//! };
+//! let res = grcim::model::run_model(&spec, &campaign)?;
+//! assert_eq!(res.report.layers.len(), 2);
+//! assert!(res.report.total_fj() > 0.0);
+//! assert!(res.report.to_figure_result().all_hold());
+//! // explicit layer lists parse too
+//! assert_eq!(parse_model("qkv:8,attn-out:8", 2)?.len(), 2);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+pub mod exec;
+
+pub use exec::{forward_stages, run_model, ForwardOpts, Runner, Stage, MODEL_STREAM};
+
+use crate::distributions::Distribution;
+use crate::energy::{energy_per_op, CimArch, TechParams};
+use crate::formats::FpFormat;
+use crate::mac::FormatPair;
+use crate::report::{FigureResult, Table};
+use crate::tile::{parse_shape, AdcPolicy, GemmShape, LayerReport, TileConfig, MAX_TILE_ENOB};
+use anyhow::{bail, Context, Result};
+
+/// Largest number of layers one model may chain — bounds serve-side work
+/// and keeps the MAC sum far from `u64` overflow (64 layers x 2^60 max
+/// MACs each still fits u64 via saturating arithmetic; requests are
+/// rejected long before that by the serve MAC cap).
+pub const MAX_MODEL_LAYERS: usize = 64;
+
+/// One GEMM layer of a model: a label, its dimensions, and an optional
+/// per-layer format override (layers without one use the model's base
+/// [`TileConfig`] formats).
+#[derive(Debug, Clone)]
+pub struct ModelLayer {
+    /// Layer label (reports only; not part of seeding or cache identity).
+    pub name: String,
+    /// GEMM dimensions (`m` is the shared token/batch dimension).
+    pub shape: GemmShape,
+    /// Per-layer input/weight format override.
+    pub fmts: Option<FormatPair>,
+}
+
+/// A full model evaluation request: the layer chain, the array
+/// configuration every layer maps onto, and the workload distributions
+/// generating the model input and the per-layer weights. Consumed by
+/// [`exec::run_model`].
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// Model label (reports only).
+    pub name: String,
+    /// The layer chain, input to output (see [`parse_model`]).
+    pub layers: Vec<ModelLayer>,
+    /// Base array configuration (formats, geometry, architecture, ADC
+    /// policy, technology parameters) for layers without an override.
+    pub cfg: TileConfig,
+    /// Model-input activation distribution.
+    pub dist_x: Distribution,
+    /// Weight distribution (every layer draws its own stream from it).
+    pub dist_w: Distribution,
+    /// Apply ReLU between layers (the MLP convention; `mlp:` presets set
+    /// this, shape-list models leave it off).
+    pub relu: bool,
+    /// Fit an [`crate::workload::EmpiricalDist`] to the (scaled)
+    /// activations feeding each layer and report its statistics.
+    pub fit_activations: bool,
+}
+
+impl ModelSpec {
+    /// Resolve a model string with the paper's default array: FP(4,2)
+    /// inputs vs max-entropy FP4 weights on 32x32 gr-unit tiles with
+    /// per-tile spec-solved ADCs. `mlp:` presets enable ReLU.
+    pub fn preset(model: &str, tokens: usize) -> Result<ModelSpec> {
+        let layers = parse_model(model, tokens)?;
+        let fmt = FpFormat::fp(4, 2);
+        let w_fmt = FpFormat::fp4_e2m1();
+        Ok(ModelSpec {
+            name: model.to_string(),
+            layers,
+            cfg: TileConfig {
+                nr: 32,
+                nc: 32,
+                fmts: FormatPair::new(fmt, w_fmt),
+                arch: CimArch::GrUnit,
+                adc: AdcPolicy::PerTileSpec,
+                tech: TechParams::default(),
+            },
+            dist_x: Distribution::gauss_outliers(),
+            dist_w: Distribution::max_entropy(w_fmt),
+            relu: model.starts_with("mlp:"),
+            fit_activations: false,
+        })
+    }
+
+    /// Total useful MACs over the chain (saturating; bounded by
+    /// [`MAX_MODEL_LAYERS`] x the per-shape bound).
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().fold(0u64, |acc, l| acc.saturating_add(l.shape.macs()))
+    }
+
+    /// The effective [`TileConfig`] of one layer (base config with the
+    /// layer's format override applied).
+    pub fn layer_cfg(&self, li: usize) -> TileConfig {
+        let mut cfg = self.cfg;
+        if let Some(fmts) = self.layers[li].fmts {
+            cfg.fmts = fmts;
+        }
+        cfg
+    }
+}
+
+/// Parse a model string into its layer chain:
+///
+/// | value | layers |
+/// |---|---|
+/// | `mlp:<d0>x<d1>x...x<dk>` | `fc<i>: [tokens x d_{i-1}] . [d_{i-1} x d_i]` (k >= 2 dims) |
+/// | `block:<d>` | `qkv:<d>, attn-out:<d>, mlp-up:<d>, mlp-down:<d>` |
+/// | `<shape>,<shape>,...` | explicit [`parse_shape`] entries |
+///
+/// Chaining rule: every layer's reduction width `K` must not exceed the
+/// previous layer's output width `N` (`K < N` feeds the leading `K`
+/// features — the documented truncation that stands in for attention
+/// between `qkv` and `attn-out`; see `docs/THEORY.md`), and every layer
+/// shares the token dimension `M`.
+pub fn parse_model(s: &str, tokens: usize) -> Result<Vec<ModelLayer>> {
+    if tokens == 0 {
+        bail!("tokens must be positive");
+    }
+    let layers: Vec<ModelLayer> = if let Some(arg) = s.strip_prefix("mlp:") {
+        let dims: Vec<usize> = arg
+            .split('x')
+            .map(|d| {
+                d.parse::<usize>()
+                    .with_context(|| format!("model '{s}': '{d}' is not a dimension"))
+            })
+            .collect::<Result<_>>()?;
+        if dims.len() < 2 {
+            bail!("model '{s}': mlp needs at least two dims, 'mlp:<d0>x<d1>[x...]'");
+        }
+        dims.windows(2)
+            .enumerate()
+            .map(|(i, d)| {
+                // parse_shape re-validates positivity and the 2^20 bound
+                let shape = parse_shape(&format!("gemm:{tokens}x{}x{}", d[0], d[1]), 1)?;
+                Ok(ModelLayer { name: format!("fc{i}"), shape, fmts: None })
+            })
+            .collect::<Result<_>>()?
+    } else if let Some(arg) = s.strip_prefix("block:") {
+        ["qkv", "attn-out", "mlp-up", "mlp-down"]
+            .iter()
+            .map(|kind| {
+                let name = format!("{kind}:{arg}");
+                let shape = parse_shape(&name, tokens)?;
+                Ok(ModelLayer { name, shape, fmts: None })
+            })
+            .collect::<Result<_>>()?
+    } else {
+        s.split(',')
+            .map(str::trim)
+            .filter(|e| !e.is_empty())
+            .map(|e| {
+                let shape = parse_shape(e, tokens)?;
+                Ok(ModelLayer { name: e.to_string(), shape, fmts: None })
+            })
+            .collect::<Result<_>>()?
+    };
+    if layers.is_empty() {
+        bail!("model '{s}' has no layers");
+    }
+    if layers.len() > MAX_MODEL_LAYERS {
+        bail!("model '{s}' has {} layers (max {MAX_MODEL_LAYERS})", layers.len());
+    }
+    check_chain(s, &layers)?;
+    Ok(layers)
+}
+
+/// Validate the chaining rule (shared by [`parse_model`] and the
+/// executor, which also accepts hand-built layer lists).
+pub fn check_chain(what: &str, layers: &[ModelLayer]) -> Result<()> {
+    if layers.is_empty() {
+        bail!("model '{what}' has no layers");
+    }
+    let m = layers[0].shape.m;
+    for (i, l) in layers.iter().enumerate() {
+        if l.shape.m != m {
+            bail!(
+                "model '{what}': layer {i} ('{}') has M={} but the chain runs at M={m}",
+                l.name,
+                l.shape.m
+            );
+        }
+        if i > 0 {
+            let prev = layers[i - 1].shape.n;
+            if l.shape.k > prev {
+                bail!(
+                    "model '{what}': layer {i} ('{}') needs K={} inputs but layer {} \
+                     only produces N={prev}",
+                    l.name,
+                    l.shape.k,
+                    i - 1
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Statistics of the (scaled) activation tensor feeding one layer — the
+/// [`crate::workload::EmpiricalDist`] fit summary of the inter-layer
+/// traffic (requested via [`ModelSpec::fit_activations`]).
+#[derive(Debug, Clone, Copy)]
+pub struct ActStats {
+    /// Dynamic range of the nonzero activations, bits.
+    pub dr_bits: f64,
+    /// Robust core spread ((Q(.84) - Q(.16)) / 2 on the normalized scale).
+    pub sigma_core: f64,
+    /// Mass beyond the fit's outlier threshold.
+    pub outlier_mass: f64,
+    /// Mean of the normalized activations.
+    pub mean: f64,
+    /// Standard deviation of the normalized activations.
+    pub std: f64,
+}
+
+/// One executed layer of a model: the tile-level report plus the
+/// inter-layer bookkeeping that only exists at model scale.
+#[derive(Debug, Clone)]
+pub struct LayerOutcome {
+    /// The tile mapper's per-layer evaluation.
+    pub report: LayerReport,
+    /// Static per-tensor calibration scale (max |activation|) applied
+    /// before requantization.
+    pub a_scale: f64,
+    /// SQNR of the inter-layer requantization to the input format, dB
+    /// (scaled activations vs their format-quantized f32 encoding).
+    pub requant_sqnr_db: f64,
+    /// Fit summary of the activations feeding this layer (when
+    /// [`ModelSpec::fit_activations`] is set and the fit succeeds).
+    pub act_stats: Option<ActStats>,
+}
+
+/// The network-level evaluation: per-layer outcomes plus model totals.
+/// Produced by [`exec::forward_stages`] / [`exec::run_model`]; rendered
+/// by [`ModelReport::to_figure_result`].
+#[derive(Debug, Clone)]
+pub struct ModelReport {
+    /// Model label.
+    pub name: String,
+    /// Token/batch dimension shared by every layer.
+    pub tokens: usize,
+    /// Per-layer outcomes, input to output.
+    pub layers: Vec<LayerOutcome>,
+    /// End-to-end output SQNR vs the exact float chain, dB (NaN on the
+    /// no-reference fast path).
+    pub sqnr_db: f64,
+    /// Float-inference classification accuracy (trained-MLP path only).
+    pub accuracy_float: Option<f64>,
+    /// CIM-inference classification accuracy (trained-MLP path only).
+    pub accuracy_cim: Option<f64>,
+}
+
+impl ModelReport {
+    /// Total model energy: sum of the per-layer totals, fJ.
+    pub fn total_fj(&self) -> f64 {
+        self.layers.iter().map(|l| l.report.total_fj()).sum()
+    }
+
+    /// Total useful MACs over the chain.
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.report.shape.macs()).sum()
+    }
+
+    /// Energy per useful MAC, fJ.
+    pub fn fj_per_mac(&self) -> f64 {
+        self.total_fj() / self.macs() as f64
+    }
+
+    /// Energy per operation (one MAC = two ops, the paper's convention).
+    pub fn fj_per_op(&self) -> f64 {
+        self.fj_per_mac() / 2.0
+    }
+
+    /// CIM-minus-float classification-accuracy delta (trained-MLP path).
+    pub fn accuracy_delta(&self) -> Option<f64> {
+        match (self.accuracy_cim, self.accuracy_float) {
+            (Some(c), Some(f)) => Some(c - f),
+            _ => None,
+        }
+    }
+
+    /// ADC-resolution histogram across every tile of every layer:
+    /// (floor(ENOB), tile count), ascending.
+    pub fn enob_histogram(&self) -> Vec<(i64, usize)> {
+        let mut bins = std::collections::BTreeMap::new();
+        for l in &self.layers {
+            for t in &l.report.tiles {
+                *bins.entry(t.enob.floor() as i64).or_insert(0usize) += 1;
+            }
+        }
+        bins.into_iter().collect()
+    }
+
+    /// Number of tiles across every layer.
+    pub fn tile_count(&self) -> usize {
+        self.layers.iter().map(|l| l.report.tiles.len()).sum()
+    }
+
+    /// Mean per-tile ADC resolution across the whole model, bits.
+    pub fn enob_mean(&self) -> f64 {
+        let n = self.tile_count();
+        let sum: f64 = self
+            .layers
+            .iter()
+            .flat_map(|l| l.report.tiles.iter().map(|t| t.enob))
+            .sum();
+        sum / n as f64
+    }
+
+    /// Render the report as tables + invariant checks (the `grcim model`
+    /// output and the serve layer's `model` response).
+    pub fn to_figure_result(&self) -> FigureResult {
+        let mut fr = FigureResult::new("model");
+
+        let mut summary = Table::new("model summary", &["metric", "value"]);
+        let mut kv = |k: &str, v: String| summary.row(vec![k.into(), v]);
+        kv("model", self.name.clone());
+        kv("tokens", self.tokens.to_string());
+        kv("layers", self.layers.len().to_string());
+        kv("tiles", self.tile_count().to_string());
+        kv("macs", self.macs().to_string());
+        kv("enob_mean", Table::f(self.enob_mean()));
+        kv("end_to_end_sqnr_db", Table::f(self.sqnr_db));
+        kv("total_fj", Table::f(self.total_fj()));
+        kv("fj_per_mac", Table::f(self.fj_per_mac()));
+        kv("fj_per_op", Table::f(self.fj_per_op()));
+        if let (Some(f), Some(c)) = (self.accuracy_float, self.accuracy_cim) {
+            kv("accuracy_float", Table::f(f));
+            kv("accuracy_cim", Table::f(c));
+            kv("accuracy_delta", Table::f(c - f));
+        }
+        fr.tables.push(summary);
+
+        let mut layers = Table::new(
+            "layers",
+            &[
+                "layer", "shape", "tiles", "enob_mean", "sqnr_db", "requant_db", "act_dr_bits",
+                "act_outliers", "total_fj", "fj_per_mac",
+            ],
+        );
+        for l in &self.layers {
+            let r = &l.report;
+            let (dr, mass) = match &l.act_stats {
+                Some(s) => (Table::f(s.dr_bits), Table::f(s.outlier_mass)),
+                None => ("-".into(), "-".into()),
+            };
+            layers.row(vec![
+                r.name.clone(),
+                r.shape.to_string(),
+                r.tiles.len().to_string(),
+                Table::f(r.enob_mean()),
+                Table::f(r.sqnr_db),
+                Table::f(l.requant_sqnr_db),
+                dr,
+                mass,
+                Table::f(r.total_fj()),
+                Table::f(r.fj_per_mac()),
+            ]);
+        }
+        fr.tables.push(layers);
+
+        let mut hist = Table::new("adc histogram (all layers)", &["enob_bin", "tiles", "pct"]);
+        let tiles = self.tile_count();
+        for (bin, count) in self.enob_histogram() {
+            hist.row(vec![
+                format!("[{bin},{})", bin + 1),
+                count.to_string(),
+                Table::f(100.0 * count as f64 / tiles as f64),
+            ]);
+        }
+        fr.tables.push(hist);
+
+        // ---- invariant checks (distribution-independent) ----
+        // model totals must reconcile with independent energy::arch
+        // evaluations at the reported per-tile resolutions, layer by layer
+        let mut independent = 0.0;
+        for l in &self.layers {
+            let r = &l.report;
+            let mvm_ops = (2 * r.cfg.nr * r.cfg.nc * r.shape.m) as f64;
+            let tiles_fj: f64 = r
+                .tiles
+                .iter()
+                .map(|t| {
+                    energy_per_op(r.cfg.arch, r.cfg.fmts, r.cfg.nr, r.cfg.nc, t.enob, &r.cfg.tech)
+                        .total()
+                        * mvm_ops
+                })
+                .sum();
+            independent += tiles_fj + r.reduction_fj + r.global_norm_fj;
+        }
+        let total = self.total_fj();
+        let rel = (independent - total).abs() / total.max(1e-300);
+        fr.check(
+            "layer energy totals reconcile with energy::arch",
+            "sum of independent per-tile evaluations",
+            format!("rel diff {rel:.3e}"),
+            rel < 1e-9,
+        );
+        let covered: u64 =
+            self.layers.iter().flat_map(|l| l.report.tiles.iter().map(|t| t.macs)).sum();
+        fr.check(
+            "tile grids cover every layer GEMM exactly once",
+            format!("{} macs", self.macs()),
+            format!("{covered} macs"),
+            covered == self.macs(),
+        );
+        let enob_ok = self
+            .layers
+            .iter()
+            .flat_map(|l| l.report.tiles.iter())
+            .all(|t| t.enob.is_finite() && (0.0..=MAX_TILE_ENOB).contains(&t.enob));
+        fr.check(
+            "per-tile ADC resolutions are finite and physical",
+            format!("0 <= enob <= {MAX_TILE_ENOB}"),
+            format!("mean {}", Table::f(self.enob_mean())),
+            enob_ok,
+        );
+        let requant_ok = self.layers.iter().all(|l| l.requant_sqnr_db.is_finite());
+        fr.check(
+            "model SQNR, requantization SQNRs, and energy totals are finite",
+            "finite",
+            format!("e2e {} dB, total {} fJ", Table::f(self.sqnr_db), Table::f(total)),
+            self.sqnr_db.is_finite() && total.is_finite() && requant_ok,
+        );
+        fr
+    }
+}
+
+/// A completed model evaluation: the report plus the network's final
+/// activations (row-major `[M][N_last]`, float domain).
+#[derive(Debug, Clone)]
+pub struct ModelResult {
+    /// Per-layer and network-level evaluation.
+    pub report: ModelReport,
+    /// Final-layer activations after the epilogue, row-major.
+    pub y: Vec<f64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_preset_expands_to_a_chain() {
+        let layers = parse_model("mlp:24x16x12x8", 4).unwrap();
+        assert_eq!(layers.len(), 3);
+        assert_eq!(layers[0].shape, GemmShape { m: 4, k: 24, n: 16 });
+        assert_eq!(layers[1].shape, GemmShape { m: 4, k: 16, n: 12 });
+        assert_eq!(layers[2].shape, GemmShape { m: 4, k: 12, n: 8 });
+        assert_eq!(layers[0].name, "fc0");
+        assert!(ModelSpec::preset("mlp:24x16x8", 4).unwrap().relu);
+    }
+
+    #[test]
+    fn block_preset_reuses_named_shapes() {
+        let layers = parse_model("block:16", 2).unwrap();
+        assert_eq!(layers.len(), 4);
+        assert_eq!(layers[0].shape, GemmShape { m: 2, k: 16, n: 48 });
+        assert_eq!(layers[1].shape, GemmShape { m: 2, k: 16, n: 16 });
+        assert_eq!(layers[2].shape, GemmShape { m: 2, k: 16, n: 64 });
+        assert_eq!(layers[3].shape, GemmShape { m: 2, k: 64, n: 16 });
+        assert!(!ModelSpec::preset("block:16", 2).unwrap().relu);
+    }
+
+    #[test]
+    fn explicit_lists_chain_and_mischains_are_errors() {
+        let layers = parse_model("gemm:2x8x6, gemm:2x6x4", 9).unwrap();
+        assert_eq!(layers.len(), 2);
+        // K < previous N is the documented truncation, K > N is an error
+        assert!(parse_model("gemm:2x8x6,gemm:2x4x4", 9).is_ok());
+        let err = parse_model("gemm:2x8x6,gemm:2x7x4", 9).unwrap_err().to_string();
+        assert!(err.contains("only produces"), "{err}");
+        // mismatched token dimension
+        assert!(parse_model("gemm:2x8x6,gemm:3x6x4", 9).is_err());
+    }
+
+    #[test]
+    fn malformed_models_are_clean_errors() {
+        for bad in [
+            "mlp:",         // no dims
+            "mlp:16",       // one dim
+            "mlp:16xabc",   // non-numeric
+            "mlp:16x0",     // zero dim
+            "block:",       // empty d
+            "block:0",      // zero d
+            "warp:64",      // unknown shape kind
+            "",             // empty list
+            ",,",           // empty entries only
+            "gemm:2x8",     // bad shape in list
+        ] {
+            assert!(parse_model(bad, 4).is_err(), "{bad}");
+        }
+        assert!(parse_model("mlp:16x8", 0).is_err());
+        // the layer-count bound holds
+        let many = vec!["16"; MAX_MODEL_LAYERS + 2].join("x");
+        assert!(parse_model(&format!("mlp:{many}"), 2).is_err());
+    }
+
+    #[test]
+    fn empty_hand_built_chains_are_errors_not_panics() {
+        // ModelSpec fields are public; an empty hand-built layer list
+        // must fail cleanly through every entry point
+        assert!(check_chain("empty", &[]).is_err());
+        let mut spec = ModelSpec::preset("mlp:8x8", 2).unwrap();
+        spec.layers.clear();
+        let campaign = crate::coordinator::CampaignConfig::default();
+        assert!(super::run_model(&spec, &campaign).is_err());
+    }
+
+    #[test]
+    fn spec_macs_and_layer_cfg_overrides() {
+        let mut spec = ModelSpec::preset("mlp:8x8x8", 2).unwrap();
+        assert_eq!(spec.macs(), 2 * (2 * 8 * 8) as u64);
+        let wide = FormatPair::new(FpFormat::fp(5, 2), FpFormat::fp4_e2m1());
+        spec.layers[1].fmts = Some(wide);
+        assert_eq!(spec.layer_cfg(0).fmts.x, FpFormat::fp(4, 2));
+        assert_eq!(spec.layer_cfg(1).fmts.x, FpFormat::fp(5, 2));
+    }
+}

@@ -2,8 +2,13 @@
 //! (`examples/mlp_inference.rs`): a from-scratch MLP with SGD training on
 //! synthetic data, plus CIM-quantized inference that routes every layer
 //! matmul through the simulated analog array (conventional or GR-MAC
-//! signal chain, ADC at the spec-solved ENOB) via a
-//! [`crate::runtime::Engine`].
+//! signal chain, ADC at the configured ENOB) via a
+//! [`crate::runtime::Engine`]. Inference is a thin wrapper over the
+//! model-scale executor ([`crate::model::forward_stages`]):
+//! [`cim_forward_batch`] runs the no-reference fast path, and
+//! [`cim_model_report`] produces the full [`crate::model::ModelReport`]
+//! — per-layer energy, requantization/layer SQNRs, and the
+//! classification-accuracy delta vs float inference.
 //!
 //! # Example
 //!
@@ -42,10 +47,11 @@
 
 use crate::energy::{CimArch, TechParams};
 use crate::mac::FormatPair;
+use crate::model::{forward_stages, ForwardOpts, ModelResult, Runner, Stage};
 use crate::rng::Pcg64;
 use crate::runtime::Engine;
 use crate::spec::Arch;
-use crate::tile::{gemm_outputs, AdcPolicy, GemmShape, TileConfig};
+use crate::tile::{AdcPolicy, GemmShape, TileConfig};
 use anyhow::Result;
 
 /// A dense layer: row-major weights `[out][inp]`, bias `[out]`.
@@ -266,15 +272,40 @@ impl CimInference {
     }
 }
 
+/// Build the model-executor stages of a trained MLP on one array
+/// configuration: per-layer max-|w| weight calibration, biases, and the
+/// hidden-layer ReLU epilogue — the [`crate::model`] form of this
+/// network's inference pass.
+pub fn mlp_stages(mlp: &Mlp, cfg: &CimInference, batch: usize) -> Vec<Stage> {
+    let tcfg = cfg.tile_config();
+    let layers = mlp.layers.len();
+    mlp.layers
+        .iter()
+        .enumerate()
+        .map(|(li, layer)| {
+            let w_scale = layer.w.iter().fold(0.0f64, |m, v| m.max(v.abs())).max(1e-12);
+            let wt: Vec<f32> = layer.w.iter().map(|v| (v / w_scale) as f32).collect();
+            Stage {
+                name: format!("fc{li}"),
+                shape: GemmShape { m: batch, k: layer.inp, n: layer.out },
+                cfg: tcfg,
+                wt,
+                w_scale,
+                bias: Some(layer.b.clone()),
+                relu: li + 1 < layers,
+            }
+        })
+        .collect()
+}
+
 /// Run a batch of inputs through the network with every matmul executed
-/// by the simulated CIM array: activations and weights are scaled
-/// per-layer/per-batch to [-1, 1] (static per-tensor calibration), then
-/// each layer runs as one tiled GEMM through the array mapper
-/// ([`crate::tile::gemm_outputs`] — the fast path that skips the
-/// reference-GEMM/SQNR accounting): weight-stationary N_R × N_C
-/// tiles, the selected analog signal chain, ADC at `enob`,
-/// renormalization, digital partial-sum reduction — and finally the
-/// bias/ReLU epilogue in the float domain.
+/// by the simulated CIM array. A thin wrapper over the model executor
+/// ([`crate::model::forward_stages`], no-reference fast path): per-layer
+/// static calibration, inter-layer requantization to the input format,
+/// one tiled GEMM per layer (weight-stationary N_R × N_C tiles, the
+/// selected analog signal chain, ADC at `enob`, renormalization, digital
+/// partial-sum reduction), and the bias/ReLU epilogue in the float
+/// domain.
 pub fn cim_forward_batch(
     mlp: &Mlp,
     engine: &dyn Engine,
@@ -285,51 +316,55 @@ pub fn cim_forward_batch(
     if n == 0 {
         return Ok(Vec::new());
     }
-    let tcfg = cfg.tile_config();
-    let mut acts: Vec<Vec<f64>> = xs.to_vec();
-    for (li, layer) in mlp.layers.iter().enumerate() {
-        // static per-tensor scales over the whole batch
-        let a_scale = acts
-            .iter()
-            .flat_map(|a| a.iter())
-            .fold(0.0f64, |m, v| m.max(v.abs()))
-            .max(1e-12);
-        let w_scale = layer
-            .w
-            .iter()
-            .fold(0.0f64, |m, v| m.max(v.abs()))
-            .max(1e-12);
+    let stages = mlp_stages(mlp, cfg, n);
+    let x0: Vec<f64> = xs.iter().flat_map(|x| x.iter().copied()).collect();
+    let res = forward_stages(
+        &Runner::Sequential(engine),
+        "mlp",
+        &stages,
+        &x0,
+        ForwardOpts { with_reference: false, fit_activations: false },
+    )?;
+    let out = mlp.layers.last().expect("mlp has layers").out;
+    Ok(res.y.chunks(out).map(|c| c.to_vec()).collect())
+}
 
-        // scaled f32 operands: X [n×inp], Wᵀ [out×inp] (the Dense layout)
-        let mut xf = vec![0.0f32; n * layer.inp];
-        for (s, act) in acts.iter().enumerate() {
-            for (dst, v) in xf[s * layer.inp..(s + 1) * layer.inp].iter_mut().zip(act) {
-                *dst = (v / a_scale) as f32;
-            }
-        }
-        let mut wtf = vec![0.0f32; layer.out * layer.inp];
-        for (dst, v) in wtf.iter_mut().zip(&layer.w) {
-            *dst = (v / w_scale) as f32;
-        }
-
-        let shape = GemmShape { m: n, k: layer.inp, n: layer.out };
-        let res = gemm_outputs(engine, "nn-layer", &tcfg, shape, &xf, &wtf)?;
-
-        // epilogue: rescale, bias, hidden-layer ReLU
-        let mut next = Vec::with_capacity(n);
-        for s in 0..n {
-            let mut z = vec![0.0f64; layer.out];
-            for (o, zo) in z.iter_mut().enumerate() {
-                *zo = res.y[s * layer.out + o] * a_scale * w_scale + layer.b[o];
-                if li + 1 < mlp.layers.len() {
-                    *zo = zo.max(0.0);
-                }
-            }
-            next.push(z);
-        }
-        acts = next;
+/// Full model-scale evaluation of a trained MLP's CIM inference: the
+/// [`crate::model::ModelReport`] (per-layer energy, requantization and
+/// layer SQNRs, activation statistics, end-to-end SQNR) with the
+/// classification-accuracy delta vs float inference filled in — the
+/// "MLP path" of the model-scale energy pipeline.
+pub fn cim_model_report(
+    mlp: &Mlp,
+    engine: &dyn Engine,
+    cfg: &CimInference,
+    xs: &[Vec<f64>],
+    ys: &[usize],
+) -> Result<ModelResult> {
+    assert_eq!(xs.len(), ys.len());
+    if xs.is_empty() {
+        // a zero-row model run would report 0/0 = NaN accuracies
+        anyhow::bail!("cim_model_report needs at least one labeled input");
     }
-    Ok(acts)
+    let stages = mlp_stages(mlp, cfg, xs.len());
+    let x0: Vec<f64> = xs.iter().flat_map(|x| x.iter().copied()).collect();
+    let mut res = forward_stages(
+        &Runner::Sequential(engine),
+        "mlp",
+        &stages,
+        &x0,
+        ForwardOpts { with_reference: true, fit_activations: true },
+    )?;
+    let out = mlp.layers.last().expect("mlp has layers").out;
+    let correct = res
+        .y
+        .chunks(out)
+        .zip(ys)
+        .filter(|(logits, &y)| argmax(logits) == y)
+        .count();
+    res.report.accuracy_cim = Some(correct as f64 / ys.len() as f64);
+    res.report.accuracy_float = Some(accuracy(mlp, xs, ys));
+    Ok(res)
 }
 
 /// Single-input convenience wrapper over [`cim_forward_batch`].
@@ -456,6 +491,38 @@ mod tests {
             gr >= conv - 0.02,
             "gr {gr} should not trail conventional {conv} at coarse ADC"
         );
+    }
+
+    #[test]
+    fn model_report_carries_accuracy_delta_and_matches_the_wrapper() {
+        let (mlp, xs, ys) = train_small();
+        let cfg = CimInference {
+            fmts: FormatPair::new(FpFormat::fp(4, 6), FpFormat::fp(4, 6)),
+            arch: Arch::GrUnit,
+            enob: 16.0,
+            nr: 16,
+            nc: 16,
+        };
+        let res =
+            cim_model_report(&mlp, &RustEngine, &cfg, &xs[..128], &ys[..128])
+                .unwrap();
+        let rep = &res.report;
+        assert_eq!(rep.layers.len(), 2);
+        assert!(rep.sqnr_db > 20.0, "e2e sqnr {}", rep.sqnr_db);
+        // fine formats + generous ADC: accuracy tracks float inference
+        let delta = rep.accuracy_delta().unwrap();
+        assert!(delta.abs() <= 0.05, "accuracy delta {delta}");
+        assert!(rep.to_figure_result().all_hold());
+        // the inference wrapper is the same pipeline minus the reference
+        // work: its logits match the report's outputs bit for bit
+        let logits =
+            cim_forward_batch(&mlp, &RustEngine, &cfg, &xs[..128]).unwrap();
+        let out = mlp.layers.last().unwrap().out;
+        for (row, chunk) in logits.iter().zip(res.y.chunks(out)) {
+            for (a, b) in row.iter().zip(chunk) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 
     #[test]

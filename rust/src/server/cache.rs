@@ -318,6 +318,7 @@ impl<V: Send + Sync> ShardedCache<V> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::panic::AssertUnwindSafe;
     use std::sync::atomic::AtomicUsize;
     use std::sync::Barrier;
 
@@ -405,6 +406,55 @@ mod tests {
             Err(e) => assert!(format!("{e:#}").contains("leader failed")),
             Ok((v, _)) => assert_eq!(v, 1),
         }
+    }
+
+    #[test]
+    fn panicking_leader_wakes_followers_and_does_not_poison_the_key() {
+        // the single-flight audit this pins: if the leader's compute
+        // panics (not Errs), FlightGuard must deregister the flight and
+        // fail it, so (a) followers blocked on the Condvar wake with an
+        // error or recompute — never hang — and (b) the next request for
+        // the key computes fresh instead of inheriting a dead flight
+        let c: Arc<ShardedCache<u64>> = Arc::new(ShardedCache::new(16));
+        let barrier = Arc::new(Barrier::new(2));
+
+        let c_leader = Arc::clone(&c);
+        let b_leader = Arc::clone(&barrier);
+        let leader = std::thread::spawn(move || {
+            b_leader.wait();
+            // the follower sleeps first, so this thread claims the flight
+            let _ = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                c_leader.get_or_compute("k", || -> Result<u64> {
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                    panic!("compute exploded");
+                })
+            }));
+        });
+
+        let c_follower = Arc::clone(&c);
+        let b_follower = Arc::clone(&barrier);
+        let follower = std::thread::spawn(move || {
+            b_follower.wait();
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            c_follower.get_or_compute("k", || Ok(5)).map(|(v, o)| (*v, o))
+        });
+
+        leader.join().unwrap();
+        // the follower either coalesced onto the panicked flight (clean
+        // error naming the panic) or arrived after its removal and
+        // computed fresh — both are fine; hanging is not (join returns)
+        match follower.join().unwrap() {
+            Err(e) => {
+                assert!(format!("{e:#}").contains("panicked"), "{e:#}")
+            }
+            Ok((v, _)) => assert_eq!(v, 5),
+        }
+        // the key is not poisoned: a later request computes normally
+        let (v, o) = c.get_or_compute("k", || Ok(7)).unwrap();
+        assert!(*v == 5 || *v == 7, "got {v}");
+        assert!(matches!(o, Outcome::Computed | Outcome::Hit));
+        let (v2, _) = c.get_or_compute("k", || Ok(9)).unwrap();
+        assert_eq!(*v2, *v, "cached value must be stable");
     }
 
     #[test]

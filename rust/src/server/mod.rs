@@ -39,7 +39,7 @@
 pub mod cache;
 pub mod proto;
 
-use crate::cli::sweep::{experiment_spec, LayerParams};
+use crate::cli::sweep::{experiment_spec, LayerParams, ModelParams};
 use crate::config::Json;
 use crate::coordinator::{run_campaign, CampaignConfig, ExperimentSpec};
 use crate::distributions::Distribution;
@@ -67,13 +67,16 @@ pub const DEFAULT_ADDR: &str = "127.0.0.1:4080";
 const IDLE_TICK: Duration = Duration::from_millis(200);
 
 /// Largest accepted request line; a client streaming more without a
-/// newline gets an error and is disconnected (bounds per-connection
-/// memory).
+/// newline gets an error, the rest of that line is discarded up to its
+/// newline (never parsed as a request), and the connection keeps
+/// serving. Bounds per-connection memory.
 const MAX_LINE: usize = 1 << 20;
 
 /// Largest layer a `layer` request may evaluate, in MACs (M·K·N) — caps
 /// the reference-GEMM compute (a 4096-d MLP up-projection at 4 tokens is
-/// ~2.7e8 MACs, far below it).
+/// ~2.7e8 MACs, far below it). A `model` request's **layer sum** is held
+/// to the same budget: chaining layers must not smuggle in more compute
+/// than one maximal layer.
 pub const MAX_LAYER_MACS: u64 = 1 << 36;
 
 /// Largest operand slab (`M·K` or `N·K` f32 elements) a `layer` request
@@ -114,6 +117,7 @@ pub struct CampaignService {
     figs: ShardedCache<String>,
     workloads: ShardedCache<String>,
     layers: ShardedCache<String>,
+    models: ShardedCache<String>,
 }
 
 fn arch_json(name: &str, enob: f64, b: &EnergyBreakdown) -> Json {
@@ -151,6 +155,7 @@ impl CampaignService {
             figs: ShardedCache::new((cache_entries / 8).max(8)),
             workloads: ShardedCache::new((cache_entries / 8).max(8)),
             layers: ShardedCache::new((cache_entries / 8).max(8)),
+            models: ShardedCache::new((cache_entries / 8).max(8)),
         }
     }
 
@@ -199,6 +204,7 @@ impl CampaignService {
                 self.figure(id, *samples, *seed)
             }
             Request::Layer { params, seed } => self.layer(params, *seed),
+            Request::Model { params, seed } => self.model(params, *seed),
             Request::Workload { source, samples, seed } => {
                 self.workload(source, *samples, *seed)
             }
@@ -219,6 +225,7 @@ impl CampaignService {
             ("aggregates", stats_json(&self.aggs.stats())),
             ("figures", stats_json(&self.figs.stats())),
             ("layers", stats_json(&self.layers.stats())),
+            ("models", stats_json(&self.models.stats())),
             ("workloads", stats_json(&self.workloads.stats())),
         ]))
     }
@@ -435,6 +442,69 @@ impl CampaignService {
         Ok((result, o.is_cached()))
     }
 
+    /// The model query: evaluate a multi-layer model on the chained tile
+    /// pipeline ([`crate::model::run_model`] — every layer's tile jobs
+    /// shard across the worker pool), cached by [`proto::model_key`]
+    /// over the **resolved** spec. The `layer` request's MAC and
+    /// operand-slab caps are enforced **across the layer sum**, so a
+    /// chain of layers cannot exceed the budget one maximal layer gets.
+    fn model(&self, params: &ModelParams, seed: Option<u64>) -> Result<(Json, bool)> {
+        let seed = seed.unwrap_or(self.campaign.seed);
+        // empirical model-input distributions read a server-side trace
+        if let Some(path) = params.distribution.strip_prefix("empirical:") {
+            confined_trace_path(path)?;
+        }
+        let spec = params.resolve()?;
+        let total_macs = spec.macs();
+        if total_macs > MAX_LAYER_MACS {
+            bail!(
+                "model '{}' is too large for the service ({total_macs} MACs across \
+                 {} layers > {MAX_LAYER_MACS})",
+                spec.name,
+                spec.layers.len()
+            );
+        }
+        // parse_shape bounds each dimension to 2^20, so these products
+        // cannot overflow u64. The slab cap applies to the **sum** of
+        // every layer's operand elements: run_model materializes all
+        // weight slabs for the whole run, so a per-layer cap would let a
+        // 64-layer chain allocate 64x the budget one maximal layer gets
+        let mut sum_elems = 0u64;
+        for l in &spec.layers {
+            let x_elems = l.shape.m as u64 * l.shape.k as u64;
+            let wt_elems = l.shape.n as u64 * l.shape.k as u64;
+            let act_elems = l.shape.m as u64 * l.shape.n as u64;
+            sum_elems = sum_elems
+                .saturating_add(x_elems)
+                .saturating_add(wt_elems)
+                .saturating_add(act_elems);
+        }
+        if sum_elems > MAX_LAYER_ELEMS {
+            bail!(
+                "model '{}' is too large for the service (operand slabs \
+                 of {sum_elems} total elements > {MAX_LAYER_ELEMS})",
+                spec.name
+            );
+        }
+        let key = proto::model_key(&spec, seed, self.engine_name());
+        let campaign = CampaignConfig { seed, ..self.campaign.clone() };
+        let layers = spec.layers.len();
+        let arch = spec.cfg.arch;
+        let (text, o) = self.models.get_or_compute(&key, move || {
+            let res = crate::model::run_model(&spec, &campaign)?;
+            Ok(res.report.to_figure_result().to_json().to_string())
+        })?;
+        let report = Json::parse(&text).context("re-parsing cached model JSON")?;
+        let result = obj(vec![
+            ("model", Json::Str(params.model.clone())),
+            ("layers", Json::Num(layers as f64)),
+            ("arch", Json::Str(arch.name().to_string())),
+            ("seed", Json::Num(seed as f64)),
+            ("report", report),
+        ]);
+        Ok((result, o.is_cached()))
+    }
+
     /// The workload query: fit an empirical trace and run the full
     /// `grcim workload` analysis ([`crate::workload::report`]), cached by
     /// the trace's **content hash** — two uploads of the same tensor (even
@@ -630,27 +700,64 @@ fn handle_conn(
     };
     let mut reader = BufReader::new(reader_half);
     let mut writer = BufWriter::new(stream);
-    let mut line = String::new();
+    // Lines are accumulated as raw *bytes* and converted lossily at
+    // dispatch: `read_line`'s UTF-8 validation would disconnect a client
+    // whose multi-byte character straddles the byte cap, and std
+    // truncates a whole chunk when a read timeout splits a character —
+    // byte accumulation has neither failure mode (invalid UTF-8 simply
+    // parses as a malformed request and gets an error response).
+    let mut line: Vec<u8> = Vec::new();
+    // after an oversized request line is rejected, the reader *resyncs*:
+    // the rest of that line (up to its newline) is discarded, never
+    // parsed as a request, and the connection keeps serving — the next
+    // complete line is handled normally
+    let mut discarding = false;
     loop {
         // cap how much a newline-less client can make us buffer
-        let budget = MAX_LINE.saturating_sub(line.len()) as u64;
-        if budget == 0 {
+        if !discarding && line.len() >= MAX_LINE {
             let msg = proto::err_line(&format!(
                 "request line exceeds {MAX_LINE} bytes"
             ));
-            let _ = writer.write_all(msg.as_bytes());
-            let _ = writer.write_all(b"\n");
-            let _ = writer.flush();
-            break;
-        }
-        match std::io::Read::take(&mut reader, budget).read_line(&mut line) {
-            Ok(0) => break, // EOF: client closed
-            Ok(_) if !line.ends_with('\n') && line.len() >= MAX_LINE => {
-                // budget exhausted mid-line: handled at the loop top
-                continue;
+            if writer.write_all(msg.as_bytes()).is_err()
+                || writer.write_all(b"\n").is_err()
+                || writer.flush().is_err()
+            {
+                break;
             }
+            discarding = true;
+            line.clear();
+        }
+        let budget = if discarding {
+            MAX_LINE as u64
+        } else {
+            (MAX_LINE - line.len()) as u64
+        };
+        match std::io::Read::take(&mut reader, budget).read_until(b'\n', &mut line) {
+            Ok(0) => break, // EOF: client closed
             Ok(_) => {
-                let resp = respond_line(&service, line.trim());
+                let complete = line.ends_with(b"\n");
+                if discarding {
+                    // chunks of the oversized line are dropped silently
+                    // (they are the middle of a rejected request, not a
+                    // request); its terminating newline ends the resync
+                    if complete {
+                        discarding = false;
+                    }
+                    line.clear();
+                    continue;
+                }
+                if !complete && line.len() >= MAX_LINE {
+                    // budget exhausted mid-line: the loop top rejects
+                    // the line and starts discarding
+                    continue;
+                }
+                // a complete line — or the connection's final,
+                // EOF-terminated request without a trailing newline
+                // (read_until without a newline below the cap means
+                // EOF), which is answered like any other
+                let text = String::from_utf8_lossy(&line);
+                let resp = respond_line(&service, text.trim());
+                drop(text);
                 line.clear();
                 if let Some(resp) = resp {
                     if writer.write_all(resp.as_bytes()).is_err()
@@ -919,6 +1026,100 @@ mod tests {
             r#"{"cmd":"layer","shape":"gemm:1x1048576x65536"}"#,
             // empirical activation traces are confined like workload paths
             r#"{"cmd":"layer","shape":"gemm:2x8x8",
+                "distribution":"empirical:/etc/hostname"}"#,
+        ] {
+            let req = proto::parse_request(line).unwrap();
+            let j = Json::parse(&svc.respond(&req)).unwrap();
+            assert_eq!(j.get("ok"), Some(&Json::Bool(false)), "{line}");
+        }
+    }
+
+    #[test]
+    fn model_request_cached_and_reconciled() {
+        let svc = test_service();
+        let line = r#"{"cmd":"model","model":"mlp:16x12x8","tokens":2,"nr":8,"nc":4,
+            "n_e":2,"arch":"gr","fit":true}"#;
+        let req = proto::parse_request(line).unwrap();
+        let cold = svc.respond(&req);
+        let j = Json::parse(&cold).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{cold}");
+        assert_eq!(j.get("cached"), Some(&Json::Bool(false)));
+        let r = j.get("result").unwrap();
+        assert_eq!(r.get("model").and_then(Json::as_str), Some("mlp:16x12x8"));
+        assert_eq!(r.get("layers").unwrap().as_usize(), Some(2));
+        assert_eq!(r.get("arch").and_then(Json::as_str), Some("gr-unit"));
+        let report = r.get("report").unwrap();
+        assert_eq!(report.get("name").and_then(Json::as_str), Some("model"));
+        // the invariant checks (incl. energy reconciliation) all hold
+        assert_eq!(report.get("all_hold"), Some(&Json::Bool(true)), "{report}");
+        // summary + layers + histogram
+        assert_eq!(report.get("tables").unwrap().items().len(), 3);
+
+        // byte-identical hit
+        let warm = svc.respond(&req);
+        let jw = Json::parse(&warm).unwrap();
+        assert_eq!(jw.get("cached"), Some(&Json::Bool(true)));
+        assert_eq!(result_str(&cold), result_str(&warm));
+        assert_eq!(svc.models.stats().computes, 1);
+
+        // an arch alias resolving identically shares the entry
+        let alias = line.replace("\"gr\"", "\"gr-unit\"");
+        let req2 = proto::parse_request(&alias).unwrap();
+        let j2 = Json::parse(&svc.respond(&req2)).unwrap();
+        assert_eq!(j2.get("cached"), Some(&Json::Bool(true)));
+        assert_eq!(svc.models.stats().computes, 1);
+    }
+
+    #[test]
+    fn concurrent_model_requests_coalesce_to_one_compute() {
+        use std::sync::Barrier;
+        const THREADS: usize = 6;
+        let svc = Arc::new(test_service());
+        let barrier = Arc::new(Barrier::new(THREADS));
+        let line = r#"{"cmd":"model","model":"mlp:16x12x8","tokens":2,"nr":8,"nc":4,"n_e":2}"#;
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let svc = Arc::clone(&svc);
+                let barrier = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    let req = proto::parse_request(line).unwrap();
+                    barrier.wait();
+                    svc.respond(&req)
+                })
+            })
+            .collect();
+        let responses: Vec<String> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // single-flight: one compute total, every result byte-identical
+        assert_eq!(svc.models.stats().computes, 1, "{:?}", svc.models.stats());
+        let first = result_str(&responses[0]);
+        for resp in &responses {
+            let j = Json::parse(resp).unwrap();
+            assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{resp}");
+            assert_eq!(result_str(resp), first);
+        }
+    }
+
+    #[test]
+    fn model_request_bad_inputs_are_clean_errors() {
+        let svc = test_service();
+        for line in [
+            r#"{"cmd":"model","model":"warp:64"}"#,
+            r#"{"cmd":"model","model":"mlp:16"}"#,
+            r#"{"cmd":"model","model":"mlp:16x8","arch":"quantum"}"#,
+            r#"{"cmd":"model","model":"mlp:16x8","nr":0}"#,
+            r#"{"cmd":"model","model":"mlp:16x8","n_e":64}"#,
+            // a chain whose layer *sum* exceeds the MAC cap even though
+            // every single layer is within it (2 x 2^36 MACs at 4 tokens)
+            r#"{"cmd":"model","model":"mlp:1048576x16384x1048576","tokens":4}"#,
+            // under the MAC cap but over the operand-slab cap
+            r#"{"cmd":"model","model":"gemm:1x1048576x65536"}"#,
+            // each layer's slabs are individually within the cap, but
+            // run_model holds every weight slab at once — the *sum* is
+            // capped (2 x ~2^27 weight elements here)
+            r#"{"cmd":"model","model":"gemm:1x16384x8192,gemm:1x8192x16384"}"#,
+            // empirical model inputs are confined like workload paths
+            r#"{"cmd":"model","model":"mlp:16x8",
                 "distribution":"empirical:/etc/hostname"}"#,
         ] {
             let req = proto::parse_request(line).unwrap();

@@ -8,7 +8,7 @@
 //! -> {"cmd":"energy","dr":30.1,"sqnr":22.83,"samples":4096}
 //! <- {"ok":true,"cached":false,"result":{...}}
 //! -> {"cmd":"nonsense"}
-//! <- {"ok":false,"error":"unknown cmd 'nonsense' (energy|sweep|figure|workload|layer|info)"}
+//! <- {"ok":false,"error":"unknown cmd 'nonsense' (energy|sweep|figure|workload|layer|model|info)"}
 //! ```
 //!
 //! The `"cached"` flag sits **outside** `"result"` so clients (and the
@@ -33,10 +33,11 @@
 //! assert!(parse_request("{\"cmd\":\"warp\"}").is_err());
 //! ```
 
-use crate::cli::sweep::LayerParams;
+use crate::cli::sweep::{LayerParams, ModelParams};
 use crate::config::Json;
 use crate::coordinator::ExperimentSpec;
 use crate::distributions::Distribution;
+use crate::model::ModelSpec;
 use crate::tile::LayerSpec;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -113,6 +114,17 @@ pub enum Request {
         /// The raw layer fields (resolved server-side via
         /// [`LayerParams::resolve`]).
         params: LayerParams,
+        /// Campaign seed override (server default when absent).
+        seed: Option<u64>,
+    },
+    /// Evaluate a multi-layer model on the chained tile pipeline (`grcim
+    /// model` over the wire): per-layer energy/SQNR, inter-layer
+    /// requantization, network totals. Cached by [`model_key`] (the
+    /// resolved spec's exact parameter bits).
+    Model {
+        /// The raw model fields (resolved server-side via
+        /// [`ModelParams::resolve`]).
+        params: ModelParams,
         /// Campaign seed override (server default when absent).
         seed: Option<u64>,
     },
@@ -247,6 +259,33 @@ pub fn parse_request(line: &str) -> Result<Request> {
             };
             Ok(Request::Layer { params, seed })
         }
+        "model" => {
+            let d = ModelParams::default();
+            let params = ModelParams {
+                model: j
+                    .get("model")
+                    .and_then(Json::as_str)
+                    .context("model needs a 'model' field (e.g. \"mlp:4096x16384x4096\")")?
+                    .to_string(),
+                tokens: j.get("tokens").and_then(Json::as_usize).unwrap_or(d.tokens),
+                arch: j
+                    .get("arch")
+                    .and_then(Json::as_str)
+                    .unwrap_or(&d.arch)
+                    .to_string(),
+                nr: j.get("nr").and_then(Json::as_usize).unwrap_or(d.nr),
+                nc: j.get("nc").and_then(Json::as_usize).unwrap_or(d.nc),
+                n_e: j.get("n_e").and_then(Json::as_f64).unwrap_or(d.n_e),
+                n_m: j.get("n_m").and_then(Json::as_f64).unwrap_or(d.n_m),
+                distribution: j
+                    .get("distribution")
+                    .and_then(Json::as_str)
+                    .unwrap_or(&d.distribution)
+                    .to_string(),
+                fit: j.get("fit") == Some(&Json::Bool(true)),
+            };
+            Ok(Request::Model { params, seed })
+        }
         "workload" => {
             let source = match (j.get("path"), j.get("values")) {
                 (Some(p), None) => TraceSource::Path(
@@ -292,7 +331,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
             })
         }
         other => {
-            bail!("unknown cmd '{other}' (energy|sweep|figure|workload|layer|info)")
+            bail!("unknown cmd '{other}' (energy|sweep|figure|workload|layer|model|info)")
         }
     }
 }
@@ -419,6 +458,52 @@ pub fn layer_key(spec: &LayerSpec, seed: u64, engine: &str) -> String {
         bits(cfg.fmts.w.n_m),
         canonical_dist(&spec.dist_x),
         canonical_dist(&spec.dist_w),
+    )
+}
+
+/// One canonical-key fragment per layer's effective configuration.
+fn layer_fragment(spec: &ModelSpec, li: usize) -> String {
+    let cfg = spec.layer_cfg(li);
+    format!(
+        "{}@{}:{}:{}:{}",
+        spec.layers[li].shape,
+        bits(cfg.fmts.x.e_max),
+        bits(cfg.fmts.x.n_m),
+        bits(cfg.fmts.w.e_max),
+        bits(cfg.fmts.w.n_m),
+    )
+}
+
+/// Canonical cache key of one rendered model report. Built from the
+/// **resolved** [`ModelSpec`] like [`layer_key`], so request aliases
+/// share one entry. Covers exactly what determines the report's bits:
+/// every layer's GEMM dimensions and effective formats, the base tile
+/// geometry/architecture/ADC policy/TechParams, both distributions, the
+/// ReLU and activation-fit switches, seed, and engine.
+pub fn model_key(spec: &ModelSpec, seed: u64, engine: &str) -> String {
+    let cfg = &spec.cfg;
+    let adc = match cfg.adc {
+        crate::tile::AdcPolicy::Fixed(e) => format!("fixed:{}", bits(e)),
+        crate::tile::AdcPolicy::PerTileSpec => "spec".to_string(),
+    };
+    let t = &cfg.tech;
+    let layers: Vec<String> =
+        (0..spec.layers.len()).map(|li| layer_fragment(spec, li)).collect();
+    format!(
+        "v{PROTO_VERSION}|model|eng={engine}|seed={seed}|nr={}|nc={}|arch={}|adc={adc}|tech={}:{}:{}:{}:{}|relu={}|fit={}|dx={}|dw={}|layers={}",
+        cfg.nr,
+        cfg.nc,
+        cfg.arch.name(),
+        bits(t.c_gate_ff),
+        bits(t.k1_ff),
+        bits(t.k2_ff),
+        bits(t.k3_ff),
+        bits(t.vdd),
+        spec.relu,
+        spec.fit_activations,
+        canonical_dist(&spec.dist_x),
+        canonical_dist(&spec.dist_w),
+        layers.join(","),
     )
 }
 
@@ -651,6 +736,75 @@ mod tests {
         }
         // shape is mandatory
         assert!(parse_request(r#"{"cmd":"layer"}"#).is_err());
+    }
+
+    #[test]
+    fn parses_model_requests_with_defaults_and_overrides() {
+        let r = parse_request(r#"{"cmd":"model","model":"mlp:64x256x64"}"#).unwrap();
+        match r {
+            Request::Model { params, seed } => {
+                let want =
+                    ModelParams { model: "mlp:64x256x64".into(), ..Default::default() };
+                assert_eq!(params, want);
+                assert_eq!(seed, None);
+            }
+            other => panic!("{other:?}"),
+        }
+        let r = parse_request(
+            r#"{"cmd":"model","model":"block:32","arch":"conventional",
+                "tokens":8,"nr":16,"nc":8,"n_e":3,"n_m":1,
+                "distribution":"uniform","fit":true,"seed":5}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Model { params, seed } => {
+                assert_eq!(params.model, "block:32");
+                assert_eq!(params.arch, "conventional");
+                assert_eq!(params.tokens, 8);
+                assert_eq!((params.nr, params.nc), (16, 8));
+                assert_eq!((params.n_e, params.n_m), (3.0, 1.0));
+                assert!(params.fit);
+                assert_eq!(seed, Some(5));
+            }
+            other => panic!("{other:?}"),
+        }
+        // model string is mandatory
+        assert!(parse_request(r#"{"cmd":"model"}"#).is_err());
+    }
+
+    #[test]
+    fn model_keys_cover_every_resolved_input() {
+        let base = ModelParams { model: "mlp:16x12x8".into(), ..Default::default() };
+        let k0 = model_key(&base.resolve().unwrap(), 7, "rust");
+        // arch aliases share the entry
+        let alias = ModelParams { arch: "gr-unit".into(), ..base.clone() };
+        assert_eq!(model_key(&alias.resolve().unwrap(), 7, "rust"), k0);
+        for changed in [
+            ModelParams { model: "mlp:16x12x9".into(), ..base.clone() },
+            ModelParams { model: "mlp:16x12x8x8".into(), ..base.clone() },
+            ModelParams { tokens: 8, ..base.clone() },
+            ModelParams { arch: "conventional".into(), ..base.clone() },
+            ModelParams { nr: 16, ..base.clone() },
+            ModelParams { nc: 16, ..base.clone() },
+            ModelParams { n_e: 3.0, ..base.clone() },
+            ModelParams { n_m: 3.0, ..base.clone() },
+            ModelParams { distribution: "uniform".into(), ..base.clone() },
+            ModelParams { fit: true, ..base.clone() },
+        ] {
+            assert_ne!(model_key(&changed.resolve().unwrap(), 7, "rust"), k0, "{changed:?}");
+        }
+        assert_ne!(model_key(&base.resolve().unwrap(), 8, "rust"), k0);
+        assert_ne!(model_key(&base.resolve().unwrap(), 7, "pjrt"), k0);
+        // per-layer format overrides and the relu switch key too
+        let mut spec = base.resolve().unwrap();
+        spec.layers[1].fmts = Some(crate::mac::FormatPair::new(
+            crate::formats::FpFormat::fp(5, 2),
+            crate::formats::FpFormat::fp4_e2m1(),
+        ));
+        assert_ne!(model_key(&spec, 7, "rust"), k0);
+        let mut norelu = base.resolve().unwrap();
+        norelu.relu = false;
+        assert_ne!(model_key(&norelu, 7, "rust"), k0);
     }
 
     #[test]

@@ -70,19 +70,28 @@ pub struct Histogram {
     pub hi: f64,
     /// Per-bin sample counts (out-of-range samples clamp to the edges).
     pub counts: Vec<u64>,
-    /// Total samples pushed.
+    /// Total samples binned (NaN samples are excluded — see [`Histogram::push`]).
     pub total: u64,
+    /// NaN samples seen and skipped. NaN is not a value on the binned
+    /// axis: `NaN as isize` is 0, so counting it would silently inflate
+    /// bin 0 *and* `total`, skewing [`Histogram::density`].
+    pub nan_count: u64,
 }
 
 impl Histogram {
     /// An empty histogram of `bins` equal bins over [`lo`, `hi`].
     pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
         assert!(hi > lo && bins > 0);
-        Histogram { lo, hi, counts: vec![0; bins], total: 0 }
+        Histogram { lo, hi, counts: vec![0; bins], total: 0, nan_count: 0 }
     }
 
-    /// Bin one sample (out-of-range values clamp to the edge bins).
+    /// Bin one sample (out-of-range values clamp to the edge bins; NaN
+    /// is tracked in [`Histogram::nan_count`] and binned nowhere).
     pub fn push(&mut self, x: f64) {
+        if x.is_nan() {
+            self.nan_count += 1;
+            return;
+        }
         let bins = self.counts.len();
         let t = (x - self.lo) / (self.hi - self.lo);
         let idx = ((t * bins as f64) as isize).clamp(0, bins as isize - 1);
@@ -104,6 +113,7 @@ impl Histogram {
             *a += b;
         }
         self.total += other.total;
+        self.nan_count += other.nan_count;
     }
 
     /// Bin centers.
@@ -356,6 +366,26 @@ mod tests {
         h.push_slice(&[-0.9, -0.1, 0.1, 0.9, 5.0, -5.0]); // outliers clamp
         assert_eq!(h.total, 6);
         assert_eq!(h.counts, vec![2, 1, 1, 2]);
+    }
+
+    #[test]
+    fn histogram_skips_nan_instead_of_binning_it_as_zero() {
+        // the regression this pins: `NaN as isize` is 0, so NaN used to
+        // land in bin 0 and count toward `total`, skewing density()
+        let mut h = Histogram::new(-1.0, 1.0, 4);
+        h.push_slice(&[f64::NAN, -0.9, f64::NAN, 0.9]);
+        assert_eq!(h.total, 2);
+        assert_eq!(h.nan_count, 2);
+        assert_eq!(h.counts, vec![1, 0, 0, 1]);
+        // density still integrates to 1 over the real samples
+        let w = 0.5;
+        let integral: f64 = h.density().iter().map(|d| d * w).sum();
+        assert!(approx_eq(integral, 1.0, 1e-12));
+        // merge carries the NaN count along
+        let mut other = Histogram::new(-1.0, 1.0, 4);
+        other.push(f64::NAN);
+        h.merge(&other);
+        assert_eq!((h.total, h.nan_count), (2, 3));
     }
 
     #[test]

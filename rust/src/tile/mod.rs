@@ -21,9 +21,10 @@
 //!   SQNR against the exact float GEMM, and an ADC-resolution histogram
 //!   across tiles.
 //!
-//! Consumers: [`crate::nn::cim_forward_batch`] runs every network matmul
-//! through [`mapper::gemm_outputs`] (the no-reference fast path of
-//! [`mapper::gemm_with_engine`]); `grcim layer` and the serve
+//! Consumers: the model-scale executor ([`crate::model::exec`]) chains
+//! whole networks of these layers — [`crate::nn::cim_forward_batch`]
+//! reaches [`mapper::gemm_outputs`] (the no-reference fast path of
+//! [`mapper::gemm_with_engine`]) through it; `grcim layer` and the serve
 //! layer's `layer` request evaluate named layer shapes via
 //! [`mapper::run_layer`], which shards tile jobs across the coordinator's
 //! worker pool (bit-identical results at any worker count).

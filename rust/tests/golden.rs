@@ -474,6 +474,88 @@ fn golden_layer_gemm() {
 }
 
 // ---------------------------------------------------------------------
+// Model pipeline — chained tile layers (rng -> operands -> per-layer
+// requantization -> tile grids -> float-domain epilogues -> float
+// reference chain), pinned for gr-unit and conventional signal chains.
+// ---------------------------------------------------------------------
+
+const MODEL_SEED: u64 = 42;
+const MODEL_NR: usize = 8;
+const MODEL_NC: usize = 8;
+
+#[test]
+fn golden_model_report() {
+    use grcim::coordinator::CampaignConfig;
+    use grcim::distributions::Distribution;
+    use grcim::energy::{CimArch, TechParams};
+    use grcim::formats::FpFormat;
+    use grcim::mac::FormatPair;
+    use grcim::model::{parse_model, run_model, ModelSpec};
+    use grcim::runtime::EngineKind;
+    use grcim::tile::{AdcPolicy, TileConfig};
+
+    let mut g = Golden::new("model_report", 1e-6);
+    let fp4 = FpFormat::fp4_e2m1();
+    for (tag, arch) in
+        [("gru", CimArch::GrUnit), ("conv", CimArch::Conventional)]
+    {
+        let spec = ModelSpec {
+            name: tag.to_string(),
+            layers: parse_model("mlp:24x16x12x8", 4).unwrap(),
+            cfg: TileConfig {
+                nr: MODEL_NR,
+                nc: MODEL_NC,
+                fmts: FormatPair::new(FpFormat::fp(2, 2), fp4),
+                arch,
+                adc: AdcPolicy::PerTileSpec,
+                tech: TechParams::default(),
+            },
+            dist_x: Distribution::gauss_outliers(),
+            dist_w: Distribution::max_entropy(fp4),
+            relu: true,
+            fit_activations: true,
+        };
+        let campaign = CampaignConfig {
+            engine: EngineKind::Rust,
+            workers: 2,
+            seed: MODEL_SEED,
+            ..Default::default()
+        };
+        let res = run_model(&spec, &campaign).unwrap();
+        let r = &res.report;
+        assert_eq!(r.layers.len(), 3, "mlp:24x16x12x8 is 3 layers");
+        for (li, l) in r.layers.iter().enumerate() {
+            g.push(format!("{tag}_l{li}_enob_mean"), l.report.enob_mean());
+            g.push(format!("{tag}_l{li}_total_fj"), l.report.total_fj());
+            g.push(format!("{tag}_l{li}_sqnr_db"), l.report.sqnr_db);
+            g.push(format!("{tag}_l{li}_requant_db"), l.requant_sqnr_db);
+            g.push(format!("{tag}_l{li}_a_scale"), l.a_scale);
+            let s = l.act_stats.expect("fit_activations was requested");
+            g.push(format!("{tag}_l{li}_act_dr_bits"), s.dr_bits);
+            g.push(format!("{tag}_l{li}_act_sigma_core"), s.sigma_core);
+            g.push(format!("{tag}_l{li}_act_outlier_mass"), s.outlier_mass);
+        }
+        g.push(format!("{tag}_total_fj"), r.total_fj());
+        g.push(format!("{tag}_fj_per_mac"), r.fj_per_mac());
+        g.push(format!("{tag}_e2e_sqnr_db"), r.sqnr_db);
+        g.push(
+            format!("{tag}_y_abs_sum"),
+            res.y.iter().map(|v| v.abs()).sum::<f64>(),
+        );
+        g.push(
+            format!("{tag}_y_sq_sum"),
+            res.y.iter().map(|v| v * v).sum::<f64>(),
+        );
+        g.push(format!("{tag}_enob_mean"), r.enob_mean());
+        // the report's own invariant checks (incl. the energy::arch
+        // reconciliation the acceptance criteria pin) must hold
+        let fr = r.to_figure_result();
+        assert!(fr.all_hold(), "{tag}: {:#?}", fr.checks);
+    }
+    g.check();
+}
+
+// ---------------------------------------------------------------------
 // Determinism + harness self-tests.
 // ---------------------------------------------------------------------
 

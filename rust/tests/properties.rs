@@ -516,6 +516,67 @@ fn prop_tile_layer_bit_identical_across_1_2_4_workers() {
 }
 
 #[test]
+fn prop_model_bit_identical_across_1_2_4_workers() {
+    use grcim::coordinator::CampaignConfig;
+    use grcim::model::{run_model, ModelSpec};
+    use grcim::runtime::EngineKind;
+    use grcim::tile::{AdcPolicy, TileConfig};
+
+    // the model-scale acceptance property: chained layer evaluations
+    // (per-tile ENOBs, energy totals, requantization SQNRs, outputs,
+    // end-to-end SQNR) are bit-identical at any worker count
+    let spec = ModelSpec {
+        name: "det".into(),
+        layers: grcim::model::parse_model("mlp:24x16x12x8", 3).unwrap(),
+        cfg: TileConfig {
+            nr: 8,
+            nc: 4,
+            fmts: FormatPair::new(FpFormat::fp(2, 2), FpFormat::fp4_e2m1()),
+            arch: CimArch::GrUnit,
+            adc: AdcPolicy::PerTileSpec,
+            tech: TechParams::default(),
+        },
+        dist_x: Distribution::gauss_outliers(),
+        dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+        relu: true,
+        fit_activations: true,
+    };
+    let mut reference: Option<(Vec<u64>, Vec<u64>, u64, u64)> = None;
+    for workers in [1usize, 2, 4] {
+        let cfg = CampaignConfig {
+            engine: EngineKind::Rust,
+            workers,
+            seed: 0x30DE,
+            ..Default::default()
+        };
+        let res = run_model(&spec, &cfg).unwrap();
+        let y_bits: Vec<u64> = res.y.iter().map(|v| v.to_bits()).collect();
+        let layer_bits: Vec<u64> = res
+            .report
+            .layers
+            .iter()
+            .flat_map(|l| {
+                let mut bits: Vec<u64> =
+                    l.report.tiles.iter().map(|t| t.enob.to_bits()).collect();
+                bits.push(l.report.total_fj().to_bits());
+                bits.push(l.requant_sqnr_db.to_bits());
+                bits
+            })
+            .collect();
+        let bits = (
+            y_bits,
+            layer_bits,
+            res.report.sqnr_db.to_bits(),
+            res.report.total_fj().to_bits(),
+        );
+        match &reference {
+            None => reference = Some(bits),
+            Some(r) => assert_eq!(r, &bits, "workers={workers} changed the model"),
+        }
+    }
+}
+
+#[test]
 fn prop_tiled_outputs_independent_of_column_grouping() {
     use grcim::rng::Pcg64;
     use grcim::runtime::RustEngine;

@@ -182,6 +182,117 @@ fn mixed_request_kinds_share_one_connection() {
 }
 
 #[test]
+fn oversized_line_resyncs_the_reader_instead_of_parsing_garbage() {
+    // the 1 MiB line cap truncates a request mid-line; the reader must
+    // (a) answer with exactly one error, (b) discard the rest of that
+    // line without parsing it as a request, and (c) keep serving the
+    // same connection normally afterwards
+    const MAX_LINE: usize = 1 << 20; // server::MAX_LINE
+    let server = spawn_server();
+    let addr = server.local_addr().to_string();
+
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+
+    // an oversized "request": valid-JSON-looking prefix, then filler
+    // well past the cap, then a newline — the tail after the cap would
+    // parse as garbage if the reader failed to resync
+    let mut big = String::with_capacity(MAX_LINE + 64);
+    big.push_str(r#"{"cmd":"energy","dr":"#);
+    while big.len() <= MAX_LINE {
+        big.push('9');
+    }
+    big.push_str("}\n");
+    writer.write_all(big.as_bytes()).unwrap();
+    writer.flush().unwrap();
+
+    // exactly one response for the oversized line: the cap error
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let j = Json::parse(resp.trim_end()).unwrap();
+    assert_eq!(j.get("ok"), Some(&Json::Bool(false)), "{resp}");
+    assert!(
+        j.get("error").and_then(Json::as_str).unwrap().contains("exceeds"),
+        "{resp}"
+    );
+
+    // the connection is still usable: the next complete line is a
+    // normal request and gets a normal response — if the reader had
+    // parsed the discarded tail, an extra "not valid JSON" error line
+    // would arrive here instead of the info result
+    writer.write_all(b"{\"cmd\":\"info\"}\n").unwrap();
+    writer.flush().unwrap();
+    let mut info = String::new();
+    reader.read_line(&mut info).unwrap();
+    let j = Json::parse(info.trim_end()).unwrap();
+    assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{info}");
+    assert!(j.get("result").unwrap().get("engine").is_some(), "{info}");
+
+    drop(writer);
+    drop(reader);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn final_request_without_trailing_newline_is_still_answered() {
+    // `printf '{"cmd":"info"}' | nc` style clients terminate the last
+    // request with EOF instead of a newline; the reader must answer it
+    // rather than silently closing the connection
+    let server = spawn_server();
+    let addr = server.local_addr().to_string();
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.write_all(b"{\"cmd\":\"info\"}").unwrap();
+    stream.flush().unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let j = Json::parse(resp.trim_end()).unwrap();
+    assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{resp}");
+    drop(reader);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn model_requests_coalesce_over_tcp_and_hits_are_identical() {
+    let server = spawn_server();
+    let addr = server.local_addr().to_string();
+    let req = r#"{"cmd":"model","model":"mlp:16x12x8","tokens":2,"nr":8,"nc":4,"n_e":2}"#;
+
+    const CLIENTS: usize = 4;
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|_| {
+            let addr = addr.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                query_once(&addr, req).unwrap()
+            })
+        })
+        .collect();
+    let responses: Vec<String> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let first = result_str(&responses[0]);
+    for r in &responses {
+        assert_eq!(result_str(r), first, "model responses diverged");
+    }
+
+    // exactly one model compute despite 4 concurrent clients
+    let info = query_once(&addr, r#"{"cmd":"info"}"#).unwrap();
+    let models = Json::parse(&info)
+        .unwrap()
+        .get("result")
+        .unwrap()
+        .get("models")
+        .unwrap()
+        .clone();
+    assert_eq!(models.get("computes").unwrap().as_usize(), Some(1), "{info}");
+    server.shutdown().unwrap();
+}
+
+#[test]
 fn shutdown_is_clean_with_an_idle_connection_open() {
     let server = spawn_server();
     let addr = server.local_addr().to_string();

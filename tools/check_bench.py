@@ -18,7 +18,12 @@ pipeline instead of corrupting the perf trajectory. The committed
 pre-first-run placeholder ({"mode": "pending"}) is rejected too — the CI
 step validates the freshly written report, not the placeholder.
 
-Usage: python3 tools/check_bench.py BENCH_hotpath.json
+`--require PREFIX` (repeatable) additionally asserts that at least one
+measurement name starts with PREFIX — CI uses it to pin the bench paths
+that must not silently drop out of the smoke run (e.g. `model/` for the
+model-scale forward pass).
+
+Usage: python3 tools/check_bench.py BENCH_hotpath.json [--require PREFIX]...
 """
 
 import json
@@ -32,7 +37,7 @@ def fail(msg):
     sys.exit(1)
 
 
-def check(path):
+def check(path, required=()):
     try:
         with open(path) as f:
             doc = json.load(f)
@@ -73,13 +78,32 @@ def check(path):
             not isinstance(thr, (int, float)) or isinstance(thr, bool) or thr <= 0
         ):
             fail(f"{where} ({name}): 'items_per_s' must be positive or null")
+    for prefix in required:
+        if not any(n.startswith(prefix) for n in names):
+            fail(
+                f"{path}: no measurement named '{prefix}*' "
+                f"(required entry missing from the bench run)"
+            )
     print(f"check_bench: OK: {path} ({len(ms)} measurements, {mode} mode)")
 
 
 def main():
-    if len(sys.argv) != 2:
-        fail("usage: check_bench.py <bench-report.json>")
-    check(sys.argv[1])
+    args = sys.argv[1:]
+    required = []
+    paths = []
+    i = 0
+    while i < len(args):
+        if args[i] == "--require":
+            if i + 1 >= len(args):
+                fail("--require needs a prefix")
+            required.append(args[i + 1])
+            i += 2
+        else:
+            paths.append(args[i])
+            i += 1
+    if len(paths) != 1:
+        fail("usage: check_bench.py <bench-report.json> [--require PREFIX]...")
+    check(paths[0], required)
 
 
 if __name__ == "__main__":

@@ -624,15 +624,14 @@ def adc_quantize(v, enob):
     return min(max(q, -1.0), 1.0)
 
 
-def run_layer_twin(shape, nr, nc, fx, fw, arch, dist_x, dist_w, seed):
-    """Twin of tile::mapper::run_layer: operand generation (stream
-    TILE_STREAM of the campaign seed), kt-major tile grid, per-tile
-    spec-solved ADC (clamped to [0, 32]), digitization, ascending-kt
-    partial-sum reduction, and the energy totals."""
+def tile_gemm_twin(x, wt, shape, nr, nc, fx, fw, arch, fixed_enob=None):
+    """Twin of tile::mapper::gemm_with_engine over explicit operands:
+    kt-major tile grid, per-tile spec-solved ADC (clamped to [0, 32]) or
+    a fixed resolution, digitization, ascending-kt partial-sum
+    reduction, the float reference GEMM, and the energy totals. Shared
+    by the single-layer and model twins (the Rust mapper is shared the
+    same way)."""
     m_, k_, n_ = shape
-    rng = Pcg64(job_seed(seed, TILE_STREAM, 0))
-    x = fill_f32(dist_x, rng, m_ * k_)
-    wt = fill_f32(dist_w, rng, n_ * k_)
     row_tiles = -(-k_ // nr)
     col_tiles = -(-n_ // nc)
     spec_arch = {"conventional": "conv", "gr-unit": "unit", "gr-row": "row"}[arch]
@@ -656,9 +655,12 @@ def run_layer_twin(shape, nr, nc, fx, fw, arch, dist_x, dist_w, seed):
                     ws.extend(wt[(n0 + j) * k_ + k0:(n0 + j) * k_ + k0 + rows])
                     ws.extend([0.0] * (nr - rows))
             batch = simulate_column(xs, ws, nr, fx, fw)
-            agg = ColumnAgg(nr)
-            agg.push_batch(batch)
-            enob = min(max(required_enob(agg, spec_arch), 0.0), MAX_TILE_ENOB)
+            if fixed_enob is None:
+                agg = ColumnAgg(nr)
+                agg.push_batch(batch)
+                enob = min(max(required_enob(agg, spec_arch), 0.0), MAX_TILE_ENOB)
+            else:
+                enob = fixed_enob
             for mi in range(m_):
                 for j in range(cols):
                     s = mi * cols + j
@@ -699,6 +701,7 @@ def run_layer_twin(shape, nr, nc, fx, fw, arch, dist_x, dist_w, seed):
     total_fj = tiles_fj + reduction_fj + global_norm_fj
     enob_mean = sum(t["enob"] for t in tiles) / float(len(tiles))
     return {
+        "y": y,
         "tiles": tiles,
         "tiles_fj": tiles_fj,
         "reduction_fj": reduction_fj,
@@ -709,6 +712,112 @@ def run_layer_twin(shape, nr, nc, fx, fw, arch, dist_x, dist_w, seed):
         "y_abs_sum": sum(abs(v) for v in y),
         "y_sq_sum": sum(v * v for v in y),
         "enob_mean": enob_mean,
+    }
+
+
+def run_layer_twin(shape, nr, nc, fx, fw, arch, dist_x, dist_w, seed):
+    """Twin of tile::mapper::run_layer: operand generation (stream
+    TILE_STREAM of the campaign seed) followed by the shared tile-grid
+    evaluation."""
+    m_, k_, n_ = shape
+    rng = Pcg64(job_seed(seed, TILE_STREAM, 0))
+    x = fill_f32(dist_x, rng, m_ * k_)
+    wt = fill_f32(dist_w, rng, n_ * k_)
+    return tile_gemm_twin(x, wt, shape, nr, nc, fx, fw, arch)
+
+
+# --------------------------------------------------------------- model --
+# Twin of model::exec — chained tile layers with inter-layer
+# requantization and the float reference chain.
+
+MODEL_STREAM = 0x30DE1  # model::exec::MODEL_STREAM
+
+
+def run_model_twin(shapes, nr, nc, fx, fw, arch, dist_x, dist_w, seed,
+                   relu=True, fit=True, fixed_enob=None):
+    """Twin of model::exec::run_model: model input from stream
+    (MODEL_STREAM, 0), layer li's weights from (MODEL_STREAM, li+1),
+    then per layer: static max-|x| calibration, requantization of the
+    scaled activations to the input format (f32-cast, quantize, f32 —
+    the exact Rust order), the shared tile grid, and the float-domain
+    epilogue (rescale, hidden-layer ReLU). `shapes` is a list of
+    (M, K, N) with K_i <= N_{i-1} (leading-K truncation)."""
+    m_ = shapes[0][0]
+    rng = Pcg64(job_seed(seed, MODEL_STREAM, 0))
+    acts = fill_f32(dist_x, rng, m_ * shapes[0][1])
+    ref = list(acts)
+    width = shapes[0][1]
+    layers = []
+    all_tiles = []
+    for li, (mm, k_, n_) in enumerate(shapes):
+        assert mm == m_ and k_ <= width
+        rng_w = Pcg64(job_seed(seed, MODEL_STREAM, li + 1))
+        wt = fill_f32(dist_w, rng_w, n_ * k_)
+        a_scale = max(max(abs(v) for v in acts), 1e-12)
+        xq = []
+        scaled = []
+        sig = 0.0
+        err = 0.0
+        for mi in range(m_):
+            for ki in range(k_):
+                s = acts[mi * width + ki] / a_scale
+                q = f32(fx.quantize(f32(s)))
+                xq.append(q)
+                sig += s * s
+                d = q - s
+                err += d * d
+                scaled.append(s)
+        requant_db = db(max(sig, 1e-300) / max(err, 1e-300))
+        stats = EmpDist(scaled) if fit else None
+        r = tile_gemm_twin(xq, wt, (m_, k_, n_), nr, nc, fx, fw, arch,
+                           fixed_enob=fixed_enob)
+        hidden = relu and li + 1 < len(shapes)
+        nxt = [0.0] * (m_ * n_)
+        for mi in range(m_):
+            for o in range(n_):
+                v = r["y"][mi * n_ + o] * a_scale * 1.0
+                if hidden:
+                    v = max(v, 0.0)
+                nxt[mi * n_ + o] = v
+        ref_nxt = [0.0] * (m_ * n_)
+        for mi in range(m_):
+            for o in range(n_):
+                acc = 0.0
+                for ki in range(k_):
+                    acc += ref[mi * width + ki] * (wt[o * k_ + ki] * 1.0)
+                if hidden:
+                    acc = max(acc, 0.0)
+                ref_nxt[mi * n_ + o] = acc
+        acts = nxt
+        ref = ref_nxt
+        width = n_
+        all_tiles.extend(r["tiles"])
+        layers.append({
+            "a_scale": a_scale,
+            "requant_db": requant_db,
+            "stats": stats,
+            "grid": r,
+        })
+    sig = 0.0
+    err = 0.0
+    for yv, rv in zip(acts, ref):
+        sig += rv * rv
+        d = yv - rv
+        err += d * d
+    e2e_db = db(max(sig, 1e-300) / max(err, 1e-300))
+    total_fj = sum(l["grid"]["total_fj"] for l in layers)
+    macs = sum(m * k * n for (m, k, n) in shapes)
+    return {
+        "layers": layers,
+        "y": acts,
+        "ref": ref,
+        "e2e_sqnr_db": e2e_db,
+        "total_fj": total_fj,
+        "fj_per_mac": total_fj / float(macs),
+        "y_abs_sum": sum(abs(v) for v in acts),
+        "y_sq_sum": sum(v * v for v in acts),
+        "enob_mean": sum(t["enob"] for t in all_tiles) / float(len(all_tiles)),
+        "tiles": all_tiles,
     }
 
 
@@ -1112,6 +1221,84 @@ def gen_layer(outdir):
     write_golden(os.path.join(outdir, "layer_gemm.json"), 1e-6, vals)
 
 
+MODEL_SEED = 42
+MODEL_SHAPES = [(4, 24, 16), (4, 16, 12), (4, 12, 8)]  # mlp:24x16x12x8 at 4 tokens
+MODEL_NR = 8
+MODEL_NC = 8
+
+
+def gen_model(outdir):
+    """Twin of tests/golden.rs::golden_model_report: chain a 3-layer MLP
+    (ragged tile grids on every layer) under gr-unit and conventional
+    signal chains and pin the per-layer ADC means, energy totals, layer
+    and requantization SQNRs, activation-fit statistics, and the model
+    totals (end-to-end SQNR, fJ/MAC, output checksums)."""
+    fp4 = FpFormat.fp4_e2m1()
+    dist_x = Dist("gauss_outliers")
+    dist_w = Dist("maxent", fp4)
+    fx = FpFormat.fp(2, 2)
+    vals = []
+    for tag, arch in (("gru", "gr-unit"), ("conv", "conventional")):
+        r = run_model_twin(MODEL_SHAPES, MODEL_NR, MODEL_NC, fx, fp4, arch,
+                           dist_x, dist_w, MODEL_SEED, relu=True, fit=True)
+        for li, l in enumerate(r["layers"]):
+            vals.append((f"{tag}_l{li}_enob_mean", l["grid"]["enob_mean"]))
+            vals.append((f"{tag}_l{li}_total_fj", l["grid"]["total_fj"]))
+            vals.append((f"{tag}_l{li}_sqnr_db", l["grid"]["sqnr_db"]))
+            vals.append((f"{tag}_l{li}_requant_db", l["requant_db"]))
+            vals.append((f"{tag}_l{li}_a_scale", l["a_scale"]))
+            stats = l["stats"]
+            assert stats is not None, (tag, li)
+            vals.append((f"{tag}_l{li}_act_dr_bits", stats.dr_bits))
+            vals.append((f"{tag}_l{li}_act_sigma_core", stats.sigma_core))
+            vals.append((f"{tag}_l{li}_act_outlier_mass", stats.outlier_mass))
+        for key in ("total_fj", "fj_per_mac", "e2e_sqnr_db", "y_abs_sum",
+                    "y_sq_sum", "enob_mean"):
+            assert math.isfinite(r[key]), (tag, key)
+            vals.append((f"{tag}_{key}", r[key]))
+        print(f"  model {tag}: enob_mean={r['enob_mean']:.3f} "
+              f"fj/mac={r['fj_per_mac']:.2f} e2e={r['e2e_sqnr_db']:.2f} dB")
+    write_golden(os.path.join(outdir, "model_report.json"), 1e-6, vals)
+
+
+def model_self_check():
+    """Pin the model twin's chain semantics: with a fine input format
+    (FP(4,6)), exactly-representable FP4 weights, and a near-transparent
+    fixed ADC, the chained output must track the float reference chain
+    to input-requantization precision, and the chain truncation
+    (K < previous N) must feed exactly the leading K features."""
+    fp4 = FpFormat.fp4_e2m1()
+    fx = FpFormat.fp(4, 6)
+    shapes = [(2, 12, 10), (2, 7, 4)]  # truncation: 7 < 10
+    r = run_model_twin(shapes, 4, 3, fx, fp4, "gr-unit",
+                       Dist("maxent", fx), Dist("maxent", fp4), 9,
+                       relu=False, fit=False, fixed_enob=30.0)
+    # transparent ADC + exact weights: only the ~2^-7 input
+    # requantization separates the chain from the float reference
+    for yv, rv in zip(r["y"], r["ref"]):
+        assert abs(yv - rv) < 2e-2 * max(1.0, abs(rv)), (yv, rv)
+    assert r["e2e_sqnr_db"] > 30.0, r["e2e_sqnr_db"]
+    assert r["layers"][0]["requant_db"] > 30.0, r["layers"][0]["requant_db"]
+    # tile accounting: 2 layers, ragged grids (3x4 then 2x2 tiles)
+    assert len(r["tiles"]) == 12 + 4, len(r["tiles"])
+    assert r["total_fj"] > 0.0
+    # the truncated reference really is the leading-7-features GEMM
+    m_, k1, n1 = shapes[0]
+    rng = Pcg64(job_seed(9, MODEL_STREAM, 0))
+    x0 = fill_f32(Dist("maxent", fx), rng, m_ * k1)
+    rng_w1 = Pcg64(job_seed(9, MODEL_STREAM, 1))
+    wt1 = fill_f32(Dist("maxent", fp4), rng_w1, n1 * k1)
+    rng_w2 = Pcg64(job_seed(9, MODEL_STREAM, 2))
+    _, k2, n2 = shapes[1]
+    wt2 = fill_f32(Dist("maxent", fp4), rng_w2, n2 * k2)
+    h = [sum(x0[mi * k1 + ki] * wt1[o * k1 + ki] for ki in range(k1))
+         for mi in range(m_) for o in range(n1)]
+    want = [sum(h[mi * n1 + ki] * wt2[o * k2 + ki] for ki in range(k2))
+            for mi in range(m_) for o in range(n2)]
+    for a, b in zip(r["ref"], want):
+        assert abs(a - b) < 1e-9, (a, b)
+
+
 def energy_self_check():
     """Pin the energy/tile twins against the Rust unit-test vectors
     (energy::tests, mac::tests::adc_quantize_basics)."""
@@ -1167,6 +1354,7 @@ def main():
     self_check()
     workload_self_check()
     energy_self_check()
+    model_self_check()
     outdir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           "..", "rust", "tests", "golden")
     os.makedirs(outdir, exist_ok=True)
@@ -1176,6 +1364,7 @@ def main():
     gen_campaign(outdir)
     gen_workload(outdir)
     gen_layer(outdir)
+    gen_model(outdir)
 
 
 if __name__ == "__main__":

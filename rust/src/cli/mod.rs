@@ -31,8 +31,13 @@ pub mod flags {
     /// `grcim info` flags.
     pub const INFO: &[&str] = &["artifacts"];
     /// `grcim serve` flags.
-    pub const SERVE: &[&str] =
-        &["addr", "cache", "engine", "artifacts", "workers", "seed"];
+    pub const SERVE: &[&str] = &[
+        "addr", "cache", "mux", "compute", "queue", "engine", "artifacts", "workers", "seed",
+    ];
+    /// `grcim loadgen` flags.
+    pub const LOADGEN: &[&str] = &[
+        "addr", "conns", "requests", "mix", "json", "threads", "deadline", "samples", "loris-ms",
+    ];
     /// `grcim query` flags.
     pub const QUERY: &[&str] = &[
         "addr", "json", "dr", "sqnr", "samples", "seed", "id", "trace", "shape", "tokens",
@@ -256,14 +261,24 @@ mod tests {
             assert!(err.contains("--smaples"), "{err}");
             assert!(err.contains("known:"), "{err}");
         }
-        // serve/query accept their own flags…
-        let a = parse(&["serve", "--addr", "127.0.0.1:0", "--cache", "64"]);
+        // serve/query/loadgen accept their own flags…
+        let a = parse(&[
+            "serve", "--addr", "127.0.0.1:0", "--cache", "64", "--mux", "2", "--compute", "2",
+            "--queue", "32",
+        ]);
         assert!(a.ensure_known(flags::SERVE).is_ok());
         let a = parse(&["query", "--json", "{}"]);
         assert!(a.ensure_known(flags::QUERY).is_ok());
+        let a = parse(&[
+            "loadgen", "--conns", "1000", "--requests", "4", "--mix", "energy,info",
+            "--loris-ms", "50", "--deadline", "200",
+        ]);
+        assert!(a.ensure_known(flags::LOADGEN).is_ok());
         // …and reject each other's
         let a = parse(&["query", "--cache", "64"]);
         assert!(a.ensure_known(flags::QUERY).is_err());
+        let a = parse(&["loadgen", "--cache", "64"]);
+        assert!(a.ensure_known(flags::LOADGEN).is_err());
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //! framework.
 //!
 //! Subcommands: `figures`, `energy`, `sweep`, `workload`, `layer`,
-//! `model`, `serve`, `query`, `validate`, `info`. The full flag and
+//! `model`, `serve`, `query`, `loadgen`, `validate`, `info`. The full
+//! flag and
 //! wire-protocol reference
 //! lives in `docs/CLI.md`; the module map in `docs/ARCHITECTURE.md`; the
 //! paper-equation-to-code map in `docs/THEORY.md`.
@@ -44,9 +45,14 @@ COMMANDS:
              [--fit] [--tokens N] [--arch A] [--nr N] [--nc N] [--ne N]
              [--nm N] [--dist NAME|empirical:t]
   serve      resident campaign service (NDJSON/TCP, cached + coalesced)
+             event-loop core: [--mux N] [--compute N] [--queue N]
   query      client for a running serve        grcim query energy --dr 36
+             kinds: energy|sweep|figure|workload|layer|model|metrics|info
              raw mode: grcim query --json '<request>' (non-empty object;
              --seed must fit in 2^53 — JSON numbers are f64)
+  loadgen    drive a running serve with concurrent connections
+             grcim loadgen --conns 1000 --requests 4 --mix energy,info
+             [--deadline MS] [--loris-ms MS] [--json '<request>']
   validate   PJRT artifacts vs the Rust oracle (--features pjrt builds)
   info       artifact + engine status
 
@@ -391,10 +397,98 @@ fn cmd_serve(args: &Args) -> Result<()> {
         addr: args.get_or("addr", DEFAULT_ADDR).to_string(),
         campaign: campaign_from_args(args)?,
         cache_entries: args.get_usize("cache", 1024)?,
+        mux_threads: args.get_usize("mux", 0)?,
+        compute_threads: args.get_usize("compute", 0)?,
+        queue_cap: args.get_usize("queue", 0)?,
     })?;
     println!("grcim serve listening on {}", server.local_addr());
     println!("protocol: one JSON request per line (see docs/CLI.md)");
     server.join()
+}
+
+/// Build the request-line mix for `grcim loadgen` from `--mix` (comma
+/// list of kinds) or a raw `--json` line, optionally stamping every line
+/// with a `--deadline` in milliseconds.
+fn loadgen_lines(args: &Args) -> Result<Vec<String>> {
+    let samples = args.get_usize("samples", 512)?;
+    let mut lines = Vec::new();
+    match args.get("json") {
+        Some(raw) if raw.trim().is_empty() => {
+            bail!("--json needs a non-empty request object")
+        }
+        Some(raw) => lines.push(raw.to_string()),
+        None => {
+            for kind in args.get_or("mix", "energy,info").split(',') {
+                let kind = kind.trim();
+                lines.push(match kind {
+                    "" => continue,
+                    "info" => r#"{"cmd":"info"}"#.to_string(),
+                    "metrics" => r#"{"cmd":"metrics"}"#.to_string(),
+                    "energy" => proto::obj(vec![
+                        ("cmd", Json::Str("energy".to_string())),
+                        ("dr", Json::Num(30.1)),
+                        ("sqnr", Json::Num(22.83)),
+                        ("samples", Json::Num(samples as f64)),
+                    ])
+                    .to_string(),
+                    "figure" => proto::obj(vec![
+                        ("cmd", Json::Str("figure".to_string())),
+                        ("id", Json::Str("table1".to_string())),
+                        ("samples", Json::Num(256.0)),
+                    ])
+                    .to_string(),
+                    other => bail!(
+                        "unknown loadgen mix kind '{other}' \
+                         (energy|figure|info|metrics, or --json '<raw request>')"
+                    ),
+                });
+            }
+        }
+    }
+    if let Some(ms) = args.get("deadline") {
+        let ms: f64 = ms
+            .parse()
+            .with_context(|| format!("--deadline expects milliseconds, got '{ms}'"))?;
+        for line in lines.iter_mut() {
+            let mut j = Json::parse(line).context("--json must be a JSON object")?;
+            if let Json::Obj(map) = &mut j {
+                map.insert("deadline_ms".to_string(), Json::Num(ms));
+            } else {
+                bail!("--json must be a JSON object to carry --deadline");
+            }
+            *line = j.to_string();
+        }
+    }
+    Ok(lines)
+}
+
+/// `grcim loadgen`: hold many concurrent connections against a running
+/// serve and check byte-identical cached responses under load. Exits
+/// non-zero on connect failures, error responses, or response
+/// divergence; typed `busy`/`deadline` rejections are tolerated (they
+/// are backpressure working as designed) but reported.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    args.ensure_known(flags::LOADGEN)?;
+    args.ensure_known_switches(&[])?;
+    let cfg = grcim::server::loadgen::LoadgenConfig {
+        addr: args.get_or("addr", DEFAULT_ADDR).to_string(),
+        conns: args.get_usize("conns", 200)?,
+        per_conn: args.get_usize("requests", 4)?,
+        lines: loadgen_lines(args)?,
+        threads: args.get_usize("threads", 0)?,
+        loris_ms: args.get_u64("loris-ms", 0)?,
+    };
+    let report = grcim::server::loadgen::run(&cfg)?;
+    println!("{}", report.to_json());
+    if !report.clean() {
+        bail!(
+            "loadgen saw failures: {} connect errors, {} errors, {} divergent responses",
+            report.connect_errors,
+            report.errors,
+            report.divergent
+        );
+    }
+    Ok(())
 }
 
 /// `--seed` as a JSON-safe number (JSON carries f64; larger seeds would
@@ -415,6 +509,7 @@ fn json_seed(args: &Args) -> Result<Option<f64>> {
 fn build_request(kind: &str, args: &Args) -> Result<String> {
     match kind {
         "info" => Ok(r#"{"cmd":"info"}"#.to_string()),
+        "metrics" => Ok(r#"{"cmd":"metrics"}"#.to_string()),
         "energy" => {
             let mut pairs = vec![
                 ("cmd", Json::Str("energy".to_string())),
@@ -581,7 +676,7 @@ fn build_request(kind: &str, args: &Args) -> Result<String> {
         }
         other => bail!(
             "unknown query kind '{other}' \
-             (energy|sweep|figure|workload|layer|model|info, \
+             (energy|sweep|figure|workload|layer|model|metrics|info, \
              or --json '<raw request>')"
         ),
     }
@@ -647,6 +742,7 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "serve" => cmd_serve(&args),
         "query" => cmd_query(&args),
+        "loadgen" => cmd_loadgen(&args),
         other => {
             eprintln!("unknown command '{other}'\n\n{USAGE}");
             std::process::exit(2);

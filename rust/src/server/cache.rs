@@ -77,6 +77,22 @@ pub struct StatsSnapshot {
     pub entries: u64,
 }
 
+impl StatsSnapshot {
+    /// Render as a JSON object — the per-cache block of the `info` and
+    /// `metrics` responses.
+    pub fn to_json(&self) -> crate::config::Json {
+        use crate::config::Json;
+        crate::server::proto::obj(vec![
+            ("hits", Json::Num(self.hits as f64)),
+            ("misses", Json::Num(self.misses as f64)),
+            ("computes", Json::Num(self.computes as f64)),
+            ("coalesced", Json::Num(self.coalesced as f64)),
+            ("evictions", Json::Num(self.evictions as f64)),
+            ("entries", Json::Num(self.entries as f64)),
+        ])
+    }
+}
+
 #[derive(Debug, Default)]
 struct Counters {
     hits: AtomicU64,

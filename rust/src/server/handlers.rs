@@ -1,0 +1,566 @@
+//! Unified request dispatch: every compute request kind is one
+//! [`Handler`] impl driven through a single
+//! `Request → cache key → compute → render` pipeline
+//! ([`CampaignService::run_handler`]), so the sharded single-flight
+//! cache, the MAC/operand-slab caps, and error rendering apply
+//! uniformly — and a new request kind is one more impl, not a seventh
+//! hand-rolled handler method.
+//!
+//! The pipeline's contract:
+//!
+//! 1. [`Handler::plan`] validates the request, enforces resource caps,
+//!    resolves specs, and returns the canonical cache key. Nothing
+//!    expensive may run here — `plan` executes on every request,
+//!    including cache hits.
+//! 2. [`Handler::compute`] runs only for single-flight leaders on a
+//!    cold key and returns the cacheable payload as rendered JSON
+//!    *text* — the cache stores exact bytes, so hits are byte-identical
+//!    to the cold compute.
+//! 3. [`Handler::render`] wraps the (possibly cached) payload with
+//!    per-request echo fields that must *not* be cached (request
+//!    aliases share one payload entry but echo their own spelling).
+
+use super::{confined_trace_path, CampaignService, MAX_LAYER_ELEMS, MAX_LAYER_MACS};
+use crate::cli::sweep::{experiment_spec, LayerParams, ModelParams};
+use crate::config::Json;
+use crate::coordinator::{CampaignConfig, ExperimentSpec};
+use crate::distributions::Distribution;
+use crate::energy::{EnergyBreakdown, TechParams};
+use crate::figures::{self, fig12, FigureCtx};
+use crate::mac::FormatPair;
+use crate::model::ModelSpec;
+use crate::server::cache::ShardedCache;
+use crate::server::proto::{self, obj, Request, RequestKind, SweepExperiment, TraceSource};
+use crate::spec::{required_enob, Arch, SpecConfig};
+use crate::tile::LayerSpec;
+use crate::workload::{self, EmpiricalDist, TensorTrace};
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// One request kind's compute pipeline; see the module docs for the
+/// three-phase contract.
+pub(super) trait Handler {
+    /// The kind this handler serves (selects its rendered-payload cache
+    /// and its metrics slot).
+    fn kind(&self) -> RequestKind;
+    /// Validate, enforce caps, resolve specs, return the canonical key.
+    fn plan(&mut self, svc: &CampaignService) -> Result<String>;
+    /// Cold path: produce the cacheable payload (rendered JSON text).
+    fn compute(&self, svc: &CampaignService) -> Result<String>;
+    /// Wrap the payload with per-request (uncached) echo fields.
+    fn render(&self, svc: &CampaignService, payload: Json) -> Result<Json>;
+}
+
+impl CampaignService {
+    /// The rendered-payload cache of one compute kind.
+    fn rendered(&self, kind: RequestKind) -> &ShardedCache<String> {
+        match kind {
+            RequestKind::Energy => &self.energies,
+            RequestKind::Sweep => &self.sweeps,
+            RequestKind::Figure => &self.figs,
+            RequestKind::Workload => &self.workloads,
+            RequestKind::Layer => &self.layers,
+            RequestKind::Model => &self.models,
+            RequestKind::Info | RequestKind::Metrics => {
+                unreachable!("inline kinds are answered without a cache")
+            }
+        }
+    }
+
+    /// Run one handler through the unified pipeline: plan → single-flight
+    /// cached compute → render. The `bool` is the wire `cached` flag
+    /// (true when no fresh computation ran for this call).
+    pub(super) fn run_handler<H: Handler>(&self, h: &mut H) -> Result<(Json, bool)> {
+        let key = h.plan(self)?;
+        let (text, outcome) = self.rendered(h.kind()).get_or_compute(&key, || h.compute(self))?;
+        let payload = Json::parse(&text)
+            .with_context(|| format!("re-parsing cached {} payload", h.kind().name()))?;
+        Ok((h.render(self, payload)?, outcome.is_cached()))
+    }
+}
+
+/// Dispatch one parsed request to its handler. Inline kinds
+/// (`info`/`metrics`) are answered directly — they read shared counters
+/// and are never cached.
+pub(super) fn dispatch(svc: &CampaignService, req: &Request) -> Result<(Json, bool)> {
+    let seed_of = |seed: &Option<u64>| seed.unwrap_or(svc.campaign.seed);
+    match req {
+        Request::Info => svc.info().map(|j| (j, false)),
+        Request::Metrics => Ok((svc.metrics_snapshot(), false)),
+        Request::Energy { dr_db, sqnr_db, samples, seed } => svc.run_handler(&mut EnergyHandler {
+            dr_db: *dr_db,
+            sqnr_db: *sqnr_db,
+            samples: *samples,
+            seed: seed_of(seed),
+        }),
+        Request::Sweep { samples, seed, experiments } => svc.run_handler(&mut SweepHandler {
+            samples: *samples,
+            seed: seed_of(seed),
+            experiments: experiments.clone(),
+            specs: Vec::new(),
+        }),
+        Request::Figure { id, samples, seed } => svc.run_handler(&mut FigureHandler {
+            id: id.clone(),
+            samples: *samples,
+            seed: seed_of(seed),
+        }),
+        Request::Layer { params, seed } => svc.run_handler(&mut LayerHandler {
+            params: params.clone(),
+            seed: seed_of(seed),
+            spec: None,
+        }),
+        Request::Model { params, seed } => svc.run_handler(&mut ModelHandler {
+            params: params.clone(),
+            seed: seed_of(seed),
+            spec: None,
+        }),
+        Request::Workload { source, samples, seed } => svc.run_handler(&mut WorkloadHandler {
+            source: source.clone(),
+            samples: *samples,
+            seed: seed_of(seed),
+            fit: None,
+            trace_name: String::new(),
+            trace_len: 0,
+        }),
+    }
+}
+
+fn arch_json(name: &str, enob: f64, b: &EnergyBreakdown) -> Json {
+    obj(vec![
+        ("arch", Json::Str(name.to_string())),
+        ("enob", Json::Num(enob)),
+        ("total_fj", Json::Num(b.total())),
+        ("adc", Json::Num(b.adc)),
+        ("dac", Json::Num(b.dac)),
+        ("cells", Json::Num(b.cells)),
+        ("exp_logic", Json::Num(b.exp_logic)),
+        ("tree", Json::Num(b.tree)),
+        ("norm_mult", Json::Num(b.norm_mult)),
+    ])
+}
+
+/// The `layer` request's MAC and operand-slab caps (also applied, over
+/// the layer sum, by [`check_model_caps`]).
+fn check_layer_caps(spec: &LayerSpec) -> Result<()> {
+    if spec.shape.macs() > MAX_LAYER_MACS {
+        bail!(
+            "layer shape {} is too large for the service ({} MACs > {MAX_LAYER_MACS})",
+            spec.shape,
+            spec.shape.macs()
+        );
+    }
+    // parse_shape bounds each dimension to 2^20, so these products
+    // cannot overflow u64
+    let x_elems = spec.shape.m as u64 * spec.shape.k as u64;
+    let wt_elems = spec.shape.n as u64 * spec.shape.k as u64;
+    if x_elems.max(wt_elems) > MAX_LAYER_ELEMS {
+        bail!(
+            "layer shape {} is too large for the service (operand slab \
+             of {} elements > {MAX_LAYER_ELEMS})",
+            spec.shape,
+            x_elems.max(wt_elems)
+        );
+    }
+    Ok(())
+}
+
+/// The `model` request's caps: the `layer` budgets applied across the
+/// **layer sum**, so chaining layers cannot smuggle in more compute or
+/// memory than one maximal layer gets.
+fn check_model_caps(spec: &ModelSpec) -> Result<()> {
+    let total_macs = spec.macs();
+    if total_macs > MAX_LAYER_MACS {
+        bail!(
+            "model '{}' is too large for the service ({total_macs} MACs across \
+             {} layers > {MAX_LAYER_MACS})",
+            spec.name,
+            spec.layers.len()
+        );
+    }
+    // parse_shape bounds each dimension to 2^20, so these products
+    // cannot overflow u64. The slab cap applies to the **sum** of
+    // every layer's operand elements: run_model materializes all
+    // weight slabs for the whole run, so a per-layer cap would let a
+    // 64-layer chain allocate 64x the budget one maximal layer gets
+    let mut sum_elems = 0u64;
+    for l in &spec.layers {
+        let x_elems = l.shape.m as u64 * l.shape.k as u64;
+        let wt_elems = l.shape.n as u64 * l.shape.k as u64;
+        let act_elems = l.shape.m as u64 * l.shape.n as u64;
+        sum_elems = sum_elems
+            .saturating_add(x_elems)
+            .saturating_add(wt_elems)
+            .saturating_add(act_elems);
+    }
+    if sum_elems > MAX_LAYER_ELEMS {
+        bail!(
+            "model '{}' is too large for the service (operand slabs \
+             of {sum_elems} total elements > {MAX_LAYER_ELEMS})",
+            spec.name
+        );
+    }
+    Ok(())
+}
+
+/// `energy` — the Fig. 12 spec-point query: two cached aggregates
+/// (INT/narrow bounds and FP/full scale) evaluated through
+/// [`fig12::evaluate_at`]. The rendered response is itself cached (by
+/// [`proto::energy_key`]) on top of the aggregate cache, so repeat
+/// queries skip even the solve/render step while the aggregates stay
+/// reusable across `energy` and `sweep` requests.
+struct EnergyHandler {
+    dr_db: f64,
+    sqnr_db: f64,
+    samples: usize,
+    seed: u64,
+}
+
+impl Handler for EnergyHandler {
+    fn kind(&self) -> RequestKind {
+        RequestKind::Energy
+    }
+
+    fn plan(&mut self, svc: &CampaignService) -> Result<String> {
+        if self.samples == 0 {
+            bail!("samples must be positive");
+        }
+        let p = fig12::SpecPoint::from_db(self.dr_db, self.sqnr_db);
+        if p.fp_format().is_none() || p.int_format().is_none() {
+            bail!(
+                "spec point (DR {} dB, SQNR {} dB) is left of the INT line",
+                self.dr_db,
+                self.sqnr_db
+            );
+        }
+        Ok(proto::energy_key(self.dr_db, self.sqnr_db, self.samples, self.seed, svc.engine_name()))
+    }
+
+    fn compute(&self, svc: &CampaignService) -> Result<String> {
+        let p = fig12::SpecPoint::from_db(self.dr_db, self.sqnr_db);
+        let (Some(fp), Some(int)) = (p.fp_format(), p.int_format()) else {
+            bail!("spec point invalidated between plan and compute");
+        };
+        let w_fmt = fig12::weight_fmt();
+        let w_dist = Distribution::max_entropy(w_fmt);
+        let int_spec = ExperimentSpec {
+            id: "serve-int".to_string(),
+            fmts: FormatPair::new(int, w_fmt),
+            dist_x: fig12::narrow_bounds_dist(fp),
+            dist_w: w_dist.clone(),
+            nr: fig12::NR,
+            samples: self.samples,
+        };
+        let fp_spec = ExperimentSpec {
+            id: "serve-fp".to_string(),
+            fmts: FormatPair::new(fp, w_fmt),
+            dist_x: Distribution::Uniform,
+            dist_w: w_dist,
+            nr: fig12::NR,
+            samples: self.samples,
+        };
+        let (agg_int, _) = svc.aggregate(&int_spec, self.seed)?;
+        let (agg_fp, _) = svc.aggregate(&fp_spec, self.seed)?;
+        let tech = TechParams::default();
+        let r = fig12::evaluate_at(&p, &agg_int, &agg_fp, &tech)
+            .expect("formats validated in plan");
+
+        let mut archs = vec![arch_json("conventional", r.enob_conv, &r.e_conv)];
+        for (arch, enob, b) in &r.gr_all {
+            archs.push(arch_json(arch.name(), *enob, b));
+        }
+        let gr_best = match &r.gr_best {
+            Some((a, _, _)) => Json::Str(a.name().to_string()),
+            None => Json::Null,
+        };
+        Ok(obj(vec![
+            ("dr_db", Json::Num(self.dr_db)),
+            ("sqnr_db", Json::Num(self.sqnr_db)),
+            ("samples", Json::Num(agg_int.samples() as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("gr_best", gr_best),
+            ("archs", Json::Arr(archs)),
+        ])
+        .to_string())
+    }
+
+    fn render(&self, _svc: &CampaignService, payload: Json) -> Result<Json> {
+        Ok(payload)
+    }
+}
+
+/// `sweep` — one cached aggregate per experiment, reported like the
+/// CLI's sweep table. Each experiment runs as its own single-spec
+/// campaign, so its aggregate is reusable across sweeps that mix
+/// experiments differently; the rendered table is cached by
+/// [`proto::sweep_key`] (which, unlike the aggregate key, covers the
+/// experiment names the response echoes).
+struct SweepHandler {
+    samples: usize,
+    seed: u64,
+    experiments: Vec<SweepExperiment>,
+    /// Resolved by `plan`, read by `compute`.
+    specs: Vec<ExperimentSpec>,
+}
+
+impl Handler for SweepHandler {
+    fn kind(&self) -> RequestKind {
+        RequestKind::Sweep
+    }
+
+    fn plan(&mut self, svc: &CampaignService) -> Result<String> {
+        if self.samples == 0 {
+            bail!("samples must be positive");
+        }
+        self.specs.clear();
+        for e in &self.experiments {
+            // empirical distributions read a server-side trace file; the
+            // same confinement as the workload request applies
+            if let Some(path) = e.distribution.strip_prefix("empirical:") {
+                confined_trace_path(path)?;
+            }
+            self.specs.push(experiment_spec(
+                &e.name,
+                e.n_e,
+                e.n_m,
+                e.nr,
+                &e.distribution,
+                self.samples,
+            )?);
+        }
+        Ok(proto::sweep_key(&self.specs, self.seed, svc.engine_name()))
+    }
+
+    fn compute(&self, svc: &CampaignService) -> Result<String> {
+        let scfg = SpecConfig::default();
+        let mut rows = Vec::new();
+        for (e, spec) in self.experiments.iter().zip(&self.specs) {
+            let (agg, _) = svc.aggregate(spec, self.seed)?;
+            rows.push(obj(vec![
+                ("name", Json::Str(e.name.clone())),
+                ("samples", Json::Num(agg.samples() as f64)),
+                (
+                    "enob_conv",
+                    Json::Num(required_enob(&agg, Arch::Conventional, scfg).enob),
+                ),
+                (
+                    "enob_gr_unit",
+                    Json::Num(required_enob(&agg, Arch::GrUnit, scfg).enob),
+                ),
+                (
+                    "enob_gr_row",
+                    Json::Num(required_enob(&agg, Arch::GrRow, scfg).enob),
+                ),
+                ("mean_n_eff", Json::Num(agg.mean_n_eff())),
+                ("sqnr_db", Json::Num(agg.sqnr_db())),
+            ]));
+        }
+        Ok(obj(vec![
+            ("seed", Json::Num(self.seed as f64)),
+            ("experiments", Json::Arr(rows)),
+        ])
+        .to_string())
+    }
+
+    fn render(&self, _svc: &CampaignService, payload: Json) -> Result<Json> {
+        Ok(payload)
+    }
+}
+
+/// `figure` — regenerate one paper figure/table as JSON
+/// ([`crate::report::FigureResult::to_json`]); the rendered JSON text
+/// is the cached payload.
+struct FigureHandler {
+    id: String,
+    samples: usize,
+    seed: u64,
+}
+
+impl Handler for FigureHandler {
+    fn kind(&self) -> RequestKind {
+        RequestKind::Figure
+    }
+
+    fn plan(&mut self, svc: &CampaignService) -> Result<String> {
+        if self.samples == 0 {
+            bail!("samples must be positive");
+        }
+        // unknown ids fail in compute (figures::run validates); errors
+        // are never cached, so the key for a bad id stays vacant
+        Ok(proto::figure_key(&self.id, self.samples, self.seed, svc.engine_name()))
+    }
+
+    fn compute(&self, svc: &CampaignService) -> Result<String> {
+        let campaign = CampaignConfig { seed: self.seed, ..svc.campaign.clone() };
+        let ctx = FigureCtx {
+            campaign,
+            samples: self.samples,
+            // figures only write files through `FigureResult::emit`,
+            // which the service never calls; out_dir is unused
+            out_dir: std::env::temp_dir(),
+        };
+        let fr = figures::run(&self.id, &ctx)?;
+        Ok(fr.to_json().to_string())
+    }
+
+    fn render(&self, _svc: &CampaignService, payload: Json) -> Result<Json> {
+        Ok(obj(vec![
+            ("id", Json::Str(self.id.clone())),
+            ("figure", payload),
+        ]))
+    }
+}
+
+/// `layer` — evaluate a named layer shape on the tiled array mapper
+/// ([`crate::tile::run_layer`]), cached by [`proto::layer_key`] over
+/// the **resolved** spec, so request aliases (`gr` vs `gr-unit`, named
+/// shape vs explicit `gemm:`) share one entry. Empirical activation
+/// traces are confined like workload paths.
+struct LayerHandler {
+    params: LayerParams,
+    seed: u64,
+    /// Resolved by `plan`, read by `compute` and `render`.
+    spec: Option<LayerSpec>,
+}
+
+impl Handler for LayerHandler {
+    fn kind(&self) -> RequestKind {
+        RequestKind::Layer
+    }
+
+    fn plan(&mut self, svc: &CampaignService) -> Result<String> {
+        // empirical distributions read a server-side trace file
+        if let Some(path) = self.params.distribution.strip_prefix("empirical:") {
+            confined_trace_path(path)?;
+        }
+        let spec = self.params.resolve()?;
+        check_layer_caps(&spec)?;
+        let key = proto::layer_key(&spec, self.seed, svc.engine_name());
+        self.spec = Some(spec);
+        Ok(key)
+    }
+
+    fn compute(&self, svc: &CampaignService) -> Result<String> {
+        let spec = self.spec.clone().expect("plan resolved the spec");
+        let campaign = CampaignConfig { seed: self.seed, ..svc.campaign.clone() };
+        let res = crate::tile::run_layer(&spec, &campaign)?;
+        Ok(res.report.to_figure_result().to_json().to_string())
+    }
+
+    fn render(&self, _svc: &CampaignService, payload: Json) -> Result<Json> {
+        let spec = self.spec.as_ref().expect("plan resolved the spec");
+        Ok(obj(vec![
+            ("shape", Json::Str(self.params.shape.clone())),
+            ("gemm", Json::Str(spec.shape.to_string())),
+            ("arch", Json::Str(spec.cfg.arch.name().to_string())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("layer", payload),
+        ]))
+    }
+}
+
+/// `model` — evaluate a multi-layer model on the chained tile pipeline
+/// ([`crate::model::run_model`]), cached by [`proto::model_key`] over
+/// the **resolved** spec. The `layer` caps are enforced across the
+/// layer sum by [`check_model_caps`].
+struct ModelHandler {
+    params: ModelParams,
+    seed: u64,
+    /// Resolved by `plan`, read by `compute` and `render`.
+    spec: Option<ModelSpec>,
+}
+
+impl Handler for ModelHandler {
+    fn kind(&self) -> RequestKind {
+        RequestKind::Model
+    }
+
+    fn plan(&mut self, svc: &CampaignService) -> Result<String> {
+        // empirical model-input distributions read a server-side trace
+        if let Some(path) = self.params.distribution.strip_prefix("empirical:") {
+            confined_trace_path(path)?;
+        }
+        let spec = self.params.resolve()?;
+        check_model_caps(&spec)?;
+        let key = proto::model_key(&spec, self.seed, svc.engine_name());
+        self.spec = Some(spec);
+        Ok(key)
+    }
+
+    fn compute(&self, svc: &CampaignService) -> Result<String> {
+        let spec = self.spec.clone().expect("plan resolved the spec");
+        let campaign = CampaignConfig { seed: self.seed, ..svc.campaign.clone() };
+        let res = crate::model::run_model(&spec, &campaign)?;
+        Ok(res.report.to_figure_result().to_json().to_string())
+    }
+
+    fn render(&self, _svc: &CampaignService, payload: Json) -> Result<Json> {
+        let spec = self.spec.as_ref().expect("plan resolved the spec");
+        Ok(obj(vec![
+            ("model", Json::Str(self.params.model.clone())),
+            ("layers", Json::Num(spec.layers.len() as f64)),
+            ("arch", Json::Str(spec.cfg.arch.name().to_string())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("report", payload),
+        ]))
+    }
+}
+
+/// `workload` — fit an empirical trace and run the full `grcim
+/// workload` analysis ([`crate::workload::report`]), cached by the
+/// trace's **content hash**: two uploads of the same tensor (even under
+/// different names or paths) share one entry, and hits are
+/// byte-identical to the cold compute. Server-side paths are confined
+/// (see [`confined_trace_path`]).
+struct WorkloadHandler {
+    source: TraceSource,
+    samples: usize,
+    seed: u64,
+    /// Fit by `plan` (the content hash is the cache identity), read by
+    /// `compute` and `render`.
+    fit: Option<Arc<EmpiricalDist>>,
+    trace_name: String,
+    trace_len: usize,
+}
+
+impl Handler for WorkloadHandler {
+    fn kind(&self) -> RequestKind {
+        RequestKind::Workload
+    }
+
+    fn plan(&mut self, svc: &CampaignService) -> Result<String> {
+        if self.samples == 0 {
+            bail!("samples must be positive");
+        }
+        let trace = match &self.source {
+            TraceSource::Path(p) => TensorTrace::read(&confined_trace_path(p)?)?,
+            TraceSource::Inline { name, values } => {
+                TensorTrace::from_f64(name.clone(), vec![values.len()], values.clone())?
+            }
+        };
+        self.trace_name = trace.name().to_string();
+        self.trace_len = trace.len();
+        let fit = Arc::new(EmpiricalDist::fit(&trace)?);
+        let key =
+            proto::workload_key(fit.content_hash(), self.samples, self.seed, svc.engine_name());
+        self.fit = Some(fit);
+        Ok(key)
+    }
+
+    fn compute(&self, svc: &CampaignService) -> Result<String> {
+        let fit = self.fit.as_ref().expect("plan fit the trace");
+        let campaign = CampaignConfig { seed: self.seed, ..svc.campaign.clone() };
+        let fr = workload::report(fit, &campaign, self.samples)?;
+        Ok(fr.to_json().to_string())
+    }
+
+    fn render(&self, _svc: &CampaignService, payload: Json) -> Result<Json> {
+        let fit = self.fit.as_ref().expect("plan fit the trace");
+        Ok(obj(vec![
+            ("trace", Json::Str(self.trace_name.clone())),
+            ("content_hash", Json::Str(format!("{:016x}", fit.content_hash()))),
+            ("samples_in_trace", Json::Num(self.trace_len as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("workload", payload),
+        ]))
+    }
+}

@@ -1,0 +1,356 @@
+//! `grcim loadgen` — a concurrent load generator for the serve core.
+//!
+//! Opens many simultaneous connections (phase 1, synchronized on a
+//! barrier so they are all open at once), then drives rounds of
+//! requests over every connection (phase 2). Each round writes one
+//! request per connection before reading any response, so up to one
+//! request per *connection* — not per driver thread — is in flight at a
+//! time, which is exactly the per-connection ordering the server
+//! guarantees.
+//!
+//! Beyond raw load, the generator checks the server's core caching
+//! contract: every response to the same deterministic request line must
+//! be **byte-identical** across all connections and rounds (cache hits
+//! return the stored bytes). `info`/`metrics` lines are exempt — their
+//! counters legitimately change between calls. Typed `busy` and
+//! `deadline` errors are tallied separately from real errors: under
+//! deliberate overload they are correct behavior, not failures.
+//!
+//! An optional slow-loris mode (`loris_ms`) writes the first half of
+//! every request line, stalls, then completes it — proving the event
+//! loop's muxes keep serving other connections while thousands of
+//! half-written lines sit in their accumulators.
+
+use crate::config::Json;
+use crate::server::proto::obj;
+use anyhow::{bail, Context, Result};
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::{Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+/// How long a driver waits for one response line before declaring the
+/// request failed (covers cold multi-second campaigns under load).
+const READ_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Load-generation parameters.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Server address to connect to.
+    pub addr: String,
+    /// Concurrent connections to hold open.
+    pub conns: usize,
+    /// Requests sent per connection (rounds).
+    pub per_conn: usize,
+    /// Request lines to cycle through; connection `c` sends line
+    /// `(c + round) % lines.len()` each round, so every line sees many
+    /// connections and every connection sees a mix of lines.
+    pub lines: Vec<String>,
+    /// Driver threads (0 = auto: one per 125 connections, 1–8). Each
+    /// drives a contiguous share of the connections.
+    pub threads: usize,
+    /// When nonzero, slow-loris every request: write half the line,
+    /// stall this many milliseconds, then complete it.
+    pub loris_ms: u64,
+}
+
+/// What one load-generation run observed.
+#[derive(Debug, Clone, Default)]
+pub struct LoadgenReport {
+    /// Connections successfully opened (all held concurrently).
+    pub connected: u64,
+    /// Connections that failed to open.
+    pub connect_errors: u64,
+    /// Request lines written.
+    pub sent: u64,
+    /// `"ok":true` responses.
+    pub ok: u64,
+    /// Typed `busy` rejections (admission control working as designed).
+    pub busy: u64,
+    /// Typed `deadline` rejections.
+    pub deadline: u64,
+    /// Everything else: error responses, short reads, timeouts.
+    pub errors: u64,
+    /// Deterministic request lines whose response bytes differed from
+    /// the first `ok` response to the same line. Must be zero: cache
+    /// hits are byte-identical by construction.
+    pub divergent: u64,
+    /// `ok` responses per request line (index-aligned with the config's
+    /// `lines`).
+    pub ok_per_line: Vec<u64>,
+    /// Wall-clock time of the whole run, milliseconds.
+    pub elapsed_ms: u64,
+}
+
+impl LoadgenReport {
+    /// True when the run saw no hard failures (`busy`/`deadline` are
+    /// tolerated — they are typed backpressure, not breakage).
+    pub fn clean(&self) -> bool {
+        self.connect_errors == 0 && self.errors == 0 && self.divergent == 0
+    }
+
+    /// Render as JSON (the `grcim loadgen` output).
+    pub fn to_json(&self) -> Json {
+        let n = |v: u64| Json::Num(v as f64);
+        obj(vec![
+            ("connected", n(self.connected)),
+            ("connect_errors", n(self.connect_errors)),
+            ("sent", n(self.sent)),
+            ("ok", n(self.ok)),
+            ("busy", n(self.busy)),
+            ("deadline", n(self.deadline)),
+            ("errors", n(self.errors)),
+            ("divergent", n(self.divergent)),
+            (
+                "ok_per_line",
+                Json::Arr(self.ok_per_line.iter().map(|&v| n(v)).collect()),
+            ),
+            ("elapsed_ms", n(self.elapsed_ms)),
+            ("clean", Json::Bool(self.clean())),
+        ])
+    }
+}
+
+/// One driver-side connection: the stream plus a carry-over read buffer
+/// (a read can return bytes past the newline).
+struct ClientConn {
+    id: usize,
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl ClientConn {
+    /// Read one newline-terminated response line (blocking, bounded by
+    /// the stream's read timeout).
+    fn read_line(&mut self) -> Result<String> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            if let Some(i) = self.buf.iter().position(|&b| b == b'\n') {
+                let line: Vec<u8> = self.buf.drain(..=i).collect();
+                return Ok(String::from_utf8_lossy(&line).trim_end().to_string());
+            }
+            match self.stream.read(&mut chunk) {
+                Ok(0) => bail!("server closed the connection mid-response"),
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e).context("reading response"),
+            }
+        }
+    }
+}
+
+#[derive(Default)]
+struct Counts {
+    connected: u64,
+    connect_errors: u64,
+    sent: u64,
+    ok: u64,
+    busy: u64,
+    deadline: u64,
+    errors: u64,
+    divergent: u64,
+    ok_per_line: Vec<u64>,
+}
+
+/// Lines whose responses are deterministic (everything except
+/// `info`/`metrics`, whose counters move between calls) take part in
+/// the byte-identity check.
+fn deterministic_lines(lines: &[String]) -> Vec<bool> {
+    lines
+        .iter()
+        .map(|l| {
+            !matches!(
+                Json::parse(l).ok().as_ref().and_then(|j| j.get("cmd")).and_then(Json::as_str),
+                Some("info") | Some("metrics")
+            )
+        })
+        .collect()
+}
+
+fn drive(
+    cfg: &LoadgenConfig,
+    ids: std::ops::Range<usize>,
+    deterministic: &[bool],
+    refs: &[Mutex<Option<String>>],
+    barrier: &Barrier,
+) -> Counts {
+    let mut c = Counts { ok_per_line: vec![0; cfg.lines.len()], ..Counts::default() };
+    // phase 1: open this thread's share of the connections; they all
+    // stay open for the whole run
+    let mut conns: Vec<ClientConn> = Vec::new();
+    for id in ids {
+        match TcpStream::connect(&cfg.addr) {
+            Ok(stream) => {
+                let _ = stream.set_nodelay(true);
+                let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+                c.connected += 1;
+                conns.push(ClientConn { id, stream, buf: Vec::new() });
+            }
+            Err(_) => c.connect_errors += 1,
+        }
+    }
+    barrier.wait(); // every thread's connections are open before any request flows
+
+    // phase 2: rounds of one request per connection; all writes land
+    // before any read, so the whole connection set is in flight at once
+    for round in 0..cfg.per_conn {
+        let mut alive: Vec<bool> = Vec::with_capacity(conns.len());
+        for conn in conns.iter_mut() {
+            let line = cfg.lines[(conn.id + round) % cfg.lines.len()].as_bytes();
+            let first = if cfg.loris_ms > 0 { &line[..line.len() / 2] } else { line };
+            let ok = conn.stream.write_all(first).is_ok();
+            if ok {
+                c.sent += 1;
+            } else {
+                c.errors += 1;
+            }
+            alive.push(ok);
+        }
+        if cfg.loris_ms > 0 {
+            // every connection now holds a half-written line server-side
+            std::thread::sleep(Duration::from_millis(cfg.loris_ms));
+            for (conn, ok) in conns.iter_mut().zip(alive.iter_mut()) {
+                if !*ok {
+                    continue;
+                }
+                let line = cfg.lines[(conn.id + round) % cfg.lines.len()].as_bytes();
+                *ok = conn.stream.write_all(&line[line.len() / 2..]).is_ok();
+                if !*ok {
+                    c.errors += 1;
+                }
+            }
+        }
+        for (conn, ok) in conns.iter_mut().zip(alive.iter()) {
+            if *ok && conn.stream.write_all(b"\n").is_err() {
+                c.errors += 1;
+                continue;
+            }
+            if !*ok {
+                continue;
+            }
+            let li = (conn.id + round) % cfg.lines.len();
+            match conn.read_line() {
+                Err(_) => c.errors += 1,
+                Ok(resp) => match Json::parse(&resp) {
+                    Err(_) => c.errors += 1,
+                    Ok(j) if j.get("ok") == Some(&Json::Bool(true)) => {
+                        c.ok += 1;
+                        c.ok_per_line[li] += 1;
+                        if deterministic[li] {
+                            let mut slot = refs[li].lock().unwrap();
+                            match slot.as_ref() {
+                                None => *slot = Some(resp),
+                                Some(first) if *first != resp => c.divergent += 1,
+                                Some(_) => {}
+                            }
+                        }
+                    }
+                    Ok(j) => match j.get("kind").and_then(Json::as_str) {
+                        Some("busy") => c.busy += 1,
+                        Some("deadline") => c.deadline += 1,
+                        _ => c.errors += 1,
+                    },
+                },
+            }
+        }
+    }
+    c
+}
+
+/// Run one load-generation campaign against a serve instance.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    if cfg.conns == 0 || cfg.per_conn == 0 || cfg.lines.is_empty() {
+        bail!("loadgen needs at least one connection, one round, and one request line");
+    }
+    let threads = if cfg.threads > 0 {
+        cfg.threads.min(cfg.conns)
+    } else {
+        (cfg.conns / 125).clamp(1, 8)
+    };
+    let deterministic = deterministic_lines(&cfg.lines);
+    let refs: Vec<Mutex<Option<String>>> =
+        cfg.lines.iter().map(|_| Mutex::new(None)).collect();
+    let barrier = Barrier::new(threads);
+    let start = Instant::now();
+
+    let counts: Vec<Counts> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let lo = t * cfg.conns / threads;
+            let hi = (t + 1) * cfg.conns / threads;
+            let (deterministic, refs, barrier) = (&deterministic, &refs, &barrier);
+            handles.push(s.spawn(move || drive(cfg, lo..hi, deterministic, refs, barrier)));
+        }
+        handles.into_iter().map(|h| h.join().expect("driver thread panicked")).collect()
+    });
+
+    let mut r = LoadgenReport {
+        ok_per_line: vec![0; cfg.lines.len()],
+        elapsed_ms: start.elapsed().as_millis() as u64,
+        ..LoadgenReport::default()
+    };
+    for c in counts {
+        r.connected += c.connected;
+        r.connect_errors += c.connect_errors;
+        r.sent += c.sent;
+        r.ok += c.ok;
+        r.busy += c.busy;
+        r.deadline += c.deadline;
+        r.errors += c.errors;
+        r.divergent += c.divergent;
+        for (total, v) in r.ok_per_line.iter_mut().zip(&c.ok_per_line) {
+            *total += v;
+        }
+    }
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn info_and_metrics_are_exempt_from_identity_checks() {
+        let lines = vec![
+            r#"{"cmd":"info"}"#.to_string(),
+            r#"{"cmd":"metrics"}"#.to_string(),
+            r#"{"cmd":"energy","dr":30.0,"sqnr":22.0}"#.to_string(),
+            "not json at all".to_string(),
+        ];
+        assert_eq!(deterministic_lines(&lines), vec![false, false, true, true]);
+    }
+
+    #[test]
+    fn report_json_carries_every_counter() {
+        let r = LoadgenReport {
+            connected: 10,
+            sent: 20,
+            ok: 18,
+            busy: 2,
+            ok_per_line: vec![9, 9],
+            elapsed_ms: 5,
+            ..LoadgenReport::default()
+        };
+        assert!(r.clean());
+        let j = r.to_json();
+        assert_eq!(j.get("connected").unwrap().as_usize(), Some(10));
+        assert_eq!(j.get("busy").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("clean"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("ok_per_line").unwrap().items().len(), 2);
+        let bad = LoadgenReport { divergent: 1, ..LoadgenReport::default() };
+        assert!(!bad.clean());
+    }
+
+    #[test]
+    fn run_rejects_empty_configs() {
+        let cfg = LoadgenConfig {
+            addr: "127.0.0.1:1".to_string(),
+            conns: 0,
+            per_conn: 1,
+            lines: vec![r#"{"cmd":"info"}"#.to_string()],
+            threads: 0,
+            loris_ms: 0,
+        };
+        assert!(run(&cfg).is_err());
+    }
+}

@@ -1,0 +1,299 @@
+//! Server observability: request/error counters, admission-control
+//! gauges, and per-request-kind latency histograms, snapshotted by the
+//! `metrics` wire request.
+//!
+//! One [`ServerMetrics`] is shared (via `Arc`) by the acceptor, the
+//! connection multiplexers, and the compute workers. Counters are
+//! relaxed atomics — they are monotonic telemetry, not synchronization.
+//! Latencies are binned into a log2-microsecond [`Histogram`]
+//! (40 one-octave bins, so the range spans 1 µs to ~2^40 µs ≈ 12 days),
+//! from which p50/p99 are read at bin centers: quantiles are accurate
+//! to about a factor of √2, which is plenty to tell a cache hit from a
+//! cold campaign while keeping recording O(1) and allocation-free.
+//!
+//! # Example
+//!
+//! ```
+//! use grcim::server::metrics::ServerMetrics;
+//! use grcim::server::proto::RequestKind;
+//! use std::time::Duration;
+//!
+//! let m = ServerMetrics::new();
+//! m.record(RequestKind::Energy, true, Duration::from_millis(3));
+//! let j = m.to_json();
+//! let energy = j.get("kinds").unwrap().get("energy").unwrap();
+//! assert_eq!(energy.get("ok").unwrap().as_usize(), Some(1));
+//! ```
+
+use crate::config::Json;
+use crate::server::proto::{obj, RequestKind};
+use crate::stats::Histogram;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Latency accumulator of one request kind: a log2-microsecond
+/// histogram plus exact running sum/max (the histogram buckets are a
+/// factor-√2 grid; sum and max stay exact).
+#[derive(Debug)]
+pub struct LatencyHist {
+    hist: Histogram,
+    sum_us: u64,
+    max_us: u64,
+}
+
+/// One-octave bins over log2(µs): bin i counts latencies in
+/// [2^i, 2^(i+1)) µs, clamped at both ends.
+const LAT_BINS: usize = 40;
+
+impl LatencyHist {
+    /// An empty accumulator.
+    pub fn new() -> Self {
+        LatencyHist {
+            hist: Histogram::new(0.0, LAT_BINS as f64, LAT_BINS),
+            sum_us: 0,
+            max_us: 0,
+        }
+    }
+
+    /// Record one latency sample.
+    pub fn push(&mut self, latency: Duration) {
+        let us = latency.as_micros().min(u64::MAX as u128) as u64;
+        // sub-microsecond latencies land in bin 0 ([1, 2) µs)
+        self.hist.push((us.max(1) as f64).log2());
+        self.sum_us = self.sum_us.saturating_add(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.hist.total
+    }
+
+    /// The `q`-quantile in microseconds, read at the matching bin's
+    /// center (so accurate to ~√2×), or `None` while empty.
+    pub fn quantile_us(&self, q: f64) -> Option<f64> {
+        if self.hist.total == 0 {
+            return None;
+        }
+        let target = ((q * self.hist.total as f64).ceil()).max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.hist.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Some(2f64.powf(i as f64 + 0.5));
+            }
+        }
+        Some(2f64.powf(LAT_BINS as f64 - 0.5))
+    }
+
+    /// Mean latency in microseconds (exact, from the running sum), or
+    /// `None` while empty.
+    pub fn mean_us(&self) -> Option<f64> {
+        if self.hist.total == 0 {
+            None
+        } else {
+            Some(self.sum_us as f64 / self.hist.total as f64)
+        }
+    }
+
+    /// Largest latency seen, in microseconds (exact).
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist::new()
+    }
+}
+
+#[derive(Debug, Default)]
+struct KindMetrics {
+    ok: AtomicU64,
+    errors: AtomicU64,
+    lat: Mutex<LatencyHist>,
+}
+
+impl KindMetrics {
+    fn to_json(&self) -> Json {
+        let lat = self.lat.lock().unwrap();
+        let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        obj(vec![
+            ("ok", Json::Num(self.ok.load(Ordering::Relaxed) as f64)),
+            ("errors", Json::Num(self.errors.load(Ordering::Relaxed) as f64)),
+            ("count", Json::Num(lat.count() as f64)),
+            ("p50_us", opt(lat.quantile_us(0.50))),
+            ("p99_us", opt(lat.quantile_us(0.99))),
+            ("mean_us", opt(lat.mean_us())),
+            ("max_us", Json::Num(lat.max_us() as f64)),
+        ])
+    }
+}
+
+/// Shared server telemetry; see the module docs.
+#[derive(Debug)]
+pub struct ServerMetrics {
+    started: Instant,
+    /// Connections accepted since start.
+    pub accepted: AtomicU64,
+    /// Connections currently open.
+    pub open_conns: AtomicU64,
+    /// Compute requests admitted to the queue.
+    pub admitted: AtomicU64,
+    /// Compute requests rejected with a `busy` error (queue full).
+    pub rejected_busy: AtomicU64,
+    /// Requests answered with a `deadline` error.
+    pub rejected_deadline: AtomicU64,
+    /// Lines that failed to parse as a request (`bad_request` errors).
+    pub bad_requests: AtomicU64,
+    /// Compute jobs queued but not yet picked up by a worker.
+    pub queue_depth: AtomicU64,
+    /// Compute jobs currently executing on a worker.
+    pub in_flight: AtomicU64,
+    queue_cap: AtomicU64,
+    kinds: Vec<KindMetrics>,
+}
+
+impl ServerMetrics {
+    /// Fresh metrics; the uptime clock starts now.
+    pub fn new() -> Self {
+        ServerMetrics {
+            started: Instant::now(),
+            accepted: AtomicU64::new(0),
+            open_conns: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            rejected_busy: AtomicU64::new(0),
+            rejected_deadline: AtomicU64::new(0),
+            bad_requests: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
+            queue_cap: AtomicU64::new(0),
+            kinds: RequestKind::ALL.iter().map(|_| KindMetrics::default()).collect(),
+        }
+    }
+
+    /// Record the admission-queue capacity (reported, not enforced, here).
+    pub fn set_queue_cap(&self, cap: usize) {
+        self.queue_cap.store(cap as u64, Ordering::Relaxed);
+    }
+
+    /// Record one completed request of `kind`: whether it succeeded, and
+    /// its latency from admission (or parse, for inline kinds) to the
+    /// response being ready.
+    pub fn record(&self, kind: RequestKind, ok: bool, latency: Duration) {
+        let k = &self.kinds[kind.index()];
+        if ok {
+            k.ok.fetch_add(1, Ordering::Relaxed);
+        } else {
+            k.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        k.lat.lock().unwrap().push(latency);
+    }
+
+    /// Total successful responses across kinds.
+    pub fn total_ok(&self) -> u64 {
+        self.kinds.iter().map(|k| k.ok.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Snapshot as the `metrics` response's `server` block: uptime,
+    /// connection/admission counters, queue gauges, and the per-kind
+    /// table (every kind always present, `Null` percentiles while empty
+    /// — a schema the CI validator can check unconditionally).
+    pub fn to_json(&self) -> Json {
+        let n = |a: &AtomicU64| Json::Num(a.load(Ordering::Relaxed) as f64);
+        let kinds = RequestKind::ALL
+            .iter()
+            .map(|k| (k.name(), self.kinds[k.index()].to_json()))
+            .collect();
+        obj(vec![
+            ("uptime_us", Json::Num(self.started.elapsed().as_micros() as f64)),
+            ("accepted", n(&self.accepted)),
+            ("open_conns", n(&self.open_conns)),
+            ("admitted", n(&self.admitted)),
+            ("rejected_busy", n(&self.rejected_busy)),
+            ("rejected_deadline", n(&self.rejected_deadline)),
+            ("bad_requests", n(&self.bad_requests)),
+            (
+                "queue",
+                obj(vec![
+                    ("depth", n(&self.queue_depth)),
+                    ("cap", n(&self.queue_cap)),
+                    ("in_flight", n(&self.in_flight)),
+                ]),
+            ),
+            ("kinds", obj(kinds)),
+        ])
+    }
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        ServerMetrics::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_quantiles_land_in_the_right_octave() {
+        let mut h = LatencyHist::new();
+        assert_eq!(h.quantile_us(0.5), None);
+        assert_eq!(h.mean_us(), None);
+        for _ in 0..99 {
+            h.push(Duration::from_micros(100)); // bin 6: [64, 128)
+        }
+        h.push(Duration::from_millis(100)); // bin 16: [65536, 131072) µs
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile_us(0.5).unwrap();
+        assert!((64.0..128.0).contains(&p50), "p50 {p50}");
+        let p99 = h.quantile_us(0.99).unwrap();
+        assert!((64.0..128.0).contains(&p99), "p99 {p99}");
+        // the single outlier is the true max and sits above p99
+        assert_eq!(h.max_us(), 100_000);
+        let mean = h.mean_us().unwrap();
+        assert!((mean - (99.0 * 100.0 + 100_000.0) / 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sub_microsecond_and_huge_latencies_clamp() {
+        let mut h = LatencyHist::new();
+        h.push(Duration::ZERO);
+        h.push(Duration::from_secs(60 * 60 * 24 * 365));
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile_us(0.0).unwrap() < 2.0);
+        assert!(h.quantile_us(1.0).unwrap() > 1e9);
+    }
+
+    #[test]
+    fn metrics_snapshot_has_every_kind_and_counts_records() {
+        let m = ServerMetrics::new();
+        m.record(RequestKind::Energy, true, Duration::from_micros(50));
+        m.record(RequestKind::Energy, true, Duration::from_micros(70));
+        m.record(RequestKind::Figure, false, Duration::from_micros(10));
+        m.accepted.fetch_add(3, Ordering::Relaxed);
+        m.set_queue_cap(64);
+        assert_eq!(m.total_ok(), 2);
+
+        let j = m.to_json();
+        let kinds = j.get("kinds").unwrap();
+        for k in RequestKind::ALL {
+            assert!(kinds.get(k.name()).is_some(), "missing {}", k.name());
+        }
+        let energy = kinds.get("energy").unwrap();
+        assert_eq!(energy.get("ok").unwrap().as_usize(), Some(2));
+        assert_eq!(energy.get("errors").unwrap().as_usize(), Some(0));
+        assert!(energy.get("p50_us").unwrap().as_f64().is_some());
+        assert!(energy.get("p99_us").unwrap().as_f64().is_some());
+        let figure = kinds.get("figure").unwrap();
+        assert_eq!(figure.get("errors").unwrap().as_usize(), Some(1));
+        // empty kinds render Null percentiles, not garbage
+        let model = kinds.get("model").unwrap();
+        assert_eq!(model.get("p50_us"), Some(&Json::Null));
+        assert_eq!(j.get("accepted").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("queue").unwrap().get("cap").unwrap().as_usize(), Some(64));
+    }
+}

@@ -2,69 +2,79 @@
 //!
 //! The one-shot CLI pays the full Monte-Carlo cost on every invocation.
 //! This layer keeps the process resident and serves spec-point queries
-//! over newline-delimited JSON (see [`proto`]), with three properties:
+//! over newline-delimited JSON (see [`proto`]), with these properties:
 //!
 //! * **Spec-keyed caching** — every campaign aggregate is addressed by a
 //!   canonical key ([`proto::spec_key`]) covering exactly the inputs that
-//!   determine its bits; repeated queries are O(lookup).
+//!   determine its bits, and every compute request kind additionally
+//!   caches its *rendered response text*, so repeat queries are O(lookup)
+//!   and hits are byte-identical to the cold compute.
 //! * **Single-flight coalescing** — concurrent identical requests share
 //!   one computation ([`cache::ShardedCache`]), so a thundering herd of
 //!   the same spec costs one campaign.
-//! * **Coordinator dispatch** — misses run through
+//! * **Unified dispatch** — the six compute request kinds run through one
+//!   `Request → cache key → compute → render` pipeline
+//!   ([`handlers`]); misses dispatch into
 //!   [`crate::coordinator::run_campaign`] and its per-worker
 //!   `JobBuffers`, so the MC hot path stays allocation-free under load.
+//! * **Admission control** — compute requests pass through a bounded
+//!   queue; when it is full the client gets a typed `busy` error
+//!   immediately instead of unbounded queueing. A request may carry a
+//!   `deadline_ms`; one that expires before a worker picks it up gets a
+//!   typed `deadline` error instead of a stale result.
+//! * **Observability** — the `metrics` request snapshots cache
+//!   hit/miss/compute counters, queue depth, and per-kind latency
+//!   p50/p99 (see [`metrics`]).
 //!
-//! Request lifecycle:
+//! Request lifecycle (threads are **O(muxes + workers)**, not
+//! O(connections) — see [`reactor`] for the event-loop internals):
 //!
 //! ```text
-//!  client line ── parse_request ──▶ Request
-//!                                     │ canonicalize (spec_key)
-//!                                     ▼
-//!                          ShardedCache::get_or_compute
-//!                           hit │          │ miss (single-flight leader)
-//!                               │          ▼
-//!                               │   run_campaign ──▶ worker pool
-//!                               ▼          │         (JobBuffers)
-//!                           Arc<ColumnAgg> ◀─────────┘
-//!                                     │ evaluate (spec solver + energy)
-//!                                     ▼
-//!  client line ◀── ok_line/err_line ── Json result
+//!  client line ──▶ mux thread ── parse_request_meta ──▶ Request
+//!                   │   inline (info/metrics): answered on the mux
+//!                   ▼
+//!            bounded ComputeQueue ──full──▶ {"ok":false,"kind":"busy"}
+//!                   │ pop (deadline checked here)
+//!                   ▼
+//!             compute worker ──▶ handlers::dispatch
+//!                                  │ plan (validate, caps, cache key)
+//!                                  ▼
+//!                       ShardedCache::get_or_compute
+//!                        hit │          │ miss (single-flight leader)
+//!                            │          ▼
+//!                            │   run_campaign ──▶ worker pool
+//!                            ▼          │         (JobBuffers)
+//!                     rendered JSON ◀───┘
+//!                                  │ render (uncached echo fields)
+//!                                  ▼
+//!  client line ◀── mux thread ◀── ok_line/err_line
 //! ```
 //!
-//! Threading: one acceptor thread plus one thread per connection; all
-//! handles are joined on [`Server::shutdown`], which is graceful (idle
-//! handlers notice the flag within one read-timeout tick; busy handlers
-//! finish their in-flight request first).
+//! Shutdown is one shared drain path ([`Server::shutdown`] and
+//! [`Server::join`] both end in it): stop accepting, finish every
+//! admitted compute job, flush every response, join every thread.
 
 pub mod cache;
+mod handlers;
+pub mod loadgen;
+pub mod metrics;
 pub mod proto;
+mod reactor;
 
-use crate::cli::sweep::{experiment_spec, LayerParams, ModelParams};
 use crate::config::Json;
 use crate::coordinator::{run_campaign, CampaignConfig, ExperimentSpec};
-use crate::distributions::Distribution;
-use crate::energy::{EnergyBreakdown, TechParams};
-use crate::figures::{self, fig12, FigureCtx};
-use crate::mac::FormatPair;
 use crate::runtime::EngineKind;
-use crate::spec::{required_enob, Arch, SpecConfig};
 use crate::stats::ColumnAgg;
-use crate::workload::{self, EmpiricalDist, TensorTrace};
 use anyhow::{bail, Context, Result};
 use cache::{Outcome, ShardedCache, StatsSnapshot};
-use proto::{obj, Request, TraceSource};
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use metrics::ServerMetrics;
+use proto::{obj, Request};
+use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
-use std::time::Duration;
+use std::sync::Arc;
 
 /// Default listen address of `grcim serve`.
 pub const DEFAULT_ADDR: &str = "127.0.0.1:4080";
-
-/// How often idle connection handlers re-check the shutdown flag.
-const IDLE_TICK: Duration = Duration::from_millis(200);
 
 /// Largest accepted request line; a client streaming more without a
 /// newline gets an error, the rest of that line is discarded up to its
@@ -94,8 +104,20 @@ pub struct ServeConfig {
     /// Campaign settings every computation runs under (engine, workers,
     /// default seed, artifacts directory).
     pub campaign: CampaignConfig,
-    /// Total cached entries across the aggregate and figure caches.
+    /// Total cached entries across the aggregate and rendered-response
+    /// caches.
     pub cache_entries: usize,
+    /// Connection-multiplexer threads (0 = auto: ~1 per 4 cores, 1–4).
+    /// Each mux owns a share of the open connections; connection count
+    /// does not add threads.
+    pub mux_threads: usize,
+    /// Compute worker threads (0 = auto: ~1 per 2 cores, 1–4). Each
+    /// worker runs one admitted request at a time; the campaign's own
+    /// worker pool parallelizes within a request.
+    pub compute_threads: usize,
+    /// Admission-queue capacity (0 = auto: 4× compute threads, min 16).
+    /// Requests beyond it get a typed `busy` error immediately.
+    pub queue_cap: usize,
 }
 
 impl Default for ServeConfig {
@@ -104,58 +126,78 @@ impl Default for ServeConfig {
             addr: DEFAULT_ADDR.to_string(),
             campaign: CampaignConfig::default(),
             cache_entries: 1024,
+            mux_threads: 0,
+            compute_threads: 0,
+            queue_cap: 0,
         }
     }
 }
 
-/// The request handlers plus their result caches — everything the server
-/// shares across connections. Usable without the TCP layer (the unit
-/// tests drive [`CampaignService::respond`] directly).
+fn parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+impl ServeConfig {
+    /// `mux_threads` with 0 resolved to the auto policy.
+    pub fn resolved_mux_threads(&self) -> usize {
+        if self.mux_threads > 0 {
+            self.mux_threads
+        } else {
+            (parallelism() / 4).clamp(1, 4)
+        }
+    }
+
+    /// `compute_threads` with 0 resolved to the auto policy.
+    pub fn resolved_compute_threads(&self) -> usize {
+        if self.compute_threads > 0 {
+            self.compute_threads
+        } else {
+            (parallelism() / 2).clamp(1, 4)
+        }
+    }
+
+    /// `queue_cap` with 0 resolved to the auto policy.
+    pub fn resolved_queue_cap(&self) -> usize {
+        if self.queue_cap > 0 {
+            self.queue_cap
+        } else {
+            (4 * self.resolved_compute_threads()).max(16)
+        }
+    }
+}
+
+/// The request handlers plus their result caches and telemetry —
+/// everything the server shares across connections. Usable without the
+/// TCP layer (the unit tests drive [`CampaignService::respond`]
+/// directly).
 pub struct CampaignService {
     campaign: CampaignConfig,
+    metrics: Arc<ServerMetrics>,
     aggs: ShardedCache<ColumnAgg>,
+    energies: ShardedCache<String>,
+    sweeps: ShardedCache<String>,
     figs: ShardedCache<String>,
     workloads: ShardedCache<String>,
     layers: ShardedCache<String>,
     models: ShardedCache<String>,
 }
 
-fn arch_json(name: &str, enob: f64, b: &EnergyBreakdown) -> Json {
-    obj(vec![
-        ("arch", Json::Str(name.to_string())),
-        ("enob", Json::Num(enob)),
-        ("total_fj", Json::Num(b.total())),
-        ("adc", Json::Num(b.adc)),
-        ("dac", Json::Num(b.dac)),
-        ("cells", Json::Num(b.cells)),
-        ("exp_logic", Json::Num(b.exp_logic)),
-        ("tree", Json::Num(b.tree)),
-        ("norm_mult", Json::Num(b.norm_mult)),
-    ])
-}
-
-fn stats_json(s: &StatsSnapshot) -> Json {
-    obj(vec![
-        ("entries", Json::Num(s.entries as f64)),
-        ("hits", Json::Num(s.hits as f64)),
-        ("misses", Json::Num(s.misses as f64)),
-        ("computes", Json::Num(s.computes as f64)),
-        ("coalesced", Json::Num(s.coalesced as f64)),
-        ("evictions", Json::Num(s.evictions as f64)),
-    ])
-}
-
 impl CampaignService {
     /// Build the handlers around one campaign configuration and a total
-    /// cache budget (split across the aggregate/figure/workload caches).
+    /// cache budget (split across the aggregate and rendered-response
+    /// caches).
     pub fn new(campaign: CampaignConfig, cache_entries: usize) -> Self {
+        let sub = (cache_entries / 8).max(8);
         CampaignService {
             campaign,
+            metrics: Arc::new(ServerMetrics::new()),
             aggs: ShardedCache::new(cache_entries),
-            figs: ShardedCache::new((cache_entries / 8).max(8)),
-            workloads: ShardedCache::new((cache_entries / 8).max(8)),
-            layers: ShardedCache::new((cache_entries / 8).max(8)),
-            models: ShardedCache::new((cache_entries / 8).max(8)),
+            energies: ShardedCache::new(sub),
+            sweeps: ShardedCache::new(sub),
+            figs: ShardedCache::new(sub),
+            workloads: ShardedCache::new(sub),
+            layers: ShardedCache::new(sub),
+            models: ShardedCache::new(sub),
         }
     }
 
@@ -167,15 +209,17 @@ impl CampaignService {
         }
     }
 
+    /// The server telemetry this service reports through `metrics`
+    /// responses (the event loop's threads update it).
+    pub fn metrics(&self) -> &Arc<ServerMetrics> {
+        &self.metrics
+    }
+
     /// The campaign aggregate for one spec, through the cache. A miss
     /// runs the spec as its own single-spec campaign (grid index 0 in the
     /// seeding scheme), so the result is a pure function of
     /// (spec, seed, engine) — the property the cache key relies on.
-    pub fn aggregate(
-        &self,
-        spec: &ExperimentSpec,
-        seed: u64,
-    ) -> Result<(Arc<ColumnAgg>, Outcome)> {
+    pub fn aggregate(&self, spec: &ExperimentSpec, seed: u64) -> Result<(Arc<ColumnAgg>, Outcome)> {
         let key = proto::spec_key(spec, seed, self.engine_name());
         self.aggs.get_or_compute(&key, || {
             let cfg = CampaignConfig { seed, ..self.campaign.clone() };
@@ -192,26 +236,16 @@ impl CampaignService {
 
     /// Handle one parsed request; returns the response line (no newline).
     pub fn respond(&self, req: &Request) -> String {
-        let out = match req {
-            Request::Info => self.info().map(|j| (j, false)),
-            Request::Energy { dr_db, sqnr_db, samples, seed } => {
-                self.energy(*dr_db, *sqnr_db, *samples, *seed)
-            }
-            Request::Sweep { samples, seed, experiments } => {
-                self.sweep(*samples, *seed, experiments)
-            }
-            Request::Figure { id, samples, seed } => {
-                self.figure(id, *samples, *seed)
-            }
-            Request::Layer { params, seed } => self.layer(params, *seed),
-            Request::Model { params, seed } => self.model(params, *seed),
-            Request::Workload { source, samples, seed } => {
-                self.workload(source, *samples, *seed)
-            }
-        };
-        match out {
-            Ok((result, cached)) => proto::ok_line(result, cached),
-            Err(e) => proto::err_line(&format!("{e:#}")),
+        self.respond_with_status(req).0
+    }
+
+    /// Handle one parsed request; returns the response line (no newline)
+    /// and whether it is a success (`"ok":true`) — the event loop's
+    /// per-kind ok/error metrics read the flag without re-parsing.
+    pub fn respond_with_status(&self, req: &Request) -> (String, bool) {
+        match handlers::dispatch(self, req) {
+            Ok((result, cached)) => (proto::ok_line(result, cached), true),
+            Err(e) => (proto::err_line(&format!("{e:#}")), false),
         }
     }
 
@@ -222,411 +256,65 @@ impl CampaignService {
             ("engine", Json::Str(self.engine_name().to_string())),
             ("workers", Json::Num(self.campaign.effective_workers() as f64)),
             ("seed", Json::Num(self.campaign.seed as f64)),
-            ("aggregates", stats_json(&self.aggs.stats())),
-            ("figures", stats_json(&self.figs.stats())),
-            ("layers", stats_json(&self.layers.stats())),
-            ("models", stats_json(&self.models.stats())),
-            ("workloads", stats_json(&self.workloads.stats())),
+            ("aggregates", self.aggs.stats().to_json()),
+            ("energies", self.energies.stats().to_json()),
+            ("sweeps", self.sweeps.stats().to_json()),
+            ("figures", self.figs.stats().to_json()),
+            ("layers", self.layers.stats().to_json()),
+            ("models", self.models.stats().to_json()),
+            ("workloads", self.workloads.stats().to_json()),
         ]))
     }
 
-    /// The Fig. 12 spec-point query: two cached aggregates (INT/narrow
-    /// bounds and FP/full scale) evaluated through
-    /// [`fig12::evaluate_at`].
-    fn energy(
-        &self,
-        dr_db: f64,
-        sqnr_db: f64,
-        samples: usize,
-        seed: Option<u64>,
-    ) -> Result<(Json, bool)> {
-        if samples == 0 {
-            bail!("samples must be positive");
-        }
-        let seed = seed.unwrap_or(self.campaign.seed);
-        let p = fig12::SpecPoint::from_db(dr_db, sqnr_db);
-        let (Some(fp), Some(int)) = (p.fp_format(), p.int_format()) else {
-            bail!(
-                "spec point (DR {dr_db} dB, SQNR {sqnr_db} dB) is left of \
-                 the INT line"
-            );
-        };
-        let w_fmt = fig12::weight_fmt();
-        let w_dist = Distribution::max_entropy(w_fmt);
-        let int_spec = ExperimentSpec {
-            id: "serve-int".to_string(),
-            fmts: FormatPair::new(int, w_fmt),
-            dist_x: fig12::narrow_bounds_dist(fp),
-            dist_w: w_dist.clone(),
-            nr: fig12::NR,
-            samples,
-        };
-        let fp_spec = ExperimentSpec {
-            id: "serve-fp".to_string(),
-            fmts: FormatPair::new(fp, w_fmt),
-            dist_x: Distribution::Uniform,
-            dist_w: w_dist,
-            nr: fig12::NR,
-            samples,
-        };
-        let (agg_int, o1) = self.aggregate(&int_spec, seed)?;
-        let (agg_fp, o2) = self.aggregate(&fp_spec, seed)?;
-        let tech = TechParams::default();
-        let r = fig12::evaluate_at(&p, &agg_int, &agg_fp, &tech)
-            .expect("formats validated above");
-
-        let mut archs = vec![arch_json("conventional", r.enob_conv, &r.e_conv)];
-        for (arch, enob, b) in &r.gr_all {
-            archs.push(arch_json(arch.name(), *enob, b));
-        }
-        let gr_best = match &r.gr_best {
-            Some((a, _, _)) => Json::Str(a.name().to_string()),
-            None => Json::Null,
-        };
-        let result = obj(vec![
-            ("dr_db", Json::Num(dr_db)),
-            ("sqnr_db", Json::Num(sqnr_db)),
-            ("samples", Json::Num(agg_int.samples() as f64)),
-            ("seed", Json::Num(seed as f64)),
-            ("gr_best", gr_best),
-            ("archs", Json::Arr(archs)),
-        ]);
-        Ok((result, o1.is_cached() && o2.is_cached()))
-    }
-
-    /// The sweep query: one cached aggregate per experiment, reported
-    /// like the CLI's sweep table. (Each experiment runs as its own
-    /// single-spec campaign, so its aggregate is reusable across sweeps
-    /// that mix experiments differently — see [`CampaignService::aggregate`].)
-    fn sweep(
-        &self,
-        samples: usize,
-        seed: Option<u64>,
-        experiments: &[proto::SweepExperiment],
-    ) -> Result<(Json, bool)> {
-        if samples == 0 {
-            bail!("samples must be positive");
-        }
-        let seed = seed.unwrap_or(self.campaign.seed);
-        let scfg = SpecConfig::default();
-        let mut rows = Vec::new();
-        let mut cached = true;
-        for e in experiments {
-            // empirical distributions read a server-side trace file; the
-            // same confinement as the workload request applies
-            if let Some(path) = e.distribution.strip_prefix("empirical:") {
-                confined_trace_path(path)?;
-            }
-            let spec = experiment_spec(
-                &e.name,
-                e.n_e,
-                e.n_m,
-                e.nr,
-                &e.distribution,
-                samples,
-            )?;
-            let (agg, o) = self.aggregate(&spec, seed)?;
-            cached &= o.is_cached();
-            rows.push(obj(vec![
-                ("name", Json::Str(e.name.clone())),
-                ("samples", Json::Num(agg.samples() as f64)),
-                (
-                    "enob_conv",
-                    Json::Num(
-                        required_enob(&agg, Arch::Conventional, scfg).enob,
-                    ),
-                ),
-                (
-                    "enob_gr_unit",
-                    Json::Num(required_enob(&agg, Arch::GrUnit, scfg).enob),
-                ),
-                (
-                    "enob_gr_row",
-                    Json::Num(required_enob(&agg, Arch::GrRow, scfg).enob),
-                ),
-                ("mean_n_eff", Json::Num(agg.mean_n_eff())),
-                ("sqnr_db", Json::Num(agg.sqnr_db())),
-            ]));
-        }
-        let result = obj(vec![
-            ("seed", Json::Num(seed as f64)),
-            ("experiments", Json::Arr(rows)),
-        ]);
-        Ok((result, cached))
-    }
-
-    /// The figure query: regenerate one paper figure/table and return it
-    /// as JSON ([`crate::report::FigureResult::to_json`]); the rendered
-    /// JSON text is what the figure cache stores.
-    fn figure(
-        &self,
-        id: &str,
-        samples: usize,
-        seed: Option<u64>,
-    ) -> Result<(Json, bool)> {
-        if samples == 0 {
-            bail!("samples must be positive");
-        }
-        let seed = seed.unwrap_or(self.campaign.seed);
-        let key = proto::figure_key(id, samples, seed, self.engine_name());
-        let campaign = CampaignConfig { seed, ..self.campaign.clone() };
-        let id_owned = id.to_string();
-        let (text, o) = self.figs.get_or_compute(&key, move || {
-            let ctx = FigureCtx {
-                campaign,
-                samples,
-                // figures only write files through `FigureResult::emit`,
-                // which the service never calls; out_dir is unused
-                out_dir: std::env::temp_dir(),
-            };
-            let fr = figures::run(&id_owned, &ctx)?;
-            Ok(fr.to_json().to_string())
-        })?;
-        let figure =
-            Json::parse(&text).context("re-parsing cached figure JSON")?;
-        let result = obj(vec![
-            ("id", Json::Str(id.to_string())),
-            ("figure", figure),
-        ]);
-        Ok((result, o.is_cached()))
-    }
-
-    /// The layer query: evaluate a named layer shape on the tiled array
-    /// mapper ([`crate::tile::run_layer`] — tile jobs shard across the
-    /// worker pool), cached by [`proto::layer_key`] over the **resolved**
-    /// spec, so request aliases (`gr` vs `gr-unit`, named shape vs
-    /// explicit `gemm:`) share one entry. Empirical activation traces are
-    /// confined like workload paths.
-    fn layer(&self, params: &LayerParams, seed: Option<u64>) -> Result<(Json, bool)> {
-        let seed = seed.unwrap_or(self.campaign.seed);
-        // empirical distributions read a server-side trace file
-        if let Some(path) = params.distribution.strip_prefix("empirical:") {
-            confined_trace_path(path)?;
-        }
-        let spec = params.resolve()?;
-        if spec.shape.macs() > MAX_LAYER_MACS {
-            bail!(
-                "layer shape {} is too large for the service ({} MACs > {MAX_LAYER_MACS})",
-                spec.shape,
-                spec.shape.macs()
-            );
-        }
-        // parse_shape bounds each dimension to 2^20, so these products
-        // cannot overflow u64
-        let x_elems = spec.shape.m as u64 * spec.shape.k as u64;
-        let wt_elems = spec.shape.n as u64 * spec.shape.k as u64;
-        if x_elems.max(wt_elems) > MAX_LAYER_ELEMS {
-            bail!(
-                "layer shape {} is too large for the service (operand slab \
-                 of {} elements > {MAX_LAYER_ELEMS})",
-                spec.shape,
-                x_elems.max(wt_elems)
-            );
-        }
-        let key = proto::layer_key(&spec, seed, self.engine_name());
-        let campaign = CampaignConfig { seed, ..self.campaign.clone() };
-        let gemm = spec.shape;
-        let arch = spec.cfg.arch;
-        let (text, o) = self.layers.get_or_compute(&key, move || {
-            let res = crate::tile::run_layer(&spec, &campaign)?;
-            Ok(res.report.to_figure_result().to_json().to_string())
-        })?;
-        let report = Json::parse(&text).context("re-parsing cached layer JSON")?;
-        let result = obj(vec![
-            ("shape", Json::Str(params.shape.clone())),
-            ("gemm", Json::Str(gemm.to_string())),
-            ("arch", Json::Str(arch.name().to_string())),
-            ("seed", Json::Num(seed as f64)),
-            ("layer", report),
-        ]);
-        Ok((result, o.is_cached()))
-    }
-
-    /// The model query: evaluate a multi-layer model on the chained tile
-    /// pipeline ([`crate::model::run_model`] — every layer's tile jobs
-    /// shard across the worker pool), cached by [`proto::model_key`]
-    /// over the **resolved** spec. The `layer` request's MAC and
-    /// operand-slab caps are enforced **across the layer sum**, so a
-    /// chain of layers cannot exceed the budget one maximal layer gets.
-    fn model(&self, params: &ModelParams, seed: Option<u64>) -> Result<(Json, bool)> {
-        let seed = seed.unwrap_or(self.campaign.seed);
-        // empirical model-input distributions read a server-side trace
-        if let Some(path) = params.distribution.strip_prefix("empirical:") {
-            confined_trace_path(path)?;
-        }
-        let spec = params.resolve()?;
-        let total_macs = spec.macs();
-        if total_macs > MAX_LAYER_MACS {
-            bail!(
-                "model '{}' is too large for the service ({total_macs} MACs across \
-                 {} layers > {MAX_LAYER_MACS})",
-                spec.name,
-                spec.layers.len()
-            );
-        }
-        // parse_shape bounds each dimension to 2^20, so these products
-        // cannot overflow u64. The slab cap applies to the **sum** of
-        // every layer's operand elements: run_model materializes all
-        // weight slabs for the whole run, so a per-layer cap would let a
-        // 64-layer chain allocate 64x the budget one maximal layer gets
-        let mut sum_elems = 0u64;
-        for l in &spec.layers {
-            let x_elems = l.shape.m as u64 * l.shape.k as u64;
-            let wt_elems = l.shape.n as u64 * l.shape.k as u64;
-            let act_elems = l.shape.m as u64 * l.shape.n as u64;
-            sum_elems = sum_elems
-                .saturating_add(x_elems)
-                .saturating_add(wt_elems)
-                .saturating_add(act_elems);
-        }
-        if sum_elems > MAX_LAYER_ELEMS {
-            bail!(
-                "model '{}' is too large for the service (operand slabs \
-                 of {sum_elems} total elements > {MAX_LAYER_ELEMS})",
-                spec.name
-            );
-        }
-        let key = proto::model_key(&spec, seed, self.engine_name());
-        let campaign = CampaignConfig { seed, ..self.campaign.clone() };
-        let layers = spec.layers.len();
-        let arch = spec.cfg.arch;
-        let (text, o) = self.models.get_or_compute(&key, move || {
-            let res = crate::model::run_model(&spec, &campaign)?;
-            Ok(res.report.to_figure_result().to_json().to_string())
-        })?;
-        let report = Json::parse(&text).context("re-parsing cached model JSON")?;
-        let result = obj(vec![
-            ("model", Json::Str(params.model.clone())),
-            ("layers", Json::Num(layers as f64)),
-            ("arch", Json::Str(arch.name().to_string())),
-            ("seed", Json::Num(seed as f64)),
-            ("report", report),
-        ]);
-        Ok((result, o.is_cached()))
-    }
-
-    /// The workload query: fit an empirical trace and run the full
-    /// `grcim workload` analysis ([`crate::workload::report`]), cached by
-    /// the trace's **content hash** — two uploads of the same tensor (even
-    /// under different names or paths) share one entry, and hits are
-    /// byte-identical to the cold compute (the cache stores the rendered
-    /// JSON text). Server-side trace paths are confined (see
-    /// [`confined_trace_path`]).
-    fn workload(
-        &self,
-        source: &TraceSource,
-        samples: usize,
-        seed: Option<u64>,
-    ) -> Result<(Json, bool)> {
-        if samples == 0 {
-            bail!("samples must be positive");
-        }
-        let seed = seed.unwrap_or(self.campaign.seed);
-        let trace = match source {
-            TraceSource::Path(p) => {
-                TensorTrace::read(&confined_trace_path(p)?)?
-            }
-            TraceSource::Inline { name, values } => TensorTrace::from_f64(
-                name.clone(),
-                vec![values.len()],
-                values.clone(),
-            )?,
-        };
-        let fit = Arc::new(EmpiricalDist::fit(&trace)?);
-        let key = proto::workload_key(
-            fit.content_hash(),
-            samples,
-            seed,
-            self.engine_name(),
-        );
-        let campaign = CampaignConfig { seed, ..self.campaign.clone() };
-        let fit_for_compute = Arc::clone(&fit);
-        let (text, o) = self.workloads.get_or_compute(&key, move || {
-            let fr = workload::report(&fit_for_compute, &campaign, samples)?;
-            Ok(fr.to_json().to_string())
-        })?;
-        let report =
-            Json::parse(&text).context("re-parsing cached workload JSON")?;
-        let result = obj(vec![
-            ("trace", Json::Str(trace.name().to_string())),
+    /// The `metrics` response: server telemetry (connections, admission,
+    /// queue gauges, per-kind latency percentiles) plus every cache's
+    /// counters. Answered inline by the event loop — never queued, never
+    /// cached.
+    fn metrics_snapshot(&self) -> Json {
+        obj(vec![
+            ("proto", Json::Num(proto::PROTO_VERSION as f64)),
+            ("server", self.metrics.to_json()),
             (
-                "content_hash",
-                Json::Str(format!("{:016x}", fit.content_hash())),
+                "caches",
+                obj(vec![
+                    ("aggregates", self.aggs.stats().to_json()),
+                    ("energies", self.energies.stats().to_json()),
+                    ("sweeps", self.sweeps.stats().to_json()),
+                    ("figures", self.figs.stats().to_json()),
+                    ("layers", self.layers.stats().to_json()),
+                    ("models", self.models.stats().to_json()),
+                    ("workloads", self.workloads.stats().to_json()),
+                ]),
             ),
-            ("samples_in_trace", Json::Num(trace.len() as f64)),
-            ("seed", Json::Num(seed as f64)),
-            ("workload", report),
-        ]);
-        Ok((result, o.is_cached()))
+        ])
     }
 }
 
-/// A running `grcim serve` instance: acceptor thread + per-connection
-/// handler threads, all joined on [`Server::shutdown`].
+/// A running `grcim serve` instance: the [`reactor`] event loop (bounded
+/// acceptor, connection-multiplexer threads, compute workers) around one
+/// shared [`CampaignService`].
 pub struct Server {
     addr: SocketAddr,
     service: Arc<CampaignService>,
-    shutdown: Arc<AtomicBool>,
-    accept: Option<JoinHandle<()>>,
-    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    reactor: Option<reactor::Reactor>,
 }
 
 impl Server {
     /// Bind and start serving in background threads; returns immediately.
     pub fn spawn(cfg: ServeConfig) -> Result<Server> {
-        let listener = TcpListener::bind(&cfg.addr)
-            .with_context(|| format!("binding {}", cfg.addr))?;
+        let listener =
+            TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
         let addr = listener.local_addr()?;
-        let service =
-            Arc::new(CampaignService::new(cfg.campaign, cfg.cache_entries));
-        let shutdown = Arc::new(AtomicBool::new(false));
-        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> =
-            Arc::new(Mutex::new(Vec::new()));
-
-        let accept = {
-            let service = Arc::clone(&service);
-            let shutdown = Arc::clone(&shutdown);
-            let conns = Arc::clone(&conns);
-            std::thread::Builder::new()
-                .name("grcim-accept".to_string())
-                .spawn(move || {
-                    for incoming in listener.incoming() {
-                        if shutdown.load(Ordering::SeqCst) {
-                            break;
-                        }
-                        let stream = match incoming {
-                            Ok(s) => s,
-                            Err(_) => {
-                                // e.g. EMFILE under fd exhaustion: back
-                                // off instead of busy-spinning on a
-                                // persistently failing accept
-                                std::thread::sleep(IDLE_TICK);
-                                continue;
-                            }
-                        };
-                        let service = Arc::clone(&service);
-                        let flag = Arc::clone(&shutdown);
-                        let handle = std::thread::Builder::new()
-                            .name("grcim-conn".to_string())
-                            .spawn(move || handle_conn(stream, service, flag));
-                        let mut guard = conns.lock().unwrap();
-                        // reap finished handlers so the handle list stays
-                        // bounded by the number of live connections
-                        let (done, live): (Vec<_>, Vec<_>) = guard
-                            .drain(..)
-                            .partition(|h: &JoinHandle<()>| h.is_finished());
-                        *guard = live;
-                        for h in done {
-                            let _ = h.join();
-                        }
-                        if let Ok(h) = handle {
-                            guard.push(h);
-                        }
-                    }
-                })
-                .context("spawning accept thread")?
-        };
-        Ok(Server { addr, service, shutdown, accept: Some(accept), conns })
+        let service = Arc::new(CampaignService::new(cfg.campaign.clone(), cfg.cache_entries));
+        let reactor = reactor::Reactor::spawn(
+            listener,
+            Arc::clone(&service),
+            Arc::clone(service.metrics()),
+            cfg.resolved_mux_threads(),
+            cfg.resolved_compute_threads(),
+            cfg.resolved_queue_cap(),
+        )?;
+        Ok(Server { addr, service, reactor: Some(reactor) })
     }
 
     /// The actually bound address (resolves port 0).
@@ -639,149 +327,29 @@ impl Server {
         &self.service
     }
 
-    fn shutdown_inner(&mut self) {
-        self.shutdown.store(true, Ordering::SeqCst);
-        // wake the blocking accept with a throwaway connection
-        let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.accept.take() {
-            let _ = h.join();
-        }
-        // idle handlers notice the flag within one IDLE_TICK; busy ones
-        // finish their current request first
-        let handles: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
-        for h in handles {
-            let _ = h.join();
-        }
-    }
-
-    /// Stop accepting, drain and join every thread. Clean by
-    /// construction: the acceptor and all connection handlers are joined
-    /// before this returns.
+    /// Stop accepting, finish every admitted request, flush and join
+    /// every thread (the one shared drain path). Errors if the acceptor
+    /// had stopped on a fatal `accept` failure.
     pub fn shutdown(mut self) -> Result<()> {
-        self.shutdown_inner();
-        Ok(())
+        self.reactor.take().expect("reactor runs until the server is consumed").drain()
     }
 
-    /// Block on the acceptor (until the process is killed or another
-    /// thread trips the shutdown flag). `grcim serve` runs this.
+    /// Block until the acceptor exits — an external shutdown or a fatal
+    /// `accept` error — then run the same drain path as
+    /// [`Server::shutdown`]. `grcim serve` runs this; a fatal accept
+    /// error surfaces here instead of leaving a silent half-dead server.
     pub fn join(mut self) -> Result<()> {
-        if let Some(h) = self.accept.take() {
-            h.join()
-                .map_err(|_| anyhow::anyhow!("accept thread panicked"))?;
-        }
-        let handles: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
-        for h in handles {
-            let _ = h.join();
-        }
-        Ok(())
+        let mut r = self.reactor.take().expect("reactor runs until the server is consumed");
+        let accepted = r.join_acceptor();
+        let drained = r.drain();
+        accepted.and(drained)
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        if self.accept.is_some() {
-            self.shutdown_inner();
-        }
-    }
-}
-
-fn handle_conn(
-    stream: TcpStream,
-    service: Arc<CampaignService>,
-    shutdown: Arc<AtomicBool>,
-) {
-    let _ = stream.set_nodelay(true);
-    if stream.set_read_timeout(Some(IDLE_TICK)).is_err() {
-        return;
-    }
-    let reader_half = match stream.try_clone() {
-        Ok(s) => s,
-        Err(_) => return,
-    };
-    let mut reader = BufReader::new(reader_half);
-    let mut writer = BufWriter::new(stream);
-    // Lines are accumulated as raw *bytes* and converted lossily at
-    // dispatch: `read_line`'s UTF-8 validation would disconnect a client
-    // whose multi-byte character straddles the byte cap, and std
-    // truncates a whole chunk when a read timeout splits a character —
-    // byte accumulation has neither failure mode (invalid UTF-8 simply
-    // parses as a malformed request and gets an error response).
-    let mut line: Vec<u8> = Vec::new();
-    // after an oversized request line is rejected, the reader *resyncs*:
-    // the rest of that line (up to its newline) is discarded, never
-    // parsed as a request, and the connection keeps serving — the next
-    // complete line is handled normally
-    let mut discarding = false;
-    loop {
-        // cap how much a newline-less client can make us buffer
-        if !discarding && line.len() >= MAX_LINE {
-            let msg = proto::err_line(&format!(
-                "request line exceeds {MAX_LINE} bytes"
-            ));
-            if writer.write_all(msg.as_bytes()).is_err()
-                || writer.write_all(b"\n").is_err()
-                || writer.flush().is_err()
-            {
-                break;
-            }
-            discarding = true;
-            line.clear();
-        }
-        let budget = if discarding {
-            MAX_LINE as u64
-        } else {
-            (MAX_LINE - line.len()) as u64
-        };
-        match std::io::Read::take(&mut reader, budget).read_until(b'\n', &mut line) {
-            Ok(0) => break, // EOF: client closed
-            Ok(_) => {
-                let complete = line.ends_with(b"\n");
-                if discarding {
-                    // chunks of the oversized line are dropped silently
-                    // (they are the middle of a rejected request, not a
-                    // request); its terminating newline ends the resync
-                    if complete {
-                        discarding = false;
-                    }
-                    line.clear();
-                    continue;
-                }
-                if !complete && line.len() >= MAX_LINE {
-                    // budget exhausted mid-line: the loop top rejects
-                    // the line and starts discarding
-                    continue;
-                }
-                // a complete line — or the connection's final,
-                // EOF-terminated request without a trailing newline
-                // (read_until without a newline below the cap means
-                // EOF), which is answered like any other
-                let text = String::from_utf8_lossy(&line);
-                let resp = respond_line(&service, text.trim());
-                drop(text);
-                line.clear();
-                if let Some(resp) = resp {
-                    if writer.write_all(resp.as_bytes()).is_err()
-                        || writer.write_all(b"\n").is_err()
-                        || writer.flush().is_err()
-                    {
-                        break;
-                    }
-                }
-            }
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock
-                        | std::io::ErrorKind::TimedOut
-                        | std::io::ErrorKind::Interrupted
-                ) =>
-            {
-                // idle tick; any partial input stays accumulated in `line`
-                if shutdown.load(Ordering::SeqCst) {
-                    break;
-                }
-            }
-            Err(_) => break,
+        if let Some(mut r) = self.reactor.take() {
+            let _ = r.drain();
         }
     }
 }
@@ -797,9 +365,7 @@ fn confined_trace_path(p: &str) -> Result<std::path::PathBuf> {
     use std::path::Component;
     let path = std::path::Path::new(p);
     let confined = !path.is_absolute()
-        && path
-            .components()
-            .all(|c| matches!(c, Component::Normal(_) | Component::CurDir));
+        && path.components().all(|c| matches!(c, Component::Normal(_) | Component::CurDir));
     if !confined {
         bail!(
             "trace path '{p}' is not allowed over the wire: server-side \
@@ -810,9 +376,7 @@ fn confined_trace_path(p: &str) -> Result<std::path::PathBuf> {
     let cwd = std::env::current_dir()
         .and_then(|d| d.canonicalize())
         .context("resolving the serve working directory")?;
-    let real = path
-        .canonicalize()
-        .with_context(|| format!("resolving trace path '{p}'"))?;
+    let real = path.canonicalize().with_context(|| format!("resolving trace path '{p}'"))?;
     if !real.starts_with(&cwd) {
         bail!(
             "trace path '{p}' is not allowed over the wire: it resolves to \
@@ -823,21 +387,11 @@ fn confined_trace_path(p: &str) -> Result<std::path::PathBuf> {
     Ok(real)
 }
 
-fn respond_line(service: &CampaignService, line: &str) -> Option<String> {
-    if line.is_empty() {
-        return None; // blank keep-alive lines are ignored
-    }
-    Some(match proto::parse_request(line) {
-        Ok(req) => service.respond(&req),
-        Err(e) => proto::err_line(&format!("{e:#}")),
-    })
-}
-
 /// One-shot client: send a single request line, read a single response
 /// line. Backs `grcim query` and the integration tests.
 pub fn query_once(addr: &str, request_line: &str) -> Result<String> {
-    let mut stream = TcpStream::connect(addr)
-        .with_context(|| format!("connecting to {addr}"))?;
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
     stream.write_all(request_line.as_bytes())?;
     stream.write_all(b"\n")?;
     let mut reader = BufReader::new(stream);
@@ -852,6 +406,7 @@ pub fn query_once(addr: &str, request_line: &str) -> Result<String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::distributions::Distribution;
 
     fn test_service() -> CampaignService {
         CampaignService::new(
@@ -900,6 +455,10 @@ mod tests {
         assert_eq!(jw.get("cached"), Some(&Json::Bool(true)));
         assert_eq!(result_str(&cold), result_str(&warm), "hit must be bit-identical");
         assert_eq!(svc.aggregate_stats().computes, 2); // int + fp aggregates
+        // the rendered response is itself cached: the warm call was a
+        // response-level hit, not a re-render over aggregate hits
+        assert_eq!(svc.energies.stats().computes, 1);
+        assert_eq!(svc.energies.stats().hits, 1);
     }
 
     #[test]
@@ -942,6 +501,9 @@ mod tests {
         let warm = svc.respond(&req);
         assert_eq!(result_str(&cold), result_str(&warm));
         assert_eq!(svc.aggregate_stats().computes, 2);
+        // the rendered sweep table is cached whole
+        assert_eq!(svc.sweeps.stats().computes, 1);
+        assert_eq!(svc.sweeps.stats().hits, 1);
     }
 
     #[test]
@@ -1259,6 +821,48 @@ mod tests {
         assert_eq!(r.get("proto").unwrap().as_usize(), Some(1));
         let aggs = r.get("aggregates").unwrap();
         assert_eq!(aggs.get("computes").unwrap().as_usize(), Some(0));
+        // the response-level caches report alongside
+        assert!(r.get("energies").is_some());
+        assert!(r.get("sweeps").is_some());
+    }
+
+    #[test]
+    fn metrics_response_has_full_schema_even_when_idle() {
+        let svc = test_service();
+        let j = Json::parse(&svc.respond(&Request::Metrics)).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("cached"), Some(&Json::Bool(false)));
+        let r = j.get("result").unwrap();
+        let server = r.get("server").unwrap();
+        assert_eq!(server.get("accepted").unwrap().as_usize(), Some(0));
+        assert!(server.get("queue").unwrap().get("depth").is_some());
+        let kinds = server.get("kinds").unwrap();
+        for k in proto::RequestKind::ALL {
+            let kj = kinds.get(k.name()).unwrap();
+            // idle kinds report Null percentiles, never garbage
+            assert_eq!(kj.get("p50_us"), Some(&Json::Null), "{}", k.name());
+        }
+        let caches = r.get("caches").unwrap();
+        for c in ["aggregates", "energies", "sweeps", "figures", "layers", "models", "workloads"] {
+            assert_eq!(caches.get(c).unwrap().get("computes").unwrap().as_usize(), Some(0), "{c}");
+        }
+    }
+
+    #[test]
+    fn serve_config_resolves_auto_thread_counts() {
+        let auto = ServeConfig::default();
+        assert!(auto.resolved_mux_threads() >= 1);
+        assert!(auto.resolved_compute_threads() >= 1);
+        assert!(auto.resolved_queue_cap() >= 16);
+        let fixed = ServeConfig {
+            mux_threads: 3,
+            compute_threads: 2,
+            queue_cap: 7,
+            ..Default::default()
+        };
+        assert_eq!(fixed.resolved_mux_threads(), 3);
+        assert_eq!(fixed.resolved_compute_threads(), 2);
+        assert_eq!(fixed.resolved_queue_cap(), 7);
     }
 
     #[test]
@@ -1272,19 +876,94 @@ mod tests {
                 ..Default::default()
             },
             cache_entries: 64,
+            ..Default::default()
         })
         .unwrap();
         let addr = server.local_addr().to_string();
         let resp = query_once(&addr, r#"{"cmd":"info"}"#).unwrap();
         assert!(Json::parse(&resp).unwrap().get("ok") == Some(&Json::Bool(true)));
-        // malformed input gets an error line, connection stays usable
+        // malformed input gets a typed error line, connection stays usable
         let resp = query_once(&addr, "definitely not json").unwrap();
         let j = Json::parse(&resp).unwrap();
         assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("bad_request"));
         server.shutdown().unwrap();
         assert!(
             TcpStream::connect(&addr).is_err(),
             "listener must be closed after shutdown"
         );
+    }
+
+    #[test]
+    fn event_loop_pipelines_requests_in_order_on_one_connection() {
+        let server = Server::spawn(ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            campaign: CampaignConfig {
+                engine: EngineKind::Rust,
+                workers: 2,
+                seed: 3,
+                ..Default::default()
+            },
+            cache_entries: 64,
+            ..Default::default()
+        })
+        .unwrap();
+        let addr = server.local_addr();
+        let mut stream = TcpStream::connect(addr).unwrap();
+        // several requests written up front; responses must come back in
+        // order (one in flight at a time per connection), including a
+        // parse error in the middle without desync
+        stream
+            .write_all(b"{\"cmd\":\"info\"}\nnot json\n{\"cmd\":\"metrics\"}\n")
+            .unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut lines = Vec::new();
+        for _ in 0..3 {
+            let mut line = String::new();
+            assert!(reader.read_line(&mut line).unwrap() > 0);
+            lines.push(Json::parse(line.trim_end()).unwrap());
+        }
+        assert_eq!(lines[0].get("ok"), Some(&Json::Bool(true)));
+        assert!(lines[0].get("result").unwrap().get("version").is_some());
+        assert_eq!(lines[1].get("kind").and_then(Json::as_str), Some("bad_request"));
+        assert_eq!(lines[2].get("ok"), Some(&Json::Bool(true)));
+        let server_block = lines[2].get("result").unwrap().get("server").unwrap();
+        // both inline requests already answered on this connection
+        let info_ok = server_block.get("kinds").unwrap().get("info").unwrap();
+        assert_eq!(info_ok.get("ok").unwrap().as_usize(), Some(1));
+        assert_eq!(server_block.get("bad_requests").unwrap().as_usize(), Some(1));
+        drop(reader);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn expired_deadline_is_a_typed_error() {
+        let server = Server::spawn(ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            campaign: CampaignConfig {
+                engine: EngineKind::Rust,
+                workers: 2,
+                seed: 3,
+                ..Default::default()
+            },
+            cache_entries: 64,
+            ..Default::default()
+        })
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        // deadline_ms:0 expires before any worker can dequeue it —
+        // deterministically a `deadline` error, and cheap (no compute)
+        let resp = query_once(
+            &addr,
+            r#"{"cmd":"figure","id":"table1","samples":256,"deadline_ms":0}"#,
+        )
+        .unwrap();
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)), "{resp}");
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("deadline"));
+        let m = Json::parse(&query_once(&addr, r#"{"cmd":"metrics"}"#).unwrap()).unwrap();
+        let server_block = m.get("result").unwrap().get("server").unwrap();
+        assert_eq!(server_block.get("rejected_deadline").unwrap().as_usize(), Some(1));
+        server.shutdown().unwrap();
     }
 }

@@ -8,8 +8,19 @@
 //! -> {"cmd":"energy","dr":30.1,"sqnr":22.83,"samples":4096}
 //! <- {"ok":true,"cached":false,"result":{...}}
 //! -> {"cmd":"nonsense"}
-//! <- {"ok":false,"error":"unknown cmd 'nonsense' (energy|sweep|figure|workload|layer|model|info)"}
+//! <- {"ok":false,"kind":"bad_request","error":"unknown cmd 'nonsense' (energy|sweep|figure|workload|layer|model|metrics|info)"}
 //! ```
+//!
+//! Error responses carry a `"kind"` tag so clients can react without
+//! string-matching the message: `bad_request` (the line could not be
+//! parsed as a request), `busy` (admission control rejected the
+//! request — retry later), `deadline` (the request's `deadline_ms`
+//! expired before a response was ready), and `error` (validation or
+//! the computation itself failed).
+//!
+//! Any request may carry `"deadline_ms"`: a positive number of
+//! milliseconds after which the server abandons the request and
+//! answers with a `deadline` error instead (see `docs/CLI.md`).
 //!
 //! The `"cached"` flag sits **outside** `"result"` so clients (and the
 //! integration test) can compare the result payload of a cache hit
@@ -41,6 +52,7 @@ use crate::model::ModelSpec;
 use crate::tile::LayerSpec;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
+use std::time::Duration;
 
 /// Protocol revision; bumped on any incompatible wire or key change.
 pub const PROTO_VERSION: u64 = 1;
@@ -72,11 +84,78 @@ pub struct SweepExperiment {
     pub distribution: String,
 }
 
+/// The kind of a request — the unit the server dispatches, caches, and
+/// meters by. `Metrics` and `Info` are *inline* kinds (answered on the
+/// connection multiplexer without touching the compute pool); everything
+/// else goes through admission control and a compute worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RequestKind {
+    /// Server, engine, and cache status.
+    Info,
+    /// Server metrics snapshot (counters, queue depth, latency).
+    Metrics,
+    /// One (DR, SQNR) energy spec point.
+    Energy,
+    /// A campaign over explicit experiments.
+    Sweep,
+    /// One rendered paper figure/table.
+    Figure,
+    /// One empirical-trace workload report.
+    Workload,
+    /// One tiled-layer report.
+    Layer,
+    /// One chained-model report.
+    Model,
+}
+
+impl RequestKind {
+    /// Every kind, in wire-protocol order (indexes the per-kind metrics).
+    pub const ALL: [RequestKind; 8] = [
+        RequestKind::Info,
+        RequestKind::Metrics,
+        RequestKind::Energy,
+        RequestKind::Sweep,
+        RequestKind::Figure,
+        RequestKind::Workload,
+        RequestKind::Layer,
+        RequestKind::Model,
+    ];
+
+    /// The wire name (`"cmd"` value) of this kind.
+    pub fn name(self) -> &'static str {
+        match self {
+            RequestKind::Info => "info",
+            RequestKind::Metrics => "metrics",
+            RequestKind::Energy => "energy",
+            RequestKind::Sweep => "sweep",
+            RequestKind::Figure => "figure",
+            RequestKind::Workload => "workload",
+            RequestKind::Layer => "layer",
+            RequestKind::Model => "model",
+        }
+    }
+
+    /// Index of this kind in [`RequestKind::ALL`].
+    pub fn index(self) -> usize {
+        RequestKind::ALL.iter().position(|k| *k == self).expect("kind in ALL")
+    }
+
+    /// Inline kinds are answered directly by the connection multiplexer —
+    /// they read shared counters and never run a campaign, so routing
+    /// them through the bounded compute queue would only add latency.
+    pub fn is_inline(self) -> bool {
+        matches!(self, RequestKind::Info | RequestKind::Metrics)
+    }
+}
+
 /// A parsed request line.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     /// Server, engine, and cache status.
     Info,
+    /// Server metrics snapshot: request/error counters, cache stats,
+    /// queue depth, and per-kind latency percentiles.
+    Metrics,
     /// Energy model at one (DR, SQNR) spec point — the Fig. 12 query unit.
     Energy {
         /// Dynamic range, dB.
@@ -141,6 +220,22 @@ pub enum Request {
     },
 }
 
+impl Request {
+    /// The kind of this request.
+    pub fn kind(&self) -> RequestKind {
+        match self {
+            Request::Info => RequestKind::Info,
+            Request::Metrics => RequestKind::Metrics,
+            Request::Energy { .. } => RequestKind::Energy,
+            Request::Sweep { .. } => RequestKind::Sweep,
+            Request::Figure { .. } => RequestKind::Figure,
+            Request::Workload { .. } => RequestKind::Workload,
+            Request::Layer { .. } => RequestKind::Layer,
+            Request::Model { .. } => RequestKind::Model,
+        }
+    }
+}
+
 /// How a `workload` request supplies its trace.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TraceSource {
@@ -156,13 +251,30 @@ pub enum TraceSource {
     },
 }
 
-/// Parse one request line.
+/// Parse one request line, ignoring transport metadata (`deadline_ms`).
+///
+/// Equality-friendly entry point for tests and simple clients; the
+/// server itself uses [`parse_request_meta`] so deadlines survive.
 pub fn parse_request(line: &str) -> Result<Request> {
+    parse_request_meta(line).map(|(req, _)| req)
+}
+
+/// Parse one request line plus its transport metadata: the optional
+/// `deadline_ms` budget (how long the client is willing to wait before
+/// the server should answer with a `deadline` error instead).
+pub fn parse_request_meta(line: &str) -> Result<(Request, Option<Duration>)> {
     let j = Json::parse(line.trim()).context("request is not valid JSON")?;
     let cmd = j
         .get("cmd")
         .and_then(Json::as_str)
         .context("request needs a string 'cmd' field")?;
+    let deadline = match j.get("deadline_ms").map(Json::as_f64) {
+        None => None,
+        Some(Some(ms)) if ms.is_finite() && ms >= 0.0 => {
+            Some(Duration::from_micros((ms * 1000.0) as u64))
+        }
+        Some(_) => bail!("deadline_ms must be a non-negative number of milliseconds"),
+    };
     let seed = match j.get("seed").and_then(Json::as_f64) {
         None => None,
         Some(s) => {
@@ -175,8 +287,9 @@ pub fn parse_request(line: &str) -> Result<Request> {
             Some(s as u64)
         }
     };
-    match cmd {
+    let req = match cmd {
         "info" => Ok(Request::Info),
+        "metrics" => Ok(Request::Metrics),
         "energy" => Ok(Request::Energy {
             dr_db: j.get("dr").and_then(Json::as_f64).unwrap_or(30.1),
             sqnr_db: j.get("sqnr").and_then(Json::as_f64).unwrap_or(22.83),
@@ -331,9 +444,13 @@ pub fn parse_request(line: &str) -> Result<Request> {
             })
         }
         other => {
-            bail!("unknown cmd '{other}' (energy|sweep|figure|workload|layer|model|info)")
+            bail!(
+                "unknown cmd '{other}' \
+                 (energy|sweep|figure|workload|layer|model|metrics|info)"
+            )
         }
-    }
+    }?;
+    Ok((req, deadline))
 }
 
 /// Build a JSON object from key/value pairs (stable key order courtesy of
@@ -356,10 +473,19 @@ pub fn ok_line(result: Json, cached: bool) -> String {
     .to_string()
 }
 
-/// Render an error response line (no trailing newline).
+/// Render an error response line (no trailing newline). Equivalent to
+/// [`err_kind_line`] with kind `"error"` — validation or compute failure.
 pub fn err_line(message: &str) -> String {
+    err_kind_line("error", message)
+}
+
+/// Render a typed error response line (no trailing newline). `kind` is
+/// one of `"bad_request"`, `"busy"`, `"deadline"`, or `"error"` — see
+/// the module docs for when each applies.
+pub fn err_kind_line(kind: &str, message: &str) -> String {
     obj(vec![
         ("ok", Json::Bool(false)),
+        ("kind", Json::Str(kind.to_string())),
         ("error", Json::Str(message.to_string())),
     ])
     .to_string()
@@ -416,6 +542,31 @@ pub fn spec_key(spec: &ExperimentSpec, seed: u64, engine: &str) -> String {
         canonical_dist(&spec.dist_x),
         canonical_dist(&spec.dist_w),
     )
+}
+
+/// Canonical cache key of one rendered `energy` response — the
+/// response-level cache over [`spec_key`]'s aggregate cache, so repeat
+/// spec-point queries skip even the solve/render step. Keyed by the
+/// exact (DR, SQNR) bits, samples, seed, and engine.
+pub fn energy_key(dr_db: f64, sqnr_db: f64, samples: usize, seed: u64, engine: &str) -> String {
+    format!(
+        "v{PROTO_VERSION}|energy|eng={engine}|seed={seed}|n={samples}|dr={}|sqnr={}",
+        bits(dr_db),
+        bits(sqnr_db),
+    )
+}
+
+/// Canonical cache key of one rendered `sweep` response. Covers each
+/// experiment's aggregate identity ([`spec_key`]) *and* its id — the
+/// response echoes experiment names, so two sweeps that differ only in
+/// labels must not share a rendered entry (their aggregates still share
+/// the inner cache, where ids deliberately do not participate).
+pub fn sweep_key(specs: &[ExperimentSpec], seed: u64, engine: &str) -> String {
+    let frags: Vec<String> = specs
+        .iter()
+        .map(|spec| format!("{}={}", spec.id, spec_key(spec, seed, engine)))
+        .collect();
+    format!("v{PROTO_VERSION}|sweep|{}", frags.join(";"))
 }
 
 /// Canonical cache key of one rendered figure.
@@ -580,6 +731,77 @@ mod tests {
                 seed: None
             }
         );
+    }
+
+    #[test]
+    fn parses_metrics_and_deadlines() {
+        assert_eq!(parse_request(r#"{"cmd":"metrics"}"#).unwrap(), Request::Metrics);
+        let (req, dl) = parse_request_meta(r#"{"cmd":"info","deadline_ms":250}"#).unwrap();
+        assert_eq!(req, Request::Info);
+        assert_eq!(dl, Some(Duration::from_millis(250)));
+        let (_, dl) = parse_request_meta(r#"{"cmd":"info","deadline_ms":0.5}"#).unwrap();
+        assert_eq!(dl, Some(Duration::from_micros(500)));
+        let (_, dl) = parse_request_meta(r#"{"cmd":"info"}"#).unwrap();
+        assert_eq!(dl, None);
+        // a zero deadline is legal (and expires immediately — tests use it)
+        let (_, dl) = parse_request_meta(r#"{"cmd":"info","deadline_ms":0}"#).unwrap();
+        assert_eq!(dl, Some(Duration::ZERO));
+        assert!(parse_request_meta(r#"{"cmd":"info","deadline_ms":-1}"#).is_err());
+        assert!(parse_request_meta(r#"{"cmd":"info","deadline_ms":"soon"}"#).is_err());
+    }
+
+    #[test]
+    fn request_kinds_round_trip() {
+        for (i, kind) in RequestKind::ALL.iter().enumerate() {
+            assert_eq!(kind.index(), i);
+        }
+        assert!(RequestKind::Info.is_inline());
+        assert!(RequestKind::Metrics.is_inline());
+        assert!(!RequestKind::Energy.is_inline());
+        assert_eq!(parse_request(r#"{"cmd":"metrics"}"#).unwrap().kind(), RequestKind::Metrics);
+        assert_eq!(
+            parse_request(r#"{"cmd":"energy"}"#).unwrap().kind().name(),
+            "energy"
+        );
+    }
+
+    #[test]
+    fn typed_error_lines_carry_their_kind() {
+        let j = Json::parse(&err_kind_line("busy", "queue full")).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("busy"));
+        assert_eq!(j.get("error").and_then(Json::as_str), Some("queue full"));
+        let j = Json::parse(&err_line("boom")).unwrap();
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("error"));
+    }
+
+    #[test]
+    fn energy_and_sweep_keys_cover_their_inputs() {
+        let k0 = energy_key(30.1, 22.83, 4096, 7, "rust");
+        assert_ne!(k0, energy_key(30.2, 22.83, 4096, 7, "rust"));
+        assert_ne!(k0, energy_key(30.1, 22.84, 4096, 7, "rust"));
+        assert_ne!(k0, energy_key(30.1, 22.83, 8192, 7, "rust"));
+        assert_ne!(k0, energy_key(30.1, 22.83, 4096, 8, "rust"));
+        assert_ne!(k0, energy_key(30.1, 22.83, 4096, 7, "pjrt"));
+        assert_eq!(k0, energy_key(30.1, 22.83, 4096, 7, "rust"));
+
+        let a = spec();
+        let mut b = spec();
+        b.nr = 64;
+        let k = sweep_key(&[a.clone(), b.clone()], 7, "rust");
+        // order and membership matter
+        assert_ne!(k, sweep_key(&[b.clone(), a.clone()], 7, "rust"));
+        assert_ne!(k, sweep_key(&[a.clone()], 7, "rust"));
+        // experiment ids participate (the response echoes them)...
+        let mut renamed = a.clone();
+        renamed.id = "other".into();
+        assert_ne!(
+            sweep_key(&[a.clone()], 7, "rust"),
+            sweep_key(&[renamed], 7, "rust")
+        );
+        // ...and so do seed and engine
+        assert_ne!(k, sweep_key(&[a.clone(), b.clone()], 8, "rust"));
+        assert_ne!(k, sweep_key(&[a, b], 7, "pjrt"));
     }
 
     #[test]

@@ -1,0 +1,777 @@
+//! The serve core's event loop: a bounded acceptor feeding a fixed pool
+//! of connection-multiplexer threads, plus a fixed compute-worker pool
+//! behind a bounded admission queue.
+//!
+//! ```text
+//!             ┌──────────┐   round-robin    ┌──────────────┐
+//!  clients ──▶│ acceptor │─────────────────▶│ mux 0..M     │  M nonblocking
+//!             └──────────┘  (set_nonblocking)│  (conns)    │  multiplexers
+//!                                            └──────┬──────┘
+//!                        parse / inline info+metrics│ try_push
+//!                                                   ▼
+//!                                          ┌────────────────┐
+//!                busy when full ◀──────────│ ComputeQueue   │ bounded
+//!                                          └──────┬─────────┘
+//!                                                 ▼ pop
+//!                                          ┌────────────────┐
+//!                                          │ worker 0..W    │ respond()
+//!                                          └──────┬─────────┘
+//!                                                 │ deliver(conn, line)
+//!                                                 ▼
+//!                                          mux inbox ──▶ client socket
+//! ```
+//!
+//! Thread cost is **O(M + W + 1)** regardless of connection count:
+//! thousands of idle connections are just entries in a mux's `Vec`.
+//! Muxes with zero connections park indefinitely on their inbox condvar
+//! (no idle wakeups at all); muxes holding idle connections poll them
+//! under an adaptive backoff (1 ms doubling to 16 ms) because std
+//! offers no portable readiness API — so idle wakeup cost is O(muxes),
+//! not O(connections), and new work posted to an inbox (a fresh
+//! connection, a finished compute) wakes its mux immediately.
+//!
+//! Per-connection ordering: at most one compute request per connection
+//! is in flight at a time, and the mux stops reading a connection's
+//! socket while one is (TCP backpressure does the rest). Responses
+//! therefore come back in request order, which `grcim loadgen` and the
+//! integration tests rely on.
+
+use super::metrics::ServerMetrics;
+use super::{proto, CampaignService, MAX_LINE};
+use crate::server::proto::{Request, RequestKind};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Shortest mux poll-backoff step (after any progress).
+const POLL_MIN: Duration = Duration::from_millis(1);
+/// Longest mux poll-backoff step (fully idle connections).
+const POLL_MAX: Duration = Duration::from_millis(16);
+/// Backoff before retrying `accept` after fd/buffer exhaustion.
+const ACCEPT_BACKOFF: Duration = Duration::from_millis(200);
+/// Outbuf high-water mark: stop reading new requests from a connection
+/// whose client lets more than this many response bytes pile up.
+const OUT_HIGH_WATER: usize = 2 * MAX_LINE;
+/// Grace given to final response flushes at shutdown.
+const FLUSH_GRACE: Duration = Duration::from_secs(2);
+
+/// One admitted compute request, queued for a worker.
+pub(super) struct ComputeJob {
+    /// Index of the mux that owns the connection (response routing).
+    mux: usize,
+    /// Connection id within that mux.
+    conn: u64,
+    req: Request,
+    kind: RequestKind,
+    /// Absolute expiry; a worker dequeueing past it answers `deadline`.
+    deadline: Option<Instant>,
+    /// Admission time (latency metrics measure queue wait + compute).
+    enqueued: Instant,
+}
+
+struct QueueInner {
+    jobs: VecDeque<ComputeJob>,
+    closed: bool,
+}
+
+/// The bounded admission queue between muxes and compute workers.
+/// `try_push` never blocks — a full queue is the `busy` signal.
+pub(super) struct ComputeQueue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+    cap: usize,
+}
+
+impl ComputeQueue {
+    pub(super) fn new(cap: usize) -> Self {
+        ComputeQueue {
+            inner: Mutex::new(QueueInner { jobs: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Admit one job; false when the queue is full (or closed) — the
+    /// caller answers `busy` instead of queueing unboundedly.
+    pub(super) fn try_push(&self, job: ComputeJob) -> bool {
+        let mut q = self.inner.lock().unwrap();
+        if q.closed || q.jobs.len() >= self.cap {
+            return false;
+        }
+        q.jobs.push_back(job);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Next job, blocking while the queue is open and empty. `None`
+    /// once the queue is closed **and** drained — graceful shutdown
+    /// finishes every admitted job before workers exit.
+    pub(super) fn pop(&self) -> Option<ComputeJob> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if let Some(job) = q.jobs.pop_front() {
+                return Some(job);
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+
+    pub(super) fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[derive(Default)]
+struct Inbox {
+    conns: Vec<TcpStream>,
+    responses: Vec<(u64, String)>,
+    shutdown: bool,
+}
+
+/// One mux thread's mailbox: the acceptor posts fresh connections,
+/// workers post finished responses, the reactor posts shutdown; each
+/// post wakes the mux immediately.
+pub(super) struct MuxShared {
+    inbox: Mutex<Inbox>,
+    cv: Condvar,
+}
+
+impl MuxShared {
+    fn new() -> Self {
+        MuxShared { inbox: Mutex::new(Inbox::default()), cv: Condvar::new() }
+    }
+
+    fn add_conn(&self, stream: TcpStream) {
+        self.inbox.lock().unwrap().conns.push(stream);
+        self.cv.notify_one();
+    }
+
+    fn deliver(&self, conn: u64, response: String) {
+        self.inbox.lock().unwrap().responses.push((conn, response));
+        self.cv.notify_one();
+    }
+
+    fn request_shutdown(&self) {
+        self.inbox.lock().unwrap().shutdown = true;
+        self.cv.notify_all();
+    }
+}
+
+/// What a mux needs to serve its connections.
+struct MuxCtx {
+    mux_idx: usize,
+    service: Arc<CampaignService>,
+    metrics: Arc<ServerMetrics>,
+    queue: Arc<ComputeQueue>,
+}
+
+/// One nonblocking connection's state machine.
+struct Conn {
+    id: u64,
+    stream: TcpStream,
+    /// Raw accumulated request bytes (converted lossily at dispatch —
+    /// see the read-path comment in `read_some`).
+    acc: Vec<u8>,
+    /// Resyncing after an oversized line: bytes are dropped up to the
+    /// line's terminating newline, never parsed as a request.
+    discarding: bool,
+    /// A compute job for this connection is queued or running; the mux
+    /// neither reads the socket nor dispatches buffered lines until the
+    /// response comes back (per-connection ordering).
+    in_flight: bool,
+    read_closed: bool,
+    dead: bool,
+    /// Pending response bytes not yet accepted by the socket.
+    out: Vec<u8>,
+}
+
+impl Conn {
+    fn new(id: u64, stream: TcpStream) -> Self {
+        Conn {
+            id,
+            stream,
+            acc: Vec::new(),
+            discarding: false,
+            in_flight: false,
+            read_closed: false,
+            dead: false,
+            out: Vec::new(),
+        }
+    }
+
+    /// Everything sent and received; the mux drops the connection.
+    fn finished(&self) -> bool {
+        self.dead
+            || (self.read_closed && self.acc.is_empty() && !self.in_flight && self.out.is_empty())
+    }
+
+    fn queue_line(&mut self, line: &str) {
+        self.out.extend_from_slice(line.as_bytes());
+        self.out.push(b'\n');
+    }
+
+    /// Flush as much buffered output as the socket accepts right now.
+    fn pump_write(&mut self) -> bool {
+        let mut written = 0usize;
+        while written < self.out.len() {
+            match self.stream.write(&self.out[written..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => written += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if written > 0 {
+            self.out.drain(..written);
+        }
+        written > 0
+    }
+
+    /// Read whatever the socket has ready. Lines are accumulated as raw
+    /// *bytes* and converted lossily at dispatch: UTF-8 validation at
+    /// read time would disconnect a client whose multi-byte character
+    /// straddles a read boundary — byte accumulation has no such
+    /// failure mode (invalid UTF-8 simply parses as a malformed request
+    /// and gets an error response).
+    fn read_some(&mut self) -> bool {
+        let mut buf = [0u8; 4096];
+        let mut progress = false;
+        loop {
+            // cap how much a newline-less client can make us buffer;
+            // process_lines turns an over-cap accumulation into an
+            // error + resync before reading continues
+            if !self.discarding && self.acc.len() > MAX_LINE {
+                break;
+            }
+            match self.stream.read(&mut buf) {
+                Ok(0) => {
+                    self.read_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    if self.discarding {
+                        // chunks of an oversized line are dropped
+                        // without buffering; its newline ends the resync
+                        if let Some(i) = buf[..n].iter().position(|&b| b == b'\n') {
+                            self.discarding = false;
+                            self.acc.extend_from_slice(&buf[i + 1..n]);
+                        }
+                    } else {
+                        self.acc.extend_from_slice(&buf[..n]);
+                    }
+                    progress = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        progress
+    }
+
+    /// Dispatch complete lines from the accumulator (stopping while a
+    /// compute response is in flight, to preserve ordering).
+    fn process_lines(&mut self, ctx: &MuxCtx) -> bool {
+        let mut progress = false;
+        while !self.in_flight && !self.dead {
+            if self.discarding {
+                // the resync newline hasn't arrived; nothing buffers
+                break;
+            }
+            match self.acc.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    let line: Vec<u8> = self.acc.drain(..=i).collect();
+                    let text = String::from_utf8_lossy(&line);
+                    self.handle_line(&text.trim().to_string(), ctx);
+                    progress = true;
+                }
+                None => {
+                    if self.acc.len() > MAX_LINE {
+                        self.queue_line(&proto::err_line(&format!(
+                            "request line exceeds {MAX_LINE} bytes"
+                        )));
+                        self.acc.clear();
+                        self.discarding = true;
+                        progress = true;
+                        continue;
+                    }
+                    break;
+                }
+            }
+        }
+        // the connection's final, EOF-terminated request without a
+        // trailing newline is answered like any other
+        if self.read_closed
+            && !self.in_flight
+            && !self.dead
+            && !self.discarding
+            && !self.acc.is_empty()
+            && !self.acc.contains(&b'\n')
+            && self.acc.len() <= MAX_LINE
+        {
+            let line: Vec<u8> = std::mem::take(&mut self.acc);
+            let text = String::from_utf8_lossy(&line);
+            self.handle_line(&text.trim().to_string(), ctx);
+            progress = true;
+        }
+        progress
+    }
+
+    /// Parse and route one request line: parse errors and inline kinds
+    /// are answered on the mux; compute kinds go through admission.
+    fn handle_line(&mut self, line: &str, ctx: &MuxCtx) {
+        if line.is_empty() {
+            return; // blank keep-alive lines are ignored
+        }
+        let start = Instant::now();
+        match proto::parse_request_meta(line) {
+            Err(e) => {
+                ctx.metrics.bad_requests.fetch_add(1, Ordering::Relaxed);
+                self.queue_line(&proto::err_kind_line("bad_request", &format!("{e:#}")));
+            }
+            Ok((req, deadline)) => {
+                let kind = req.kind();
+                if kind.is_inline() {
+                    let (resp, ok) = ctx.service.respond_with_status(&req);
+                    ctx.metrics.record(kind, ok, start.elapsed());
+                    self.queue_line(&resp);
+                } else {
+                    let job = ComputeJob {
+                        mux: ctx.mux_idx,
+                        conn: self.id,
+                        req,
+                        kind,
+                        deadline: deadline.map(|d| start + d),
+                        enqueued: start,
+                    };
+                    if ctx.queue.try_push(job) {
+                        ctx.metrics.admitted.fetch_add(1, Ordering::Relaxed);
+                        ctx.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+                        self.in_flight = true;
+                    } else {
+                        ctx.metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                        self.queue_line(&proto::err_kind_line(
+                            "busy",
+                            "compute queue is full; retry later",
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    /// One full service round: flush output, ingest input, dispatch
+    /// lines, repeat until nothing moves. Returns whether anything did.
+    fn pump(&mut self, ctx: &MuxCtx) -> bool {
+        let mut progress = false;
+        loop {
+            let mut round = self.pump_write();
+            round |= self.process_lines(ctx);
+            round |= self.pump_write();
+            // backpressure: don't ingest while a compute response is
+            // pending or the client isn't draining its responses
+            if !self.in_flight && !self.read_closed && !self.dead && self.out.len() <= OUT_HIGH_WATER
+            {
+                round |= self.read_some();
+            }
+            if !round {
+                return progress;
+            }
+            progress = true;
+        }
+    }
+}
+
+/// Best-effort blocking flush of every connection's pending output at
+/// shutdown, bounded by [`FLUSH_GRACE`] per socket.
+fn flush_and_close(conns: &mut [Conn], metrics: &ServerMetrics) {
+    for c in conns.iter_mut() {
+        if c.dead || c.out.is_empty() {
+            continue;
+        }
+        let _ = c.stream.set_nonblocking(false);
+        let _ = c.stream.set_write_timeout(Some(FLUSH_GRACE));
+        let _ = c.stream.write_all(&c.out);
+    }
+    metrics.open_conns.fetch_sub(conns.len() as u64, Ordering::Relaxed);
+}
+
+fn mux_loop(shared: Arc<MuxShared>, ctx: MuxCtx) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut next_id = 0u64;
+    let mut backoff = POLL_MIN;
+    loop {
+        let (new_conns, responses, shutdown) = {
+            let mut inbox = shared.inbox.lock().unwrap();
+            (
+                std::mem::take(&mut inbox.conns),
+                std::mem::take(&mut inbox.responses),
+                inbox.shutdown,
+            )
+        };
+        let mut progress = !new_conns.is_empty() || !responses.is_empty();
+        for stream in new_conns {
+            conns.push(Conn::new(next_id, stream));
+            next_id += 1;
+        }
+        for (id, resp) in responses {
+            // a worker finished this connection's in-flight request;
+            // queue the response and resume reading the socket
+            if let Some(c) = conns.iter_mut().find(|c| c.id == id) {
+                c.in_flight = false;
+                c.queue_line(&resp);
+            }
+        }
+        if shutdown {
+            flush_and_close(&mut conns, &ctx.metrics);
+            return;
+        }
+        for c in conns.iter_mut() {
+            progress |= c.pump(&ctx);
+        }
+        let before = conns.len();
+        conns.retain(|c| !c.finished());
+        if conns.len() != before {
+            ctx.metrics.open_conns.fetch_sub((before - conns.len()) as u64, Ordering::Relaxed);
+            progress = true;
+        }
+        if progress {
+            backoff = POLL_MIN;
+            continue;
+        }
+        let inbox = shared.inbox.lock().unwrap();
+        if !inbox.conns.is_empty() || !inbox.responses.is_empty() || inbox.shutdown {
+            continue;
+        }
+        if conns.is_empty() {
+            // zero connections: park until the acceptor or a worker knocks
+            drop(shared.cv.wait(inbox).unwrap());
+        } else {
+            // open but idle connections: adaptive poll backoff (std has
+            // no portable readiness API; inbox posts still wake us
+            // immediately via the condvar)
+            drop(shared.cv.wait_timeout(inbox, backoff).unwrap());
+            backoff = (backoff * 2).min(POLL_MAX);
+        }
+    }
+}
+
+fn worker_loop(
+    queue: Arc<ComputeQueue>,
+    muxes: Arc<Vec<Arc<MuxShared>>>,
+    service: Arc<CampaignService>,
+    metrics: Arc<ServerMetrics>,
+) {
+    while let Some(job) = queue.pop() {
+        metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        metrics.in_flight.fetch_add(1, Ordering::Relaxed);
+        let expired = job.deadline.is_some_and(|dl| Instant::now() >= dl);
+        let resp = if expired {
+            metrics.rejected_deadline.fetch_add(1, Ordering::Relaxed);
+            metrics.record(job.kind, false, job.enqueued.elapsed());
+            proto::err_kind_line("deadline", "deadline_ms expired before compute started")
+        } else {
+            let (resp, ok) = service.respond_with_status(&job.req);
+            metrics.record(job.kind, ok, job.enqueued.elapsed());
+            resp
+        };
+        metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
+        muxes[job.mux].deliver(job.conn, resp);
+    }
+}
+
+/// What the accept loop should do about one `accept` error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) enum AcceptAction {
+    /// Transient per-connection failure (reset mid-handshake etc.):
+    /// retry immediately.
+    Retry,
+    /// Resource exhaustion (EMFILE/ENFILE/ENOBUFS/ENOMEM): back off,
+    /// then retry — connections closing will free the resource.
+    Backoff,
+    /// The listener itself is broken: surface the error, stop accepting.
+    Fatal,
+}
+
+/// Classify one `accept` error. Every error used to be treated as
+/// transient EMFILE and slept on, turning a closed/invalid listener
+/// into a silent busy loop; fatal errors now stop the acceptor and are
+/// surfaced through [`Reactor::drain`].
+pub(super) fn classify_accept_error(e: &std::io::Error) -> AcceptAction {
+    match e.kind() {
+        ErrorKind::WouldBlock
+        | ErrorKind::TimedOut
+        | ErrorKind::Interrupted
+        | ErrorKind::ConnectionAborted
+        | ErrorKind::ConnectionReset => AcceptAction::Retry,
+        // raw errnos: ENOMEM(12), ENFILE(23), EMFILE(24), ENOBUFS
+        // (55 on BSD/macOS, 105 on Linux)
+        _ => match e.raw_os_error() {
+            Some(12 | 23 | 24 | 55 | 105) => AcceptAction::Backoff,
+            _ => AcceptAction::Fatal,
+        },
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    muxes: Arc<Vec<Arc<MuxShared>>>,
+    shutdown: Arc<AtomicBool>,
+    metrics: Arc<ServerMetrics>,
+    fatal: Arc<Mutex<Option<String>>>,
+) {
+    let mut rr = 0usize;
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    break; // the throwaway wake-up connect from drain()
+                }
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                metrics.accepted.fetch_add(1, Ordering::Relaxed);
+                metrics.open_conns.fetch_add(1, Ordering::Relaxed);
+                muxes[rr % muxes.len()].add_conn(stream);
+                rr = rr.wrapping_add(1);
+            }
+            Err(e) => match classify_accept_error(&e) {
+                AcceptAction::Retry => continue,
+                AcceptAction::Backoff => {
+                    if shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    std::thread::sleep(ACCEPT_BACKOFF);
+                }
+                AcceptAction::Fatal => {
+                    if !shutdown.load(Ordering::SeqCst) {
+                        *fatal.lock().unwrap() = Some(format!("accept failed fatally: {e}"));
+                    }
+                    break;
+                }
+            },
+        }
+    }
+    // the listener drops here, closing the port
+}
+
+/// The running event loop: acceptor + muxes + workers, torn down by the
+/// one shared [`Reactor::drain`] path.
+pub(super) struct Reactor {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    muxes: Arc<Vec<Arc<MuxShared>>>,
+    mux_handles: Vec<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    queue: Arc<ComputeQueue>,
+    accept_fatal: Arc<Mutex<Option<String>>>,
+}
+
+impl Reactor {
+    /// Spawn the full thread complement around a bound listener.
+    pub(super) fn spawn(
+        listener: TcpListener,
+        service: Arc<CampaignService>,
+        metrics: Arc<ServerMetrics>,
+        mux_threads: usize,
+        compute_threads: usize,
+        queue_cap: usize,
+    ) -> Result<Reactor> {
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let queue = Arc::new(ComputeQueue::new(queue_cap.max(1)));
+        metrics.set_queue_cap(queue_cap.max(1));
+        let muxes: Arc<Vec<Arc<MuxShared>>> =
+            Arc::new((0..mux_threads.max(1)).map(|_| Arc::new(MuxShared::new())).collect());
+
+        let mut mux_handles = Vec::new();
+        for (i, shared) in muxes.iter().enumerate() {
+            let shared = Arc::clone(shared);
+            let ctx = MuxCtx {
+                mux_idx: i,
+                service: Arc::clone(&service),
+                metrics: Arc::clone(&metrics),
+                queue: Arc::clone(&queue),
+            };
+            let handle = std::thread::Builder::new()
+                .name(format!("grcim-mux-{i}"))
+                .spawn(move || mux_loop(shared, ctx))
+                .context("spawning mux thread")?;
+            mux_handles.push(handle);
+        }
+
+        let mut workers = Vec::new();
+        for i in 0..compute_threads.max(1) {
+            let queue = Arc::clone(&queue);
+            let muxes = Arc::clone(&muxes);
+            let service = Arc::clone(&service);
+            let metrics = Arc::clone(&metrics);
+            let handle = std::thread::Builder::new()
+                .name(format!("grcim-worker-{i}"))
+                .spawn(move || worker_loop(queue, muxes, service, metrics))
+                .context("spawning compute worker")?;
+            workers.push(handle);
+        }
+
+        let accept_fatal = Arc::new(Mutex::new(None));
+        let accept = {
+            let muxes = Arc::clone(&muxes);
+            let shutdown = Arc::clone(&shutdown);
+            let metrics = Arc::clone(&metrics);
+            let fatal = Arc::clone(&accept_fatal);
+            std::thread::Builder::new()
+                .name("grcim-accept".to_string())
+                .spawn(move || accept_loop(listener, muxes, shutdown, metrics, fatal))
+                .context("spawning accept thread")?
+        };
+
+        Ok(Reactor {
+            addr,
+            shutdown,
+            accept: Some(accept),
+            muxes,
+            mux_handles,
+            workers,
+            queue,
+            accept_fatal,
+        })
+    }
+
+    /// Block until the acceptor exits — an external [`Reactor::drain`]
+    /// or a fatal accept error (surfaced by the subsequent drain).
+    pub(super) fn join_acceptor(&mut self) -> Result<()> {
+        if let Some(h) = self.accept.take() {
+            h.join().map_err(|_| anyhow!("accept thread panicked"))?;
+        }
+        Ok(())
+    }
+
+    /// The single teardown path (shutdown and join share it): stop
+    /// accepting, finish every admitted compute job, deliver and flush
+    /// all responses, then join every thread. Returns the acceptor's
+    /// fatal error, if one stopped it.
+    pub(super) fn drain(&mut self) -> Result<()> {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // wake a blocking accept with a throwaway connection (a no-op
+        // if the acceptor already exited and closed the listener)
+        let _ = TcpStream::connect(self.addr);
+        let acceptor = self.join_acceptor();
+        // workers finish everything already admitted, then exit …
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // … so every response reaches its mux inbox before the muxes
+        // take their final flush-and-close turn
+        for m in self.muxes.iter() {
+            m.request_shutdown();
+        }
+        for h in self.mux_handles.drain(..) {
+            let _ = h.join();
+        }
+        acceptor?;
+        if let Some(msg) = self.accept_fatal.lock().unwrap().take() {
+            bail!("{msg}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job() -> ComputeJob {
+        ComputeJob {
+            mux: 0,
+            conn: 0,
+            req: Request::Info,
+            kind: RequestKind::Info,
+            deadline: None,
+            enqueued: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn queue_admits_to_cap_then_rejects() {
+        let q = ComputeQueue::new(2);
+        assert!(q.try_push(job()));
+        assert!(q.try_push(job()));
+        // the bounded queue is the admission control: a full queue
+        // rejects instead of growing (the caller answers `busy`)
+        assert!(!q.try_push(job()));
+        assert!(q.pop().is_some());
+        assert!(q.try_push(job()), "popping frees a slot");
+    }
+
+    #[test]
+    fn closed_queue_drains_then_ends() {
+        let q = Arc::new(ComputeQueue::new(8));
+        assert!(q.try_push(job()));
+        assert!(q.try_push(job()));
+        q.close();
+        assert!(!q.try_push(job()), "no admissions after close");
+        // graceful shutdown: both admitted jobs still come out
+        assert!(q.pop().is_some());
+        assert!(q.pop().is_some());
+        assert!(q.pop().is_none());
+        // and a blocked popper wakes up with None
+        let q2 = Arc::new(ComputeQueue::new(8));
+        let qq = Arc::clone(&q2);
+        let h = std::thread::spawn(move || qq.pop().is_none());
+        std::thread::sleep(Duration::from_millis(20));
+        q2.close();
+        assert!(h.join().unwrap());
+    }
+
+    #[test]
+    fn accept_errors_classify_by_severity() {
+        use std::io::Error;
+        // transient peer-side failures retry immediately
+        for kind in [
+            ErrorKind::ConnectionAborted,
+            ErrorKind::ConnectionReset,
+            ErrorKind::WouldBlock,
+            ErrorKind::TimedOut,
+            ErrorKind::Interrupted,
+        ] {
+            let e = Error::new(kind, "transient");
+            assert_eq!(classify_accept_error(&e), AcceptAction::Retry, "{kind:?}");
+        }
+        // resource exhaustion backs off: EMFILE, ENFILE, ENOBUFS, ENOMEM
+        for errno in [24, 23, 105, 12] {
+            let e = Error::from_raw_os_error(errno);
+            assert_eq!(classify_accept_error(&e), AcceptAction::Backoff, "errno {errno}");
+        }
+        // anything else (EBADF, EINVAL: the listener itself is broken)
+        // is fatal — the old code busy-slept on these forever
+        for errno in [9, 22] {
+            let e = Error::from_raw_os_error(errno);
+            assert_eq!(classify_accept_error(&e), AcceptAction::Fatal, "errno {errno}");
+        }
+    }
+}

@@ -1,0 +1,181 @@
+#!/usr/bin/env python3
+"""Validate a `grcim query metrics` response line against the stable
+schema `rust/src/server/metrics.rs::ServerMetrics::to_json` (wrapped by
+`CampaignService::metrics_snapshot`) emits:
+
+    {"ok": true, "cached": false, "result": {
+       "proto": int,
+       "server": {
+         "uptime_us": num >= 0, "accepted": num, "open_conns": num,
+         "admitted": num, "rejected_busy": num, "rejected_deadline": num,
+         "bad_requests": num,
+         "queue": {"depth": num, "cap": num > 0, "in_flight": num},
+         "kinds": {<kind>: {"ok": num, "errors": num, "count": num,
+                            "p50_us": num|null, "p99_us": num|null,
+                            "mean_us": num|null, "max_us": num}, ...}},
+       "caches": {<cache>: {"entries": num, "hits": num, "misses": num,
+                            "computes": num, "coalesced": num,
+                            "evictions": num}, ...}}}
+
+CI starts a real server, drives it with `grcim loadgen`, captures one
+metrics response, and gates on this script — a schema regression (a
+renamed counter, a dropped kind, percentiles that stop being emitted)
+fails the pipeline instead of silently breaking dashboards.
+
+`--nonzero PATH` (repeatable) additionally asserts the numeric value at
+a dotted path inside `result` is > 0 — CI uses it to pin the loadgen
+smoke's observable effects, e.g.:
+
+    python3 tools/check_metrics.py metrics.json \
+        --nonzero server.accepted \
+        --nonzero server.kinds.energy.ok \
+        --nonzero caches.energies.hits
+
+Usage: python3 tools/check_metrics.py <metrics.json> [--nonzero PATH]...
+"""
+
+import json
+import sys
+
+KINDS = ("info", "metrics", "energy", "sweep", "figure", "workload", "layer", "model")
+CACHES = ("aggregates", "energies", "sweeps", "figures", "layers", "models", "workloads")
+COUNTERS = (
+    "uptime_us",
+    "accepted",
+    "open_conns",
+    "admitted",
+    "rejected_busy",
+    "rejected_deadline",
+    "bad_requests",
+)
+CACHE_FIELDS = ("entries", "hits", "misses", "computes", "coalesced", "evictions")
+
+
+def fail(msg):
+    print(f"check_metrics: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def number(doc, where, key, minimum=0):
+    v = doc.get(key, "missing")
+    if not isinstance(v, (int, float)) or isinstance(v, bool) or v < minimum:
+        fail(f"{where}: '{key}' must be a number >= {minimum}, got {v!r}")
+    return v
+
+
+def number_or_null(doc, where, key):
+    v = doc.get(key, "missing")
+    if v is None:
+        return None
+    if not isinstance(v, (int, float)) or isinstance(v, bool) or v < 0:
+        fail(f"{where}: '{key}' must be a non-negative number or null, got {v!r}")
+    return v
+
+
+def check_kind(name, k):
+    where = f"server.kinds.{name}"
+    if not isinstance(k, dict):
+        fail(f"{where}: must be an object")
+    ok = number(k, where, "ok")
+    errors = number(k, where, "errors")
+    count = number(k, where, "count")
+    if count != ok + errors:
+        fail(f"{where}: count ({count}) != ok + errors ({ok + errors})")
+    p50 = number_or_null(k, where, "p50_us")
+    p99 = number_or_null(k, where, "p99_us")
+    mean = number_or_null(k, where, "mean_us")
+    number(k, where, "max_us")
+    # percentiles exist exactly when something was measured
+    for label, v in (("p50_us", p50), ("p99_us", p99), ("mean_us", mean)):
+        if (v is None) != (count == 0):
+            fail(f"{where}: '{label}' is {v!r} with count {count}")
+    if count > 0 and p99 < p50:
+        fail(f"{where}: p99_us ({p99}) < p50_us ({p50})")
+
+
+def walk(result, path):
+    node = result
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            fail(f"--nonzero {path}: no '{part}' at that path")
+        node = node[part]
+    if not isinstance(node, (int, float)) or isinstance(node, bool) or node <= 0:
+        fail(f"--nonzero {path}: expected a number > 0, got {node!r}")
+
+
+def check(path, nonzero=()):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"{path}: {e}")
+    if not isinstance(doc, dict) or doc.get("ok") is not True:
+        fail(f"{path}: not an ok:true response")
+    result = doc.get("result")
+    if not isinstance(result, dict):
+        fail(f"{path}: 'result' must be an object")
+    number(result, "result", "proto", minimum=1)
+
+    server = result.get("server")
+    if not isinstance(server, dict):
+        fail(f"{path}: 'result.server' must be an object")
+    for key in COUNTERS:
+        number(server, "server", key)
+    queue = server.get("queue")
+    if not isinstance(queue, dict):
+        fail(f"{path}: 'server.queue' must be an object")
+    number(queue, "server.queue", "depth")
+    number(queue, "server.queue", "cap", minimum=1)
+    number(queue, "server.queue", "in_flight")
+
+    kinds = server.get("kinds")
+    if not isinstance(kinds, dict):
+        fail(f"{path}: 'server.kinds' must be an object")
+    for name in KINDS:
+        if name not in kinds:
+            fail(f"{path}: kind '{name}' missing from server.kinds")
+        check_kind(name, kinds[name])
+    for name in kinds:
+        if name not in KINDS:
+            fail(f"{path}: unknown kind '{name}' in server.kinds")
+
+    caches = result.get("caches")
+    if not isinstance(caches, dict):
+        fail(f"{path}: 'result.caches' must be an object")
+    for name in CACHES:
+        c = caches.get(name)
+        if not isinstance(c, dict):
+            fail(f"{path}: cache '{name}' missing from result.caches")
+        for field in CACHE_FIELDS:
+            number(c, f"caches.{name}", field)
+    for name in caches:
+        if name not in CACHES:
+            fail(f"{path}: unknown cache '{name}' in result.caches")
+
+    for p in nonzero:
+        walk(result, p)
+    checked = f"{len(KINDS)} kinds, {len(CACHES)} caches, {len(nonzero)} nonzero pins"
+    print(f"check_metrics: OK: {path} ({checked})")
+
+
+def main():
+    args = sys.argv[1:]
+    nonzero = []
+    paths = []
+    i = 0
+    while i < len(args):
+        if args[i] == "--nonzero":
+            if i + 1 >= len(args):
+                fail("--nonzero needs a dotted path")
+            nonzero.append(args[i + 1])
+            i += 2
+        else:
+            paths.append(args[i])
+            i += 1
+    if len(paths) != 1:
+        fail("usage: check_metrics.py <metrics.json> [--nonzero PATH]...")
+    check(paths[0], nonzero)
+
+
+if __name__ == "__main__":
+    main()

@@ -69,6 +69,36 @@ fn main() {
     });
     Distribution::Uniform.fill(&mut rng, &mut wf);
 
+    // batched RNG primitives (the vector path under every fill; the
+    // leapfrog interleave is bit-exact with the sequential stream)
+    let mut u64buf = vec![0u64; 65_536];
+    b.run_items("rng/fill_u64_64k", 20, 65_536, || {
+        rng.fill_u64(&mut u64buf);
+        std::hint::black_box(u64buf[0]);
+    });
+    let mut nbuf = vec![0.0f64; 65_536];
+    b.run_items("rng/fill_normal_64k", 20, 65_536, || {
+        rng.fill_normal(&mut nbuf);
+        std::hint::black_box(nbuf[0]);
+    });
+
+    // estimator-mode slab fills (the --sampler hot path; throughput in
+    // slab elements/s). Stratified allocates its stratum permutations,
+    // so it stays outside the zero-allocation assertions below.
+    let mut slab = vec![0.0f32; batch * nr];
+    let clip = Distribution::clipped_gauss4();
+    for sampler in grcim::distributions::Sampler::ALL {
+        b.run_items(
+            &format!("sampler/fill_{}_2048x32", sampler.name()),
+            10,
+            batch * nr,
+            || {
+                sampler.fill_slab_f32(&clip, &mut rng, &mut slab, nr);
+                std::hint::black_box(slab[0]);
+            },
+        );
+    }
+
     // quantizer alone
     let fmt = FpFormat::fp6_e2m3();
     b.run_items("formats/quantize_64k", 20, 65_536, || {
@@ -183,6 +213,7 @@ fn main() {
         dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
         nr,
         samples: 16 * batch,
+        sampler: Default::default(),
     };
     let cfg = CampaignConfig {
         engine: EngineKind::Rust,

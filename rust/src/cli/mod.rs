@@ -22,8 +22,10 @@ pub mod flags {
     pub const FIGURES: &[&str] =
         &["fig", "out", "samples", "engine", "artifacts", "workers", "seed"];
     /// `grcim energy` flags.
-    pub const ENERGY: &[&str] =
-        &["dr", "sqnr", "samples", "engine", "artifacts", "workers", "seed"];
+    pub const ENERGY: &[&str] = &[
+        "dr", "sqnr", "samples", "sampler", "target-ci", "engine", "artifacts", "workers",
+        "seed",
+    ];
     /// `grcim validate` flags.
     pub const VALIDATE: &[&str] = &["artifacts", "samples", "seed"];
     /// `grcim sweep` flags.
@@ -40,8 +42,8 @@ pub mod flags {
     ];
     /// `grcim query` flags.
     pub const QUERY: &[&str] = &[
-        "addr", "json", "dr", "sqnr", "samples", "seed", "id", "trace", "shape", "tokens",
-        "arch", "nr", "nc", "ne", "nm", "dist", "model",
+        "addr", "json", "dr", "sqnr", "samples", "sampler", "seed", "id", "trace", "shape",
+        "tokens", "arch", "nr", "nc", "ne", "nm", "dist", "model",
     ];
     /// `grcim workload` flags.
     pub const WORKLOAD: &[&str] =

@@ -6,7 +6,7 @@
 
 use crate::config::Config;
 use crate::coordinator::{CampaignConfig, ExperimentSpec};
-use crate::distributions::Distribution;
+use crate::distributions::{Distribution, Sampler};
 use crate::energy::{CimArch, TechParams};
 use crate::formats::FpFormat;
 use crate::mac::FormatPair;
@@ -110,6 +110,7 @@ pub fn experiment_spec(
         dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
         nr,
         samples,
+        sampler: Sampler::default(),
     })
 }
 
@@ -258,10 +259,11 @@ pub struct SweepPlan {
 }
 
 impl SweepPlan {
-    /// Resolve a parsed TOML config: top-level `seed`/`samples`, an
-    /// optional `[engine] kind`, and one `[[experiment]]` section per
-    /// grid point (`name` required; `n_e`, `n_m`, `nr`, `distribution`
-    /// optional with the paper's defaults).
+    /// Resolve a parsed TOML config: top-level `seed`/`samples`/`sampler`,
+    /// an optional `[engine] kind`, and one `[[experiment]]` section per
+    /// grid point (`name` required; `n_e`, `n_m`, `nr`, `distribution`,
+    /// `sampler` optional with the paper's defaults — the per-experiment
+    /// `sampler` overrides the top-level one).
     pub fn from_config(cfg: &Config) -> Result<SweepPlan> {
         let mut campaign = CampaignConfig::default();
         if let Some(seed) = cfg.root.get("seed").and_then(|v| v.as_f64()) {
@@ -279,6 +281,10 @@ impl SweepPlan {
             .get("samples")
             .and_then(|v| v.as_usize())
             .unwrap_or(DEFAULT_SAMPLES);
+        let sampler = match cfg.root.get("sampler").and_then(|v| v.as_str()) {
+            None => Sampler::default(),
+            Some(s) => Sampler::parse(s).map_err(anyhow::Error::msg)?,
+        };
 
         let mut specs = Vec::new();
         for exp in cfg.sections_named("experiment") {
@@ -293,7 +299,12 @@ impl SweepPlan {
                 .get("distribution")
                 .and_then(|v| v.as_str())
                 .unwrap_or("uniform");
-            specs.push(experiment_spec(name, n_e, n_m, nr, dist, samples)?);
+            let mut spec = experiment_spec(name, n_e, n_m, nr, dist, samples)?;
+            spec.sampler = match exp.get("sampler").and_then(|v| v.as_str()) {
+                None => sampler,
+                Some(s) => Sampler::parse(s).map_err(anyhow::Error::msg)?,
+            };
+            specs.push(spec);
         }
         if specs.is_empty() {
             bail!("config has no [[experiment]] sections");
@@ -340,6 +351,40 @@ distribution = "gauss_outliers"
         // defaults applied: n_m = 2, nr = 32, FP4 max-entropy weights
         assert_eq!(plan.specs[1].fmts.x, FpFormat::fp(4, 2));
         assert_eq!(plan.specs[1].nr, 32);
+    }
+
+    #[test]
+    fn sampler_keys_resolve_with_per_experiment_override() {
+        let text = r#"
+sampler = "antithetic"
+[[experiment]]
+name = "a"
+[[experiment]]
+name = "b"
+sampler = "stratified"
+"#;
+        let plan =
+            SweepPlan::from_config(&Config::parse(text).unwrap()).unwrap();
+        assert_eq!(plan.specs[0].sampler, Sampler::Antithetic);
+        assert_eq!(plan.specs[1].sampler, Sampler::Stratified);
+        // absent everywhere -> the historical plain estimator
+        let plain = SweepPlan::from_config(
+            &Config::parse("[[experiment]]\nname = \"a\"\n").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(plain.specs[0].sampler, Sampler::Plain);
+        // unknown names are clean errors at either level
+        for bad in [
+            "sampler = \"warp\"\n[[experiment]]\nname = \"a\"\n",
+            "[[experiment]]\nname = \"a\"\nsampler = \"warp\"\n",
+        ] {
+            let err = format!(
+                "{:#}",
+                SweepPlan::from_config(&Config::parse(bad).unwrap())
+                    .unwrap_err()
+            );
+            assert!(err.contains("unknown sampler 'warp'"), "{err}");
+        }
     }
 
     #[test]

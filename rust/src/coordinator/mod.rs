@@ -14,7 +14,7 @@
 
 pub mod pool;
 
-use crate::distributions::Distribution;
+use crate::distributions::{Distribution, Sampler};
 use crate::mac::FormatPair;
 use crate::rng::{job_seed, Pcg64};
 use crate::runtime::{build_engine, Engine, EngineKind, SimScratch};
@@ -38,6 +38,9 @@ pub struct ExperimentSpec {
     pub nr: usize,
     /// Requested Monte-Carlo samples (rounded up to whole engine batches).
     pub samples: usize,
+    /// Monte-Carlo estimator mode ([`Sampler::Plain`] is the historical,
+    /// bit-pinned default; the variance-reduced modes are opt-in).
+    pub sampler: Sampler,
 }
 
 /// Campaign-wide settings.
@@ -111,8 +114,11 @@ pub fn run_job_buffered(
     let n = batch_samples * spec.nr;
     bufs.x.resize(n, 0.0);
     bufs.w.resize(n, 0.0);
-    spec.dist_x.fill_f32(&mut rng, &mut bufs.x);
-    spec.dist_w.fill_f32(&mut rng, &mut bufs.w);
+    // the sampler consumes the same job stream for both slabs, so a job
+    // stays a pure function of its seed in every estimator mode (Plain
+    // delegates to the bit-identical sequential fill)
+    spec.sampler.fill_slab_f32(&spec.dist_x, &mut rng, &mut bufs.x, spec.nr);
+    spec.sampler.fill_slab_f32(&spec.dist_w, &mut rng, &mut bufs.w, spec.nr);
     let mut agg = ColumnAgg::new(spec.nr);
     let chunk = engine.preferred_batch(spec.nr).max(1) * spec.nr;
     let mut lo = 0usize;
@@ -245,6 +251,80 @@ pub fn run_campaign(
     Ok(aggs)
 }
 
+/// Pilot jobs per estimator mode in [`samples_for_ci`].
+pub const CI_PILOT_JOBS: u64 = 8;
+/// Samples per pilot job in [`samples_for_ci`] (the canonical job batch).
+pub const CI_PILOT_SAMPLES: usize = 2048;
+/// Two-sided 95% normal quantile used for the CI half-width.
+pub const CI_Z: f64 = 1.96;
+
+/// Samples-for-equal-CI estimate of one estimator mode.
+#[derive(Debug, Clone, Copy)]
+pub struct CiEstimate {
+    /// The estimator mode measured.
+    pub sampler: Sampler,
+    /// Mean per-pilot-job SQNR estimate (dB) at [`CI_PILOT_SAMPLES`].
+    pub sqnr_db_mean: f64,
+    /// Sample standard deviation of the per-job SQNR estimates (dB).
+    pub sqnr_db_std: f64,
+    /// Samples needed for a 95% CI half-width of the requested dB.
+    pub required_samples: u64,
+}
+
+/// The `--target-ci` knob: how many Monte-Carlo samples each estimator
+/// mode needs for the campaign's SQNR estimate to reach a 95% confidence
+/// half-width of `half_width_db` dB.
+///
+/// Runs [`CI_PILOT_JOBS`] pilot jobs of [`CI_PILOT_SAMPLES`] samples per
+/// mode (standard job seeding, batch indices 0..K), takes the sample
+/// variance of the per-job SQNR estimates, and scales: the estimate from
+/// `n` samples has variance ≈ σ²·n₀/n, so
+/// `n = ceil(z²·σ²·n₀ / h²)`. Fully deterministic at a fixed seed — the
+/// counts are golden-pinned and cross-checked against the Python twin
+/// (`tools/gen_goldens.py`).
+pub fn samples_for_ci(
+    engine: &dyn Engine,
+    spec: &ExperimentSpec,
+    seed: u64,
+    half_width_db: f64,
+) -> Result<Vec<CiEstimate>> {
+    assert!(half_width_db > 0.0, "CI half-width must be positive");
+    let mut out = Vec::with_capacity(Sampler::ALL.len());
+    let mut bufs = JobBuffers::default();
+    for sampler in Sampler::ALL {
+        let mut s = spec.clone();
+        s.sampler = sampler;
+        let mut sqnrs = [0.0f64; CI_PILOT_JOBS as usize];
+        for (j, v) in sqnrs.iter_mut().enumerate() {
+            let agg = run_job_buffered(
+                engine,
+                &s,
+                seed,
+                0,
+                j as u64,
+                CI_PILOT_SAMPLES,
+                &mut bufs,
+            )?;
+            *v = agg.sqnr_db();
+        }
+        let k = CI_PILOT_JOBS as f64;
+        let mean = sqnrs.iter().sum::<f64>() / k;
+        let var = sqnrs.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+            / (k - 1.0);
+        let required = (CI_Z * CI_Z * var * CI_PILOT_SAMPLES as f64
+            / (half_width_db * half_width_db))
+            .ceil()
+            .max(1.0) as u64;
+        out.push(CiEstimate {
+            sampler,
+            sqnr_db_mean: mean,
+            sqnr_db_std: var.sqrt(),
+            required_samples: required,
+        });
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,6 +339,7 @@ mod tests {
             dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
             nr: 32,
             samples,
+            sampler: Sampler::Plain,
         }
     }
 
@@ -394,5 +475,89 @@ mod tests {
         assert_eq!(whole.samples(), chunked.samples());
         assert_eq!(whole.nf.sum.to_bits(), chunked.nf.sum.to_bits());
         assert_eq!(whole.qerr.sum_sq.to_bits(), chunked.qerr.sum_sq.to_bits());
+    }
+
+    /// The acceptance-criteria spec point: an FP8-class input format whose
+    /// SQNR sits near 35 dB under the clipped-Gaussian activation model
+    /// (Fig. 4). The smooth, symmetric quantile map is what the
+    /// variance-reduced modes exploit; the Gaussian+outliers mixture is
+    /// deliberately NOT used here — its SQNR noise is dominated by the
+    /// outlier magnitudes themselves, which neither pairing nor
+    /// stratification controls (measured: no reduction), see
+    /// docs/THEORY.md.
+    fn ci_spec() -> ExperimentSpec {
+        ExperimentSpec {
+            id: "ci35".into(),
+            fmts: FormatPair::new(FpFormat::fp(4, 3), FpFormat::fp4_e2m1()),
+            dist_x: Distribution::clipped_gauss4(),
+            dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+            nr: 32,
+            samples: CI_PILOT_SAMPLES,
+            sampler: Sampler::Plain,
+        }
+    }
+
+    #[test]
+    fn variance_reduction_beats_plain_by_2x_at_the_35db_point() {
+        let est =
+            samples_for_ci(&RustEngine, &ci_spec(), 0xC1, 0.25).unwrap();
+        assert_eq!(est.len(), 3);
+        let by = |s: Sampler| {
+            est.iter().find(|e| e.sampler == s).unwrap().required_samples
+        };
+        let plain = by(Sampler::Plain);
+        let best = by(Sampler::Antithetic).min(by(Sampler::Stratified));
+        // the SQNR estimate sits near 35 dB and at least one
+        // variance-reduced mode needs >= 2x fewer samples for the same CI
+        let mean =
+            est.iter().find(|e| e.sampler == Sampler::Plain).unwrap().sqnr_db_mean;
+        assert!((30.0..40.0).contains(&mean), "sqnr mean {mean}");
+        assert!(
+            plain >= 2 * best,
+            "plain {plain} vs best variance-reduced {best}"
+        );
+    }
+
+    #[test]
+    fn samples_for_ci_is_deterministic_and_scales_with_half_width() {
+        let a = samples_for_ci(&RustEngine, &ci_spec(), 7, 0.5).unwrap();
+        let b = samples_for_ci(&RustEngine, &ci_spec(), 7, 0.5).unwrap();
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.required_samples, y.required_samples);
+            assert_eq!(x.sqnr_db_mean.to_bits(), y.sqnr_db_mean.to_bits());
+        }
+        // halving the half-width quadruples the required samples (up to
+        // the ceil)
+        let tight = samples_for_ci(&RustEngine, &ci_spec(), 7, 0.25).unwrap();
+        for (w, t) in a.iter().zip(tight.iter()) {
+            assert!(
+                t.required_samples >= 3 * w.required_samples,
+                "{:?}: {} vs {}",
+                w.sampler,
+                w.required_samples,
+                t.required_samples
+            );
+        }
+    }
+
+    #[test]
+    fn sampler_modes_preserve_the_estimate_within_mc_tolerance() {
+        // all three estimators target the same quantity; their pooled
+        // SQNR estimates must agree to Monte-Carlo noise
+        let e = RustEngine;
+        let mut sqnr = Vec::new();
+        for sampler in Sampler::ALL {
+            let mut s = ci_spec();
+            s.sampler = sampler;
+            s.samples = 8192;
+            let agg = run_experiment(&e, &s, 0xE5).unwrap();
+            sqnr.push(agg.sqnr_db());
+        }
+        for v in &sqnr[1..] {
+            assert!(
+                (v - sqnr[0]).abs() < 1.5,
+                "estimates diverged: {sqnr:?}"
+            );
+        }
     }
 }

@@ -41,6 +41,67 @@ use crate::rng::Pcg64;
 use crate::workload::EmpiricalDist;
 use std::sync::Arc;
 
+/// Standard-normal quantile function Φ⁻¹(p) (Acklam's rational
+/// approximation, |relative error| < 1.15e-9 — far below the Monte-Carlo
+/// noise floor of every estimate in this crate). The Python twin
+/// (`tools/gen_goldens.py`) carries the identical coefficients and
+/// operation order so quantile-driven sampling is reproducible across
+/// both implementations.
+pub fn probit(p: f64) -> f64 {
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    if p <= 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    if p >= 1.0 {
+        return f64::INFINITY;
+    }
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5])
+            * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r
+                + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
 /// Parameters of the Gaussian+outliers stress distribution.
 ///
 /// The paper picks ε = 0.01 and k = 50 ("consistent with empirical
@@ -136,17 +197,112 @@ impl Distribution {
         }
     }
 
-    /// Fill a slice.
-    pub fn fill(&self, rng: &mut Pcg64, out: &mut [f64]) {
-        for v in out {
-            *v = self.sample(rng);
+    /// Whether [`Distribution::sample_q`] consumes its auxiliary uniform
+    /// (only the Gaussian+outliers mixture needs a branch selector).
+    pub fn needs_aux(&self) -> bool {
+        matches!(self, Distribution::GaussOutliers(_))
+    }
+
+    /// Quantile-driven sample: maps `u` in [0, 1] through the (signed)
+    /// quantile function, with `aux` in [0, 1) selecting the mixture
+    /// branch where one exists (see [`Distribution::needs_aux`]).
+    ///
+    /// Same marginal law as [`Distribution::sample`] when `u` and `aux`
+    /// are independent uniforms, but the explicit `u` lets the
+    /// variance-reduced [`Sampler`] modes place samples deliberately:
+    /// antithetic pairing mirrors the magnitude quantile while keeping
+    /// the sign (`u' = fract(1.5 - u)`), and stratification spreads `u`
+    /// (and `aux`, killing the outlier-count binomial noise) evenly.
+    pub fn sample_q(&self, u: f64, aux: f64) -> f64 {
+        match self {
+            Distribution::Uniform => -1.0 + 2.0 * u,
+            Distribution::MaxEntropy(me) => me.sample_q(u),
+            Distribution::GaussOutliers(p) => {
+                if aux < p.eps {
+                    // outlier branch: sign from the half, magnitude
+                    // quantile folded so u' = fract(1.5-u) mirrors it
+                    let (sign, t) = if u >= 0.5 {
+                        (1.0, 2.0 * u - 1.0)
+                    } else {
+                        (-1.0, 1.0 - 2.0 * u)
+                    };
+                    sign * (0.5 + 0.5 * t)
+                } else {
+                    let sigma = Self::core_sigma(*p);
+                    (probit(u) * sigma).clamp(-1.0, 1.0)
+                }
+            }
+            Distribution::ClippedGauss { clip_sigmas } => {
+                (probit(u) / clip_sigmas).clamp(-1.0, 1.0)
+            }
+            Distribution::UniformScaled { r } => -*r + (*r + *r) * u,
+            Distribution::Empirical(e) => e.quantile(u),
         }
     }
 
-    /// Fill an f32 slice (the PJRT artifacts take f32 inputs).
+    /// Fill a slice with the exact sequence repeated
+    /// [`Distribution::sample`] calls would produce.
+    ///
+    /// Distributions with a fixed draw count per sample (uniform,
+    /// clipped-Gaussian, empirical inverse-CDF) run on the batched RNG
+    /// paths ([`Pcg64::fill_u64`] / [`Pcg64::fill_normal`]), which are
+    /// bit-exact with the sequential stream; variable-draw distributions
+    /// (max-entropy, Gaussian+outliers) fall back to the scalar loop.
+    pub fn fill(&self, rng: &mut Pcg64, out: &mut [f64]) {
+        const SCALE: f64 = 1.0 / (1u64 << 53) as f64;
+        match self {
+            Distribution::Uniform | Distribution::UniformScaled { .. } => {
+                let (lo, hi) = match self {
+                    Distribution::UniformScaled { r } => (-*r, *r),
+                    _ => (-1.0, 1.0),
+                };
+                let mut buf = [0u64; 256];
+                for chunk in out.chunks_mut(256) {
+                    let b = &mut buf[..chunk.len()];
+                    rng.fill_u64(b);
+                    for (o, &w) in chunk.iter_mut().zip(b.iter()) {
+                        // same expression as uniform_in(lo, hi)
+                        *o = lo + (hi - lo) * ((w >> 11) as f64 * SCALE);
+                    }
+                }
+            }
+            Distribution::ClippedGauss { clip_sigmas } => {
+                rng.fill_normal(out);
+                for o in out.iter_mut() {
+                    *o = (*o / clip_sigmas).clamp(-1.0, 1.0);
+                }
+            }
+            Distribution::Empirical(e) => {
+                let mut buf = [0u64; 256];
+                for chunk in out.chunks_mut(256) {
+                    let b = &mut buf[..chunk.len()];
+                    rng.fill_u64(b);
+                    for (o, &w) in chunk.iter_mut().zip(b.iter()) {
+                        // quantile() at a [0,1) uniform is the same
+                        // interpolation sample() performs
+                        *o = e.quantile((w >> 11) as f64 * SCALE);
+                    }
+                }
+            }
+            _ => {
+                for v in out {
+                    *v = self.sample(rng);
+                }
+            }
+        }
+    }
+
+    /// Fill an f32 slice (the PJRT artifacts take f32 inputs). Runs the
+    /// batched [`Distribution::fill`] paths through a stack chunk, so the
+    /// hot campaign fill stays allocation-free.
     pub fn fill_f32(&self, rng: &mut Pcg64, out: &mut [f32]) {
-        for v in out {
-            *v = self.sample(rng) as f32;
+        let mut tmp = [0.0f64; 256];
+        for chunk in out.chunks_mut(256) {
+            let t = &mut tmp[..chunk.len()];
+            self.fill(rng, t);
+            for (o, &v) in chunk.iter_mut().zip(t.iter()) {
+                *o = v as f32;
+            }
         }
     }
 
@@ -182,6 +338,130 @@ impl Distribution {
                 format!("empirical[{}@{:016x}]", e.name(), e.content_hash())
             }
         }
+    }
+}
+
+/// Monte-Carlo estimator mode: how a campaign job turns its RNG stream
+/// into an operand slab (`samples` rows of `nr` elements).
+///
+/// `Plain` is the default and is bit-identical to the historical
+/// sequential fill — every pre-existing golden depends on that. The
+/// variance-reduced modes draw the same marginal law per element but
+/// place samples deliberately, so campaign estimates (SQNR, required
+/// ENOB) converge with fewer samples; they are opt-in via
+/// `--sampler`, the sweep-config `sampler` key, and the serve request
+/// field (see docs/THEORY.md for the estimator math).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Sampler {
+    /// Independent draws (the historical estimator).
+    #[default]
+    Plain,
+    /// Antithetic pairing: consecutive row pairs share their uniforms,
+    /// the partner mirroring each magnitude quantile while keeping the
+    /// sign (`u' = fract(1.5 - u)`), so even-in-sign statistics keep
+    /// their sensitivity while magnitude noise cancels within pairs.
+    Antithetic,
+    /// Stratified (Latin-hypercube) sampling: per element position, the
+    /// rows' quantiles are a random permutation of equal strata — for
+    /// mixtures, the branch selector axis is stratified too, pinning the
+    /// per-slab outlier count at its expectation.
+    Stratified,
+}
+
+impl Sampler {
+    /// Parse a CLI/config/wire name.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "plain" => Ok(Sampler::Plain),
+            "antithetic" => Ok(Sampler::Antithetic),
+            "stratified" => Ok(Sampler::Stratified),
+            _ => Err(format!(
+                "unknown sampler '{s}' (expected plain|antithetic|stratified)"
+            )),
+        }
+    }
+
+    /// Stable name (inverse of [`Sampler::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Sampler::Plain => "plain",
+            Sampler::Antithetic => "antithetic",
+            Sampler::Stratified => "stratified",
+        }
+    }
+
+    /// All modes, in report order.
+    pub const ALL: [Sampler; 3] =
+        [Sampler::Plain, Sampler::Antithetic, Sampler::Stratified];
+
+    /// Fill an operand slab of `out.len() / row_len` rows under this
+    /// estimator mode. `Plain` delegates to the (bit-identical, batched)
+    /// sequential fill; the other modes consume the same job RNG, so a
+    /// job's slab remains a pure function of its seed — worker-count and
+    /// chunking invariance of pooled aggregates carries over unchanged.
+    pub fn fill_slab_f32(
+        &self,
+        dist: &Distribution,
+        rng: &mut Pcg64,
+        out: &mut [f32],
+        row_len: usize,
+    ) {
+        assert!(row_len > 0 && out.len() % row_len == 0, "ragged slab");
+        match self {
+            Sampler::Plain => dist.fill_f32(rng, out),
+            Sampler::Antithetic => {
+                let needs_aux = dist.needs_aux();
+                let mut pairs = out.chunks_exact_mut(2 * row_len);
+                for pair in &mut pairs {
+                    let (r0, r1) = pair.split_at_mut(row_len);
+                    for i in 0..row_len {
+                        let u = rng.uniform();
+                        let aux =
+                            if needs_aux { rng.uniform() } else { 0.5 };
+                        r0[i] = dist.sample_q(u, aux) as f32;
+                        let m = if u >= 0.5 { 1.5 - u } else { 0.5 - u };
+                        r1[i] = dist.sample_q(m, aux) as f32;
+                    }
+                }
+                // odd trailing row: no partner, draw it plain
+                dist.fill_f32(rng, pairs.into_remainder());
+            }
+            Sampler::Stratified => {
+                let rows = out.len() / row_len;
+                if rows == 0 {
+                    return;
+                }
+                let needs_aux = dist.needs_aux();
+                let mut perm: Vec<u32> = (0..rows as u32).collect();
+                let mut perm_aux: Vec<u32> = (0..rows as u32).collect();
+                let inv_rows = 1.0 / rows as f64;
+                for j in 0..row_len {
+                    shuffle(&mut perm, rng);
+                    if needs_aux {
+                        shuffle(&mut perm_aux, rng);
+                    }
+                    for t in 0..rows {
+                        let u = (perm[t] as f64 + rng.uniform()) * inv_rows;
+                        let aux = if needs_aux {
+                            (perm_aux[t] as f64 + rng.uniform()) * inv_rows
+                        } else {
+                            0.5
+                        };
+                        out[t * row_len + j] =
+                            dist.sample_q(u, aux) as f32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fisher–Yates shuffle driven by `Pcg64::below` (twinned in
+/// `tools/gen_goldens.py`).
+fn shuffle(perm: &mut [u32], rng: &mut Pcg64) {
+    for i in (1..perm.len()).rev() {
+        let j = rng.below(i as u64 + 1) as usize;
+        perm.swap(i, j);
     }
 }
 
@@ -268,6 +548,183 @@ mod tests {
         let d = Distribution::gauss_outliers();
         assert_eq!(draw(&d, 100, 42), draw(&d, 100, 42));
         assert_ne!(draw(&d, 100, 42), draw(&d, 100, 43));
+    }
+
+    #[test]
+    fn batched_fill_is_bit_exact_with_sequential_sampling() {
+        use crate::workload::{EmpiricalDist, TensorTrace};
+        let t = TensorTrace::from_f64(
+            "bx",
+            vec![6],
+            vec![-1.0, -0.7, -0.1, 0.2, 0.6, 1.0],
+        )
+        .unwrap();
+        let dists = [
+            Distribution::Uniform,
+            Distribution::UniformScaled { r: 0.125 },
+            Distribution::clipped_gauss4(),
+            Distribution::empirical(EmpiricalDist::fit(&t).unwrap()),
+            Distribution::gauss_outliers(),
+            Distribution::max_entropy(FpFormat::fp4_e2m1()),
+        ];
+        for d in &dists {
+            // chunk-boundary lengths around the 256-element fill chunk
+            // and the 4-lane RNG width
+            for len in [0usize, 1, 3, 4, 5, 255, 256, 257, 1000] {
+                let mut seq = Pcg64::seeded(0xD157);
+                let expect: Vec<u64> = (0..len)
+                    .map(|_| d.sample(&mut seq).to_bits())
+                    .collect();
+                let mut bat = Pcg64::seeded(0xD157);
+                let mut got = vec![0.0f64; len];
+                d.fill(&mut bat, &mut got);
+                let gb: Vec<u64> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(expect, gb, "{} len={len}", d.name());
+                // and the RNG must land in the sequential state
+                assert_eq!(
+                    seq.next_u64(),
+                    bat.next_u64(),
+                    "{} state after len={len}",
+                    d.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fill_f32_matches_per_sample_casts() {
+        let d = Distribution::clipped_gauss4();
+        let mut seq = Pcg64::seeded(77);
+        let expect: Vec<f32> =
+            (0..700).map(|_| d.sample(&mut seq) as f32).collect();
+        let mut bat = Pcg64::seeded(77);
+        let mut got = vec![0.0f32; 700];
+        d.fill_f32(&mut bat, &mut got);
+        assert_eq!(expect, got);
+    }
+
+    #[test]
+    fn probit_inverts_the_normal_cdf() {
+        // spot values: probit(0.5) = 0, probit(0.975) ~ 1.95996,
+        // symmetry, and tail-branch sanity
+        assert_eq!(probit(0.5), 0.0);
+        assert!((probit(0.975) - 1.959964).abs() < 1e-5);
+        for p in [0.001, 0.01, 0.2, 0.5, 0.8, 0.99, 0.999] {
+            assert!(
+                (probit(p) + probit(1.0 - p)).abs() < 1e-9,
+                "asymmetric at {p}"
+            );
+        }
+        assert!(probit(0.0) == f64::NEG_INFINITY);
+        assert!(probit(1.0) == f64::INFINITY);
+        // monotone across the branch joints at 0.02425
+        let mut prev = f64::NEG_INFINITY;
+        for i in 1..1000 {
+            let v = probit(i as f64 / 1000.0);
+            assert!(v > prev, "not monotone at {i}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn sample_q_marginals_match_sample() {
+        use crate::util::mean;
+        // pushing i.i.d. uniforms through sample_q must reproduce the
+        // distribution's moments (the unbiasedness the samplers rely on)
+        let dists = [
+            Distribution::Uniform,
+            Distribution::clipped_gauss4(),
+            Distribution::gauss_outliers(),
+            Distribution::max_entropy(FpFormat::fp4_e2m1()),
+        ];
+        for d in &dists {
+            let via_sample = draw(d, 200_000, 55);
+            let mut rng = Pcg64::seeded(56);
+            let via_q: Vec<f64> = (0..200_000)
+                .map(|_| {
+                    let u = rng.uniform();
+                    let aux =
+                        if d.needs_aux() { rng.uniform() } else { 0.5 };
+                    d.sample_q(u, aux)
+                })
+                .collect();
+            let (m1, m2) = (mean(&via_sample), mean(&via_q));
+            assert!((m1 - m2).abs() < 0.01, "{}: {m1} vs {m2}", d.name());
+            let (v1, v2) = (variance(&via_sample), variance(&via_q));
+            let scale = v1.max(1e-12);
+            assert!(
+                ((v1 - v2) / scale).abs() < 0.05,
+                "{}: var {v1} vs {v2}",
+                d.name()
+            );
+        }
+    }
+
+    #[test]
+    fn sampler_parse_roundtrip() {
+        for s in Sampler::ALL {
+            assert_eq!(Sampler::parse(s.name()).unwrap(), s);
+        }
+        assert!(Sampler::parse("sobol").is_err());
+        assert_eq!(Sampler::default(), Sampler::Plain);
+    }
+
+    #[test]
+    fn plain_slab_fill_is_bit_identical_to_direct_fill() {
+        let d = Distribution::gauss_outliers();
+        let mut a = Pcg64::seeded(91);
+        let mut direct = vec![0.0f32; 64 * 8];
+        d.fill_f32(&mut a, &mut direct);
+        let mut b = Pcg64::seeded(91);
+        let mut slab = vec![0.0f32; 64 * 8];
+        Sampler::Plain.fill_slab_f32(&d, &mut b, &mut slab, 8);
+        assert_eq!(direct, slab);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn antithetic_rows_are_exact_magnitude_mirrors() {
+        // for Uniform the signed quantile is -1+2u, so a pair must keep
+        // the sign and split the magnitude: |a| + |b| = 1
+        let d = Distribution::Uniform;
+        let mut rng = Pcg64::seeded(92);
+        let nr = 16;
+        let mut slab = vec![0.0f32; 64 * nr];
+        Sampler::Antithetic.fill_slab_f32(&d, &mut rng, &mut slab, nr);
+        for pair in slab.chunks_exact(2 * nr) {
+            for i in 0..nr {
+                let (a, b) = (pair[i] as f64, pair[nr + i] as f64);
+                assert!(
+                    a.signum() == b.signum() || a == 0.0 || b == 0.0,
+                    "sign flip in pair: {a} {b}"
+                );
+                assert!(
+                    (a.abs() + b.abs() - 1.0).abs() < 1e-6,
+                    "not mirrored: {a} {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stratified_pins_outlier_count_at_expectation() {
+        let d = Distribution::gauss_outliers();
+        let mut rng = Pcg64::seeded(93);
+        let rows = 2000;
+        let nr = 4;
+        let mut slab = vec![0.0f32; rows * nr];
+        Sampler::Stratified.fill_slab_f32(&d, &mut rng, &mut slab, nr);
+        // selector-axis LHS: each column gets eps*rows = 20 +- 1 outliers
+        // (injected outliers have magnitude >= 0.5)
+        for j in 0..nr {
+            let count = (0..rows)
+                .filter(|t| slab[t * nr + j].abs() >= 0.5)
+                .count();
+            assert!(
+                (19..=21).contains(&count),
+                "column {j}: {count} outliers"
+            );
+        }
     }
 
     #[test]

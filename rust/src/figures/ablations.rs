@@ -39,6 +39,7 @@ pub fn run(ctx: &FigureCtx) -> Result<FigureResult> {
             dist_w: w_dist.clone(),
             nr: 32,
             samples,
+            sampler: Default::default(),
         });
     }
     let aggs = run_campaign(&specs, &ctx.campaign)?;
@@ -94,6 +95,7 @@ pub fn run(ctx: &FigureCtx) -> Result<FigureResult> {
             dist_w: Distribution::clipped_gauss4(),
             nr,
             samples,
+            sampler: Default::default(),
         });
     }
     let aggs = run_campaign(&specs, &ctx.campaign)?;
@@ -131,6 +133,7 @@ pub fn run(ctx: &FigureCtx) -> Result<FigureResult> {
         dist_w: w_dist.clone(),
         nr: 32,
         samples,
+        sampler: Default::default(),
     };
     let aggs = run_campaign(&[spec], &ctx.campaign)?;
     let mut marg =

@@ -81,6 +81,7 @@ pub(crate) fn sweep(
                 dist_w: Distribution::max_entropy(weight_fmt()),
                 nr: NR,
                 samples: ctx.samples,
+                sampler: Default::default(),
             });
         }
     }

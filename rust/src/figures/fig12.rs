@@ -205,11 +205,24 @@ pub fn evaluate_at(
 }
 
 /// Evaluate a set of spec points with a single campaign (two MC
-/// experiments per point: INT/narrow-bounds and FP/full-scale).
+/// experiments per point: INT/narrow-bounds and FP/full-scale), under
+/// the plain (historical, golden-pinned) estimator.
 pub fn evaluate_points(
     ctx: &FigureCtx,
     points: &[SpecPoint],
     samples: usize,
+    tech: &TechParams,
+) -> Result<Vec<Option<PointResult>>> {
+    evaluate_points_with(ctx, points, samples, Default::default(), tech)
+}
+
+/// [`evaluate_points`] under an explicit estimator mode — the CLI's
+/// `energy --sampler` entry point.
+pub fn evaluate_points_with(
+    ctx: &FigureCtx,
+    points: &[SpecPoint],
+    samples: usize,
+    sampler: crate::distributions::Sampler,
     tech: &TechParams,
 ) -> Result<Vec<Option<PointResult>>> {
     let w_fmt = weight_fmt();
@@ -231,6 +244,7 @@ pub fn evaluate_points(
             dist_w: w_dist.clone(),
             nr: NR,
             samples,
+            sampler,
         });
         let fp_idx = specs.len();
         specs.push(ExperimentSpec {
@@ -240,6 +254,7 @@ pub fn evaluate_points(
             dist_w: w_dist.clone(),
             nr: NR,
             samples,
+            sampler,
         });
         index.push(Some((int_idx, fp_idx)));
     }

@@ -52,6 +52,23 @@ impl MaxEntropy {
         sign * m * super::exp2(e_eff - self.fmt.e_max)
     }
 
+    /// Exact quantile of the max-entropy distribution at `u` in [0, 1]:
+    /// the sign comes from the half of the unit interval, the magnitude
+    /// from the rank-`r` code pair in ascending-magnitude order — which
+    /// is exactly (e, m) lexicographic order, because each binade's top
+    /// value sits below the next binade's bottom. Same marginal law as
+    /// [`MaxEntropy::sample`]; used by the variance-reduced samplers.
+    pub fn sample_q(&self, u: f64) -> f64 {
+        let codes = self.e_codes * self.m_codes;
+        let (sign, t) = if u >= 0.5 {
+            (1.0, 2.0 * u - 1.0)
+        } else {
+            (-1.0, 1.0 - 2.0 * u)
+        };
+        let r = ((t * codes as f64) as u64).min(codes - 1);
+        self.decode(sign, r / self.m_codes, r % self.m_codes)
+    }
+
     /// Draw one value with uniformly random bit fields.
     pub fn sample(&self, rng: &mut Pcg64) -> f64 {
         let sign = rng.sign();

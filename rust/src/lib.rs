@@ -54,6 +54,7 @@
 //!     dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
 //!     nr: 32,
 //!     samples: 2048,
+//!     sampler: Default::default(),
 //! };
 //! let agg = run_experiment(&RustEngine, &spec, 7)?;
 //! assert_eq!(agg.samples(), 2048);

@@ -53,11 +53,110 @@ pub fn simulate_column(x: &[f64], w: &[f64], nr: usize, fmts: FormatPair) -> Col
     out
 }
 
+/// Per-sample accumulator of the fused signal-chain pass. One instance
+/// carries every running statistic of one MC trial; the lane-batched
+/// driver below keeps [`MAC_LANES`] of them live at once.
+#[derive(Clone, Copy)]
+struct SampleAcc {
+    z_ideal: f64,
+    z_q: f64,
+    ebx: f64,
+    ebw: f64,
+    v_gr_num: f64,
+    s_sum: f64,
+    s2_sum: f64,
+    sx_sum: f64,
+    nf: f64,
+    wq2: f64,
+}
+
+impl SampleAcc {
+    const ZERO: SampleAcc = SampleAcc {
+        z_ideal: 0.0,
+        z_q: 0.0,
+        ebx: 1.0,
+        ebw: 1.0,
+        v_gr_num: 0.0,
+        s_sum: 0.0,
+        s2_sum: 0.0,
+        sx_sum: 0.0,
+        nf: 0.0,
+        wq2: 0.0,
+    };
+
+    /// Fuse one (x, w) element pair into the running statistics (§Perf
+    /// iteration 1): `quantize_parts` folds quantize + decompose into one
+    /// log2; the per-value scale factors 2^(E - e_max) are computed once
+    /// and reused by the GR weight, the row factor, and the ulp floor.
+    #[inline(always)]
+    fn update(&mut self, xi: f64, wi: f64, fx: FpFormat, fw: FpFormat, stx: f64) {
+        self.z_ideal += xi * wi;
+        let (xq, mxi, exi) = fx.quantize_parts(xi);
+        let (wq, mwi, ewi) = fw.quantize_parts(wi);
+        self.z_q += xq * wq;
+        self.ebx = self.ebx.max(exi);
+        self.ebw = self.ebw.max(ewi);
+        // per-value binade scales, shared by every statistic below
+        let ux = exp2(exi - fx.e_max);
+        let uw = exp2(ewi - fw.e_max);
+        let u = ux * uw;
+        self.s_sum += u;
+        self.s2_sum += u * u;
+        self.v_gr_num += mxi * mwi * u;
+        self.sx_sum += ux;
+        // ulp-based *input* noise floor (input-side only: the ADC spec
+        // protects the input format's fidelity; weight quantization is
+        // part of the model, not noise — paper Fig. 10 caption)
+        let dx = stx * ux;
+        self.nf += wq * wq * dx * dx;
+        self.wq2 += wq * wq;
+    }
+
+    /// Finalize one trial: the conventional compute-line voltage is
+    /// reconstructed exactly from the linear-chain identity
+    /// v_conv = z_q / g_conv (power-of-two scaling is lossless), removing
+    /// any second (alignment) pass entirely.
+    #[inline(always)]
+    fn push(self, nr: usize, fx: FpFormat, fw: FpFormat, out: &mut ColumnBatch) {
+        let z_ideal = self.z_ideal / nr as f64;
+        let z_q = self.z_q / nr as f64;
+        let nf = self.nf / (12.0 * (nr * nr) as f64);
+        let g_w = exp2(self.ebw - fw.e_max);
+        let g_conv = exp2(self.ebx - fx.e_max) * g_w;
+        let v_conv = z_q / g_conv;
+
+        out.z_ideal.push(z_ideal);
+        out.z_q.push(z_q);
+        out.v_conv.push(v_conv);
+        out.g_conv.push(g_conv);
+        out.v_gr.push(self.v_gr_num / self.s_sum);
+        out.s_sum.push(self.s_sum);
+        out.s2_sum.push(self.s2_sum);
+        out.sx_sum.push(self.sx_sum);
+        out.g_w.push(g_w);
+        out.nf.push(nf);
+        out.wq2_mean.push(self.wq2 / nr as f64);
+    }
+}
+
+/// Lane width of the batched MC driver: enough independent accumulator
+/// chains to hide the per-sample serial-add latency without spilling the
+/// whole accumulator set out of registers.
+const MAC_LANES: usize = 4;
+
 /// Allocation-free form of [`simulate_column`]: resets `out` (keeping its
 /// vector capacities) and fills it with the batch's per-sample statistics.
 /// After the first call at a given batch size, subsequent calls perform no
 /// heap allocation — the coordinator's chunked job path reuses one batch
 /// per worker (see `coordinator::JobBuffers`).
+///
+/// The driver runs [`MAC_LANES`] MC trials abreast (§Perf iteration 2):
+/// the element loop advances all lanes together, so the per-trial
+/// accumulation chains — the only loop-carried dependencies — interleave
+/// and the pure-arithmetic tail of [`SampleAcc::update`] vectorizes.
+/// Per-trial operation order is exactly the scalar order, so results are
+/// bit-identical to the historical per-sample loop (pinned by
+/// `lane_batched_path_matches_scalar_reference` below).
 pub fn simulate_column_into(
     x: &[f64],
     w: &[f64],
@@ -75,67 +174,30 @@ pub fn simulate_column_into(
     out.reset(nr);
     out.reserve(b);
 
-    // Single fused pass per sample (§Perf iteration 1): `quantize_parts`
-    // folds quantize + decompose into one log2; the per-value scale
-    // factors 2^(E - e_max) are computed once and reused by the GR weight,
-    // the row factor, and the ulp floor; the conventional compute-line
-    // voltage is reconstructed exactly from the linear-chain identity
-    // v_conv = z_q / g_conv (power-of-two scaling is lossless), removing
-    // the old second (alignment) pass entirely.
-    for s in 0..b {
-        let xs = &x[s * nr..(s + 1) * nr];
-        let ws = &w[s * nr..(s + 1) * nr];
-
-        let mut z_ideal = 0.0;
-        let mut z_q = 0.0;
-        let mut ebx = 1.0f64;
-        let mut ebw = 1.0f64;
-        let mut v_gr_num = 0.0;
-        let mut s_sum = 0.0;
-        let mut s2_sum = 0.0;
-        let mut sx_sum = 0.0;
-        let mut nf = 0.0;
-        let mut wq2 = 0.0;
+    let full = (b / MAC_LANES) * MAC_LANES;
+    let mut s = 0;
+    while s < full {
+        let xs = &x[s * nr..(s + MAC_LANES) * nr];
+        let ws = &w[s * nr..(s + MAC_LANES) * nr];
+        let mut acc = [SampleAcc::ZERO; MAC_LANES];
         for i in 0..nr {
-            z_ideal += xs[i] * ws[i];
-            let (xq, mxi, exi) = fx.quantize_parts(xs[i]);
-            let (wq, mwi, ewi) = fw.quantize_parts(ws[i]);
-            z_q += xq * wq;
-            ebx = ebx.max(exi);
-            ebw = ebw.max(ewi);
-            // per-value binade scales, shared by every statistic below
-            let ux = exp2(exi - fx.e_max);
-            let uw = exp2(ewi - fw.e_max);
-            let u = ux * uw;
-            s_sum += u;
-            s2_sum += u * u;
-            v_gr_num += mxi * mwi * u;
-            sx_sum += ux;
-            // ulp-based *input* noise floor (input-side only: the ADC spec
-            // protects the input format's fidelity; weight quantization is
-            // part of the model, not noise — paper Fig. 10 caption)
-            let dx = stx * ux;
-            nf += wq * wq * dx * dx;
-            wq2 += wq * wq;
+            for (l, a) in acc.iter_mut().enumerate() {
+                a.update(xs[l * nr + i], ws[l * nr + i], fx, fw, stx);
+            }
         }
-        z_ideal /= nr as f64;
-        z_q /= nr as f64;
-        nf /= 12.0 * (nr * nr) as f64;
-        let g_w = exp2(ebw - fw.e_max);
-        let g_conv = exp2(ebx - fx.e_max) * g_w;
-        let v_conv = z_q / g_conv;
-
-        out.z_ideal.push(z_ideal);
-        out.z_q.push(z_q);
-        out.v_conv.push(v_conv);
-        out.g_conv.push(g_conv);
-        out.v_gr.push(v_gr_num / s_sum);
-        out.s_sum.push(s_sum);
-        out.s2_sum.push(s2_sum);
-        out.sx_sum.push(sx_sum);
-        out.g_w.push(g_w);
-        out.nf.push(nf);
-        out.wq2_mean.push(wq2 / nr as f64);
+        for a in acc {
+            a.push(nr, fx, fw, out);
+        }
+        s += MAC_LANES;
+    }
+    for t in full..b {
+        let xs = &x[t * nr..(t + 1) * nr];
+        let ws = &w[t * nr..(t + 1) * nr];
+        let mut a = SampleAcc::ZERO;
+        for i in 0..nr {
+            a.update(xs[i], ws[i], fx, fw, stx);
+        }
+        a.push(nr, fx, fw, out);
     }
 }
 
@@ -147,22 +209,30 @@ pub fn adc_quantize(v: f64, enob: f64) -> f64 {
     q.clamp(-1.0, 1.0)
 }
 
+/// In-place slice form of [`adc_quantize`]: the step is computed once and
+/// the loop body is branch-free arithmetic, so it vectorizes. Bit-exact
+/// with the scalar call per element (`exp2` is pure).
+pub fn adc_quantize_slice(vs: &mut [f64], enob: f64) {
+    let delta = 2.0 / exp2(enob);
+    for v in vs {
+        *v = (((*v / delta + 0.5).floor()) * delta).clamp(-1.0, 1.0);
+    }
+}
+
 /// Reconstruct the final dot-product outputs of each architecture after an
 /// ADC of `enob` bits, from a simulated batch. Returns (conventional, GR).
 pub fn apply_adc(b: &ColumnBatch, enob: f64) -> (Vec<f64>, Vec<f64>) {
     let nr = b.nr as f64;
-    let conv: Vec<f64> = b
-        .v_conv
-        .iter()
-        .zip(&b.g_conv)
-        .map(|(&v, &g)| adc_quantize(v, enob) * g)
-        .collect();
-    let gr: Vec<f64> = b
-        .v_gr
-        .iter()
-        .zip(&b.s_sum)
-        .map(|(&v, &s)| adc_quantize(v, enob) * s / nr)
-        .collect();
+    let mut conv: Vec<f64> = b.v_conv.clone();
+    adc_quantize_slice(&mut conv, enob);
+    for (c, &g) in conv.iter_mut().zip(&b.g_conv) {
+        *c *= g;
+    }
+    let mut gr: Vec<f64> = b.v_gr.clone();
+    adc_quantize_slice(&mut gr, enob);
+    for (o, &s) in gr.iter_mut().zip(&b.s_sum) {
+        *o = *o * s / nr;
+    }
     (conv, gr)
 }
 
@@ -326,6 +396,73 @@ mod tests {
     #[should_panic]
     fn rejects_ragged_input() {
         simulate_column(&[0.0; 33], &[0.0; 33], 32, fp63());
+    }
+
+    #[test]
+    fn lane_batched_path_matches_scalar_reference() {
+        // pin the tentpole's bit-compat contract: the MAC_LANES-wide
+        // driver must equal a straight per-sample evaluation for batch
+        // sizes around the lane width (remainder 0..LANES-1)
+        for b in [1usize, 2, 3, 4, 5, 7, 8, 9, 31] {
+            let (x, w) = rand_case(0xAB + b as u64, b, 16);
+            let batched = simulate_column(&x, &w, 16, fp63());
+            // scalar reference: one sample at a time (always the
+            // remainder path)
+            let mut scalar = crate::stats::ColumnBatch::empty(16);
+            for s in 0..b {
+                let one = simulate_column(
+                    &x[s * 16..(s + 1) * 16],
+                    &w[s * 16..(s + 1) * 16],
+                    16,
+                    fp63(),
+                );
+                scalar.z_ideal.extend_from_slice(&one.z_ideal);
+                scalar.z_q.extend_from_slice(&one.z_q);
+                scalar.v_conv.extend_from_slice(&one.v_conv);
+                scalar.g_conv.extend_from_slice(&one.g_conv);
+                scalar.v_gr.extend_from_slice(&one.v_gr);
+                scalar.s_sum.extend_from_slice(&one.s_sum);
+                scalar.s2_sum.extend_from_slice(&one.s2_sum);
+                scalar.sx_sum.extend_from_slice(&one.sx_sum);
+                scalar.g_w.extend_from_slice(&one.g_w);
+                scalar.nf.extend_from_slice(&one.nf);
+                scalar.wq2_mean.extend_from_slice(&one.wq2_mean);
+            }
+            for i in 0..b {
+                assert_eq!(
+                    batched.z_q[i].to_bits(),
+                    scalar.z_q[i].to_bits(),
+                    "b={b} i={i}"
+                );
+                assert_eq!(
+                    batched.nf[i].to_bits(),
+                    scalar.nf[i].to_bits(),
+                    "b={b} i={i}"
+                );
+                assert_eq!(
+                    batched.v_gr[i].to_bits(),
+                    scalar.v_gr[i].to_bits(),
+                    "b={b} i={i}"
+                );
+                assert_eq!(
+                    batched.s2_sum[i].to_bits(),
+                    scalar.s2_sum[i].to_bits(),
+                    "b={b} i={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn adc_quantize_slice_matches_scalar() {
+        let (x, _) = rand_case(0x51, 8, 32);
+        for enob in [1.0, 3.5, 7.0, 12.25] {
+            let mut vs = x.clone();
+            adc_quantize_slice(&mut vs, enob);
+            for (q, &v) in vs.iter().zip(&x) {
+                assert_eq!(q.to_bits(), adc_quantize(v, enob).to_bits());
+            }
+        }
     }
 
     #[test]

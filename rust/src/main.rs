@@ -12,16 +12,17 @@ use anyhow::{bail, Context, Result};
 use grcim::cli::sweep::{LayerParams, ModelParams, SweepPlan};
 use grcim::cli::{fig_list, flags, Args};
 use grcim::config::Json;
-use grcim::coordinator::{run_campaign, CampaignConfig};
+use grcim::coordinator::{run_campaign, samples_for_ci, CampaignConfig};
 #[cfg(feature = "pjrt")]
 use grcim::distributions::Distribution;
+use grcim::distributions::Sampler;
 use grcim::figures::{FigureCtx, ALL};
 #[cfg(feature = "pjrt")]
 use grcim::formats::FpFormat;
 #[cfg(feature = "pjrt")]
 use grcim::mac::FormatPair;
 use grcim::report::Table;
-use grcim::runtime::{ArtifactRegistry, EngineKind};
+use grcim::runtime::{build_engine, ArtifactRegistry, EngineKind};
 use grcim::server::{proto, ServeConfig, Server, DEFAULT_ADDR};
 use grcim::spec::{required_enob, Arch, SpecConfig};
 use grcim::util::{self, Level};
@@ -35,6 +36,7 @@ USAGE: grcim <command> [flags]          full reference: docs/CLI.md
 COMMANDS:
   figures    regenerate paper figures/tables   --fig all|fig4|...|table1
   energy     energy model at a spec point      --dr <dB> --sqnr <dB>
+             [--sampler plain|antithetic|stratified] [--target-ci dB]
   sweep      run a TOML campaign               grcim sweep <config.toml>
   workload   analyze an empirical trace        grcim workload --trace t.grtt
   layer      layer-scale GEMM on the tiled array mapper
@@ -112,15 +114,23 @@ fn cmd_energy(args: &Args) -> Result<()> {
     args.ensure_known_switches(&[])?;
     let dr = args.get_f64("dr", 30.1)?;
     let sqnr = args.get_f64("sqnr", 22.83)?;
+    let sampler = match args.get("sampler") {
+        None => Sampler::default(),
+        Some(s) => Sampler::parse(s).map_err(anyhow::Error::msg)?,
+    };
     let ctx = FigureCtx {
         campaign: campaign_from_args(args)?,
         samples: args.get_usize("samples", 16_384)?,
         out_dir: PathBuf::from("results"),
     };
     let p = grcim::figures::fig12::SpecPoint::from_db(dr, sqnr);
+    if args.get("target-ci").is_some() {
+        return cmd_energy_target_ci(args, &ctx, &p, dr, sqnr);
+    }
     let tech = grcim::energy::TechParams::default();
-    let res =
-        grcim::figures::fig12::evaluate_points(&ctx, &[p], ctx.samples, &tech)?;
+    let res = grcim::figures::fig12::evaluate_points_with(
+        &ctx, &[p], ctx.samples, sampler, &tech,
+    )?;
     let Some(r) = &res[0] else {
         bail!("spec point (DR {dr} dB, SQNR {sqnr} dB) is left of the INT line");
     };
@@ -147,6 +157,70 @@ fn cmd_energy(args: &Args) -> Result<()> {
             Table::f(b.cells),
             Table::f(b.exp_logic + b.tree + b.norm_mult),
         ]);
+    }
+    println!("{}", t.to_markdown());
+    Ok(())
+}
+
+/// `grcim energy --target-ci <dB>`: instead of the energy table, report
+/// how many Monte-Carlo samples each estimator mode (plain, antithetic,
+/// stratified) needs for a ±h dB SQNR confidence interval at this spec
+/// point — for both of the point's experiments (INT/narrow-bounds and
+/// FP/full-scale). Pilot runs are deterministic in the campaign seed,
+/// so the numbers are reproducible (and golden-pinned in the tests).
+fn cmd_energy_target_ci(
+    args: &Args,
+    ctx: &FigureCtx,
+    p: &grcim::figures::fig12::SpecPoint,
+    dr: f64,
+    sqnr: f64,
+) -> Result<()> {
+    use grcim::figures::fig12;
+    let h = args.get_f64("target-ci", 0.0)?;
+    if !(h > 0.0) {
+        bail!("--target-ci must be a positive CI half-width in dB, got {h}");
+    }
+    let (Some(fp), Some(int)) = (p.fp_format(), p.int_format()) else {
+        bail!("spec point (DR {dr} dB, SQNR {sqnr} dB) is left of the INT line");
+    };
+    let engine =
+        build_engine(ctx.campaign.engine, &ctx.campaign.artifacts_dir)?;
+    let w_fmt = fig12::weight_fmt();
+    let w_dist = grcim::distributions::Distribution::max_entropy(w_fmt);
+    let experiments = [
+        ("int", grcim::coordinator::ExperimentSpec {
+            id: "ci-int".to_string(),
+            fmts: grcim::mac::FormatPair::new(int, w_fmt),
+            dist_x: fig12::narrow_bounds_dist(fp),
+            dist_w: w_dist.clone(),
+            nr: fig12::NR,
+            samples: ctx.samples,
+            sampler: Default::default(),
+        }),
+        ("fp", grcim::coordinator::ExperimentSpec {
+            id: "ci-fp".to_string(),
+            fmts: grcim::mac::FormatPair::new(fp, w_fmt),
+            dist_x: grcim::distributions::Distribution::Uniform,
+            dist_w: w_dist,
+            nr: fig12::NR,
+            samples: ctx.samples,
+            sampler: Default::default(),
+        }),
+    ];
+    let mut t = Table::new(
+        format!("samples for a ±{h} dB SQNR CI @ DR={dr} dB, SQNR={sqnr} dB"),
+        &["experiment", "sampler", "sqnr (dB)", "std (dB)", "samples needed"],
+    );
+    for (label, spec) in &experiments {
+        for est in samples_for_ci(engine.as_ref(), spec, ctx.campaign.seed, h)? {
+            t.row(vec![
+                (*label).into(),
+                est.sampler.name().into(),
+                Table::f(est.sqnr_db_mean),
+                Table::f(est.sqnr_db_std),
+                est.required_samples.to_string(),
+            ]);
+        }
     }
     println!("{}", t.to_markdown());
     Ok(())
@@ -526,6 +600,11 @@ fn build_request(kind: &str, args: &Args) -> Result<String> {
             if let Some(s) = json_seed(args)? {
                 pairs.push(("seed", Json::Num(s)));
             }
+            if let Some(s) = args.get("sampler") {
+                // validate client-side so typos fail before the wire
+                Sampler::parse(s).map_err(anyhow::Error::msg)?;
+                pairs.push(("sampler", Json::Str(s.to_string())));
+            }
             Ok(proto::obj(pairs).to_string())
         }
         "figure" => {
@@ -671,6 +750,13 @@ fn build_request(kind: &str, args: &Args) -> Result<String> {
                 cfg.root.get("seed").and_then(|v| v.as_f64())
             {
                 pairs.push(("seed", Json::Num(s)));
+            }
+            if let Some(s) = args
+                .get("sampler")
+                .or_else(|| cfg.root.get("sampler").and_then(|v| v.as_str()))
+            {
+                Sampler::parse(s).map_err(anyhow::Error::msg)?;
+                pairs.push(("sampler", Json::Str(s.to_string())));
             }
             Ok(proto::obj(pairs).to_string())
         }

@@ -118,6 +118,119 @@ impl Pcg64 {
             -1.0
         }
     }
+
+    /// Transition coefficients `(m, a)` such that applying `delta` raw LCG
+    /// steps maps `state -> m*state + a` (O'Neill's square-multiply jump,
+    /// O(log delta)). Pure function of `self.inc`.
+    fn jump_coeffs(&self, delta: u64) -> (u128, u128) {
+        let mut cur_mult = PCG_MULT;
+        let mut cur_add = self.inc;
+        let mut acc_mult: u128 = 1;
+        let mut acc_add: u128 = 0;
+        let mut d = delta;
+        while d > 0 {
+            if d & 1 == 1 {
+                acc_mult = acc_mult.wrapping_mul(cur_mult);
+                acc_add = acc_add.wrapping_mul(cur_mult).wrapping_add(cur_add);
+            }
+            cur_add = cur_mult.wrapping_add(1).wrapping_mul(cur_add);
+            cur_mult = cur_mult.wrapping_mul(cur_mult);
+            d >>= 1;
+        }
+        (acc_mult, acc_add)
+    }
+
+    /// XSL-RR output permutation of a raw LCG state.
+    #[inline]
+    fn output(state: u128) -> u64 {
+        let rot = (state >> 122) as u32;
+        (((state >> 64) as u64) ^ (state as u64)).rotate_right(rot)
+    }
+
+    /// Fill `out` with the exact sequence `next_u64()` would produce,
+    /// leaving the generator in the exact state repeated calls would.
+    ///
+    /// Runs 4 leapfrogged LCG lanes so the serial 128-bit multiply chain —
+    /// the latency bottleneck of `next_u64` — pipelines across independent
+    /// chains, while the interleaved outputs reproduce the sequential
+    /// stream bit-for-bit.
+    pub fn fill_u64(&mut self, out: &mut [u64]) {
+        const LANES: usize = 4;
+        if out.len() < 2 * LANES {
+            for v in out.iter_mut() {
+                *v = self.next_u64();
+            }
+            return;
+        }
+        // lane j starts at state after (j+1) raw steps and then strides by
+        // LANES steps: its outputs are stream positions j, j+LANES, ...
+        let (m, a) = self.jump_coeffs(LANES as u64);
+        let mut lane = [0u128; LANES];
+        for l in lane.iter_mut() {
+            self.state =
+                self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+            *l = self.state;
+        }
+        let mut chunks = out.chunks_exact_mut(LANES);
+        let mut first = true;
+        for chunk in &mut chunks {
+            if !first {
+                for l in lane.iter_mut() {
+                    *l = l.wrapping_mul(m).wrapping_add(a);
+                }
+            }
+            first = false;
+            for (o, &l) in chunk.iter_mut().zip(lane.iter()) {
+                *o = Self::output(l);
+            }
+        }
+        // generator state after the vector body = last lane's state
+        self.state = lane[LANES - 1];
+        for v in chunks.into_remainder().iter_mut() {
+            *v = self.next_u64();
+        }
+    }
+
+    /// Fill `out` with the exact sequence `normal()` would produce,
+    /// leaving the generator in the exact state repeated calls would.
+    ///
+    /// Draws uniforms in blocks through [`Pcg64::fill_u64`] and runs the
+    /// same polar rejection over the block; the final state is re-derived
+    /// by jumping the entry state forward by the number of raw draws the
+    /// rejection loop actually consumed.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        if out.is_empty() {
+            return;
+        }
+        const BLOCK: usize = 128;
+        let s0 = self.state;
+        let mut buf = [0u64; BLOCK];
+        let mut pos = BLOCK; // empty
+        let mut consumed: u64 = 0;
+        const SCALE: f64 = 1.0 / (1u64 << 53) as f64;
+        for o in out.iter_mut() {
+            loop {
+                // attempts consume aligned pairs, so pos is always even and
+                // the buffer drains exactly at BLOCK — the raw stream
+                // position at refill time is already self.state
+                if pos == BLOCK {
+                    self.fill_u64(&mut buf);
+                    pos = 0;
+                }
+                let u = 2.0 * ((buf[pos] >> 11) as f64 * SCALE) - 1.0;
+                let v = 2.0 * ((buf[pos + 1] >> 11) as f64 * SCALE) - 1.0;
+                pos += 2;
+                consumed += 2;
+                let s = u * u + v * v;
+                if s > 0.0 && s < 1.0 {
+                    *o = u * (-2.0 * s.ln() / s).sqrt();
+                    break;
+                }
+            }
+        }
+        let (m, a) = self.jump_coeffs(consumed);
+        self.state = s0.wrapping_mul(m).wrapping_add(a);
+    }
 }
 
 #[cfg(test)]
@@ -204,6 +317,68 @@ mod tests {
         assert!(a != b && a != c && a != d && b != c);
         // stable across calls
         assert_eq!(a, job_seed(1, 0, 0));
+    }
+
+    #[test]
+    fn fill_u64_matches_sequential_stream_across_chunk_boundaries() {
+        // lane width is 4; cover 0, 1, lane-1, lane, lane+1, 2*lane-1,
+        // 2*lane (first vectorized length), odd remainders, and large
+        for len in [0usize, 1, 3, 4, 5, 7, 8, 9, 13, 64, 1000, 4097] {
+            let mut seq = Pcg64::seeded(0xBA7C);
+            let mut bat = Pcg64::seeded(0xBA7C);
+            let expect: Vec<u64> = (0..len).map(|_| seq.next_u64()).collect();
+            let mut got = vec![0u64; len];
+            bat.fill_u64(&mut got);
+            assert_eq!(expect, got, "len={len}");
+            // the generator state must also land where sequential did
+            assert_eq!(seq.next_u64(), bat.next_u64(), "state after len={len}");
+        }
+    }
+
+    #[test]
+    fn fill_u64_is_resumable_mid_stream() {
+        let mut seq = Pcg64::seeded(99);
+        let expect: Vec<u64> = (0..100).map(|_| seq.next_u64()).collect();
+        let mut bat = Pcg64::seeded(99);
+        let mut got = vec![0u64; 100];
+        // split the same stream across differently-sized fill calls
+        let (a, rest) = got.split_at_mut(7);
+        let (b, c) = rest.split_at_mut(41);
+        bat.fill_u64(a);
+        bat.fill_u64(b);
+        bat.fill_u64(c);
+        assert_eq!(expect, got);
+    }
+
+    #[test]
+    fn fill_normal_matches_sequential_stream_across_chunk_boundaries() {
+        // rejection consumes a variable number of raw draws per output, so
+        // these lengths also exercise the block-refill and final-jump paths
+        for len in [0usize, 1, 3, 4, 5, 63, 64, 65, 2000] {
+            let mut seq = Pcg64::seeded(0x90AA);
+            let mut bat = Pcg64::seeded(0x90AA);
+            let expect: Vec<f64> = (0..len).map(|_| seq.normal()).collect();
+            let mut got = vec![0.0f64; len];
+            bat.fill_normal(&mut got);
+            let eb: Vec<u64> = expect.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u64> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(eb, gb, "len={len}");
+            assert_eq!(seq.next_u64(), bat.next_u64(), "state after len={len}");
+        }
+    }
+
+    #[test]
+    fn jump_coeffs_match_stepping() {
+        let rng = Pcg64::seeded(5);
+        for delta in [0u64, 1, 2, 3, 7, 128, 1000] {
+            let mut stepped = rng.clone();
+            for _ in 0..delta {
+                stepped.next_u64();
+            }
+            let (m, a) = rng.jump_coeffs(delta);
+            let jumped = rng.state.wrapping_mul(m).wrapping_add(a);
+            assert_eq!(stepped.state, jumped, "delta={delta}");
+        }
     }
 
     #[test]

@@ -24,7 +24,7 @@ use super::{confined_trace_path, CampaignService, MAX_LAYER_ELEMS, MAX_LAYER_MAC
 use crate::cli::sweep::{experiment_spec, LayerParams, ModelParams};
 use crate::config::Json;
 use crate::coordinator::{CampaignConfig, ExperimentSpec};
-use crate::distributions::Distribution;
+use crate::distributions::{Distribution, Sampler};
 use crate::energy::{EnergyBreakdown, TechParams};
 use crate::figures::{self, fig12, FigureCtx};
 use crate::mac::FormatPair;
@@ -87,18 +87,24 @@ pub(super) fn dispatch(svc: &CampaignService, req: &Request) -> Result<(Json, bo
     match req {
         Request::Info => svc.info().map(|j| (j, false)),
         Request::Metrics => Ok((svc.metrics_snapshot(), false)),
-        Request::Energy { dr_db, sqnr_db, samples, seed } => svc.run_handler(&mut EnergyHandler {
-            dr_db: *dr_db,
-            sqnr_db: *sqnr_db,
-            samples: *samples,
-            seed: seed_of(seed),
-        }),
-        Request::Sweep { samples, seed, experiments } => svc.run_handler(&mut SweepHandler {
-            samples: *samples,
-            seed: seed_of(seed),
-            experiments: experiments.clone(),
-            specs: Vec::new(),
-        }),
+        Request::Energy { dr_db, sqnr_db, samples, seed, sampler } => {
+            svc.run_handler(&mut EnergyHandler {
+                dr_db: *dr_db,
+                sqnr_db: *sqnr_db,
+                samples: *samples,
+                seed: seed_of(seed),
+                sampler: *sampler,
+            })
+        }
+        Request::Sweep { samples, seed, sampler, experiments } => {
+            svc.run_handler(&mut SweepHandler {
+                samples: *samples,
+                seed: seed_of(seed),
+                sampler: *sampler,
+                experiments: experiments.clone(),
+                specs: Vec::new(),
+            })
+        }
         Request::Figure { id, samples, seed } => svc.run_handler(&mut FigureHandler {
             id: id.clone(),
             samples: *samples,
@@ -213,6 +219,7 @@ struct EnergyHandler {
     sqnr_db: f64,
     samples: usize,
     seed: u64,
+    sampler: Sampler,
 }
 
 impl Handler for EnergyHandler {
@@ -232,7 +239,14 @@ impl Handler for EnergyHandler {
                 self.sqnr_db
             );
         }
-        Ok(proto::energy_key(self.dr_db, self.sqnr_db, self.samples, self.seed, svc.engine_name()))
+        Ok(proto::energy_key(
+            self.dr_db,
+            self.sqnr_db,
+            self.samples,
+            self.seed,
+            self.sampler,
+            svc.engine_name(),
+        ))
     }
 
     fn compute(&self, svc: &CampaignService) -> Result<String> {
@@ -249,6 +263,7 @@ impl Handler for EnergyHandler {
             dist_w: w_dist.clone(),
             nr: fig12::NR,
             samples: self.samples,
+            sampler: self.sampler,
         };
         let fp_spec = ExperimentSpec {
             id: "serve-fp".to_string(),
@@ -257,6 +272,7 @@ impl Handler for EnergyHandler {
             dist_w: w_dist,
             nr: fig12::NR,
             samples: self.samples,
+            sampler: self.sampler,
         };
         let (agg_int, _) = svc.aggregate(&int_spec, self.seed)?;
         let (agg_fp, _) = svc.aggregate(&fp_spec, self.seed)?;
@@ -297,6 +313,7 @@ impl Handler for EnergyHandler {
 struct SweepHandler {
     samples: usize,
     seed: u64,
+    sampler: Sampler,
     experiments: Vec<SweepExperiment>,
     /// Resolved by `plan`, read by `compute`.
     specs: Vec<ExperimentSpec>,
@@ -318,14 +335,16 @@ impl Handler for SweepHandler {
             if let Some(path) = e.distribution.strip_prefix("empirical:") {
                 confined_trace_path(path)?;
             }
-            self.specs.push(experiment_spec(
+            let mut spec = experiment_spec(
                 &e.name,
                 e.n_e,
                 e.n_m,
                 e.nr,
                 &e.distribution,
                 self.samples,
-            )?);
+            )?;
+            spec.sampler = self.sampler;
+            self.specs.push(spec);
         }
         Ok(proto::sweep_key(&self.specs, self.seed, svc.engine_name()))
     }

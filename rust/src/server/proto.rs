@@ -47,7 +47,7 @@
 use crate::cli::sweep::{LayerParams, ModelParams};
 use crate::config::Json;
 use crate::coordinator::ExperimentSpec;
-use crate::distributions::Distribution;
+use crate::distributions::{Distribution, Sampler};
 use crate::model::ModelSpec;
 use crate::tile::LayerSpec;
 use anyhow::{bail, Context, Result};
@@ -166,6 +166,8 @@ pub enum Request {
         samples: usize,
         /// Campaign seed override (server default when absent).
         seed: Option<u64>,
+        /// Estimator mode (`"sampler"` field; plain when absent).
+        sampler: Sampler,
     },
     /// A campaign over explicit experiments (the TOML sweep, as JSON).
     Sweep {
@@ -173,6 +175,8 @@ pub enum Request {
         samples: usize,
         /// Campaign seed override (server default when absent).
         seed: Option<u64>,
+        /// Estimator mode (`"sampler"` field; plain when absent).
+        sampler: Sampler,
         /// The experiment grid.
         experiments: Vec<SweepExperiment>,
     },
@@ -287,6 +291,14 @@ pub fn parse_request_meta(line: &str) -> Result<(Request, Option<Duration>)> {
             Some(s as u64)
         }
     };
+    let sampler = match j.get("sampler") {
+        None => Sampler::default(),
+        Some(Json::Str(s)) => match Sampler::parse(s) {
+            Ok(s) => s,
+            Err(e) => bail!("{e}"),
+        },
+        Some(other) => bail!("sampler must be a string, got {other}"),
+    };
     let req = match cmd {
         "info" => Ok(Request::Info),
         "metrics" => Ok(Request::Metrics),
@@ -298,6 +310,7 @@ pub fn parse_request_meta(line: &str) -> Result<(Request, Option<Duration>)> {
                 .and_then(Json::as_usize)
                 .unwrap_or(DEFAULT_SAMPLES),
             seed,
+            sampler,
         }),
         "sweep" => {
             let mut experiments = Vec::new();
@@ -331,6 +344,7 @@ pub fn parse_request_meta(line: &str) -> Result<(Request, Option<Duration>)> {
                     .and_then(Json::as_usize)
                     .unwrap_or(DEFAULT_SAMPLES),
                 seed,
+                sampler,
                 experiments,
             })
         }
@@ -525,14 +539,16 @@ fn canonical_dist(d: &Distribution) -> String {
 ///
 /// Covers exactly the inputs that determine the aggregate bit pattern:
 /// both formats (exact bits), both distributions (exact parameter bits),
-/// array depth, requested samples, campaign seed, and the engine kind.
+/// the estimator mode (sampler), array depth, requested samples,
+/// campaign seed, and the engine kind.
 /// The experiment `id` is deliberately excluded (it labels reports, it
 /// does not seed anything), as is the worker count (aggregates are
 /// bit-identical for any worker count — a coordinator invariant asserted
 /// in `rust/tests/properties.rs`).
 pub fn spec_key(spec: &ExperimentSpec, seed: u64, engine: &str) -> String {
     format!(
-        "v{PROTO_VERSION}|agg|eng={engine}|seed={seed}|nr={}|n={}|x={}:{}|w={}:{}|dx={}|dw={}",
+        "v{PROTO_VERSION}|agg|eng={engine}|seed={seed}|samp={}|nr={}|n={}|x={}:{}|w={}:{}|dx={}|dw={}",
+        spec.sampler.name(),
         spec.nr,
         spec.samples,
         bits(spec.fmts.x.e_max),
@@ -547,10 +563,18 @@ pub fn spec_key(spec: &ExperimentSpec, seed: u64, engine: &str) -> String {
 /// Canonical cache key of one rendered `energy` response — the
 /// response-level cache over [`spec_key`]'s aggregate cache, so repeat
 /// spec-point queries skip even the solve/render step. Keyed by the
-/// exact (DR, SQNR) bits, samples, seed, and engine.
-pub fn energy_key(dr_db: f64, sqnr_db: f64, samples: usize, seed: u64, engine: &str) -> String {
+/// exact (DR, SQNR) bits, samples, seed, sampler, and engine.
+pub fn energy_key(
+    dr_db: f64,
+    sqnr_db: f64,
+    samples: usize,
+    seed: u64,
+    sampler: Sampler,
+    engine: &str,
+) -> String {
     format!(
-        "v{PROTO_VERSION}|energy|eng={engine}|seed={seed}|n={samples}|dr={}|sqnr={}",
+        "v{PROTO_VERSION}|energy|eng={engine}|seed={seed}|samp={}|n={samples}|dr={}|sqnr={}",
+        sampler.name(),
         bits(dr_db),
         bits(sqnr_db),
     )
@@ -688,6 +712,7 @@ mod tests {
             dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
             nr: 32,
             samples: 4096,
+            sampler: Sampler::Plain,
         }
     }
 
@@ -704,16 +729,23 @@ mod tests {
                 dr_db: 36.12,
                 sqnr_db: 28.85,
                 samples: 2048,
-                seed: Some(9)
+                seed: Some(9),
+                sampler: Sampler::Plain,
             }
         );
+        let e = parse_request(
+            r#"{"cmd":"energy","dr":36.12,"sqnr":28.85,"sampler":"antithetic"}"#,
+        )
+        .unwrap();
+        assert!(matches!(e, Request::Energy { sampler: Sampler::Antithetic, .. }));
         let s = parse_request(
             r#"{"cmd":"sweep","samples":1024,"experiments":[
                 {"name":"a","n_e":3,"n_m":2,"nr":32,"distribution":"uniform"}]}"#,
         )
         .unwrap();
         match s {
-            Request::Sweep { samples, seed, experiments } => {
+            Request::Sweep { samples, seed, sampler, experiments } => {
+                assert_eq!(sampler, Sampler::Plain);
                 assert_eq!(samples, 1024);
                 assert_eq!(seed, None);
                 assert_eq!(experiments.len(), 1);
@@ -777,13 +809,15 @@ mod tests {
 
     #[test]
     fn energy_and_sweep_keys_cover_their_inputs() {
-        let k0 = energy_key(30.1, 22.83, 4096, 7, "rust");
-        assert_ne!(k0, energy_key(30.2, 22.83, 4096, 7, "rust"));
-        assert_ne!(k0, energy_key(30.1, 22.84, 4096, 7, "rust"));
-        assert_ne!(k0, energy_key(30.1, 22.83, 8192, 7, "rust"));
-        assert_ne!(k0, energy_key(30.1, 22.83, 4096, 8, "rust"));
-        assert_ne!(k0, energy_key(30.1, 22.83, 4096, 7, "pjrt"));
-        assert_eq!(k0, energy_key(30.1, 22.83, 4096, 7, "rust"));
+        let p = Sampler::Plain;
+        let k0 = energy_key(30.1, 22.83, 4096, 7, p, "rust");
+        assert_ne!(k0, energy_key(30.2, 22.83, 4096, 7, p, "rust"));
+        assert_ne!(k0, energy_key(30.1, 22.84, 4096, 7, p, "rust"));
+        assert_ne!(k0, energy_key(30.1, 22.83, 8192, 7, p, "rust"));
+        assert_ne!(k0, energy_key(30.1, 22.83, 4096, 8, p, "rust"));
+        assert_ne!(k0, energy_key(30.1, 22.83, 4096, 7, p, "pjrt"));
+        assert_ne!(k0, energy_key(30.1, 22.83, 4096, 7, Sampler::Stratified, "rust"));
+        assert_eq!(k0, energy_key(30.1, 22.83, 4096, 7, p, "rust"));
 
         let a = spec();
         let mut b = spec();
@@ -799,9 +833,12 @@ mod tests {
             sweep_key(&[a.clone()], 7, "rust"),
             sweep_key(&[renamed], 7, "rust")
         );
-        // ...and so do seed and engine
+        // ...and so do seed, engine, and the estimator mode
         assert_ne!(k, sweep_key(&[a.clone(), b.clone()], 8, "rust"));
-        assert_ne!(k, sweep_key(&[a, b], 7, "pjrt"));
+        assert_ne!(k, sweep_key(&[a.clone(), b.clone()], 7, "pjrt"));
+        let mut resampled = a.clone();
+        resampled.sampler = Sampler::Antithetic;
+        assert_ne!(spec_key(&a, 7, "rust"), spec_key(&resampled, 7, "rust"));
     }
 
     #[test]
@@ -816,6 +853,8 @@ mod tests {
             parse_request(r#"{"cmd":"info","seed":18446744073709551615}"#)
                 .is_err()
         );
+        assert!(parse_request(r#"{"cmd":"energy","sampler":"warp"}"#).is_err());
+        assert!(parse_request(r#"{"cmd":"energy","sampler":3}"#).is_err());
         assert!(parse_request(r#"{"cmd":"figure"}"#).is_err()); // no id
         assert!(parse_request(r#"{"cmd":"sweep","experiments":[]}"#).is_err());
         assert!(

@@ -370,6 +370,7 @@ mod tests {
             dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
             nr: 32,
             samples: 4096,
+            sampler: Default::default(),
         };
         let e = RustEngine;
         let agg_src = run_experiment(&e, &spec_with(src), 5).unwrap();

@@ -170,6 +170,7 @@ pub fn report(
             dist_w: Distribution::max_entropy(w_fmt),
             nr: NR,
             samples,
+            sampler: Default::default(),
         })
         .collect();
     let aggs = run_campaign(&specs, campaign)?;

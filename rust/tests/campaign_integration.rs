@@ -23,6 +23,7 @@ fn demo_specs() -> Vec<ExperimentSpec> {
             dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
             nr: 32,
             samples: 4096,
+            sampler: Default::default(),
         },
         ExperimentSpec {
             id: "b".into(),
@@ -31,6 +32,7 @@ fn demo_specs() -> Vec<ExperimentSpec> {
             dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
             nr: 64,
             samples: 2048,
+            sampler: Default::default(),
         },
     ]
 }
@@ -100,6 +102,7 @@ fn auto_engine_falls_back_when_artifacts_missing() {
         dist_w: Distribution::Uniform,
         nr: 8,
         samples: 2048,
+        sampler: Default::default(),
     }];
     let aggs = run_campaign(&specs, &cfg).unwrap();
     assert_eq!(aggs[0].samples(), 2048);
@@ -124,6 +127,7 @@ fn pjrt_engine_rejects_missing_depth_in_campaign() {
         dist_w: Distribution::Uniform,
         nr: 24, // no artifact lowered for this depth
         samples: 2048,
+        sampler: Default::default(),
     }];
     assert!(run_campaign(&specs, &cfg).is_err());
 }

@@ -255,6 +255,7 @@ fn campaign_specs() -> Vec<grcim::coordinator::ExperimentSpec> {
             dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
             nr: 32,
             samples: CAMPAIGN_SAMPLES,
+            sampler: Default::default(),
         },
         // the LLM stress point: FP(4,2) + gauss/outliers activations
         ExperimentSpec {
@@ -264,6 +265,7 @@ fn campaign_specs() -> Vec<grcim::coordinator::ExperimentSpec> {
             dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
             nr: 32,
             samples: CAMPAIGN_SAMPLES,
+            sampler: Default::default(),
         },
         // INT degenerate case at a different depth
         ExperimentSpec {
@@ -273,6 +275,7 @@ fn campaign_specs() -> Vec<grcim::coordinator::ExperimentSpec> {
             dist_w: Distribution::Uniform,
             nr: 16,
             samples: CAMPAIGN_SAMPLES,
+            sampler: Default::default(),
         },
     ]
 }
@@ -309,6 +312,49 @@ fn golden_campaign_enob_solutions() {
         g.push(format!("{tag}_nf_mean"), agg.nf.mean());
         g.push(format!("{tag}_g_unit_ms"), agg.g_unit.mean_sq());
         g.push(format!("{tag}_g_row_ms"), agg.g_row.mean_sq());
+    }
+    g.check();
+}
+
+// ---------------------------------------------------------------------
+// Samples-for-equal-CI — the --target-ci estimator-mode pilot, pinned at
+// the acceptance spec point (FP(4,3) near 35 dB under clipped-Gaussian
+// activations) and cross-checked against the Python twin's
+// samples_for_ci_twin.
+// ---------------------------------------------------------------------
+
+const CI_GOLDEN_SEED: u64 = 0xC1;
+const CI_GOLDEN_HALF_DB: f64 = 0.25;
+
+#[test]
+fn golden_samples_ci() {
+    use grcim::coordinator::{samples_for_ci, ExperimentSpec, CI_PILOT_SAMPLES};
+    use grcim::distributions::Distribution;
+    use grcim::formats::FpFormat;
+    use grcim::mac::FormatPair;
+    use grcim::runtime::RustEngine;
+
+    let spec = ExperimentSpec {
+        id: "ci35".into(),
+        fmts: FormatPair::new(FpFormat::fp(4, 3), FpFormat::fp4_e2m1()),
+        dist_x: Distribution::clipped_gauss4(),
+        dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+        nr: 32,
+        samples: CI_PILOT_SAMPLES,
+        sampler: Default::default(),
+    };
+    let ests =
+        samples_for_ci(&RustEngine, &spec, CI_GOLDEN_SEED, CI_GOLDEN_HALF_DB)
+            .unwrap();
+    let mut g = Golden::new("samples_ci", 1e-6);
+    for est in &ests {
+        let tag = est.sampler.name();
+        g.push(format!("{tag}_sqnr_db_mean"), est.sqnr_db_mean);
+        g.push(format!("{tag}_sqnr_db_std"), est.sqnr_db_std);
+        g.push(
+            format!("{tag}_required_samples"),
+            est.required_samples as f64,
+        );
     }
     g.check();
 }
@@ -376,6 +422,7 @@ fn golden_workload_empirical() {
         dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
         nr: 32,
         samples: CAMPAIGN_SAMPLES,
+        sampler: Default::default(),
     };
     let agg = run_experiment(&RustEngine, &spec, CAMPAIGN_SEED).unwrap();
     assert_eq!(agg.samples() as usize, CAMPAIGN_SAMPLES);

@@ -366,6 +366,7 @@ fn coordinator_bit_identical_aggregates_across_1_2_4_workers() {
             dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
             nr: 32,
             samples: 4096,
+            sampler: Default::default(),
         },
         ExperimentSpec {
             id: "det-b".into(),
@@ -374,6 +375,7 @@ fn coordinator_bit_identical_aggregates_across_1_2_4_workers() {
             dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
             nr: 16,
             samples: 6144,
+            sampler: Default::default(),
         },
     ];
     let mut reference: Option<Vec<Vec<u64>>> = None;
@@ -406,6 +408,7 @@ fn prop_campaign_seeding_is_scheduling_invariant() {
         dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
         nr: 16,
         samples: 6144,
+        sampler: Default::default(),
     };
     let mut reference: Option<u64> = None;
     for workers in [1usize, 2, 5, 9] {
@@ -572,6 +575,136 @@ fn prop_model_bit_identical_across_1_2_4_workers() {
         match &reference {
             None => reference = Some(bits),
             Some(r) => assert_eq!(r, &bits, "workers={workers} changed the model"),
+        }
+    }
+}
+
+#[test]
+fn prop_sampler_pooled_aggregates_bit_identical_across_1_2_4_workers() {
+    use grcim::coordinator::{run_campaign, CampaignConfig, ExperimentSpec};
+    use grcim::distributions::Sampler;
+    use grcim::runtime::EngineKind;
+    // the worker-count invariance the Plain mode has always had must
+    // carry over to every estimator mode: a job's slab is a pure
+    // function of its seed, so pooling order is the only degree of
+    // freedom — and pooling is per-job deterministic
+    fn agg_bits(a: &ColumnAgg) -> Vec<u64> {
+        let mut out = Vec::new();
+        for m in [
+            &a.sig, &a.qerr, &a.nf, &a.wq2, &a.g_conv, &a.g_unit, &a.g_row,
+            &a.n_eff, &a.v_conv, &a.v_gr,
+        ] {
+            out.push(m.n);
+            out.push(m.sum.to_bits());
+            out.push(m.sum_sq.to_bits());
+        }
+        out
+    }
+    for sampler in Sampler::ALL {
+        let specs = vec![ExperimentSpec {
+            id: format!("det-{}", sampler.name()),
+            fmts: FormatPair::new(FpFormat::fp(4, 3), FpFormat::fp4_e2m1()),
+            dist_x: Distribution::gauss_outliers(),
+            dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+            nr: 16,
+            samples: 6144,
+            sampler,
+        }];
+        let mut reference: Option<Vec<Vec<u64>>> = None;
+        for workers in [1usize, 2, 4] {
+            let cfg = CampaignConfig {
+                engine: EngineKind::Rust,
+                workers,
+                seed: 0x5A3,
+                ..Default::default()
+            };
+            let aggs = run_campaign(&specs, &cfg).unwrap();
+            let bits: Vec<Vec<u64>> = aggs.iter().map(agg_bits).collect();
+            match &reference {
+                None => reference = Some(bits),
+                Some(r) => assert_eq!(
+                    r,
+                    &bits,
+                    "{}: workers={workers} changed aggregates",
+                    sampler.name()
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_samplers_preserve_mean_and_variance() {
+    use grcim::distributions::Sampler;
+    use grcim::workload::{EmpiricalDist, TensorTrace};
+    // every estimator mode draws the same marginal law per element, so
+    // slab mean/variance must agree across modes to Monte-Carlo noise —
+    // on both the analytic stress mixture and a fitted empirical trace
+    let mut trng = Pcg64::seeded(0x7ACE);
+    let mut raw = vec![0.0f32; 4096];
+    Distribution::gauss_outliers().fill_f32(&mut trng, &mut raw);
+    let trace = TensorTrace::from_f32("prop", vec![raw.len()], raw).unwrap();
+    let dists = [
+        Distribution::gauss_outliers(),
+        Distribution::empirical(EmpiricalDist::fit(&trace).unwrap()),
+    ];
+    let (rows, row_len) = (8192usize, 8usize);
+    for (di, dist) in dists.iter().enumerate() {
+        let mut stats = Vec::new();
+        for sampler in Sampler::ALL {
+            let mut rng = Pcg64::seeded(0xBEEF + di as u64);
+            let mut slab = vec![0.0f32; rows * row_len];
+            sampler.fill_slab_f32(dist, &mut rng, &mut slab, row_len);
+            let n = slab.len() as f64;
+            let mean = slab.iter().map(|v| *v as f64).sum::<f64>() / n;
+            let var = slab
+                .iter()
+                .map(|v| (*v as f64 - mean) * (*v as f64 - mean))
+                .sum::<f64>()
+                / n;
+            stats.push((mean, var));
+        }
+        let (m0, v0) = stats[0];
+        for &(m, v) in &stats[1..] {
+            // mean tolerance: a few sigma of the plain-mode standard
+            // error; variance agrees relatively
+            assert!(
+                (m - m0).abs() < 5.0 * (v0 / (rows * row_len) as f64).sqrt(),
+                "dist {di}: means diverged {stats:?}"
+            );
+            assert!(
+                (v - v0).abs() < 0.15 * v0,
+                "dist {di}: variances diverged {stats:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_antithetic_pairs_mirror_magnitudes_and_keep_signs() {
+    use grcim::distributions::Sampler;
+    // the pair construction: same sign, magnitude quantiles summing to
+    // the full range — exact for the uniform quantile map (up to one
+    // f32 rounding each)
+    for (rows, row_len) in [(8usize, 4usize), (64, 16), (127, 8)] {
+        let mut rng = Pcg64::seeded(rows as u64);
+        let mut slab = vec![0.0f32; rows * row_len];
+        Sampler::Antithetic.fill_slab_f32(
+            &Distribution::Uniform,
+            &mut rng,
+            &mut slab,
+            row_len,
+        );
+        for p in 0..rows / 2 {
+            for i in 0..row_len {
+                let a = slab[2 * p * row_len + i] as f64;
+                let b = slab[(2 * p + 1) * row_len + i] as f64;
+                assert!(a * b >= 0.0, "pair {p}[{i}] flipped sign: {a} {b}");
+                assert!(
+                    (a.abs() + b.abs() - 1.0).abs() < 1e-6,
+                    "pair {p}[{i}] not mirrored: {a} {b}"
+                );
+            }
         }
     }
 }

@@ -212,6 +212,7 @@ fn experiment_aggregates_agree_between_engines() {
         dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
         nr: 32,
         samples: 4096,
+        sampler: Default::default(),
     };
     let ap = run_experiment(&pjrt, &spec, 42).unwrap();
     let ar = run_experiment(&rust, &spec, 42).unwrap();

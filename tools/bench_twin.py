@@ -1,0 +1,109 @@
+#!/usr/bin/env python3
+"""Benchmark the Python twin's Monte-Carlo hot path and emit a benchkit
+schema report (the same JSON shape `cargo bench --bench hotpath` writes,
+see tools/check_bench.py).
+
+This exists for two reasons:
+
+1. It gives the repo a real, regenerable `BENCH_hotpath.json` baseline on
+   machines without a Rust toolchain. The report carries
+   `"source": "python-twin"` and every measurement name is prefixed
+   `twin/`, so it can never be confused with (or gated against) cargo
+   bench numbers — the regression gate in check_bench.py only compares
+   names present in both report and baseline.
+2. CI's toolchain-free job regenerates this report and gates it against
+   the committed baseline (`check_bench.py --baseline --tolerance`), so
+   a hot-path regression in the twin (which gates every golden) fails
+   the pipeline.
+
+Measurements cover the stages the Rust hot path mirrors one-to-one: the
+batched RNG, the distribution fills, the estimator-mode slab fills
+(plain/antithetic/stratified), and the column-MAC signal chain.
+
+Usage: python3 tools/bench_twin.py [--quick] [-o OUT.json]
+"""
+
+import importlib.util
+import json
+import os
+import sys
+import time
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_spec = importlib.util.spec_from_file_location(
+    "gen_goldens", os.path.join(_HERE, "gen_goldens.py"))
+gg = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(gg)
+
+
+def run(name, reps, items, fn, out):
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    median = times[len(times) // 2]
+    out.append({
+        "name": name,
+        "reps": reps,
+        "min_s": times[0],
+        "median_s": median,
+        "mean_s": sum(times) / len(times),
+        "items_per_s": items / median if median > 0 else None,
+    })
+    print(f"  {name}: {items / median:.3e} items/s "
+          f"(median {median * 1e3:.2f} ms over {reps} reps)")
+
+
+def main():
+    quick = "--quick" in sys.argv
+    out_path = os.path.join(_HERE, "..", "BENCH_hotpath.json")
+    if "-o" in sys.argv:
+        out_path = sys.argv[sys.argv.index("-o") + 1]
+
+    reps = 3 if quick else 7
+    n = 16_384 if quick else 65_536
+    rows, nr = n // 32, 32
+    ms = []
+
+    rng = gg.Pcg64(1)
+    run("twin/rng/next_u64", reps, n, lambda: [
+        rng.next_u64() for _ in range(n)], ms)
+    run("twin/rng/normal", reps, n, lambda: [
+        rng.normal() for _ in range(n)], ms)
+
+    go = gg.Dist("gauss_outliers")
+    run("twin/gen/gauss_outliers_fill", reps, n,
+        lambda: gg.fill_f32(go, rng, n), ms)
+
+    clip = gg.Dist("clipped_gauss4")
+    for mode in gg.SAMPLER_MODES:
+        run(f"twin/sampler/fill_{mode}_nr{nr}", reps, n,
+            lambda m=mode: gg.fill_slab_f32(m, clip, rng, n, nr), ms)
+
+    fx, fw = gg.FpFormat.fp(4, 3), gg.FpFormat.fp4_e2m1()
+    x = gg.fill_f32(clip, rng, n)
+    w = gg.fill_f32(gg.Dist("maxent", fw), rng, n)
+    sim_reps = max(2, reps // 2)
+    run(f"twin/mac/simulate_column_nr{nr}", sim_reps, rows,
+        lambda: gg.simulate_column(x, w, nr, fx, fw), ms)
+
+    doc = {
+        "mode": "quick" if quick else "full",
+        "source": "python-twin",
+        "measurements": ms,
+        "note": ("Python-twin hot-path baseline (tools/bench_twin.py); "
+                 "names are twin/-prefixed so the regression gate never "
+                 "compares them against cargo bench numbers. A toolchain "
+                 "machine running `cargo bench --bench hotpath` appends "
+                 "the native trajectory under its own names."),
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path} ({len(ms)} measurements, {doc['mode']} mode)")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,7 +23,21 @@ measurement name starts with PREFIX — CI uses it to pin the bench paths
 that must not silently drop out of the smoke run (e.g. `model/` for the
 model-scale forward pass).
 
-Usage: python3 tools/check_bench.py BENCH_hotpath.json [--require PREFIX]...
+`--baseline FILE --tolerance PCT` turns the schema check into a
+throughput regression gate: every measurement whose name appears in both
+the report and the baseline (and carries a non-null items_per_s in both)
+must reach at least (100 - PCT)% of the baseline throughput. An empty
+overlap fails — a renamed bench must not silently skip the gate. The
+tolerance absorbs runner-to-runner variance; pick it per pipeline (CI
+uses a loose gate that still catches order-of-magnitude regressions).
+
+`--selftest` runs the built-in negative tests (a regressed report must
+fail the gate, a healthy one must pass) and exits; CI runs it so the
+gate itself is tested on every push.
+
+Usage: python3 tools/check_bench.py BENCH_hotpath.json
+           [--require PREFIX]... [--baseline FILE --tolerance PCT]
+       python3 tools/check_bench.py --selftest
 """
 
 import json
@@ -32,17 +46,24 @@ import sys
 NUMERIC_FIELDS = ("min_s", "median_s", "mean_s")
 
 
+class CheckFailed(Exception):
+    pass
+
+
 def fail(msg):
-    print(f"check_bench: FAIL: {msg}", file=sys.stderr)
-    sys.exit(1)
+    raise CheckFailed(f"check_bench: FAIL: {msg}")
 
 
-def check(path, required=()):
+def load(path):
     try:
         with open(path) as f:
             doc = json.load(f)
     except (OSError, ValueError) as e:
         fail(f"{path}: {e}")
+    return doc
+
+
+def check(doc, path, required=()):
     if not isinstance(doc, dict):
         fail(f"{path}: top level must be an object")
     mode = doc.get("mode")
@@ -87,10 +108,110 @@ def check(path, required=()):
     print(f"check_bench: OK: {path} ({len(ms)} measurements, {mode} mode)")
 
 
+def throughputs(doc):
+    return {
+        m["name"]: m["items_per_s"]
+        for m in doc["measurements"]
+        if m.get("items_per_s") is not None
+    }
+
+
+def gate(report_doc, report_path, base_doc, base_path, tolerance_pct):
+    """Throughput regression gate: common measurements must reach at
+    least (100 - tolerance_pct)% of the baseline items_per_s."""
+    if not 0.0 <= tolerance_pct < 100.0:
+        fail(f"--tolerance must be in [0, 100), got {tolerance_pct}")
+    rep = throughputs(report_doc)
+    base = throughputs(base_doc)
+    common = sorted(set(rep) & set(base))
+    if not common:
+        fail(
+            f"{report_path} vs {base_path}: no common measurement names "
+            f"with items_per_s — the regression gate would be vacuous "
+            f"(renamed benches must update the committed baseline)"
+        )
+    floor_frac = 1.0 - tolerance_pct / 100.0
+    regressed = []
+    for name in common:
+        floor = base[name] * floor_frac
+        verdict = "ok" if rep[name] >= floor else "REGRESSED"
+        print(
+            f"check_bench: {verdict}: {name}: {rep[name]:.3e} items/s "
+            f"vs baseline {base[name]:.3e} (floor {floor:.3e})"
+        )
+        if rep[name] < floor:
+            regressed.append(name)
+    if regressed:
+        fail(
+            f"{report_path}: {len(regressed)}/{len(common)} measurements "
+            f"regressed beyond {tolerance_pct}% of {base_path}: "
+            + ", ".join(regressed)
+        )
+    print(
+        f"check_bench: OK: {len(common)} measurements within "
+        f"{tolerance_pct}% of baseline {base_path}"
+    )
+
+
+def _mk_report(items_per_s):
+    return {
+        "mode": "full",
+        "measurements": [
+            {
+                "name": name,
+                "reps": 5,
+                "min_s": 0.001,
+                "median_s": 0.002,
+                "mean_s": 0.002,
+                "items_per_s": thr,
+            }
+            for name, thr in items_per_s.items()
+        ],
+    }
+
+
+def selftest():
+    """Negative tests: the gate must trip on a regressed report and on a
+    vacuous (no-overlap) comparison, and pass a healthy report."""
+    base = _mk_report({"a/x": 1000.0, "b/y": 500.0, "c/null": None})
+    # healthy: within tolerance (10% slower, 20% gate)
+    gate(_mk_report({"a/x": 900.0, "b/y": 495.0}), "rep", base, "base", 20.0)
+    # regressed: 60% slower must fail a 20% gate
+    try:
+        gate(_mk_report({"a/x": 400.0, "b/y": 495.0}), "rep", base, "base", 20.0)
+    except CheckFailed as e:
+        assert "a/x" in str(e) and "regressed" in str(e), e
+    else:
+        raise AssertionError("regressed report passed the gate")
+    # vacuous: disjoint names must fail, not silently pass
+    try:
+        gate(_mk_report({"z/other": 1.0}), "rep", base, "base", 20.0)
+    except CheckFailed as e:
+        assert "no common measurement" in str(e), e
+    else:
+        raise AssertionError("disjoint report passed the gate")
+    # schema: the committed placeholder-style doc must be rejected
+    try:
+        check({"mode": "pending", "measurements": []}, "placeholder")
+    except CheckFailed:
+        pass
+    else:
+        raise AssertionError("pending placeholder passed the schema check")
+    # schema: a null-throughput entry is legal and excluded from gating
+    check(base, "base")
+    assert "c/null" not in throughputs(base)
+    print("check_bench: selftest OK")
+
+
 def main():
     args = sys.argv[1:]
+    if args == ["--selftest"]:
+        selftest()
+        return
     required = []
     paths = []
+    baseline = None
+    tolerance = None
     i = 0
     while i < len(args):
         if args[i] == "--require":
@@ -98,13 +219,38 @@ def main():
                 fail("--require needs a prefix")
             required.append(args[i + 1])
             i += 2
+        elif args[i] == "--baseline":
+            if i + 1 >= len(args):
+                fail("--baseline needs a file")
+            baseline = args[i + 1]
+            i += 2
+        elif args[i] == "--tolerance":
+            if i + 1 >= len(args):
+                fail("--tolerance needs a percentage")
+            try:
+                tolerance = float(args[i + 1])
+            except ValueError:
+                fail(f"--tolerance must be a number, got {args[i + 1]!r}")
+            i += 2
         else:
             paths.append(args[i])
             i += 1
-    if len(paths) != 1:
-        fail("usage: check_bench.py <bench-report.json> [--require PREFIX]...")
-    check(paths[0], required)
+    if len(paths) != 1 or (baseline is None) != (tolerance is None):
+        fail(
+            "usage: check_bench.py <bench-report.json> [--require PREFIX]... "
+            "[--baseline FILE --tolerance PCT] | check_bench.py --selftest"
+        )
+    doc = load(paths[0])
+    check(doc, paths[0], required)
+    if baseline is not None:
+        base_doc = load(baseline)
+        check(base_doc, baseline)
+        gate(doc, paths[0], base_doc, baseline, tolerance)
 
 
 if __name__ == "__main__":
-    main()
+    try:
+        main()
+    except CheckFailed as e:
+        print(str(e), file=sys.stderr)
+        sys.exit(1)

@@ -254,6 +254,25 @@ fn main() {
         std::hint::black_box(grcim::model::run_model(&mspec, &mcfg).unwrap());
     });
 
+    // attention block: per-head QK^T/A.V tile GEMMs around the exact
+    // digital softmax + the second calibration point (the `transformer:`
+    // preset hot path; throughput in useful MACs/s)
+    let mut aspec = grcim::model::ModelSpec::preset("transformer:32x2x1", 4).unwrap();
+    aspec.cfg.nr = 16;
+    aspec.cfg.nc = 8;
+    b.run_items("model/attn_block", 5, aspec.macs() as usize, || {
+        std::hint::black_box(grcim::model::run_model(&aspec, &mcfg).unwrap());
+    });
+
+    // im2col patch flattening alone (the conv-layer prologue; throughput
+    // in expanded GEMM-operand elements/s)
+    let cs = grcim::tile::ConvShape::parse("conv:16x8x3x3@32x32").unwrap();
+    let img: Vec<f32> = (0..cs.img_elems()).map(|i| (i % 37) as f32 * 0.03125).collect();
+    let expanded = cs.gemm_shape().m * cs.gemm_shape().k;
+    b.run_items("tile/im2col", 10, expanded, || {
+        std::hint::black_box(grcim::tile::im2col(&img, &cs).len());
+    });
+
     // analog substrate: full mismatch MC of Fig. 8
     let cell = grcim::analog::GrMacCell::fp6_e2m3_schematic();
     b.run_items("analog/mismatch_mc_1000", 5, 1000, || {

@@ -157,11 +157,18 @@ impl Default for LayerParams {
 impl LayerParams {
     /// Resolve into a runnable [`LayerSpec`]: input format FP(n_e, n_m)
     /// against max-entropy FP4 weights (the paper's sweep convention),
-    /// per-tile spec-solved ADCs, Table III technology parameters.
+    /// per-tile spec-solved ADCs, Table III technology parameters. A
+    /// `conv:` shape keeps its convolution geometry so the mapper draws
+    /// an image and im2col-expands it.
     pub fn resolve(&self) -> Result<LayerSpec> {
         check_format_bits(&format!("layer '{}'", self.shape), self.n_e, self.n_m)?;
         check_tile_geom(&format!("layer '{}'", self.shape), self.nr, self.nc)?;
         let shape = parse_shape(&self.shape, self.tokens)?;
+        let conv = if self.shape.starts_with("conv:") {
+            Some(crate::tile::ConvShape::parse(&self.shape)?)
+        } else {
+            None
+        };
         let fmt = FpFormat::fp(self.n_e as u32, self.n_m as u32);
         let w_fmt = FpFormat::fp4_e2m1();
         Ok(LayerSpec {
@@ -177,6 +184,7 @@ impl LayerParams {
             },
             dist_x: dist_by_name(&self.distribution, fmt)?,
             dist_w: Distribution::max_entropy(w_fmt),
+            conv,
         })
     }
 }
@@ -444,6 +452,21 @@ sampler = "stratified"
         assert_eq!(spec.cfg.fmts.x, FpFormat::fp(4, 2));
         assert_eq!(spec.cfg.adc, AdcPolicy::PerTileSpec);
         assert_eq!(spec.name, "mlp-up:64");
+        assert!(spec.conv.is_none());
+    }
+
+    #[test]
+    fn conv_layer_params_keep_their_conv_geometry() {
+        let p = LayerParams { shape: "conv:6x3x3x3@8x8".to_string(), ..Default::default() };
+        let spec = p.resolve().unwrap();
+        assert_eq!(spec.shape.m, 36);
+        assert_eq!(spec.shape.k, 27);
+        assert_eq!(spec.shape.n, 6);
+        let cs = spec.conv.expect("conv shapes must carry their geometry");
+        assert_eq!(cs.gemm_shape(), spec.shape);
+        assert!(LayerParams { shape: "conv:6x3x9x3@8x8".to_string(), ..Default::default() }
+            .resolve()
+            .is_err());
     }
 
     #[test]

@@ -41,9 +41,11 @@ COMMANDS:
   workload   analyze an empirical trace        grcim workload --trace t.grtt
   layer      layer-scale GEMM on the tiled array mapper
              grcim layer --shape mlp-up:4096 --arch gr [--tokens N]
+             (conv via im2col: --shape conv:<Cout>x<Cin>x<kH>x<kW>@<H>x<W>)
              [--nr N] [--nc N] [--ne N] [--nm N] [--dist NAME|empirical:t]
   model      chain tile layers into a full-network energy report
              grcim model --model mlp:<d0>x<d1>x...|block:<d>|<shape,...>
+             |transformer:<d>x<heads>x<layers>|decode:<d>x<heads>x<ctx>
              [--fit] [--tokens N] [--arch A] [--nr N] [--nc N] [--ne N]
              [--nm N] [--dist NAME|empirical:t]
   serve      resident campaign service (NDJSON/TCP, cached + coalesced)

@@ -1,0 +1,460 @@
+//! The real attention stage — QK^T and A·V as GR-MAC tile GEMMs with an
+//! exact digital softmax between them (retires documented substitution 8,
+//! the leading-K truncation stand-in; see `docs/THEORY.md`).
+//!
+//! One attention stage runs, per head `h` of `heads` (head width
+//! `d_h = d_model / heads`, score width `S` = tokens for prefill or the
+//! KV-cache depth `ctx` for decode):
+//!
+//! 1. **QK^T** — a `[M×d_h]·[d_h×S]` GEMM on the array (the K matrix is
+//!    weight-stationary), digitized like any other tile GEMM;
+//! 2. **softmax** — exact digital f32, row-wise max-subtracted
+//!    ([`softmax_rows_f32`]): this is the paper's "non-GEMM epilogue" —
+//!    it runs at full digital precision, so the analog arrays only ever
+//!    see the two GEMMs;
+//! 3. **requantization** — the probabilities are a *second* inter-layer
+//!    calibration point: one shared scale (max probability over every
+//!    head) re-encodes them to the array's input format before they can
+//!    drive the A·V DACs, tracked as `softmax_requant_db`;
+//! 4. **A·V** — a `[M×S]·[S×d_h]` GEMM (V weight-stationary), rescaled
+//!    into the real domain and written to the head's output columns.
+//!
+//! Prefill (`kv: None`) takes the fused QKV projection output as its
+//! input (`K = 3·d_model` columns per token: `[Q|K|V]`) and
+//! self-attends (`S = M`). Decode (`kv: Some`) takes the leading
+//! `d_model` columns (the Q slice — the chain's leading-K rule) and
+//! attends over a frozen KV cache of `ctx` entries; the current token's
+//! K/V are not appended (steady-state decode accounting, one token
+//! against a long context).
+//!
+//! The combined [`LayerReport`] concatenates every sub-GEMM's tiles
+//! (`kt` = sub-GEMM index, QK^T heads first then A·V heads; `nt` = tile
+//! index within the sub-GEMM) under the virtual shape `M×(2S)×d_model`,
+//! whose MAC count `2·M·S·d_model` is exactly the attention arithmetic —
+//! so the model-level energy-reconciliation and MAC-coverage invariants
+//! hold unchanged.
+
+use super::exec::{Runner, Stage};
+use crate::tile::{GemmShape, LayerReport};
+use crate::util::db;
+use anyhow::{bail, Result};
+
+/// The attention configuration of a [`Stage`] (stages without one are
+/// plain GEMM layers).
+#[derive(Debug, Clone)]
+pub struct AttnSpec {
+    /// Attention heads (`d_model % heads == 0`).
+    pub heads: usize,
+    /// Decode-phase KV cache; `None` = prefill self-attention.
+    pub kv: Option<AttnKvCache>,
+}
+
+/// A frozen decode-phase KV cache: `ctx` cached tokens, full-scale
+/// values (the executor rescales queries only).
+#[derive(Debug, Clone)]
+pub struct AttnKvCache {
+    /// Cached context length (the score width S).
+    pub ctx: usize,
+    /// Cached keys, row-major `[ctx][d_model]`.
+    pub k: Vec<f32>,
+    /// Cached values, row-major `[ctx][d_model]`.
+    pub v: Vec<f32>,
+}
+
+/// One executed attention stage.
+#[derive(Debug, Clone)]
+pub struct AttnOutcome {
+    /// Combined report over every sub-GEMM's tiles (virtual shape
+    /// `M×(2S)×d_model`).
+    pub report: LayerReport,
+    /// Real-domain attention outputs, row-major `[M][d_model]`.
+    pub y: Vec<f64>,
+    /// SQNR of the post-softmax requantization (the second calibration
+    /// point), dB.
+    pub softmax_requant_db: f64,
+}
+
+/// In-place row-wise softmax over `rows.len() / cols` rows of `cols`
+/// values: exact digital f32, max-subtracted (`exp` evaluated in f64 on
+/// the exactly-representable f32 difference, rounded back — the form
+/// the Python twin reproduces bit-for-bit).
+pub fn softmax_rows_f32(rows: &mut [f32], cols: usize) {
+    assert!(cols > 0 && rows.len() % cols == 0, "rows must be a whole number of columns");
+    for row in rows.chunks_mut(cols) {
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = ((*v - mx) as f64).exp() as f32;
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// In-place row-wise f64 softmax (the reference chains).
+fn softmax_row_f64(row: &mut [f64]) {
+    let mx = row.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0f64;
+    for v in row.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    for v in row.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// Validate an attention stage's geometry (called from the executor's
+/// stage validation).
+pub(crate) fn validate_attn_stage(model: &str, st: &Stage) -> Result<()> {
+    let Some(spec) = &st.attn else {
+        return Ok(());
+    };
+    let (k, d) = (st.shape.k, st.shape.n);
+    if st.conv.is_some() {
+        bail!("model '{model}': stage '{}' cannot be both attention and conv", st.name);
+    }
+    if !st.wt.is_empty() {
+        bail!(
+            "model '{model}': attention stage '{}' takes no weight slab ({} values given)",
+            st.name,
+            st.wt.len()
+        );
+    }
+    if st.bias.is_some() || st.relu {
+        bail!("model '{model}': attention stage '{}' takes no bias/ReLU epilogue", st.name);
+    }
+    if spec.heads == 0 || d % spec.heads != 0 {
+        bail!(
+            "model '{model}': attention stage '{}': d_model {d} is not divisible into {} heads",
+            st.name,
+            spec.heads
+        );
+    }
+    match &spec.kv {
+        None => {
+            if k != 3 * d {
+                bail!(
+                    "model '{model}': prefill attention stage '{}' consumes the fused QKV \
+                     output, so K must be 3*d_model (got K={k}, d_model={d})",
+                    st.name
+                );
+            }
+        }
+        Some(kv) => {
+            if k != d {
+                bail!(
+                    "model '{model}': decode attention stage '{}' consumes the Q slice, \
+                     so K must equal d_model (got K={k}, d_model={d})",
+                    st.name
+                );
+            }
+            if kv.ctx == 0 {
+                bail!("model '{model}': decode attention stage '{}': ctx must be positive", st.name);
+            }
+            if kv.k.len() != kv.ctx * d || kv.v.len() != kv.ctx * d {
+                bail!(
+                    "model '{model}': decode attention stage '{}': KV cache needs {} values \
+                     per tensor (ctx {} x d_model {d}), got K={} V={}",
+                    st.name,
+                    kv.ctx * d,
+                    kv.ctx,
+                    kv.k.len(),
+                    kv.v.len()
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run one attention stage over the requantized inputs `xq` (row-major
+/// `[M][K]`, the stage's first calibration at scale `a_scale`). Every
+/// sub-GEMM routes through `runner` like any other layer, so attention
+/// results are bit-identical at any worker count.
+pub fn run_attention(
+    runner: &Runner<'_>,
+    st: &Stage,
+    xq: &[f32],
+    a_scale: f64,
+    with_reference: bool,
+) -> Result<AttnOutcome> {
+    let spec = st.attn.as_ref().expect("run_attention needs an attention stage");
+    let (m, k_in, d) = (st.shape.m, st.shape.k, st.shape.n);
+    let heads = spec.heads;
+    let dh = d / heads;
+    // prefill reads K/V out of the fused [Q|K|V] input (both carry the
+    // stage's activation scale); decode reads the full-scale KV cache
+    let (s_len, k_scale, v_scale) = match &spec.kv {
+        None => (m, a_scale, a_scale),
+        Some(kv) => (kv.ctx, 1.0, 1.0),
+    };
+    let sqrt_dh = (dh as f64).sqrt();
+
+    // ---- phase A: QK^T per head (K weight-stationary), then softmax ----
+    let mut sub_reports: Vec<LayerReport> = Vec::with_capacity(2 * heads);
+    let mut probs = vec![0.0f32; heads * m * s_len];
+    for h in 0..heads {
+        let c0 = h * dh;
+        let mut q = vec![0.0f32; m * dh];
+        for mi in 0..m {
+            for c in 0..dh {
+                q[mi * dh + c] = xq[mi * k_in + c0 + c];
+            }
+        }
+        let mut kt = vec![0.0f32; s_len * dh];
+        match &spec.kv {
+            None => {
+                for j in 0..s_len {
+                    for c in 0..dh {
+                        kt[j * dh + c] = xq[j * k_in + d + c0 + c];
+                    }
+                }
+            }
+            Some(kv) => {
+                for j in 0..s_len {
+                    for c in 0..dh {
+                        kt[j * dh + c] = kv.k[j * d + c0 + c];
+                    }
+                }
+            }
+        }
+        let shape = GemmShape { m, k: dh, n: s_len };
+        let res =
+            runner.run(&format!("{}.qk{h}", st.name), &st.cfg, shape, &q, &kt, with_reference)?;
+        // real-scale scores, cast to the digital f32 softmax domain
+        let base = h * m * s_len;
+        for (i, y) in res.y.iter().enumerate() {
+            probs[base + i] = (y * a_scale * k_scale / sqrt_dh) as f32;
+        }
+        softmax_rows_f32(&mut probs[base..base + m * s_len], s_len);
+        sub_reports.push(res.report);
+    }
+
+    // ---- second calibration point: requantize the probabilities ----
+    // one shared scale across every head, mirroring the executor's
+    // per-tensor (not per-row) calibration convention
+    let mut a2 = 0.0f64;
+    for &p in &probs {
+        a2 = a2.max(p as f64);
+    }
+    let a2_scale = a2.max(1e-12);
+    let fmt = st.cfg.fmts.x;
+    let mut pq = vec![0.0f32; probs.len()];
+    let mut sig = 0.0f64;
+    let mut err = 0.0f64;
+    for (slot, &p) in pq.iter_mut().zip(&probs) {
+        let s = p as f64 / a2_scale;
+        let q = fmt.quantize(s as f32 as f64) as f32;
+        *slot = q;
+        sig += s * s;
+        let e = q as f64 - s;
+        err += e * e;
+    }
+    let softmax_requant_db = db(sig.max(1e-300) / err.max(1e-300));
+
+    // ---- phase B: A·V per head (V weight-stationary) ----
+    let mut y_out = vec![0.0f64; m * d];
+    for h in 0..heads {
+        let c0 = h * dh;
+        let mut vt = vec![0.0f32; dh * s_len];
+        match &spec.kv {
+            None => {
+                for o in 0..dh {
+                    for j in 0..s_len {
+                        vt[o * s_len + j] = xq[j * k_in + 2 * d + c0 + o];
+                    }
+                }
+            }
+            Some(kv) => {
+                for o in 0..dh {
+                    for j in 0..s_len {
+                        vt[o * s_len + j] = kv.v[j * d + c0 + o];
+                    }
+                }
+            }
+        }
+        let base = h * m * s_len;
+        let shape = GemmShape { m, k: s_len, n: dh };
+        let res = runner.run(
+            &format!("{}.av{h}", st.name),
+            &st.cfg,
+            shape,
+            &pq[base..base + m * s_len],
+            &vt,
+            with_reference,
+        )?;
+        for mi in 0..m {
+            for o in 0..dh {
+                y_out[mi * d + c0 + o] = res.y[mi * dh + o] * a2_scale * v_scale;
+            }
+        }
+        sub_reports.push(res.report);
+    }
+
+    // ---- stage SQNR: exact f64 attention over the same quantized
+    // operands (scores, softmax, and A·V at full precision, no ADC, no
+    // probability requantization) ----
+    let sqnr_db = if with_reference {
+        let mut sig = 0.0f64;
+        let mut err = 0.0f64;
+        let mut sc = vec![0.0f64; s_len];
+        for h in 0..heads {
+            let c0 = h * dh;
+            for mi in 0..m {
+                for (j, slot) in sc.iter_mut().enumerate() {
+                    let mut acc = 0.0f64;
+                    for c in 0..dh {
+                        let kvq = match &spec.kv {
+                            None => xq[j * k_in + d + c0 + c],
+                            Some(kv) => kv.k[j * d + c0 + c],
+                        };
+                        acc += xq[mi * k_in + c0 + c] as f64 * kvq as f64;
+                    }
+                    *slot = acc * a_scale * k_scale / sqrt_dh;
+                }
+                softmax_row_f64(&mut sc);
+                for o in 0..dh {
+                    let mut acc = 0.0f64;
+                    for (j, p) in sc.iter().enumerate() {
+                        let vvq = match &spec.kv {
+                            None => xq[j * k_in + 2 * d + c0 + o],
+                            Some(kv) => kv.v[j * d + c0 + o],
+                        };
+                        acc += p * (vvq as f64 * v_scale);
+                    }
+                    sig += acc * acc;
+                    let dlt = y_out[mi * d + c0 + o] - acc;
+                    err += dlt * dlt;
+                }
+            }
+        }
+        db(sig.max(1e-300) / err.max(1e-300))
+    } else {
+        f64::NAN
+    };
+
+    // ---- combined report: concatenate sub-GEMM tiles under the
+    // virtual M×(2S)×d shape (kt = sub-GEMM, nt = tile within it) ----
+    let mut tiles = Vec::new();
+    let mut tiles_fj = 0.0f64;
+    let mut reduction_fj = 0.0f64;
+    let mut global_norm_fj = 0.0f64;
+    let mut max_sub_tiles = 0usize;
+    for (g, r) in sub_reports.iter().enumerate() {
+        max_sub_tiles = max_sub_tiles.max(r.tiles.len());
+        for (i, t) in r.tiles.iter().enumerate() {
+            let mut t = *t;
+            t.kt = g;
+            t.nt = i;
+            tiles.push(t);
+        }
+        tiles_fj += r.tiles_fj;
+        reduction_fj += r.reduction_fj;
+        global_norm_fj += r.global_norm_fj;
+    }
+    let report = LayerReport {
+        name: st.name.clone(),
+        shape: GemmShape { m, k: 2 * s_len, n: d },
+        cfg: st.cfg,
+        row_tiles: 2 * heads,
+        col_tiles: max_sub_tiles,
+        tiles,
+        tiles_fj,
+        reduction_fj,
+        global_norm_fj,
+        sqnr_db,
+    };
+    Ok(AttnOutcome { report, y: y_out, softmax_requant_db })
+}
+
+/// The float reference of one attention stage: exact f64 attention over
+/// the *unquantized* reference activations `r` (row-major `[M][width]`,
+/// leading-K rule applied) and the raw KV cache — the reference chain's
+/// counterpart of [`run_attention`].
+pub(crate) fn attention_reference(st: &Stage, r: &[f64], width: usize) -> Vec<f64> {
+    let spec = st.attn.as_ref().expect("attention_reference needs an attention stage");
+    let (m, d) = (st.shape.m, st.shape.n);
+    let heads = spec.heads;
+    let dh = d / heads;
+    let s_len = spec.kv.as_ref().map_or(m, |kv| kv.ctx);
+    let sqrt_dh = (dh as f64).sqrt();
+    let mut out = vec![0.0f64; m * d];
+    let mut sc = vec![0.0f64; s_len];
+    for h in 0..heads {
+        let c0 = h * dh;
+        for mi in 0..m {
+            for (j, slot) in sc.iter_mut().enumerate() {
+                let mut acc = 0.0f64;
+                for c in 0..dh {
+                    let kv = match &spec.kv {
+                        None => r[j * width + d + c0 + c],
+                        Some(cache) => cache.k[j * d + c0 + c] as f64,
+                    };
+                    acc += r[mi * width + c0 + c] * kv;
+                }
+                *slot = acc / sqrt_dh;
+            }
+            softmax_row_f64(&mut sc);
+            for o in 0..dh {
+                let mut acc = 0.0f64;
+                for (j, p) in sc.iter().enumerate() {
+                    let vv = match &spec.kv {
+                        None => r[j * width + 2 * d + c0 + o],
+                        Some(cache) => cache.v[j * d + c0 + o] as f64,
+                    };
+                    acc += p * vv;
+                }
+                out[mi * d + c0 + o] = acc;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_peak_at_the_max() {
+        let mut rows = vec![0.5f32, 1.5, -0.25, 2.0, /* row 2 */ 3.0, 3.0, 3.0, 3.0];
+        softmax_rows_f32(&mut rows, 4);
+        for row in rows.chunks(4) {
+            let sum: f64 = row.iter().map(|&v| v as f64).sum();
+            assert!((sum - 1.0).abs() < 1e-6, "sum {sum}");
+        }
+        // the max score takes the largest probability
+        let mx = rows[..4].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert_eq!(rows[3], mx);
+        // a constant row is exactly uniform (exp(0) = 1 for every entry)
+        for &p in &rows[4..] {
+            assert_eq!(p, 0.25);
+        }
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant() {
+        // max subtraction makes the f32 softmax exactly shift-invariant
+        // for shifts that keep every difference identical
+        let base = [0.5f32, -1.0, 2.0, 0.0];
+        let mut a: Vec<f32> = base.to_vec();
+        let mut b: Vec<f32> = base.iter().map(|v| v + 4.0).collect();
+        softmax_rows_f32(&mut a, 4);
+        softmax_rows_f32(&mut b, 4);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn f64_softmax_normalizes() {
+        let mut row = vec![0.1f64, -3.0, 1.25];
+        softmax_row_f64(&mut row);
+        let sum: f64 = row.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert!(row.iter().all(|&p| p > 0.0));
+    }
+}

@@ -14,11 +14,16 @@
 //!
 //! This module closes that gap:
 //!
-//! * [`ModelSpec`] / [`parse_model`] — a named sequence of GEMM layers:
+//! * [`ModelSpec`] / [`parse_model`] — a named sequence of layers:
 //!   `mlp:<d0>x<d1>x...` MLP presets, the `block:<d_model>` transformer
 //!   block (expanding to the [`crate::tile::parse_shape`] names
-//!   `qkv`/`attn-out`/`mlp-up`/`mlp-down`), or an explicit comma list of
-//!   shape strings;
+//!   `qkv`/`attn-out`/`mlp-up`/`mlp-down`), multi-head
+//!   `transformer:<d_model>x<heads>x<layers>` blocks with *real*
+//!   attention stages ([`attn`]: QK^T and A·V as tile GEMMs around an
+//!   exact digital f32 softmax), the decode-phase
+//!   `decode:<d_model>x<heads>x<ctx>` KV-cache GEMV scenario, or an
+//!   explicit comma list of shape strings (`conv:` entries run through
+//!   the [`crate::tile::im2col`] flattener);
 //! * [`exec`] — the layer-by-layer executor: per-layer static
 //!   calibration (max-|x| scale), inter-layer requantization to the
 //!   input format, optional per-layer [`crate::workload::EmpiricalDist`]
@@ -61,8 +66,10 @@
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 
+pub mod attn;
 pub mod exec;
 
+pub use attn::{run_attention, softmax_rows_f32, AttnKvCache, AttnOutcome, AttnSpec};
 pub use exec::{forward_stages, run_model, ForwardOpts, Runner, Stage, MODEL_STREAM};
 
 use crate::distributions::Distribution;
@@ -70,7 +77,10 @@ use crate::energy::{energy_per_op, CimArch, TechParams};
 use crate::formats::FpFormat;
 use crate::mac::FormatPair;
 use crate::report::{FigureResult, Table};
-use crate::tile::{parse_shape, AdcPolicy, GemmShape, LayerReport, TileConfig, MAX_TILE_ENOB};
+use crate::tile::shapes::MAX_DIM;
+use crate::tile::{
+    parse_shape, AdcPolicy, ConvShape, GemmShape, LayerReport, TileConfig, MAX_TILE_ENOB,
+};
 use anyhow::{bail, Context, Result};
 
 /// Largest number of layers one model may chain — bounds serve-side work
@@ -79,17 +89,89 @@ use anyhow::{bail, Context, Result};
 /// rejected long before that by the serve MAC cap).
 pub const MAX_MODEL_LAYERS: usize = 64;
 
-/// One GEMM layer of a model: a label, its dimensions, and an optional
-/// per-layer format override (layers without one use the model's base
-/// [`TileConfig`] formats).
+/// What a model layer computes — a plain GEMM, an im2col-flattened
+/// convolution, or a real attention stage (QK^T / softmax / A·V, see
+/// [`attn`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// A plain GEMM (the original model-layer kind).
+    Gemm,
+    /// An im2col-flattened convolution; `shape` is its
+    /// [`ConvShape::gemm_shape`]. Only valid as the first layer (the
+    /// model input is the image).
+    Conv(ConvShape),
+    /// A multi-head attention stage. `ctx: None` = prefill
+    /// self-attention over the fused QKV input (`K = 3·d_model`,
+    /// score width `S = M`); `ctx: Some(c)` = decode over a frozen KV
+    /// cache of `c` entries (`K = d_model`, the Q slice).
+    Attention {
+        /// Attention heads (`d_model % heads == 0`).
+        heads: usize,
+        /// Decode-phase KV-cache depth; `None` = prefill.
+        ctx: Option<usize>,
+    },
+}
+
+/// One layer of a model: a label, its dimensions, its kind, and an
+/// optional per-layer format override (layers without one use the
+/// model's base [`TileConfig`] formats).
 #[derive(Debug, Clone)]
 pub struct ModelLayer {
     /// Layer label (reports only; not part of seeding or cache identity).
     pub name: String,
-    /// GEMM dimensions (`m` is the shared token/batch dimension).
+    /// GEMM dimensions (`m` is the shared token/batch dimension). For
+    /// attention this is the *chain* shape (`K` consumed features, `N`
+    /// produced features); the arithmetic is [`ModelLayer::macs`].
     pub shape: GemmShape,
+    /// What the layer computes.
+    pub kind: LayerKind,
     /// Per-layer input/weight format override.
     pub fmts: Option<FormatPair>,
+}
+
+impl ModelLayer {
+    /// True multiply-accumulates of this layer (saturating). GEMM/conv:
+    /// the flattened GEMM's MACs. Attention: `2·M·S·d_model` (QK^T plus
+    /// A·V over score width `S` = ctx for decode, `M` for prefill) —
+    /// matching the virtual `M×(2S)×d_model` shape its combined
+    /// [`LayerReport`] carries.
+    pub fn macs(&self) -> u64 {
+        match self.kind {
+            LayerKind::Attention { ctx, .. } => {
+                let s = ctx.unwrap_or(self.shape.m) as u64;
+                2u64.saturating_mul(self.shape.m as u64)
+                    .saturating_mul(s)
+                    .saturating_mul(self.shape.n as u64)
+            }
+            _ => self.shape.macs(),
+        }
+    }
+
+    /// Peak operand-slab elements the executor materializes for this
+    /// layer (saturating) — what the serve layer's slab cap audits.
+    /// Attention grows with `S` twice over: the KV cache (decode) and
+    /// the per-head probability matrices (`heads·M·S`, held twice: raw
+    /// and requantized) — the O(ctx²) blow-up the caps must see.
+    pub fn slab_elems(&self) -> u64 {
+        let (m, k, n) = (self.shape.m as u64, self.shape.k as u64, self.shape.n as u64);
+        let sum = |vals: &[u64]| vals.iter().fold(0u64, |a, &v| a.saturating_add(v));
+        match self.kind {
+            LayerKind::Gemm => sum(&[m.saturating_mul(k), n.saturating_mul(k), m.saturating_mul(n)]),
+            LayerKind::Conv(cs) => sum(&[
+                cs.img_elems() as u64,
+                m.saturating_mul(k),
+                n.saturating_mul(k),
+                m.saturating_mul(n),
+            ]),
+            LayerKind::Attention { heads, ctx } => {
+                let s = ctx.map_or(m, |c| c as u64);
+                let kv = if ctx.is_some() { 2u64.saturating_mul(s).saturating_mul(n) } else { 0 };
+                let probs =
+                    2u64.saturating_mul(heads as u64).saturating_mul(m).saturating_mul(s);
+                sum(&[m.saturating_mul(k), m.saturating_mul(n), kv, probs])
+            }
+        }
+    }
 }
 
 /// A full model evaluation request: the layer chain, the array
@@ -144,9 +226,10 @@ impl ModelSpec {
     }
 
     /// Total useful MACs over the chain (saturating; bounded by
-    /// [`MAX_MODEL_LAYERS`] x the per-shape bound).
+    /// [`MAX_MODEL_LAYERS`] x the per-shape bound), per-kind via
+    /// [`ModelLayer::macs`] — attention counts `2·M·S·d_model`.
     pub fn macs(&self) -> u64 {
-        self.layers.iter().fold(0u64, |acc, l| acc.saturating_add(l.shape.macs()))
+        self.layers.iter().fold(0u64, |acc, l| acc.saturating_add(l.macs()))
     }
 
     /// The effective [`TileConfig`] of one layer (base config with the
@@ -160,23 +243,58 @@ impl ModelSpec {
     }
 }
 
+/// Parse an `<a>x<b>x<c>` triple (the `transformer:` / `decode:`
+/// preset arguments).
+fn parse_triple(s: &str, arg: &str, what: &str) -> Result<(usize, usize, usize)> {
+    let dims: Vec<usize> = arg
+        .split('x')
+        .map(|d| {
+            d.parse::<usize>().with_context(|| format!("model '{s}': '{d}' is not a dimension"))
+        })
+        .collect::<Result<_>>()?;
+    let &[a, b, c] = dims.as_slice() else {
+        bail!("model '{s}' needs exactly three dims, '{what}'");
+    };
+    Ok((a, b, c))
+}
+
+/// Validate a `(d_model, heads)` pair shared by the attention presets.
+fn check_heads(s: &str, d: usize, heads: usize) -> Result<()> {
+    if heads == 0 {
+        bail!("model '{s}': heads must be positive");
+    }
+    if d == 0 || d % heads != 0 {
+        bail!("model '{s}': d_model {d} is not divisible into {heads} heads");
+    }
+    Ok(())
+}
+
 /// Parse a model string into its layer chain:
 ///
 /// | value | layers |
 /// |---|---|
 /// | `mlp:<d0>x<d1>x...x<dk>` | `fc<i>: [tokens x d_{i-1}] . [d_{i-1} x d_i]` (k >= 2 dims) |
 /// | `block:<d>` | `qkv:<d>, attn-out:<d>, mlp-up:<d>, mlp-down:<d>` |
-/// | `<shape>,<shape>,...` | explicit [`parse_shape`] entries |
+/// | `transformer:<d>x<h>x<L>` | `L` blocks of `qkv`, `<h>`-head prefill attention, `attn-out`, `mlp-up`, `mlp-down` |
+/// | `decode:<d>x<h>x<ctx>` | `qkv`, `<h>`-head decode attention over a `ctx`-deep KV cache, `attn-out` |
+/// | `<shape>,<shape>,...` | explicit [`parse_shape`] entries (`conv:` entries keep their geometry) |
 ///
 /// Chaining rule: every layer's reduction width `K` must not exceed the
 /// previous layer's output width `N` (`K < N` feeds the leading `K`
-/// features — the documented truncation that stands in for attention
-/// between `qkv` and `attn-out`; see `docs/THEORY.md`), and every layer
-/// shares the token dimension `M`.
+/// features — for decode attention after `qkv` that *is* the Q slice;
+/// see `docs/THEORY.md`), every layer shares the token dimension `M`,
+/// and a `conv:` layer may only come first (the model input is its
+/// image).
 pub fn parse_model(s: &str, tokens: usize) -> Result<Vec<ModelLayer>> {
     if tokens == 0 {
         bail!("tokens must be positive");
     }
+    let gemm = |name: String, shape: GemmShape| ModelLayer {
+        name,
+        shape,
+        kind: LayerKind::Gemm,
+        fmts: None,
+    };
     let layers: Vec<ModelLayer> = if let Some(arg) = s.strip_prefix("mlp:") {
         let dims: Vec<usize> = arg
             .split('x')
@@ -193,7 +311,7 @@ pub fn parse_model(s: &str, tokens: usize) -> Result<Vec<ModelLayer>> {
             .map(|(i, d)| {
                 // parse_shape re-validates positivity and the 2^20 bound
                 let shape = parse_shape(&format!("gemm:{tokens}x{}x{}", d[0], d[1]), 1)?;
-                Ok(ModelLayer { name: format!("fc{i}"), shape, fmts: None })
+                Ok(gemm(format!("fc{i}"), shape))
             })
             .collect::<Result<_>>()?
     } else if let Some(arg) = s.strip_prefix("block:") {
@@ -202,16 +320,67 @@ pub fn parse_model(s: &str, tokens: usize) -> Result<Vec<ModelLayer>> {
             .map(|kind| {
                 let name = format!("{kind}:{arg}");
                 let shape = parse_shape(&name, tokens)?;
-                Ok(ModelLayer { name, shape, fmts: None })
+                Ok(gemm(name, shape))
             })
             .collect::<Result<_>>()?
+    } else if let Some(arg) = s.strip_prefix("transformer:") {
+        let (d, heads, blocks) = parse_triple(s, arg, "transformer:<d_model>x<heads>x<layers>")?;
+        check_heads(s, d, heads)?;
+        if blocks == 0 {
+            bail!("model '{s}': layer count must be positive");
+        }
+        let mut layers = Vec::with_capacity(5 * blocks.min(MAX_MODEL_LAYERS));
+        for bi in 0..blocks {
+            // the projections reuse the named shapes (bounds included);
+            // the attention stage consumes the fused QKV output
+            for kind in ["qkv", "attn-out", "mlp-up", "mlp-down"] {
+                let shape = parse_shape(&format!("{kind}:{d}"), tokens)?;
+                if kind == "attn-out" {
+                    layers.push(ModelLayer {
+                        name: format!("b{bi}.attn"),
+                        shape: GemmShape { m: tokens, k: 3 * d, n: d },
+                        kind: LayerKind::Attention { heads, ctx: None },
+                        fmts: None,
+                    });
+                }
+                layers.push(gemm(format!("b{bi}.{kind}"), shape));
+            }
+            if layers.len() > MAX_MODEL_LAYERS {
+                break; // the shared bound below reports the error
+            }
+        }
+        layers
+    } else if let Some(arg) = s.strip_prefix("decode:") {
+        let (d, heads, ctx) = parse_triple(s, arg, "decode:<d_model>x<heads>x<ctx>")?;
+        check_heads(s, d, heads)?;
+        if ctx == 0 {
+            bail!("model '{s}': ctx must be positive");
+        }
+        if ctx > MAX_DIM {
+            bail!("model '{s}': ctx must be <= {MAX_DIM}");
+        }
+        vec![
+            gemm("qkv".to_string(), parse_shape(&format!("qkv:{d}"), tokens)?),
+            ModelLayer {
+                name: "decode-attn".to_string(),
+                shape: GemmShape { m: tokens, k: d, n: d },
+                kind: LayerKind::Attention { heads, ctx: Some(ctx) },
+                fmts: None,
+            },
+            gemm("attn-out".to_string(), parse_shape(&format!("attn-out:{d}"), tokens)?),
+        ]
     } else {
         s.split(',')
             .map(str::trim)
             .filter(|e| !e.is_empty())
             .map(|e| {
                 let shape = parse_shape(e, tokens)?;
-                Ok(ModelLayer { name: e.to_string(), shape, fmts: None })
+                let kind = if e.starts_with("conv:") {
+                    LayerKind::Conv(ConvShape::parse(e)?)
+                } else {
+                    LayerKind::Gemm
+                };
+                Ok(ModelLayer { name: e.to_string(), shape, kind, fmts: None })
             })
             .collect::<Result<_>>()?
     };
@@ -241,6 +410,13 @@ pub fn check_chain(what: &str, layers: &[ModelLayer]) -> Result<()> {
             );
         }
         if i > 0 {
+            if matches!(l.kind, LayerKind::Conv(_)) {
+                bail!(
+                    "model '{what}': layer {i} ('{}') is a conv layer, which may only \
+                     come first (the model input is its image)",
+                    l.name
+                );
+            }
             let prev = layers[i - 1].shape.n;
             if l.shape.k > prev {
                 bail!(
@@ -285,6 +461,10 @@ pub struct LayerOutcome {
     /// SQNR of the inter-layer requantization to the input format, dB
     /// (scaled activations vs their format-quantized f32 encoding).
     pub requant_sqnr_db: f64,
+    /// SQNR of the post-softmax probability requantization, dB — the
+    /// second calibration point that only attention stages have
+    /// (`None` for plain GEMM / conv layers).
+    pub softmax_requant_db: Option<f64>,
     /// Fit summary of the activations feeding this layer (when
     /// [`ModelSpec::fit_activations`] is set and the fit succeeds).
     pub act_stats: Option<ActStats>,
@@ -329,6 +509,12 @@ impl ModelReport {
     /// Energy per operation (one MAC = two ops, the paper's convention).
     pub fn fj_per_op(&self) -> f64 {
         self.fj_per_mac() / 2.0
+    }
+
+    /// Energy per generated token, fJ — the decode-phase figure of
+    /// merit (total energy over the shared token dimension `M`).
+    pub fn fj_per_token(&self) -> f64 {
+        self.total_fj() / self.tokens as f64
     }
 
     /// CIM-minus-float classification-accuracy delta (trained-MLP path).
@@ -384,6 +570,7 @@ impl ModelReport {
         kv("total_fj", Table::f(self.total_fj()));
         kv("fj_per_mac", Table::f(self.fj_per_mac()));
         kv("fj_per_op", Table::f(self.fj_per_op()));
+        kv("fj_per_token", Table::f(self.fj_per_token()));
         if let (Some(f), Some(c)) = (self.accuracy_float, self.accuracy_cim) {
             kv("accuracy_float", Table::f(f));
             kv("accuracy_cim", Table::f(c));
@@ -394,8 +581,8 @@ impl ModelReport {
         let mut layers = Table::new(
             "layers",
             &[
-                "layer", "shape", "tiles", "enob_mean", "sqnr_db", "requant_db", "act_dr_bits",
-                "act_outliers", "total_fj", "fj_per_mac",
+                "layer", "shape", "tiles", "enob_mean", "sqnr_db", "requant_db", "softmax_db",
+                "act_dr_bits", "act_outliers", "total_fj", "fj_per_mac",
             ],
         );
         for l in &self.layers {
@@ -404,6 +591,10 @@ impl ModelReport {
                 Some(s) => (Table::f(s.dr_bits), Table::f(s.outlier_mass)),
                 None => ("-".into(), "-".into()),
             };
+            let softmax_db = match l.softmax_requant_db {
+                Some(v) => Table::f(v),
+                None => "-".into(),
+            };
             layers.row(vec![
                 r.name.clone(),
                 r.shape.to_string(),
@@ -411,6 +602,7 @@ impl ModelReport {
                 Table::f(r.enob_mean()),
                 Table::f(r.sqnr_db),
                 Table::f(l.requant_sqnr_db),
+                softmax_db,
                 dr,
                 mass,
                 Table::f(r.total_fj()),
@@ -520,6 +712,99 @@ mod tests {
         assert_eq!(layers[2].shape, GemmShape { m: 2, k: 16, n: 64 });
         assert_eq!(layers[3].shape, GemmShape { m: 2, k: 64, n: 16 });
         assert!(!ModelSpec::preset("block:16", 2).unwrap().relu);
+    }
+
+    #[test]
+    fn transformer_preset_expands_to_attention_blocks() {
+        let layers = parse_model("transformer:64x4x2", 4).unwrap();
+        assert_eq!(layers.len(), 10);
+        for bi in 0..2 {
+            let b = &layers[5 * bi..5 * (bi + 1)];
+            assert_eq!(b[0].name, format!("b{bi}.qkv"));
+            assert_eq!(b[0].shape, GemmShape { m: 4, k: 64, n: 192 });
+            assert_eq!(b[1].name, format!("b{bi}.attn"));
+            assert_eq!(b[1].shape, GemmShape { m: 4, k: 192, n: 64 });
+            assert_eq!(b[1].kind, LayerKind::Attention { heads: 4, ctx: None });
+            assert_eq!(b[2].name, format!("b{bi}.attn-out"));
+            assert_eq!(b[2].shape, GemmShape { m: 4, k: 64, n: 64 });
+            assert_eq!(b[3].shape, GemmShape { m: 4, k: 64, n: 256 });
+            assert_eq!(b[4].shape, GemmShape { m: 4, k: 256, n: 64 });
+        }
+        // prefill attention MACs: 2·M·S·d with S = M
+        assert_eq!(layers[1].macs(), 2 * 4 * 4 * 64);
+        assert!(!ModelSpec::preset("transformer:64x4x2", 4).unwrap().relu);
+        // 1-head degenerate case still parses (distinct from block:)
+        let one = parse_model("transformer:64x1x2", 4).unwrap();
+        assert_eq!(one[1].kind, LayerKind::Attention { heads: 1, ctx: None });
+    }
+
+    #[test]
+    fn decode_preset_is_a_kv_cache_gemv_scenario() {
+        let layers = parse_model("decode:64x4x128", 1).unwrap();
+        assert_eq!(layers.len(), 3);
+        assert_eq!(layers[0].shape, GemmShape { m: 1, k: 64, n: 192 });
+        assert_eq!(layers[1].name, "decode-attn");
+        // decode consumes only the leading Q slice of the fused QKV
+        assert_eq!(layers[1].shape, GemmShape { m: 1, k: 64, n: 64 });
+        assert_eq!(layers[1].kind, LayerKind::Attention { heads: 4, ctx: Some(128) });
+        assert_eq!(layers[2].shape, GemmShape { m: 1, k: 64, n: 64 });
+        // decode attention MACs: 2·M·ctx·d
+        assert_eq!(layers[1].macs(), 2 * 128 * 64);
+    }
+
+    #[test]
+    fn malformed_attention_presets_are_clean_errors() {
+        for bad in [
+            "transformer:64x4",      // missing layer count
+            "transformer:64x4x2x1",  // too many dims
+            "transformer:64x0x2",    // zero heads
+            "transformer:63x4x2",    // d_model not divisible by heads
+            "transformer:0x1x2",     // zero d_model
+            "transformer:64x4x0",    // zero layers
+            "transformer:64x4x999",  // exceeds MAX_MODEL_LAYERS
+            "transformer:64xax2",    // non-numeric
+            "decode:64x4",           // missing ctx
+            "decode:64x0x16",        // zero heads
+            "decode:63x4x16",        // d_model not divisible
+            "decode:64x4x0",         // zero ctx
+            "decode:64x4x2097152",   // ctx beyond MAX_DIM
+        ] {
+            assert!(parse_model(bad, 4).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn conv_layers_only_lead_and_kinds_survive_lists() {
+        let layers = parse_model("conv:6x3x3x3@8x8,gemm:36x6x4", 1).unwrap();
+        assert_eq!(layers.len(), 2);
+        assert_eq!(layers[0].shape, GemmShape { m: 36, k: 27, n: 6 });
+        assert!(matches!(layers[0].kind, LayerKind::Conv(cs) if cs.gemm_shape() == layers[0].shape));
+        assert_eq!(layers[1].kind, LayerKind::Gemm);
+        // conv anywhere but first is rejected
+        let err =
+            parse_model("gemm:36x8x27, conv:6x3x3x3@8x8", 1).unwrap_err().to_string();
+        assert!(err.contains("only"), "{err}");
+        // conv slab accounting includes the image
+        assert_eq!(
+            layers[0].slab_elems(),
+            (8 * 8 * 3 + 36 * 27 + 6 * 27 + 36 * 6) as u64
+        );
+    }
+
+    #[test]
+    fn attention_slab_elems_see_the_ctx_squared_blowup() {
+        let prefill = parse_model("transformer:64x4x1", 4).unwrap();
+        // xq + output + 2·heads·M·S probs, no KV cache for prefill
+        assert_eq!(
+            prefill[1].slab_elems(),
+            (4 * 192 + 4 * 64 + 2 * 4 * 4 * 4) as u64
+        );
+        let decode = parse_model("decode:64x4x1024", 1).unwrap();
+        // Q + output + KV cache (2·ctx·d) + probs (2·heads·M·ctx)
+        assert_eq!(
+            decode[1].slab_elems(),
+            (64 + 64 + 2 * 1024 * 64 + 2 * 4 * 1024) as u64
+        );
     }
 
     #[test]

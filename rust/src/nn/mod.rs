@@ -293,6 +293,8 @@ pub fn mlp_stages(mlp: &Mlp, cfg: &CimInference, batch: usize) -> Vec<Stage> {
                 w_scale,
                 bias: Some(layer.b.clone()),
                 relu: li + 1 < layers,
+                attn: None,
+                conv: None,
             }
         })
         .collect()

@@ -145,65 +145,68 @@ fn arch_json(name: &str, enob: f64, b: &EnergyBreakdown) -> Json {
     ])
 }
 
+/// A typed cap/validation rejection — rendered as a `bad_request`
+/// error line by the dispatcher (see [`super::BadRequest`]).
+fn bad_request(msg: String) -> anyhow::Error {
+    anyhow::Error::new(super::BadRequest(msg))
+}
+
 /// The `layer` request's MAC and operand-slab caps (also applied, over
-/// the layer sum, by [`check_model_caps`]).
+/// the layer sum, by [`check_model_caps`]). Oversized shapes are a
+/// client mistake, so both caps reject with a typed `bad_request`.
 fn check_layer_caps(spec: &LayerSpec) -> Result<()> {
     if spec.shape.macs() > MAX_LAYER_MACS {
-        bail!(
+        return Err(bad_request(format!(
             "layer shape {} is too large for the service ({} MACs > {MAX_LAYER_MACS})",
             spec.shape,
             spec.shape.macs()
-        );
+        )));
     }
     // parse_shape bounds each dimension to 2^20, so these products
     // cannot overflow u64
     let x_elems = spec.shape.m as u64 * spec.shape.k as u64;
     let wt_elems = spec.shape.n as u64 * spec.shape.k as u64;
     if x_elems.max(wt_elems) > MAX_LAYER_ELEMS {
-        bail!(
+        return Err(bad_request(format!(
             "layer shape {} is too large for the service (operand slab \
              of {} elements > {MAX_LAYER_ELEMS})",
             spec.shape,
             x_elems.max(wt_elems)
-        );
+        )));
     }
     Ok(())
 }
 
 /// The `model` request's caps: the `layer` budgets applied across the
 /// **layer sum**, so chaining layers cannot smuggle in more compute or
-/// memory than one maximal layer gets.
+/// memory than one maximal layer gets. Per-kind accounting goes through
+/// [`crate::model::ModelLayer`]: attention layers charge `2·M·S·d` MACs
+/// and their slab counts the KV cache plus the per-head probability
+/// matrices (`2·heads·M·S`) — the O(ctx²) terms that make an oversized
+/// `decode:` request trip *here*, as a typed `bad_request`, instead of
+/// OOMing a worker.
 fn check_model_caps(spec: &ModelSpec) -> Result<()> {
     let total_macs = spec.macs();
     if total_macs > MAX_LAYER_MACS {
-        bail!(
+        return Err(bad_request(format!(
             "model '{}' is too large for the service ({total_macs} MACs across \
              {} layers > {MAX_LAYER_MACS})",
             spec.name,
             spec.layers.len()
-        );
+        )));
     }
-    // parse_shape bounds each dimension to 2^20, so these products
-    // cannot overflow u64. The slab cap applies to the **sum** of
-    // every layer's operand elements: run_model materializes all
-    // weight slabs for the whole run, so a per-layer cap would let a
-    // 64-layer chain allocate 64x the budget one maximal layer gets
-    let mut sum_elems = 0u64;
-    for l in &spec.layers {
-        let x_elems = l.shape.m as u64 * l.shape.k as u64;
-        let wt_elems = l.shape.n as u64 * l.shape.k as u64;
-        let act_elems = l.shape.m as u64 * l.shape.n as u64;
-        sum_elems = sum_elems
-            .saturating_add(x_elems)
-            .saturating_add(wt_elems)
-            .saturating_add(act_elems);
-    }
+    // the slab cap applies to the **sum** of every layer's operand
+    // elements: run_model materializes all weight slabs (and KV caches)
+    // for the whole run, so a per-layer cap would let a 64-layer chain
+    // allocate 64x the budget one maximal layer gets
+    let sum_elems =
+        spec.layers.iter().fold(0u64, |acc, l| acc.saturating_add(l.slab_elems()));
     if sum_elems > MAX_LAYER_ELEMS {
-        bail!(
+        return Err(bad_request(format!(
             "model '{}' is too large for the service (operand slabs \
              of {sum_elems} total elements > {MAX_LAYER_ELEMS})",
             spec.name
-        );
+        )));
     }
     Ok(())
 }

@@ -93,8 +93,27 @@ pub const MAX_LAYER_MACS: u64 = 1 << 36;
 /// may allocate — caps request *memory* independently of the MAC
 /// product (a skinny `gemm:1x1048576x65536` is only 2^36 MACs but would
 /// otherwise allocate a 256 GiB weight slab). 2^27 elements = 512 MiB;
-/// `mlp-up:4096` needs exactly 2^26.
+/// `mlp-up:4096` needs exactly 2^26. Model requests audit the same cap
+/// per layer through [`crate::model::ModelLayer::slab_elems`], which
+/// for attention layers counts the KV cache and the `heads·M·S`
+/// probability matrices — the O(ctx²) terms a decode request can blow
+/// up (`decode:1024x4x1000000` trips this cap, not a worker OOM).
 pub const MAX_LAYER_ELEMS: u64 = 1 << 27;
+
+/// A request rejected at validation time — malformed or over the serve
+/// caps. [`CampaignService::respond_with_status`] renders any error
+/// whose chain carries one of these as a typed `bad_request` line, so
+/// clients can tell "fix your request" from server-side failures.
+#[derive(Debug)]
+pub struct BadRequest(pub String);
+
+impl std::fmt::Display for BadRequest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for BadRequest {}
 
 /// Server construction parameters.
 #[derive(Debug, Clone)]
@@ -245,7 +264,14 @@ impl CampaignService {
     pub fn respond_with_status(&self, req: &Request) -> (String, bool) {
         match handlers::dispatch(self, req) {
             Ok((result, cached)) => (proto::ok_line(result, cached), true),
-            Err(e) => (proto::err_line(&format!("{e:#}")), false),
+            Err(e) => {
+                let kind = if e.chain().any(|c| c.downcast_ref::<BadRequest>().is_some()) {
+                    "bad_request"
+                } else {
+                    "error"
+                };
+                (proto::err_kind_line(kind, &format!("{e:#}")), false)
+            }
         }
     }
 

@@ -636,11 +636,24 @@ pub fn layer_key(spec: &LayerSpec, seed: u64, engine: &str) -> String {
     )
 }
 
-/// One canonical-key fragment per layer's effective configuration.
+/// One canonical-key fragment per layer's effective configuration. The
+/// kind tag keeps semantically different layers with identical chain
+/// shapes apart — `transformer:64x4x2`'s attention stages differ from
+/// `transformer:64x1x2`'s only in head count, and a `conv:` layer
+/// differs from its flattened `gemm:` only in operand layout, yet each
+/// pair produces different report bits.
 fn layer_fragment(spec: &ModelSpec, li: usize) -> String {
     let cfg = spec.layer_cfg(li);
+    let kind = match spec.layers[li].kind {
+        crate::model::LayerKind::Gemm => String::new(),
+        crate::model::LayerKind::Conv(cs) => format!("conv{}x{}x{}x{}@{}x{}:", cs.cout, cs.cin, cs.kh, cs.kw, cs.h, cs.w),
+        crate::model::LayerKind::Attention { heads, ctx } => match ctx {
+            None => format!("attn{heads}:"),
+            Some(c) => format!("attn{heads}c{c}:"),
+        },
+    };
     format!(
-        "{}@{}:{}:{}:{}",
+        "{kind}{}@{}:{}:{}:{}",
         spec.layers[li].shape,
         bits(cfg.fmts.x.e_max),
         bits(cfg.fmts.x.n_m),
@@ -1066,6 +1079,26 @@ mod tests {
         let mut norelu = base.resolve().unwrap();
         norelu.relu = false;
         assert_ne!(model_key(&norelu, 7, "rust"), k0);
+    }
+
+    #[test]
+    fn model_keys_separate_layer_kinds() {
+        let key = |model: &str, tokens: usize| {
+            let params =
+                ModelParams { model: model.into(), tokens, ..Default::default() };
+            model_key(&params.resolve().unwrap(), 7, "rust")
+        };
+        // head count changes nothing about the chain shapes, but the
+        // attention stages compute differently — the kind tag separates
+        assert_ne!(key("transformer:64x4x2", 4), key("transformer:64x1x2", 4));
+        // decode ctx is only visible through the kind tag (the chain
+        // shape is M×d×d regardless of cache depth)
+        assert_ne!(key("decode:64x4x128", 1), key("decode:64x4x256", 1));
+        // a conv layer and its flattened GEMM share chain shapes but
+        // not operand layout
+        assert_ne!(key("conv:6x3x3x3@8x8,gemm:36x6x4", 1), key("gemm:36x27x6,gemm:36x6x4", 1));
+        // prefill attention is not the old block: truncation stand-in
+        assert_ne!(key("transformer:64x1x1", 4), key("block:64", 4));
     }
 
     #[test]

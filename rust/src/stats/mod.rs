@@ -106,9 +106,32 @@ impl Histogram {
         }
     }
 
-    /// Fold another histogram with identical binning in.
+    /// True when `other` shares this histogram's exact bin layout —
+    /// same `lo`, same `hi` (bit-compared; the edges come from shared
+    /// constants, never arithmetic), same bin count — so their per-bin
+    /// counts mean the same intervals and may be added.
+    pub fn compatible(&self, other: &Histogram) -> bool {
+        self.lo.to_bits() == other.lo.to_bits()
+            && self.hi.to_bits() == other.hi.to_bits()
+            && self.counts.len() == other.counts.len()
+    }
+
+    /// Fold another histogram with identical binning in. Panics on a
+    /// bin-layout mismatch: merging histograms over different ranges
+    /// would silently attribute counts to the wrong intervals (a bin
+    /// index only names an interval relative to its own `lo`/`hi`), so
+    /// an aggregation bug must fail loudly, not skew the figure panels.
     pub fn merge(&mut self, other: &Histogram) {
-        assert_eq!(self.counts.len(), other.counts.len());
+        assert!(
+            self.compatible(other),
+            "histogram merge with mismatched bins: [{}, {}] x{} vs [{}, {}] x{}",
+            self.lo,
+            self.hi,
+            self.counts.len(),
+            other.lo,
+            other.hi,
+            other.counts.len()
+        );
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
             *a += b;
         }
@@ -409,6 +432,26 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.counts, vec![1, 1]);
         assert_eq!(a.total, 2);
+    }
+
+    #[test]
+    fn histogram_compatibility_checks_the_full_bin_layout() {
+        let base = Histogram::new(0.0, 1.0, 4);
+        assert!(base.compatible(&Histogram::new(0.0, 1.0, 4)));
+        // each layout ingredient separates
+        assert!(!base.compatible(&Histogram::new(0.5, 1.0, 4)));
+        assert!(!base.compatible(&Histogram::new(0.0, 2.0, 4)));
+        assert!(!base.compatible(&Histogram::new(0.0, 1.0, 8)));
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched bins")]
+    fn histogram_merge_rejects_mismatched_ranges() {
+        // same bin count but a different range: the old length-only
+        // check would silently add counts of disjoint intervals
+        let mut a = Histogram::new(0.0, 1.0, 4);
+        let b = Histogram::new(-1.0, 1.0, 4);
+        a.merge(&b);
     }
 
     fn tiny_batch() -> ColumnBatch {

@@ -1,0 +1,249 @@
+//! im2col flattener — convolution layers on the weight-stationary GEMM
+//! mapper, unchanged (the macro-level mapping IMAGINE-style CNN macros
+//! use).
+//!
+//! A valid-padding, stride-1 `Cout×Cin×kH×kW` convolution over an
+//! `H×W×Cin` image is exactly the GEMM
+//!
+//! ```text
+//! Y[(Ho·Wo) × Cout] = X[(Ho·Wo) × (Cin·kH·kW)] · W[(Cin·kH·kW) × Cout]
+//! ```
+//!
+//! where `Ho = H-kH+1`, `Wo = W-kW+1`, each X row is one receptive-field
+//! patch, and the weight tensor is flattened `[out, in·kH·kW]` — so the
+//! existing tile mapper, ADC spec rule, and energy composition apply
+//! verbatim; only the operand layout changes.
+//!
+//! Layout contract (pinned by the goldens and the 1x1-kernel property):
+//! images are HWC row-major (`img[(y*W + x)*Cin + c]`), and a patch
+//! column is ordered `(ky, kx, ci)`-major:
+//!
+//! ```text
+//! X[p][(ky·kW + kx)·Cin + ci] = img[((oy+ky)·W + ox+kx)·Cin + ci],
+//!     p = oy·Wo + ox
+//! ```
+//!
+//! A 1x1 kernel therefore makes [`im2col`] the identity reshape: the
+//! flattened X equals the flat image bit-for-bit, which is what lets
+//! `conv:<Cout>x<Cin>x1x1@<H>x<W>` reproduce `gemm:<H·W>x<Cin>x<Cout>`
+//! exactly through the whole stack (same draw count, same draw order).
+
+use super::shapes::MAX_DIM;
+use super::GemmShape;
+use anyhow::{bail, Context, Result};
+
+/// A valid-padding, stride-1 convolution workload:
+/// `conv:<Cout>x<Cin>x<kH>x<kW>@<H>x<W>`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvShape {
+    /// Output channels (GEMM N; one array column group per filter).
+    pub cout: usize,
+    /// Input channels.
+    pub cin: usize,
+    /// Kernel height.
+    pub kh: usize,
+    /// Kernel width.
+    pub kw: usize,
+    /// Image height.
+    pub h: usize,
+    /// Image width.
+    pub w: usize,
+}
+
+impl ConvShape {
+    /// Parse the `conv:` argument `<Cout>x<Cin>x<kH>x<kW>@<H>x<W>`
+    /// (everything after the `conv:` prefix); `full` is the original
+    /// string for error messages.
+    pub fn parse_args(arg: &str, full: &str) -> Result<ConvShape> {
+        let (filt, img) = arg.split_once('@').with_context(|| {
+            format!("shape '{full}' must be 'conv:<Cout>x<Cin>x<kH>x<kW>@<H>x<W>'")
+        })?;
+        let dims = |part: &str| -> Result<Vec<usize>> {
+            part.split('x')
+                .map(|d| {
+                    d.parse::<usize>()
+                        .with_context(|| format!("shape '{full}': '{d}' is not a dimension"))
+                })
+                .collect()
+        };
+        let &[cout, cin, kh, kw] = dims(filt)?.as_slice() else {
+            bail!("shape '{full}': filter needs exactly four dimensions, '<Cout>x<Cin>x<kH>x<kW>'");
+        };
+        let &[h, w] = dims(img)?.as_slice() else {
+            bail!("shape '{full}': image needs exactly two dimensions, '<H>x<W>'");
+        };
+        let cs = ConvShape { cout, cin, kh, kw, h, w };
+        cs.validate(full)?;
+        Ok(cs)
+    }
+
+    /// Parse a full `conv:<Cout>x<Cin>x<kH>x<kW>@<H>x<W>` string.
+    pub fn parse(s: &str) -> Result<ConvShape> {
+        let arg = s
+            .strip_prefix("conv:")
+            .with_context(|| format!("shape '{s}' must start with 'conv:'"))?;
+        ConvShape::parse_args(arg, s)
+    }
+
+    fn validate(&self, s: &str) -> Result<()> {
+        if [self.cout, self.cin, self.kh, self.kw, self.h, self.w].contains(&0) {
+            bail!("shape '{s}': dimensions must be positive");
+        }
+        if self.kh > self.h || self.kw > self.w {
+            bail!(
+                "shape '{s}': kernel {}x{} exceeds image {}x{} (valid padding)",
+                self.kh,
+                self.kw,
+                self.h,
+                self.w
+            );
+        }
+        // bound the *flattened* GEMM dims like shapes::bounded does, so
+        // GemmShape::macs cannot wrap and slab sizes stay inside usize
+        let m = self
+            .out_h()
+            .checked_mul(self.out_w())
+            .with_context(|| format!("shape '{s}': output plane overflows"))?;
+        let k = self
+            .cin
+            .checked_mul(self.kh)
+            .and_then(|v| v.checked_mul(self.kw))
+            .with_context(|| format!("shape '{s}': patch size overflows"))?;
+        if m > MAX_DIM || k > MAX_DIM || self.cout > MAX_DIM {
+            bail!("shape '{s}': flattened GEMM dimensions must be <= {MAX_DIM}");
+        }
+        if self.h.checked_mul(self.w).and_then(|v| v.checked_mul(self.cin)).is_none() {
+            bail!("shape '{s}': image size overflows");
+        }
+        Ok(())
+    }
+
+    /// Output plane height under valid padding, stride 1.
+    pub fn out_h(&self) -> usize {
+        self.h - self.kh + 1
+    }
+
+    /// Output plane width under valid padding, stride 1.
+    pub fn out_w(&self) -> usize {
+        self.w - self.kw + 1
+    }
+
+    /// The GEMM this convolution flattens to:
+    /// `M = Ho·Wo`, `K = Cin·kH·kW`, `N = Cout`.
+    pub fn gemm_shape(&self) -> GemmShape {
+        GemmShape {
+            m: self.out_h() * self.out_w(),
+            k: self.cin * self.kh * self.kw,
+            n: self.cout,
+        }
+    }
+
+    /// Elements of the HWC input image (`H·W·Cin`) — what the workload
+    /// generator draws before [`im2col`] expands it.
+    pub fn img_elems(&self) -> usize {
+        self.h * self.w * self.cin
+    }
+}
+
+impl std::fmt::Display for ConvShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "conv:{}x{}x{}x{}@{}x{}",
+            self.cout, self.cin, self.kh, self.kw, self.h, self.w
+        )
+    }
+}
+
+/// Expand an HWC row-major image into the im2col activation matrix
+/// `X[(Ho·Wo) × (Cin·kH·kW)]` (row-major, patch columns `(ky, kx, ci)`-
+/// major). For a 1x1 kernel this is the identity reshape. Generic over
+/// the element type so the f32 array path and the f64 reference chain
+/// flatten through the same code.
+pub fn im2col<T: Copy>(img: &[T], cs: &ConvShape) -> Vec<T> {
+    assert_eq!(img.len(), cs.img_elems(), "image must be H*W*Cin elements");
+    let (wo, ho) = (cs.out_w(), cs.out_h());
+    let k = cs.cin * cs.kh * cs.kw;
+    let mut x = Vec::with_capacity(ho * wo * k);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for ky in 0..cs.kh {
+                let row = ((oy + ky) * cs.w + ox) * cs.cin;
+                x.extend_from_slice(&img[row..row + cs.kw * cs.cin]);
+            }
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shapes_parse_and_flatten() {
+        let cs = ConvShape::parse("conv:6x3x3x3@8x8").unwrap();
+        assert_eq!(cs, ConvShape { cout: 6, cin: 3, kh: 3, kw: 3, h: 8, w: 8 });
+        assert_eq!(cs.gemm_shape(), GemmShape { m: 36, k: 27, n: 6 });
+        assert_eq!(cs.img_elems(), 192);
+        assert_eq!(cs.to_string(), "conv:6x3x3x3@8x8");
+    }
+
+    #[test]
+    fn malformed_conv_shapes_are_clean_errors() {
+        for bad in [
+            "conv:6x3x3x3",       // no image
+            "conv:6x3x3@8x8",     // missing filter dim
+            "conv:6x3x3x3@8",     // missing image dim
+            "conv:6x3x3x3@8x8x8", // extra image dim
+            "conv:6x3x0x3@8x8",   // zero dim
+            "conv:6x3x9x3@8x8",   // kernel taller than image
+            "conv:axbxcxd@8x8",   // non-numeric
+            "gemm:4x8x8",         // wrong prefix for ConvShape::parse
+        ] {
+            assert!(ConvShape::parse(bad).is_err(), "{bad}");
+        }
+        // flattened dims are bounded like parse_shape's
+        let big = MAX_DIM + 1;
+        assert!(ConvShape::parse(&format!("conv:{big}x1x1x1@4x4")).is_err());
+        assert!(ConvShape::parse(&format!("conv:1x{big}x1x1@4x4")).is_err());
+    }
+
+    #[test]
+    fn im2col_matches_hand_expansion() {
+        // 1 channel, 2x2 kernel over a 3x3 image: 4 patches of 4 taps
+        let cs = ConvShape::parse("conv:1x1x2x2@3x3").unwrap();
+        #[rustfmt::skip]
+        let img = vec![
+            0.0, 1.0, 2.0,
+            3.0, 4.0, 5.0,
+            6.0, 7.0, 8.0,
+        ];
+        let x = im2col(&img, &cs);
+        #[rustfmt::skip]
+        assert_eq!(x, vec![
+            0.0, 1.0, 3.0, 4.0,
+            1.0, 2.0, 4.0, 5.0,
+            3.0, 4.0, 6.0, 7.0,
+            4.0, 5.0, 7.0, 8.0,
+        ]);
+    }
+
+    #[test]
+    fn channels_stay_innermost() {
+        // 2 channels, 1x2 kernel over a 1x3 image: the (ky, kx, ci) patch
+        // order keeps each tap's channels adjacent
+        let cs = ConvShape::parse("conv:1x2x1x2@1x3").unwrap();
+        let img = vec![10.0, 11.0, 20.0, 21.0, 30.0, 31.0];
+        let x = im2col(&img, &cs);
+        assert_eq!(x, vec![10.0, 11.0, 20.0, 21.0, 20.0, 21.0, 30.0, 31.0]);
+    }
+
+    #[test]
+    fn one_by_one_kernel_is_the_identity_reshape() {
+        let cs = ConvShape::parse("conv:4x3x1x1@5x7").unwrap();
+        assert_eq!(cs.gemm_shape(), GemmShape { m: 35, k: 3, n: 4 });
+        let img: Vec<f32> = (0..cs.img_elems()).map(|i| i as f32 * 0.5).collect();
+        assert_eq!(im2col(&img, &cs), img);
+    }
+}

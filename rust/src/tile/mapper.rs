@@ -366,14 +366,35 @@ pub fn run_layer_with_data(
 /// distributions (deterministically from the campaign seed, stream
 /// [`LAYER_STREAM`]), then run the tiled GEMM across the worker pool.
 ///
+/// A conv layer (`spec.conv` set) draws its `H·W·Cin` image from the
+/// same stream position a plain GEMM would draw `X` from, then
+/// [`super::im2col`]-expands it — so a 1x1 kernel (identity expansion,
+/// same draw count) reproduces the equivalent `gemm:` layer bit-exactly.
+///
 /// The result is a pure function of (spec, campaign.seed,
 /// campaign.engine) — the property the serve layer's
 /// [`crate::server::proto::layer_key`] relies on.
 pub fn run_layer(spec: &LayerSpec, campaign: &CampaignConfig) -> Result<LayerResult> {
     let shape = spec.shape;
     let mut rng = Pcg64::seeded(job_seed(campaign.seed, LAYER_STREAM, 0));
-    let mut x = vec![0.0f32; shape.m * shape.k];
-    spec.dist_x.fill_f32(&mut rng, &mut x);
+    let x = match &spec.conv {
+        None => {
+            let mut x = vec![0.0f32; shape.m * shape.k];
+            spec.dist_x.fill_f32(&mut rng, &mut x);
+            x
+        }
+        Some(cs) => {
+            anyhow::ensure!(
+                cs.gemm_shape() == shape,
+                "layer '{}': shape {} does not match conv geometry {cs}",
+                spec.name,
+                shape
+            );
+            let mut img = vec![0.0f32; cs.img_elems()];
+            spec.dist_x.fill_f32(&mut rng, &mut img);
+            super::im2col(&img, cs)
+        }
+    };
     let mut wt = vec![0.0f32; shape.n * shape.k];
     spec.dist_w.fill_f32(&mut rng, &mut wt);
     run_layer_with_data(&spec.name, &spec.cfg, shape, x, wt, campaign)
@@ -457,6 +478,7 @@ mod tests {
             cfg: c,
             dist_x: Distribution::gauss_outliers(),
             dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+            conv: None,
         };
         let campaign = CampaignConfig {
             engine: EngineKind::Rust,
@@ -482,6 +504,37 @@ mod tests {
         for (a, b) in pooled.report.tiles.iter().zip(&seq.report.tiles) {
             assert_eq!(a.enob.to_bits(), b.enob.to_bits());
         }
+    }
+
+    #[test]
+    fn one_by_one_conv_layer_matches_the_plain_gemm_layer_bitwise() {
+        // identity im2col + identical draw order: the conv layer must be
+        // indistinguishable from its flattened gemm twin
+        let cs = crate::tile::ConvShape::parse("conv:5x3x1x1@4x6").unwrap();
+        let campaign = CampaignConfig {
+            engine: EngineKind::Rust,
+            workers: 2,
+            seed: 13,
+            ..Default::default()
+        };
+        let mk = |conv| LayerSpec {
+            name: "c".into(),
+            shape: cs.gemm_shape(),
+            cfg: cfg(8, 4, AdcPolicy::PerTileSpec),
+            dist_x: Distribution::gauss_outliers(),
+            dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+            conv,
+        };
+        let conv = run_layer(&mk(Some(cs)), &campaign).unwrap();
+        let gemm = run_layer(&mk(None), &campaign).unwrap();
+        for (a, b) in conv.y.iter().zip(&gemm.y) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(conv.report.tiles_fj.to_bits(), gemm.report.tiles_fj.to_bits());
+        // a spec whose shape disagrees with its conv geometry is rejected
+        let mut bad = mk(Some(cs));
+        bad.shape.n += 1;
+        assert!(run_layer(&bad, &campaign).is_err());
     }
 
     #[test]

@@ -58,9 +58,11 @@
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 
+pub mod im2col;
 pub mod mapper;
 pub mod shapes;
 
+pub use im2col::{im2col, ConvShape};
 pub use mapper::{gemm_outputs, gemm_with_engine, run_layer, run_layer_with_data, TileBuffers};
 pub use shapes::parse_shape;
 
@@ -177,14 +179,21 @@ impl TileConfig {
 pub struct LayerSpec {
     /// Layer label (reports only; not part of seeding or cache identity).
     pub name: String,
-    /// GEMM dimensions.
+    /// GEMM dimensions. For a conv layer this is the im2col-flattened
+    /// geometry, [`ConvShape::gemm_shape`].
     pub shape: GemmShape,
     /// Array configuration.
     pub cfg: TileConfig,
-    /// Activation workload distribution.
+    /// Activation workload distribution. For a conv layer it fills the
+    /// `H·W·Cin` image, which [`im2col`] then expands into `X`.
     pub dist_x: Distribution,
-    /// Weight workload distribution.
+    /// Weight workload distribution (conv: the `[Cout, Cin·kH·kW]`
+    /// flattened filter bank).
     pub dist_w: Distribution,
+    /// Convolution geometry when this layer is a `conv:` workload
+    /// (`shape` must equal its [`ConvShape::gemm_shape`]); `None` for a
+    /// plain GEMM.
+    pub conv: Option<ConvShape>,
 }
 
 /// Per-tile outcome: geometry, solved ADC resolution, and the energy the

@@ -2,10 +2,12 @@
 //! and the paper's LLM motivation care about, resolvable from one CLI /
 //! wire string.
 
+use super::im2col::ConvShape;
 use super::GemmShape;
 use anyhow::{bail, Context, Result};
 
-/// The named shape kinds `parse_shape` accepts (plus `gemm:<M>x<K>x<N>`).
+/// The named shape kinds `parse_shape` accepts (plus `gemm:<M>x<K>x<N>`
+/// and `conv:<Cout>x<Cin>x<kH>x<kW>@<H>x<W>`).
 pub const NAMED_SHAPES: &[&str] = &["mlp-up", "mlp-down", "qkv", "attn-out"];
 
 /// Largest accepted single GEMM dimension (2^20). Bounds every parsed
@@ -34,8 +36,12 @@ fn bounded(shape: GemmShape, s: &str) -> Result<GemmShape> {
 /// | `qkv:<d>` | `[tokens×d]·[d×3d]` (fused attention QKV) |
 /// | `attn-out:<d>` | `[tokens×d]·[d×d]` (attention output projection) |
 /// | `gemm:<M>x<K>x<N>` | explicit dimensions (`tokens` is ignored) |
+/// | `conv:<Cout>x<Cin>x<kH>x<kW>@<H>x<W>` | the im2col-flattened GEMM (`tokens` is ignored) |
 ///
-/// `tokens` is the batch dimension M of the named shapes.
+/// `tokens` is the batch dimension M of the named shapes. A `conv:`
+/// value resolves to its flattened `[Ho·Wo × Cin·kH·kW]·[… × Cout]`
+/// geometry ([`ConvShape::gemm_shape`]); callers that need the conv
+/// operand layout itself parse the [`ConvShape`] instead.
 pub fn parse_shape(s: &str, tokens: usize) -> Result<GemmShape> {
     if tokens == 0 {
         bail!("tokens must be positive");
@@ -61,6 +67,9 @@ pub fn parse_shape(s: &str, tokens: usize) -> Result<GemmShape> {
             bail!("shape '{s}': dimensions must be positive");
         }
         return bounded(GemmShape { m, k, n }, s);
+    }
+    if kind == "conv" {
+        return Ok(ConvShape::parse_args(arg, s)?.gemm_shape());
     }
     let d: usize = arg
         .parse()
@@ -96,6 +105,14 @@ mod tests {
     #[test]
     fn explicit_gemm_ignores_tokens() {
         assert_eq!(parse_shape("gemm:3x40x40", 99).unwrap(), GemmShape { m: 3, k: 40, n: 40 });
+    }
+
+    #[test]
+    fn conv_shapes_resolve_to_their_flattened_gemm() {
+        assert_eq!(parse_shape("conv:6x3x3x3@8x8", 99).unwrap(), GemmShape { m: 36, k: 27, n: 6 });
+        // 1x1 kernel: the flattened GEMM is the plain per-pixel GEMM
+        assert_eq!(parse_shape("conv:4x3x1x1@5x7", 4).unwrap(), GemmShape { m: 35, k: 3, n: 4 });
+        assert!(parse_shape("conv:6x3x9x3@8x8", 4).is_err());
     }
 
     #[test]

@@ -603,6 +603,187 @@ fn golden_model_report() {
 }
 
 // ---------------------------------------------------------------------
+// Attention — the transformer/decode presets through the real
+// QK^T / softmax / A·V stage (1-head and 4-head prefill blocks plus a
+// KV-cache decode GEMV), pinned per layer, per attention sub-GEMM, and
+// per model against the twin's attn_twin.
+// ---------------------------------------------------------------------
+
+const ATTN_SEED: u64 = 77;
+const ATTN_NR: usize = 16;
+const ATTN_NC: usize = 16;
+const ATTN_TOKENS: usize = 4;
+
+#[test]
+fn golden_attention_block() {
+    use grcim::coordinator::CampaignConfig;
+    use grcim::distributions::Distribution;
+    use grcim::energy::{CimArch, TechParams};
+    use grcim::formats::FpFormat;
+    use grcim::mac::FormatPair;
+    use grcim::model::{parse_model, run_model, ModelSpec};
+    use grcim::runtime::EngineKind;
+    use grcim::tile::{AdcPolicy, TileConfig};
+
+    let mut g = Golden::new("attention_block", 1e-6);
+    let fp4 = FpFormat::fp4_e2m1();
+    let cases = [
+        ("t1", "transformer:64x1x2", ATTN_TOKENS, 1usize),
+        ("t4", "transformer:64x4x2", ATTN_TOKENS, 4),
+        ("dec", "decode:64x4x32", 1, 4),
+    ];
+    for (ctag, model, tokens, heads) in cases {
+        for (atag, arch) in
+            [("gru", CimArch::GrUnit), ("cnv", CimArch::Conventional)]
+        {
+            let tag = format!("{ctag}_{atag}");
+            let spec = ModelSpec {
+                name: tag.clone(),
+                layers: parse_model(model, tokens).unwrap(),
+                cfg: TileConfig {
+                    nr: ATTN_NR,
+                    nc: ATTN_NC,
+                    fmts: FormatPair::new(FpFormat::fp(4, 2), fp4),
+                    arch,
+                    adc: AdcPolicy::PerTileSpec,
+                    tech: TechParams::default(),
+                },
+                dist_x: Distribution::gauss_outliers(),
+                dist_w: Distribution::max_entropy(fp4),
+                relu: false,
+                fit_activations: false,
+            };
+            let campaign = CampaignConfig {
+                engine: EngineKind::Rust,
+                workers: 2,
+                seed: ATTN_SEED,
+                ..Default::default()
+            };
+            let res = run_model(&spec, &campaign).unwrap();
+            let r = &res.report;
+            for (li, l) in r.layers.iter().enumerate() {
+                g.push(format!("{tag}_l{li}_enob_mean"), l.report.enob_mean());
+                g.push(format!("{tag}_l{li}_total_fj"), l.report.total_fj());
+                g.push(format!("{tag}_l{li}_sqnr_db"), l.report.sqnr_db);
+                g.push(format!("{tag}_l{li}_requant_db"), l.requant_sqnr_db);
+                if let Some(sm) = l.softmax_requant_db {
+                    g.push(format!("{tag}_l{li}_softmax_db"), sm);
+                    // per-sub-GEMM ADC means: the combined report indexes
+                    // tiles by kt = sub-GEMM (QK^T heads, then A·V heads)
+                    for sub in 0..2 * heads {
+                        let (mut s, mut c) = (0.0f64, 0usize);
+                        for t in l.report.tiles.iter().filter(|t| t.kt == sub)
+                        {
+                            s += t.enob;
+                            c += 1;
+                        }
+                        assert!(c > 0, "{tag} l{li}: empty sub-GEMM {sub}");
+                        g.push(
+                            format!("{tag}_l{li}_sub{sub}_enob"),
+                            s / c as f64,
+                        );
+                    }
+                }
+            }
+            g.push(format!("{tag}_total_fj"), r.total_fj());
+            g.push(format!("{tag}_fj_per_mac"), r.fj_per_mac());
+            g.push(format!("{tag}_fj_per_token"), r.fj_per_token());
+            g.push(format!("{tag}_e2e_sqnr_db"), r.sqnr_db);
+            g.push(
+                format!("{tag}_y_abs_sum"),
+                res.y.iter().map(|v| v.abs()).sum::<f64>(),
+            );
+            g.push(
+                format!("{tag}_y_sq_sum"),
+                res.y.iter().map(|v| v * v).sum::<f64>(),
+            );
+            g.push(format!("{tag}_enob_mean"), r.enob_mean());
+            // the virtual M x (2S) x d attention shape keeps the energy
+            // reconciliation and MAC-coverage invariants intact
+            let fr = r.to_figure_result();
+            assert!(fr.all_hold(), "{tag}: {:#?}", fr.checks);
+        }
+    }
+    g.check();
+}
+
+// ---------------------------------------------------------------------
+// Convolution — a conv-led chain through the im2col flattener onto the
+// unchanged weight-stationary mapper, pinned against the twin's
+// im2col_twin path.
+// ---------------------------------------------------------------------
+
+const CONV_SEED: u64 = 91;
+const CONV_NR: usize = 8;
+const CONV_NC: usize = 8;
+
+#[test]
+fn golden_conv_im2col() {
+    use grcim::coordinator::CampaignConfig;
+    use grcim::distributions::Distribution;
+    use grcim::energy::{CimArch, TechParams};
+    use grcim::formats::FpFormat;
+    use grcim::mac::FormatPair;
+    use grcim::model::{parse_model, run_model, ModelSpec};
+    use grcim::runtime::EngineKind;
+    use grcim::tile::{AdcPolicy, TileConfig};
+
+    let mut g = Golden::new("conv_im2col", 1e-6);
+    let fp4 = FpFormat::fp4_e2m1();
+    for (tag, arch) in
+        [("gru", CimArch::GrUnit), ("cnv", CimArch::Conventional)]
+    {
+        let spec = ModelSpec {
+            name: tag.to_string(),
+            layers: parse_model("conv:6x3x3x3@8x8,gemm:36x6x4", 1).unwrap(),
+            cfg: TileConfig {
+                nr: CONV_NR,
+                nc: CONV_NC,
+                fmts: FormatPair::new(FpFormat::fp(2, 2), fp4),
+                arch,
+                adc: AdcPolicy::PerTileSpec,
+                tech: TechParams::default(),
+            },
+            dist_x: Distribution::gauss_outliers(),
+            dist_w: Distribution::max_entropy(fp4),
+            relu: true,
+            fit_activations: false,
+        };
+        let campaign = CampaignConfig {
+            engine: EngineKind::Rust,
+            workers: 2,
+            seed: CONV_SEED,
+            ..Default::default()
+        };
+        let res = run_model(&spec, &campaign).unwrap();
+        let r = &res.report;
+        assert_eq!(r.layers.len(), 2, "conv + head GEMM");
+        for (li, l) in r.layers.iter().enumerate() {
+            g.push(format!("{tag}_l{li}_enob_mean"), l.report.enob_mean());
+            g.push(format!("{tag}_l{li}_total_fj"), l.report.total_fj());
+            g.push(format!("{tag}_l{li}_sqnr_db"), l.report.sqnr_db);
+            g.push(format!("{tag}_l{li}_requant_db"), l.requant_sqnr_db);
+            g.push(format!("{tag}_l{li}_a_scale"), l.a_scale);
+        }
+        g.push(format!("{tag}_total_fj"), r.total_fj());
+        g.push(format!("{tag}_fj_per_mac"), r.fj_per_mac());
+        g.push(format!("{tag}_e2e_sqnr_db"), r.sqnr_db);
+        g.push(
+            format!("{tag}_y_abs_sum"),
+            res.y.iter().map(|v| v.abs()).sum::<f64>(),
+        );
+        g.push(
+            format!("{tag}_y_sq_sum"),
+            res.y.iter().map(|v| v * v).sum::<f64>(),
+        );
+        g.push(format!("{tag}_enob_mean"), r.enob_mean());
+        let fr = r.to_figure_result();
+        assert!(fr.all_hold(), "{tag}: {:#?}", fr.checks);
+    }
+    g.check();
+}
+
+// ---------------------------------------------------------------------
 // Determinism + harness self-tests.
 // ---------------------------------------------------------------------
 

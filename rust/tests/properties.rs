@@ -497,6 +497,7 @@ fn prop_tile_layer_bit_identical_across_1_2_4_workers() {
         },
         dist_x: Distribution::gauss_outliers(),
         dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+        conv: None,
     };
     let mut reference: Option<(Vec<u64>, Vec<u64>, u64)> = None;
     for workers in [1usize, 2, 4] {
@@ -707,6 +708,244 @@ fn prop_antithetic_pairs_mirror_magnitudes_and_keep_signs() {
             }
         }
     }
+}
+
+#[test]
+fn prop_softmax_rows_normalize_and_are_permutation_equivariant() {
+    use grcim::model::softmax_rows_f32;
+    // rows sum to 1 (to f32 summation accuracy), probabilities are
+    // nonnegative, and rotating a row's scores rotates its
+    // probabilities — softmax has no positional preference (only the
+    // f32 summation order changes, a ~1-ulp-per-term effect)
+    let mut rng = Pcg64::seeded(0x50F7);
+    for case in 0..40 {
+        let cols = 2 + rng.below(9) as usize;
+        let rows = 1 + rng.below(4) as usize;
+        let mut vals = vec![0.0f32; rows * cols];
+        Distribution::gauss_outliers().fill_f32(&mut rng, &mut vals);
+        let mut sm = vals.clone();
+        softmax_rows_f32(&mut sm, cols);
+        for (r, row) in sm.chunks(cols).enumerate() {
+            let sum: f64 = row.iter().map(|&v| v as f64).sum();
+            assert!(
+                (sum - 1.0).abs() < 1e-5,
+                "case {case} row {r}: sum {sum}"
+            );
+            assert!(row.iter().all(|&p| p >= 0.0), "case {case} row {r}");
+        }
+        let rot = 1 + rng.below(cols as u64 - 1) as usize;
+        let mut rotated = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            for i in 0..cols {
+                rotated[r * cols + (i + rot) % cols] = vals[r * cols + i];
+            }
+        }
+        softmax_rows_f32(&mut rotated, cols);
+        for r in 0..rows {
+            for i in 0..cols {
+                let a = sm[r * cols + i] as f64;
+                let b = rotated[r * cols + (i + rot) % cols] as f64;
+                assert!(
+                    (a - b).abs() < 5e-6,
+                    "case {case} row {r} col {i}: {a} vs {b} (rot {rot})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_one_by_one_conv_model_equals_the_flattened_gemm_model_bitwise() {
+    use grcim::coordinator::CampaignConfig;
+    use grcim::model::{parse_model, run_model, ModelSpec};
+    use grcim::runtime::EngineKind;
+    use grcim::tile::{AdcPolicy, TileConfig};
+
+    // a 1x1 kernel makes im2col the identity reshape (HWC row-major ==
+    // [H*W][Cin]), the image draw count equals the flattened GEMM's
+    // input draw count, and the requantization visits elements in the
+    // same order — so the whole chained report must agree bit for bit
+    let cfg = TileConfig {
+        nr: 4,
+        nc: 4,
+        fmts: FormatPair::new(FpFormat::fp(2, 2), FpFormat::fp4_e2m1()),
+        arch: CimArch::GrUnit,
+        adc: AdcPolicy::PerTileSpec,
+        tech: TechParams::default(),
+    };
+    let mk = |model: &str| ModelSpec {
+        name: "p".into(),
+        layers: parse_model(model, 9).unwrap(),
+        cfg,
+        dist_x: Distribution::gauss_outliers(),
+        dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+        relu: true,
+        fit_activations: false,
+    };
+    let campaign = CampaignConfig {
+        engine: EngineKind::Rust,
+        workers: 2,
+        seed: 5,
+        ..Default::default()
+    };
+    let a = run_model(&mk("conv:4x3x1x1@3x3,gemm:9x4x2"), &campaign).unwrap();
+    let b = run_model(&mk("gemm:9x3x4,gemm:9x4x2"), &campaign).unwrap();
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&a.y), bits(&b.y));
+    assert_eq!(a.report.total_fj().to_bits(), b.report.total_fj().to_bits());
+    assert_eq!(a.report.sqnr_db.to_bits(), b.report.sqnr_db.to_bits());
+    for (la, lb) in a.report.layers.iter().zip(&b.report.layers) {
+        assert_eq!(
+            la.requant_sqnr_db.to_bits(),
+            lb.requant_sqnr_db.to_bits()
+        );
+        let enobs = |l: &grcim::model::LayerOutcome| {
+            l.report.tiles.iter().map(|t| t.enob.to_bits()).collect::<Vec<_>>()
+        };
+        assert_eq!(enobs(la), enobs(lb));
+    }
+}
+
+#[test]
+fn prop_attention_and_conv_models_bit_identical_across_1_2_4_workers() {
+    use grcim::coordinator::CampaignConfig;
+    use grcim::model::{parse_model, run_model, ModelSpec};
+    use grcim::runtime::EngineKind;
+    use grcim::tile::{AdcPolicy, TileConfig};
+
+    // worker-count invariance must survive the new stage kinds: the
+    // attention sub-GEMMs shard through the same pooled tile path, and
+    // conv only changes operand staging
+    for model in [
+        "transformer:16x2x1",
+        "decode:16x2x12",
+        "conv:4x2x2x2@5x5,gemm:16x4x3",
+    ] {
+        let spec = ModelSpec {
+            name: "det".into(),
+            layers: parse_model(model, 2).unwrap(),
+            cfg: TileConfig {
+                nr: 8,
+                nc: 4,
+                fmts: FormatPair::new(FpFormat::fp(2, 2), FpFormat::fp4_e2m1()),
+                arch: CimArch::GrUnit,
+                adc: AdcPolicy::PerTileSpec,
+                tech: TechParams::default(),
+            },
+            dist_x: Distribution::gauss_outliers(),
+            dist_w: Distribution::max_entropy(FpFormat::fp4_e2m1()),
+            relu: false,
+            fit_activations: false,
+        };
+        let mut reference: Option<(Vec<u64>, Vec<u64>, u64, u64)> = None;
+        for workers in [1usize, 2, 4] {
+            let cfg = CampaignConfig {
+                engine: EngineKind::Rust,
+                workers,
+                seed: 0xA77,
+                ..Default::default()
+            };
+            let res = run_model(&spec, &cfg).unwrap();
+            let y_bits: Vec<u64> = res.y.iter().map(|v| v.to_bits()).collect();
+            let layer_bits: Vec<u64> = res
+                .report
+                .layers
+                .iter()
+                .flat_map(|l| {
+                    let mut bits: Vec<u64> =
+                        l.report.tiles.iter().map(|t| t.enob.to_bits()).collect();
+                    bits.push(l.report.total_fj().to_bits());
+                    bits.push(l.requant_sqnr_db.to_bits());
+                    bits.push(
+                        l.softmax_requant_db.unwrap_or(f64::NAN).to_bits(),
+                    );
+                    bits
+                })
+                .collect();
+            let bits = (
+                y_bits,
+                layer_bits,
+                res.report.sqnr_db.to_bits(),
+                res.report.total_fj().to_bits(),
+            );
+            match &reference {
+                None => reference = Some(bits),
+                Some(r) => assert_eq!(
+                    r, &bits,
+                    "{model}: workers={workers} changed the model"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_transparent_adc_attention_chain_tracks_the_float_reference() {
+    use grcim::coordinator::CampaignConfig;
+    use grcim::model::{parse_model, run_model, ModelSpec};
+    use grcim::runtime::EngineKind;
+    use grcim::tile::{AdcPolicy, TileConfig};
+
+    // with fine FP(4,10) operand formats on BOTH sides (K and V are
+    // weight-stationary, so the attention stage re-encodes activation
+    // slices in the array's *weight* format — at FP4 that quantization
+    // dominates by design) and fixed 30-bit ADCs, the qkv -> attention
+    // prefix must track the f64 reference chain (the Python twin pins
+    // the identical case in its attn self-check, seed 13)
+    let fine = FpFormat::fp(4, 10);
+    let cfg = TileConfig {
+        nr: 8,
+        nc: 8,
+        fmts: FormatPair::new(fine, fine),
+        arch: CimArch::GrUnit,
+        adc: AdcPolicy::Fixed(30.0),
+        tech: TechParams::default(),
+    };
+    let campaign = CampaignConfig {
+        engine: EngineKind::Rust,
+        workers: 2,
+        seed: 13,
+        ..Default::default()
+    };
+    let mut layers = parse_model("transformer:8x2x1", 3).unwrap();
+    layers.truncate(2); // qkv -> attn, the twin-verified prefix
+    let spec = ModelSpec {
+        name: "transparent".into(),
+        layers,
+        cfg,
+        dist_x: Distribution::max_entropy(fine),
+        dist_w: Distribution::max_entropy(fine),
+        relu: false,
+        fit_activations: false,
+    };
+    let res = run_model(&spec, &campaign).unwrap();
+    assert!(
+        res.report.sqnr_db > 25.0,
+        "e2e sqnr {} dB under a transparent ADC",
+        res.report.sqnr_db
+    );
+    let attn = &res.report.layers[1];
+    assert!(
+        attn.softmax_requant_db.unwrap() > 25.0,
+        "softmax requant {:?}",
+        attn.softmax_requant_db
+    );
+    // the same transparency holds for the decode GEMV over its KV cache
+    let spec_dec = ModelSpec {
+        name: "transparent-dec".into(),
+        layers: parse_model("decode:8x2x6", 1).unwrap(),
+        cfg,
+        dist_x: Distribution::max_entropy(fine),
+        dist_w: Distribution::max_entropy(fine),
+        relu: false,
+        fit_activations: false,
+    };
+    let res = run_model(&spec_dec, &campaign).unwrap();
+    assert_eq!(res.y.len(), 8);
+    let fj_tok = res.report.fj_per_token();
+    assert!(fj_tok.is_finite() && fj_tok > 0.0);
+    // one token: per-token energy is the whole model's energy
+    assert_eq!(fj_tok.to_bits(), res.report.total_fj().to_bits());
 }
 
 #[test]

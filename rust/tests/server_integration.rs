@@ -570,6 +570,72 @@ fn model_requests_coalesce_over_tcp_and_hits_are_identical() {
 }
 
 #[test]
+fn transformer_and_decode_presets_hit_the_rendered_cache_byte_identically() {
+    let server = spawn_server();
+    let addr = server.local_addr().to_string();
+    for (req, layers) in [
+        (
+            r#"{"cmd":"model","model":"transformer:16x2x1","tokens":2,"nr":8,"nc":4,"n_e":2}"#,
+            5usize,
+        ),
+        (
+            r#"{"cmd":"model","model":"decode:16x2x12","tokens":1,"nr":8,"nc":4,"n_e":2}"#,
+            3usize,
+        ),
+    ] {
+        let cold = query_once(&addr, req).unwrap();
+        assert!(!cached_flag(&cold), "first request must be computed: {cold}");
+        let warm = query_once(&addr, req).unwrap();
+        assert!(cached_flag(&warm), "second identical request must hit: {warm}");
+        assert_eq!(result_str(&warm), result_str(&cold), "cache hit diverged");
+        let j = Json::parse(&cold).unwrap();
+        assert_eq!(
+            j.get("result").unwrap().get("layers").unwrap().as_usize(),
+            Some(layers),
+            "{cold}"
+        );
+    }
+
+    // the two presets are distinct cache entries, each computed once
+    let info = query_once(&addr, r#"{"cmd":"info"}"#).unwrap();
+    let models = Json::parse(&info)
+        .unwrap()
+        .get("result")
+        .unwrap()
+        .get("models")
+        .unwrap()
+        .clone();
+    assert_eq!(models.get("computes").unwrap().as_usize(), Some(2), "{info}");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn oversized_decode_request_trips_the_slab_cap_as_a_typed_bad_request() {
+    let server = spawn_server();
+    let addr = server.local_addr().to_string();
+    // ctx = 10^6: every dimension individually parses (< 2^20), and the
+    // MAC total (2·M·S·d ≈ 2.0e9) stays under the MAC cap — but the KV
+    // cache alone is 2·ctx·d ≈ 2.0e9 operand elements, far past
+    // MAX_LAYER_ELEMS. The O(ctx²)-audited slab cap must reject it with
+    // a typed bad_request before any worker tries to allocate it.
+    let req =
+        r#"{"cmd":"model","model":"decode:1024x4x1000000","tokens":1,"nr":8,"nc":4}"#;
+    let resp = query_once(&addr, req).unwrap();
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("ok"), Some(&Json::Bool(false)), "{resp}");
+    assert_eq!(j.get("kind").and_then(Json::as_str), Some("bad_request"), "{resp}");
+    assert!(
+        j.get("error").and_then(Json::as_str).unwrap().contains("too large"),
+        "{resp}"
+    );
+
+    // the rejection left the server healthy and the connection path clean
+    let info = query_once(&addr, r#"{"cmd":"info"}"#).unwrap();
+    assert_eq!(Json::parse(&info).unwrap().get("ok"), Some(&Json::Bool(true)));
+    server.shutdown().unwrap();
+}
+
+#[test]
 fn shutdown_is_clean_with_an_idle_connection_open() {
     let server = spawn_server();
     let addr = server.local_addr().to_string();

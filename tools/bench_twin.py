@@ -89,6 +89,33 @@ def main():
     run(f"twin/mac/simulate_column_nr{nr}", sim_reps, rows,
         lambda: gg.simulate_column(x, w, nr, fx, fw), ms)
 
+    # attention block: per-head QK^T/A.V tile GEMMs around the exact
+    # digital softmax (mirrors the Rust `model/attn_block` group;
+    # throughput in useful MACs/s)
+    attn_entries = gg.transformer_entries(16, 2, 1, 4)
+    attn_fx = gg.FpFormat.fp(4, 2)
+    attn_args = (attn_entries, 8, 8, attn_fx, fw, "gr-unit",
+                 gg.Dist("gauss_outliers"), gg.Dist("maxent", fw), 3)
+    attn_macs = 0
+    for e in attn_entries:
+        if isinstance(e, dict) and e.get("kind") == "attn":
+            mm, _, d = e["shape"]
+            s = e["ctx"] if e.get("ctx") else mm
+            attn_macs += 2 * mm * s * d
+        else:
+            mm, k_, n_ = e if isinstance(e, tuple) else e["shape"]
+            attn_macs += mm * k_ * n_
+    run("twin/model/attn_block", sim_reps, attn_macs,
+        lambda: gg.run_model_twin(*attn_args, relu=False, fit=False), ms)
+
+    # im2col patch flattening alone (mirrors the Rust `tile/im2col`
+    # group; throughput in expanded GEMM-operand elements/s)
+    cv = (16, 8, 3, 3, 32, 32)
+    img = [float(i % 37) * 0.03125 for i in range(gg.conv_img_elems(cv))]
+    m_k = (30 * 30) * (8 * 3 * 3)
+    run("twin/tile/im2col", reps, m_k,
+        lambda: gg.im2col_twin(img, cv), ms)
+
     doc = {
         "mode": "quick" if quick else "full",
         "source": "python-twin",

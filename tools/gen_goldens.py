@@ -922,6 +922,39 @@ def run_layer_twin(shape, nr, nc, fx, fw, arch, dist_x, dist_w, seed):
     return tile_gemm_twin(x, wt, shape, nr, nc, fx, fw, arch)
 
 
+# -------------------------------------------------------------- im2col --
+# Twin of tile::im2col — valid-padding, stride-1 convolution lowered to
+# the weight-stationary GEMM mapper. A conv tuple is
+# (cout, cin, kh, kw, h, w), the Rust `ConvShape` field order.
+
+
+def conv_gemm_shape(cv):
+    """Twin of ConvShape::gemm_shape: (out_h*out_w, cin*kh*kw, cout)."""
+    cout, cin, kh, kw, h, w = cv
+    return ((h - kh + 1) * (w - kw + 1), cin * kh * kw, cout)
+
+
+def conv_img_elems(cv):
+    """Twin of ConvShape::img_elems: H*W*Cin."""
+    _cout, cin, _kh, _kw, h, w = cv
+    return h * w * cin
+
+
+def im2col_twin(img, cv):
+    """Twin of tile::im2col: flatten an HWC image (`img[(y*W+x)*Cin+c]`)
+    into the patch-row matrix, row-major `[out_h*out_w][cin*kh*kw]`,
+    patch column `(ky*kW + kx)*Cin + ci` — contiguous `kw*cin` runs per
+    kernel row, exactly the Rust extend_from_slice order."""
+    _cout, cin, kh, kw, h, w = cv
+    out = []
+    for oy in range(h - kh + 1):
+        for ox in range(w - kw + 1):
+            for ky in range(kh):
+                row = ((oy + ky) * w + ox) * cin
+                out.extend(img[row:row + kw * cin])
+    return out
+
+
 # --------------------------------------------------------------- model --
 # Twin of model::exec — chained tile layers with inter-layer
 # requantization and the float reference chain.
@@ -929,61 +962,314 @@ def run_layer_twin(shape, nr, nc, fx, fw, arch, dist_x, dist_w, seed):
 MODEL_STREAM = 0x30DE1  # model::exec::MODEL_STREAM
 
 
+def softmax_rows_f32_twin(rows, cols):
+    """Twin of model::attn::softmax_rows_f32: row-wise max-subtracted
+    f32 softmax, every f32 operation emulated as compute-in-f64 then
+    round (`exp` runs in f64 on the exactly-representable f32
+    difference — the form both sides pin bit-for-bit)."""
+    out = list(rows)
+    for r0 in range(0, len(out), cols):
+        row = out[r0:r0 + cols]
+        mx = max(row)
+        sm = 0.0
+        for i, v in enumerate(row):
+            e = f32(math.exp(f32(v - mx)))
+            row[i] = e
+            sm = f32(sm + e)
+        out[r0:r0 + cols] = [f32(v / sm) for v in row]
+    return out
+
+
+def softmax_row_f64_twin(row):
+    """Twin of model::attn::softmax_row_f64 (the reference chains)."""
+    mx = max(row)
+    sm = 0.0
+    for i, v in enumerate(row):
+        e = math.exp(v - mx)
+        row[i] = e
+        sm += e
+    for i in range(len(row)):
+        row[i] /= sm
+
+
+def attn_twin(xq, a_scale, shape, heads, kv, nr, nc, fx, fw, arch,
+              fixed_enob=None):
+    """Twin of model::attn::run_attention over the requantized stage
+    input `xq`: per-head QK^T tile GEMMs (scores rescaled to the real
+    domain, f32-cast, scaled by 1/sqrt(d_h)), the exact digital f32
+    softmax, ONE shared probability requantization across every head
+    (the second calibration point), per-head A·V tile GEMMs, the
+    combined energy totals, and the stage SQNR against exact f64
+    attention over the same quantized operands. `kv` is None for
+    prefill (S = M, K/V from the fused [Q|K|V] input at `a_scale`) or
+    {"ctx", "k", "v"} for decode (full-scale cache)."""
+    m_, k_in, d = shape
+    dh = d // heads
+    if kv is None:
+        s_len, k_scale, v_scale = m_, a_scale, a_scale
+    else:
+        s_len, k_scale, v_scale = kv["ctx"], 1.0, 1.0
+    sqrt_dh = math.sqrt(float(dh))
+
+    # phase A: QK^T per head (K weight-stationary), then softmax
+    grids = []
+    probs = [0.0] * (heads * m_ * s_len)
+    for h in range(heads):
+        c0 = h * dh
+        q = [xq[mi * k_in + c0 + c] for mi in range(m_) for c in range(dh)]
+        if kv is None:
+            kt = [xq[j * k_in + d + c0 + c]
+                  for j in range(s_len) for c in range(dh)]
+        else:
+            kt = [kv["k"][j * d + c0 + c]
+                  for j in range(s_len) for c in range(dh)]
+        g = tile_gemm_twin(q, kt, (m_, dh, s_len), nr, nc, fx, fw, arch,
+                           fixed_enob=fixed_enob)
+        base = h * m_ * s_len
+        for i, yv in enumerate(g["y"]):
+            probs[base + i] = f32(yv * a_scale * k_scale / sqrt_dh)
+        probs[base:base + m_ * s_len] = softmax_rows_f32_twin(
+            probs[base:base + m_ * s_len], s_len)
+        grids.append(g)
+
+    # second calibration point: one shared probability scale
+    a2 = 0.0
+    for p in probs:
+        a2 = max(a2, p)
+    a2_scale = max(a2, 1e-12)
+    pq = []
+    sig = 0.0
+    err = 0.0
+    for p in probs:
+        s = p / a2_scale
+        qv = f32(fx.quantize(f32(s)))
+        pq.append(qv)
+        sig += s * s
+        e = qv - s
+        err += e * e
+    softmax_requant_db = db(max(sig, 1e-300) / max(err, 1e-300))
+
+    # phase B: A·V per head (V weight-stationary)
+    y_out = [0.0] * (m_ * d)
+    for h in range(heads):
+        c0 = h * dh
+        if kv is None:
+            vt = [xq[j * k_in + 2 * d + c0 + o]
+                  for o in range(dh) for j in range(s_len)]
+        else:
+            vt = [kv["v"][j * d + c0 + o]
+                  for o in range(dh) for j in range(s_len)]
+        base = h * m_ * s_len
+        g = tile_gemm_twin(pq[base:base + m_ * s_len], vt,
+                           (m_, s_len, dh), nr, nc, fx, fw, arch,
+                           fixed_enob=fixed_enob)
+        for mi in range(m_):
+            for o in range(dh):
+                y_out[mi * d + c0 + o] = (g["y"][mi * dh + o]
+                                          * a2_scale * v_scale)
+        grids.append(g)
+
+    # stage SQNR: exact f64 attention over the same quantized operands
+    sig = 0.0
+    err = 0.0
+    for h in range(heads):
+        c0 = h * dh
+        for mi in range(m_):
+            sc = [0.0] * s_len
+            for j in range(s_len):
+                acc = 0.0
+                for c in range(dh):
+                    kvq = (xq[j * k_in + d + c0 + c] if kv is None
+                           else kv["k"][j * d + c0 + c])
+                    acc += xq[mi * k_in + c0 + c] * kvq
+                sc[j] = acc * a_scale * k_scale / sqrt_dh
+            softmax_row_f64_twin(sc)
+            for o in range(dh):
+                acc = 0.0
+                for j in range(s_len):
+                    vvq = (xq[j * k_in + 2 * d + c0 + o] if kv is None
+                           else kv["v"][j * d + c0 + o])
+                    acc += sc[j] * (vvq * v_scale)
+                sig += acc * acc
+                dlt = y_out[mi * d + c0 + o] - acc
+                err += dlt * dlt
+    sqnr_db = db(max(sig, 1e-300) / max(err, 1e-300))
+
+    # combined grid under the virtual M x (2S) x d shape: concatenated
+    # sub-GEMM tiles (QK^T heads first, then A·V heads) and summed energy
+    tiles = [t for g in grids for t in g["tiles"]]
+    tiles_fj = sum(g["tiles_fj"] for g in grids)
+    reduction_fj = sum(g["reduction_fj"] for g in grids)
+    global_norm_fj = sum(g["global_norm_fj"] for g in grids)
+    total_fj = tiles_fj + reduction_fj + global_norm_fj
+    macs = 2 * m_ * s_len * d
+    return {
+        "y": y_out,
+        "grids": grids,
+        "tiles": tiles,
+        "tiles_fj": tiles_fj,
+        "reduction_fj": reduction_fj,
+        "global_norm_fj": global_norm_fj,
+        "total_fj": total_fj,
+        "fj_per_mac": total_fj / float(macs),
+        "sqnr_db": sqnr_db,
+        "softmax_requant_db": softmax_requant_db,
+        "y_abs_sum": sum(abs(v) for v in y_out),
+        "y_sq_sum": sum(v * v for v in y_out),
+        "enob_mean": sum(t["enob"] for t in tiles) / float(len(tiles)),
+    }
+
+
+def attn_reference_twin(ref, width, shape, heads, kv):
+    """Twin of model::attn::attention_reference: exact f64 attention
+    over the unquantized reference activations (leading-K rule applied)
+    and the raw KV cache."""
+    m_, _k_in, d = shape
+    dh = d // heads
+    s_len = m_ if kv is None else kv["ctx"]
+    sqrt_dh = math.sqrt(float(dh))
+    out = [0.0] * (m_ * d)
+    for h in range(heads):
+        c0 = h * dh
+        for mi in range(m_):
+            sc = [0.0] * s_len
+            for j in range(s_len):
+                acc = 0.0
+                for c in range(dh):
+                    kvv = (ref[j * width + d + c0 + c] if kv is None
+                           else kv["k"][j * d + c0 + c])
+                    acc += ref[mi * width + c0 + c] * kvv
+                sc[j] = acc / sqrt_dh
+            softmax_row_f64_twin(sc)
+            for o in range(dh):
+                acc = 0.0
+                for j in range(s_len):
+                    vvv = (ref[j * width + 2 * d + c0 + o] if kv is None
+                           else kv["v"][j * d + c0 + o])
+                    acc += sc[j] * vvv
+                out[mi * d + c0 + o] = acc
+    return out
+
+
+def norm_model_layer(e):
+    """Normalize a run_model_twin chain entry: a plain (M, K, N) tuple
+    is a GEMM layer; dicts carry a `kind` of "attn" ({"shape", "heads",
+    "ctx": None|int}) or "conv" ({"conv": (cout,cin,kh,kw,h,w)}) —
+    mirroring model::LayerKind."""
+    if isinstance(e, dict):
+        if e["kind"] == "conv":
+            return {"kind": "conv", "conv": e["conv"],
+                    "shape": conv_gemm_shape(e["conv"])}
+        return dict(e)
+    return {"kind": "gemm", "shape": tuple(e)}
+
+
 def run_model_twin(shapes, nr, nc, fx, fw, arch, dist_x, dist_w, seed,
                    relu=True, fit=True, fixed_enob=None):
     """Twin of model::exec::run_model: model input from stream
-    (MODEL_STREAM, 0), layer li's weights from (MODEL_STREAM, li+1),
+    (MODEL_STREAM, 0), layer li's operands from (MODEL_STREAM, li+1),
     then per layer: static max-|x| calibration, requantization of the
     scaled activations to the input format (f32-cast, quantize, f32 —
-    the exact Rust order), the shared tile grid, and the float-domain
-    epilogue (rescale, hidden-layer ReLU). `shapes` is a list of
-    (M, K, N) with K_i <= N_{i-1} (leading-K truncation)."""
-    m_ = shapes[0][0]
+    the exact Rust order), the shared tile grid (or the attention
+    QK^T/softmax/A·V twin), and the float-domain epilogue (rescale,
+    hidden-layer ReLU — never on attention). `shapes` entries are
+    (M, K, N) tuples for plain GEMMs, with K_i <= N_{i-1} (leading-K
+    truncation), or tagged dicts ([`norm_model_layer`]): a conv first
+    layer draws its H*W*Cin image at stream 0 and requantizes it
+    *before* im2col expansion; an attention layer draws no weights
+    (decode draws its KV cache from dist_x instead: all keys, then all
+    values, one RNG)."""
+    entries = [norm_model_layer(e) for e in shapes]
+    first = entries[0]
+    m_ = first["shape"][0]
     rng = Pcg64(job_seed(seed, MODEL_STREAM, 0))
-    acts = fill_f32(dist_x, rng, m_ * shapes[0][1])
+    if first["kind"] == "conv":
+        acts = fill_f32(dist_x, rng, conv_img_elems(first["conv"]))
+    else:
+        acts = fill_f32(dist_x, rng, m_ * first["shape"][1])
     ref = list(acts)
-    width = shapes[0][1]
+    width = first["shape"][1]
     layers = []
     all_tiles = []
-    for li, (mm, k_, n_) in enumerate(shapes):
+    total_macs = 0
+    for li, lay in enumerate(entries):
+        mm, k_, n_ = lay["shape"]
+        kind = lay["kind"]
         assert mm == m_ and k_ <= width
-        rng_w = Pcg64(job_seed(seed, MODEL_STREAM, li + 1))
-        wt = fill_f32(dist_w, rng_w, n_ * k_)
+        rng_l = Pcg64(job_seed(seed, MODEL_STREAM, li + 1))
+        wt = None
+        kv = None
+        if kind == "attn":
+            if lay["ctx"] is not None:
+                c = lay["ctx"]
+                kc = fill_f32(dist_x, rng_l, c * n_)
+                vc = fill_f32(dist_x, rng_l, c * n_)
+                kv = {"ctx": c, "k": kc, "v": vc}
+        else:
+            wt = fill_f32(dist_w, rng_l, n_ * k_)
         a_scale = max(max(abs(v) for v in acts), 1e-12)
-        xq = []
         scaled = []
         sig = 0.0
         err = 0.0
-        for mi in range(m_):
-            for ki in range(k_):
-                s = acts[mi * width + ki] / a_scale
+        if kind == "conv":
+            imgq = []
+            for v in acts:
+                s = v / a_scale
                 q = f32(fx.quantize(f32(s)))
-                xq.append(q)
+                imgq.append(q)
                 sig += s * s
                 d = q - s
                 err += d * d
                 scaled.append(s)
+            xq = im2col_twin(imgq, lay["conv"])
+        else:
+            xq = []
+            for mi in range(m_):
+                for ki in range(k_):
+                    s = acts[mi * width + ki] / a_scale
+                    q = f32(fx.quantize(f32(s)))
+                    xq.append(q)
+                    sig += s * s
+                    d = q - s
+                    err += d * d
+                    scaled.append(s)
         requant_db = db(max(sig, 1e-300) / max(err, 1e-300))
         stats = EmpDist(scaled) if fit else None
-        r = tile_gemm_twin(xq, wt, (m_, k_, n_), nr, nc, fx, fw, arch,
-                           fixed_enob=fixed_enob)
-        hidden = relu and li + 1 < len(shapes)
-        nxt = [0.0] * (m_ * n_)
-        for mi in range(m_):
-            for o in range(n_):
-                v = r["y"][mi * n_ + o] * a_scale * 1.0
-                if hidden:
-                    v = max(v, 0.0)
-                nxt[mi * n_ + o] = v
-        ref_nxt = [0.0] * (m_ * n_)
-        for mi in range(m_):
-            for o in range(n_):
-                acc = 0.0
-                for ki in range(k_):
-                    acc += ref[mi * width + ki] * (wt[o * k_ + ki] * 1.0)
-                if hidden:
-                    acc = max(acc, 0.0)
-                ref_nxt[mi * n_ + o] = acc
+        softmax_db = None
+        if kind == "attn":
+            r = attn_twin(xq, a_scale, (mm, k_, n_), lay["heads"], kv,
+                          nr, nc, fx, fw, arch, fixed_enob=fixed_enob)
+            nxt = list(r["y"])
+            softmax_db = r["softmax_requant_db"]
+            s_len = mm if kv is None else kv["ctx"]
+            total_macs += 2 * mm * s_len * n_
+            ref_nxt = attn_reference_twin(ref, width, (mm, k_, n_),
+                                          lay["heads"], kv)
+        else:
+            r = tile_gemm_twin(xq, wt, (m_, k_, n_), nr, nc, fx, fw, arch,
+                               fixed_enob=fixed_enob)
+            total_macs += mm * k_ * n_
+            hidden = relu and li + 1 < len(entries)
+            nxt = [0.0] * (m_ * n_)
+            for mi in range(m_):
+                for o in range(n_):
+                    v = r["y"][mi * n_ + o] * a_scale * 1.0
+                    if hidden:
+                        v = max(v, 0.0)
+                    nxt[mi * n_ + o] = v
+            if kind == "conv":
+                rin, stride = im2col_twin(ref, lay["conv"]), k_
+            else:
+                rin, stride = ref, width
+            ref_nxt = [0.0] * (m_ * n_)
+            for mi in range(m_):
+                for o in range(n_):
+                    acc = 0.0
+                    for ki in range(k_):
+                        acc += rin[mi * stride + ki] * (wt[o * k_ + ki] * 1.0)
+                    if hidden:
+                        acc = max(acc, 0.0)
+                    ref_nxt[mi * n_ + o] = acc
         acts = nxt
         ref = ref_nxt
         width = n_
@@ -991,6 +1277,7 @@ def run_model_twin(shapes, nr, nc, fx, fw, arch, dist_x, dist_w, seed,
         layers.append({
             "a_scale": a_scale,
             "requant_db": requant_db,
+            "softmax_requant_db": softmax_db,
             "stats": stats,
             "grid": r,
         })
@@ -1002,7 +1289,7 @@ def run_model_twin(shapes, nr, nc, fx, fw, arch, dist_x, dist_w, seed,
         err += d * d
     e2e_db = db(max(sig, 1e-300) / max(err, 1e-300))
     total_fj = sum(l["grid"]["total_fj"] for l in layers)
-    macs = sum(m * k * n for (m, k, n) in shapes)
+    macs = total_macs
     return {
         "layers": layers,
         "y": acts,
@@ -1010,6 +1297,7 @@ def run_model_twin(shapes, nr, nc, fx, fw, arch, dist_x, dist_w, seed,
         "e2e_sqnr_db": e2e_db,
         "total_fj": total_fj,
         "fj_per_mac": total_fj / float(macs),
+        "fj_per_token": total_fj / float(m_),
         "y_abs_sum": sum(abs(v) for v in acts),
         "y_sq_sum": sum(v * v for v in acts),
         "enob_mean": sum(t["enob"] for t in all_tiles) / float(len(all_tiles)),
@@ -1457,6 +1745,126 @@ def gen_model(outdir):
     write_golden(os.path.join(outdir, "model_report.json"), 1e-6, vals)
 
 
+ATTN_SEED = 77
+ATTN_NR = 16
+ATTN_NC = 16
+ATTN_TOKENS = 4
+DECODE_CTX = 32
+
+
+def transformer_entries(d, heads, layers, tokens):
+    """Twin of model::parse_model's `transformer:<d>x<heads>x<layers>`
+    expansion: per block, fused QKV projection, the attention stage,
+    the output projection, and the 4x MLP pair."""
+    out = []
+    for _ in range(layers):
+        out.append((tokens, d, 3 * d))
+        out.append({"kind": "attn", "shape": (tokens, 3 * d, d),
+                    "heads": heads, "ctx": None})
+        out.append((tokens, d, d))
+        out.append((tokens, d, 4 * d))
+        out.append((tokens, 4 * d, d))
+    return out
+
+
+def decode_entries(d, heads, ctx):
+    """Twin of model::parse_model's `decode:<d>x<heads>x<ctx>`
+    expansion: one token's QKV projection, KV-cache attention (the
+    leading-K rule feeds it exactly the Q slice), output projection."""
+    return [
+        (1, d, 3 * d),
+        {"kind": "attn", "shape": (1, d, d), "heads": heads, "ctx": ctx},
+        (1, d, d),
+    ]
+
+
+def gen_attention_block(outdir):
+    """Twin of tests/golden.rs::golden_attention_block: run the 1-head
+    and 4-head transformer:64x*x2 presets (4 tokens) and the
+    decode:64x4x32 KV-cache GEMV scenario under gr-unit and
+    conventional signal chains, pinning per-layer ADC means, energies,
+    layer/requant SQNRs, the attention stages' per-sub-GEMM ADC means
+    and softmax-requantization SQNRs, and the model totals (end-to-end
+    SQNR, fJ/MAC, fJ/token, output checksums)."""
+    fp4 = FpFormat.fp4_e2m1()
+    dist_x = Dist("gauss_outliers")
+    dist_w = Dist("maxent", fp4)
+    fx = FpFormat.fp(4, 2)
+    cases = [
+        ("t1", transformer_entries(64, 1, 2, ATTN_TOKENS), 1),
+        ("t4", transformer_entries(64, 4, 2, ATTN_TOKENS), 4),
+        ("dec", decode_entries(64, 4, DECODE_CTX), 4),
+    ]
+    vals = []
+    for ctag, entries, heads in cases:
+        for atag, arch in (("gru", "gr-unit"), ("cnv", "conventional")):
+            tag = f"{ctag}_{atag}"
+            r = run_model_twin(entries, ATTN_NR, ATTN_NC, fx, fp4, arch,
+                               dist_x, dist_w, ATTN_SEED,
+                               relu=False, fit=False)
+            for li, l in enumerate(r["layers"]):
+                g = l["grid"]
+                vals.append((f"{tag}_l{li}_enob_mean", g["enob_mean"]))
+                vals.append((f"{tag}_l{li}_total_fj", g["total_fj"]))
+                vals.append((f"{tag}_l{li}_sqnr_db", g["sqnr_db"]))
+                vals.append((f"{tag}_l{li}_requant_db", l["requant_db"]))
+                if l["softmax_requant_db"] is not None:
+                    vals.append((f"{tag}_l{li}_softmax_db",
+                                 l["softmax_requant_db"]))
+                    # per-sub-GEMM ADC means: QK^T heads, then A·V heads
+                    assert len(g["grids"]) == 2 * heads
+                    for sub, sg in enumerate(g["grids"]):
+                        vals.append((f"{tag}_l{li}_sub{sub}_enob",
+                                     sg["enob_mean"]))
+            for key in ("total_fj", "fj_per_mac", "fj_per_token",
+                        "e2e_sqnr_db", "y_abs_sum", "y_sq_sum",
+                        "enob_mean"):
+                assert math.isfinite(r[key]), (tag, key)
+                vals.append((f"{tag}_{key}", r[key]))
+            print(f"  attn {tag}: enob_mean={r['enob_mean']:.3f} "
+                  f"fj/tok={r['fj_per_token']:.0f} "
+                  f"e2e={r['e2e_sqnr_db']:.2f} dB")
+    write_golden(os.path.join(outdir, "attention_block.json"), 1e-6, vals)
+
+
+CONV_SEED = 91
+CONV_SHAPE = (6, 3, 3, 3, 8, 8)  # conv:6x3x3x3@8x8 -> gemm 36x27x6
+CONV_NR = 8
+CONV_NC = 8
+
+
+def gen_conv_im2col(outdir):
+    """Twin of tests/golden.rs::golden_conv_im2col: a conv-led chain
+    (`conv:6x3x3x3@8x8,gemm:36x6x4` — the image requantized once, then
+    im2col onto the unchanged weight-stationary mapper) under gr-unit
+    and conventional signal chains, pinning per-layer ADC means,
+    energies, layer/requant SQNRs, and the model totals."""
+    fp4 = FpFormat.fp4_e2m1()
+    dist_x = Dist("gauss_outliers")
+    dist_w = Dist("maxent", fp4)
+    fx = FpFormat.fp(2, 2)
+    entries = [{"kind": "conv", "conv": CONV_SHAPE},
+               (36, 6, 4)]
+    vals = []
+    for tag, arch in (("gru", "gr-unit"), ("cnv", "conventional")):
+        r = run_model_twin(entries, CONV_NR, CONV_NC, fx, fp4, arch,
+                           dist_x, dist_w, CONV_SEED, relu=True, fit=False)
+        for li, l in enumerate(r["layers"]):
+            g = l["grid"]
+            vals.append((f"{tag}_l{li}_enob_mean", g["enob_mean"]))
+            vals.append((f"{tag}_l{li}_total_fj", g["total_fj"]))
+            vals.append((f"{tag}_l{li}_sqnr_db", g["sqnr_db"]))
+            vals.append((f"{tag}_l{li}_requant_db", l["requant_db"]))
+            vals.append((f"{tag}_l{li}_a_scale", l["a_scale"]))
+        for key in ("total_fj", "fj_per_mac", "e2e_sqnr_db", "y_abs_sum",
+                    "y_sq_sum", "enob_mean"):
+            assert math.isfinite(r[key]), (tag, key)
+            vals.append((f"{tag}_{key}", r[key]))
+        print(f"  conv {tag}: enob_mean={r['enob_mean']:.3f} "
+              f"fj/mac={r['fj_per_mac']:.2f} e2e={r['e2e_sqnr_db']:.2f} dB")
+    write_golden(os.path.join(outdir, "conv_im2col.json"), 1e-6, vals)
+
+
 CI_GOLDEN_SEED = 0xC1
 CI_GOLDEN_HALF_DB = 0.25
 
@@ -1575,6 +1983,83 @@ def model_self_check():
         assert abs(a - b) < 1e-9, (a, b)
 
 
+def im2col_self_check():
+    """Pin the im2col twin against the Rust unit-test vectors
+    (tile::im2col tests) and the 1x1-kernel GEMM equivalence the
+    property suite relies on."""
+    # 1-channel 3x3 image, 2x2 kernel: 4 patches in scan order
+    cv = (1, 1, 2, 2, 3, 3)
+    img = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0]
+    assert im2col_twin(img, cv) == [
+        1.0, 2.0, 4.0, 5.0, 2.0, 3.0, 5.0, 6.0,
+        4.0, 5.0, 7.0, 8.0, 5.0, 6.0, 8.0, 9.0,
+    ]
+    assert conv_gemm_shape(cv) == (4, 4, 1)
+    # a 1x1 kernel is the identity reshape (HWC row-major == [H*W][Cin])
+    cv1 = (5, 3, 1, 1, 4, 4)
+    img2 = [float(i) * 0.25 for i in range(conv_img_elems(cv1))]
+    assert im2col_twin(img2, cv1) == img2
+    assert conv_gemm_shape(cv1) == (16, 3, 5)
+    # ...so the conv-led model chain equals the flattened GEMM chain
+    # bit for bit (same draws, same requant, same tiles)
+    fp4 = FpFormat.fp4_e2m1()
+    fx = FpFormat.fp(2, 2)
+    a = run_model_twin([{"kind": "conv", "conv": (4, 3, 1, 1, 3, 3)},
+                        (9, 4, 2)],
+                       4, 4, fx, fp4, "gr-unit",
+                       Dist("gauss_outliers"), Dist("maxent", fp4), 5,
+                       relu=True, fit=False)
+    b = run_model_twin([(9, 3, 4), (9, 4, 2)],
+                       4, 4, fx, fp4, "gr-unit",
+                       Dist("gauss_outliers"), Dist("maxent", fp4), 5,
+                       relu=True, fit=False)
+    assert a["y"] == b["y"] and a["total_fj"] == b["total_fj"]
+    assert a["e2e_sqnr_db"] == b["e2e_sqnr_db"]
+    print("im2col self-check OK")
+
+
+def attn_self_check():
+    """Pin the attention twin's chain semantics: softmax rows normalize
+    (a constant row is exactly uniform), and with a fine input format
+    plus a near-transparent fixed ADC the prefill attention chain must
+    track the f64 reference chain closely."""
+    sm = softmax_rows_f32_twin([0.5, 1.5, -0.25, 2.0,
+                                3.0, 3.0, 3.0, 3.0], 4)
+    for r0 in range(0, 8, 4):
+        assert abs(sum(sm[r0:r0 + 4]) - 1.0) < 1e-6
+    assert all(p == 0.25 for p in sm[4:])
+    # shift invariance is exact in the max-subtracted f32 form
+    a = softmax_rows_f32_twin([0.5, -1.0, 2.0, 0.0], 4)
+    b = softmax_rows_f32_twin([4.5, 3.0, 6.0, 4.0], 4)
+    assert a == b
+    # near-transparent prefill chain: qkv -> attn at FP(4,10) for BOTH
+    # operand formats and fixed 30-bit ADCs. The weight format must be
+    # fine too: K and V are weight-stationary, so the attention stage
+    # re-encodes activation slices in the array's *weight* format — at
+    # FP4 that quantization dominates the stage error by design.
+    fine = FpFormat.fp(4, 10)
+    entries = [(3, 8, 24),
+               {"kind": "attn", "shape": (3, 24, 8), "heads": 2,
+                "ctx": None}]
+    r = run_model_twin(entries, 8, 8, fine, fine, "gr-unit",
+                       Dist("maxent", fine), Dist("maxent", fine), 13,
+                       relu=False, fit=False, fixed_enob=30.0)
+    for yv, rv in zip(r["y"], r["ref"]):
+        assert abs(yv - rv) < 5e-2 * max(1.0, abs(rv)), (yv, rv)
+    assert r["e2e_sqnr_db"] > 25.0, r["e2e_sqnr_db"]
+    assert r["layers"][1]["softmax_requant_db"] > 25.0
+    # sub-GEMM accounting: 2 heads -> 2 QK^T + 2 A·V grids
+    assert len(r["layers"][1]["grid"]["grids"]) == 4
+    # decode draws ctx*d keys then values and attends over them
+    rd = run_model_twin(decode_entries(8, 2, 6), 8, 8, fine, fine,
+                        "gr-unit", Dist("maxent", fine),
+                        Dist("maxent", fine), 13,
+                        relu=False, fit=False, fixed_enob=30.0)
+    assert len(rd["y"]) == 8 and math.isfinite(rd["fj_per_token"])
+    assert rd["fj_per_token"] == rd["total_fj"]  # one token
+    print("attn self-check OK")
+
+
 def energy_self_check():
     """Pin the energy/tile twins against the Rust unit-test vectors
     (energy::tests, mac::tests::adc_quantize_basics)."""
@@ -1631,6 +2116,8 @@ def main():
     workload_self_check()
     energy_self_check()
     model_self_check()
+    im2col_self_check()
+    attn_self_check()
     sampler_self_check()
     outdir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           "..", "rust", "tests", "golden")
@@ -1643,6 +2130,8 @@ def main():
     gen_layer(outdir)
     gen_model(outdir)
     gen_samples_ci(outdir)
+    gen_attention_block(outdir)
+    gen_conv_im2col(outdir)
 
 
 if __name__ == "__main__":

@@ -43,7 +43,7 @@ pub mod flags {
     /// `grcim query` flags.
     pub const QUERY: &[&str] = &[
         "addr", "json", "dr", "sqnr", "samples", "sampler", "seed", "id", "trace", "shape",
-        "tokens", "arch", "nr", "nc", "ne", "nm", "dist", "model",
+        "tokens", "arch", "nr", "nc", "ne", "nm", "dist", "model", "plan",
     ];
     /// `grcim workload` flags.
     pub const WORKLOAD: &[&str] =
@@ -57,6 +57,10 @@ pub mod flags {
     pub const MODEL: &[&str] = &[
         "model", "tokens", "arch", "nr", "nc", "ne", "nm", "dist", "out", "engine",
         "artifacts", "workers", "seed",
+    ];
+    /// `grcim explore` flags.
+    pub const EXPLORE: &[&str] = &[
+        "plan", "out", "ckpt", "resume", "engine", "artifacts", "workers", "seed",
     ];
 }
 
@@ -292,6 +296,7 @@ mod tests {
             flags::WORKLOAD,
             flags::LAYER,
             flags::MODEL,
+            flags::EXPLORE,
         ] {
             for f in flags::CAMPAIGN {
                 assert!(known.contains(f), "{f} missing from {known:?}");

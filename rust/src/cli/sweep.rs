@@ -34,7 +34,7 @@ pub const MAX_FORMAT_BITS: f64 = 32.0;
 /// `nr`-deep zero-padded operand slabs (terabytes) inside a worker.
 pub const MAX_TILE_GEOM: usize = 1 << 20;
 
-fn check_tile_geom(what: &str, nr: usize, nc: usize) -> Result<()> {
+pub(crate) fn check_tile_geom(what: &str, nr: usize, nc: usize) -> Result<()> {
     if nr == 0 || nc == 0 {
         bail!("{what}: nr and nc must be positive");
     }
@@ -44,7 +44,7 @@ fn check_tile_geom(what: &str, nr: usize, nc: usize) -> Result<()> {
     Ok(())
 }
 
-fn check_format_bits(what: &str, n_e: f64, n_m: f64) -> Result<()> {
+pub(crate) fn check_format_bits(what: &str, n_e: f64, n_m: f64) -> Result<()> {
     // NaN fails every comparison, so the range checks alone would wave
     // it through into `as u32` / `FpFormat::fp`'s assert
     if !n_e.is_finite() || !n_m.is_finite() || n_e < 1.0 || n_m < 0.0 {

@@ -1,0 +1,212 @@
+//! Digital-IMC cost model — adder/multiplier/register energies per op at
+//! matched precision, the baseline the analog-vs-digital crossover
+//! analysis of "Analog or Digital In-memory Computing?" (arxiv
+//! 2405.14978, PAPERS.md) compares against.
+//!
+//! A digital IMC macro computes the same `NR`-deep MAC column the analog
+//! array does, but in full-swing CMOS logic: an `Nx x Nw` array
+//! multiplier per cell row, a ripple accumulate-add at the full
+//! accumulator width, and an accumulator register write per MAC. No
+//! DAC, no ADC, no mismatch — the cost is exact-precision arithmetic at
+//! gate-switching energy, priced from the same Table II/III primitives
+//! ([`TechParams`]) as the analog model so the comparison shares one
+//! technology point.
+//!
+//! The headline question the model answers per design point: at what
+//! ADC resolution does the analog MVM stop being cheaper than just
+//! doing the arithmetic digitally? That resolution is the **crossover
+//! ENOB** ([`crossover_enob`]); analog wins strictly below it.
+//!
+//! # Example
+//!
+//! ```
+//! use grcim::energy::{digital, CimArch, TechParams};
+//! use grcim::formats::FpFormat;
+//! use grcim::mac::FormatPair;
+//!
+//! let t = TechParams::default();
+//! let fmts = FormatPair::new(FpFormat::fp4_e2m1(), FpFormat::fp4_e2m1());
+//! // the digital baseline is flat in ENOB; analog crosses it somewhere
+//! let per_op = digital::digital_fj_per_op(&t, &fmts, 32);
+//! assert!(per_op > 0.0);
+//! if let Some(x) = digital::crossover_enob(CimArch::GrUnit, fmts, 32, 32, &t) {
+//!     assert!(x > 0.0);
+//! }
+//! ```
+
+use super::arch::{energy_per_op, CimArch};
+use super::TechParams;
+use crate::formats::FpFormat;
+use crate::mac::FormatPair;
+
+/// Upper bisection bound for [`crossover_enob`] — matches the tile
+/// layer's physical ADC ceiling ([`crate::tile::MAX_TILE_ENOB`]).
+pub const MAX_CROSSOVER_ENOB: f64 = 32.0;
+
+/// Register (D flip-flop) write energy: `4 * C_gate * V_DD^2` per bit —
+/// the standard ~4-gate-equivalent master/slave cost at the Table II
+/// switching model.
+pub fn e_reg(t: &TechParams, bits: f64) -> f64 {
+    assert!(bits >= 0.0);
+    4.0 * t.c_gate_ff * t.v2() * bits
+}
+
+/// Ripple-carry add energy: one full adder per accumulator bit.
+pub fn e_add(t: &TechParams, bits: f64) -> f64 {
+    assert!(bits >= 0.0);
+    t.e_fa() * bits
+}
+
+/// Aligned integer magnitude width of an FP operand —
+/// `(n_m + 1) + (e_max - 1)`, the same FP->INT convention the
+/// conventional-CIM DAC/cell widths use ([`super::arch`] header). For
+/// `fp4_e2m1` this is 4 bits; fractional widths pass through.
+pub fn aligned_bits(f: &FpFormat) -> f64 {
+    (f.n_m + 1.0) + (f.e_max - 1.0)
+}
+
+/// Accumulator width for an `NR`-deep column of `Nx x Nw`-bit products:
+/// the product width plus `ceil(log2 NR)` carry-growth bits.
+pub fn acc_width(nx_bits: f64, nw_bits: f64, nr: usize) -> f64 {
+    assert!(nr >= 1);
+    nx_bits + nw_bits + (nr as f64).log2().ceil()
+}
+
+/// Digital-IMC energy of one matched-precision MAC: an `Nx x Nw` array
+/// multiply over the aligned magnitude words, a full-width accumulate
+/// add, and an accumulator register write. `nr` sets the accumulator
+/// width (deeper columns carry wider partial sums — the digital
+/// analogue of the analog array's dynamic-range growth).
+pub fn digital_mac_fj(t: &TechParams, fmts: &FormatPair, nr: usize) -> f64 {
+    let (nx, nw) = (aligned_bits(&fmts.x), aligned_bits(&fmts.w));
+    let accw = acc_width(nx, nw, nr);
+    t.e_mult(nx, nw) + e_add(t, accw) + e_reg(t, accw)
+}
+
+/// Digital-IMC energy per operation (one MAC = two ops, the paper's
+/// convention) — directly comparable to
+/// [`energy_per_op`](super::energy_per_op)`.total()`.
+pub fn digital_fj_per_op(t: &TechParams, fmts: &FormatPair, nr: usize) -> f64 {
+    digital_mac_fj(t, fmts, nr) / 2.0
+}
+
+/// Per-element digital softmax energy: an 8-bit fixed-point exp
+/// (range-reduction shift-add plus a two-multiply polynomial), the
+/// running-sum accumulate, and the normalization multiply, with one
+/// register write for the probability word. This is the
+/// [`TechParams::e_softmax_fj`] default — the term that un-zeroes the
+/// transformer/decode softmax cost the ROADMAP flags.
+pub fn softmax_element_fj(t: &TechParams) -> f64 {
+    let bits = 8.0;
+    // exp polynomial multiply + normalization multiply
+    let mults = 2.0 * t.e_mult(bits, bits);
+    // range-reduction shift-add + running-sum accumulate
+    let adds = 2.0 * e_add(t, bits);
+    mults + adds + e_reg(t, bits)
+}
+
+/// The analog-vs-digital crossover: the ADC resolution at which the
+/// analog architecture's energy per op ([`energy_per_op`]) matches the
+/// flat digital baseline at the same formats/geometry. `None` when the
+/// analog path is never cheaper (already above digital at ENOB 0) or
+/// never crosses within the physical ADC range — analog wins strictly
+/// below the returned ENOB.
+pub fn crossover_enob(
+    arch: CimArch,
+    fmts: FormatPair,
+    nr: usize,
+    nc: usize,
+    t: &TechParams,
+) -> Option<f64> {
+    let digital = digital_fj_per_op(t, &fmts, nr);
+    let analog = |enob: f64| energy_per_op(arch, fmts, nr, nc, enob, t).total();
+    if analog(0.0) >= digital {
+        return None;
+    }
+    if analog(MAX_CROSSOVER_ENOB) < digital {
+        return None;
+    }
+    // analog per-op energy is monotone increasing in ENOB (the ADC is
+    // its only ENOB-dependent component) — bisect the sign change
+    let (mut lo, mut hi) = (0.0f64, MAX_CROSSOVER_ENOB);
+    for _ in 0..80 {
+        let mid = 0.5 * (lo + hi);
+        if analog(mid) >= digital {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(0.5 * (lo + hi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::FpFormat;
+    use crate::util::approx_eq;
+
+    fn fmts44() -> FormatPair {
+        FormatPair::new(FpFormat::fp4_e2m1(), FpFormat::fp4_e2m1())
+    }
+
+    #[test]
+    fn register_and_add_formulas() {
+        let t = TechParams::default();
+        assert!(approx_eq(e_reg(&t, 8.0), 4.0 * 0.7 * 0.81 * 8.0, 1e-12));
+        assert!(approx_eq(e_add(&t, 8.0), 8.0 * t.e_fa(), 1e-12));
+    }
+
+    #[test]
+    fn aligned_widths_match_arch_convention() {
+        // fp4_e2m1: (1+1) + (3-1) = 4 magnitude bits
+        assert_eq!(aligned_bits(&FpFormat::fp4_e2m1()), 4.0);
+        // fp8_e4m3: (3+1) + (15-1) = 18 aligned bits
+        assert_eq!(aligned_bits(&FpFormat::fp8_e4m3()), 18.0);
+    }
+
+    #[test]
+    fn acc_width_tracks_column_depth() {
+        // 4x4-bit products over 32 rows: 8 + 5 carry bits
+        assert_eq!(acc_width(4.0, 4.0, 32), 13.0);
+        // one row adds no carry bits
+        assert_eq!(acc_width(4.0, 4.0, 1), 8.0);
+        // non-power-of-two rounds up
+        assert_eq!(acc_width(4.0, 4.0, 33), 14.0);
+    }
+
+    #[test]
+    fn digital_mac_decomposes() {
+        let t = TechParams::default();
+        let f = fmts44();
+        let accw = acc_width(4.0, 4.0, 32);
+        let want = t.e_mult(4.0, 4.0) + e_add(&t, accw) + e_reg(&t, accw);
+        assert!(approx_eq(digital_mac_fj(&t, &f, 32), want, 1e-12));
+        assert!(approx_eq(
+            digital_fj_per_op(&t, &f, 32),
+            want / 2.0,
+            1e-12
+        ));
+    }
+
+    #[test]
+    fn softmax_element_matches_hand_total() {
+        let t = TechParams::default();
+        // 2*272.16 + 54.432 + 18.144 = 616.896 fJ at Table III defaults
+        assert!(approx_eq(softmax_element_fj(&t), 616.896, 1e-9));
+    }
+
+    #[test]
+    fn crossover_is_the_energy_equality_point() {
+        let t = TechParams::default();
+        let f = fmts44();
+        let x = crossover_enob(CimArch::GrUnit, f, 32, 32, &t)
+            .expect("gr-unit at fp4/fp4 must start below the digital baseline");
+        let analog = energy_per_op(CimArch::GrUnit, f, 32, 32, x, &t).total();
+        let digital = digital_fj_per_op(&t, &f, 32);
+        assert!(approx_eq(analog, digital, 1e-6), "analog {analog} digital {digital}");
+        // strictly below the crossover, analog wins
+        let below = energy_per_op(CimArch::GrUnit, f, 32, 32, x - 1.0, &t).total();
+        assert!(below < digital);
+    }
+}

@@ -25,6 +25,7 @@
 //! ```
 
 pub mod arch;
+pub mod digital;
 
 pub use arch::{energy_per_op, global_norm_energy_per_op, CimArch, EnergyBreakdown};
 
@@ -41,17 +42,26 @@ pub struct TechParams {
     pub k3_ff: f64,
     /// Supply voltage, V.
     pub vdd: f64,
+    /// Digital softmax energy per probability element, fJ — the exp +
+    /// normalize + register cost charged once per attention score
+    /// (defaults to [`digital::softmax_element_fj`] at this technology
+    /// point; was silently zero before PR 9, the ROADMAP-documented
+    /// PR-8 undercount).
+    pub e_softmax_fj: f64,
 }
 
 impl Default for TechParams {
     fn default() -> Self {
-        TechParams {
+        let mut t = TechParams {
             c_gate_ff: 0.7,
             k1_ff: 100.0,
             k2_ff: 0.001, // 1 aF
             k3_ff: 50.0,
             vdd: 0.9,
-        }
+            e_softmax_fj: 0.0,
+        };
+        t.e_softmax_fj = digital::softmax_element_fj(&t);
+        t
     }
 }
 
@@ -161,6 +171,9 @@ mod tests {
         assert_eq!(t.k2_ff, 0.001);
         assert_eq!(t.k3_ff, 50.0);
         assert_eq!(t.vdd, 0.9);
+        // softmax per-element default comes from the digital cost model
+        assert!(approx_eq(t.e_softmax_fj, digital::softmax_element_fj(&t), 1e-12));
+        assert!(approx_eq(t.e_softmax_fj, 616.896, 1e-9));
     }
 
     #[test]

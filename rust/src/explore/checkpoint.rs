@@ -1,0 +1,276 @@
+//! Crash-safe JSONL checkpointing for explore campaigns.
+//!
+//! Layout: line 1 is a header object carrying the format tag, the
+//! canonical plan (so `--resume <ckpt>` needs no other input), the
+//! plan's content hash, the engine, and the expanded point count; every
+//! further line is one completed [`super::ExplorePoint`] in canonical
+//! JSON. Workers append whole lines under a mutex and fsync each one,
+//! so a kill at any instant loses at most the line being written; the
+//! loader tolerates (and reports) one partial trailing line.
+//!
+//! Bit-identity across resume: point records serialize floats in
+//! shortest round-trip form ([`crate::config::json::Json`]), so loading
+//! a completed point and re-serializing it reproduces the original
+//! bytes exactly — a resumed campaign's final output cannot differ from
+//! an uninterrupted run's.
+
+use super::{ExplorePoint, ParetoPlan};
+use crate::config::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// The header's format tag — bumped only on incompatible layout changes.
+pub const CKPT_FORMAT: &str = "grcim-pareto-ckpt";
+/// Current checkpoint layout version.
+pub const CKPT_VERSION: f64 = 1.0;
+
+/// A shared append handle: workers lock, write one full line, flush,
+/// and fsync before unlocking — lines never interleave and a completed
+/// point survives any later crash.
+#[derive(Clone)]
+pub struct CkptWriter(Arc<Mutex<File>>);
+
+impl CkptWriter {
+    /// Append one completed point (one line + fsync).
+    pub fn append(&self, point: &ExplorePoint) -> Result<()> {
+        let line = point.to_json().to_string();
+        let mut f = self.0.lock().unwrap_or_else(|p| p.into_inner());
+        f.write_all(line.as_bytes()).context("appending checkpoint point")?;
+        f.write_all(b"\n").context("appending checkpoint newline")?;
+        f.flush().context("flushing checkpoint")?;
+        f.sync_data().context("fsyncing checkpoint")?;
+        Ok(())
+    }
+}
+
+/// What a checkpoint file opened for resume (or creation) holds.
+pub struct Checkpoint {
+    /// The plan the campaign runs (from the header on resume).
+    pub plan: ParetoPlan,
+    /// Engine name the campaign ran on (resume must reuse it — the
+    /// point records are engine-dependent).
+    pub engine: String,
+    /// Completed points loaded from the file, keyed by point index.
+    pub done: BTreeMap<usize, ExplorePoint>,
+    /// Append handle for the remaining points.
+    pub writer: CkptWriter,
+}
+
+/// The header object both the checkpoint file and the final campaign
+/// output lead with: format tag, version, the canonical plan, its
+/// content hash, the engine, and the expanded point count.
+pub fn header_json(plan: &ParetoPlan, engine: &str) -> Json {
+    let mut h = BTreeMap::new();
+    h.insert("format".to_string(), Json::Str(CKPT_FORMAT.to_string()));
+    h.insert("version".to_string(), Json::Num(CKPT_VERSION));
+    h.insert("plan".to_string(), plan.to_json());
+    h.insert(
+        "plan_hash".to_string(),
+        Json::Str(format!("{:016x}", plan.content_hash())),
+    );
+    h.insert("engine".to_string(), Json::Str(engine.to_string()));
+    h.insert("points".to_string(), Json::Num(plan.num_points() as f64));
+    Json::Obj(h)
+}
+
+/// Create a fresh checkpoint file at `path` (truncating any previous
+/// one) and write its header.
+pub fn create(path: &Path, plan: &ParetoPlan, engine: &str) -> Result<Checkpoint> {
+    let mut f = File::create(path)
+        .with_context(|| format!("creating checkpoint {}", path.display()))?;
+    f.write_all(header_json(plan, engine).to_string().as_bytes())?;
+    f.write_all(b"\n")?;
+    f.flush()?;
+    f.sync_data()?;
+    Ok(Checkpoint {
+        plan: plan.clone(),
+        engine: engine.to_string(),
+        done: BTreeMap::new(),
+        writer: CkptWriter(Arc::new(Mutex::new(f))),
+    })
+}
+
+/// Open an existing checkpoint for resume: validate the header (format
+/// tag, version, plan hash vs the embedded plan), load every completed
+/// point, drop at most one partial trailing line, and reopen the file
+/// in append mode. When `expect_plan` is given (resume with an explicit
+/// `--plan` too), its hash must match the header's.
+pub fn resume(path: &Path, expect_plan: Option<&ParetoPlan>) -> Result<Checkpoint> {
+    let f = File::open(path)
+        .with_context(|| format!("opening checkpoint {}", path.display()))?;
+    let mut lines = BufReader::new(f).lines();
+    let header_line = match lines.next() {
+        Some(l) => l.context("reading checkpoint header")?,
+        None => bail!("checkpoint {} is empty (no header)", path.display()),
+    };
+    let header = Json::parse(header_line.trim())
+        .with_context(|| format!("checkpoint {} header is not JSON", path.display()))?;
+    match header.get("format").and_then(Json::as_str) {
+        Some(CKPT_FORMAT) => {}
+        other => bail!(
+            "checkpoint {}: format tag {:?} is not '{CKPT_FORMAT}'",
+            path.display(),
+            other
+        ),
+    }
+    match header.get("version").and_then(Json::as_f64) {
+        Some(v) if v == CKPT_VERSION => {}
+        other => bail!("checkpoint {}: unsupported version {other:?}", path.display()),
+    }
+    let plan_json = header
+        .get("plan")
+        .context("checkpoint header has no plan")?;
+    let plan = ParetoPlan::from_json(plan_json)
+        .context("checkpoint header plan does not resolve")?;
+    let stored_hash = header
+        .get("plan_hash")
+        .and_then(Json::as_str)
+        .context("checkpoint header has no plan_hash")?;
+    let actual = format!("{:016x}", plan.content_hash());
+    if stored_hash != actual {
+        bail!(
+            "checkpoint {}: plan_hash {stored_hash} does not match its plan ({actual}) — \
+             the file was edited or corrupted",
+            path.display()
+        );
+    }
+    if let Some(expect) = expect_plan {
+        let want = format!("{:016x}", expect.content_hash());
+        if want != actual {
+            bail!(
+                "checkpoint {}: plan hash {actual} does not match the supplied plan ({want})",
+                path.display()
+            );
+        }
+    }
+    let engine = header
+        .get("engine")
+        .and_then(Json::as_str)
+        .context("checkpoint header has no engine")?
+        .to_string();
+    let total = plan.num_points();
+
+    let mut done = BTreeMap::new();
+    let mut partial = 0usize;
+    for line in lines {
+        let line = line.context("reading checkpoint line")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        // a kill mid-append leaves at most one unparseable trailing
+        // line; anything unparseable before the end is real corruption
+        match Json::parse(line.trim()).ok().map(|j| ExplorePoint::from_json(&j)) {
+            Some(Ok(p)) => {
+                if p.index >= total {
+                    bail!(
+                        "checkpoint {}: point index {} out of range (plan has {total})",
+                        path.display(),
+                        p.index
+                    );
+                }
+                if partial > 0 {
+                    bail!(
+                        "checkpoint {}: valid point after a corrupt line — \
+                         the file was edited or corrupted",
+                        path.display()
+                    );
+                }
+                done.insert(p.index, p);
+            }
+            _ => partial += 1,
+        }
+    }
+    if partial > 1 {
+        bail!(
+            "checkpoint {}: {partial} unparseable lines (only one partial \
+             trailing line is tolerated)",
+            path.display()
+        );
+    }
+
+    let f = OpenOptions::new()
+        .append(true)
+        .open(path)
+        .with_context(|| format!("reopening checkpoint {}", path.display()))?;
+    Ok(Checkpoint {
+        plan,
+        engine,
+        done,
+        writer: CkptWriter(Arc::new(Mutex::new(f))),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::tiny_plan;
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("grcim_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn create_then_resume_roundtrips_the_plan() {
+        let plan = tiny_plan();
+        let path = tmp("roundtrip.jsonl");
+        create(&path, &plan, "rust").unwrap();
+        let ck = resume(&path, Some(&plan)).unwrap();
+        assert_eq!(ck.plan.content_hash(), plan.content_hash());
+        assert_eq!(ck.engine, "rust");
+        assert!(ck.done.is_empty());
+    }
+
+    #[test]
+    fn mismatched_plan_is_rejected() {
+        let plan = tiny_plan();
+        let path = tmp("mismatch.jsonl");
+        create(&path, &plan, "rust").unwrap();
+        let mut other = tiny_plan();
+        other.seed += 1;
+        let err = resume(&path, Some(&other)).unwrap_err().to_string();
+        assert!(err.contains("does not match the supplied plan"), "{err}");
+    }
+
+    #[test]
+    fn partial_trailing_line_is_tolerated() {
+        let plan = tiny_plan();
+        let path = tmp("partial.jsonl");
+        create(&path, &plan, "rust").unwrap();
+        // simulate a kill mid-append: garbage tail bytes
+        {
+            use std::io::Write;
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"{\"index\":0,\"trunc").unwrap();
+        }
+        let ck = resume(&path, None).unwrap();
+        assert!(ck.done.is_empty());
+    }
+
+    #[test]
+    fn tampered_header_hash_is_rejected() {
+        let plan = tiny_plan();
+        let path = tmp("tampered.jsonl");
+        create(&path, &plan, "rust").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let bad = text.replacen("\"plan_hash\":\"", "\"plan_hash\":\"0", 1);
+        std::fs::write(&path, bad).unwrap();
+        let err = resume(&path, None).unwrap_err().to_string();
+        assert!(err.contains("plan_hash"), "{err}");
+    }
+
+    #[test]
+    fn empty_or_alien_files_are_clean_errors() {
+        let path = tmp("empty.jsonl");
+        std::fs::write(&path, "").unwrap();
+        assert!(resume(&path, None).unwrap_err().to_string().contains("empty"));
+        std::fs::write(&path, "{\"format\":\"other\"}\n").unwrap();
+        let err = resume(&path, None).unwrap_err().to_string();
+        assert!(err.contains("format tag"), "{err}");
+    }
+}

@@ -1,0 +1,98 @@
+//! Pareto-frontier extraction: the dominated-point filter over the
+//! explorer's (energy, quality) plane.
+//!
+//! A design point is on the frontier iff no other point is at least as
+//! good on **both** objectives and strictly better on one — lower
+//! fJ/MAC at no SQNR loss, or higher SQNR at no energy cost. Duplicate
+//! objective pairs are all kept (neither strictly dominates the other),
+//! so frontier membership is a pure function of the objective values and
+//! resume/reshard cannot change it.
+
+/// One candidate in objective space.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Objectives {
+    /// Minimized — the explorer uses fJ/MAC.
+    pub energy: f64,
+    /// Maximized — the explorer uses the achieved SQNR, dB.
+    pub quality: f64,
+}
+
+impl Objectives {
+    /// True when `self` dominates `other`: at least as good on both
+    /// axes, strictly better on one. NaN comparisons are all false, so
+    /// a NaN-valued point neither dominates nor is dominated (it cannot
+    /// evict real points); the explorer only produces finite objectives.
+    pub fn dominates(&self, other: &Objectives) -> bool {
+        let no_worse = self.energy <= other.energy && self.quality >= other.quality;
+        let better = self.energy < other.energy || self.quality > other.quality;
+        no_worse && better
+    }
+}
+
+/// Frontier membership flags, index-aligned with `points`. O(n²) — the
+/// plan-point cap bounds `n` far below where that matters.
+pub fn frontier_mask(points: &[Objectives]) -> Vec<bool> {
+    points
+        .iter()
+        .map(|p| !points.iter().any(|q| q.dominates(p)))
+        .collect()
+}
+
+/// Indices of the non-dominated points, ascending.
+pub fn frontier_indices(points: &[Objectives]) -> Vec<usize> {
+    frontier_mask(points)
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &keep)| keep.then_some(i))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn o(energy: f64, quality: f64) -> Objectives {
+        Objectives { energy, quality }
+    }
+
+    #[test]
+    fn cheaper_and_better_dominates() {
+        assert!(o(1.0, 40.0).dominates(&o(2.0, 35.0)));
+        assert!(!o(2.0, 35.0).dominates(&o(1.0, 40.0)));
+    }
+
+    #[test]
+    fn trade_offs_do_not_dominate_each_other() {
+        // cheaper-but-worse vs pricier-but-better: both survive
+        let pts = [o(1.0, 30.0), o(2.0, 40.0)];
+        assert_eq!(frontier_mask(&pts), vec![true, true]);
+    }
+
+    #[test]
+    fn equal_points_are_both_kept() {
+        let pts = [o(1.0, 35.0), o(1.0, 35.0)];
+        assert!(!pts[0].dominates(&pts[1]));
+        assert_eq!(frontier_mask(&pts), vec![true, true]);
+    }
+
+    #[test]
+    fn interior_points_are_filtered() {
+        let pts = [o(1.0, 30.0), o(2.0, 40.0), o(1.5, 29.0), o(3.0, 39.0)];
+        assert_eq!(frontier_indices(&pts), vec![0, 1]);
+    }
+
+    #[test]
+    fn single_axis_improvements_dominate() {
+        assert!(o(1.0, 35.0).dominates(&o(1.0, 30.0)));
+        assert!(o(1.0, 35.0).dominates(&o(2.0, 35.0)));
+    }
+
+    #[test]
+    fn nan_quality_never_evicts_real_points() {
+        let pts = [o(1.0, f64::NAN), o(2.0, 35.0)];
+        // the NaN point dominates nothing; the finite point survives
+        assert!(!pts[0].dominates(&pts[1]));
+        let mask = frontier_mask(&pts);
+        assert!(mask[1]);
+    }
+}

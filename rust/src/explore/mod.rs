@@ -1,0 +1,1058 @@
+//! Design-space Pareto explorer (the ROADMAP's campaign-scale item):
+//! a [`ParetoPlan`] — TOML grid axes over workload, tile geometry,
+//! input format, architecture, ADC policy, and ADC technology scale —
+//! expands into a deterministic point list, shards across the generic
+//! worker pool, and yields one [`ExplorePoint`] per configuration with
+//! a component-level energy breakdown, the achieved layer SQNR, the
+//! digital-IMC baseline ([`crate::energy::digital`]), and the
+//! analog-vs-digital crossover resolution.
+//!
+//! Determinism contract (the same one the tile mapper keeps): a point's
+//! outcome depends only on (plan, engine, point index) — operands are
+//! drawn from `job_seed(plan.seed, EXPLORE_STREAM, index)` and each
+//! point runs the sequential [`crate::tile::gemm_with_engine`] path
+//! inside its worker — so results are bit-identical for any worker
+//! count, any sharding, and any resume split ([`checkpoint`]).
+//!
+//! Frontier: a point survives ([`frontier`]) iff no other point has
+//! lower-or-equal fJ/MAC **and** higher-or-equal SQNR with one strict.
+//! Membership is a pure function of the point set, so it is recomputed
+//! from scratch whenever points are rendered.
+
+pub mod checkpoint;
+pub mod frontier;
+
+use crate::config::json::Json;
+use crate::config::{Config, Table, Value};
+use crate::coordinator::{pool, CampaignConfig};
+use crate::energy::{digital, CimArch, TechParams};
+use crate::formats::FpFormat;
+use crate::mac::FormatPair;
+use crate::rng::{job_seed, Pcg64};
+use crate::runtime::{build_engine, Engine, EngineKind};
+use crate::server::{MAX_LAYER_ELEMS, MAX_LAYER_MACS};
+use crate::tile::{
+    gemm_with_engine, im2col, parse_shape, AdcPolicy, ConvShape, TileConfig, MAX_TILE_ENOB,
+};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+pub use checkpoint::{Checkpoint, CkptWriter};
+pub use frontier::{frontier_indices, frontier_mask, Objectives};
+
+/// Grid-index namespace of explore-point operand streams in
+/// [`crate::rng::job_seed`] — disjoint from the layer runner's
+/// [`crate::tile::mapper::LAYER_STREAM`] and from campaign job streams,
+/// so explorer operands never collide with any other draw at the same
+/// seed. The Python twin (`tools/gen_goldens.py`) uses the same
+/// constant.
+pub const EXPLORE_STREAM: u64 = 0x9A2E;
+
+/// Largest expanded grid a plan may describe. Keeps a typo'd axis from
+/// turning one `explore` invocation into an unbounded campaign; real
+/// studies (the paper sweeps ≤ a few dozen configurations per figure)
+/// sit far below this.
+pub const MAX_PLAN_POINTS: usize = 4096;
+
+/// Default campaign seed when the plan has none.
+pub const DEFAULT_PLAN_SEED: u64 = 42;
+
+/// Default batch rows M for named workload shapes (`mlp-up:<d>`, …).
+pub const DEFAULT_PLAN_TOKENS: usize = 16;
+
+/// FNV-1a 64 over the canonical plan serialization — the checkpoint
+/// header's and the serve cache's content hash. (Same constants as the
+/// trace reader's integrity hash; tiny and dependency-free.)
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Stable engine-kind name recorded in checkpoint headers and cache
+/// keys (matches the serve layer's `--engine` spellings).
+pub fn engine_name(kind: EngineKind) -> &'static str {
+    match kind {
+        EngineKind::Rust => "rust",
+        EngineKind::Pjrt => "pjrt",
+        EngineKind::Auto => "auto",
+    }
+}
+
+/// Shortest round-trip rendering of a number (the [`Json`] convention),
+/// used wherever an axis value becomes part of a canonical string.
+fn fmt_num(n: f64) -> String {
+    Json::Num(n).to_string()
+}
+
+/// Parse a plan's ADC-policy string: `spec` (per-tile solved
+/// resolution) or `fixed:<bits>`. Returns the policy plus its canonical
+/// rendering (what the plan hash and point records carry).
+pub fn parse_adc(s: &str) -> Result<(AdcPolicy, String)> {
+    if s == "spec" {
+        return Ok((AdcPolicy::PerTileSpec, "spec".to_string()));
+    }
+    if let Some(bits) = s.strip_prefix("fixed:") {
+        let b: f64 = bits
+            .parse()
+            .with_context(|| format!("adc '{s}': '{bits}' is not a resolution"))?;
+        if !b.is_finite() || b <= 0.0 || b > MAX_TILE_ENOB {
+            bail!("adc '{s}': resolution must be in (0, {MAX_TILE_ENOB}] bits");
+        }
+        return Ok((AdcPolicy::Fixed(b), format!("fixed:{}", fmt_num(b))));
+    }
+    bail!("unknown adc policy '{s}' (spec | fixed:<bits>)")
+}
+
+/// A design-space exploration plan: scalar campaign knobs plus the grid
+/// axes, expanded as a lexicographic cartesian product in the fixed
+/// axis order workload → nr → nc → arch → n_e → n_m → adc → adc_scale.
+///
+/// Axis values are stored canonicalized (arch names, adc strings,
+/// shortest-form numbers), so two plans that mean the same grid hash
+/// identically regardless of how they were spelled.
+#[derive(Debug, Clone)]
+pub struct ParetoPlan {
+    /// Plan label (reports only; part of the canonical form).
+    pub name: String,
+    /// Campaign seed every point's operand stream derives from.
+    pub seed: u64,
+    /// Batch rows M for named workload shapes.
+    pub tokens: usize,
+    /// Activation workload distribution (weights are always max-entropy
+    /// FP4, the paper's sweep convention).
+    pub distribution: String,
+    /// Workload axis: `gemm:MxKxN`, `conv:…`, or a named shape.
+    pub workload: Vec<String>,
+    /// Accumulation-depth axis N_R.
+    pub nr: Vec<usize>,
+    /// Columns-per-tile axis N_C.
+    pub nc: Vec<usize>,
+    /// Architecture axis.
+    pub arch: Vec<CimArch>,
+    /// Input exponent-bits axis.
+    pub n_e: Vec<f64>,
+    /// Input mantissa-bits axis.
+    pub n_m: Vec<f64>,
+    /// ADC-policy axis, canonical strings (`spec` | `fixed:<bits>`).
+    pub adc: Vec<String>,
+    /// ADC technology-scale axis (scales the Table III k1/k2 terms via
+    /// [`TechParams::with_adc_scale`]).
+    pub adc_scale: Vec<f64>,
+}
+
+/// One `[axes]` value as a list (scalars promote to one-element lists).
+fn axis_values<'a>(t: &'a Table, key: &str) -> Option<Vec<&'a Value>> {
+    t.get(key).map(|v| match v {
+        Value::Arr(items) => items.iter().collect(),
+        scalar => vec![scalar],
+    })
+}
+
+fn axis_nums(t: &Table, key: &str) -> Result<Option<Vec<f64>>> {
+    let Some(vals) = axis_values(t, key) else { return Ok(None) };
+    let nums = vals
+        .iter()
+        .map(|v| v.as_f64().with_context(|| format!("axes.{key}: values must be numbers")))
+        .collect::<Result<Vec<_>>>()?;
+    if nums.is_empty() {
+        bail!("axes.{key}: axis must not be empty");
+    }
+    Ok(Some(nums))
+}
+
+fn axis_strs(t: &Table, key: &str) -> Result<Option<Vec<String>>> {
+    let Some(vals) = axis_values(t, key) else { return Ok(None) };
+    let strs = vals
+        .iter()
+        .map(|v| {
+            v.as_str()
+                .map(str::to_string)
+                .with_context(|| format!("axes.{key}: values must be strings"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    if strs.is_empty() {
+        bail!("axes.{key}: axis must not be empty");
+    }
+    Ok(Some(strs))
+}
+
+impl ParetoPlan {
+    /// Build and validate a plan from raw field values (the shared path
+    /// under [`ParetoPlan::from_config`] and [`ParetoPlan::from_json`]).
+    #[allow(clippy::too_many_arguments)]
+    fn build(
+        name: String,
+        seed: u64,
+        tokens: usize,
+        distribution: String,
+        workload: Vec<String>,
+        nr: Vec<usize>,
+        nc: Vec<usize>,
+        arch_names: Vec<String>,
+        n_e: Vec<f64>,
+        n_m: Vec<f64>,
+        adc_raw: Vec<String>,
+        adc_scale: Vec<f64>,
+    ) -> Result<ParetoPlan> {
+        if workload.is_empty() {
+            bail!("plan '{name}': axes.workload is required and must not be empty");
+        }
+        for w in &workload {
+            parse_shape(w, tokens).with_context(|| format!("plan '{name}'"))?;
+        }
+        if distribution.starts_with("empirical:") {
+            bail!(
+                "plan '{name}': empirical distributions are not allowed in explore \
+                 plans (the plan must be self-contained for content hashing)"
+            );
+        }
+        crate::cli::sweep::dist_by_name(&distribution, FpFormat::fp(4, 2))
+            .with_context(|| format!("plan '{name}'"))?;
+        for (&r, &c) in nr.iter().flat_map(|r| nc.iter().map(move |c| (r, c))) {
+            crate::cli::sweep::check_tile_geom(&format!("plan '{name}'"), r, c)?;
+        }
+        let arch = arch_names
+            .iter()
+            .map(|a| CimArch::parse(a).with_context(|| format!("plan '{name}'")))
+            .collect::<Result<Vec<_>>>()?;
+        for (&e, &m) in n_e.iter().flat_map(|e| n_m.iter().map(move |m| (e, m))) {
+            crate::cli::sweep::check_format_bits(&format!("plan '{name}'"), e, m)?;
+        }
+        let adc = adc_raw
+            .iter()
+            .map(|a| parse_adc(a).map(|(_, canon)| canon))
+            .collect::<Result<Vec<_>>>()
+            .with_context(|| format!("plan '{name}'"))?;
+        for &s in &adc_scale {
+            if !s.is_finite() || s <= 0.0 {
+                bail!("plan '{name}': adc_scale values must be finite and positive");
+            }
+        }
+        if [arch.len(), adc.len(), adc_scale.len()].contains(&0) {
+            bail!("plan '{name}': axes must not be empty");
+        }
+        let plan = ParetoPlan {
+            name,
+            seed,
+            tokens,
+            distribution,
+            workload,
+            nr,
+            nc,
+            arch,
+            n_e,
+            n_m,
+            adc,
+            adc_scale,
+        };
+        let n = plan.num_points();
+        if n == 0 {
+            bail!("plan '{}': the grid is empty", plan.name);
+        }
+        if n > MAX_PLAN_POINTS {
+            bail!(
+                "plan '{}': {n} grid points exceed the {MAX_PLAN_POINTS}-point cap",
+                plan.name
+            );
+        }
+        plan.check_caps()?;
+        Ok(plan)
+    }
+
+    /// Parse a plan from its TOML document: root keys `name`, `seed`,
+    /// `tokens`, `distribution`, and an `[axes]` section whose values
+    /// are scalars or flat arrays (`workload` required; every other
+    /// axis has a single-value default).
+    pub fn from_config(cfg: &Config) -> Result<ParetoPlan> {
+        let name = cfg
+            .root
+            .get("name")
+            .and_then(Value::as_str)
+            .unwrap_or("explore")
+            .to_string();
+        let seed = cfg
+            .root
+            .get("seed")
+            .map(|v| v.as_f64().context("seed must be a number"))
+            .transpose()?
+            .map(|n| n as u64)
+            .unwrap_or(DEFAULT_PLAN_SEED);
+        let tokens = cfg
+            .root
+            .get("tokens")
+            .map(|v| v.as_usize().context("tokens must be a number"))
+            .transpose()?
+            .unwrap_or(DEFAULT_PLAN_TOKENS);
+        let distribution = cfg
+            .root
+            .get("distribution")
+            .map(|v| v.as_str().context("distribution must be a string").map(str::to_string))
+            .transpose()?
+            .unwrap_or_else(|| "gauss_outliers".to_string());
+        let empty = Table::new();
+        let axes = cfg.section("axes").unwrap_or(&empty);
+        let workload = axis_strs(axes, "workload")?
+            .with_context(|| format!("plan '{name}': [axes] needs a workload axis"))?;
+        let to_usize = |v: Option<Vec<f64>>| v.map(|ns| ns.iter().map(|&n| n as usize).collect());
+        Self::build(
+            name,
+            seed,
+            tokens,
+            distribution,
+            workload,
+            to_usize(axis_nums(axes, "nr")?).unwrap_or_else(|| vec![32]),
+            to_usize(axis_nums(axes, "nc")?).unwrap_or_else(|| vec![32]),
+            axis_strs(axes, "arch")?.unwrap_or_else(|| vec!["gr-unit".to_string()]),
+            axis_nums(axes, "n_e")?.unwrap_or_else(|| vec![4.0]),
+            axis_nums(axes, "n_m")?.unwrap_or_else(|| vec![2.0]),
+            axis_strs(axes, "adc")?.unwrap_or_else(|| vec!["spec".to_string()]),
+            axis_nums(axes, "adc_scale")?.unwrap_or_else(|| vec![1.0]),
+        )
+    }
+
+    /// Parse plan TOML text directly.
+    pub fn from_toml(text: &str) -> Result<ParetoPlan> {
+        Self::from_config(&Config::parse(text)?)
+    }
+
+    /// The canonical serialization the content hash covers.
+    pub fn to_json(&self) -> Json {
+        let strs = |v: &[String]| Json::Arr(v.iter().map(|s| Json::Str(s.clone())).collect());
+        let nums = |v: &[f64]| Json::Arr(v.iter().map(|&n| Json::Num(n)).collect());
+        let ints = |v: &[usize]| Json::Arr(v.iter().map(|&n| Json::Num(n as f64)).collect());
+        let mut axes = BTreeMap::new();
+        axes.insert("workload".to_string(), strs(&self.workload));
+        axes.insert("nr".to_string(), ints(&self.nr));
+        axes.insert("nc".to_string(), ints(&self.nc));
+        axes.insert(
+            "arch".to_string(),
+            Json::Arr(self.arch.iter().map(|a| Json::Str(a.name().to_string())).collect()),
+        );
+        axes.insert("n_e".to_string(), nums(&self.n_e));
+        axes.insert("n_m".to_string(), nums(&self.n_m));
+        axes.insert("adc".to_string(), strs(&self.adc));
+        axes.insert("adc_scale".to_string(), nums(&self.adc_scale));
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("seed".to_string(), Json::Num(self.seed as f64));
+        m.insert("tokens".to_string(), Json::Num(self.tokens as f64));
+        m.insert("distribution".to_string(), Json::Str(self.distribution.clone()));
+        m.insert("axes".to_string(), Json::Obj(axes));
+        Json::Obj(m)
+    }
+
+    /// Rebuild (and re-validate) a plan from its canonical JSON — the
+    /// checkpoint-header path.
+    pub fn from_json(j: &Json) -> Result<ParetoPlan> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .context("plan json has no name")?
+            .to_string();
+        let seed = j.get("seed").and_then(Json::as_f64).context("plan json has no seed")? as u64;
+        let tokens = j.get("tokens").and_then(Json::as_usize).context("plan json has no tokens")?;
+        let distribution = j
+            .get("distribution")
+            .and_then(Json::as_str)
+            .context("plan json has no distribution")?
+            .to_string();
+        let axes = j.get("axes").context("plan json has no axes")?;
+        let strs = |key: &str| -> Result<Vec<String>> {
+            axes.get(key)
+                .with_context(|| format!("plan json axes has no {key}"))?
+                .items()
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .map(str::to_string)
+                        .with_context(|| format!("plan json axes.{key}: not a string"))
+                })
+                .collect()
+        };
+        let nums = |key: &str| -> Result<Vec<f64>> {
+            axes.get(key)
+                .with_context(|| format!("plan json axes has no {key}"))?
+                .items()
+                .iter()
+                .map(|v| {
+                    v.as_f64().with_context(|| format!("plan json axes.{key}: not a number"))
+                })
+                .collect()
+        };
+        Self::build(
+            name,
+            seed,
+            tokens,
+            distribution,
+            strs("workload")?,
+            nums("nr")?.iter().map(|&n| n as usize).collect(),
+            nums("nc")?.iter().map(|&n| n as usize).collect(),
+            strs("arch")?,
+            nums("n_e")?,
+            nums("n_m")?,
+            strs("adc")?,
+            nums("adc_scale")?,
+        )
+    }
+
+    /// FNV-1a 64 over the canonical serialization — the identity the
+    /// checkpoint header and the serve `pareto` cache key carry.
+    pub fn content_hash(&self) -> u64 {
+        fnv1a64(self.to_json().to_string().as_bytes())
+    }
+
+    /// Number of grid points (product of axis lengths).
+    pub fn num_points(&self) -> usize {
+        self.workload.len()
+            * self.nr.len()
+            * self.nc.len()
+            * self.arch.len()
+            * self.n_e.len()
+            * self.n_m.len()
+            * self.adc.len()
+            * self.adc_scale.len()
+    }
+
+    /// Decode grid point `index` (lexicographic: workload outermost,
+    /// adc_scale innermost).
+    pub fn point(&self, index: usize) -> Result<PointSpec> {
+        if index >= self.num_points() {
+            bail!("point index {index} out of range (plan has {})", self.num_points());
+        }
+        let mut rest = index;
+        let mut take = |len: usize| {
+            let stride: usize = rest % len;
+            rest /= len;
+            stride
+        };
+        // innermost axis first (division peels from the right)
+        let i_scale = take(self.adc_scale.len());
+        let i_adc = take(self.adc.len());
+        let i_nm = take(self.n_m.len());
+        let i_ne = take(self.n_e.len());
+        let i_arch = take(self.arch.len());
+        let i_nc = take(self.nc.len());
+        let i_nr = take(self.nr.len());
+        let i_w = take(self.workload.len());
+        let adc_str = self.adc[i_adc].clone();
+        let (adc, _) = parse_adc(&adc_str)?;
+        Ok(PointSpec {
+            index,
+            workload: self.workload[i_w].clone(),
+            nr: self.nr[i_nr],
+            nc: self.nc[i_nc],
+            arch: self.arch[i_arch],
+            n_e: self.n_e[i_ne],
+            n_m: self.n_m[i_nm],
+            adc,
+            adc_str,
+            adc_scale: self.adc_scale[i_scale],
+        })
+    }
+
+    /// Enforce the serve-layer resource caps across the whole grid at
+    /// plan time: every workload within the per-request MAC and
+    /// operand-slab caps, and the grid's total MACs within the same
+    /// budget the `model` request grants a whole network.
+    pub fn check_caps(&self) -> Result<()> {
+        let mut total_macs = 0u64;
+        let points_per_workload = (self.num_points() / self.workload.len()) as u64;
+        for w in &self.workload {
+            let shape = parse_shape(w, self.tokens)?;
+            if shape.macs() > MAX_LAYER_MACS {
+                bail!(
+                    "plan '{}': workload {w} is too large ({} MACs > {MAX_LAYER_MACS})",
+                    self.name,
+                    shape.macs()
+                );
+            }
+            let slab = ((shape.m * shape.k) as u64).max((shape.n * shape.k) as u64);
+            if slab > MAX_LAYER_ELEMS {
+                bail!(
+                    "plan '{}': workload {w} needs an operand slab of {slab} elements \
+                     (> {MAX_LAYER_ELEMS})",
+                    self.name
+                );
+            }
+            total_macs = total_macs.saturating_add(shape.macs().saturating_mul(points_per_workload));
+        }
+        if total_macs > MAX_LAYER_MACS {
+            bail!(
+                "plan '{}': the whole grid executes {total_macs} MACs \
+                 (> {MAX_LAYER_MACS}); shrink the axes or the workloads",
+                self.name
+            );
+        }
+        Ok(())
+    }
+}
+
+/// One decoded grid point, ready to evaluate.
+#[derive(Debug, Clone)]
+pub struct PointSpec {
+    /// Grid index (lexicographic).
+    pub index: usize,
+    /// Workload shape string.
+    pub workload: String,
+    /// Accumulation depth N_R.
+    pub nr: usize,
+    /// Columns per tile N_C.
+    pub nc: usize,
+    /// Architecture.
+    pub arch: CimArch,
+    /// Input exponent bits.
+    pub n_e: f64,
+    /// Input mantissa bits.
+    pub n_m: f64,
+    /// Resolved ADC policy.
+    pub adc: AdcPolicy,
+    /// Canonical policy string (what the record carries).
+    pub adc_str: String,
+    /// ADC technology scale.
+    pub adc_scale: f64,
+}
+
+/// One evaluated design point: the configuration echo, the achieved
+/// fidelity, the component-level energy breakdown (summing to
+/// `total_fj` within 1e-9 relative — the acceptance invariant), and the
+/// digital-IMC baseline comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExplorePoint {
+    /// Grid index in the plan's lexicographic expansion.
+    pub index: usize,
+    /// Workload shape string.
+    pub workload: String,
+    /// Resolved GEMM dimensions, `MxKxN`.
+    pub shape: String,
+    /// Accumulation depth N_R.
+    pub nr: usize,
+    /// Columns per tile N_C.
+    pub nc: usize,
+    /// Architecture name.
+    pub arch: String,
+    /// Input exponent bits.
+    pub n_e: f64,
+    /// Input mantissa bits.
+    pub n_m: f64,
+    /// ADC policy, canonical string.
+    pub adc: String,
+    /// ADC technology scale.
+    pub adc_scale: f64,
+    /// Mean per-tile ADC resolution, bits.
+    pub enob_mean: f64,
+    /// Layer-output SQNR vs the exact float GEMM, dB.
+    pub sqnr_db: f64,
+    /// Column-ADC energy over the layer, fJ.
+    pub adc_fj: f64,
+    /// Row-DAC energy, fJ.
+    pub dac_fj: f64,
+    /// Cell-array switching energy, fJ.
+    pub cells_fj: f64,
+    /// Exponent-logic energy, fJ.
+    pub exp_logic_fj: f64,
+    /// Column exponent adder-tree energy, fJ.
+    pub tree_fj: f64,
+    /// Output-normalization multiplier energy, fJ.
+    pub norm_mult_fj: f64,
+    /// Digital partial-sum reduction energy, fJ.
+    pub reduction_fj: f64,
+    /// Global-normalization wrapper energy, fJ.
+    pub global_norm_fj: f64,
+    /// Digital softmax energy, fJ (0 for GEMM/conv workloads).
+    pub softmax_fj: f64,
+    /// Total layer energy, fJ.
+    pub total_fj: f64,
+    /// Energy per useful MAC, fJ.
+    pub fj_per_mac: f64,
+    /// The digital-IMC baseline at matched formats and depth, fJ/MAC.
+    pub digital_fj_per_mac: f64,
+    /// `fj_per_mac / digital_fj_per_mac` — < 1 means the analog array
+    /// beats the digital baseline at this configuration.
+    pub digital_ratio: f64,
+    /// ADC resolution where this configuration's analog energy crosses
+    /// the digital baseline (None when one side wins everywhere in
+    /// [0, [`digital::MAX_CROSSOVER_ENOB`]]).
+    pub crossover_enob: Option<f64>,
+}
+
+impl ExplorePoint {
+    /// Sum of every breakdown component, fJ. The acceptance invariant
+    /// requires this to match `total_fj` within 1e-9 relative.
+    pub fn breakdown_sum(&self) -> f64 {
+        self.adc_fj
+            + self.dac_fj
+            + self.cells_fj
+            + self.exp_logic_fj
+            + self.tree_fj
+            + self.norm_mult_fj
+            + self.reduction_fj
+            + self.global_norm_fj
+            + self.softmax_fj
+    }
+
+    /// Whether the breakdown reconciles with the total (1e-9 relative).
+    pub fn breakdown_reconciles(&self) -> bool {
+        let rel = (self.breakdown_sum() - self.total_fj).abs() / self.total_fj.max(1e-300);
+        rel < 1e-9
+    }
+
+    /// The objectives the frontier filter sees.
+    pub fn objectives(&self) -> Objectives {
+        Objectives { energy: self.fj_per_mac, quality: self.sqnr_db }
+    }
+
+    /// Canonical record (sorted keys, shortest round-trip floats) — the
+    /// checkpoint line format. Does NOT include frontier membership:
+    /// that is a property of the point *set*, added at render time.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        let mut num = |k: &str, v: f64| m.insert(k.to_string(), Json::Num(v));
+        num("index", self.index as f64);
+        num("nr", self.nr as f64);
+        num("nc", self.nc as f64);
+        num("n_e", self.n_e);
+        num("n_m", self.n_m);
+        num("adc_scale", self.adc_scale);
+        num("enob_mean", self.enob_mean);
+        num("sqnr_db", self.sqnr_db);
+        num("adc_fj", self.adc_fj);
+        num("dac_fj", self.dac_fj);
+        num("cells_fj", self.cells_fj);
+        num("exp_logic_fj", self.exp_logic_fj);
+        num("tree_fj", self.tree_fj);
+        num("norm_mult_fj", self.norm_mult_fj);
+        num("reduction_fj", self.reduction_fj);
+        num("global_norm_fj", self.global_norm_fj);
+        num("softmax_fj", self.softmax_fj);
+        num("total_fj", self.total_fj);
+        num("fj_per_mac", self.fj_per_mac);
+        num("digital_fj_per_mac", self.digital_fj_per_mac);
+        num("digital_ratio", self.digital_ratio);
+        m.insert(
+            "crossover_enob".to_string(),
+            match self.crossover_enob {
+                Some(e) => Json::Num(e),
+                None => Json::Null,
+            },
+        );
+        m.insert("workload".to_string(), Json::Str(self.workload.clone()));
+        m.insert("shape".to_string(), Json::Str(self.shape.clone()));
+        m.insert("arch".to_string(), Json::Str(self.arch.clone()));
+        m.insert("adc".to_string(), Json::Str(self.adc.clone()));
+        Json::Obj(m)
+    }
+
+    /// Parse a checkpoint record (ignores any extra keys, e.g. the
+    /// `frontier` flag final outputs add).
+    pub fn from_json(j: &Json) -> Result<ExplorePoint> {
+        let num = |k: &str| -> Result<f64> {
+            j.get(k).and_then(Json::as_f64).with_context(|| format!("point has no number {k}"))
+        };
+        let s = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .with_context(|| format!("point has no string {k}"))
+        };
+        Ok(ExplorePoint {
+            index: num("index")? as usize,
+            workload: s("workload")?,
+            shape: s("shape")?,
+            nr: num("nr")? as usize,
+            nc: num("nc")? as usize,
+            arch: s("arch")?,
+            n_e: num("n_e")?,
+            n_m: num("n_m")?,
+            adc: s("adc")?,
+            adc_scale: num("adc_scale")?,
+            enob_mean: num("enob_mean")?,
+            sqnr_db: num("sqnr_db")?,
+            adc_fj: num("adc_fj")?,
+            dac_fj: num("dac_fj")?,
+            cells_fj: num("cells_fj")?,
+            exp_logic_fj: num("exp_logic_fj")?,
+            tree_fj: num("tree_fj")?,
+            norm_mult_fj: num("norm_mult_fj")?,
+            reduction_fj: num("reduction_fj")?,
+            global_norm_fj: num("global_norm_fj")?,
+            softmax_fj: num("softmax_fj")?,
+            total_fj: num("total_fj")?,
+            fj_per_mac: num("fj_per_mac")?,
+            digital_fj_per_mac: num("digital_fj_per_mac")?,
+            digital_ratio: num("digital_ratio")?,
+            crossover_enob: match j.get("crossover_enob") {
+                Some(Json::Null) | None => None,
+                Some(v) => Some(v.as_f64().context("crossover_enob is not a number")?),
+            },
+        })
+    }
+}
+
+/// Evaluate grid point `index` of `plan` on `engine`, sequentially (the
+/// unit of work one pool worker executes). Deterministic in
+/// (plan, engine, index) only.
+pub fn eval_point(engine: &dyn Engine, plan: &ParetoPlan, index: usize) -> Result<ExplorePoint> {
+    let spec = plan.point(index)?;
+    let shape = parse_shape(&spec.workload, plan.tokens)?;
+    let fmt_x = FpFormat::fp(spec.n_e as u32, spec.n_m as u32);
+    let fmts = FormatPair::new(fmt_x, FpFormat::fp4_e2m1());
+    let dist_x = crate::cli::sweep::dist_by_name(&plan.distribution, fmt_x)?;
+    let dist_w = crate::distributions::Distribution::max_entropy(FpFormat::fp4_e2m1());
+    let cfg = TileConfig {
+        nr: spec.nr,
+        nc: spec.nc,
+        fmts,
+        arch: spec.arch,
+        adc: spec.adc,
+        tech: TechParams::default().with_adc_scale(spec.adc_scale),
+    };
+
+    // operand draw order mirrors the layer runner: X (or the conv
+    // image, then im2col) first, then the transposed weights
+    let mut rng = Pcg64::seeded(job_seed(plan.seed, EXPLORE_STREAM, index as u64));
+    let x = if spec.workload.starts_with("conv:") {
+        let cs = ConvShape::parse(&spec.workload)?;
+        let mut img = vec![0.0f32; cs.img_elems()];
+        dist_x.fill_f32(&mut rng, &mut img);
+        im2col(&img, &cs)
+    } else {
+        let mut x = vec![0.0f32; shape.m * shape.k];
+        dist_x.fill_f32(&mut rng, &mut x);
+        x
+    };
+    let mut wt = vec![0.0f32; shape.n * shape.k];
+    dist_w.fill_f32(&mut rng, &mut wt);
+
+    let label = format!("p{index}");
+    let res = gemm_with_engine(engine, &label, &cfg, shape, &x, &wt)?;
+    let report = &res.report;
+    let comps = report.component_totals();
+    let by = |name: &str| {
+        comps
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| *v)
+            .expect("component name")
+    };
+    let digital_fj_per_mac = digital::digital_mac_fj(&cfg.tech, &fmts, spec.nr);
+    Ok(ExplorePoint {
+        index,
+        workload: spec.workload.clone(),
+        shape: shape.to_string(),
+        nr: spec.nr,
+        nc: spec.nc,
+        arch: spec.arch.name().to_string(),
+        n_e: spec.n_e,
+        n_m: spec.n_m,
+        adc: spec.adc_str.clone(),
+        adc_scale: spec.adc_scale,
+        enob_mean: report.enob_mean(),
+        sqnr_db: report.sqnr_db,
+        adc_fj: by("adc"),
+        dac_fj: by("dac"),
+        cells_fj: by("cells"),
+        exp_logic_fj: by("exp_logic"),
+        tree_fj: by("tree"),
+        norm_mult_fj: by("norm_mult"),
+        reduction_fj: report.reduction_fj,
+        global_norm_fj: report.global_norm_fj,
+        softmax_fj: report.softmax_fj,
+        total_fj: report.total_fj(),
+        fj_per_mac: report.fj_per_mac(),
+        digital_fj_per_mac,
+        digital_ratio: report.fj_per_mac() / digital_fj_per_mac,
+        crossover_enob: digital::crossover_enob(spec.arch, fmts, spec.nr, spec.nc, &cfg.tech),
+    })
+}
+
+/// A completed exploration: every point (ascending index) plus the
+/// index-aligned frontier mask.
+#[derive(Debug, Clone)]
+pub struct ExploreOutcome {
+    /// The plan that ran.
+    pub plan: ParetoPlan,
+    /// Every evaluated point, ascending index.
+    pub points: Vec<ExplorePoint>,
+    /// Frontier membership, index-aligned with `points`.
+    pub frontier: Vec<bool>,
+}
+
+impl ExploreOutcome {
+    /// Recompute the frontier mask over a full point set.
+    fn assemble(plan: ParetoPlan, mut points: Vec<ExplorePoint>) -> ExploreOutcome {
+        points.sort_by_key(|p| p.index);
+        let objs: Vec<Objectives> = points.iter().map(ExplorePoint::objectives).collect();
+        let frontier = frontier_mask(&objs);
+        ExploreOutcome { plan, points, frontier }
+    }
+
+    /// The non-dominated points.
+    pub fn frontier_points(&self) -> Vec<&ExplorePoint> {
+        self.points
+            .iter()
+            .zip(&self.frontier)
+            .filter_map(|(p, &keep)| keep.then_some(p))
+            .collect()
+    }
+
+    /// The final campaign output: the checkpoint header line followed
+    /// by every point record (ascending index) with its `frontier`
+    /// flag. Bit-identical for any worker count and any resume split.
+    pub fn out_jsonl(&self, engine: &str) -> String {
+        let mut out = checkpoint::header_json(&self.plan, engine).to_string();
+        out.push('\n');
+        for (p, &front) in self.points.iter().zip(&self.frontier) {
+            let mut j = match p.to_json() {
+                Json::Obj(m) => m,
+                _ => unreachable!("point records are objects"),
+            };
+            j.insert("frontier".to_string(), Json::Bool(front));
+            out.push_str(&Json::Obj(j).to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Run (or finish) a plan across the coordinator worker pool. `done`
+/// holds already-completed points (from a resumed [`Checkpoint`]) that
+/// are adopted verbatim — only the remainder is sharded. Each completed
+/// point is appended to `writer` (when given) before the pool returns,
+/// so a kill loses at most the in-flight points.
+pub fn run_plan(
+    plan: &ParetoPlan,
+    campaign: &CampaignConfig,
+    writer: Option<CkptWriter>,
+    done: BTreeMap<usize, ExplorePoint>,
+) -> Result<ExploreOutcome> {
+    let total = plan.num_points();
+    for (&idx, _) in &done {
+        if idx >= total {
+            bail!("completed point index {idx} out of range (plan has {total})");
+        }
+    }
+    let pending: Vec<usize> = (0..total).filter(|i| !done.contains_key(i)).collect();
+    let mut points: Vec<ExplorePoint> = done.into_values().collect();
+    if !pending.is_empty() {
+        let plan_w = Arc::new(plan.clone());
+        let engine_kind = campaign.engine;
+        let artifacts = campaign.artifacts_dir.clone();
+        let fresh = pool::run_jobs(pending, campaign.effective_workers(), move || {
+            let engine = build_engine(engine_kind, &artifacts)?;
+            let plan = Arc::clone(&plan_w);
+            let writer = writer.clone();
+            Ok(move |idx: usize| -> Result<ExplorePoint> {
+                let point = eval_point(engine.as_ref(), &plan, idx)?;
+                if let Some(w) = &writer {
+                    w.append(&point)?;
+                }
+                Ok(point)
+            })
+        })?;
+        points.extend(fresh);
+    }
+    if points.len() != total {
+        bail!("explore produced {} of {total} points", points.len());
+    }
+    Ok(ExploreOutcome::assemble(plan.clone(), points))
+}
+
+/// Run a plan with no checkpoint file (the serve `pareto` path).
+pub fn run_fresh(plan: &ParetoPlan, campaign: &CampaignConfig) -> Result<ExploreOutcome> {
+    run_plan(plan, campaign, None, BTreeMap::new())
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::runtime::{EngineKind, RustEngine};
+
+    pub(crate) fn tiny_plan() -> ParetoPlan {
+        ParetoPlan::from_toml(
+            r#"
+name = "tiny"
+seed = 7
+tokens = 2
+
+[axes]
+workload = "gemm:2x8x4"
+nr = [4, 8]
+nc = 2
+arch = ["gr-unit", "conventional"]
+n_e = 2
+n_m = 2
+"#,
+        )
+        .unwrap()
+    }
+
+    fn campaign(workers: usize) -> CampaignConfig {
+        CampaignConfig { engine: EngineKind::Rust, workers, seed: 7, ..Default::default() }
+    }
+
+    #[test]
+    fn plan_parses_with_defaults_and_expands_lexicographically() {
+        let p = tiny_plan();
+        assert_eq!(p.num_points(), 4);
+        assert_eq!(p.distribution, "gauss_outliers");
+        assert_eq!(p.adc, vec!["spec".to_string()]);
+        assert_eq!(p.adc_scale, vec![1.0]);
+        // workload → nr → nc → arch: arch is the innermost varying axis
+        let p0 = p.point(0).unwrap();
+        let p1 = p.point(1).unwrap();
+        let p2 = p.point(2).unwrap();
+        assert_eq!((p0.nr, p0.arch), (4, CimArch::GrUnit));
+        assert_eq!((p1.nr, p1.arch), (4, CimArch::Conventional));
+        assert_eq!((p2.nr, p2.arch), (8, CimArch::GrUnit));
+        assert!(p.point(4).is_err());
+    }
+
+    #[test]
+    fn canonical_hash_survives_json_round_trip_and_spelling() {
+        let p = tiny_plan();
+        let again = ParetoPlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(again.content_hash(), p.content_hash());
+        assert_eq!(again.to_json().to_string(), p.to_json().to_string());
+        // alias arch spellings canonicalize to the same hash
+        let aliased = ParetoPlan::from_toml(
+            r#"
+name = "tiny"
+seed = 7
+tokens = 2
+
+[axes]
+workload = ["gemm:2x8x4"]
+nr = [4, 8]
+nc = [2]
+arch = ["gr", "conv"]
+n_e = [2]
+n_m = [2]
+adc = ["spec"]
+adc_scale = [1.0]
+"#,
+        )
+        .unwrap();
+        assert_eq!(aliased.content_hash(), p.content_hash());
+    }
+
+    #[test]
+    fn invalid_plans_are_clean_errors() {
+        for (label, toml) in [
+            ("no workload", "name = \"x\"\n[axes]\nnr = 8\n"),
+            ("empty axis", "[axes]\nworkload = \"gemm:2x8x4\"\nnr = []\n"),
+            ("bad arch", "[axes]\nworkload = \"gemm:2x8x4\"\narch = \"analog\"\n"),
+            ("bad adc", "[axes]\nworkload = \"gemm:2x8x4\"\nadc = \"fixed\"\n"),
+            ("bad adc bits", "[axes]\nworkload = \"gemm:2x8x4\"\nadc = \"fixed:0\"\n"),
+            ("bad scale", "[axes]\nworkload = \"gemm:2x8x4\"\nadc_scale = -1\n"),
+            ("bad shape", "[axes]\nworkload = \"gemm:2x8\"\n"),
+            ("zero geom", "[axes]\nworkload = \"gemm:2x8x4\"\nnr = 0\n"),
+            (
+                "empirical",
+                "distribution = \"empirical:/tmp/x\"\n[axes]\nworkload = \"gemm:2x8x4\"\n",
+            ),
+        ] {
+            assert!(ParetoPlan::from_toml(toml).is_err(), "{label}");
+        }
+        // the point cap: 17^3 > 4096
+        let axis: Vec<String> = (1..=17).map(|n| n.to_string()).collect();
+        let toml = format!(
+            "[axes]\nworkload = \"gemm:2x8x4\"\nnr = [{a}]\nnc = [{a}]\nn_m = [{b}]\n",
+            a = axis.join(", "),
+            b = (0..17).map(|n| n.to_string()).collect::<Vec<_>>().join(", "),
+        );
+        let err = ParetoPlan::from_toml(&toml).unwrap_err().to_string();
+        assert!(err.contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn adc_policy_axis_round_trips() {
+        let (policy, canon) = parse_adc("fixed:6.5").unwrap();
+        assert_eq!(policy, AdcPolicy::Fixed(6.5));
+        assert_eq!(canon, "fixed:6.5");
+        let (policy, canon) = parse_adc("fixed:8").unwrap();
+        assert_eq!(policy, AdcPolicy::Fixed(8.0));
+        assert_eq!(canon, "fixed:8");
+        assert!(parse_adc("fixed:33").is_err());
+        assert!(parse_adc("auto").is_err());
+    }
+
+    #[test]
+    fn grid_caps_are_enforced_at_plan_time() {
+        // one huge workload trips the per-point cap
+        let toml = "tokens = 2\n[axes]\nworkload = \"gemm:1048576x1048576x1\"\n";
+        let err = ParetoPlan::from_toml(toml).unwrap_err().to_string();
+        assert!(err.contains("MACs") || err.contains("slab"), "{err}");
+    }
+
+    #[test]
+    fn point_record_round_trips_bit_exactly() {
+        let p = tiny_plan();
+        let pt = eval_point(&RustEngine, &p, 1).unwrap();
+        let line = pt.to_json().to_string();
+        let back = ExplorePoint::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string(), line);
+        assert_eq!(back.sqnr_db.to_bits(), pt.sqnr_db.to_bits());
+        assert_eq!(back.total_fj.to_bits(), pt.total_fj.to_bits());
+    }
+
+    #[test]
+    fn breakdown_sums_to_total_within_1e_minus_9() {
+        let p = tiny_plan();
+        for idx in 0..p.num_points() {
+            let pt = eval_point(&RustEngine, &p, idx).unwrap();
+            assert!(
+                pt.breakdown_reconciles(),
+                "point {idx}: breakdown {} vs total {}",
+                pt.breakdown_sum(),
+                pt.total_fj
+            );
+            assert!(pt.fj_per_mac > 0.0 && pt.sqnr_db.is_finite());
+            assert!(pt.digital_fj_per_mac > 0.0);
+        }
+    }
+
+    #[test]
+    fn run_plan_is_bit_identical_across_worker_counts() {
+        let p = tiny_plan();
+        let a = run_fresh(&p, &campaign(1)).unwrap();
+        let b = run_fresh(&p, &campaign(3)).unwrap();
+        assert_eq!(a.points.len(), p.num_points());
+        assert_eq!(a.frontier, b.frontier);
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.to_json().to_string(), y.to_json().to_string());
+        }
+        assert_eq!(a.out_jsonl("rust"), b.out_jsonl("rust"));
+    }
+
+    #[test]
+    fn resume_split_reproduces_the_uninterrupted_point_set() {
+        let p = tiny_plan();
+        let full = run_fresh(&p, &campaign(2)).unwrap();
+        // adopt half the points as "already checkpointed" and run the rest
+        let done: BTreeMap<usize, ExplorePoint> = full
+            .points
+            .iter()
+            .filter(|pt| pt.index % 2 == 0)
+            .map(|pt| (pt.index, pt.clone()))
+            .collect();
+        let resumed = run_plan(&p, &campaign(2), None, done).unwrap();
+        assert_eq!(resumed.out_jsonl("rust"), full.out_jsonl("rust"));
+    }
+
+    #[test]
+    fn frontier_flags_mark_non_dominated_points() {
+        let p = tiny_plan();
+        let out = run_fresh(&p, &campaign(2)).unwrap();
+        assert!(!out.frontier_points().is_empty());
+        // recompute independently
+        let objs: Vec<Objectives> = out.points.iter().map(ExplorePoint::objectives).collect();
+        assert_eq!(frontier_mask(&objs), out.frontier);
+    }
+}

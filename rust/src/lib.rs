@@ -72,6 +72,7 @@ pub mod config;
 pub mod coordinator;
 pub mod distributions;
 pub mod energy;
+pub mod explore;
 pub mod figures;
 pub mod formats;
 pub mod mac;

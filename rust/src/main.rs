@@ -2,7 +2,8 @@
 //! framework.
 //!
 //! Subcommands: `figures`, `energy`, `sweep`, `workload`, `layer`,
-//! `model`, `serve`, `query`, `loadgen`, `validate`, `info`. The full
+//! `model`, `explore`, `serve`, `query`, `loadgen`, `validate`, `info`.
+//! The full
 //! flag and
 //! wire-protocol reference
 //! lives in `docs/CLI.md`; the module map in `docs/ARCHITECTURE.md`; the
@@ -48,10 +49,14 @@ COMMANDS:
              |transformer:<d>x<heads>x<layers>|decode:<d>x<heads>x<ctx>
              [--fit] [--tokens N] [--arch A] [--nr N] [--nc N] [--ne N]
              [--nm N] [--dist NAME|empirical:t]
+  explore    design-space Pareto explorer      grcim explore --plan p.toml
+             [--out results/pareto.jsonl] [--ckpt run.ckpt]
+             resume a killed run: grcim explore --resume run.ckpt
   serve      resident campaign service (NDJSON/TCP, cached + coalesced)
              event-loop core: [--mux N] [--compute N] [--queue N]
   query      client for a running serve        grcim query energy --dr 36
-             kinds: energy|sweep|figure|workload|layer|model|metrics|info
+             kinds: energy|sweep|figure|workload|layer|model|pareto
+             |metrics|info
              raw mode: grcim query --json '<request>' (non-empty object;
              --seed must fit in 2^53 — JSON numbers are f64)
   loadgen    drive a running serve with concurrent connections
@@ -352,6 +357,124 @@ fn cmd_model(args: &Args) -> Result<()> {
     if !fr.all_hold() {
         bail!("model invariant checks failed (see table above)");
     }
+    Ok(())
+}
+
+/// `grcim explore --plan <plan.toml>`: expand a Pareto plan into its
+/// design-point grid, shard it across the worker pool, and write the
+/// campaign output (header line + one JSON record per point, each with
+/// its component-level energy breakdown, the digital-IMC baseline, and
+/// a `frontier` flag) to `--out`. `--ckpt <path>` makes the run
+/// crash-safe: every completed point is fsync'd to the checkpoint
+/// before the pool returns, and `grcim explore --resume <path>` adopts
+/// the header's plan and engine, skips finished points verbatim, and
+/// re-shards only the remainder — the resumed output is bit-identical
+/// to an uninterrupted run's.
+fn cmd_explore(args: &Args) -> Result<()> {
+    use grcim::explore::{self, checkpoint, ParetoPlan};
+    args.ensure_known(flags::EXPLORE)?;
+    args.ensure_known_switches(&[])?;
+    let mut campaign = campaign_from_args(args)?;
+    let out = PathBuf::from(args.get_or("out", "results/pareto.jsonl"));
+    let t = util::Timer::new("explore");
+
+    let (plan, writer, done) = match args.get("resume") {
+        Some(ckpt) => {
+            if args.get("plan").is_some() || !args.positional.is_empty() {
+                bail!(
+                    "--resume takes its plan from the checkpoint header; \
+                     drop --plan / the positional plan path"
+                );
+            }
+            let ck = checkpoint::resume(std::path::Path::new(ckpt), None)?;
+            // point records are engine-dependent, so resume pins the
+            // engine the header recorded, not the CLI default
+            campaign.engine = EngineKind::parse(&ck.engine)?;
+            grcim::info!(
+                "resuming {ckpt}: {}/{} points already done",
+                ck.done.len(),
+                ck.plan.num_points()
+            );
+            (ck.plan, Some(ck.writer), ck.done)
+        }
+        None => {
+            let path = args
+                .get("plan")
+                .map(String::from)
+                .or_else(|| args.positional.first().cloned())
+                .context("explore needs a plan: grcim explore --plan <plan.toml>")?;
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading plan {path}"))?;
+            let mut plan = ParetoPlan::from_toml(&text)?;
+            // an explicit --seed overrides the plan's (and therefore
+            // its content hash); the plan file's seed wins otherwise
+            if args.get("seed").is_some() {
+                plan.seed = campaign.seed;
+            }
+            let engine = explore::engine_name(campaign.engine);
+            match args.get("ckpt") {
+                Some(ckpt) => {
+                    let ck = checkpoint::create(
+                        std::path::Path::new(ckpt),
+                        &plan,
+                        engine,
+                    )?;
+                    (plan, Some(ck.writer), ck.done)
+                }
+                None => (plan, None, Default::default()),
+            }
+        }
+    };
+
+    grcim::info!(
+        "plan '{}' ({:016x}): {} points on {} workers",
+        plan.name,
+        plan.content_hash(),
+        plan.num_points(),
+        campaign.effective_workers()
+    );
+    let outcome = explore::run_plan(&plan, &campaign, writer, done)?;
+    if let Some(dir) = out.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+    }
+    let engine = explore::engine_name(campaign.engine);
+    std::fs::write(&out, outcome.out_jsonl(engine))
+        .with_context(|| format!("writing {}", out.display()))?;
+
+    let mut tbl = Table::new(
+        format!(
+            "pareto frontier — plan '{}', {}/{} points non-dominated",
+            plan.name,
+            outcome.frontier_points().len(),
+            outcome.points.len()
+        ),
+        &[
+            "idx", "workload", "nr", "nc", "arch", "fmt", "adc", "fJ/MAC",
+            "sqnr (dB)", "vs digital",
+        ],
+    );
+    for p in outcome.frontier_points() {
+        tbl.row(vec![
+            p.index.to_string(),
+            p.workload.clone(),
+            p.nr.to_string(),
+            p.nc.to_string(),
+            p.arch.clone(),
+            format!("e{}m{}", p.n_e, p.n_m),
+            p.adc.clone(),
+            Table::f(p.fj_per_mac),
+            Table::f(p.sqnr_db),
+            format!("{:.2}x", p.digital_ratio),
+        ]);
+    }
+    println!("{}", tbl.to_markdown());
+    grcim::info!(
+        "explore done in {:.1}s ({} points -> {})",
+        t.elapsed_s(),
+        outcome.points.len(),
+        out.display()
+    );
     Ok(())
 }
 
@@ -762,9 +885,28 @@ fn build_request(kind: &str, args: &Args) -> Result<String> {
             }
             Ok(proto::obj(pairs).to_string())
         }
+        "pareto" => {
+            let path = args
+                .get("plan")
+                .map(String::from)
+                .or_else(|| args.positional.get(1).cloned())
+                .context(
+                    "pareto query needs a plan: \
+                     grcim query pareto --plan <plan.toml>",
+                )?;
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading plan {path}"))?;
+            // validate client-side so a bad plan fails before the wire
+            grcim::explore::ParetoPlan::from_toml(&text)?;
+            Ok(proto::obj(vec![
+                ("cmd", Json::Str("pareto".to_string())),
+                ("plan", Json::Str(text)),
+            ])
+            .to_string())
+        }
         other => bail!(
             "unknown query kind '{other}' \
-             (energy|sweep|figure|workload|layer|model|metrics|info, \
+             (energy|sweep|figure|workload|layer|model|pareto|metrics|info, \
              or --json '<raw request>')"
         ),
     }
@@ -825,6 +967,7 @@ fn main() {
         "workload" => cmd_workload(&args),
         "layer" => cmd_layer(&args),
         "model" => cmd_model(&args),
+        "explore" => cmd_explore(&args),
         "validate" => cmd_validate(&args),
         "info" => cmd_info(&args),
         "sweep" => cmd_sweep(&args),

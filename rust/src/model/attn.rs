@@ -355,6 +355,10 @@ pub fn run_attention(
         reduction_fj += r.reduction_fj;
         global_norm_fj += r.global_norm_fj;
     }
+    // digital softmax: one exp + normalize + register per probability
+    // element (heads · M · S of them), priced by the Table II/III-derived
+    // per-element term — the cost PR 8 left at zero
+    let softmax_fj = (heads * m * s_len) as f64 * st.cfg.tech.e_softmax_fj;
     let report = LayerReport {
         name: st.name.clone(),
         shape: GemmShape { m, k: 2 * s_len, n: d },
@@ -365,6 +369,7 @@ pub fn run_attention(
         tiles_fj,
         reduction_fj,
         global_norm_fj,
+        softmax_fj,
         sqnr_db,
     };
     Ok(AttnOutcome { report, y: y_out, softmax_requant_db })

@@ -638,7 +638,7 @@ impl ModelReport {
                         * mvm_ops
                 })
                 .sum();
-            independent += tiles_fj + r.reduction_fj + r.global_norm_fj;
+            independent += tiles_fj + r.reduction_fj + r.global_norm_fj + r.softmax_fj;
         }
         let total = self.total_fj();
         let rel = (independent - total).abs() / total.max(1e-300);

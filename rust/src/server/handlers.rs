@@ -26,6 +26,7 @@ use crate::config::Json;
 use crate::coordinator::{CampaignConfig, ExperimentSpec};
 use crate::distributions::{Distribution, Sampler};
 use crate::energy::{EnergyBreakdown, TechParams};
+use crate::explore::{self, ParetoPlan};
 use crate::figures::{self, fig12, FigureCtx};
 use crate::mac::FormatPair;
 use crate::model::ModelSpec;
@@ -61,6 +62,7 @@ impl CampaignService {
             RequestKind::Workload => &self.workloads,
             RequestKind::Layer => &self.layers,
             RequestKind::Model => &self.models,
+            RequestKind::Pareto => &self.paretos,
             RequestKind::Info | RequestKind::Metrics => {
                 unreachable!("inline kinds are answered without a cache")
             }
@@ -127,6 +129,10 @@ pub(super) fn dispatch(svc: &CampaignService, req: &Request) -> Result<(Json, bo
             fit: None,
             trace_name: String::new(),
             trace_len: 0,
+        }),
+        Request::Pareto { plan } => svc.run_handler(&mut ParetoHandler {
+            plan_text: plan.clone(),
+            plan: None,
         }),
     }
 }
@@ -524,6 +530,63 @@ impl Handler for ModelHandler {
             ("seed", Json::Num(self.seed as f64)),
             ("report", payload),
         ]))
+    }
+}
+
+/// `pareto` — expand a design-space plan and run the full exploration
+/// ([`crate::explore::run_fresh`]), cached by [`proto::pareto_key`]
+/// over the canonical plan's content hash, so alias spellings of the
+/// same plan share one entry. [`ParetoPlan::from_toml`] enforces the
+/// service's MAC and operand-slab caps across the **whole grid** at
+/// plan time (every workload, and the grid-total MAC budget), so an
+/// oversized plan is rejected before any point runs; the plan carries
+/// its own seed, so no request-level seed participates.
+struct ParetoHandler {
+    plan_text: String,
+    /// Resolved by `plan`, read by `compute`.
+    plan: Option<ParetoPlan>,
+}
+
+impl Handler for ParetoHandler {
+    fn kind(&self) -> RequestKind {
+        RequestKind::Pareto
+    }
+
+    fn plan(&mut self, svc: &CampaignService) -> Result<String> {
+        let plan = ParetoPlan::from_toml(&self.plan_text)
+            .map_err(|e| bad_request(format!("{e:#}")))?;
+        let key = proto::pareto_key(plan.content_hash(), svc.engine_name());
+        self.plan = Some(plan);
+        Ok(key)
+    }
+
+    fn compute(&self, svc: &CampaignService) -> Result<String> {
+        let plan = self.plan.clone().expect("plan parsed the plan");
+        let outcome = explore::run_fresh(&plan, &svc.campaign)?;
+        let mut points = Vec::new();
+        let mut frontier = Vec::new();
+        for (p, &front) in outcome.points.iter().zip(&outcome.frontier) {
+            let mut m = match p.to_json() {
+                Json::Obj(m) => m,
+                _ => unreachable!("point records are objects"),
+            };
+            m.insert("frontier".to_string(), Json::Bool(front));
+            points.push(Json::Obj(m));
+            if front {
+                frontier.push(Json::Num(p.index as f64));
+            }
+        }
+        Ok(obj(vec![
+            ("plan", plan.to_json()),
+            ("plan_hash", Json::Str(format!("{:016x}", plan.content_hash()))),
+            ("points", Json::Arr(points)),
+            ("frontier_indices", Json::Arr(frontier)),
+        ])
+        .to_string())
+    }
+
+    fn render(&self, _svc: &CampaignService, payload: Json) -> Result<Json> {
+        Ok(payload)
     }
 }
 

@@ -199,6 +199,7 @@ pub struct CampaignService {
     workloads: ShardedCache<String>,
     layers: ShardedCache<String>,
     models: ShardedCache<String>,
+    paretos: ShardedCache<String>,
 }
 
 impl CampaignService {
@@ -217,6 +218,7 @@ impl CampaignService {
             workloads: ShardedCache::new(sub),
             layers: ShardedCache::new(sub),
             models: ShardedCache::new(sub),
+            paretos: ShardedCache::new(sub),
         }
     }
 
@@ -289,6 +291,7 @@ impl CampaignService {
             ("layers", self.layers.stats().to_json()),
             ("models", self.models.stats().to_json()),
             ("workloads", self.workloads.stats().to_json()),
+            ("paretos", self.paretos.stats().to_json()),
         ]))
     }
 
@@ -310,6 +313,7 @@ impl CampaignService {
                     ("layers", self.layers.stats().to_json()),
                     ("models", self.models.stats().to_json()),
                     ("workloads", self.workloads.stats().to_json()),
+                    ("paretos", self.paretos.stats().to_json()),
                 ]),
             ),
         ])
@@ -600,6 +604,58 @@ mod tests {
     }
 
     #[test]
+    fn pareto_request_cached_by_plan_hash() {
+        let svc = test_service();
+        // a tiny 2-point grid; \n-joined TOML carried as the plan text
+        let plan = "name = \"t\"\nseed = 7\ntokens = 2\n\
+                    workload = \"gemm:2x8x4\"\n\
+                    [axes]\nnr = [4, 8]\nnc = 4\nn_e = 2\nn_m = 2\n";
+        let line = proto::obj(vec![
+            ("cmd", Json::Str("pareto".to_string())),
+            ("plan", Json::Str(plan.to_string())),
+        ])
+        .to_string();
+        let req = proto::parse_request(&line).unwrap();
+        let cold = svc.respond(&req);
+        let j = Json::parse(&cold).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{cold}");
+        assert_eq!(j.get("cached"), Some(&Json::Bool(false)));
+        let r = j.get("result").unwrap();
+        assert_eq!(r.get("points").unwrap().items().len(), 2);
+        assert!(!r.get("frontier_indices").unwrap().items().is_empty());
+        // every point's breakdown reconciles against its total
+        for p in r.get("points").unwrap().items() {
+            let pt = crate::explore::ExplorePoint::from_json(p).unwrap();
+            assert!(pt.breakdown_reconciles(), "{p}");
+        }
+
+        // byte-identical hit
+        let warm = svc.respond(&req);
+        let jw = Json::parse(&warm).unwrap();
+        assert_eq!(jw.get("cached"), Some(&Json::Bool(true)));
+        assert_eq!(result_str(&cold), result_str(&warm));
+        assert_eq!(svc.paretos.stats().computes, 1);
+
+        // an alias spelling of the same plan shares the entry
+        let alias = line.replace("nc = 4", "nc = [4]");
+        let req2 = proto::parse_request(&alias).unwrap();
+        let j2 = Json::parse(&svc.respond(&req2)).unwrap();
+        assert_eq!(j2.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(j2.get("cached"), Some(&Json::Bool(true)));
+        assert_eq!(svc.paretos.stats().computes, 1);
+
+        // a malformed plan is a clean error, not a panic
+        let bad = proto::obj(vec![
+            ("cmd", Json::Str("pareto".to_string())),
+            ("plan", Json::Str("workload = \"warp:9\"\n".to_string())),
+        ])
+        .to_string();
+        let req3 = proto::parse_request(&bad).unwrap();
+        let j3 = Json::parse(&svc.respond(&req3)).unwrap();
+        assert_eq!(j3.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
     fn layer_request_bad_inputs_are_clean_errors() {
         let svc = test_service();
         for line in [
@@ -869,7 +925,10 @@ mod tests {
             assert_eq!(kj.get("p50_us"), Some(&Json::Null), "{}", k.name());
         }
         let caches = r.get("caches").unwrap();
-        for c in ["aggregates", "energies", "sweeps", "figures", "layers", "models", "workloads"] {
+        for c in [
+            "aggregates", "energies", "sweeps", "figures", "layers", "models", "workloads",
+            "paretos",
+        ] {
             assert_eq!(caches.get(c).unwrap().get("computes").unwrap().as_usize(), Some(0), "{c}");
         }
     }

@@ -8,7 +8,7 @@
 //! -> {"cmd":"energy","dr":30.1,"sqnr":22.83,"samples":4096}
 //! <- {"ok":true,"cached":false,"result":{...}}
 //! -> {"cmd":"nonsense"}
-//! <- {"ok":false,"kind":"bad_request","error":"unknown cmd 'nonsense' (energy|sweep|figure|workload|layer|model|metrics|info)"}
+//! <- {"ok":false,"kind":"bad_request","error":"unknown cmd 'nonsense' (energy|sweep|figure|workload|layer|model|pareto|metrics|info)"}
 //! ```
 //!
 //! Error responses carry a `"kind"` tag so clients can react without
@@ -106,11 +106,13 @@ pub enum RequestKind {
     Layer,
     /// One chained-model report.
     Model,
+    /// One design-space Pareto exploration (a full plan grid).
+    Pareto,
 }
 
 impl RequestKind {
     /// Every kind, in wire-protocol order (indexes the per-kind metrics).
-    pub const ALL: [RequestKind; 8] = [
+    pub const ALL: [RequestKind; 9] = [
         RequestKind::Info,
         RequestKind::Metrics,
         RequestKind::Energy,
@@ -119,6 +121,7 @@ impl RequestKind {
         RequestKind::Workload,
         RequestKind::Layer,
         RequestKind::Model,
+        RequestKind::Pareto,
     ];
 
     /// The wire name (`"cmd"` value) of this kind.
@@ -132,6 +135,7 @@ impl RequestKind {
             RequestKind::Workload => "workload",
             RequestKind::Layer => "layer",
             RequestKind::Model => "model",
+            RequestKind::Pareto => "pareto",
         }
     }
 
@@ -222,6 +226,16 @@ pub enum Request {
         /// Campaign seed override (server default when absent).
         seed: Option<u64>,
     },
+    /// Explore a design-space plan grid and return the full point set
+    /// plus its Pareto frontier (`grcim explore` over the wire). Cached
+    /// by [`pareto_key`] (the canonical plan's content hash — the plan
+    /// carries its own seed, so no request-level seed participates).
+    Pareto {
+        /// The plan as TOML text (resolved server-side via
+        /// [`crate::explore::ParetoPlan::from_toml`], which also
+        /// enforces the grid-wide MAC/slab caps at plan time).
+        plan: String,
+    },
 }
 
 impl Request {
@@ -236,6 +250,7 @@ impl Request {
             Request::Workload { .. } => RequestKind::Workload,
             Request::Layer { .. } => RequestKind::Layer,
             Request::Model { .. } => RequestKind::Model,
+            Request::Pareto { .. } => RequestKind::Pareto,
         }
     }
 }
@@ -457,10 +472,17 @@ pub fn parse_request_meta(line: &str) -> Result<(Request, Option<Duration>)> {
                 seed,
             })
         }
+        "pareto" => Ok(Request::Pareto {
+            plan: j
+                .get("plan")
+                .and_then(Json::as_str)
+                .context("pareto needs a 'plan' field (the plan TOML text)")?
+                .to_string(),
+        }),
         other => {
             bail!(
                 "unknown cmd '{other}' \
-                 (energy|sweep|figure|workload|layer|model|metrics|info)"
+                 (energy|sweep|figure|workload|layer|model|pareto|metrics|info)"
             )
         }
     }?;
@@ -617,7 +639,7 @@ pub fn layer_key(spec: &LayerSpec, seed: u64, engine: &str) -> String {
     };
     let t = &cfg.tech;
     format!(
-        "v{PROTO_VERSION}|layer|eng={engine}|seed={seed}|shape={}|nr={}|nc={}|arch={}|adc={adc}|tech={}:{}:{}:{}:{}|x={}:{}|w={}:{}|dx={}|dw={}",
+        "v{PROTO_VERSION}|layer|eng={engine}|seed={seed}|shape={}|nr={}|nc={}|arch={}|adc={adc}|tech={}:{}:{}:{}:{}:{}|x={}:{}|w={}:{}|dx={}|dw={}",
         spec.shape,
         cfg.nr,
         cfg.nc,
@@ -627,6 +649,7 @@ pub fn layer_key(spec: &LayerSpec, seed: u64, engine: &str) -> String {
         bits(t.k2_ff),
         bits(t.k3_ff),
         bits(t.vdd),
+        bits(t.e_softmax_fj),
         bits(cfg.fmts.x.e_max),
         bits(cfg.fmts.x.n_m),
         bits(cfg.fmts.w.e_max),
@@ -678,7 +701,7 @@ pub fn model_key(spec: &ModelSpec, seed: u64, engine: &str) -> String {
     let layers: Vec<String> =
         (0..spec.layers.len()).map(|li| layer_fragment(spec, li)).collect();
     format!(
-        "v{PROTO_VERSION}|model|eng={engine}|seed={seed}|nr={}|nc={}|arch={}|adc={adc}|tech={}:{}:{}:{}:{}|relu={}|fit={}|dx={}|dw={}|layers={}",
+        "v{PROTO_VERSION}|model|eng={engine}|seed={seed}|nr={}|nc={}|arch={}|adc={adc}|tech={}:{}:{}:{}:{}:{}|relu={}|fit={}|dx={}|dw={}|layers={}",
         cfg.nr,
         cfg.nc,
         cfg.arch.name(),
@@ -687,12 +710,23 @@ pub fn model_key(spec: &ModelSpec, seed: u64, engine: &str) -> String {
         bits(t.k2_ff),
         bits(t.k3_ff),
         bits(t.vdd),
+        bits(t.e_softmax_fj),
         spec.relu,
         spec.fit_activations,
         canonical_dist(&spec.dist_x),
         canonical_dist(&spec.dist_w),
         layers.join(","),
     )
+}
+
+/// Canonical cache key of one rendered `pareto` response. The plan's
+/// content hash ([`crate::explore::ParetoPlan::content_hash`], FNV-1a
+/// over the canonical plan JSON) already covers every axis value, the
+/// workload list, the distribution, the seed, and the token count — so
+/// alias spellings of the same plan (`gr` vs `gr-unit`, `fixed:8` vs
+/// `fixed:8.0`) share one entry, and any semantic change misses.
+pub fn pareto_key(plan_hash: u64, engine: &str) -> String {
+    format!("v{PROTO_VERSION}|pareto|eng={engine}|plan={plan_hash:016x}")
 }
 
 /// Canonical cache key of one rendered workload report: the trace is
@@ -1131,6 +1165,38 @@ mod tests {
         let mut scaled = base.resolve().unwrap();
         scaled.cfg.tech = scaled.cfg.tech.with_adc_scale(1.1);
         assert_ne!(layer_key(&scaled, 7, "rust"), k0);
+        let mut priced = base.resolve().unwrap();
+        priced.cfg.tech.e_softmax_fj *= 2.0;
+        assert_ne!(layer_key(&priced, 7, "rust"), k0);
+    }
+
+    #[test]
+    fn parses_pareto_requests() {
+        let r = parse_request(
+            r#"{"cmd":"pareto","plan":"workload = \"gemm:2x8x4\"\n"}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Pareto { plan } => {
+                assert!(plan.contains("gemm:2x8x4"));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(
+            parse_request(r#"{"cmd":"pareto","plan":"x"}"#).unwrap().kind(),
+            RequestKind::Pareto
+        );
+        // the plan text is mandatory and must be a string
+        assert!(parse_request(r#"{"cmd":"pareto"}"#).is_err());
+        assert!(parse_request(r#"{"cmd":"pareto","plan":7}"#).is_err());
+    }
+
+    #[test]
+    fn pareto_keys_cover_hash_and_engine() {
+        let a = pareto_key(0xDEAD_BEEF, "rust");
+        assert_ne!(a, pareto_key(0xDEAD_BEF0, "rust"));
+        assert_ne!(a, pareto_key(0xDEAD_BEEF, "pjrt"));
+        assert_eq!(a, pareto_key(0xDEAD_BEEF, "rust"));
     }
 
     #[test]

@@ -252,6 +252,7 @@ fn assemble(
             tiles_fj,
             reduction_fj,
             global_norm_fj,
+            softmax_fj: 0.0, // plain GEMMs don't exponentiate
             sqnr_db,
         },
         y,

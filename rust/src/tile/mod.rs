@@ -244,15 +244,19 @@ pub struct LayerReport {
     /// Global-normalization wrapper energy, fJ (0 when the configuration
     /// fits the native gain-ranging range).
     pub global_norm_fj: f64,
+    /// Digital softmax energy, fJ — `heads · M · S` probability elements
+    /// at [`TechParams::e_softmax_fj`] each; 0 for plain GEMM/conv layers
+    /// (only attention stages exponentiate).
+    pub softmax_fj: f64,
     /// Layer-output SQNR against the exact float GEMM, dB.
     pub sqnr_db: f64,
 }
 
 impl LayerReport {
     /// Total layer energy: tiles + partial-sum reduction + (when needed)
-    /// the global-normalization wrapper, fJ.
+    /// the global-normalization wrapper + digital softmax, fJ.
     pub fn total_fj(&self) -> f64 {
-        self.tiles_fj + self.reduction_fj + self.global_norm_fj
+        self.tiles_fj + self.reduction_fj + self.global_norm_fj + self.softmax_fj
     }
 
     /// Energy per useful MAC (padding excluded), fJ.
@@ -327,6 +331,7 @@ impl LayerReport {
         kv("tiles_fj", Table::f(self.tiles_fj));
         kv("reduction_fj", Table::f(self.reduction_fj));
         kv("global_norm_fj", Table::f(self.global_norm_fj));
+        kv("softmax_fj", Table::f(self.softmax_fj));
         kv("needs_global_norm", if self.cfg.needs_global_norm() { "yes" } else { "no" }.into());
         kv("total_fj", Table::f(self.total_fj()));
         kv("fj_per_mac", Table::f(self.fj_per_mac()));
@@ -347,6 +352,11 @@ impl LayerReport {
             "global_norm".into(),
             Table::f(self.global_norm_fj),
             Table::f(100.0 * self.global_norm_fj / total),
+        ]);
+        comp.row(vec![
+            "softmax".into(),
+            Table::f(self.softmax_fj),
+            Table::f(100.0 * self.softmax_fj / total),
         ]);
         fr.tables.push(comp);
 

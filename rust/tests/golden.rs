@@ -784,6 +784,81 @@ fn golden_conv_im2col() {
 }
 
 // ---------------------------------------------------------------------
+// Design-space Pareto explorer: the full pipeline (plan expansion ->
+// seeded operands -> tile campaign -> component breakdown -> digital
+// baseline -> frontier), pinned per point against the twin.
+// ---------------------------------------------------------------------
+
+/// TOML equivalent of the twin's `PARETO_PLAN` (defaults supply
+/// distribution, adc, adc_scale).
+const PARETO_PLAN_TOML: &str = r#"
+name = "golden"
+seed = 42
+tokens = 4
+
+[axes]
+workload = "gemm:4x32x8"
+nr = [8, 16]
+nc = 8
+arch = ["gr-unit", "conventional"]
+n_e = [2, 4]
+n_m = 2
+"#;
+
+#[test]
+fn golden_pareto_explore() {
+    use grcim::coordinator::CampaignConfig;
+    use grcim::explore::{run_fresh, ParetoPlan};
+    use grcim::runtime::EngineKind;
+
+    let mut g = Golden::new("pareto_explore", 1e-6);
+    let plan = ParetoPlan::from_toml(PARETO_PLAN_TOML).unwrap();
+    let h = plan.content_hash();
+    g.push("plan_hash_hi", (h >> 32) as f64);
+    g.push("plan_hash_lo", (h & 0xFFFF_FFFF) as f64);
+    let campaign = CampaignConfig {
+        engine: EngineKind::Rust,
+        workers: 2,
+        seed: 42,
+        ..Default::default()
+    };
+    let out = run_fresh(&plan, &campaign).unwrap();
+    assert_eq!(out.points.len(), plan.num_points());
+    g.push("num_points", out.points.len() as f64);
+    g.push("num_frontier", out.frontier_points().len() as f64);
+    for (p, &front) in out.points.iter().zip(&out.frontier) {
+        let i = p.index;
+        // the acceptance invariant: breakdown sums to total within 1e-9
+        assert!(
+            p.breakdown_reconciles(),
+            "point {i}: breakdown sum {} vs total {}",
+            p.breakdown_sum(),
+            p.total_fj
+        );
+        g.push(format!("p{i}_enob_mean"), p.enob_mean);
+        g.push(format!("p{i}_sqnr_db"), p.sqnr_db);
+        g.push(format!("p{i}_adc_fj"), p.adc_fj);
+        g.push(format!("p{i}_dac_fj"), p.dac_fj);
+        g.push(format!("p{i}_cells_fj"), p.cells_fj);
+        g.push(format!("p{i}_exp_logic_fj"), p.exp_logic_fj);
+        g.push(format!("p{i}_tree_fj"), p.tree_fj);
+        g.push(format!("p{i}_norm_mult_fj"), p.norm_mult_fj);
+        g.push(format!("p{i}_reduction_fj"), p.reduction_fj);
+        g.push(format!("p{i}_global_norm_fj"), p.global_norm_fj);
+        g.push(format!("p{i}_softmax_fj"), p.softmax_fj);
+        g.push(format!("p{i}_total_fj"), p.total_fj);
+        g.push(format!("p{i}_fj_per_mac"), p.fj_per_mac);
+        g.push(format!("p{i}_digital_fj_per_mac"), p.digital_fj_per_mac);
+        g.push(format!("p{i}_digital_ratio"), p.digital_ratio);
+        if let Some(x) = p.crossover_enob {
+            g.push(format!("p{i}_crossover_enob"), x);
+        }
+        g.push(format!("p{i}_frontier"), if front { 1.0 } else { 0.0 });
+    }
+    g.check();
+}
+
+// ---------------------------------------------------------------------
 // Determinism + harness self-tests.
 // ---------------------------------------------------------------------
 

@@ -980,3 +980,62 @@ fn prop_tiled_outputs_independent_of_column_grouping() {
         }
     }
 }
+
+#[test]
+fn prop_explore_resume_after_kill_is_bit_identical() {
+    use grcim::coordinator::CampaignConfig;
+    use grcim::explore::{checkpoint, run_plan, ParetoPlan};
+    use grcim::runtime::EngineKind;
+    use std::collections::BTreeMap;
+
+    // a killed explore campaign, resumed from its checkpoint, must emit
+    // byte-for-byte the same final JSONL as an uninterrupted run — for
+    // any worker count and any set of points finished before the kill
+    let plan = ParetoPlan::from_toml(
+        "name = \"resume-prop\"\nseed = 11\ntokens = 2\n\n[axes]\n\
+         workload = \"gemm:2x8x4\"\nnr = [4, 8]\nnc = 4\n\
+         arch = [\"gr-unit\", \"conventional\"]\nn_e = 2\nn_m = 2\n",
+    )
+    .unwrap();
+    let total = plan.num_points();
+    assert_eq!(total, 4);
+    let campaign = |workers: usize| CampaignConfig {
+        engine: EngineKind::Rust,
+        workers,
+        seed: 11,
+        ..Default::default()
+    };
+    let full = run_plan(&plan, &campaign(1), None, BTreeMap::new()).unwrap();
+    let want = full.out_jsonl("rust");
+
+    let dir = std::env::temp_dir().join("grcim_resume_prop");
+    std::fs::create_dir_all(&dir).unwrap();
+    // kill scenarios: nothing finished, a prefix, an out-of-order
+    // subset (workers complete points in any order), all but one
+    let survivors: [&[usize]; 4] = [&[], &[0], &[2, 0], &[3, 1, 0]];
+    for (si, keep) in survivors.iter().enumerate() {
+        for workers in [1usize, 2, 4] {
+            let path = dir.join(format!("kill{si}_w{workers}.jsonl"));
+            let _ = std::fs::remove_file(&path);
+            // simulate the killed run: header + the finished points
+            let ck = checkpoint::create(&path, &plan, "rust").unwrap();
+            for &i in keep.iter() {
+                ck.writer.append(&full.points[i]).unwrap();
+            }
+            drop(ck);
+            let ck = checkpoint::resume(&path, Some(&plan)).unwrap();
+            assert_eq!(ck.done.len(), keep.len(), "scenario {si}");
+            let resumed =
+                run_plan(&ck.plan, &campaign(workers), Some(ck.writer), ck.done).unwrap();
+            assert_eq!(
+                resumed.out_jsonl("rust"),
+                want,
+                "scenario {si} at {workers} workers diverged"
+            );
+            // the checkpoint file now holds every point exactly once
+            let done = checkpoint::resume(&path, Some(&plan)).unwrap().done;
+            assert_eq!(done.len(), total, "scenario {si}");
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+}

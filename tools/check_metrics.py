@@ -37,8 +37,12 @@ Usage: python3 tools/check_metrics.py <metrics.json> [--nonzero PATH]...
 import json
 import sys
 
-KINDS = ("info", "metrics", "energy", "sweep", "figure", "workload", "layer", "model")
-CACHES = ("aggregates", "energies", "sweeps", "figures", "layers", "models", "workloads")
+KINDS = (
+    "info", "metrics", "energy", "sweep", "figure", "workload", "layer", "model", "pareto",
+)
+CACHES = (
+    "aggregates", "energies", "sweeps", "figures", "layers", "models", "workloads", "paretos",
+)
 COUNTERS = (
     "uptime_us",
     "accepted",

@@ -1,0 +1,295 @@
+#!/usr/bin/env python3
+"""Validate a `grcim explore` campaign output / checkpoint (JSONL) against
+the stable layout `rust/src/explore/checkpoint.rs::header_json` +
+`ExplorePoint::to_json` emit:
+
+    line 1:  {"engine": str, "format": "grcim-pareto-ckpt",
+              "plan": {...}, "plan_hash": 16 lowercase hex,
+              "points": int > 0, "version": 1}
+    line 2+: one point record per line — index/nr/nc/n_e/n_m/adc_scale,
+             enob_mean, sqnr_db, the component breakdown (adc_fj, dac_fj,
+             cells_fj, exp_logic_fj, tree_fj, norm_mult_fj, reduction_fj,
+             global_norm_fj, softmax_fj), total_fj, fj_per_mac,
+             digital_fj_per_mac, digital_ratio, crossover_enob (number or
+             null), workload/shape/arch/adc strings, and (final outputs
+             only) a boolean "frontier" flag.
+
+Checks, in order:
+
+  * header sanity (format tag, version, hex plan_hash, point count);
+  * every point line parses, indices are exactly 0..points-1 ascending;
+  * each breakdown sums to total_fj within 1e-9 relative (the explore
+    acceptance invariant), summed in the Rust fold order;
+  * the "frontier" flags match a recomputed Pareto filter over
+    (fj_per_mac minimized, sqnr_db maximized) and at least one point is
+    non-dominated.
+
+`--identical A B` instead compares two campaign outputs byte-for-byte —
+CI's kill/resume smoke gates on it: a checkpoint truncated mid-campaign
+and resumed must reproduce the uninterrupted output exactly. On
+mismatch the first differing line is reported.
+
+`--selftest` runs the built-in negative tests (a broken breakdown, a
+wrong frontier flag, and a diverged resume must all fail) and exits; CI
+runs it so the gate itself is tested on every push.
+
+Usage: python3 tools/check_pareto.py <pareto.jsonl>
+       python3 tools/check_pareto.py --identical <full.jsonl> <resumed.jsonl>
+       python3 tools/check_pareto.py --selftest
+"""
+
+import json
+import sys
+
+FORMAT_TAG = "grcim-pareto-ckpt"
+VERSION = 1
+BREAKDOWN = (
+    "adc_fj", "dac_fj", "cells_fj", "exp_logic_fj", "tree_fj",
+    "norm_mult_fj", "reduction_fj", "global_norm_fj", "softmax_fj",
+)
+NUM_FIELDS = BREAKDOWN + (
+    "index", "nr", "nc", "n_e", "n_m", "adc_scale", "enob_mean", "sqnr_db",
+    "total_fj", "fj_per_mac", "digital_fj_per_mac", "digital_ratio",
+)
+STR_FIELDS = ("workload", "shape", "arch", "adc")
+
+
+class CheckFailed(Exception):
+    pass
+
+
+def fail(msg):
+    raise CheckFailed(f"check_pareto: FAIL: {msg}")
+
+
+def is_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check_header(header, where):
+    if not isinstance(header, dict):
+        fail(f"{where}: header must be an object")
+    if header.get("format") != FORMAT_TAG:
+        fail(f"{where}: format tag {header.get('format')!r} is not {FORMAT_TAG!r}")
+    if header.get("version") != VERSION:
+        fail(f"{where}: unsupported version {header.get('version')!r}")
+    if not isinstance(header.get("plan"), dict):
+        fail(f"{where}: header 'plan' must be an object")
+    h = header.get("plan_hash")
+    if not (isinstance(h, str) and len(h) == 16
+            and all(c in "0123456789abcdef" for c in h)):
+        fail(f"{where}: plan_hash {h!r} is not 16 lowercase hex digits")
+    n = header.get("points")
+    if not is_num(n) or n != int(n) or n < 1:
+        fail(f"{where}: 'points' must be a positive integer, got {n!r}")
+    if not isinstance(header.get("engine"), str) or not header["engine"]:
+        fail(f"{where}: 'engine' must be a non-empty string")
+    return int(n)
+
+
+def check_point(p, where, want_frontier):
+    if not isinstance(p, dict):
+        fail(f"{where}: must be an object")
+    for k in NUM_FIELDS:
+        if not is_num(p.get(k, "missing")):
+            fail(f"{where}: '{k}' must be a number, got {p.get(k, 'missing')!r}")
+    for k in STR_FIELDS:
+        if not isinstance(p.get(k), str) or not p[k]:
+            fail(f"{where}: '{k}' must be a non-empty string")
+    x = p.get("crossover_enob", "missing")
+    if x != "missing" and x is not None and not is_num(x):
+        fail(f"{where}: 'crossover_enob' must be a number or null, got {x!r}")
+    if want_frontier and not isinstance(p.get("frontier"), bool):
+        fail(f"{where}: 'frontier' must be a boolean, got {p.get('frontier')!r}")
+    # the explore acceptance invariant — sum in the Rust fold order so
+    # the comparison is exact, not merely close
+    total = p["total_fj"]
+    s = 0.0
+    for k in BREAKDOWN:
+        s += p[k]
+    rel = abs(s - total) / max(total, 1e-300)
+    if not rel < 1e-9:
+        fail(f"{where}: breakdown sum {s!r} vs total_fj {total!r} (rel {rel:.3e})")
+
+
+def dominates(a, b):
+    """Mirror of explore::frontier::Objectives::dominates over
+    (fj_per_mac minimized, sqnr_db maximized)."""
+    ae, aq = a["fj_per_mac"], a["sqnr_db"]
+    be, bq = b["fj_per_mac"], b["sqnr_db"]
+    return (ae <= be and aq >= bq) and (ae < be or aq > bq)
+
+
+def check_frontier(points, where):
+    mask = [
+        not any(dominates(q, p) for q in points if q is not p)
+        for p in points
+    ]
+    if not any(mask):
+        fail(f"{where}: recomputed frontier is empty")
+    for p, keep in zip(points, mask):
+        if p["frontier"] is not keep:
+            fail(
+                f"{where}: point {p['index']} has frontier={p['frontier']} "
+                f"but the recomputed filter says {keep}"
+            )
+    return sum(mask)
+
+
+def check(path, lines=None):
+    if lines is None:
+        try:
+            with open(path) as f:
+                lines = f.read().splitlines()
+        except OSError as e:
+            fail(f"{path}: {e}")
+    if not lines:
+        fail(f"{path}: empty file (no header)")
+    try:
+        header = json.loads(lines[0])
+    except ValueError as e:
+        fail(f"{path}: header is not JSON: {e}")
+    total = check_header(header, f"{path}: header")
+    points = []
+    for ln, line in enumerate(lines[1:], start=2):
+        if not line.strip():
+            continue
+        try:
+            p = json.loads(line)
+        except ValueError as e:
+            fail(f"{path}:{ln}: not JSON: {e}")
+        check_point(p, f"{path}:{ln}", want_frontier=True)
+        points.append(p)
+    if len(points) != total:
+        fail(f"{path}: header says {total} points, found {len(points)}")
+    indices = [int(p["index"]) for p in points]
+    if indices != list(range(total)):
+        fail(f"{path}: point indices {indices} are not 0..{total - 1} ascending")
+    n_front = check_frontier(points, path)
+    print(
+        f"check_pareto: OK: {path} ({total} points, {n_front} on the "
+        f"frontier, breakdowns reconcile)"
+    )
+
+
+def identical(path_a, path_b):
+    """The kill/resume gate: two campaign outputs must match bit-exactly."""
+    docs = []
+    for path in (path_a, path_b):
+        try:
+            with open(path, "rb") as f:
+                docs.append(f.read())
+        except OSError as e:
+            fail(f"{path}: {e}")
+    a, b = docs
+    if a != b:
+        for ln, (la, lb) in enumerate(zip(a.splitlines(), b.splitlines()), start=1):
+            if la != lb:
+                fail(
+                    f"{path_a} vs {path_b}: first divergence at line {ln}:\n"
+                    f"  a: {la[:120]!r}\n  b: {lb[:120]!r}"
+                )
+        fail(
+            f"{path_a} vs {path_b}: one is a strict prefix of the other "
+            f"({len(a)} vs {len(b)} bytes)"
+        )
+    # a resumed run that diverged AND happens to match would still be a
+    # valid output, so sanity-check the shared bytes too
+    check(path_a, lines=a.decode().splitlines())
+    print(f"check_pareto: OK: {path_a} == {path_b} ({len(a)} bytes)")
+
+
+def _mk_doc():
+    header = {
+        "engine": "rust", "format": FORMAT_TAG,
+        "plan": {"name": "selftest"}, "plan_hash": "0123456789abcdef",
+        "points": 2, "version": 1,
+    }
+    def point(i, fj, sqnr, frontier):
+        p = {k: 0.0 for k in NUM_FIELDS}
+        p.update(index=i, nr=8, nc=8, n_e=2, n_m=2, adc_scale=1.0,
+                 enob_mean=6.0, sqnr_db=sqnr, adc_fj=3.0 * fj,
+                 dac_fj=1.0 * fj, total_fj=4.0 * fj,
+                 fj_per_mac=fj, digital_fj_per_mac=2.0 * fj,
+                 digital_ratio=0.5, crossover_enob=None,
+                 workload="gemm:2x8x4", shape="2x8x4",
+                 arch="gr-unit", adc="spec", frontier=frontier)
+        return p
+    # point 1 dominates point 0 (cheaper AND higher quality)
+    return header, point(0, 2.0, 10.0, False), point(1, 1.0, 20.0, True)
+
+
+def _lines(*docs):
+    return [json.dumps(d, sort_keys=True) for d in docs]
+
+
+def selftest():
+    """Negative tests: a broken breakdown, a wrong frontier flag, and a
+    diverged resume must all fail; the healthy document must pass."""
+    header, p0, p1 = _mk_doc()
+    check("healthy", lines=_lines(header, p0, p1))
+    # a component drifting away from the total must trip the invariant
+    bad = dict(p0, adc_fj=p0["adc_fj"] * (1.0 + 1e-6))
+    try:
+        check("drifted", lines=_lines(header, bad, p1))
+    except CheckFailed as e:
+        assert "breakdown sum" in str(e), e
+    else:
+        raise AssertionError("broken breakdown passed the check")
+    # a dominated point flagged as frontier must fail
+    lying = dict(p0, frontier=True)
+    try:
+        check("lying", lines=_lines(header, lying, p1))
+    except CheckFailed as e:
+        assert "recomputed filter" in str(e), e
+    else:
+        raise AssertionError("wrong frontier flag passed the check")
+    # point-count / index drift must fail
+    try:
+        check("short", lines=_lines(header, p1))
+    except CheckFailed as e:
+        assert "header says" in str(e) or "indices" in str(e), e
+    else:
+        raise AssertionError("missing point passed the check")
+    # the identical gate must trip on a single flipped byte
+    import os
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        a, b = os.path.join(d, "a.jsonl"), os.path.join(d, "b.jsonl")
+        text = "\n".join(_lines(header, p0, p1)) + "\n"
+        with open(a, "w") as f:
+            f.write(text)
+        with open(b, "w") as f:
+            f.write(text.replace('"sqnr_db": 10.0', '"sqnr_db": 10.1'))
+        identical(a, a)
+        try:
+            identical(a, b)
+        except CheckFailed as e:
+            assert "divergence" in str(e), e
+        else:
+            raise AssertionError("diverged outputs passed the identical gate")
+    print("check_pareto: selftest OK")
+
+
+def main():
+    args = sys.argv[1:]
+    if args == ["--selftest"]:
+        selftest()
+    elif len(args) == 3 and args[0] == "--identical":
+        identical(args[1], args[2])
+    elif len(args) == 1 and not args[0].startswith("-"):
+        check(args[0])
+    else:
+        fail(
+            "usage: check_pareto.py <pareto.jsonl> | "
+            "check_pareto.py --identical <a.jsonl> <b.jsonl> | "
+            "check_pareto.py --selftest"
+        )
+
+
+if __name__ == "__main__":
+    try:
+        main()
+    except CheckFailed as e:
+        print(str(e), file=sys.stderr)
+        sys.exit(1)

@@ -798,6 +798,81 @@ def native_ok(arch, fx, fw):
     raise ValueError(arch)
 
 
+# ------------------------------------------------------------- digital --
+# Twin of energy::digital — the digital-IMC baseline (arxiv 2405.14978)
+# and the analog-vs-digital crossover resolution.
+
+MAX_CROSSOVER_ENOB = 32.0
+
+
+def d_e_reg(bits):
+    """Twin of digital::e_reg: 4 * C_gate * V_DD^2 per register bit."""
+    return 4.0 * C_GATE * V2 * bits
+
+
+def d_e_add(bits):
+    """Twin of digital::e_add: one full adder per accumulator bit."""
+    return e_fa() * bits
+
+
+def aligned_bits_f(f):
+    """Twin of digital::aligned_bits: (n_m + 1) + (e_max - 1)."""
+    return (f.n_m + 1.0) + (f.e_max - 1.0)
+
+
+def acc_width(nx_bits, nw_bits, nr):
+    """Twin of digital::acc_width: product width + ceil(log2 NR)."""
+    return nx_bits + nw_bits + math.ceil(math.log2(float(nr)))
+
+
+def digital_mac_fj(fx, fw, nr):
+    """Twin of digital::digital_mac_fj: array multiply over the aligned
+    magnitude words, full-width accumulate add, register write."""
+    nx, nw = aligned_bits_f(fx), aligned_bits_f(fw)
+    accw = acc_width(nx, nw, nr)
+    return e_mult(nx, nw) + d_e_add(accw) + d_e_reg(accw)
+
+
+def digital_fj_per_op(fx, fw, nr):
+    """Twin of digital::digital_fj_per_op (one MAC = two ops)."""
+    return digital_mac_fj(fx, fw, nr) / 2.0
+
+
+def softmax_element_fj():
+    """Twin of digital::softmax_element_fj — the TechParams
+    e_softmax_fj default (the exact Rust addition order)."""
+    bits = 8.0
+    mults = 2.0 * e_mult(bits, bits)
+    adds = 2.0 * d_e_add(bits)
+    return mults + adds + d_e_reg(bits)
+
+
+E_SOFTMAX_FJ = softmax_element_fj()
+
+
+def crossover_enob_twin(arch, fx, fw, nr, nc):
+    """Twin of digital::crossover_enob: 80-step bisection of the ADC
+    resolution where the analog per-op energy meets the flat digital
+    baseline; None when one side wins everywhere in [0, 32]."""
+    digital = digital_fj_per_op(fx, fw, nr)
+
+    def analog(enob):
+        return energy_total(energy_per_op(arch, fx, fw, nr, nc, enob))
+
+    if analog(0.0) >= digital:
+        return None
+    if analog(MAX_CROSSOVER_ENOB) < digital:
+        return None
+    lo, hi = 0.0, MAX_CROSSOVER_ENOB
+    for _ in range(80):
+        mid = 0.5 * (lo + hi)
+        if analog(mid) >= digital:
+            hi = mid
+        else:
+            lo = mid
+    return 0.5 * (lo + hi)
+
+
 # ---------------------------------------------------------------- tile --
 # Twin of tile::mapper — the layer-scale GEMM on GR-MAC tiles.
 
@@ -836,6 +911,10 @@ def tile_gemm_twin(x, wt, shape, nr, nc, fx, fw, arch, fixed_enob=None):
     y = [0.0] * (m_ * n_)
     tiles = []
     tiles_fj = 0.0
+    # per-component totals in the Rust LayerReport::component_totals
+    # accumulation order (each component summed tile-by-tile)
+    comps = {"adc": 0.0, "dac": 0.0, "cells": 0.0, "exp_logic": 0.0,
+             "tree": 0.0, "norm_mult": 0.0}
     for kt in range(row_tiles):
         for nt in range(col_tiles):
             k0 = kt * nr
@@ -865,7 +944,10 @@ def tile_gemm_twin(x, wt, shape, nr, nc, fx, fw, arch, fixed_enob=None):
                     else:
                         v, g = batch["v_gr"][s], batch["s_sum"][s] / float(nr)
                     y[mi * n_ + n0 + j] += adc_quantize(v, enob) * g * float(nr)
-            e_fj = energy_total(energy_per_op(arch, fx, fw, nr, nc, enob)) * mvm_ops
+            b = energy_per_op(arch, fx, fw, nr, nc, enob)
+            e_fj = energy_total(b) * mvm_ops
+            for comp in comps:
+                comps[comp] += b[comp] * mvm_ops
             tiles.append({"enob": enob, "fj": e_fj})
             tiles_fj += e_fj
 
@@ -894,14 +976,18 @@ def tile_gemm_twin(x, wt, shape, nr, nc, fx, fw, arch, fixed_enob=None):
         global_norm_fj = (global_norm_energy_per_op(fx, nr, nc)
                           * float(2 * nr * nc * m_) * float(len(tiles)))
 
+    # plain GEMMs don't exponentiate: softmax_fj stays 0 (the Rust
+    # mapper's assemble() convention), so the total is unchanged
     total_fj = tiles_fj + reduction_fj + global_norm_fj
     enob_mean = sum(t["enob"] for t in tiles) / float(len(tiles))
     return {
         "y": y,
         "tiles": tiles,
+        "components": comps,
         "tiles_fj": tiles_fj,
         "reduction_fj": reduction_fj,
         "global_norm_fj": global_norm_fj,
+        "softmax_fj": 0.0,
         "total_fj": total_fj,
         "fj_per_mac": total_fj / float(m_ * k_ * n_),
         "sqnr_db": sqnr_db,
@@ -1101,7 +1187,10 @@ def attn_twin(xq, a_scale, shape, heads, kv, nr, nc, fx, fw, arch,
     tiles_fj = sum(g["tiles_fj"] for g in grids)
     reduction_fj = sum(g["reduction_fj"] for g in grids)
     global_norm_fj = sum(g["global_norm_fj"] for g in grids)
-    total_fj = tiles_fj + reduction_fj + global_norm_fj
+    # digital softmax: heads * M * S probability elements priced at the
+    # TechParams e_softmax_fj default (model::attn::run_attention)
+    softmax_fj = float(heads * m_ * s_len) * E_SOFTMAX_FJ
+    total_fj = tiles_fj + reduction_fj + global_norm_fj + softmax_fj
     macs = 2 * m_ * s_len * d
     return {
         "y": y_out,
@@ -1110,6 +1199,7 @@ def attn_twin(xq, a_scale, shape, heads, kv, nr, nc, fx, fw, arch,
         "tiles_fj": tiles_fj,
         "reduction_fj": reduction_fj,
         "global_norm_fj": global_norm_fj,
+        "softmax_fj": softmax_fj,
         "total_fj": total_fj,
         "fj_per_mac": total_fj / float(macs),
         "sqnr_db": sqnr_db,
@@ -1408,6 +1498,179 @@ def fig9_series(samples, seed):
         go_core = fig9_sqnr_db(fmt, go, samples, seed + 3, True, False)
         rows.append([uni, me, go_all, go_core])
     return rows
+
+
+# -------------------------------------------------------------- explore --
+# Twin of explore — the design-space Pareto explorer: canonical plan
+# hashing, lexicographic grid decode, per-point evaluation with the
+# component-level energy breakdown, and the non-dominated frontier.
+
+EXPLORE_STREAM = 0x9A2E  # explore::EXPLORE_STREAM
+
+
+def fnv1a64(data):
+    """Twin of explore::fnv1a64 over the canonical plan bytes."""
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def json_canonical(v):
+    """Twin of config::Json::to_string: sorted object keys, no
+    whitespace, integer-valued numbers below 1e15 rendered without a
+    fraction. (Non-integral values fall back to repr(), which matches
+    the Rust shortest-round-trip form for the magnitudes plans use.)"""
+    if v is None:
+        return "null"
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if isinstance(v, (int, float)):
+        f = float(v)
+        if f == math.floor(f) and abs(f) < 1e15:
+            return str(int(f))
+        return repr(f)
+    if isinstance(v, str):
+        out = ['"']
+        for c in v:
+            if c == '"':
+                out.append('\\"')
+            elif c == "\\":
+                out.append("\\\\")
+            elif c == "\n":
+                out.append("\\n")
+            elif c == "\t":
+                out.append("\\t")
+            elif c == "\r":
+                out.append("\\r")
+            elif ord(c) < 0x20:
+                out.append("\\u%04x" % ord(c))
+            else:
+                out.append(c)
+        out.append('"')
+        return "".join(out)
+    if isinstance(v, list):
+        return "[" + ",".join(json_canonical(x) for x in v) + "]"
+    if isinstance(v, dict):
+        return "{" + ",".join(
+            json_canonical(k) + ":" + json_canonical(v[k])
+            for k in sorted(v)) + "}"
+    raise TypeError(type(v))
+
+
+def plan_hash_twin(plan):
+    """Twin of ParetoPlan::content_hash: FNV-1a 64 over the canonical
+    serialization (axes nested under "axes", sorted keys)."""
+    doc = {
+        "name": plan["name"],
+        "seed": plan["seed"],
+        "tokens": plan["tokens"],
+        "distribution": plan["distribution"],
+        "axes": {
+            "workload": plan["workload"],
+            "nr": plan["nr"],
+            "nc": plan["nc"],
+            "arch": plan["arch"],
+            "n_e": plan["n_e"],
+            "n_m": plan["n_m"],
+            "adc": plan["adc"],
+            "adc_scale": plan["adc_scale"],
+        },
+    }
+    return fnv1a64(json_canonical(doc).encode("utf-8"))
+
+
+def plan_num_points(plan):
+    n = 1
+    for axis in ("workload", "nr", "nc", "arch", "n_e", "n_m", "adc",
+                 "adc_scale"):
+        n *= len(plan[axis])
+    return n
+
+
+def plan_point_twin(plan, index):
+    """Twin of ParetoPlan::point: decode the lexicographic grid index
+    (workload outermost, adc_scale innermost — division peels from the
+    right)."""
+    rest = index
+
+    def take(axis):
+        nonlocal rest
+        vals = plan[axis]
+        i = rest % len(vals)
+        rest //= len(vals)
+        return vals[i]
+
+    adc_scale = take("adc_scale")
+    adc = take("adc")
+    n_m = take("n_m")
+    n_e = take("n_e")
+    arch = take("arch")
+    nc = take("nc")
+    nr = take("nr")
+    workload = take("workload")
+    return {"index": index, "workload": workload, "nr": nr, "nc": nc,
+            "arch": arch, "n_e": n_e, "n_m": n_m, "adc": adc,
+            "adc_scale": adc_scale}
+
+
+def pareto_eval_twin(plan, index):
+    """Twin of explore::eval_point for `gemm:MxKxN` workloads at
+    adc_scale 1: operands from (plan.seed, EXPLORE_STREAM, index) — X
+    then the transposed weights — through the shared tile-grid twin,
+    with the component breakdown and the digital-IMC comparison."""
+    spec = plan_point_twin(plan, index)
+    assert spec["workload"].startswith("gemm:"), spec["workload"]
+    assert spec["adc_scale"] == 1, "twin prices the unscaled ADC only"
+    m_, k_, n_ = (int(d) for d in spec["workload"][5:].split("x"))
+    fx = FpFormat.fp(int(spec["n_e"]), int(spec["n_m"]))
+    fw = FpFormat.fp4_e2m1()
+    dist_x = Dist(plan["distribution"])
+    dist_w = Dist("maxent", fw)
+    fixed_enob = (None if spec["adc"] == "spec"
+                  else float(spec["adc"].split(":")[1]))
+
+    rng = Pcg64(job_seed(plan["seed"], EXPLORE_STREAM, index))
+    x = fill_f32(dist_x, rng, m_ * k_)
+    wt = fill_f32(dist_w, rng, n_ * k_)
+    r = tile_gemm_twin(x, wt, (m_, k_, n_), spec["nr"], spec["nc"], fx, fw,
+                       spec["arch"], fixed_enob=fixed_enob)
+    dig = digital_mac_fj(fx, fw, spec["nr"])
+    return {
+        "index": index,
+        "enob_mean": r["enob_mean"],
+        "sqnr_db": r["sqnr_db"],
+        "components": r["components"],
+        "reduction_fj": r["reduction_fj"],
+        "global_norm_fj": r["global_norm_fj"],
+        "softmax_fj": r["softmax_fj"],
+        "total_fj": r["total_fj"],
+        "fj_per_mac": r["fj_per_mac"],
+        "digital_fj_per_mac": dig,
+        "digital_ratio": r["fj_per_mac"] / dig,
+        "crossover_enob": crossover_enob_twin(
+            spec["arch"], fx, fw, spec["nr"], spec["nc"]),
+    }
+
+
+def frontier_mask_twin(points):
+    """Twin of explore::frontier::frontier_mask: point i survives iff no
+    point dominates it (lower-or-equal fJ/MAC AND higher-or-equal SQNR,
+    at least one strict; NaN objectives neither dominate nor are
+    dominated)."""
+    def dominates(a, b):
+        if any(math.isnan(v) for v in (a["fj_per_mac"], a["sqnr_db"],
+                                       b["fj_per_mac"], b["sqnr_db"])):
+            return False
+        no_worse = (a["fj_per_mac"] <= b["fj_per_mac"]
+                    and a["sqnr_db"] >= b["sqnr_db"])
+        strict = (a["fj_per_mac"] < b["fj_per_mac"]
+                  or a["sqnr_db"] > b["sqnr_db"])
+        return no_worse and strict
+
+    return [not any(dominates(a, b) for a in points if a is not b)
+            for b in points]
 
 
 # ---------------------------------------------------- self-validation --
@@ -1865,6 +2128,112 @@ def gen_conv_im2col(outdir):
     write_golden(os.path.join(outdir, "conv_im2col.json"), 1e-6, vals)
 
 
+PARETO_PLAN = {
+    "name": "golden",
+    "seed": 42,
+    "tokens": 4,
+    "distribution": "gauss_outliers",
+    "workload": ["gemm:4x32x8"],
+    "nr": [8, 16],
+    "nc": [8],
+    "arch": ["gr-unit", "conventional"],
+    "n_e": [2, 4],
+    "n_m": [2],
+    "adc": ["spec"],
+    "adc_scale": [1],
+}
+
+
+def gen_pareto(outdir):
+    """Twin of tests/golden.rs::golden_pareto_explore: expand the 8-point
+    nr x arch x n_e grid (native gr-unit, the global-norm wide format,
+    and the conventional baseline), evaluate every point through the
+    explorer's seeded operand stream, and pin the plan content hash, the
+    per-point component breakdowns, SQNR, the digital-IMC baseline and
+    crossover, and the Pareto-frontier membership."""
+    plan = PARETO_PLAN
+    n = plan_num_points(plan)
+    assert n == 8, n
+    pts = [pareto_eval_twin(plan, i) for i in range(n)]
+    mask = frontier_mask_twin(pts)
+    h = plan_hash_twin(plan)
+    vals = [
+        ("plan_hash_hi", float(h >> 32)),
+        ("plan_hash_lo", float(h & 0xFFFFFFFF)),
+        ("num_points", float(n)),
+        ("num_frontier", float(sum(mask))),
+    ]
+    for p, front in zip(pts, mask):
+        i = p["index"]
+        comps = p["components"]
+        # the acceptance invariant: the nine-way breakdown reconciles
+        # with the total within 1e-9 relative (exact Rust addition order)
+        bsum = (comps["adc"] + comps["dac"] + comps["cells"]
+                + comps["exp_logic"] + comps["tree"] + comps["norm_mult"]
+                + p["reduction_fj"] + p["global_norm_fj"] + p["softmax_fj"])
+        rel = abs(bsum - p["total_fj"]) / max(p["total_fj"], 1e-300)
+        assert rel < 1e-9, (i, bsum, p["total_fj"])
+        vals.append((f"p{i}_enob_mean", p["enob_mean"]))
+        vals.append((f"p{i}_sqnr_db", p["sqnr_db"]))
+        for cname in ("adc", "dac", "cells", "exp_logic", "tree",
+                      "norm_mult"):
+            vals.append((f"p{i}_{cname}_fj", comps[cname]))
+        for key in ("reduction_fj", "global_norm_fj", "softmax_fj",
+                    "total_fj", "fj_per_mac", "digital_fj_per_mac",
+                    "digital_ratio"):
+            vals.append((f"p{i}_{key}", p[key]))
+        if p["crossover_enob"] is not None:
+            vals.append((f"p{i}_crossover_enob", p["crossover_enob"]))
+        vals.append((f"p{i}_frontier", 1.0 if front else 0.0))
+        print(f"  pareto p{i}: fj/mac={p['fj_per_mac']:.2f} "
+              f"sqnr={p['sqnr_db']:.2f} dB vs digital "
+              f"{p['digital_ratio']:.2f}x"
+              + (" [frontier]" if front else ""))
+    write_golden(os.path.join(outdir, "pareto_explore.json"), 1e-6, vals)
+
+
+def digital_self_check():
+    """Pin the digital-IMC twin against the Rust unit-test vectors
+    (energy::digital::tests) and the canonical-hash primitives."""
+    assert abs(d_e_reg(8.0) - 4.0 * 0.7 * 0.81 * 8.0) < 1e-12
+    assert abs(d_e_add(8.0) - 8.0 * e_fa()) < 1e-12
+    fp4 = FpFormat.fp4_e2m1()
+    assert aligned_bits_f(fp4) == 4.0
+    assert acc_width(4.0, 4.0, 32) == 13.0
+    assert acc_width(4.0, 4.0, 1) == 8.0
+    assert acc_width(4.0, 4.0, 33) == 14.0
+    want = e_mult(4.0, 4.0) + d_e_add(13.0) + d_e_reg(13.0)
+    assert abs(digital_mac_fj(fp4, fp4, 32) - want) < 1e-12
+    assert abs(digital_fj_per_op(fp4, fp4, 32) - want / 2.0) < 1e-12
+    # 2*272.16 + 54.432 + 18.144 at the Table III defaults
+    assert abs(E_SOFTMAX_FJ - 616.896) < 1e-9
+    # the crossover is the energy-equality point, and analog wins below
+    x = crossover_enob_twin("gr-unit", fp4, fp4, 32, 32)
+    assert x is not None
+    analog = energy_total(energy_per_op("gr-unit", fp4, fp4, 32, 32, x))
+    dig = digital_fj_per_op(fp4, fp4, 32)
+    assert abs(analog - dig) / dig < 1e-6, (analog, dig)
+    below = energy_total(energy_per_op("gr-unit", fp4, fp4, 32, 32,
+                                       x - 1.0))
+    assert below < dig
+    # FNV-1a 64 canonical vectors
+    assert fnv1a64(b"") == 0xCBF29CE484222325
+    assert fnv1a64(b"a") == 0xAF63DC4C8601EC8C
+    # canonical JSON: sorted keys, no whitespace, integral floats as ints
+    assert json_canonical({"b": [1.0, 0.5], "a": "x"}) == \
+        '{"a":"x","b":[1,0.5]}'
+    # frontier: trade-offs survive, interior points are filtered,
+    # duplicates are all kept
+    def pt(e, q):
+        return {"fj_per_mac": e, "sqnr_db": q}
+    assert frontier_mask_twin([pt(1.0, 30.0), pt(2.0, 40.0),
+                               pt(1.5, 29.0), pt(3.0, 39.0)]) == \
+        [True, True, False, False]
+    assert frontier_mask_twin([pt(1.0, 35.0), pt(1.0, 35.0)]) == \
+        [True, True]
+    print("digital self-check OK")
+
+
 CI_GOLDEN_SEED = 0xC1
 CI_GOLDEN_HALF_DB = 0.25
 
@@ -2115,6 +2484,7 @@ def main():
     self_check()
     workload_self_check()
     energy_self_check()
+    digital_self_check()
     model_self_check()
     im2col_self_check()
     attn_self_check()
@@ -2132,6 +2502,7 @@ def main():
     gen_samples_ci(outdir)
     gen_attention_block(outdir)
     gen_conv_im2col(outdir)
+    gen_pareto(outdir)
 
 
 if __name__ == "__main__":

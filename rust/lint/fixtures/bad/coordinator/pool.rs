@@ -1,0 +1,6 @@
+// expect: U
+//! Failing fixture: `.unwrap()` in non-test coordinator code.
+
+pub fn first_job(jobs: &[u64]) -> u64 {
+    *jobs.first().unwrap()
+}

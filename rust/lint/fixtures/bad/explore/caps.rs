@@ -1,0 +1,13 @@
+// expect: C
+//! Failing fixture: respelling the service cap literals outside
+//! `server/mod.rs` silently forks the cap.
+
+/// The MAC cap, respelled as a shift.
+pub fn mac_cap() -> u64 {
+    1 << 36
+}
+
+/// The slab cap, respelled in decimal.
+pub fn slab_cap() -> u64 {
+    134217728
+}

@@ -1,0 +1,7 @@
+// expect: D
+//! Failing fixture: an environment read outside `main.rs`/`cli/` makes
+//! results depend on more than the spec and the seed.
+
+pub fn artifacts_dir() -> Option<String> {
+    std::env::var("GRCIM_ARTIFACTS").ok()
+}

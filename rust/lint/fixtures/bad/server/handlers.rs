@@ -1,0 +1,18 @@
+// expect: H
+//! Failing fixture: a Handler impl whose `plan` never calls a cap gate
+//! — the uniform-caps contract of the dispatch pipeline is broken.
+
+trait Handler {
+    fn plan(&mut self) -> Result<String, String>;
+}
+
+struct UncappedHandler {
+    samples: usize,
+}
+
+impl Handler for UncappedHandler {
+    fn plan(&mut self) -> Result<String, String> {
+        // no check_samples/check_layer_caps/check_model_caps call
+        Ok(format!("key:{}", self.samples))
+    }
+}

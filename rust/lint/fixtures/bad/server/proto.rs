@@ -1,0 +1,7 @@
+// expect: U
+//! Failing fixture: `.expect()` in non-test serving-layer code.
+
+/// Index of a kind in a lookup table.
+pub fn kind_index(kinds: &[&str], kind: &str) -> usize {
+    kinds.iter().position(|k| *k == kind).expect("kind in table")
+}

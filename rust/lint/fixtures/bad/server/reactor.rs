@@ -1,0 +1,7 @@
+// expect: S
+//! Failing fixture: a fully-qualified `std::sync` path is the same
+//! shim bypass as an import.
+
+pub fn flag() -> std::sync::atomic::AtomicBool {
+    std::sync::atomic::AtomicBool::new(false)
+}

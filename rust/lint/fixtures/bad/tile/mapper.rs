@@ -1,0 +1,9 @@
+// expect: S
+//! Failing fixture: importing `std::sync` outside `util/sync.rs`
+//! bypasses the loom-checkable shim.
+
+use std::sync::{Arc, Mutex};
+
+pub fn shared_counter() -> Arc<Mutex<u64>> {
+    Arc::new(Mutex::new(0))
+}

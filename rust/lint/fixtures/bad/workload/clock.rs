@@ -1,0 +1,10 @@
+// expect: D
+//! Failing fixture: wall-clock reads in compute code break
+//! bit-identical caching and resume.
+
+pub fn stamp() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}

@@ -1,0 +1,12 @@
+//! Near-miss fixture: the CLI layer is the sanctioned home for argv
+//! and environment reads (rule D passes under `cli/`).
+
+/// Collect the program's arguments.
+pub fn argv() -> Vec<String> {
+    std::env::args().skip(1).collect()
+}
+
+/// Read an environment override.
+pub fn artifacts_override() -> Option<String> {
+    std::env::var("GRCIM_ARTIFACTS").ok()
+}

@@ -1,0 +1,13 @@
+//! Near-miss fixture: `.unwrap()` outside the serving layers
+//! (`server/`, `coordinator/`, `explore/`) is not rule U's business —
+//! pure-math modules may still panic on internal invariants.
+
+/// Largest finite value of a tiny format table.
+pub fn max_finite(table: &[f64]) -> f64 {
+    *table.iter().filter(|v| v.is_finite()).next_back().unwrap()
+}
+
+/// `env::current_dir` is allowed everywhere (a location, not an input).
+pub fn here() -> std::path::PathBuf {
+    std::env::current_dir().unwrap()
+}

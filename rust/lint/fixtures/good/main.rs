@@ -1,0 +1,9 @@
+//! Near-miss fixture: `main.rs` may read the clock and the environment
+//! (rule D passes), and `env::temp_dir` is allowed anywhere — it names
+//! a location, not an input.
+
+fn main() {
+    let _started = std::time::SystemTime::now();
+    let _args: Vec<String> = std::env::args().collect();
+    let _tmp = std::env::temp_dir();
+}

@@ -1,0 +1,36 @@
+//! Near-miss fixture: a Handler impl whose `plan` calls its cap gate
+//! (rule H passes), plus `.unwrap()` confined to `#[cfg(test)]` code
+//! (rule U passes).
+
+trait Handler {
+    fn plan(&mut self) -> Result<String, String>;
+}
+
+fn check_samples(samples: usize) -> Result<(), String> {
+    if samples == 0 {
+        return Err("samples must be positive".to_string());
+    }
+    Ok(())
+}
+
+struct GoodHandler {
+    samples: usize,
+}
+
+impl Handler for GoodHandler {
+    fn plan(&mut self) -> Result<String, String> {
+        check_samples(self.samples)?;
+        Ok(format!("key:{}", self.samples))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        let mut h = GoodHandler { samples: 4 };
+        assert_eq!(h.plan().unwrap(), "key:4");
+    }
+}

@@ -1,0 +1,12 @@
+//! Near-miss fixture: `server/mod.rs` is the one place the service cap
+//! literals may be spelled — both spellings must pass here (rule C).
+
+/// MAC budget per layer-scale request.
+pub const MAX_LAYER_MACS: u64 = 1 << 36;
+/// Operand-slab element budget, spelled in decimal on purpose.
+pub const MAX_LAYER_ELEMS: u64 = 134217728;
+
+/// A second decimal spelling of the MAC cap, still in its home file.
+pub fn mac_cap_decimal() -> u64 {
+    68719476736
+}

@@ -1,0 +1,686 @@
+//! `grcim-lint` — the repo-specific lint gate, run blocking in CI.
+//!
+//! Five AST-level rules encode invariants of this codebase that
+//! rustc/clippy cannot express, each anchored to a real regression
+//! class:
+//!
+//! * **U** — no `.unwrap()`/`.expect()` outside `#[cfg(test)]` code in
+//!   `server/`, `coordinator/`, `explore/`: these layers serve network
+//!   requests and long campaigns, where a panic poisons locks and
+//!   cascades (the pool's panic-safety machinery exists because of
+//!   exactly this).
+//! * **S** — no `std::sync` outside `util/sync.rs` (tests exempt): every
+//!   lock/atomic must come from the [`crate::util::sync`]-style shim so
+//!   the loom lane model-checks the real code, and so every lock obeys
+//!   the one poisoning-recovery policy.
+//! * **C** — the service cap values (`1 << 36` MACs, `1 << 27` slab
+//!   elements) may be *defined* only in `server/mod.rs`: a second
+//!   spelling of the literal silently forks the cap.
+//! * **H** — every `impl Handler` `plan()` in `handlers.rs` must call a
+//!   cap gate (`check_samples`/`check_layer_caps`/`check_model_caps`):
+//!   the unified-dispatch refactor exists so resource caps apply
+//!   uniformly; a new handler that skips its gate reopens the
+//!   OOM-a-worker hole the caps closed.
+//! * **D** — no wall-clock or environment reads (`SystemTime::now`,
+//!   `env::var`/`vars`/`var_os`/`args`) outside `main.rs`, `cli/`, and
+//!   `server/metrics.rs`: campaign results must be a function of the
+//!   spec and seed alone (bit-identical caches, resumable checkpoints).
+//!   `env::temp_dir`/`current_dir` stay allowed — they name locations,
+//!   not inputs.
+//!
+//! Findings can be suppressed only through `allow.list` entries of the
+//! form `rule|path-suffix|message-substring|justification` — one entry
+//! per site, justification mandatory, unused entries are themselves
+//! errors (so the allowlist can never rot ahead of the code).
+//!
+//! `--selftest` runs every rule against `fixtures/good` (must be clean)
+//! and `fixtures/bad` (every `// expect: X` annotation must fire), so
+//! the gate is itself gated.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use syn::spanned::Spanned;
+use syn::visit::Visit;
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone)]
+struct Finding {
+    rule: char,
+    /// Path relative to the scanned root (e.g. `server/proto.rs`).
+    file: String,
+    line: usize,
+    msg: String,
+}
+
+/// One `allow.list` entry: `rule|path-suffix|message-substring|why`.
+struct Allow {
+    rule: char,
+    path: String,
+    contains: String,
+    justification: String,
+    used: std::cell::Cell<bool>,
+}
+
+fn parse_allowlist(path: &Path) -> Result<Vec<Allow>> {
+    let mut out = Vec::new();
+    if !path.exists() {
+        return Ok(out);
+    }
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.splitn(4, '|');
+        let (Some(rule), Some(p), Some(c), Some(j)) =
+            (parts.next(), parts.next(), parts.next(), parts.next())
+        else {
+            bail!("allow.list:{}: want rule|path|contains|justification", i + 1);
+        };
+        let rule = rule.trim();
+        if rule.len() != 1 {
+            bail!("allow.list:{}: rule must be one letter, got {rule:?}", i + 1);
+        }
+        if j.trim().is_empty() {
+            bail!("allow.list:{}: a justification is mandatory", i + 1);
+        }
+        out.push(Allow {
+            rule: rule.chars().next().unwrap_or('?'),
+            path: p.trim().to_string(),
+            contains: c.trim().to_string(),
+            justification: j.trim().to_string(),
+            used: std::cell::Cell::new(false),
+        });
+    }
+    Ok(out)
+}
+
+/// Whether any attribute marks this item as test-only: `#[test]`,
+/// `#[cfg(test)]`, or any `cfg(...)` mentioning `test` (e.g.
+/// `#[cfg(all(test, not(loom)))]`).
+fn is_test_gated(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| {
+        let path = a.path();
+        if path.segments.last().is_some_and(|s| s.ident == "test") {
+            return true;
+        }
+        if path.is_ident("cfg") {
+            if let syn::Meta::List(l) = &a.meta {
+                let toks = l.tokens.to_string();
+                // token-level, so `mod tests` bodies and strings don't
+                // fool it; `testing` etc. would, but no cfg here uses it
+                return toks.split(|ch: char| !ch.is_alphanumeric() && ch != '_')
+                    .any(|w| w == "test");
+            }
+        }
+        false
+    })
+}
+
+/// Does this `use` tree import anything under `std::sync`?
+fn use_tree_hits_std_sync(tree: &syn::UseTree) -> bool {
+    fn head_is_sync(tree: &syn::UseTree) -> bool {
+        match tree {
+            syn::UseTree::Path(p) => p.ident == "sync",
+            syn::UseTree::Name(n) => n.ident == "sync",
+            syn::UseTree::Rename(r) => r.ident == "sync",
+            syn::UseTree::Group(g) => g.items.iter().any(head_is_sync),
+            syn::UseTree::Glob(_) => false,
+        }
+    }
+    match tree {
+        syn::UseTree::Path(p) if p.ident == "std" => head_is_sync(&p.tree),
+        syn::UseTree::Group(g) => g.items.iter().any(use_tree_hits_std_sync),
+        _ => false,
+    }
+}
+
+/// Finds calls to any of the handler cap gates inside a `plan` body.
+struct GateFinder {
+    found: bool,
+}
+
+impl<'ast> Visit<'ast> for GateFinder {
+    fn visit_expr_call(&mut self, node: &'ast syn::ExprCall) {
+        if let syn::Expr::Path(p) = &*node.func {
+            if p.path.segments.last().is_some_and(|s| {
+                let id = s.ident.to_string();
+                matches!(
+                    id.as_str(),
+                    "check_samples" | "check_layer_caps" | "check_model_caps"
+                )
+            }) {
+                self.found = true;
+            }
+        }
+        syn::visit::visit_expr_call(self, node);
+    }
+}
+
+/// The per-file rule walker.
+struct Linter<'a> {
+    /// Root-relative path of the file being walked.
+    rel: String,
+    /// The file's source lines (findings echo the offending line so
+    /// allowlist `contains` patterns have something stable to match).
+    lines: &'a [&'a str],
+    findings: &'a mut Vec<Finding>,
+}
+
+impl Linter<'_> {
+    fn src_line(&self, line: usize) -> &str {
+        self.lines.get(line.saturating_sub(1)).map_or("", |l| l.trim())
+    }
+
+    fn push(&mut self, rule: char, line: usize, what: &str) {
+        let msg = format!("{what}: `{}`", self.src_line(line));
+        self.findings.push(Finding { rule, file: self.rel.clone(), line, msg });
+    }
+
+    fn in_unwrap_scope(&self) -> bool {
+        ["server/", "coordinator/", "explore/"]
+            .iter()
+            .any(|p| self.rel.starts_with(p))
+    }
+
+    fn is_cap_home(&self) -> bool {
+        self.rel == "server/mod.rs"
+    }
+
+    fn is_sync_shim(&self) -> bool {
+        self.rel.ends_with("util/sync.rs")
+    }
+
+    fn nondet_exempt(&self) -> bool {
+        self.rel == "main.rs"
+            || self.rel.starts_with("cli/")
+            || self.rel == "server/metrics.rs"
+    }
+
+    /// Rule-D check over one path expression's segments.
+    fn check_nondet_path(&mut self, path: &syn::Path) {
+        if self.nondet_exempt() {
+            return;
+        }
+        let segs: Vec<String> =
+            path.segments.iter().map(|s| s.ident.to_string()).collect();
+        for w in segs.windows(2) {
+            let hit = matches!(
+                (w[0].as_str(), w[1].as_str()),
+                ("env", "var" | "vars" | "var_os" | "vars_os" | "args" | "args_os")
+                    | ("SystemTime", "now")
+            );
+            if hit {
+                self.push(
+                    'D',
+                    path.span().start().line,
+                    &format!(
+                        "nondeterministic input `{}::{}` outside main.rs/cli//metrics.rs \
+                         (results must be functions of spec + seed)",
+                        w[0], w[1]
+                    ),
+                );
+            }
+        }
+    }
+}
+
+impl<'ast> Visit<'ast> for Linter<'_> {
+    fn visit_item_mod(&mut self, node: &'ast syn::ItemMod) {
+        if is_test_gated(&node.attrs) {
+            return; // test-only subtree: every rule exempts it
+        }
+        syn::visit::visit_item_mod(self, node);
+    }
+
+    fn visit_item_fn(&mut self, node: &'ast syn::ItemFn) {
+        if is_test_gated(&node.attrs) {
+            return;
+        }
+        syn::visit::visit_item_fn(self, node);
+    }
+
+    fn visit_item_impl(&mut self, node: &'ast syn::ItemImpl) {
+        if is_test_gated(&node.attrs) {
+            return;
+        }
+        // rule H: a Handler impl's plan() must call a cap gate
+        if self.rel.ends_with("handlers.rs") {
+            let is_handler_impl = node
+                .trait_
+                .as_ref()
+                .is_some_and(|(_, p, _)| {
+                    p.segments.last().is_some_and(|s| s.ident == "Handler")
+                });
+            if is_handler_impl {
+                let plan = node.items.iter().find_map(|i| match i {
+                    syn::ImplItem::Fn(f) if f.sig.ident == "plan" => Some(f),
+                    _ => None,
+                });
+                if let Some(plan) = plan {
+                    let mut gates = GateFinder { found: false };
+                    gates.visit_block(&plan.block);
+                    if !gates.found {
+                        let ty = match &*node.self_ty {
+                            syn::Type::Path(p) => p
+                                .path
+                                .segments
+                                .last()
+                                .map(|s| s.ident.to_string())
+                                .unwrap_or_default(),
+                            _ => String::from("<impl>"),
+                        };
+                        let line = node.span().start().line;
+                        self.findings.push(Finding {
+                            rule: 'H',
+                            file: self.rel.clone(),
+                            line,
+                            msg: format!(
+                                "plan() of `{ty}` calls no cap gate \
+                                 (check_samples/check_layer_caps/check_model_caps)"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        syn::visit::visit_item_impl(self, node);
+    }
+
+    fn visit_expr_method_call(&mut self, node: &'ast syn::ExprMethodCall) {
+        if self.in_unwrap_scope() {
+            let m = node.method.to_string();
+            if m == "unwrap" || m == "expect" {
+                self.push(
+                    'U',
+                    node.method.span().start().line,
+                    &format!(
+                        "`.{m}()` outside test code in a serving layer \
+                         (a panic here poisons locks and cascades)"
+                    ),
+                );
+            }
+        }
+        syn::visit::visit_expr_method_call(self, node);
+    }
+
+    fn visit_item_use(&mut self, node: &'ast syn::ItemUse) {
+        if !self.is_sync_shim() && use_tree_hits_std_sync(&node.tree) {
+            self.push(
+                'S',
+                node.span().start().line,
+                "std::sync outside util/sync.rs \
+                 (use the loom-checkable shim: crate::util::sync)",
+            );
+        }
+        syn::visit::visit_item_use(self, node);
+    }
+
+    fn visit_path(&mut self, node: &'ast syn::Path) {
+        if !self.is_sync_shim() {
+            let mut it = node.segments.iter();
+            if let (Some(a), Some(b)) = (it.next(), it.next()) {
+                if a.ident == "std" && b.ident == "sync" {
+                    self.push(
+                        'S',
+                        node.span().start().line,
+                        "std::sync outside util/sync.rs \
+                         (use the loom-checkable shim: crate::util::sync)",
+                    );
+                }
+            }
+        }
+        self.check_nondet_path(node);
+        syn::visit::visit_path(self, node);
+    }
+
+    fn visit_expr_lit(&mut self, node: &'ast syn::ExprLit) {
+        if !self.is_cap_home() {
+            if let syn::Lit::Int(i) = &node.lit {
+                if let Ok(v) = i.base10_parse::<u128>() {
+                    if v == (1u128 << 36) || v == (1u128 << 27) {
+                        self.push(
+                            'C',
+                            node.span().start().line,
+                            "service cap literal respelled outside server/mod.rs \
+                             (import MAX_LAYER_MACS/MAX_LAYER_ELEMS instead)",
+                        );
+                    }
+                }
+            }
+        }
+        syn::visit::visit_expr_lit(self, node);
+    }
+
+    fn visit_expr_binary(&mut self, node: &'ast syn::ExprBinary) {
+        if !self.is_cap_home() {
+            if let syn::BinOp::Shl(_) = node.op {
+                let lit_val = |e: &syn::Expr| -> Option<u128> {
+                    if let syn::Expr::Lit(l) = e {
+                        if let syn::Lit::Int(i) = &l.lit {
+                            return i.base10_parse::<u128>().ok();
+                        }
+                    }
+                    None
+                };
+                if lit_val(&node.left) == Some(1)
+                    && matches!(lit_val(&node.right), Some(36) | Some(27))
+                {
+                    self.push(
+                        'C',
+                        node.span().start().line,
+                        "service cap literal respelled outside server/mod.rs \
+                         (import MAX_LAYER_MACS/MAX_LAYER_ELEMS instead)",
+                    );
+                }
+            }
+        }
+        syn::visit::visit_expr_binary(self, node);
+    }
+}
+
+/// Recursively collect `.rs` files under `root`, sorted for stable output.
+fn rust_files(root: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let entries = std::fs::read_dir(&dir)
+            .with_context(|| format!("reading {}", dir.display()))?;
+        for e in entries {
+            let p = e?.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Run every rule over one file; `rel` is the root-relative path the
+/// path-scoped rules key on.
+fn lint_file(rel: &str, source: &str, findings: &mut Vec<Finding>) {
+    let ast = match syn::parse_file(source) {
+        Ok(ast) => ast,
+        Err(e) => {
+            // unparseable code can't be checked; fail loudly rather
+            // than silently passing the gate
+            findings.push(Finding {
+                rule: 'P',
+                file: rel.to_string(),
+                line: e.span().start().line,
+                msg: format!("file does not parse: {e}"),
+            });
+            return;
+        }
+    };
+    let lines: Vec<&str> = source.lines().collect();
+    let mut linter = Linter { rel: rel.to_string(), lines: &lines, findings };
+    linter.visit_file(&ast);
+}
+
+/// Lint every `.rs` file under `root`; paths in findings are relative
+/// to `root`.
+fn lint_tree(root: &Path) -> Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    for path in rust_files(root)? {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        lint_file(&rel, &src, &mut findings);
+    }
+    Ok(findings)
+}
+
+/// Split findings into (blocking, allowed); marks used allow entries.
+fn apply_allowlist<'f>(
+    findings: &'f [Finding],
+    allows: &[Allow],
+) -> (Vec<&'f Finding>, Vec<(&'f Finding, String)>) {
+    let mut blocking = Vec::new();
+    let mut allowed = Vec::new();
+    for f in findings {
+        let hit = allows.iter().find(|a| {
+            a.rule == f.rule && f.file.ends_with(&a.path) && f.msg.contains(&a.contains)
+        });
+        match hit {
+            Some(a) => {
+                a.used.set(true);
+                allowed.push((f, a.justification.clone()));
+            }
+            None => blocking.push(f),
+        }
+    }
+    (blocking, allowed)
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn print_json(blocking: &[&Finding], unused: &[&Allow]) {
+    let mut items: Vec<String> = blocking
+        .iter()
+        .map(|f| {
+            format!(
+                r#"{{"rule":"{}","file":"{}","line":{},"msg":"{}"}}"#,
+                f.rule,
+                json_escape(&f.file),
+                f.line,
+                json_escape(&f.msg)
+            )
+        })
+        .collect();
+    items.extend(unused.iter().map(|a| {
+        format!(
+            r#"{{"rule":"A","file":"allow.list","line":0,"msg":"unused allow entry: {}|{}|{}"}}"#,
+            a.rule,
+            json_escape(&a.path),
+            json_escape(&a.contains)
+        )
+    }));
+    println!("[{}]", items.join(","));
+}
+
+/// Check the checker: `fixtures/good` must be clean, every
+/// `// expect: X` annotation in `fixtures/bad` must fire, and nothing
+/// unannotated may fire.
+fn selftest(fixtures: &Path) -> Result<()> {
+    let good = lint_tree(&fixtures.join("good"))?;
+    if !good.is_empty() {
+        for f in &good {
+            eprintln!("  [{}] good/{}:{} {}", f.rule, f.file, f.line, f.msg);
+        }
+        bail!("selftest: {} finding(s) in fixtures/good", good.len());
+    }
+
+    let bad_root = fixtures.join("bad");
+    let mut files_checked = 0usize;
+    let mut rules_covered: BTreeSet<char> = BTreeSet::new();
+    for path in rust_files(&bad_root)? {
+        let rel = path
+            .strip_prefix(&bad_root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(&path)?;
+        let expected: BTreeSet<char> = src
+            .lines()
+            .filter_map(|l| l.trim().strip_prefix("// expect: "))
+            .filter_map(|r| r.trim().chars().next())
+            .collect();
+        if expected.is_empty() {
+            bail!("selftest: bad/{rel} has no `// expect: X` annotation");
+        }
+        let mut findings = Vec::new();
+        lint_file(&rel, &src, &mut findings);
+        let actual: BTreeSet<char> = findings.iter().map(|f| f.rule).collect();
+        if actual != expected {
+            for f in &findings {
+                eprintln!("  [{}] bad/{}:{} {}", f.rule, f.file, f.line, f.msg);
+            }
+            bail!(
+                "selftest: bad/{rel} expected rules {expected:?}, got {actual:?}"
+            );
+        }
+        files_checked += 1;
+        rules_covered.extend(expected);
+    }
+    for rule in ['U', 'S', 'C', 'H', 'D'] {
+        if !rules_covered.contains(&rule) {
+            bail!("selftest: no failing fixture covers rule {rule}");
+        }
+    }
+    println!(
+        "selftest ok: fixtures/good clean, {files_checked} failing fixtures \
+         cover rules {rules_covered:?}"
+    );
+    Ok(())
+}
+
+fn run() -> Result<i32> {
+    let mut json = false;
+    let mut do_selftest = false;
+    let mut src_override: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => json = true,
+            "--selftest" => do_selftest = true,
+            "--src" => {
+                src_override = Some(PathBuf::from(
+                    args.next().context("--src needs a directory")?,
+                ));
+            }
+            other => bail!("unknown argument {other:?} (try --json, --selftest, --src DIR)"),
+        }
+    }
+
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    if do_selftest {
+        selftest(&manifest.join("fixtures"))?;
+        return Ok(0);
+    }
+
+    let src_root = src_override.unwrap_or_else(|| manifest.join("../src"));
+    let findings = lint_tree(&src_root)?;
+    let allows = parse_allowlist(&manifest.join("allow.list"))?;
+    let (blocking, allowed) = apply_allowlist(&findings, &allows);
+    let unused: Vec<&Allow> = allows.iter().filter(|a| !a.used.get()).collect();
+
+    if json {
+        print_json(&blocking, &unused);
+    } else {
+        for (f, why) in &allowed {
+            println!("allowed [{}] {}:{} — {}", f.rule, f.file, f.line, why);
+        }
+        for f in &blocking {
+            println!("FAIL [{}] {}:{} {}", f.rule, f.file, f.line, f.msg);
+        }
+        for a in &unused {
+            println!(
+                "FAIL [A] allow.list entry never matched: {}|{}|{} \
+                 (stale entries must be deleted)",
+                a.rule, a.path, a.contains
+            );
+        }
+        println!(
+            "grcim-lint: {} blocking, {} allowed, {} stale allow entries",
+            blocking.len(),
+            allowed.len(),
+            unused.len()
+        );
+    }
+    Ok(if blocking.is_empty() && unused.is_empty() { 0 } else { 1 })
+}
+
+fn main() {
+    match run() {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("grcim-lint: error: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixtures() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures")
+    }
+
+    #[test]
+    fn fixtures_selftest_passes() {
+        selftest(&fixtures()).expect("selftest");
+    }
+
+    #[test]
+    fn repo_tree_is_clean_under_the_allowlist() {
+        let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        let findings = lint_tree(&manifest.join("../src")).expect("lint runs");
+        let allows = parse_allowlist(&manifest.join("allow.list")).expect("allowlist");
+        let (blocking, _) = apply_allowlist(&findings, &allows);
+        assert!(
+            blocking.is_empty(),
+            "blocking findings: {:?}",
+            blocking.iter().map(|f| format!("[{}] {}:{}", f.rule, f.file, f.line)).collect::<Vec<_>>()
+        );
+        let unused: Vec<_> = allows.iter().filter(|a| !a.used.get()).collect();
+        assert!(
+            unused.is_empty(),
+            "stale allow entries: {:?}",
+            unused.iter().map(|a| format!("{}|{}", a.rule, a.path)).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn allowlist_rejects_missing_justification() {
+        let dir = std::env::temp_dir().join("grcim-lint-test-allow");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("allow.list");
+        std::fs::write(&p, "U|foo.rs|bar|   \n").unwrap();
+        assert!(parse_allowlist(&p).is_err());
+        std::fs::write(&p, "U|foo.rs|bar\n").unwrap();
+        assert!(parse_allowlist(&p).is_err(), "three fields must be rejected");
+        std::fs::write(&p, "# comment\n\nU|foo.rs|bar|because\n").unwrap();
+        let ok = parse_allowlist(&p).unwrap();
+        assert_eq!(ok.len(), 1);
+        assert_eq!(ok[0].justification, "because");
+    }
+
+    #[test]
+    fn test_gating_detects_cfg_variants() {
+        let src = r#"
+            #[cfg(test)]
+            mod tests { fn f() { let _ = Some(1).unwrap(); } }
+            #[cfg(all(test, not(loom)))]
+            mod tests2 { fn f() { let _ = Some(1).unwrap(); } }
+        "#;
+        let mut findings = Vec::new();
+        lint_file("server/x.rs", src, &mut findings);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+}

@@ -21,7 +21,7 @@ use crate::runtime::{build_engine, Engine, EngineKind, SimScratch};
 use crate::stats::{ColumnAgg, ColumnBatch};
 use anyhow::{Context, Result};
 use std::path::PathBuf;
-use std::sync::Arc;
+use crate::util::sync::Arc;
 
 /// One grid point of a campaign.
 #[derive(Debug, Clone)]

@@ -17,14 +17,20 @@
 //! would panic in turn, and the caller would see the secondary symptom
 //! (`pool lost jobs`, or `expect("pool returned every tile")` in the
 //! tile mapper) instead of the root cause. The queue locks additionally
-//! recover from poisoning (`PoisonError::into_inner` — the queue is a
-//! plain iterator, valid after any interrupted `next()`), so even a
-//! panic outside the caught region cannot wedge the pool.
+//! recover from poisoning ([`crate::util::sync::lock_recover`] — the
+//! queue is a plain iterator, valid after any interrupted `next()`), so
+//! even a panic outside the caught region cannot wedge the pool.
+//!
+//! Every primitive here comes from [`crate::util::sync`], so the whole
+//! `run_jobs` protocol — including the result channel — is
+//! model-checked by the loom suite (`rust/tests/loom_models.rs`): a
+//! panicking job must yield a clean `Err` with no stuck worker in
+//! *every* interleaving, not just the ones the unit tests happen to
+//! hit.
 
+use crate::util::sync::{channel, lock_recover, panic_msg, spawn_named, Arc, Mutex};
 use anyhow::{anyhow, Context, Result};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex, MutexGuard};
 
 /// A schedulable unit: one Monte-Carlo batch of one experiment. (The
 /// pool itself is generic — the tile mapper schedules plain tile indices
@@ -35,23 +41,6 @@ pub struct Job {
     pub spec_idx: usize,
     /// Batch index within that spec (seeds the job's RNG stream).
     pub batch_idx: u64,
-}
-
-/// Describe a caught panic payload (panics carry `&str` or `String`
-/// messages in practice; anything else is reported opaquely).
-fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
-    if let Some(s) = payload.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = payload.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "non-string panic payload".to_string()
-    }
-}
-
-/// Lock the job queue, recovering from poisoning (see the module docs).
-fn lock_queue<T>(queue: &Mutex<T>) -> MutexGuard<'_, T> {
-    queue.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 /// Run `jobs` over `workers` threads.
@@ -82,7 +71,7 @@ where
     }
     let workers = workers.clamp(1, total);
     let queue = Arc::new(Mutex::new(jobs.into_iter()));
-    let (tx, rx) = mpsc::channel::<Result<T>>();
+    let (tx, rx) = channel::<Result<T>>();
     let make_worker = Arc::new(make_worker);
 
     let mut handles = Vec::with_capacity(workers);
@@ -90,51 +79,47 @@ where
         let queue = Arc::clone(&queue);
         let tx = tx.clone();
         let make_worker = Arc::clone(&make_worker);
-        let handle = std::thread::Builder::new()
-            .name(format!("grcim-worker-{wid}"))
-            .spawn(move || {
-                let made = catch_unwind(AssertUnwindSafe(&*make_worker)).unwrap_or_else(
+        let handle = spawn_named(format!("grcim-worker-{wid}"), move || {
+            let made = catch_unwind(AssertUnwindSafe(&*make_worker)).unwrap_or_else(
+                |payload| {
+                    Err(anyhow!("worker {wid} init panicked: {}", panic_msg(&*payload)))
+                },
+            );
+            let mut work = match made {
+                Ok(w) => w,
+                Err(e) => {
+                    tx.send(Err(e.context(format!("worker {wid} failed to initialize"))));
+                    return;
+                }
+            };
+            loop {
+                let job = {
+                    let mut q = lock_recover(&queue);
+                    q.next()
+                };
+                let Some(job) = job else { break };
+                // a panicking job must not unwind through the pool:
+                // it would poison the queue and cascade into every
+                // worker — catch it and report a clean error instead
+                let res = catch_unwind(AssertUnwindSafe(|| work(job))).unwrap_or_else(
                     |payload| {
-                        Err(anyhow!("worker {wid} init panicked: {}", panic_msg(&*payload)))
+                        Err(anyhow!("worker {wid} job panicked: {}", panic_msg(&*payload)))
                     },
                 );
-                let mut work = match made {
-                    Ok(w) => w,
-                    Err(e) => {
-                        let _ = tx.send(Err(e.context(format!(
-                            "worker {wid} failed to initialize"
-                        ))));
-                        return;
-                    }
-                };
-                loop {
-                    let job = {
-                        let mut q = lock_queue(&queue);
-                        q.next()
-                    };
-                    let Some(job) = job else { break };
-                    // a panicking job must not unwind through the pool:
-                    // it would poison the queue and cascade into every
-                    // worker — catch it and report a clean error instead
-                    let res = catch_unwind(AssertUnwindSafe(|| work(job))).unwrap_or_else(
-                        |payload| {
-                            Err(anyhow!("worker {wid} job panicked: {}", panic_msg(&*payload)))
-                        },
-                    );
-                    let failed = res.is_err();
-                    if tx.send(res).is_err() || failed {
-                        break; // receiver gone or error sent: stop
-                    }
+                let failed = res.is_err();
+                if !tx.send(res) || failed {
+                    break; // receiver gone or error sent: stop
                 }
-            })
-            .context("spawning worker")?;
+            }
+        })
+        .context("spawning worker")?;
         handles.push(handle);
     }
     drop(tx);
 
     let mut out = Vec::with_capacity(total);
     let mut first_err: Option<anyhow::Error> = None;
-    for res in rx {
+    while let Some(res) = rx.recv() {
         match res {
             Ok(v) => out.push(v),
             Err(e) => {
@@ -142,7 +127,7 @@ where
                     first_err = Some(e);
                 }
                 // drain the queue so workers stop picking up new jobs
-                let mut q = lock_queue(&queue);
+                let mut q = lock_recover(&queue);
                 while q.next().is_some() {}
             }
         }

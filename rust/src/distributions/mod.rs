@@ -39,7 +39,7 @@
 use crate::formats::{FpFormat, MaxEntropy};
 use crate::rng::Pcg64;
 use crate::workload::EmpiricalDist;
-use std::sync::Arc;
+use crate::util::sync::Arc;
 
 /// Standard-normal quantile function Φ⁻¹(p) (Acklam's rational
 /// approximation, |relative error| < 1.15e-9 — far below the Monte-Carlo

@@ -20,8 +20,8 @@ use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
 use std::io::{BufRead, BufReader, Write};
+use crate::util::sync::{lock_recover, Arc, Mutex};
 use std::path::Path;
-use std::sync::{Arc, Mutex};
 
 /// The header's format tag — bumped only on incompatible layout changes.
 pub const CKPT_FORMAT: &str = "grcim-pareto-ckpt";
@@ -38,7 +38,10 @@ impl CkptWriter {
     /// Append one completed point (one line + fsync).
     pub fn append(&self, point: &ExplorePoint) -> Result<()> {
         let line = point.to_json().to_string();
-        let mut f = self.0.lock().unwrap_or_else(|p| p.into_inner());
+        // recover from poisoning: the file is valid after any
+        // interrupted append — at worst the loader reports one partial
+        // trailing line, exactly the crash case it already tolerates
+        let mut f = lock_recover(&self.0);
         f.write_all(line.as_bytes()).context("appending checkpoint point")?;
         f.write_all(b"\n").context("appending checkpoint newline")?;
         f.flush().context("flushing checkpoint")?;

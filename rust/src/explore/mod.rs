@@ -34,9 +34,9 @@ use crate::server::{MAX_LAYER_ELEMS, MAX_LAYER_MACS};
 use crate::tile::{
     gemm_with_engine, im2col, parse_shape, AdcPolicy, ConvShape, TileConfig, MAX_TILE_ENOB,
 };
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use crate::util::sync::Arc;
 
 pub use checkpoint::{Checkpoint, CkptWriter};
 pub use frontier::{frontier_indices, frontier_mask, Objectives};
@@ -734,12 +734,12 @@ pub fn eval_point(engine: &dyn Engine, plan: &ParetoPlan, index: usize) -> Resul
     let res = gemm_with_engine(engine, &label, &cfg, shape, &x, &wt)?;
     let report = &res.report;
     let comps = report.component_totals();
-    let by = |name: &str| {
+    let by = |name: &str| -> Result<f64> {
         comps
             .iter()
             .find(|(n, _)| *n == name)
             .map(|(_, v)| *v)
-            .expect("component name")
+            .ok_or_else(|| anyhow!("tile report is missing the '{name}' energy component"))
     };
     let digital_fj_per_mac = digital::digital_mac_fj(&cfg.tech, &fmts, spec.nr);
     Ok(ExplorePoint {
@@ -755,12 +755,12 @@ pub fn eval_point(engine: &dyn Engine, plan: &ParetoPlan, index: usize) -> Resul
         adc_scale: spec.adc_scale,
         enob_mean: report.enob_mean(),
         sqnr_db: report.sqnr_db,
-        adc_fj: by("adc"),
-        dac_fj: by("dac"),
-        cells_fj: by("cells"),
-        exp_logic_fj: by("exp_logic"),
-        tree_fj: by("tree"),
-        norm_mult_fj: by("norm_mult"),
+        adc_fj: by("adc")?,
+        dac_fj: by("dac")?,
+        cells_fj: by("cells")?,
+        exp_logic_fj: by("exp_logic")?,
+        tree_fj: by("tree")?,
+        norm_mult_fj: by("norm_mult")?,
         reduction_fj: report.reduction_fj,
         global_norm_fj: report.global_norm_fj,
         softmax_fj: report.softmax_fj,

@@ -121,7 +121,9 @@ mod tests {
         let fmt = FpFormat::fp4_e2m1();
         let me = MaxEntropy::new(fmt);
         let mut rng = Pcg64::seeded(31);
-        let n = 40_000;
+        // Miri runs exercise the sampler for UB, not the statistics;
+        // the 0.02 tolerance is calibrated to the full sample count.
+        let n = if cfg!(miri) { 1_000 } else { 40_000 };
         // count samples in the top binade [0.5, 1): exactly the e_max code
         let top = (0..n)
             .filter(|_| {
@@ -130,6 +132,9 @@ mod tests {
             })
             .count() as f64
             / n as f64;
+        if cfg!(miri) {
+            return;
+        }
         assert!((top - 0.25).abs() < 0.02, "top binade frac = {top}");
     }
 

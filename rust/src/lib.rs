@@ -64,6 +64,10 @@
 //! ```
 
 #![warn(missing_docs)]
+// the library proper is entirely safe code; the only `unsafe` in the
+// workspace is the counting GlobalAlloc in benches/hotpath.rs, a
+// separate crate target this lint does not reach
+#![deny(unsafe_code)]
 
 pub mod analog;
 pub mod benchkit;

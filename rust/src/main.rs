@@ -246,7 +246,7 @@ fn cmd_workload(args: &Args) -> Result<()> {
         .or_else(|| args.positional.first().cloned())
         .context("workload needs a trace: grcim workload --trace <file>")?;
     let trace = grcim::workload::TensorTrace::read(std::path::Path::new(&path))?;
-    let fit = std::sync::Arc::new(grcim::workload::EmpiricalDist::fit(&trace)?);
+    let fit = grcim::util::sync::Arc::new(grcim::workload::EmpiricalDist::fit(&trace)?);
     let campaign = campaign_from_args(args)?;
     let samples = args.get_usize("samples", 16_384)?;
     let out_dir = PathBuf::from(args.get_or("out", "results"));
@@ -599,6 +599,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         mux_threads: args.get_usize("mux", 0)?,
         compute_threads: args.get_usize("compute", 0)?,
         queue_cap: args.get_usize("queue", 0)?,
+        mux_panic_line: None,
     })?;
     println!("grcim serve listening on {}", server.local_addr());
     println!("protocol: one JSON request per line (see docs/CLI.md)");

@@ -267,10 +267,15 @@ mod tests {
     #[test]
     fn uniform_moments() {
         let mut rng = Pcg64::seeded(11);
-        let n = 200_000;
+        // Under Miri the point is UB detection in the sampler, not
+        // statistics; the moment tolerances are calibrated to the full n.
+        let n = if cfg!(miri) { 1_000 } else { 200_000 };
         let xs: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
         let mean = xs.iter().sum::<f64>() / n as f64;
         let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        if cfg!(miri) {
+            return;
+        }
         assert!(approx_eq(mean, 0.5, 0.01), "mean={mean}");
         assert!(approx_eq(var, 1.0 / 12.0, 0.02), "var={var}");
     }
@@ -278,10 +283,13 @@ mod tests {
     #[test]
     fn normal_moments() {
         let mut rng = Pcg64::seeded(13);
-        let n = 200_000;
+        let n = if cfg!(miri) { 1_000 } else { 200_000 };
         let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let mean = xs.iter().sum::<f64>() / n as f64;
         let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        if cfg!(miri) {
+            return;
+        }
         assert!(mean.abs() < 0.01, "mean={mean}");
         assert!(approx_eq(var, 1.0, 0.02), "var={var}");
         // tail sanity: ~0.27% beyond 3 sigma

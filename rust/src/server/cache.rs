@@ -22,6 +22,13 @@
 //! so the O(len) scan on insert is noise next to the campaigns being
 //! cached).
 //!
+//! Every lock here goes through [`crate::util::sync`]: shard and flight
+//! mutexes recover from poisoning (a panicking compute already fails its
+//! flight via [`FlightGuard`]; the maps and counters stay valid), so a
+//! crashed request can never wedge later lookups — and the single-flight
+//! protocol itself (leader panic, follower wakeup, no key poisoning) is
+//! model-checked across all interleavings in `rust/tests/loom_models.rs`.
+//!
 //! # Example
 //!
 //! ```
@@ -35,12 +42,11 @@
 //! assert_eq!(cache.stats().computes, 1);
 //! ```
 
+use crate::util::sync::{cv_wait, lock_recover, Arc, AtomicU64, Condvar, Mutex, Ordering};
 use anyhow::{anyhow, Result};
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
 
 /// How a [`ShardedCache::get_or_compute`] call was served.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -93,13 +99,25 @@ impl StatsSnapshot {
     }
 }
 
-#[derive(Debug, Default)]
 struct Counters {
     hits: AtomicU64,
     misses: AtomicU64,
     computes: AtomicU64,
     coalesced: AtomicU64,
     evictions: AtomicU64,
+}
+
+impl Default for Counters {
+    // written out because the shim's loom atomics don't implement Default
+    fn default() -> Self {
+        Counters {
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            computes: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
 }
 
 struct Entry<V> {
@@ -133,7 +151,7 @@ impl<V> Flight<V> {
     }
 
     fn finish(&self, res: std::result::Result<Arc<V>, String>) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         if st.is_none() {
             *st = Some(res);
         }
@@ -141,11 +159,13 @@ impl<V> Flight<V> {
     }
 
     fn wait(&self) -> std::result::Result<Arc<V>, String> {
-        let mut st = self.state.lock().unwrap();
-        while st.is_none() {
-            st = self.cv.wait(st).unwrap();
+        let mut st = lock_recover(&self.state);
+        loop {
+            if let Some(res) = st.as_ref() {
+                return res.clone();
+            }
+            st = cv_wait(&self.cv, st);
         }
-        st.as_ref().unwrap().clone()
     }
 }
 
@@ -162,9 +182,7 @@ struct FlightGuard<'a, V> {
 impl<V> Drop for FlightGuard<'_, V> {
     fn drop(&mut self) {
         if !self.done {
-            if let Ok(mut flights) = self.flights.lock() {
-                flights.remove(self.key);
-            }
+            lock_recover(self.flights).remove(self.key);
             self.flight.finish(Err("computation panicked".into()));
         }
     }
@@ -201,7 +219,7 @@ impl<V: Send + Sync> ShardedCache<V> {
 
     /// Look up `key` without computing on a miss.
     pub fn get(&self, key: &str) -> Option<Arc<V>> {
-        let mut shard = self.shard(key).lock().unwrap();
+        let mut shard = lock_recover(self.shard(key));
         shard.tick += 1;
         let tick = shard.tick;
         shard.map.get_mut(key).map(|e| {
@@ -211,7 +229,7 @@ impl<V: Send + Sync> ShardedCache<V> {
     }
 
     fn insert(&self, key: &str, value: Arc<V>) {
-        let mut shard = self.shard(key).lock().unwrap();
+        let mut shard = lock_recover(self.shard(key));
         shard.tick += 1;
         let tick = shard.tick;
         if !shard.map.contains_key(key) && shard.map.len() >= self.per_shard_cap {
@@ -254,7 +272,7 @@ impl<V: Send + Sync> ShardedCache<V> {
         // the invariant hits + coalesced + computes == lookups exact
         // (and misses == coalesced + computes).
         let (flight, leader) = {
-            let mut flights = self.flights.lock().unwrap();
+            let mut flights = lock_recover(&self.flights);
             if let Some(v) = self.get(key) {
                 self.counters.hits.fetch_add(1, Ordering::Relaxed);
                 return Ok((v, Outcome::Hit));
@@ -295,7 +313,7 @@ impl<V: Send + Sync> ShardedCache<V> {
                 {
                     // insert, then retire the flight under the flights
                     // lock (see the re-check above)
-                    let mut flights = self.flights.lock().unwrap();
+                    let mut flights = lock_recover(&self.flights);
                     self.insert(key, Arc::clone(&v));
                     flights.remove(key);
                 }
@@ -305,8 +323,7 @@ impl<V: Send + Sync> ShardedCache<V> {
             Err(e) => {
                 let msg = format!("{e:#}");
                 {
-                    let mut flights = self.flights.lock().unwrap();
-                    flights.remove(key);
+                    lock_recover(&self.flights).remove(key);
                 }
                 flight.finish(Err(msg));
                 Err(e)
@@ -325,7 +342,7 @@ impl<V: Send + Sync> ShardedCache<V> {
             entries: self
                 .shards
                 .iter()
-                .map(|s| s.lock().unwrap().map.len() as u64)
+                .map(|s| lock_recover(s).map.len() as u64)
                 .sum(),
         }
     }
@@ -471,6 +488,26 @@ mod tests {
         assert!(matches!(o, Outcome::Computed | Outcome::Hit));
         let (v2, _) = c.get_or_compute("k", || Ok(9)).unwrap();
         assert_eq!(*v2, *v, "cached value must be stable");
+    }
+
+    #[test]
+    fn poisoned_shard_lock_recovers() {
+        // a thread panicking while holding a shard lock (anything
+        // unwinding through a cache call) poisons the std Mutex; every
+        // later lookup must recover instead of propagating the panic —
+        // the rendered-response caches serve `info`/`metrics` inline and
+        // must never wedge
+        let c: Arc<ShardedCache<u32>> = Arc::new(ShardedCache::new(16));
+        c.get_or_compute("k", || Ok(1)).unwrap();
+        let c2 = Arc::clone(&c);
+        let _ = std::thread::spawn(move || {
+            let _guard = c2.shard("k").lock();
+            panic!("poison the shard");
+        })
+        .join();
+        let (v, o) = c.get_or_compute("k", || Ok(9)).unwrap();
+        assert_eq!((*v, o), (1, Outcome::Hit), "poisoned shard lost its entry");
+        assert_eq!(c.stats().entries, 1);
     }
 
     #[test]

@@ -35,8 +35,8 @@ use crate::server::proto::{self, obj, Request, RequestKind, SweepExperiment, Tra
 use crate::spec::{required_enob, Arch, SpecConfig};
 use crate::tile::LayerSpec;
 use crate::workload::{self, EmpiricalDist, TensorTrace};
-use anyhow::{bail, Context, Result};
-use std::sync::Arc;
+use anyhow::{anyhow, bail, Context, Result};
+use crate::util::sync::Arc;
 
 /// One request kind's compute pipeline; see the module docs for the
 /// three-phase contract.
@@ -157,6 +157,16 @@ fn bad_request(msg: String) -> anyhow::Error {
     anyhow::Error::new(super::BadRequest(msg))
 }
 
+/// The shared sample-count gate every Monte-Carlo request kind applies
+/// in `plan` — one call site per handler, checked by the repo lint
+/// (`grcim-lint` rule H).
+fn check_samples(samples: usize) -> Result<()> {
+    if samples == 0 {
+        bail!("samples must be positive");
+    }
+    Ok(())
+}
+
 /// The `layer` request's MAC and operand-slab caps (also applied, over
 /// the layer sum, by [`check_model_caps`]). Oversized shapes are a
 /// client mistake, so both caps reject with a typed `bad_request`.
@@ -237,9 +247,7 @@ impl Handler for EnergyHandler {
     }
 
     fn plan(&mut self, svc: &CampaignService) -> Result<String> {
-        if self.samples == 0 {
-            bail!("samples must be positive");
-        }
+        check_samples(self.samples)?;
         let p = fig12::SpecPoint::from_db(self.dr_db, self.sqnr_db);
         if p.fp_format().is_none() || p.int_format().is_none() {
             bail!(
@@ -287,7 +295,7 @@ impl Handler for EnergyHandler {
         let (agg_fp, _) = svc.aggregate(&fp_spec, self.seed)?;
         let tech = TechParams::default();
         let r = fig12::evaluate_at(&p, &agg_int, &agg_fp, &tech)
-            .expect("formats validated in plan");
+            .ok_or_else(|| anyhow!("spec point invalidated between plan and compute"))?;
 
         let mut archs = vec![arch_json("conventional", r.enob_conv, &r.e_conv)];
         for (arch, enob, b) in &r.gr_all {
@@ -334,9 +342,7 @@ impl Handler for SweepHandler {
     }
 
     fn plan(&mut self, svc: &CampaignService) -> Result<String> {
-        if self.samples == 0 {
-            bail!("samples must be positive");
-        }
+        check_samples(self.samples)?;
         self.specs.clear();
         for e in &self.experiments {
             // empirical distributions read a server-side trace file; the
@@ -409,9 +415,7 @@ impl Handler for FigureHandler {
     }
 
     fn plan(&mut self, svc: &CampaignService) -> Result<String> {
-        if self.samples == 0 {
-            bail!("samples must be positive");
-        }
+        check_samples(self.samples)?;
         // unknown ids fail in compute (figures::run validates); errors
         // are never cached, so the key for a bad id stays vacant
         Ok(proto::figure_key(&self.id, self.samples, self.seed, svc.engine_name()))
@@ -468,14 +472,20 @@ impl Handler for LayerHandler {
     }
 
     fn compute(&self, svc: &CampaignService) -> Result<String> {
-        let spec = self.spec.clone().expect("plan resolved the spec");
+        let spec = self
+            .spec
+            .clone()
+            .ok_or_else(|| anyhow!("layer compute ran before plan resolved the spec"))?;
         let campaign = CampaignConfig { seed: self.seed, ..svc.campaign.clone() };
         let res = crate::tile::run_layer(&spec, &campaign)?;
         Ok(res.report.to_figure_result().to_json().to_string())
     }
 
     fn render(&self, _svc: &CampaignService, payload: Json) -> Result<Json> {
-        let spec = self.spec.as_ref().expect("plan resolved the spec");
+        let spec = self
+            .spec
+            .as_ref()
+            .ok_or_else(|| anyhow!("layer render ran before plan resolved the spec"))?;
         Ok(obj(vec![
             ("shape", Json::Str(self.params.shape.clone())),
             ("gemm", Json::Str(spec.shape.to_string())),
@@ -515,14 +525,20 @@ impl Handler for ModelHandler {
     }
 
     fn compute(&self, svc: &CampaignService) -> Result<String> {
-        let spec = self.spec.clone().expect("plan resolved the spec");
+        let spec = self
+            .spec
+            .clone()
+            .ok_or_else(|| anyhow!("model compute ran before plan resolved the spec"))?;
         let campaign = CampaignConfig { seed: self.seed, ..svc.campaign.clone() };
         let res = crate::model::run_model(&spec, &campaign)?;
         Ok(res.report.to_figure_result().to_json().to_string())
     }
 
     fn render(&self, _svc: &CampaignService, payload: Json) -> Result<Json> {
-        let spec = self.spec.as_ref().expect("plan resolved the spec");
+        let spec = self
+            .spec
+            .as_ref()
+            .ok_or_else(|| anyhow!("model render ran before plan resolved the spec"))?;
         Ok(obj(vec![
             ("model", Json::Str(self.params.model.clone())),
             ("layers", Json::Num(spec.layers.len() as f64)),
@@ -561,7 +577,10 @@ impl Handler for ParetoHandler {
     }
 
     fn compute(&self, svc: &CampaignService) -> Result<String> {
-        let plan = self.plan.clone().expect("plan parsed the plan");
+        let plan = self
+            .plan
+            .clone()
+            .ok_or_else(|| anyhow!("pareto compute ran before plan parsed the plan"))?;
         let outcome = explore::run_fresh(&plan, &svc.campaign)?;
         let mut points = Vec::new();
         let mut frontier = Vec::new();
@@ -613,9 +632,7 @@ impl Handler for WorkloadHandler {
     }
 
     fn plan(&mut self, svc: &CampaignService) -> Result<String> {
-        if self.samples == 0 {
-            bail!("samples must be positive");
-        }
+        check_samples(self.samples)?;
         let trace = match &self.source {
             TraceSource::Path(p) => TensorTrace::read(&confined_trace_path(p)?)?,
             TraceSource::Inline { name, values } => {
@@ -632,14 +649,20 @@ impl Handler for WorkloadHandler {
     }
 
     fn compute(&self, svc: &CampaignService) -> Result<String> {
-        let fit = self.fit.as_ref().expect("plan fit the trace");
+        let fit = self
+            .fit
+            .as_ref()
+            .ok_or_else(|| anyhow!("workload compute ran before plan fit the trace"))?;
         let campaign = CampaignConfig { seed: self.seed, ..svc.campaign.clone() };
         let fr = workload::report(fit, &campaign, self.samples)?;
         Ok(fr.to_json().to_string())
     }
 
     fn render(&self, _svc: &CampaignService, payload: Json) -> Result<Json> {
-        let fit = self.fit.as_ref().expect("plan fit the trace");
+        let fit = self
+            .fit
+            .as_ref()
+            .ok_or_else(|| anyhow!("workload render ran before plan fit the trace"))?;
         Ok(obj(vec![
             ("trace", Json::Str(self.trace_name.clone())),
             ("content_hash", Json::Str(format!("{:016x}", fit.content_hash()))),

@@ -23,10 +23,10 @@
 
 use crate::config::Json;
 use crate::server::proto::obj;
-use anyhow::{bail, Context, Result};
+use crate::util::sync::{lock_recover, panic_msg, Barrier, Mutex};
+use anyhow::{anyhow, bail, Context, Result};
 use std::io::{ErrorKind, Read, Write};
 use std::net::TcpStream;
-use std::sync::{Barrier, Mutex};
 use std::time::{Duration, Instant};
 
 /// How long a driver waits for one response line before declaring the
@@ -237,7 +237,7 @@ fn drive(
                         c.ok += 1;
                         c.ok_per_line[li] += 1;
                         if deterministic[li] {
-                            let mut slot = refs[li].lock().unwrap();
+                            let mut slot = lock_recover(&refs[li]);
                             match slot.as_ref() {
                                 None => *slot = Some(resp),
                                 Some(first) if *first != resp => c.divergent += 1,
@@ -273,7 +273,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let barrier = Barrier::new(threads);
     let start = Instant::now();
 
-    let counts: Vec<Counts> = std::thread::scope(|s| {
+    let counts: Result<Vec<Counts>> = std::thread::scope(|s| {
         let mut handles = Vec::new();
         for t in 0..threads {
             let lo = t * cfg.conns / threads;
@@ -281,8 +281,16 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
             let (deterministic, refs, barrier) = (&deterministic, &refs, &barrier);
             handles.push(s.spawn(move || drive(cfg, lo..hi, deterministic, refs, barrier)));
         }
-        handles.into_iter().map(|h| h.join().expect("driver thread panicked")).collect()
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join().map_err(|p| {
+                    anyhow!("loadgen driver thread panicked: {}", panic_msg(&*p))
+                })
+            })
+            .collect()
     });
+    let counts = counts?;
 
     let mut r = LoadgenReport {
         ok_per_line: vec![0; cfg.lines.len()],

@@ -28,8 +28,7 @@
 use crate::config::Json;
 use crate::server::proto::{obj, RequestKind};
 use crate::stats::Histogram;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use crate::util::sync::{lock_recover, AtomicU64, Mutex, Ordering};
 use std::time::{Duration, Instant};
 
 /// Latency accumulator of one request kind: a log2-microsecond
@@ -109,16 +108,29 @@ impl Default for LatencyHist {
     }
 }
 
-#[derive(Debug, Default)]
+#[cfg_attr(not(loom), derive(Debug))]
 struct KindMetrics {
     ok: AtomicU64,
     errors: AtomicU64,
     lat: Mutex<LatencyHist>,
 }
 
+// written out because the shim's loom atomics don't implement Default
+impl Default for KindMetrics {
+    fn default() -> Self {
+        KindMetrics {
+            ok: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            lat: Mutex::new(LatencyHist::new()),
+        }
+    }
+}
+
 impl KindMetrics {
     fn to_json(&self) -> Json {
-        let lat = self.lat.lock().unwrap();
+        // a recording thread that panicked mid-push leaves at worst one
+        // inexact histogram sample — telemetry stays serveable
+        let lat = lock_recover(&self.lat);
         let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
         obj(vec![
             ("ok", Json::Num(self.ok.load(Ordering::Relaxed) as f64)),
@@ -133,7 +145,7 @@ impl KindMetrics {
 }
 
 /// Shared server telemetry; see the module docs.
-#[derive(Debug)]
+#[cfg_attr(not(loom), derive(Debug))]
 pub struct ServerMetrics {
     started: Instant,
     /// Connections accepted since start.
@@ -189,7 +201,7 @@ impl ServerMetrics {
         } else {
             k.errors.fetch_add(1, Ordering::Relaxed);
         }
-        k.lat.lock().unwrap().push(latency);
+        lock_recover(&k.lat).push(latency);
     }
 
     /// Total successful responses across kinds.
@@ -295,5 +307,25 @@ mod tests {
         assert_eq!(model.get("p50_us"), Some(&Json::Null));
         assert_eq!(j.get("accepted").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("queue").unwrap().get("cap").unwrap().as_usize(), Some(64));
+    }
+
+    #[test]
+    fn poisoned_latency_lock_recovers() {
+        // a thread panicking while holding a latency-histogram lock
+        // must not take metrics down: record() and to_json() keep
+        // working on the recovered histogram
+        let m = std::sync::Arc::new(ServerMetrics::new());
+        m.record(RequestKind::Energy, true, Duration::from_micros(50));
+        let m2 = std::sync::Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.kinds[RequestKind::Energy.index()].lat.lock();
+            panic!("poison the latency lock");
+        })
+        .join();
+        m.record(RequestKind::Energy, true, Duration::from_micros(70));
+        let j = m.to_json();
+        let energy = j.get("kinds").unwrap().get("energy").unwrap();
+        assert_eq!(energy.get("ok").unwrap().as_usize(), Some(2));
+        assert_eq!(energy.get("count").unwrap().as_usize(), Some(2));
     }
 }

@@ -65,13 +65,13 @@ use crate::config::Json;
 use crate::coordinator::{run_campaign, CampaignConfig, ExperimentSpec};
 use crate::runtime::EngineKind;
 use crate::stats::ColumnAgg;
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use cache::{Outcome, ShardedCache, StatsSnapshot};
 use metrics::ServerMetrics;
 use proto::{obj, Request};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::Arc;
+use crate::util::sync::Arc;
 
 /// Default listen address of `grcim serve`.
 pub const DEFAULT_ADDR: &str = "127.0.0.1:4080";
@@ -137,6 +137,12 @@ pub struct ServeConfig {
     /// Admission-queue capacity (0 = auto: 4× compute threads, min 16).
     /// Requests beyond it get a typed `busy` error immediately.
     pub queue_cap: usize,
+    /// Test-only fault injection: a request line containing this
+    /// substring panics the mux thread that reads it, exercising the
+    /// dead-mux recovery path (acceptor rerouting + the panic surfacing
+    /// from [`Server::join`]). Always `None` in production.
+    #[doc(hidden)]
+    pub mux_panic_line: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -148,6 +154,7 @@ impl Default for ServeConfig {
             mux_threads: 0,
             compute_threads: 0,
             queue_cap: 0,
+            mux_panic_line: None,
         }
     }
 }
@@ -245,7 +252,7 @@ impl CampaignService {
         self.aggs.get_or_compute(&key, || {
             let cfg = CampaignConfig { seed, ..self.campaign.clone() };
             let mut aggs = run_campaign(std::slice::from_ref(spec), &cfg)?;
-            Ok(aggs.pop().expect("one aggregate per spec"))
+            aggs.pop().ok_or_else(|| anyhow!("campaign returned no aggregate for the spec"))
         })
     }
 
@@ -343,6 +350,7 @@ impl Server {
             cfg.resolved_mux_threads(),
             cfg.resolved_compute_threads(),
             cfg.resolved_queue_cap(),
+            cfg.mux_panic_line.clone(),
         )?;
         Ok(Server { addr, service, reactor: Some(reactor) })
     }
@@ -359,17 +367,26 @@ impl Server {
 
     /// Stop accepting, finish every admitted request, flush and join
     /// every thread (the one shared drain path). Errors if the acceptor
-    /// had stopped on a fatal `accept` failure.
+    /// had stopped on a fatal `accept` failure or a mux thread panicked.
     pub fn shutdown(mut self) -> Result<()> {
-        self.reactor.take().expect("reactor runs until the server is consumed").drain()
+        match self.reactor.take() {
+            Some(mut r) => r.drain(),
+            // the reactor runs until the server is consumed; Self taken
+            // by value makes a second teardown unrepresentable, so this
+            // arm is a no-op safety net rather than an expect()
+            None => Ok(()),
+        }
     }
 
-    /// Block until the acceptor exits — an external shutdown or a fatal
-    /// `accept` error — then run the same drain path as
-    /// [`Server::shutdown`]. `grcim serve` runs this; a fatal accept
-    /// error surfaces here instead of leaving a silent half-dead server.
+    /// Block until the acceptor exits — an external shutdown, a fatal
+    /// `accept` error, or every mux thread dying — then run the same
+    /// drain path as [`Server::shutdown`]. `grcim serve` runs this; a
+    /// fatal accept error or a mux panic surfaces here instead of
+    /// leaving a silent half-dead server.
     pub fn join(mut self) -> Result<()> {
-        let mut r = self.reactor.take().expect("reactor runs until the server is consumed");
+        let Some(mut r) = self.reactor.take() else {
+            return Ok(());
+        };
         let accepted = r.join_acceptor();
         let drained = r.drain();
         accepted.and(drained)

@@ -39,13 +39,14 @@
 use super::metrics::ServerMetrics;
 use super::{proto, CampaignService, MAX_LINE};
 use crate::server::proto::{Request, RequestKind};
+use crate::util::sync::{
+    cv_wait, cv_wait_timeout, lock_recover, panic_msg, spawn_named, Arc, AtomicBool,
+    BoundedQueue, Condvar, JoinHandle, Mutex, Ordering,
+};
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::VecDeque;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::{Duration, Instant};
 
 /// Shortest mux poll-backoff step (after any progress).
@@ -74,61 +75,12 @@ pub(super) struct ComputeJob {
     enqueued: Instant,
 }
 
-struct QueueInner {
-    jobs: VecDeque<ComputeJob>,
-    closed: bool,
-}
-
-/// The bounded admission queue between muxes and compute workers.
-/// `try_push` never blocks — a full queue is the `busy` signal.
-pub(super) struct ComputeQueue {
-    inner: Mutex<QueueInner>,
-    cv: Condvar,
-    cap: usize,
-}
-
-impl ComputeQueue {
-    pub(super) fn new(cap: usize) -> Self {
-        ComputeQueue {
-            inner: Mutex::new(QueueInner { jobs: VecDeque::new(), closed: false }),
-            cv: Condvar::new(),
-            cap,
-        }
-    }
-
-    /// Admit one job; false when the queue is full (or closed) — the
-    /// caller answers `busy` instead of queueing unboundedly.
-    pub(super) fn try_push(&self, job: ComputeJob) -> bool {
-        let mut q = self.inner.lock().unwrap();
-        if q.closed || q.jobs.len() >= self.cap {
-            return false;
-        }
-        q.jobs.push_back(job);
-        self.cv.notify_one();
-        true
-    }
-
-    /// Next job, blocking while the queue is open and empty. `None`
-    /// once the queue is closed **and** drained — graceful shutdown
-    /// finishes every admitted job before workers exit.
-    pub(super) fn pop(&self) -> Option<ComputeJob> {
-        let mut q = self.inner.lock().unwrap();
-        loop {
-            if let Some(job) = q.jobs.pop_front() {
-                return Some(job);
-            }
-            if q.closed {
-                return None;
-            }
-            q = self.cv.wait(q).unwrap();
-        }
-    }
-
-    pub(super) fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
-        self.cv.notify_all();
-    }
-}
+/// The bounded admission queue between muxes and compute workers:
+/// [`BoundedQueue`] carrying compute jobs. `try_push` never blocks — a
+/// full queue is the `busy` signal; `close` lets workers drain every
+/// admitted job before exiting (graceful shutdown). The admission
+/// protocol itself is model-checked in `rust/tests/loom_models.rs`.
+pub(super) type ComputeQueue = BoundedQueue<ComputeJob>;
 
 #[derive(Default)]
 struct Inbox {
@@ -139,30 +91,44 @@ struct Inbox {
 
 /// One mux thread's mailbox: the acceptor posts fresh connections,
 /// workers post finished responses, the reactor posts shutdown; each
-/// post wakes the mux immediately.
+/// post wakes the mux immediately. `alive` drops to false if the mux
+/// thread panics — the acceptor stops routing connections to it.
 pub(super) struct MuxShared {
     inbox: Mutex<Inbox>,
     cv: Condvar,
+    alive: AtomicBool,
 }
 
 impl MuxShared {
     fn new() -> Self {
-        MuxShared { inbox: Mutex::new(Inbox::default()), cv: Condvar::new() }
+        MuxShared {
+            inbox: Mutex::new(Inbox::default()),
+            cv: Condvar::new(),
+            alive: AtomicBool::new(true),
+        }
     }
 
     fn add_conn(&self, stream: TcpStream) {
-        self.inbox.lock().unwrap().conns.push(stream);
+        lock_recover(&self.inbox).conns.push(stream);
         self.cv.notify_one();
     }
 
     fn deliver(&self, conn: u64, response: String) {
-        self.inbox.lock().unwrap().responses.push((conn, response));
+        lock_recover(&self.inbox).responses.push((conn, response));
         self.cv.notify_one();
     }
 
     fn request_shutdown(&self) {
-        self.inbox.lock().unwrap().shutdown = true;
+        lock_recover(&self.inbox).shutdown = true;
         self.cv.notify_all();
+    }
+
+    fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::SeqCst)
+    }
+
+    fn mark_dead(&self) {
+        self.alive.store(false, Ordering::SeqCst);
     }
 }
 
@@ -172,6 +138,11 @@ struct MuxCtx {
     service: Arc<CampaignService>,
     metrics: Arc<ServerMetrics>,
     queue: Arc<ComputeQueue>,
+    /// Test-only fault injection: a request line containing this
+    /// substring makes the mux thread panic, exercising the dead-mux
+    /// recovery path (`None` in production — see
+    /// `ServeConfig::mux_panic_line`).
+    panic_line: Option<String>,
 }
 
 /// One nonblocking connection's state machine.
@@ -342,6 +313,11 @@ impl Conn {
         if line.is_empty() {
             return; // blank keep-alive lines are ignored
         }
+        if let Some(needle) = &ctx.panic_line {
+            if line.contains(needle.as_str()) {
+                panic!("mux panic injected for test");
+            }
+        }
         let start = Instant::now();
         match proto::parse_request_meta(line) {
             Err(e) => {
@@ -421,7 +397,7 @@ fn mux_loop(shared: Arc<MuxShared>, ctx: MuxCtx) {
     let mut backoff = POLL_MIN;
     loop {
         let (new_conns, responses, shutdown) = {
-            let mut inbox = shared.inbox.lock().unwrap();
+            let mut inbox = lock_recover(&shared.inbox);
             (
                 std::mem::take(&mut inbox.conns),
                 std::mem::take(&mut inbox.responses),
@@ -458,18 +434,18 @@ fn mux_loop(shared: Arc<MuxShared>, ctx: MuxCtx) {
             backoff = POLL_MIN;
             continue;
         }
-        let inbox = shared.inbox.lock().unwrap();
+        let inbox = lock_recover(&shared.inbox);
         if !inbox.conns.is_empty() || !inbox.responses.is_empty() || inbox.shutdown {
             continue;
         }
         if conns.is_empty() {
             // zero connections: park until the acceptor or a worker knocks
-            drop(shared.cv.wait(inbox).unwrap());
+            drop(cv_wait(&shared.cv, inbox));
         } else {
             // open but idle connections: adaptive poll backoff (std has
             // no portable readiness API; inbox posts still wake us
             // immediately via the condvar)
-            drop(shared.cv.wait_timeout(inbox, backoff).unwrap());
+            drop(cv_wait_timeout(&shared.cv, inbox, backoff));
             backoff = (backoff * 2).min(POLL_MAX);
         }
     }
@@ -553,10 +529,22 @@ fn accept_loop(
                     continue;
                 }
                 let _ = stream.set_nodelay(true);
+                // route to the next *live* mux: a panicked mux marks
+                // itself dead and must not receive fresh connections
+                // (they would never be served). All muxes dead is fatal.
+                let n = muxes.len();
+                let Some(target) = (0..n).map(|o| (rr + o) % n).find(|&i| muxes[i].is_alive())
+                else {
+                    if !shutdown.load(Ordering::SeqCst) {
+                        *lock_recover(&fatal) =
+                            Some("all mux threads are dead; stopping acceptor".to_string());
+                    }
+                    break;
+                };
                 metrics.accepted.fetch_add(1, Ordering::Relaxed);
                 metrics.open_conns.fetch_add(1, Ordering::Relaxed);
-                muxes[rr % muxes.len()].add_conn(stream);
-                rr = rr.wrapping_add(1);
+                muxes[target].add_conn(stream);
+                rr = target.wrapping_add(1);
             }
             Err(e) => match classify_accept_error(&e) {
                 AcceptAction::Retry => continue,
@@ -568,7 +556,7 @@ fn accept_loop(
                 }
                 AcceptAction::Fatal => {
                     if !shutdown.load(Ordering::SeqCst) {
-                        *fatal.lock().unwrap() = Some(format!("accept failed fatally: {e}"));
+                        *lock_recover(&fatal) = Some(format!("accept failed fatally: {e}"));
                     }
                     break;
                 }
@@ -589,10 +577,14 @@ pub(super) struct Reactor {
     workers: Vec<JoinHandle<()>>,
     queue: Arc<ComputeQueue>,
     accept_fatal: Arc<Mutex<Option<String>>>,
+    /// First mux-thread panic, surfaced as [`Reactor::drain`]'s error.
+    mux_fatal: Arc<Mutex<Option<String>>>,
 }
 
 impl Reactor {
     /// Spawn the full thread complement around a bound listener.
+    /// `mux_panic_line` is the test-only fault-injection hook threaded
+    /// from `ServeConfig` (always `None` in production).
     pub(super) fn spawn(
         listener: TcpListener,
         service: Arc<CampaignService>,
@@ -600,6 +592,7 @@ impl Reactor {
         mux_threads: usize,
         compute_threads: usize,
         queue_cap: usize,
+        mux_panic_line: Option<String>,
     ) -> Result<Reactor> {
         let addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
@@ -607,6 +600,7 @@ impl Reactor {
         metrics.set_queue_cap(queue_cap.max(1));
         let muxes: Arc<Vec<Arc<MuxShared>>> =
             Arc::new((0..mux_threads.max(1)).map(|_| Arc::new(MuxShared::new())).collect());
+        let mux_fatal: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
 
         let mut mux_handles = Vec::new();
         for (i, shared) in muxes.iter().enumerate() {
@@ -616,11 +610,26 @@ impl Reactor {
                 service: Arc::clone(&service),
                 metrics: Arc::clone(&metrics),
                 queue: Arc::clone(&queue),
+                panic_line: mux_panic_line.clone(),
             };
-            let handle = std::thread::Builder::new()
-                .name(format!("grcim-mux-{i}"))
-                .spawn(move || mux_loop(shared, ctx))
-                .context("spawning mux thread")?;
+            let fatal = Arc::clone(&mux_fatal);
+            // a panicking mux must not take the server down silently:
+            // catch the unwind, mark the mailbox dead so the acceptor
+            // stops routing connections here, and record the panic for
+            // Server::join to surface
+            let handle = spawn_named(format!("grcim-mux-{i}"), move || {
+                let mailbox = Arc::clone(&shared);
+                if let Err(payload) =
+                    catch_unwind(AssertUnwindSafe(move || mux_loop(shared, ctx)))
+                {
+                    mailbox.mark_dead();
+                    let mut slot = lock_recover(&fatal);
+                    if slot.is_none() {
+                        *slot = Some(format!("mux {i} panicked: {}", panic_msg(&*payload)));
+                    }
+                }
+            })
+            .context("spawning mux thread")?;
             mux_handles.push(handle);
         }
 
@@ -630,9 +639,10 @@ impl Reactor {
             let muxes = Arc::clone(&muxes);
             let service = Arc::clone(&service);
             let metrics = Arc::clone(&metrics);
-            let handle = std::thread::Builder::new()
-                .name(format!("grcim-worker-{i}"))
-                .spawn(move || worker_loop(queue, muxes, service, metrics))
+            let handle =
+                spawn_named(format!("grcim-compute-{i}"), move || {
+                    worker_loop(queue, muxes, service, metrics)
+                })
                 .context("spawning compute worker")?;
             workers.push(handle);
         }
@@ -643,10 +653,10 @@ impl Reactor {
             let shutdown = Arc::clone(&shutdown);
             let metrics = Arc::clone(&metrics);
             let fatal = Arc::clone(&accept_fatal);
-            std::thread::Builder::new()
-                .name("grcim-accept".to_string())
-                .spawn(move || accept_loop(listener, muxes, shutdown, metrics, fatal))
-                .context("spawning accept thread")?
+            spawn_named("grcim-accept", move || {
+                accept_loop(listener, muxes, shutdown, metrics, fatal)
+            })
+            .context("spawning accept thread")?
         };
 
         Ok(Reactor {
@@ -658,6 +668,7 @@ impl Reactor {
             workers,
             queue,
             accept_fatal,
+            mux_fatal,
         })
     }
 
@@ -693,8 +704,15 @@ impl Reactor {
         for h in self.mux_handles.drain(..) {
             let _ = h.join();
         }
+        // error precedence: an acceptor panic first, then a mux panic
+        // (the root cause — it also makes the acceptor report "all mux
+        // threads are dead" when it was the only mux), then accept-path
+        // fatals
         acceptor?;
-        if let Some(msg) = self.accept_fatal.lock().unwrap().take() {
+        if let Some(msg) = lock_recover(&self.mux_fatal).take() {
+            bail!("{msg}");
+        }
+        if let Some(msg) = lock_recover(&self.accept_fatal).take() {
             bail!("{msg}");
         }
         Ok(())

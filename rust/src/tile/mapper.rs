@@ -22,7 +22,7 @@ use crate::runtime::{build_engine, Engine, SimScratch};
 use crate::spec::{required_enob, SpecConfig};
 use crate::stats::{ColumnAgg, ColumnBatch};
 use anyhow::{bail, Result};
-use std::sync::Arc;
+use crate::util::sync::Arc;
 
 /// Grid-index namespace of the layer operand RNG stream in
 /// [`crate::rng::job_seed`] — far outside any campaign's spec indices, so

@@ -3,7 +3,12 @@
 //! comparison). No external deps — the image's vendor set has no `log`
 //! facade implementation.
 
+pub mod sync;
+
 use std::io::Write;
+// lint-allow S: a const-initialized static cannot use the loom-switchable
+// shim (loom atomics are not const-constructible); the logger level is
+// plain telemetry never touched by a loom model
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
 

@@ -1,0 +1,354 @@
+//! The repo's single concurrency surface: a thin shim over the `std`
+//! primitives that swaps in [loom](https://docs.rs/loom) equivalents
+//! under `--cfg loom`, so the load-bearing protocols (single-flight
+//! cache, worker pool, compute queue, checkpoint appends) can be
+//! exhaustively model-checked by `rust/tests/loom_models.rs` while
+//! production builds compile to exactly the `std` types.
+//!
+//! **Every module outside `util::sync` must import its sync primitives
+//! from here, never from `std::sync` directly** — enforced by
+//! `grcim-lint` rule `S`. (The one exception: const-initialized statics,
+//! like the logger's level atomic in `util`, cannot use loom atomics —
+//! those carry an allowlist entry.)
+//!
+//! Beyond the re-exports, this module owns the shared poisoning policy:
+//! [`lock_recover`] and [`cv_wait`] treat a poisoned lock as recoverable
+//! (every protected structure in this repo stays valid across an
+//! interrupted critical section — counters, queues, append-only files),
+//! so one panicking worker can never wedge the metrics path, the
+//! rendered-response caches, or the checkpoint writer.
+//!
+//! It also hosts the two queue primitives the serve core and the worker
+//! pool are built on — [`BoundedQueue`] (admission control) and the
+//! unbounded [`channel`] (pool results) — precisely so the loom suite
+//! can model them without reaching into `pub(super)` server internals.
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+#[cfg(loom)]
+pub use loom::thread::JoinHandle;
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+#[cfg(not(loom))]
+pub use std::thread::JoinHandle;
+
+// loom has no Barrier model; the one in-tree user (loadgen's
+// connection-open rendezvous) is never exercised under loom, so the std
+// type is re-exported in both worlds to keep the crate compiling.
+pub use std::sync::Barrier;
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+/// Lock a mutex, recovering from poisoning.
+///
+/// Everything this repo guards with a mutex remains structurally valid
+/// after a panic mid-critical-section (queues of whole items, counters,
+/// append handles that write whole lines), so the poison flag carries no
+/// information worth propagating — recovering keeps one panicking
+/// thread from wedging every later locker (the pool regression that
+/// motivated this helper, now applied uniformly).
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Wait on a condvar, recovering from poisoning (same policy as
+/// [`lock_recover`]).
+pub fn cv_wait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Wait on a condvar with a timeout, recovering from poisoning. Returns
+/// the reacquired guard and whether the wait timed out.
+#[cfg(not(loom))]
+pub fn cv_wait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    match cv.wait_timeout(guard, dur) {
+        Ok((g, t)) => (g, t.timed_out()),
+        Err(poisoned) => {
+            let (g, t) = poisoned.into_inner();
+            (g, t.timed_out())
+        }
+    }
+}
+
+/// Loom build: modeled as a plain wait (loom explores wakeup orders
+/// exhaustively, so a timeout adds nothing; no in-tree timed wait is
+/// exercised inside a loom model).
+#[cfg(loom)]
+pub fn cv_wait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    _dur: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    (cv_wait(cv, guard), false)
+}
+
+/// Spawn a named thread (loom build: loom's scheduler owns the threads;
+/// the name is dropped).
+#[cfg(not(loom))]
+pub fn spawn_named<T, F>(name: impl Into<String>, f: F) -> std::io::Result<JoinHandle<T>>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    std::thread::Builder::new().name(name.into()).spawn(f)
+}
+
+/// Spawn a named thread (loom build: loom's scheduler owns the threads;
+/// the name is dropped).
+#[cfg(loom)]
+pub fn spawn_named<T, F>(name: impl Into<String>, f: F) -> std::io::Result<JoinHandle<T>>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    let _ = name.into();
+    Ok(loom::thread::spawn(f))
+}
+
+/// Describe a caught panic payload (panics carry `&str` or `String`
+/// messages in practice; anything else is reported opaquely). Shared by
+/// every `catch_unwind` recovery site: the pool, the reactor's mux
+/// wrapper, and loadgen's driver join.
+pub fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+struct ChanState<T> {
+    queue: VecDeque<T>,
+    senders: usize,
+    rx_alive: bool,
+}
+
+struct ChanShared<T> {
+    state: Mutex<ChanState<T>>,
+    cv: Condvar,
+}
+
+/// Sending half of an unbounded MPSC [`channel`].
+pub struct Sender<T>(Arc<ChanShared<T>>);
+
+/// Receiving half of an unbounded MPSC [`channel`].
+pub struct Receiver<T>(Arc<ChanShared<T>>);
+
+/// An unbounded multi-producer single-consumer channel over the shim's
+/// own `Mutex`/`Condvar` (rather than `std::sync::mpsc`, whose
+/// internals loom cannot model). [`Receiver::recv`] returns `None` once
+/// every sender is dropped and the queue is drained — the property the
+/// pool's result loop terminates on.
+pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+    let shared = Arc::new(ChanShared {
+        state: Mutex::new(ChanState { queue: VecDeque::new(), senders: 1, rx_alive: true }),
+        cv: Condvar::new(),
+    });
+    (Sender(Arc::clone(&shared)), Receiver(shared))
+}
+
+impl<T> Sender<T> {
+    /// Enqueue one value; `false` when the receiver is gone (the value
+    /// is dropped, matching `std::sync::mpsc`'s send-error contract).
+    pub fn send(&self, value: T) -> bool {
+        let mut st = lock_recover(&self.0.state);
+        if !st.rx_alive {
+            return false;
+        }
+        st.queue.push_back(value);
+        self.0.cv.notify_one();
+        true
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        lock_recover(&self.0.state).senders += 1;
+        Sender(Arc::clone(&self.0))
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = lock_recover(&self.0.state);
+        st.senders -= 1;
+        if st.senders == 0 {
+            // wake a receiver blocked on an empty queue so it can see
+            // "no senders left" and return None
+            self.0.cv.notify_all();
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Next value, blocking while senders exist and the queue is empty;
+    /// `None` once every sender is dropped and the queue is drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = lock_recover(&self.0.state);
+        loop {
+            if let Some(v) = st.queue.pop_front() {
+                return Some(v);
+            }
+            if st.senders == 0 {
+                return None;
+            }
+            st = cv_wait(&self.0.cv, st);
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        // senders never block, so no wakeup is needed — just let later
+        // sends fail fast instead of accumulating unread values
+        lock_recover(&self.0.state).rx_alive = false;
+    }
+}
+
+struct BoundedState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded MPMC queue whose full state is an immediate, non-blocking
+/// rejection — the admission-control shape: the serve core's
+/// `ComputeQueue` is this queue carrying compute jobs, and a `false`
+/// from [`BoundedQueue::try_push`] is the wire `busy` error.
+///
+/// Closing is graceful: [`BoundedQueue::pop`] keeps draining admitted
+/// items after [`BoundedQueue::close`] and only then reports `None`, so
+/// shutdown finishes every job it accepted.
+pub struct BoundedQueue<T> {
+    state: Mutex<BoundedState<T>>,
+    cv: Condvar,
+    cap: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// An open queue admitting at most `cap` items at a time.
+    pub fn new(cap: usize) -> Self {
+        BoundedQueue {
+            state: Mutex::new(BoundedState { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Admit one item; `false` when the queue is full or closed (the
+    /// caller rejects instead of queueing unboundedly).
+    pub fn try_push(&self, item: T) -> bool {
+        let mut st = lock_recover(&self.state);
+        if st.closed || st.items.len() >= self.cap {
+            return false;
+        }
+        st.items.push_back(item);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Next item, blocking while the queue is open and empty. `None`
+    /// once the queue is closed **and** drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = lock_recover(&self.state);
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = cv_wait(&self.cv, st);
+        }
+    }
+
+    /// Stop admissions and wake every blocked popper (they drain what
+    /// was admitted, then see `None`).
+    pub fn close(&self) {
+        lock_recover(&self.state).closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_delivers_then_ends_on_sender_drop() {
+        let (tx, rx) = channel::<u32>();
+        let tx2 = tx.clone();
+        assert!(tx.send(1));
+        assert!(tx2.send(2));
+        drop(tx);
+        drop(tx2);
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn channel_send_fails_after_receiver_drop() {
+        let (tx, rx) = channel::<u32>();
+        drop(rx);
+        assert!(!tx.send(7));
+    }
+
+    #[test]
+    fn channel_blocked_receiver_wakes_on_last_sender_drop() {
+        let (tx, rx) = channel::<u32>();
+        let h = std::thread::spawn(move || rx.recv());
+        std::thread::sleep(Duration::from_millis(20));
+        drop(tx);
+        assert_eq!(h.join().expect("receiver thread"), None);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_at_cap_and_drains_on_close() {
+        let q = BoundedQueue::new(2);
+        assert!(q.try_push(1));
+        assert!(q.try_push(2));
+        assert!(!q.try_push(3));
+        q.close();
+        assert!(!q.try_push(4), "no admissions after close");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn lock_recover_recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(41));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock();
+            panic!("poison the lock");
+        })
+        .join();
+        // a plain .lock().unwrap() would panic here; the recovery policy
+        // keeps the (still valid) value usable
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 42);
+    }
+
+    #[test]
+    fn panic_msg_formats_known_payloads() {
+        let str_payload: Box<dyn std::any::Any + Send> = Box::new("boom");
+        assert_eq!(panic_msg(&*str_payload), "boom");
+        let string_payload: Box<dyn std::any::Any + Send> = Box::new(String::from("kaboom"));
+        assert_eq!(panic_msg(&*string_payload), "kaboom");
+        let other: Box<dyn std::any::Any + Send> = Box::new(17u32);
+        assert_eq!(panic_msg(&*other), "non-string panic payload");
+    }
+}

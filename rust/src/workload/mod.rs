@@ -57,7 +57,7 @@ use crate::mac::FormatPair;
 use crate::report::{FigureResult, Table};
 use crate::spec::{required_enob, Arch, SpecConfig};
 use anyhow::Result;
-use std::sync::Arc;
+use crate::util::sync::Arc;
 
 /// Array depth of the workload energy-bound comparison (the paper's
 /// standard column depth).

@@ -649,6 +649,158 @@ fn shutdown_is_clean_with_an_idle_connection_open() {
 }
 
 #[test]
+fn mux_panic_surfaces_in_shutdown_error_and_stops_routing() {
+    use std::time::{Duration, Instant};
+    // fault injection: a request line containing the needle makes the
+    // (only) mux thread panic mid-dispatch. The pinned behavior: the
+    // panic is caught, the acceptor detects the dead mux and stops
+    // routing, and the panic surfaces as the shutdown/join error — the
+    // server must neither hang nor pretend the drain was clean.
+    let server = Server::spawn(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        campaign: CampaignConfig {
+            engine: EngineKind::Rust,
+            workers: 2,
+            seed: 7,
+            ..Default::default()
+        },
+        cache_entries: 256,
+        mux_threads: 1,
+        compute_threads: 1,
+        queue_cap: 16,
+        mux_panic_line: Some("detonate-mux".to_string()),
+    })
+    .expect("server spawns");
+    let addr = server.local_addr().to_string();
+
+    // a healthy request first: the hook must not affect normal traffic
+    let info = query_once(&addr, r#"{"cmd":"info"}"#).unwrap();
+    assert_eq!(Json::parse(&info).unwrap().get("ok"), Some(&Json::Bool(true)));
+
+    // trigger: the mux panics while handling this line; its connections
+    // drop during the unwind, so the client observes EOF/reset, never a
+    // response
+    let trigger = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(trigger.try_clone().unwrap());
+    let mut writer = trigger;
+    writer.write_all(b"{\"cmd\":\"detonate-mux\"}\n").unwrap();
+    writer.flush().unwrap();
+    let mut resp = String::new();
+    match reader.read_line(&mut resp) {
+        Ok(n) => assert_eq!(n, 0, "dead mux produced a response: {resp}"),
+        Err(_) => {} // connection reset during the unwind is equally fine
+    }
+
+    // the acceptor stops routing: probes are never answered (a brief
+    // window may still enqueue them onto the not-yet-marked-dead
+    // mailbox — they time out), and once the dead mux is observed the
+    // acceptor exits and the port closes
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match TcpStream::connect(&addr) {
+            Err(_) => break, // listener closed: the acceptor stopped
+            Ok(mut probe) => {
+                probe
+                    .set_read_timeout(Some(Duration::from_millis(100)))
+                    .unwrap();
+                let _ = probe.write_all(b"{\"cmd\":\"info\"}\n");
+                let mut buf = [0u8; 64];
+                let got = std::io::Read::read(&mut probe, &mut buf);
+                assert!(
+                    !matches!(got, Ok(n) if n > 0),
+                    "a request was served after the only mux died"
+                );
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "acceptor never detected the dead mux"
+        );
+    }
+
+    // the root cause is the drain error, not a silent Ok
+    let err = format!("{:#}", server.shutdown().unwrap_err());
+    assert!(err.contains("mux 0 panicked"), "{err}");
+    assert!(err.contains("injected"), "{err}");
+    assert!(TcpStream::connect(&addr).is_err(), "port must be closed");
+}
+
+#[test]
+fn sibling_muxes_keep_serving_after_one_mux_panics() {
+    use std::time::{Duration, Instant};
+    // two muxes, one killed by fault injection: the acceptor must route
+    // around the dead mux (new connections land on the survivor and are
+    // served normally), and the panic still surfaces at shutdown
+    let server = Server::spawn(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        campaign: CampaignConfig {
+            engine: EngineKind::Rust,
+            workers: 2,
+            seed: 7,
+            ..Default::default()
+        },
+        cache_entries: 256,
+        mux_threads: 2,
+        compute_threads: 1,
+        queue_cap: 16,
+        mux_panic_line: Some("detonate-mux".to_string()),
+    })
+    .expect("server spawns");
+    let addr = server.local_addr().to_string();
+
+    // the very first connection round-robins onto mux 0; kill it
+    let trigger = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(trigger.try_clone().unwrap());
+    let mut writer = trigger;
+    writer.write_all(b"{\"cmd\":\"detonate-mux\"}\n").unwrap();
+    writer.flush().unwrap();
+    let mut resp = String::new();
+    match reader.read_line(&mut resp) {
+        Ok(n) => assert_eq!(n, 0, "dead mux produced a response: {resp}"),
+        Err(_) => {}
+    }
+
+    // new connections are still served: a probe may race the dead-mux
+    // mark and time out, but the acceptor must converge onto mux 1
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut served = false;
+    while !served {
+        assert!(
+            Instant::now() < deadline,
+            "no request was served after a sibling mux died"
+        );
+        let Ok(probe) = TcpStream::connect(&addr) else {
+            panic!("listener closed with a live mux remaining");
+        };
+        probe
+            .set_read_timeout(Some(Duration::from_millis(200)))
+            .unwrap();
+        let mut pr = BufReader::new(probe.try_clone().unwrap());
+        let mut pw = probe;
+        if pw.write_all(b"{\"cmd\":\"info\"}\n").is_err() {
+            continue;
+        }
+        let mut line = String::new();
+        if pr.read_line(&mut line).is_ok() && !line.is_empty() {
+            let j = Json::parse(line.trim_end()).unwrap();
+            assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{line}");
+            served = true;
+        }
+    }
+
+    // once routing has converged, service is fully healthy — including
+    // compute requests through the admission queue
+    let e = query_once(&addr, r#"{"cmd":"energy","dr":30.1,"sqnr":22.83,"samples":512}"#)
+        .unwrap();
+    assert_eq!(Json::parse(&e).unwrap().get("ok"), Some(&Json::Bool(true)), "{e}");
+
+    // the drain still reports the mux 0 panic as its root cause
+    let err = format!("{:#}", server.shutdown().unwrap_err());
+    assert!(err.contains("mux 0 panicked"), "{err}");
+    assert!(TcpStream::connect(&addr).is_err());
+}
+
+#[test]
 fn distinct_seeds_are_distinct_cache_entries() {
     let server = spawn_server();
     let addr = server.local_addr().to_string();
